@@ -1,0 +1,75 @@
+//! Hierarchical restructuring (paper §4.4): apply CMoE *recursively* to
+//! the routed experts of an already-converted layer, producing two-level
+//! routing and finer-grained sparsity — the Qwen3-30B-A3B experiment's
+//! analog on this testbed.
+
+use cmoe::converter::{
+    convert_ffn, hier_moe_forward, hierarchical_convert, reconstruction_error, ConvertOptions,
+};
+use cmoe::data::corpus::{gen_corpus, CorpusSpec, Domain};
+use cmoe::eval::forward::DenseForward;
+use cmoe::model::ModelWeights;
+use cmoe::profiling::profile_dense_model;
+use cmoe::tensor;
+
+fn main() -> anyhow::Result<()> {
+    let model = ModelWeights::load("artifacts/small.cmw")?;
+    let calib_text =
+        gen_corpus(&CorpusSpec { domain: Domain::Markov, bytes: 8 * 256 + 64, seed: 7 });
+    let calib = cmoe::data::encode(&calib_text)[..8 * 256].to_vec();
+    let profiles = profile_dense_model(&model, &calib, 256, 10);
+
+    // level 1: dense FFN -> S2A2E8 MoE (experts of 64 neurons)
+    let ffn = model.dense_ffn(0).clone();
+    let top_spec = "S2A2E8".parse()?;
+    let moe = convert_ffn(&ffn, &profiles[0], &top_spec, &ConvertOptions::default())?;
+    println!(
+        "level 1: {} → {} routed experts × {} neurons + shared {}",
+        top_spec,
+        moe.experts.len(),
+        moe.experts[0].hidden_dim(),
+        moe.shared.hidden_dim()
+    );
+
+    // level 2: each routed expert -> S1A2E4 sub-MoE (sub-experts of 16)
+    let sub_spec = "S1A2E4".parse()?;
+    let hier = hierarchical_convert(&moe, &profiles[0], &sub_spec, &ConvertOptions::default())?;
+    println!(
+        "level 2: each expert → {} (sub-experts of {} neurons)",
+        sub_spec,
+        hier.sub[0].experts[0].hidden_dim()
+    );
+    println!(
+        "active neuron fraction: flat {:.3} → hierarchical {:.3}",
+        moe.spec.active_fraction(),
+        hier.active_fraction()
+    );
+
+    // quality: reconstruction error of flat vs hierarchical on held-out
+    // FFN inputs
+    let fwd = DenseForward::new(&model);
+    let probe_toks: Vec<usize> = cmoe::data::encode(&gen_corpus(&CorpusSpec {
+        domain: Domain::Markov,
+        bytes: 300,
+        seed: 42,
+    }))[..256]
+        .to_vec();
+    let probe = fwd.capture_ffn_inputs(&probe_toks).remove(0);
+    let dense_out = tensor::swiglu_ffn(&probe, &ffn.w_gate, &ffn.w_up, &ffn.w_down);
+    let hier_out = hier_moe_forward(&hier, &probe);
+    let mut diff = dense_out.clone();
+    for (a, b) in diff.data.iter_mut().zip(&hier_out.data) {
+        *a -= b;
+    }
+    println!(
+        "reconstruction error: flat {:.4} | hierarchical {:.4}",
+        reconstruction_error(&ffn, &moe, &probe),
+        diff.norm() / dense_out.norm()
+    );
+    println!(
+        "FFN FLOPs multiplier: flat ×{:.3} | hierarchical ×{:.3} (finer sparsity)",
+        moe.spec.active_fraction(),
+        hier.active_fraction()
+    );
+    Ok(())
+}

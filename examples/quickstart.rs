@@ -1,0 +1,53 @@
+//! Quickstart: profile → convert → evaluate, in ~40 lines.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use cmoe::converter::{convert_model, ConvertOptions};
+use cmoe::data::corpus::{gen_corpus, CorpusSpec, Domain};
+use cmoe::eval::{choice_accuracy, perplexity};
+use cmoe::model::ModelWeights;
+use cmoe::profiling::profile_dense_model;
+
+fn main() -> anyhow::Result<()> {
+    // 1. load the pretrained dense checkpoint (built by `make artifacts`)
+    let model = ModelWeights::load("artifacts/small.cmw")?;
+    println!("loaded '{}': {} params", model.config.name, model.config.param_count());
+
+    // 2. profile FFN activations on a tiny calibration set (8 × 256 tok)
+    let calib_text =
+        gen_corpus(&CorpusSpec { domain: Domain::Markov, bytes: 8 * 256 + 64, seed: 7 });
+    let calib = cmoe::data::encode(&calib_text)[..8 * 256].to_vec();
+    let profiles = profile_dense_model(&model, &calib, 256, 10);
+    for (l, p) in profiles.iter().enumerate() {
+        println!("layer {l}: activation-rate bimodality {:.3} (>0.556 ⇒ bimodal)", p.rate_bimodality());
+    }
+
+    // 3. analytical restructuring: S3A3E8 = 25% FFN sparsity
+    let spec = "S3A3E8".parse()?;
+    let conv = convert_model(&model, &profiles, &spec, &ConvertOptions::default())?;
+    println!("converted in {:?} (analytical, no training)", conv.report.total);
+
+    // 4. compare dense vs converted
+    let eval_text =
+        gen_corpus(&CorpusSpec { domain: Domain::Markov, bytes: 4096 + 64, seed: 99 });
+    let eval_toks = cmoe::data::encode(&eval_text)[..4096].to_vec();
+    let suite = cmoe::eval::tasks::TaskSuite {
+        name: "Arith".into(),
+        tasks: cmoe::data::gen_choice_tasks(cmoe::data::tasks_gen::TaskFamily::Arith, 60, 3),
+    };
+    println!(
+        "dense:     PPL {:.2}  arith-acc {:.1}%",
+        perplexity(&model, &eval_toks, 256),
+        choice_accuracy(&model, &suite) * 100.0
+    );
+    println!(
+        "CMoE 25%:  PPL {:.2}  arith-acc {:.1}%",
+        perplexity(&conv.model, &eval_toks, 256),
+        choice_accuracy(&conv.model, &suite) * 100.0
+    );
+    conv.model.save("converted_small.cmw")?;
+    println!("saved converted model to converted_small.cmw");
+    Ok(())
+}

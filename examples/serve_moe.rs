@@ -1,0 +1,103 @@
+//! END-TO-END serving driver (the DESIGN.md validation workload):
+//! loads the pretrained `small` checkpoint, converts it to CMoE
+//! (S3A3E8, 25% sparsity), and serves batched generation requests in
+//! all three execution modes through the compiled PJRT artifacts,
+//! reporting latency/throughput. This proves every layer composes:
+//! Pallas kernels (L1) → jax model artifacts (L2) → rust coordinator,
+//! batcher and expert dispatcher (L3).
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve_moe
+//! ```
+
+use cmoe::converter::{convert_model, ConvertOptions};
+use cmoe::data::corpus::{gen_corpus, CorpusSpec, Domain};
+use cmoe::data::{decode, encode};
+use cmoe::model::ModelWeights;
+use cmoe::profiling::profile_dense_model;
+use cmoe::serving::{Engine, EngineConfig, ExecMode, GenParams, Request};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn make_requests(n: usize, max_new: usize) -> Vec<Request> {
+    (0..n)
+        .map(|i| {
+            // arithmetic prompts — the model was trained on this domain,
+            // so generations are checkably sensible
+            let text = gen_corpus(&CorpusSpec {
+                domain: Domain::Arith,
+                bytes: 16,
+                seed: 1000 + i as u64,
+            });
+            Request::new(
+                i as u64,
+                encode(&text),
+                GenParams { max_new_tokens: max_new, temperature: 0.0, seed: i as u64, stop_token: None },
+            )
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = Arc::new(cmoe::runtime::XlaRuntime::load("artifacts")?);
+    let dense = ModelWeights::load("artifacts/small.cmw")?;
+    println!(
+        "model 'small': {} params, {} layers",
+        dense.config.param_count(),
+        dense.config.n_layers
+    );
+
+    // --- convert: profile + analytical restructure (paper §4) ---
+    let calib_text =
+        gen_corpus(&CorpusSpec { domain: Domain::Markov, bytes: 8 * 256 + 64, seed: 7 });
+    let calib = encode(&calib_text)[..8 * 256].to_vec();
+    let profiles = profile_dense_model(&dense, &calib, 256, 10);
+    let spec = "S3A3E8".parse()?;
+    let conv = convert_model(&dense, &profiles, &spec, &ConvertOptions::default())?;
+    println!("converted to {spec} in {:?}\n", conv.report.total);
+    let moe = conv.model;
+
+    let batch = 8;
+    let n_requests = 24;
+    let max_new = 24;
+
+    for (label, mode, model) in [
+        ("dense baseline   ", ExecMode::Dense, &dense),
+        ("MoE monolithic   ", ExecMode::MoeMonolithic, &moe),
+        ("MoE orchestrated ", ExecMode::MoeOrchestrated, &moe),
+    ] {
+        let mut cfg = match mode {
+            ExecMode::Dense => EngineConfig::dense("small", 64),
+            m => EngineConfig::moe("small", 64, spec, m),
+        };
+        cfg.batcher.buckets = vec![1, batch];
+        cfg.batcher.max_wait = Duration::ZERO;
+        let engine = Engine::new(rt.clone(), model.clone(), cfg)?;
+
+        // warmup (compilation) then the measured run
+        engine.run_queue(make_requests(batch, 2))?;
+        engine.metrics.lock().unwrap().waves.clear();
+        let t0 = std::time::Instant::now();
+        let results = engine.run_queue(make_requests(n_requests, max_new))?;
+        let wall = t0.elapsed();
+
+        let m = engine.metrics.lock().unwrap();
+        println!(
+            "{label} {} reqs in {:>8.2?} | decode {:>7.1} tok/s | TTFT p50 {:>6.1}ms | latency p50 {:>7.1}ms",
+            results.len(),
+            wall,
+            m.decode_tps(),
+            m.ttft_p50_ms(),
+            m.latency_p50_ms(),
+        );
+        if mode == ExecMode::MoeOrchestrated {
+            // show a sample generation: the model continues arithmetic
+            let r = &results[0];
+            println!(
+                "    sample: prompt … -> {:?}",
+                decode(&r.tokens)
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,519 @@
+"""AOT lowering: JAX/Pallas → HLO text artifacts + manifest.
+
+Every artifact is a jitted function lowered ONCE and written as HLO
+*text* (xla_extension 0.5.1 rejects jax>=0.5's 64-bit-id serialized
+protos — see /opt/xla-example/README.md). Weights are ARGUMENTS, never
+baked in, so one artifact serves any checkpoint of matching shape; the
+manifest records the exact argument order for the rust runtime.
+
+Artifact families (per model config):
+  prefill_dense_{m}_b{B}_s{S}_t{T}   tokens → logits + KV cache
+  decode_dense_{m}_b{B}_t{T}         one dense decode step
+  decode_moe_{m}_{spec}_b{B}_t{T}    monolithic masked-MoE decode step
+  embed_{m}_b{B}                     token+position embedding
+  attn_layer_{m}_b{B}_t{T}           one attention block (MoE orchestration)
+  rmsnorm_{m}_b{B}                   FFN pre-norm
+  router_{m}_e{Nr}_b{B}              analytical router scores
+  ffn_{m}_h{H}_b{B}                  SwiGLU FFN slice (shared expert)
+  experts_{m}_e{Nr}_mm{M}_c{C}       grouped routed experts (Pallas)
+  logits_{m}_b{B}                    final norm + unembedding
+  ffn_hidden_{m}_q{Q}                hidden states (profiling)
+  atopk_{m}_q{Q}_k{K}                ATopK activation mask (profiling)
+
+Also triggers pretraining of the `small` checkpoint if absent.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import atopk_mask, routed_experts, swiglu_ffn, swiglu_hidden
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+class Emitter:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.manifest = {"version": 1, "models": {}, "artifacts": {}}
+
+    def emit(self, name, fn, args, outputs_doc, meta=None):
+        """args: list of (argname, ShapeDtypeStruct)."""
+        specs = [s for _, s in args]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        self.manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "args": [
+                {
+                    "name": n,
+                    "shape": list(s.shape),
+                    "dtype": "i32" if s.dtype == jnp.int32 else "f32",
+                }
+                for n, s in args
+            ],
+            "outputs": outputs_doc,
+            "meta": meta or {},
+        }
+        print(f"  {name}: {len(text)} chars, {len(args)} args")
+
+    def save_manifest(self):
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1, sort_keys=True)
+        print(f"wrote {path} ({len(self.manifest['artifacts'])} artifacts)")
+
+
+# ---------------------------------------------------------------------------
+# argument plumbing: dense params are flattened in sorted-name order
+# ---------------------------------------------------------------------------
+
+
+def dense_param_names(cfg, include_ffn=True):
+    names = ["embed", "final_norm", "pos", "unembed"]
+    for l in range(cfg["n_layers"]):
+        pre = f"layers.{l}"
+        names += [
+            f"{pre}.attn.wk", f"{pre}.attn.wo", f"{pre}.attn.wq", f"{pre}.attn.wv",
+            f"{pre}.attn_norm", f"{pre}.ffn_norm",
+        ]
+        if include_ffn:
+            names += [f"{pre}.ffn.w_down", f"{pre}.ffn.w_gate", f"{pre}.ffn.w_up"]
+    return sorted(names)
+
+
+def dense_param_specs(cfg, include_ffn=True):
+    d, dh, v, t = cfg["d_model"], cfg["d_ff"], cfg["vocab"], cfg["max_seq"]
+    shapes = {
+        "embed": (v, d),
+        "pos": (t, d),
+        "final_norm": (d,),
+        "unembed": (d, v),
+    }
+    for l in range(cfg["n_layers"]):
+        pre = f"layers.{l}"
+        shapes[f"{pre}.attn_norm"] = (d,)
+        shapes[f"{pre}.ffn_norm"] = (d,)
+        for w in ("wq", "wk", "wv", "wo"):
+            shapes[f"{pre}.attn.{w}"] = (d, d)
+        shapes[f"{pre}.ffn.w_gate"] = (d, dh)
+        shapes[f"{pre}.ffn.w_up"] = (d, dh)
+        shapes[f"{pre}.ffn.w_down"] = (dh, d)
+    return [(n, spec(shapes[n])) for n in dense_param_names(cfg, include_ffn)]
+
+
+def moe_param_names(cfg, n_shared_neurons, n_r):
+    """MoE per-layer stacked tensors, sorted. The rust runtime stacks
+    expert slices into these shapes when loading a converted model."""
+    names = []
+    for l in range(cfg["n_layers"]):
+        pre = f"moe.{l}"
+        names += [
+            f"{pre}.bias", f"{pre}.experts.w_down", f"{pre}.experts.w_gate",
+            f"{pre}.experts.w_up", f"{pre}.router.w_gate_r", f"{pre}.router.w_up_r",
+            f"{pre}.scale", f"{pre}.shared.w_down", f"{pre}.shared.w_gate",
+            f"{pre}.shared.w_up",
+        ]
+    return sorted(names)
+
+
+def moe_param_specs(cfg, sh, n_r, m):
+    d = cfg["d_model"]
+    shapes = {}
+    for l in range(cfg["n_layers"]):
+        pre = f"moe.{l}"
+        shapes[f"{pre}.shared.w_gate"] = (d, sh)
+        shapes[f"{pre}.shared.w_up"] = (d, sh)
+        shapes[f"{pre}.shared.w_down"] = (sh, d)
+        shapes[f"{pre}.experts.w_gate"] = (n_r, d, m)
+        shapes[f"{pre}.experts.w_up"] = (n_r, d, m)
+        shapes[f"{pre}.experts.w_down"] = (n_r, m, d)
+        shapes[f"{pre}.router.w_gate_r"] = (d, n_r)
+        shapes[f"{pre}.router.w_up_r"] = (d, n_r)
+        shapes[f"{pre}.scale"] = (n_r,)
+        shapes[f"{pre}.bias"] = (n_r,)
+    return [(n, spec(shapes[n])) for n in moe_param_names(cfg, sh, n_r)]
+
+
+def rebuild_params(names, flat):
+    return dict(zip(names, flat))
+
+
+# ---------------------------------------------------------------------------
+# artifact builders
+# ---------------------------------------------------------------------------
+
+
+def emit_model_artifacts(em, name, batches, specs_moe, kv_lens, prefill_lens):
+    cfg = model.config(name)
+    d, v, dh = cfg["d_model"], cfg["vocab"], cfg["d_ff"]
+    h = cfg["n_heads"]
+    hd = d // h
+    nl = cfg["n_layers"]
+    em.manifest["models"][name] = cfg
+    pnames = dense_param_names(cfg)
+    pspecs = dense_param_specs(cfg)
+
+    for b in batches:
+        for t in kv_lens:
+            # ---- dense decode ----
+            def decode_fn(*flat, _cfg=cfg, _n=len(pnames)):
+                params = rebuild_params(pnames, flat[:_n])
+                token, kv, pos = flat[_n], flat[_n + 1], flat[_n + 2]
+                logits, kv = model.decode_step(params, token, kv, pos, _cfg)
+                return logits, kv
+
+            args = pspecs + [
+                ("token", spec((b,), I32)),
+                ("kv", spec((nl, 2, b, h, t, hd))),
+                ("pos", spec((), I32)),
+            ]
+            em.emit(
+                f"decode_dense_{name}_b{b}_t{t}",
+                decode_fn,
+                args,
+                ["logits[b,v]", "kv"],
+                {"model": name, "batch": b, "kv_len": t},
+            )
+
+            # ---- prefill ----
+            for s in prefill_lens:
+                if s > t:
+                    continue
+
+                def prefill_fn(*flat, _cfg=cfg, _n=len(pnames), _t=t):
+                    params = rebuild_params(pnames, flat[:_n])
+                    tokens = flat[_n]
+                    logits, kv = model.prefill(params, tokens, _cfg, kv_len=_t)
+                    return logits, kv
+
+                em.emit(
+                    f"prefill_dense_{name}_b{b}_s{s}_t{t}",
+                    prefill_fn,
+                    pspecs + [("tokens", spec((b, s), I32))],
+                    ["logits[b,s,v]", "kv"],
+                    {"model": name, "batch": b, "seq": s, "kv_len": t},
+                )
+
+            # ---- monolithic MoE decode/prefill per spec ----
+            # converted models have no dense FFN weights, so MoE
+            # artifacts take the FFN-less dense param set
+            pnames_nf = dense_param_names(cfg, include_ffn=False)
+            pspecs_nf = dense_param_specs(cfg, include_ffn=False)
+            for spec_str, (n_s, n_k, n_tot) in specs_moe.items():
+                m = dh // n_tot
+                n_r = n_tot - n_s
+                sh = n_s * m
+                mnames = moe_param_names(cfg, sh, n_r)
+                mspecs = moe_param_specs(cfg, sh, n_r, m)
+
+                def unpack_moe(mflat, _cfg=cfg):
+                    moe_params = []
+                    for l in range(_cfg["n_layers"]):
+                        pre = f"moe.{l}"
+                        moe_params.append(
+                            dict(
+                                shared=(
+                                    mflat[f"{pre}.shared.w_gate"],
+                                    mflat[f"{pre}.shared.w_up"],
+                                    mflat[f"{pre}.shared.w_down"],
+                                ),
+                                experts=(
+                                    mflat[f"{pre}.experts.w_gate"],
+                                    mflat[f"{pre}.experts.w_up"],
+                                    mflat[f"{pre}.experts.w_down"],
+                                ),
+                                router=(
+                                    mflat[f"{pre}.router.w_gate_r"],
+                                    mflat[f"{pre}.router.w_up_r"],
+                                ),
+                                scale=mflat[f"{pre}.scale"],
+                                bias=mflat[f"{pre}.bias"],
+                            )
+                        )
+                    return moe_params
+
+                def moe_decode_fn(
+                    *flat, _cfg=cfg, _np=len(pnames_nf), _nm=len(mnames), _nk=n_k, _up=unpack_moe
+                ):
+                    params = rebuild_params(pnames_nf, flat[:_np])
+                    mflat = rebuild_params(mnames, flat[_np : _np + _nm])
+                    moe_params = _up(mflat)
+                    token, kv, pos = flat[_np + _nm], flat[_np + _nm + 1], flat[_np + _nm + 2]
+                    logits, kv = model.moe_decode_step(
+                        params, moe_params, token, kv, pos, _cfg, _nk
+                    )
+                    return logits, kv
+
+                em.emit(
+                    f"decode_moe_{name}_{spec_str}_b{b}_t{t}",
+                    moe_decode_fn,
+                    pspecs_nf
+                    + mspecs
+                    + [
+                        ("token", spec((b,), I32)),
+                        ("kv", spec((nl, 2, b, h, t, hd))),
+                        ("pos", spec((), I32)),
+                    ],
+                    ["logits[b,v]", "kv"],
+                    {"model": name, "spec": spec_str, "batch": b, "kv_len": t},
+                )
+
+                for s in prefill_lens:
+                    if s > t:
+                        continue
+
+                    def moe_prefill_fn(
+                        *flat,
+                        _cfg=cfg,
+                        _np=len(pnames_nf),
+                        _nm=len(mnames),
+                        _nk=n_k,
+                        _t=t,
+                        _up=unpack_moe,
+                    ):
+                        params = rebuild_params(pnames_nf, flat[:_np])
+                        mflat = rebuild_params(mnames, flat[_np : _np + _nm])
+                        moe_params = _up(mflat)
+                        tokens = flat[_np + _nm]
+                        logits, kv = model.moe_prefill(
+                            params, moe_params, tokens, _cfg, _t, _nk
+                        )
+                        return logits, kv
+
+                    em.emit(
+                        f"prefill_moe_{name}_{spec_str}_b{b}_s{s}_t{t}",
+                        moe_prefill_fn,
+                        pspecs_nf + mspecs + [("tokens", spec((b, s), I32))],
+                        ["logits[b,s,v]", "kv"],
+                        {"model": name, "spec": spec_str, "batch": b, "seq": s, "kv_len": t},
+                    )
+
+        # ---- orchestration pieces (batch-dependent; kv per length) ----
+        for t in kv_lens:
+            em.emit(
+                f"split_kv_{name}_b{b}_t{t}",
+                lambda kv, _nl=nl: tuple(kv[l] for l in range(_nl)),
+                [("kv", spec((nl, 2, b, h, t, hd)))],
+                [f"kv_layer_{l}" for l in range(nl)],
+                {"model": name, "batch": b, "kv_len": t},
+            )
+            em.emit(
+                f"attn_layer_{name}_b{b}_t{t}",
+                lambda x, kv_layer, wq, wk, wv, wo, g, pos, _h=h: model.attn_layer(
+                    x, kv_layer, wq, wk, wv, wo, g, pos, _h
+                ),
+                [
+                    ("x", spec((b, d))),
+                    ("kv_layer", spec((2, b, h, t, hd))),
+                    ("wq", spec((d, d))),
+                    ("wk", spec((d, d))),
+                    ("wv", spec((d, d))),
+                    ("wo", spec((d, d))),
+                    ("attn_norm", spec((d,))),
+                    ("pos", spec((), I32)),
+                ],
+                ["x[b,d]", "kv_layer"],
+                {"model": name, "batch": b, "kv_len": t},
+            )
+        em.emit(
+            f"embed_{name}_b{b}",
+            lambda embed, pos_table, token, pos: (embed[token] + pos_table[pos],),
+            [
+                ("embed", spec((v, d))),
+                ("pos_table", spec((cfg["max_seq"], d))),
+                ("token", spec((b,), I32)),
+                ("pos", spec((), I32)),
+            ],
+            ["x[b,d]"],
+            {"model": name, "batch": b},
+        )
+        em.emit(
+            f"rmsnorm_{name}_b{b}",
+            lambda x, g: (model.rmsnorm(x, g),),
+            [("x", spec((b, d))), ("g", spec((d,)))],
+            ["xn[b,d]"],
+            {"model": name, "batch": b},
+        )
+        em.emit(
+            f"logits_{name}_b{b}",
+            lambda x, g, u: (model.final_logits(x, g, u),),
+            [("x", spec((b, d))), ("final_norm", spec((d,))), ("unembed", spec((d, v)))],
+            ["logits[b,v]"],
+            {"model": name, "batch": b},
+        )
+
+    # ---- batch-independent pieces ----
+    for spec_str, (n_s, n_k, n_tot) in specs_moe.items():
+        m = dh // n_tot
+        n_r = n_tot - n_s
+        sh = n_s * m
+        # fused pre-step (PERF L3-1) per batch × kv length
+        for b in batches:
+            for t in kv_lens:
+                em.emit(
+                    f"attn_moe_pre_{name}_e{n_r}_h{sh}_b{b}_t{t}",
+                    lambda x, kvl, wq, wk, wv, wo, an, fn, rg, ru, sg, su, sd, pos, _h=h: (
+                        model.attn_moe_pre(
+                            x, kvl, wq, wk, wv, wo, an, fn, rg, ru, sg, su, sd, pos, _h
+                        )
+                    ),
+                    [
+                        ("x", spec((b, d))),
+                        ("kv_layer", spec((2, b, h, t, hd))),
+                        ("wq", spec((d, d))),
+                        ("wk", spec((d, d))),
+                        ("wv", spec((d, d))),
+                        ("wo", spec((d, d))),
+                        ("attn_norm", spec((d,))),
+                        ("ffn_norm", spec((d,))),
+                        ("w_gate_r", spec((d, n_r))),
+                        ("w_up_r", spec((d, n_r))),
+                        ("shared.w_gate", spec((d, sh))),
+                        ("shared.w_up", spec((d, sh))),
+                        ("shared.w_down", spec((sh, d))),
+                        ("pos", spec((), I32)),
+                    ],
+                    ["x[b,d]", "kv_layer", "xn[b,d]", "scores[b,nr]", "shared_y[b,d]"],
+                    {"model": name, "batch": b, "kv_len": t, "n_r": n_r, "hidden": sh},
+                )
+        for b in batches:
+            em.emit(
+                f"router_{name}_e{n_r}_b{b}",
+                lambda x, g, u: (model.router_scores(x, g, u),),
+                [("x", spec((b, d))), ("w_gate_r", spec((d, n_r))), ("w_up_r", spec((d, n_r)))],
+                ["scores[b,nr]"],
+                {"model": name, "batch": b, "n_r": n_r},
+            )
+            em.emit(
+                f"ffn_{name}_h{sh}_b{b}",
+                lambda x, g, u, dn: (swiglu_ffn(x, g, u, dn),),
+                [
+                    ("x", spec((b, d))),
+                    ("w_gate", spec((d, sh))),
+                    ("w_up", spec((d, sh))),
+                    ("w_down", spec((sh, d))),
+                ],
+                ["y[b,d]"],
+                {"model": name, "batch": b, "hidden": sh},
+            )
+            # expert capacity: ceil(b * n_k / n_r) rounded up with slack
+            cap = max(1, -(-b * n_k // n_r))
+            cap = int(2 ** np.ceil(np.log2(max(cap, 1))))
+            em.emit(
+                f"experts_{name}_e{n_r}_mm{m}_c{cap}_b{b}",
+                lambda xs, g, u, dn: (routed_experts(xs, g, u, dn),),
+                [
+                    ("xs", spec((n_r, cap, d))),
+                    ("w_gate", spec((n_r, d, m))),
+                    ("w_up", spec((n_r, d, m))),
+                    ("w_down", spec((n_r, m, d))),
+                ],
+                ["ys[nr,c,d]"],
+                {"model": name, "batch": b, "n_r": n_r, "m": m, "capacity": cap},
+            )
+
+    # ---- profiling pieces ----
+    for q in (128, 256):
+        em.emit(
+            f"ffn_hidden_{name}_q{q}",
+            lambda x, g, u: (swiglu_hidden(x, g, u),),
+            [("x", spec((q, d))), ("w_gate", spec((d, dh))), ("w_up", spec((d, dh)))],
+            ["h[q,dh]"],
+            {"model": name, "q": q},
+        )
+    for k in (10, 32):
+        if k <= dh:
+            em.emit(
+                f"atopk_{name}_q128_k{k}",
+                lambda hh, _k=k: (atopk_mask(hh, _k),),
+                [("h", spec((128, dh)))],
+                ["mask[q,dh]"],
+                {"model": name, "k": k},
+            )
+    em.emit(
+        f"dense_ffn_{name}_q128",
+        lambda x, g, u, dn: (swiglu_ffn(x, g, u, dn),),
+        [
+            ("x", spec((128, d))),
+            ("w_gate", spec((d, dh))),
+            ("w_up", spec((d, dh))),
+            ("w_down", spec((dh, d))),
+        ],
+        ["y[q,d]"],
+        {"model": name, "q": 128},
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--skip-pretrain", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    em = Emitter(args.out)
+
+    # tiny: test artifacts only (b1), fast to lower
+    print("== tiny ==")
+    emit_model_artifacts(
+        em,
+        "tiny",
+        batches=[1],
+        specs_moe={"S2A2E8": (2, 2, 8)},
+        kv_lens=[128],
+        prefill_lens=[16],
+    )
+
+    # small: the serving/eval workhorse — all six Table 9 configs
+    print("== small ==")
+    emit_model_artifacts(
+        em,
+        "small",
+        batches=[1, 8, 32],
+        specs_moe={
+            "S1A5E8": (1, 5, 8),
+            "S3A3E8": (3, 3, 8),
+            "S2A4E8": (2, 4, 8),
+            "S4A8E16": (4, 8, 16),
+            "S6A6E16": (6, 6, 16),
+            "S3A9E16": (3, 9, 16),
+        },
+        kv_lens=[64, 256],
+        prefill_lens=[16, 64],
+    )
+
+    em.save_manifest()
+
+    # pretrain the small checkpoint (skipped if present)
+    ckpt = os.path.join(args.out, "small.cmw")
+    if not args.skip_pretrain and not os.path.exists(ckpt):
+        from . import pretrain
+
+        pretrain.main(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Numpy writer/reader for the `.cmw` weight format.
+
+Byte-compatible with `rust/src/model/format.rs`:
+    magic "CMW1" | u64 header_len | JSON header (padded) | f32 LE data
+The header's "tensors" map gives shape + byte offset into the data
+section; "config" carries the TransformerConfig; "meta.layer_kinds"
+marks dense vs MoE layers.
+"""
+
+import json
+import struct
+
+import numpy as np
+
+MAGIC = b"CMW1"
+ALIGN = 64
+
+
+def write_cmw(path, config, meta, tensors):
+    """tensors: dict name -> np.ndarray (float32)."""
+    offset = 0
+    theader = {}
+    names = sorted(tensors)  # rust writes BTreeMap order; match it
+    for name in names:
+        arr = np.ascontiguousarray(tensors[name], dtype=np.float32)
+        theader[name] = {"shape": list(arr.shape), "offset": offset}
+        offset += arr.size * 4
+    header = json.dumps(
+        {"config": config, "meta": meta, "tensors": theader}, separators=(",", ":")
+    ).encode()
+    data_start = 4 + 8 + len(header)
+    pad = (ALIGN - data_start % ALIGN) % ALIGN
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<Q", len(header) + pad))
+        f.write(header)
+        f.write(b" " * pad)
+        for name in names:
+            arr = np.ascontiguousarray(tensors[name], dtype=np.float32)
+            f.write(arr.astype("<f4").tobytes())
+
+
+def read_cmw(path):
+    """Returns (config, meta, {name: np.ndarray})."""
+    with open(path, "rb") as f:
+        magic = f.read(4)
+        assert magic == MAGIC, f"{path}: not a CMW1 file"
+        (hlen,) = struct.unpack("<Q", f.read(8))
+        header = json.loads(f.read(hlen).decode().rstrip())
+        data = f.read()
+    tensors = {}
+    for name, ent in header["tensors"].items():
+        shape = tuple(ent["shape"])
+        n = int(np.prod(shape)) if shape else 1
+        off = ent["offset"]
+        tensors[name] = np.frombuffer(data, dtype="<f4", count=n, offset=off).reshape(shape)
+    return header["config"], header["meta"], tensors

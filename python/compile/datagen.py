@@ -1,0 +1,66 @@
+"""Synthetic corpus generators — the python mirror of
+`rust/src/data/corpus.rs` (same lexicon, same transition rules, same
+domain structure; independent RNG, so the *distribution* matches, which
+is what pretraining needs).
+"""
+
+import random
+
+LEXICON = [
+    "the", "model", "expert", "router", "token", "layer", "neuron", "dense", "sparse", "gate",
+    "shared", "routed", "cache", "batch", "serve", "fast", "slow", "high", "low", "with", "from",
+    "into", "over", "under", "runs", "emits", "learns", "splits", "merges", "activates",
+]
+
+
+def gen_markov(n_bytes, seed=0):
+    rng = random.Random(seed)
+    n = len(LEXICON)
+    out = []
+    size = 0
+    cur = rng.randrange(n)
+    while size < n_bytes:
+        w = LEXICON[cur]
+        out.append(w)
+        size += len(w) + 1
+        r = rng.random()
+        if r < 0.45:
+            cur = (2 * cur + 1) % n
+        elif r < 0.8:
+            cur = (3 * cur + 2) % n
+        else:
+            cur = rng.randrange(n)
+        if rng.random() < 0.07:
+            out[-1] = w + "."
+    return " ".join(out)[:n_bytes]
+
+
+def gen_arith(n_bytes, seed=0):
+    rng = random.Random(seed)
+    out = []
+    size = 0
+    while size < n_bytes:
+        if rng.random() < 0.7:
+            a = rng.randrange(100)
+            b = rng.randrange(100)
+            s = f"{a}+{b}={a + b};"
+        else:
+            period = rng.randrange(2, 5)
+            reps = rng.randrange(2, 5)
+            start = ord("a") + rng.randrange(6)
+            unit = "".join(chr(start + k) for k in range(period))
+            s = unit * reps + ";"
+        out.append(s)
+        size += len(s)
+    return "".join(out)[:n_bytes]
+
+
+def mixed_corpus(n_bytes, seed=0):
+    """50/50 interleave of both domains (the pretraining corpus)."""
+    half = n_bytes // 2
+    return gen_markov(half, seed) + gen_arith(n_bytes - half, seed + 1)
+
+
+def encode(text):
+    """Byte-level tokenization (matches rust/src/data/mod.rs)."""
+    return list(text.encode("utf-8"))

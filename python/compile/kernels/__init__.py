@@ -1,0 +1,8 @@
+"""Pallas kernels (L1) + pure-jnp oracles."""
+
+from . import ref
+from .atopk import atopk_mask
+from .experts import routed_experts
+from .swiglu import swiglu_ffn, swiglu_hidden
+
+__all__ = ["ref", "atopk_mask", "routed_experts", "swiglu_ffn", "swiglu_hidden"]

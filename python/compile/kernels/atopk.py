@@ -1,0 +1,40 @@
+"""L1 Pallas kernel: ATopK activation mask (paper §A.2, Eq. 14).
+
+Marks, per token, the top-`k` hidden activations by magnitude. Used by
+the `ffn_hidden`/profiling artifacts so the rust profiler can consume a
+ready-made binary activation matrix.
+
+Threshold form: a position is active iff |h| >= k-th largest |h| of its
+row (ties at the threshold may over-mark — the rust profiler and the
+oracle use the same rule, so all three layers agree bit-for-bit).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _atopk_kernel(h_ref, o_ref, *, k: int):
+    h = jnp.abs(h_ref[...])
+    thresh = jnp.sort(h, axis=-1)[:, -k]
+    o_ref[...] = (h >= thresh[:, None]).astype(h_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_q"))
+def atopk_mask(h, k: int, block_q: int = 128):
+    """Binary mask [q, d_h] of each row's top-k |activations|."""
+    q, d_h = h.shape
+    assert 1 <= k <= d_h, f"k={k} out of range for d_h={d_h}"
+    bq = min(block_q, q)
+    if q % bq != 0:
+        bq = q
+    return pl.pallas_call(
+        functools.partial(_atopk_kernel, k=k),
+        grid=(q // bq,),
+        in_specs=[pl.BlockSpec((bq, d_h), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bq, d_h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((q, d_h), h.dtype),
+        interpret=True,
+    )(h)

@@ -1,0 +1,60 @@
+"""L1 Pallas kernel: grouped routed-expert SwiGLU.
+
+This is the MoE hot path the serving engine calls once per layer: the
+rust dispatcher gathers each routed expert's tokens into a fixed
+`capacity` block (padding unused slots), and this kernel runs every
+expert's SwiGLU in one launch:
+
+    xs  [n_experts, capacity, d]
+    Wg  [n_experts, d, m]        (m = expert size, d_h / N)
+    Wu  [n_experts, d, m]
+    Wd  [n_experts, m, d]
+    ->  [n_experts, capacity, d]
+
+The grid iterates experts × capacity tiles; BlockSpec pins one expert's
+weight panel in VMEM while its token tile streams through — the same
+schedule GPU MoE kernels express with one threadblock per expert, which
+is the hardware adaptation DESIGN.md §3 describes (batched-einsum MXU
+form instead of a loop of small GEMMs).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_C = 128
+
+
+def _experts_kernel(xs_ref, wg_ref, wu_ref, wd_ref, o_ref):
+    x = xs_ref[0]  # [bc, d]
+    wg = wg_ref[0]  # [d, m]
+    wu = wu_ref[0]
+    wd = wd_ref[0]  # [m, d]
+    h = jax.nn.silu(x @ wg) * (x @ wu)
+    o_ref[0] = h @ wd
+
+
+@functools.partial(jax.jit, static_argnames=("block_c",))
+def routed_experts(xs, w_gate, w_up, w_down, block_c: int = BLOCK_C):
+    """Batched per-expert SwiGLU over gathered token blocks."""
+    n_e, cap, d = xs.shape
+    m = w_gate.shape[2]
+    bc = min(block_c, cap)
+    if cap % bc != 0:
+        bc = cap
+    grid = (n_e, cap // bc)
+    return pl.pallas_call(
+        _experts_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, d), lambda e, c: (e, c, 0)),
+            pl.BlockSpec((1, d, m), lambda e, c: (e, 0, 0)),
+            pl.BlockSpec((1, d, m), lambda e, c: (e, 0, 0)),
+            pl.BlockSpec((1, m, d), lambda e, c: (e, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, d), lambda e, c: (e, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_e, cap, d), xs.dtype),
+        interpret=True,
+    )(xs, w_gate, w_up, w_down)

@@ -1,0 +1,47 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the correctness ground truth: pytest sweeps shapes/dtypes with
+hypothesis and asserts the kernels match these to float tolerance. They
+are also what the L2 model calls when CMOE_NO_PALLAS=1 (debug escape
+hatch); the AOT build always uses the kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def swiglu_hidden_ref(x, w_gate, w_up):
+    """H = Swish(x @ Wg) * (x @ Wu)   (paper Eq. 13)."""
+    return jax.nn.silu(x @ w_gate) * (x @ w_up)
+
+
+def swiglu_ffn_ref(x, w_gate, w_up, w_down):
+    """F(x) = H @ Wd   (paper Eq. 3)."""
+    return swiglu_hidden_ref(x, w_gate, w_up) @ w_down
+
+
+def routed_experts_ref(xs, w_gate, w_up, w_down):
+    """Per-expert SwiGLU over gathered token blocks.
+
+    xs:      [n_experts, capacity, d]
+    w_gate:  [n_experts, d, m]
+    w_up:    [n_experts, d, m]
+    w_down:  [n_experts, m, d]
+    returns  [n_experts, capacity, d]
+    """
+    h = jax.nn.silu(jnp.einsum("ecd,edm->ecm", xs, w_gate)) * jnp.einsum(
+        "ecd,edm->ecm", xs, w_up
+    )
+    return jnp.einsum("ecm,emd->ecd", h, w_down)
+
+
+def atopk_mask_ref(h, k):
+    """ATopK activation mask (paper Eq. 14), threshold form.
+
+    A position is active iff |h| >= (k-th largest |h| in its row).
+    With ties at the threshold this can mark more than k positions;
+    both kernel and oracle use the same rule so they agree exactly.
+    """
+    a = jnp.abs(h)
+    thresh = jnp.sort(a, axis=-1)[..., -k]
+    return (a >= thresh[..., None]).astype(jnp.float32)

@@ -1,0 +1,136 @@
+"""L1 Pallas kernel: tiled SwiGLU FFN.
+
+The FFN `y = (Swish(x·Wg) ⊙ (x·Wu)) · Wd` is the paper's compute
+hot-spot — it is what CMoE sparsifies. The kernel tiles the hidden
+dimension `d_h` so each grid step streams one (Wg, Wu, Wd) column block
+through VMEM and accumulates its rank-`bdh` contribution into the
+output block:
+
+    grid = (q_tiles, dh_tiles)
+    x     [bq, d]    — revisited across dh tiles (stays in VMEM)
+    Wg/Wu [d, bdh]   — one hidden block per step
+    Wd    [bdh, d]
+    y     [bq, d]    — accumulated in place across the dh axis
+
+TPU mapping (DESIGN.md §9): with d=128, bdh=128, f32, the working set
+is bq·d + 3·d·bdh + bq·d ≈ 200 KiB ≪ 16 MiB VMEM; the MXU sees
+[bq,128]×[128,128] matmuls — full systolic tiles. On this CPU testbed
+the kernel MUST run under interpret=True (Mosaic custom-calls cannot
+execute on the CPU PJRT plugin); numerics are identical.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes, MXU-shaped. Shrunk automatically for small inputs.
+BLOCK_Q = 128
+BLOCK_DH = 128
+
+
+def _swiglu_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref):
+    j = pl.program_id(1)
+    x = x_ref[...]
+    h = jax.nn.silu(x @ wg_ref[...]) * (x @ wu_ref[...])
+    y = h @ wd_ref[...]
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = y
+
+    @pl.when(j > 0)
+    def _acc():
+        o_ref[...] += y
+
+
+@jax.custom_vjp
+def swiglu_ffn(x, w_gate, w_up, w_down):
+    """Tiled SwiGLU FFN (Pallas forward, analytic backward). [q, d_out]."""
+    return _swiglu_ffn_fwd_only(x, w_gate, w_up, w_down)
+
+
+def _swiglu_vjp_fwd(x, w_gate, w_up, w_down):
+    y = _swiglu_ffn_fwd_only(x, w_gate, w_up, w_down)
+    return y, (x, w_gate, w_up, w_down)
+
+
+def _swiglu_vjp_bwd(res, dy):
+    # analytic SwiGLU backward (the kernel has no interpret-mode AD rule)
+    x, w_gate, w_up, w_down = res
+    g = x @ w_gate
+    u = x @ w_up
+    sig = jax.nn.sigmoid(g)
+    s = g * sig
+    h = s * u
+    dh = dy @ w_down.T
+    d_wd = h.T @ dy
+    du = dh * s
+    dg = dh * u * (sig * (1.0 + g * (1.0 - sig)))
+    dx = dg @ w_gate.T + du @ w_up.T
+    d_wg = x.T @ dg
+    d_wu = x.T @ du
+    return dx, d_wg, d_wu, d_wd
+
+
+swiglu_ffn.defvjp(_swiglu_vjp_fwd, _swiglu_vjp_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_dh"))
+def _swiglu_ffn_fwd_only(x, w_gate, w_up, w_down, block_q: int = BLOCK_Q, block_dh: int = BLOCK_DH):
+    q, d = x.shape
+    d_h = w_gate.shape[1]
+    d_out = w_down.shape[1]
+    bq = min(block_q, q)
+    bdh = min(block_dh, d_h)
+    # pallas needs exact tiling; fall back to one tile on ragged shapes
+    if q % bq != 0:
+        bq = q
+    if d_h % bdh != 0:
+        bdh = d_h
+    grid = (q // bq, d_h // bdh)
+    return pl.pallas_call(
+        _swiglu_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, bdh), lambda i, j: (0, j)),
+            pl.BlockSpec((d, bdh), lambda i, j: (0, j)),
+            pl.BlockSpec((bdh, d_out), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, d_out), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((q, d_out), x.dtype),
+        interpret=True,
+    )(x, w_gate, w_up, w_down)
+
+
+def _hidden_kernel(x_ref, wg_ref, wu_ref, o_ref):
+    x = x_ref[...]
+    o_ref[...] = jax.nn.silu(x @ wg_ref[...]) * (x @ wu_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_dh"))
+def swiglu_hidden(x, w_gate, w_up, block_q: int = BLOCK_Q, block_dh: int = BLOCK_DH):
+    """Hidden states H = Swish(x·Wg) ⊙ (x·Wu) (profiling path). [q, d_h]."""
+    q, d = x.shape
+    d_h = w_gate.shape[1]
+    bq = min(block_q, q)
+    bdh = min(block_dh, d_h)
+    if q % bq != 0:
+        bq = q
+    if d_h % bdh != 0:
+        bdh = d_h
+    grid = (q // bq, d_h // bdh)
+    return pl.pallas_call(
+        _hidden_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, bdh), lambda i, j: (0, j)),
+            pl.BlockSpec((d, bdh), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bq, bdh), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((q, d_h), x.dtype),
+        interpret=True,
+    )(x, w_gate, w_up)

@@ -1,0 +1,420 @@
+"""L2: the JAX transformer (build-time only — never on the request path).
+
+Architecture mirrors the rust reference forward bit-for-bit
+(`rust/src/eval/forward.rs`): byte-vocab embedding + learned absolute
+positions, pre-RMSNorm (eps 1e-6) attention and SwiGLU FFN blocks with
+residuals, final RMSNorm, untied unembedding. The FFN runs through the
+L1 Pallas kernels so they lower into the same HLO the rust runtime
+executes.
+
+Parameter names match the `.cmw` tensor names exactly (see
+`rust/src/model/format.rs`), e.g. ``layers.0.attn.wq``.
+"""
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref, routed_experts, swiglu_ffn, swiglu_hidden
+
+# Debug escape hatch: route FFN through the pure-jnp oracle instead of
+# the Pallas kernels (artifact builds always use the kernels).
+_NO_PALLAS = os.environ.get("CMOE_NO_PALLAS") == "1"
+
+MODEL_ZOO = {
+    # name: (vocab, d_model, n_layers, n_heads, d_ff, max_seq) — keep in
+    # sync with rust/src/model/zoo.rs
+    "tiny": (256, 64, 2, 4, 256, 128),
+    "small": (256, 128, 4, 4, 512, 256),
+    "base": (256, 256, 6, 8, 1024, 256),
+}
+
+
+def config(name):
+    vocab, d_model, n_layers, n_heads, d_ff, max_seq = MODEL_ZOO[name]
+    return dict(
+        name=name,
+        vocab=vocab,
+        d_model=d_model,
+        n_layers=n_layers,
+        n_heads=n_heads,
+        d_ff=d_ff,
+        max_seq=max_seq,
+    )
+
+
+def init_params(cfg, key):
+    """Initialize a dense model as a flat {name: array} dict."""
+    d, dh, v = cfg["d_model"], cfg["d_ff"], cfg["vocab"]
+    std_p = (1.0 / d) ** 0.5
+    keys = iter(jax.random.split(key, 6 + 7 * cfg["n_layers"]))
+    p = {
+        "embed": jax.random.normal(next(keys), (v, d)) * 0.02,
+        "pos": jax.random.normal(next(keys), (cfg["max_seq"], d)) * 0.02,
+        "final_norm": jnp.ones((d,)),
+        "unembed": jax.random.normal(next(keys), (d, v)) * std_p,
+    }
+    for l in range(cfg["n_layers"]):
+        pre = f"layers.{l}"
+        p[f"{pre}.attn_norm"] = jnp.ones((d,))
+        p[f"{pre}.ffn_norm"] = jnp.ones((d,))
+        for w in ("wq", "wk", "wv", "wo"):
+            p[f"{pre}.attn.{w}"] = jax.random.normal(next(keys), (d, d)) * std_p
+        p[f"{pre}.ffn.w_gate"] = jax.random.normal(next(keys), (d, dh)) * std_p
+        p[f"{pre}.ffn.w_up"] = jax.random.normal(next(keys), (d, dh)) * std_p
+        p[f"{pre}.ffn.w_down"] = jax.random.normal(next(keys), (dh, d)) * std_p
+    return p
+
+
+def rmsnorm(x, g, eps=1e-6):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * g
+
+
+def _ffn(x2d, w_gate, w_up, w_down):
+    if _NO_PALLAS:
+        return ref.swiglu_ffn_ref(x2d, w_gate, w_up, w_down)
+    return swiglu_ffn(x2d, w_gate, w_up, w_down)
+
+
+def _attention(x, wq, wk, wv, wo, n_heads, mask):
+    """Batched causal attention. x: [B, S, d]; mask: [S, T] additive."""
+    b, s, d = x.shape
+    hd = d // n_heads
+    q = (x @ wq).reshape(b, s, n_heads, hd)
+    k = (x @ wk).reshape(b, s, n_heads, hd)
+    v = (x @ wv).reshape(b, s, n_heads, hd)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / (hd**0.5)
+    scores = scores + mask[None, None, :, :]
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b, s, d)
+    return ctx @ wo
+
+
+def _attention_kv(x, kv_k, kv_v, wq, wk, wv, wo, n_heads, pos):
+    """One decode step with a static-size KV cache.
+
+    x:      [B, d]        current token's hidden state
+    kv_k/v: [B, H, T, hd] cache (only positions < pos are valid)
+    pos:    scalar i32    index the new entry is written to
+    Returns (out [B, d], new_kv_k, new_kv_v).
+    """
+    b, d = x.shape
+    t = kv_k.shape[2]
+    hd = d // n_heads
+    q = (x @ wq).reshape(b, n_heads, hd)
+    k_new = (x @ wk).reshape(b, n_heads, hd)
+    v_new = (x @ wv).reshape(b, n_heads, hd)
+    kv_k = jax.lax.dynamic_update_slice(kv_k, k_new[:, :, None, :], (0, 0, pos, 0))
+    kv_v = jax.lax.dynamic_update_slice(kv_v, v_new[:, :, None, :], (0, 0, pos, 0))
+    scores = jnp.einsum("bhd,bhtd->bht", q, kv_k) / (hd**0.5)
+    valid = jnp.arange(t)[None, None, :] <= pos
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bht,bhtd->bhd", probs, kv_v).reshape(b, d)
+    return ctx @ wo, kv_k, kv_v
+
+
+# ---------------------------------------------------------------------------
+# Dense model
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, tokens, cfg, kv_len):
+    """Prefill `tokens: [B, S]` → (logits [B, S, V], kv [L, 2, B, H, kv_len, hd]).
+
+    The KV cache is allocated at `kv_len >= S` so decode can append.
+    """
+    b, s = tokens.shape
+    d = cfg["d_model"]
+    n_heads = cfg["n_heads"]
+    hd = d // n_heads
+    n_layers = cfg["n_layers"]
+    x = params["embed"][tokens] + params["pos"][:s][None, :, :]
+    mask = jnp.where(jnp.arange(s)[:, None] >= jnp.arange(s)[None, :], 0.0, -1e30)
+    # PERF L2-1: build per-layer caches and stack once (avoids L×2
+    # whole-cache copies from incremental .at[].set updates)
+    kv_layers = []
+    pad = kv_len - s
+    for l in range(n_layers):
+        pre = f"layers.{l}"
+        xn = rmsnorm(x, params[f"{pre}.attn_norm"])
+        # recompute k/v for the cache (same projections)
+        k = (xn @ params[f"{pre}.attn.wk"]).reshape(b, s, n_heads, hd)
+        v = (xn @ params[f"{pre}.attn.wv"]).reshape(b, s, n_heads, hd)
+        kt = jnp.pad(k.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vt = jnp.pad(v.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kv_layers.append(jnp.stack([kt, vt]))
+        x = x + _attention(
+            xn,
+            params[f"{pre}.attn.wq"],
+            params[f"{pre}.attn.wk"],
+            params[f"{pre}.attn.wv"],
+            params[f"{pre}.attn.wo"],
+            n_heads,
+            mask,
+        )
+        xn = rmsnorm(x, params[f"{pre}.ffn_norm"])
+        y = _ffn(
+            xn.reshape(b * s, d),
+            params[f"{pre}.ffn.w_gate"],
+            params[f"{pre}.ffn.w_up"],
+            params[f"{pre}.ffn.w_down"],
+        ).reshape(b, s, d)
+        x = x + y
+    logits = rmsnorm(x, params["final_norm"]) @ params["unembed"]
+    return logits, jnp.stack(kv_layers)
+
+
+def decode_step(params, token, kv, pos, cfg):
+    """One decode step.
+
+    token: [B] i32; kv: [L, 2, B, H, T, hd]; pos: scalar i32.
+    Returns (logits [B, V], new kv).
+    """
+    b = token.shape[0]
+    d = cfg["d_model"]
+    n_heads = cfg["n_heads"]
+    x = params["embed"][token] + params["pos"][pos]
+    # PERF (EXPERIMENTS.md §Perf L2-1): collect per-layer caches and
+    # stack ONCE at the end — `kv.at[l].set(...)` per layer materializes
+    # a full-cache copy per layer (8 × 134 MB at b32/t256), which
+    # dominated the dense decode step.
+    new_kv = []
+    for l in range(cfg["n_layers"]):
+        pre = f"layers.{l}"
+        xn = rmsnorm(x, params[f"{pre}.attn_norm"])
+        out, kk, vv = _attention_kv(
+            xn,
+            kv[l, 0],
+            kv[l, 1],
+            params[f"{pre}.attn.wq"],
+            params[f"{pre}.attn.wk"],
+            params[f"{pre}.attn.wv"],
+            params[f"{pre}.attn.wo"],
+            n_heads,
+            pos,
+        )
+        new_kv.append(jnp.stack([kk, vv]))
+        x = x + out
+        xn = rmsnorm(x, params[f"{pre}.ffn_norm"])
+        x = x + _ffn(
+            xn,
+            params[f"{pre}.ffn.w_gate"],
+            params[f"{pre}.ffn.w_up"],
+            params[f"{pre}.ffn.w_down"],
+        )
+    logits = rmsnorm(x, params["final_norm"]) @ params["unembed"]
+    return logits, jnp.stack(new_kv)
+
+
+# ---------------------------------------------------------------------------
+# MoE building blocks (monolithic in-graph routing, Eq. 4/8/9)
+# ---------------------------------------------------------------------------
+
+
+def moe_ffn_masked(x2d, shared_w, expert_w, router_w, gate_scale, gate_bias, n_k):
+    """Masked MoE FFN for a flat batch `x2d: [q, d]`.
+
+    shared_w:  (w_gate [d, sh], w_up, w_down [sh, d])
+    expert_w:  (w_gate [Nr, d, m], w_up, w_down [Nr, m, d])
+    router_w:  (w_gate_r [d, Nr], w_up_r [d, Nr])
+    Computes all experts and masks by the top-`n_k` gate (no FLOP saving
+    — this is the 1-call correctness/eval path; the serving engine's
+    grouped dispatch realizes the savings).
+    """
+    q, d = x2d.shape
+    sw_g, sw_u, sw_d = shared_w
+    ew_g, ew_u, ew_d = expert_w
+    rw_g, rw_u = router_w
+    n_r = ew_g.shape[0]
+
+    out = _ffn(x2d, sw_g, sw_u, sw_d) if sw_g.shape[1] > 0 else jnp.zeros_like(x2d)
+
+    scores = ref.swiglu_hidden_ref(x2d, rw_g, rw_u)  # [q, Nr]
+    sp = jax.nn.softmax(scores, axis=-1)
+    ranked = sp + gate_bias[None, :]
+    # top-N_k via sort threshold — lax.top_k lowers to a `topk` HLO
+    # attribute that xla_extension 0.5.1's text parser rejects; with
+    # continuous scores the >=-threshold rule selects exactly N_k.
+    thresh = jnp.sort(ranked, axis=-1)[:, -n_k]
+    selected = ranked >= thresh[:, None]
+    gates = jnp.where(selected, 1.0 + sp * gate_scale[None, :], 0.0)
+
+    if _NO_PALLAS:
+        ys = ref.routed_experts_ref(jnp.broadcast_to(x2d, (n_r, q, d)), ew_g, ew_u, ew_d)
+    else:
+        ys = routed_experts(jnp.broadcast_to(x2d, (n_r, q, d)), ew_g, ew_u, ew_d)
+    return out + jnp.einsum("eqd,qe->qd", ys, gates)
+
+
+def moe_prefill(params, moe_params, tokens, cfg, kv_len, n_k):
+    """Prefill with every FFN replaced by the masked MoE layer."""
+    b, s = tokens.shape
+    d = cfg["d_model"]
+    n_heads = cfg["n_heads"]
+    hd = d // n_heads
+    n_layers = cfg["n_layers"]
+    x = params["embed"][tokens] + params["pos"][:s][None, :, :]
+    mask = jnp.where(jnp.arange(s)[:, None] >= jnp.arange(s)[None, :], 0.0, -1e30)
+    # PERF L2-1: build per-layer caches and stack once (avoids L×2
+    # whole-cache copies from incremental .at[].set updates)
+    kv_layers = []
+    pad = kv_len - s
+    for l in range(n_layers):
+        pre = f"layers.{l}"
+        xn = rmsnorm(x, params[f"{pre}.attn_norm"])
+        k = (xn @ params[f"{pre}.attn.wk"]).reshape(b, s, n_heads, hd)
+        v = (xn @ params[f"{pre}.attn.wv"]).reshape(b, s, n_heads, hd)
+        kt = jnp.pad(k.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vt = jnp.pad(v.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kv_layers.append(jnp.stack([kt, vt]))
+        x = x + _attention(
+            xn,
+            params[f"{pre}.attn.wq"],
+            params[f"{pre}.attn.wk"],
+            params[f"{pre}.attn.wv"],
+            params[f"{pre}.attn.wo"],
+            n_heads,
+            mask,
+        )
+        xn = rmsnorm(x, params[f"{pre}.ffn_norm"])
+        mp = moe_params[l]
+        y = moe_ffn_masked(
+            xn.reshape(b * s, d),
+            mp["shared"],
+            mp["experts"],
+            mp["router"],
+            mp["scale"],
+            mp["bias"],
+            n_k,
+        ).reshape(b, s, d)
+        x = x + y
+    logits = rmsnorm(x, params["final_norm"]) @ params["unembed"]
+    return logits, jnp.stack(kv_layers)
+
+
+def moe_decode_step(params, moe_params, token, kv, pos, cfg, n_k):
+    """Decode step with every FFN replaced by the masked MoE layer.
+
+    moe_params[l] = dict(shared=(g,u,d), experts=(g,u,d), router=(g,u),
+    scale, bias).
+    """
+    b = token.shape[0]
+    n_heads = cfg["n_heads"]
+    x = params["embed"][token] + params["pos"][pos]
+    new_kv = []  # PERF L2-1: stack once (see decode_step)
+    for l in range(cfg["n_layers"]):
+        pre = f"layers.{l}"
+        xn = rmsnorm(x, params[f"{pre}.attn_norm"])
+        out, kk, vv = _attention_kv(
+            xn,
+            kv[l, 0],
+            kv[l, 1],
+            params[f"{pre}.attn.wq"],
+            params[f"{pre}.attn.wk"],
+            params[f"{pre}.attn.wv"],
+            params[f"{pre}.attn.wo"],
+            n_heads,
+            pos,
+        )
+        new_kv.append(jnp.stack([kk, vv]))
+        x = x + out
+        xn = rmsnorm(x, params[f"{pre}.ffn_norm"])
+        mp = moe_params[l]
+        x = x + moe_ffn_masked(
+            xn, mp["shared"], mp["experts"], mp["router"], mp["scale"], mp["bias"], n_k
+        )
+    logits = rmsnorm(x, params["final_norm"]) @ params["unembed"]
+    return logits, jnp.stack(new_kv)
+
+
+# ---------------------------------------------------------------------------
+# Pieces for rust-orchestrated MoE serving (one call per stage)
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(params, token, pos):
+    """[B] → [B, d]."""
+    return params["embed"][token] + params["pos"][pos]
+
+
+def attn_layer(x, kv_layer, wq, wk, wv, wo, attn_norm, pos, n_heads):
+    """Pre-norm attention block with residual for ONE layer.
+
+    x: [B, d]; kv_layer: [2, B, H, T, hd]. Returns (x', new kv_layer).
+    """
+    xn = rmsnorm(x, attn_norm)
+    out, kk, vv = _attention_kv(xn, kv_layer[0], kv_layer[1], wq, wk, wv, wo, n_heads, pos)
+    return x + out, jnp.stack([kk, vv])
+
+
+def ffn_norm_apply(x, g):
+    """The FFN pre-norm (rust adds the residual after expert dispatch)."""
+    return rmsnorm(x, g)
+
+
+def router_scores(x2d, rw_g, rw_u):
+    """Analytical router scores (Eq. 8)."""
+    return ref.swiglu_hidden_ref(x2d, rw_g, rw_u)
+
+
+def attn_moe_pre(
+    x, kv_layer, wq, wk, wv, wo, attn_norm, ffn_norm, rw_g, rw_u, sw_g, sw_u, sw_d, pos, n_heads
+):
+    """PERF L3-1: the fused per-layer "pre" step for orchestrated MoE —
+    attention + residual, FFN pre-norm, router scores and the shared
+    expert in ONE artifact call (replaces attn → rmsnorm → router →
+    shared_ffn, saving 3 executes + 2 uploads + 1 download per layer).
+
+    Returns (x' [B,d], new kv_layer, xn [B,d], scores [B,Nr],
+    shared_y [B,d]); rust gathers expert blocks from xn and finishes
+    with the grouped-experts kernel.
+    """
+    xn = rmsnorm(x, attn_norm)
+    out, kk, vv = _attention_kv(xn, kv_layer[0], kv_layer[1], wq, wk, wv, wo, n_heads, pos)
+    x = x + out
+    xn = rmsnorm(x, ffn_norm)
+    scores = ref.swiglu_hidden_ref(xn, rw_g, rw_u)
+    if sw_g.shape[1] > 0:
+        shared_y = _ffn(xn, sw_g, sw_u, sw_d)
+    else:
+        shared_y = jnp.zeros_like(x)
+    return x, jnp.stack([kk, vv]), xn, scores, shared_y
+
+
+def final_logits(x, final_norm, unembed):
+    return rmsnorm(x, final_norm) @ unembed
+
+
+# ---------------------------------------------------------------------------
+# Training (used by pretrain.py only)
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(params, tokens, cfg):
+    """Mean next-token cross-entropy over [B, S] token batches."""
+    logits, _ = prefill(params, tokens, cfg, kv_len=tokens.shape[1])
+    logp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg_name", "lr"))
+def adam_step(params, m, v, t, tokens, cfg_name, lr=1e-3):
+    cfg = config(cfg_name)
+    loss, grads = jax.value_and_grad(loss_fn)(params, tokens, cfg)
+    b1, b2, eps = 0.9, 0.95, 1e-8
+    t = t + 1
+    new_params, new_m, new_v = {}, {}, {}
+    for k in params:
+        g = grads[k]
+        new_m[k] = b1 * m[k] + (1 - b1) * g
+        new_v[k] = b2 * v[k] + (1 - b2) * g * g
+        mh = new_m[k] / (1 - b1**t)
+        vh = new_v[k] / (1 - b2**t)
+        new_params[k] = params[k] - lr * mh / (jnp.sqrt(vh) + eps)
+    return new_params, new_m, new_v, t, loss

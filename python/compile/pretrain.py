@@ -1,0 +1,86 @@
+"""Build-time pretraining of the `small` checkpoint.
+
+Trains the L2 transformer on the mixed synthetic corpus (markov text +
+arithmetic/patterns) with Adam for a few hundred steps — enough for the
+FFN to develop the structured activation statistics CMoE exploits —
+then writes `artifacts/small.cmw` plus the loss curve
+(`artifacts/pretrain_log.json`). Runs exactly once per `make artifacts`.
+
+Env knobs: CMOE_PRETRAIN_STEPS (default 400), CMOE_PRETRAIN_MODEL
+(default "small").
+"""
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datagen, model
+from .cmw import write_cmw
+
+
+def make_batches(tokens, batch, seq, seed=0):
+    rng = np.random.default_rng(seed)
+    tokens = np.asarray(tokens, dtype=np.int32)
+    n = len(tokens) - seq - 1
+    while True:
+        starts = rng.integers(0, n, size=batch)
+        yield np.stack([tokens[s : s + seq] for s in starts])
+
+
+def pretrain(model_name="small", steps=400, batch=8, seq=128, lr=1e-3, seed=0, log_every=20):
+    cfg = model.config(model_name)
+    seq = min(seq, cfg["max_seq"])
+    key = jax.random.PRNGKey(seed)
+    params = model.init_params(cfg, key)
+    m = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v = {k: jnp.zeros_like(v_) for k, v_ in params.items()}
+    t = jnp.array(0, jnp.int32)
+
+    corpus = datagen.mixed_corpus(600_000, seed=seed)
+    tokens = datagen.encode(corpus)
+    batches = make_batches(tokens, batch, seq, seed)
+
+    log = []
+    t0 = time.time()
+    for step in range(steps):
+        xb = jnp.asarray(next(batches))
+        params, m, v, t, loss = model.adam_step(params, m, v, t, xb, model_name, lr)
+        if step % log_every == 0 or step == steps - 1:
+            log.append({"step": step, "loss": float(loss), "elapsed_s": time.time() - t0})
+            print(f"step {step:4d}  loss {float(loss):.4f}  ({time.time() - t0:.1f}s)")
+    return params, cfg, log
+
+
+def save_checkpoint(params, cfg, path):
+    tensors = {k: np.asarray(v) for k, v in params.items()}
+    config = {
+        "name": cfg["name"],
+        "vocab": cfg["vocab"],
+        "d_model": cfg["d_model"],
+        "n_layers": cfg["n_layers"],
+        "n_heads": cfg["n_heads"],
+        "d_ff": cfg["d_ff"],
+        "max_seq": cfg["max_seq"],
+    }
+    meta = {"layer_kinds": ["dense"] * cfg["n_layers"]}
+    write_cmw(path, config, meta, tensors)
+
+
+def main(out_dir="../artifacts"):
+    model_name = os.environ.get("CMOE_PRETRAIN_MODEL", "small")
+    steps = int(os.environ.get("CMOE_PRETRAIN_STEPS", "400"))
+    params, cfg, log = pretrain(model_name, steps=steps)
+    os.makedirs(out_dir, exist_ok=True)
+    ckpt = os.path.join(out_dir, f"{model_name}.cmw")
+    save_checkpoint(params, cfg, ckpt)
+    with open(os.path.join(out_dir, "pretrain_log.json"), "w") as f:
+        json.dump({"model": model_name, "steps": steps, "log": log}, f, indent=1)
+    print(f"wrote {ckpt} (final loss {log[-1]['loss']:.4f})")
+
+
+if __name__ == "__main__":
+    main()

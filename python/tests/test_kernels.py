@@ -1,0 +1,129 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (the CORE
+correctness signal of the build). Hypothesis sweeps shapes; fixed cases
+pin the paper-relevant configurations."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import atopk_mask, ref, routed_experts, swiglu_ffn, swiglu_hidden
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+def rand(key, shape, scale=0.5):
+    return jax.random.normal(key, shape) * scale
+
+
+dims = st.integers(min_value=1, max_value=64)
+
+
+@given(q=dims, d=dims, dh=st.integers(min_value=1, max_value=96))
+def test_swiglu_ffn_matches_ref(q, d, dh):
+    k = jax.random.PRNGKey(q * 10007 + d * 101 + dh)
+    ks = jax.random.split(k, 4)
+    x = rand(ks[0], (q, d), 1.0)
+    wg = rand(ks[1], (d, dh))
+    wu = rand(ks[2], (d, dh))
+    wd = rand(ks[3], (dh, d))
+    got = swiglu_ffn(x, wg, wu, wd)
+    want = ref.swiglu_ffn_ref(x, wg, wu, wd)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(q=dims, d=dims, dh=st.integers(min_value=1, max_value=96))
+def test_swiglu_hidden_matches_ref(q, d, dh):
+    k = jax.random.PRNGKey(q * 7 + d * 31 + dh * 3)
+    ks = jax.random.split(k, 3)
+    x = rand(ks[0], (q, d), 1.0)
+    wg = rand(ks[1], (d, dh))
+    wu = rand(ks[2], (d, dh))
+    np.testing.assert_allclose(
+        swiglu_hidden(x, wg, wu), ref.swiglu_hidden_ref(x, wg, wu), rtol=1e-4, atol=1e-4
+    )
+
+
+@given(
+    ne=st.integers(min_value=1, max_value=8),
+    cap=st.integers(min_value=1, max_value=32),
+    d=st.integers(min_value=1, max_value=32),
+    m=st.integers(min_value=1, max_value=32),
+)
+def test_routed_experts_matches_ref(ne, cap, d, m):
+    k = jax.random.PRNGKey(ne * 1009 + cap * 97 + d * 11 + m)
+    ks = jax.random.split(k, 4)
+    xs = rand(ks[0], (ne, cap, d), 1.0)
+    wg = rand(ks[1], (ne, d, m))
+    wu = rand(ks[2], (ne, d, m))
+    wd = rand(ks[3], (ne, m, d))
+    np.testing.assert_allclose(
+        routed_experts(xs, wg, wu, wd),
+        ref.routed_experts_ref(xs, wg, wu, wd),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+@given(
+    q=st.integers(min_value=1, max_value=64),
+    dh=st.integers(min_value=2, max_value=96),
+    data=st.data(),
+)
+def test_atopk_matches_ref(q, dh, data):
+    k = data.draw(st.integers(min_value=1, max_value=dh))
+    key = jax.random.PRNGKey(q * 31 + dh)
+    h = jax.random.normal(key, (q, dh))
+    np.testing.assert_array_equal(atopk_mask(h, k), ref.atopk_mask_ref(h, k))
+
+
+def test_swiglu_paper_shapes():
+    """The `small` model's exact FFN shape (d=128, d_h=512)."""
+    k = jax.random.PRNGKey(0)
+    ks = jax.random.split(k, 4)
+    x = rand(ks[0], (256, 128), 1.0)
+    wg, wu = rand(ks[1], (128, 512)), rand(ks[2], (128, 512))
+    wd = rand(ks[3], (512, 128))
+    # d_h=512 accumulation-order differences need a slightly wider band
+    np.testing.assert_allclose(
+        swiglu_ffn(x, wg, wu, wd), ref.swiglu_ffn_ref(x, wg, wu, wd), rtol=2e-3, atol=1e-3
+    )
+
+
+def test_atopk_marks_at_least_k():
+    k = jax.random.PRNGKey(1)
+    h = jax.random.normal(k, (32, 64))
+    mask = np.asarray(atopk_mask(h, 10))
+    assert (mask.sum(axis=1) >= 10).all()
+
+
+def test_atopk_exactly_k_without_ties():
+    # continuous random values: ties have measure zero
+    k = jax.random.PRNGKey(2)
+    h = jax.random.normal(k, (16, 48))
+    mask = np.asarray(atopk_mask(h, 7))
+    np.testing.assert_array_equal(mask.sum(axis=1), np.full(16, 7))
+
+
+def test_experts_zero_capacity_padding():
+    """Padded (zero) token slots must produce zero outputs."""
+    k = jax.random.PRNGKey(3)
+    ks = jax.random.split(k, 4)
+    xs = jnp.zeros((4, 8, 16)).at[:, :2, :].set(rand(ks[0], (4, 2, 16), 1.0))
+    wg, wu = rand(ks[1], (4, 16, 8)), rand(ks[2], (4, 16, 8))
+    wd = rand(ks[3], (4, 8, 16))
+    ys = np.asarray(routed_experts(xs, wg, wu, wd))
+    np.testing.assert_allclose(ys[:, 2:, :], 0.0, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_swiglu_dtypes(dtype):
+    k = jax.random.PRNGKey(4)
+    ks = jax.random.split(k, 4)
+    x = rand(ks[0], (32, 16), 1.0).astype(dtype)
+    wg, wu = rand(ks[1], (16, 64)).astype(dtype), rand(ks[2], (16, 64)).astype(dtype)
+    wd = rand(ks[3], (64, 16)).astype(dtype)
+    got = swiglu_ffn(x, wg, wu, wd)
+    assert got.dtype == dtype

@@ -1,0 +1,136 @@
+"""L2 model tests: shapes, prefill/decode parity, MoE gating math."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+
+def setup(name="tiny", seed=0):
+    cfg = model.config(name)
+    params = model.init_params(cfg, jax.random.PRNGKey(seed))
+    return cfg, params
+
+
+def test_prefill_shapes():
+    cfg, p = setup()
+    toks = jnp.zeros((2, 10), jnp.int32)
+    logits, kv = model.prefill(p, toks, cfg, kv_len=32)
+    assert logits.shape == (2, 10, cfg["vocab"])
+    assert kv.shape == (cfg["n_layers"], 2, 2, cfg["n_heads"], 32, cfg["d_model"] // cfg["n_heads"])
+
+
+def test_prefill_decode_parity():
+    """Decoding token t with the prefix KV must equal prefill's logits."""
+    cfg, p = setup()
+    toks = (jnp.arange(9, dtype=jnp.int32) * 13 % 256)[None, :]
+    full_logits, _ = model.prefill(p, toks, cfg, kv_len=16)
+    # build kv from the first 8 tokens, then decode token 8
+    _, kv = model.prefill(p, toks[:, :8], cfg, kv_len=16)
+    step_logits, _ = model.decode_step(p, toks[:, 8], kv, jnp.array(8, jnp.int32), cfg)
+    np.testing.assert_allclose(step_logits, full_logits[:, 8, :], rtol=2e-4, atol=2e-4)
+
+
+def test_decode_appends_kv():
+    cfg, p = setup()
+    toks = jnp.zeros((1, 4), jnp.int32)
+    _, kv = model.prefill(p, toks, cfg, kv_len=8)
+    tok = jnp.array([7], jnp.int32)
+    _, kv2 = model.decode_step(p, tok, kv, jnp.array(4, jnp.int32), cfg)
+    # position 4 must now be non-zero in layer 0 keys
+    assert float(jnp.abs(kv2[0, 0, :, :, 4, :]).sum()) > 0.0
+    # earlier positions unchanged
+    np.testing.assert_allclose(kv2[0, 0, :, :, :4, :], kv[0, 0, :, :, :4, :])
+
+
+def test_causality():
+    cfg, p = setup()
+    a = (jnp.arange(10, dtype=jnp.int32) * 7 % 256)[None, :]
+    b = a.at[0, 9].set((a[0, 9] + 1) % 256)
+    la, _ = model.prefill(p, a, cfg, kv_len=16)
+    lb, _ = model.prefill(p, b, cfg, kv_len=16)
+    np.testing.assert_allclose(la[:, :9, :], lb[:, :9, :], rtol=1e-5, atol=1e-5)
+
+
+def _moe_params_from_dense(p, cfg, n_s, n_tot, seed=1):
+    """Split each FFN into contiguous experts (test partition)."""
+    d, dh = cfg["d_model"], cfg["d_ff"]
+    m = dh // n_tot
+    n_r = n_tot - n_s
+    sh = n_s * m
+    out = []
+    key = jax.random.PRNGKey(seed)
+    for l in range(cfg["n_layers"]):
+        pre = f"layers.{l}"
+        wg, wu, wd = p[f"{pre}.ffn.w_gate"], p[f"{pre}.ffn.w_up"], p[f"{pre}.ffn.w_down"]
+        ew_g = jnp.stack([wg[:, sh + e * m : sh + (e + 1) * m] for e in range(n_r)])
+        ew_u = jnp.stack([wu[:, sh + e * m : sh + (e + 1) * m] for e in range(n_r)])
+        ew_d = jnp.stack([wd[sh + e * m : sh + (e + 1) * m, :] for e in range(n_r)])
+        # representative = first neuron of each expert
+        reps = [sh + e * m for e in range(n_r)]
+        out.append(
+            dict(
+                shared=(wg[:, :sh], wu[:, :sh], wd[:sh, :]),
+                experts=(ew_g, ew_u, ew_d),
+                router=(wg[:, reps], wu[:, reps]),
+                scale=jnp.zeros((n_r,)),
+                bias=jnp.zeros((n_r,)),
+            )
+        )
+    return out
+
+
+def test_moe_all_active_equals_dense_decode():
+    cfg, p = setup()
+    moe_params = _moe_params_from_dense(p, cfg, n_s=2, n_tot=8)
+    toks = jnp.zeros((1, 4), jnp.int32)
+    _, kv = model.prefill(p, toks, cfg, kv_len=8)
+    tok = jnp.array([5], jnp.int32)
+    pos = jnp.array(4, jnp.int32)
+    dense_logits, _ = model.decode_step(p, tok, kv, pos, cfg)
+    moe_logits, _ = model.moe_decode_step(p, moe_params, tok, kv, pos, cfg, n_k=6)
+    np.testing.assert_allclose(moe_logits, dense_logits, rtol=2e-4, atol=2e-4)
+
+
+def test_moe_sparse_differs_but_close():
+    cfg, p = setup()
+    moe_params = _moe_params_from_dense(p, cfg, n_s=2, n_tot=8)
+    toks = jnp.zeros((1, 4), jnp.int32)
+    _, kv = model.prefill(p, toks, cfg, kv_len=8)
+    tok = jnp.array([5], jnp.int32)
+    pos = jnp.array(4, jnp.int32)
+    dense_logits, _ = model.decode_step(p, tok, kv, pos, cfg)
+    moe_logits, _ = model.moe_decode_step(p, moe_params, tok, kv, pos, cfg, n_k=3)
+    diff = float(jnp.abs(moe_logits - dense_logits).max())
+    assert diff > 1e-6, "sparse MoE identical to dense?"
+    rel = float(jnp.linalg.norm(moe_logits - dense_logits) / jnp.linalg.norm(dense_logits))
+    assert rel < 0.8, f"sparse MoE too far from dense: {rel}"
+
+
+def test_moe_gate_bias_changes_selection_not_output_scale():
+    cfg, p = setup()
+    mp = _moe_params_from_dense(p, cfg, n_s=2, n_tot=8)
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, cfg["d_model"]))
+    l0 = mp[0]
+    y0 = model.moe_ffn_masked(x, l0["shared"], l0["experts"], l0["router"], l0["scale"], l0["bias"], 3)
+    # gates are binary (scale=0) regardless of bias
+    big_bias = l0["bias"].at[0].set(100.0)
+    y1 = model.moe_ffn_masked(x, l0["shared"], l0["experts"], l0["router"], l0["scale"], big_bias, 3)
+    assert y1.shape == y0.shape
+    assert not np.allclose(np.asarray(y0), np.asarray(y1)), "bias should change selection"
+
+
+def test_training_reduces_loss():
+    cfg, p = setup()
+    m = {k: jnp.zeros_like(v) for k, v in p.items()}
+    v = {k: jnp.zeros_like(vv) for k, vv in p.items()}
+    t = jnp.array(0, jnp.int32)
+    key = jax.random.PRNGKey(3)
+    toks = jax.random.randint(key, (4, 32), 0, 255)
+    first = None
+    for _ in range(30):
+        p, m, v, t, loss = model.adam_step(p, m, v, t, toks, "tiny", 3e-3)
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first * 0.9, f"loss {first} -> {float(loss)}"

@@ -1,0 +1,75 @@
+//! Conversion-path benchmarks (Table 6 backing): LAP solve, balanced
+//! k-means, profiling, full-layer and full-model conversion.
+
+use cmoe::bench_harness::runner::BenchRunner;
+use cmoe::clustering::balanced_kmeans;
+use cmoe::converter::{convert_ffn, ConvertOptions};
+use cmoe::lap::{solve, CostMatrix};
+use cmoe::model::{model_config, FfnWeights, ModelWeights};
+use cmoe::profiling::ActivationProfile;
+use cmoe::tensor::{swiglu_hidden, Tensor};
+use cmoe::util::Rng;
+
+fn main() {
+    let r = BenchRunner::new("convert");
+    let mut rng = Rng::new(1);
+
+    // --- LAP solver at conversion-relevant sizes ---
+    for n in [64usize, 256, 448] {
+        let m = CostMatrix::from_fn(n, n, |i, j| ((i * 31 + j * 17) % 101) as f64 / 10.0);
+        r.bench(&format!("jv_lap_{n}x{n}"), None, || {
+            std::hint::black_box(solve(&m));
+        });
+    }
+
+    // --- balanced k-means on binary activation columns ---
+    let q = 512;
+    let n_pts = 320; // small model S3A3E8: 512 - 192 shared, 5 experts x 64
+    let mut pts = Tensor::zeros(&[n_pts, q]);
+    for v in pts.data.iter_mut() {
+        *v = if rng.f32() < 0.1 { 1.0 } else { 0.0 };
+    }
+    let init: Vec<usize> = (0..5).collect();
+    r.bench("balanced_kmeans_320x512_k5", None, || {
+        std::hint::black_box(balanced_kmeans(&pts, 5, &init, 4));
+    });
+
+    // --- activation profiling (ATopK) ---
+    let h = Tensor::randn(&mut rng, &[2048, 512], 1.0);
+    r.bench("profile_2048x512_ka10", Some(2048.0), || {
+        std::hint::black_box(ActivationProfile::from_hidden(&h, 10));
+    });
+
+    // --- one-layer CMoE conversion (small dims) ---
+    let d = 128;
+    let d_h = 512;
+    let ffn = FfnWeights {
+        w_gate: Tensor::randn(&mut rng, &[d, d_h], 0.1),
+        w_up: Tensor::randn(&mut rng, &[d, d_h], 0.1),
+        w_down: Tensor::randn(&mut rng, &[d_h, d], 0.1),
+    };
+    let x = Tensor::randn(&mut rng, &[2048, d], 1.0);
+    let hh = swiglu_hidden(&x, &ffn.w_gate, &ffn.w_up);
+    let prof = ActivationProfile::from_hidden(&hh, 10);
+    let spec = "S3A3E8".parse().unwrap();
+    r.bench("convert_ffn_small_layer", None, || {
+        std::hint::black_box(convert_ffn(&ffn, &prof, &spec, &ConvertOptions::default()).unwrap());
+    });
+
+    // --- whole-model conversion (the Table 6 headline) ---
+    let cfg = model_config("small").unwrap();
+    let model = ModelWeights::random(&cfg, &mut rng);
+    let fwd = cmoe::eval::forward::DenseForward::new(&model);
+    let calib: Vec<usize> = (0..512).map(|i| (i * 13) % cfg.vocab).collect();
+    let profiles: Vec<ActivationProfile> = fwd
+        .capture_hidden(&calib[..256])
+        .iter()
+        .map(|h| ActivationProfile::from_hidden(h, 10))
+        .collect();
+    r.bench("convert_model_small_4layers", None, || {
+        std::hint::black_box(
+            cmoe::converter::convert_model(&model, &profiles, &spec, &ConvertOptions::default())
+                .unwrap(),
+        );
+    });
+}

@@ -1,0 +1,82 @@
+//! Hot-path micro benchmarks: rust tensor ops (the conversion/eval
+//! path) and the compiled XLA kernels (the serving path).
+
+use cmoe::bench_harness::runner::BenchRunner;
+use cmoe::tensor::{self, Tensor};
+use cmoe::util::Rng;
+
+fn main() {
+    let r = BenchRunner::new("kernel");
+    let mut rng = Rng::new(2);
+
+    // rust-side matmuls at model shapes
+    for (m, k, n, label) in [
+        (32usize, 128usize, 512usize, "ffn_gate_b32"),
+        (32, 512, 128, "ffn_down_b32"),
+        (256, 128, 256, "logits_s256"),
+    ] {
+        let a = Tensor::randn(&mut rng, &[m, k], 0.5);
+        let b = Tensor::randn(&mut rng, &[k, n], 0.5);
+        let flops = 2.0 * (m * k * n) as f64;
+        r.bench(&format!("matmul_{label}_{m}x{k}x{n}"), Some(flops), || {
+            std::hint::black_box(tensor::matmul(&a, &b));
+        });
+    }
+
+    // SwiGLU FFN forward (rust reference)
+    let x = Tensor::randn(&mut rng, &[32, 128], 0.5);
+    let wg = Tensor::randn(&mut rng, &[128, 512], 0.1);
+    let wu = Tensor::randn(&mut rng, &[128, 512], 0.1);
+    let wd = Tensor::randn(&mut rng, &[512, 128], 0.1);
+    r.bench("swiglu_ffn_rust_b32", Some(32.0), || {
+        std::hint::black_box(tensor::swiglu_ffn(&x, &wg, &wu, &wd));
+    });
+
+    // top-k + softmax (router hot path)
+    let scores: Vec<f32> = (0..8).map(|_| rng.normal()).collect();
+    r.bench("router_topk_softmax_e8", Some(1.0), || {
+        let sp = tensor::softmax(&scores);
+        std::hint::black_box(tensor::top_k_indices(&sp, 3));
+    });
+
+    // compiled XLA kernels (skipped without artifacts)
+    if let Some(dir) = cmoe::test_artifact_dir() {
+        let rt = cmoe::runtime::XlaRuntime::load(dir).unwrap();
+        let x = Tensor::randn(&mut rng, &[128, 128], 0.5);
+        let wg = Tensor::randn(&mut rng, &[128, 512], 0.1);
+        let wu = Tensor::randn(&mut rng, &[128, 512], 0.1);
+        let wd = Tensor::randn(&mut rng, &[512, 128], 0.1);
+        let bufs = [
+            rt.upload(&x).unwrap(),
+            rt.upload(&wg).unwrap(),
+            rt.upload(&wu).unwrap(),
+            rt.upload(&wd).unwrap(),
+        ];
+        let args: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        rt.execute("dense_ffn_small_q128", &args).unwrap(); // compile warmup
+        r.bench("xla_dense_ffn_small_q128", Some(128.0), || {
+            std::hint::black_box(rt.execute("dense_ffn_small_q128", &args).unwrap());
+        });
+
+        // grouped experts kernel (S3A3E8 shapes: e5, m64)
+        let name = rt
+            .artifact_names()
+            .into_iter()
+            .find(|n| n.starts_with("experts_small_e5_mm64") && n.ends_with("_b32"))
+            .expect("experts artifact");
+        let shapes: Vec<Vec<usize>> =
+            rt.manifest.artifacts[&name].args.iter().map(|a| a.shape.clone()).collect();
+        let ebufs: Vec<xla::PjRtBuffer> = shapes
+            .iter()
+            .map(|s| rt.upload(&Tensor::randn(&mut rng, s, 0.1)).unwrap())
+            .collect();
+        let eargs: Vec<&xla::PjRtBuffer> = ebufs.iter().collect();
+        rt.execute(&name, &eargs).unwrap();
+        let tokens = shapes[0][0] * shapes[0][1];
+        r.bench("xla_grouped_experts_e5", Some(tokens as f64), || {
+            std::hint::black_box(rt.execute(&name, &eargs).unwrap());
+        });
+    } else {
+        eprintln!("(artifacts missing — XLA kernel benches skipped)");
+    }
+}

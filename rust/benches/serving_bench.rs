@@ -1,0 +1,106 @@
+//! End-to-end serving benchmarks (Tables 7/9 backing): decode
+//! throughput per mode × batch × context, through the real engine +
+//! PJRT artifacts. Requires `make artifacts`.
+
+use cmoe::bench_harness::runner::BenchRunner;
+use cmoe::eval::forward::DenseForward;
+use cmoe::model::ModelWeights;
+use cmoe::profiling::ActivationProfile;
+use cmoe::serving::{Engine, EngineConfig, ExecMode, GenParams, Request};
+use cmoe::util::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    let Some(dir) = cmoe::test_artifact_dir() else {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        return;
+    };
+    let rt = Arc::new(cmoe::runtime::XlaRuntime::load(&dir).unwrap());
+
+    // prefer the pretrained checkpoint; fall back to random weights
+    // (throughput doesn't depend on weight values)
+    let dense = ModelWeights::load(dir.join("small.cmw"))
+        .unwrap_or_else(|_| {
+            let cfg = cmoe::model::model_config("small").unwrap();
+            ModelWeights::random(&cfg, &mut Rng::new(7))
+        });
+
+    // convert once
+    let mut rng = Rng::new(8);
+    let calib: Vec<usize> = (0..1024).map(|_| rng.below(250)).collect();
+    let profiles: Vec<ActivationProfile> = DenseForward::new(&dense)
+        .capture_hidden(&calib[..256])
+        .iter()
+        .map(|h| ActivationProfile::from_hidden(h, 10))
+        .collect();
+    let spec = "S3A3E8".parse().unwrap();
+    let moe = cmoe::converter::convert_model(
+        &dense,
+        &profiles,
+        &spec,
+        &cmoe::converter::ConvertOptions::default(),
+    )
+    .unwrap()
+    .model;
+
+    let r = BenchRunner::new("serving").with_budget(3, Duration::from_secs(2));
+    for (batch, kv) in [(1usize, 64usize), (8, 64), (32, 64)] {
+        let steps = 16usize;
+        let make_reqs = |n: usize| -> Vec<Request> {
+            (0..n)
+                .map(|i| {
+                    let prompt: Vec<usize> = (0..16).map(|j| (i * 7 + j * 13) % 250).collect();
+                    Request::new(
+                        i as u64,
+                        prompt,
+                        GenParams { max_new_tokens: steps, ..Default::default() },
+                    )
+                })
+                .collect()
+        };
+
+        // dense monolithic
+        let mut cfg = EngineConfig::dense("small", kv);
+        cfg.batcher.buckets = vec![batch];
+        cfg.batcher.max_wait = Duration::ZERO;
+        let engine = Engine::new(rt.clone(), dense.clone(), cfg).unwrap();
+        engine.run_queue(make_reqs(batch)).unwrap(); // warmup/compile
+        r.bench(
+            &format!("decode_dense_b{batch}_kv{kv}"),
+            Some((batch * steps) as f64),
+            || {
+                engine.run_queue(make_reqs(batch)).unwrap();
+            },
+        );
+
+        // MoE orchestrated (the FLOP-saving path)
+        let mut cfg =
+            EngineConfig::moe("small", kv, spec, ExecMode::MoeOrchestrated);
+        cfg.batcher.buckets = vec![batch];
+        cfg.batcher.max_wait = Duration::ZERO;
+        let engine = Engine::new(rt.clone(), moe.clone(), cfg).unwrap();
+        engine.run_queue(make_reqs(batch)).unwrap();
+        r.bench(
+            &format!("decode_moe_orch_b{batch}_kv{kv}"),
+            Some((batch * steps) as f64),
+            || {
+                engine.run_queue(make_reqs(batch)).unwrap();
+            },
+        );
+
+        // MoE monolithic (masked, 1 call/step)
+        let mut cfg = EngineConfig::moe("small", kv, spec, ExecMode::MoeMonolithic);
+        cfg.batcher.buckets = vec![batch];
+        cfg.batcher.max_wait = Duration::ZERO;
+        let engine = Engine::new(rt.clone(), moe.clone(), cfg).unwrap();
+        engine.run_queue(make_reqs(batch)).unwrap();
+        r.bench(
+            &format!("decode_moe_mono_b{batch}_kv{kv}"),
+            Some((batch * steps) as f64),
+            || {
+                engine.run_queue(make_reqs(batch)).unwrap();
+            },
+        );
+    }
+}

@@ -1,0 +1,106 @@
+//! EMoE (Qiu et al. 2023) stand-in: clusters neurons by their
+//! *up-projection key vectors* (the "key" half of the key-value FFN
+//! view) rather than gate weights, with a trained linear router.
+
+use crate::baselines::router_train::{train_linear_router, RouterTrainConfig};
+use crate::baselines::moe_from_partition;
+use crate::clustering::{lloyd_kmeans, rebalance};
+use crate::model::{FfnWeights, MoeLayerWeights, Router};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// Options for EMoE conversion.
+#[derive(Clone, Copy, Debug)]
+pub struct EmoeOptions {
+    pub n_experts: usize,
+    pub active: usize,
+    pub kmeans_iters: usize,
+    pub router: RouterTrainConfig,
+    pub seed: u64,
+}
+
+impl Default for EmoeOptions {
+    fn default() -> Self {
+        EmoeOptions {
+            n_experts: 8,
+            active: 6,
+            kmeans_iters: 30,
+            router: RouterTrainConfig::default(),
+            seed: 0xE40E,
+        }
+    }
+}
+
+/// Key-vector partition: k-means on the columns of `w_up`.
+pub fn key_kmeans_partition(
+    ffn: &FfnWeights,
+    n_experts: usize,
+    iters: usize,
+    seed: u64,
+) -> Vec<Vec<usize>> {
+    let points = ffn.w_up.t(); // [d_h, d] — each row is a neuron's key
+    let mut rng = Rng::new(seed);
+    let mut cl = lloyd_kmeans(&points, n_experts, &mut rng, iters);
+    rebalance(&points, &mut cl, n_experts);
+    cl.members(n_experts)
+}
+
+/// Restructure a dense FFN EMoE style.
+pub fn emoe_convert(ffn: &FfnWeights, calib_x: &Tensor, opts: &EmoeOptions) -> MoeLayerWeights {
+    let partition = key_kmeans_partition(ffn, opts.n_experts, opts.kmeans_iters, opts.seed);
+    let w = train_linear_router(ffn, &partition, calib_x, &opts.router);
+    moe_from_partition(ffn, partition, opts.active, Router::Linear(w))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_balanced() {
+        let mut rng = Rng::new(251);
+        let ffn = FfnWeights {
+            w_gate: Tensor::randn(&mut rng, &[8, 48], 0.5),
+            w_up: Tensor::randn(&mut rng, &[8, 48], 0.5),
+            w_down: Tensor::randn(&mut rng, &[48, 8], 0.5),
+        };
+        let p = key_kmeans_partition(&ffn, 6, 20, 1);
+        for mem in &p {
+            assert_eq!(mem.len(), 8);
+        }
+        let mut all: Vec<usize> = p.into_iter().flatten().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..48).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn emoe_differs_from_moefication_partition() {
+        // gate-space and key-space clustering should produce different
+        // groupings on generic weights
+        let mut rng = Rng::new(252);
+        let ffn = FfnWeights {
+            w_gate: Tensor::randn(&mut rng, &[8, 48], 0.5),
+            w_up: Tensor::randn(&mut rng, &[8, 48], 0.5),
+            w_down: Tensor::randn(&mut rng, &[48, 8], 0.5),
+        };
+        let a = key_kmeans_partition(&ffn, 6, 20, 1);
+        let b = crate::baselines::moefication::weight_kmeans_partition(&ffn, 6, 20, 1);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn conversion_runs() {
+        let mut rng = Rng::new(253);
+        let ffn = FfnWeights {
+            w_gate: Tensor::randn(&mut rng, &[8, 48], 0.5),
+            w_up: Tensor::randn(&mut rng, &[8, 48], 0.5),
+            w_down: Tensor::randn(&mut rng, &[48, 8], 0.5),
+        };
+        let x = Tensor::randn(&mut rng, &[100, 8], 1.0);
+        let moe = emoe_convert(&ffn, &x, &EmoeOptions { n_experts: 6, active: 4, ..Default::default() });
+        assert_eq!(moe.experts.len(), 6);
+        let probe = Tensor::randn(&mut rng, &[5, 8], 1.0);
+        let (out, _) = crate::moe::moe_ffn_forward(&moe, &probe);
+        assert_eq!(out.shape, vec![5, 8]);
+    }
+}

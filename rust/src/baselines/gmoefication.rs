@@ -1,0 +1,111 @@
+//! G-MoEfication (Lee et al. 2024): MoEfication generalized to
+//! non-ReLU models by *retaining representative values* for unselected
+//! experts — deactivated experts contribute their calibration-mean
+//! output instead of zero, which repairs the bias that SwiGLU's
+//! non-zero-mean activations introduce.
+
+use crate::baselines::moefication::{weight_kmeans_partition, MoeficationOptions};
+use crate::baselines::router_train::train_linear_router;
+use crate::baselines::moe_from_partition;
+use crate::model::{FfnWeights, MoeLayerWeights, Router};
+use crate::tensor::{self, Tensor};
+
+/// Restructure with G-MoEfication: MoEfication partition + router, plus
+/// per-expert mean-output compensation estimated on `calib_x`.
+pub fn gmoefication_convert(
+    ffn: &FfnWeights,
+    calib_x: &Tensor,
+    opts: &MoeficationOptions,
+) -> MoeLayerWeights {
+    let partition = weight_kmeans_partition(ffn, opts.n_experts, opts.kmeans_iters, opts.seed);
+    let w = train_linear_router(ffn, &partition, calib_x, &opts.router);
+    let mut moe = moe_from_partition(ffn, partition, opts.active, Router::Linear(w));
+    moe.compensation = Some(expert_mean_outputs(&moe, calib_x));
+    moe
+}
+
+/// Calibration-mean output of each routed expert.
+pub fn expert_mean_outputs(moe: &MoeLayerWeights, calib_x: &Tensor) -> Vec<Vec<f32>> {
+    let q = calib_x.shape[0];
+    let d = calib_x.shape[1];
+    moe.experts
+        .iter()
+        .map(|e| {
+            let y = tensor::swiglu_ffn(calib_x, &e.w_gate, &e.w_up, &e.w_down);
+            let mut mean = vec![0.0f32; d];
+            for t in 0..q {
+                for (m, v) in mean.iter_mut().zip(y.row(t)) {
+                    *m += v;
+                }
+            }
+            for m in mean.iter_mut() {
+                *m /= q as f32;
+            }
+            mean
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn setup(rng: &mut Rng) -> (FfnWeights, Tensor) {
+        let d = 10;
+        let d_h = 64;
+        // correlate gate and up columns: Swish(x·wg)·(x·wu) then has a
+        // positive mean (the non-zero-mean activations G-MoEfication's
+        // representative-value compensation exists to repair)
+        let w_gate = Tensor::randn(rng, &[d, d_h], 0.5);
+        let mut w_up = Tensor::randn(rng, &[d, d_h], 0.2);
+        for (u, g) in w_up.data.iter_mut().zip(&w_gate.data) {
+            *u += 0.8 * g;
+        }
+        let ffn = FfnWeights { w_gate, w_up, w_down: Tensor::randn(rng, &[d_h, d], 0.5) };
+        let x = Tensor::randn(rng, &[256, d], 1.0);
+        (ffn, x)
+    }
+
+    #[test]
+    fn compensation_improves_reconstruction_over_plain() {
+        let mut rng = Rng::new(231);
+        let (ffn, x) = setup(&mut rng);
+        // aggressive sparsity (2-of-8) so the deactivated-expert bias
+        // that compensation repairs actually dominates the error
+        let opts = MoeficationOptions { active: 2, ..Default::default() };
+        let plain = crate::baselines::moefication::moefication_convert(&ffn, &x, &opts);
+        let gmo = gmoefication_convert(&ffn, &x, &opts);
+        let probe = Tensor::randn(&mut rng, &[200, 10], 1.0);
+        let e_plain = crate::converter::reconstruction_error(&ffn, &plain, &probe);
+        let e_gmo = crate::converter::reconstruction_error(&ffn, &gmo, &probe);
+        assert!(
+            e_gmo < e_plain,
+            "compensation should reduce reconstruction error ({e_gmo:.4} vs {e_plain:.4})"
+        );
+    }
+
+    #[test]
+    fn compensation_vanishes_when_all_active() {
+        let mut rng = Rng::new(232);
+        let (ffn, x) = setup(&mut rng);
+        let opts = MoeficationOptions { active: 8, ..Default::default() };
+        let gmo = gmoefication_convert(&ffn, &x, &opts);
+        let probe = Tensor::randn(&mut rng, &[9, 10], 1.0);
+        let dense = tensor::swiglu_ffn(&probe, &ffn.w_gate, &ffn.w_up, &ffn.w_down);
+        let (out, _) = crate::moe::moe_ffn_forward(&gmo, &probe);
+        // all experts selected ⇒ compensation cancels exactly
+        assert!(dense.max_abs_diff(&out) < 1e-4);
+    }
+
+    #[test]
+    fn mean_outputs_shape() {
+        let mut rng = Rng::new(233);
+        let (ffn, x) = setup(&mut rng);
+        let opts = MoeficationOptions::default();
+        let moe = crate::baselines::moefication::moefication_convert(&ffn, &x, &opts);
+        let comp = expert_mean_outputs(&moe, &x);
+        assert_eq!(comp.len(), 8);
+        assert!(comp.iter().all(|c| c.len() == 10));
+    }
+}

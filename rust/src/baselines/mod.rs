@@ -1,0 +1,163 @@
+//! Baseline restructuring / sparsification methods the paper compares
+//! against (Tables 1, 5, 8). All are re-implemented on the same
+//! substrate so comparisons isolate the *method*:
+//!
+//! | Module | Paper baseline | Expert grouping | Router |
+//! |---|---|---|---|
+//! | [`moefication`] | MoEfication (Zhang et al. 2021) | k-means on gate-weight columns | trained linear |
+//! | [`gmoefication`] | G-MoEfication (Lee et al. 2024) | same | trained linear + mean-output compensation |
+//! | [`llama_moe`] | LLaMA-MoE (Zhu et al. 2024) | uniform random split | trained linear |
+//! | [`emoe`] | EMoE (Qiu et al. 2023) | k-means on up-projection key vectors | trained linear |
+//! | [`readme_like`] | Read-ME (Cai et al. 2024) | domain-aware grouping | global (per-domain precomputed) |
+//! | [`wina`] | WINA (Chen et al. 2025) | — (neuron-level sparsity) | — |
+//! | [`pruning`] | SliceGPT/SLEB stand-in | — (static removal) | — |
+//!
+//! Every MoE-producing baseline emits a [`crate::model::MoeLayerWeights`]
+//! so the downstream evaluation / serving stack is identical; only the
+//! partition and router differ. Hybrid ablations (Table 5's
+//! "baseline + our router") are built by [`with_analytical_router`].
+
+pub mod router_train;
+pub mod moefication;
+pub mod gmoefication;
+pub mod llama_moe;
+pub mod emoe;
+pub mod readme_like;
+pub mod wina;
+pub mod pruning;
+
+pub use router_train::train_linear_router;
+pub use wina::{wina_ffn_forward, wina_keep_fraction};
+
+use crate::model::{FfnWeights, MoeLayerWeights, Router, RouterWeights};
+use crate::profiling::ActivationProfile;
+
+/// Swap any baseline's router for CMoE's analytical representative-
+/// neuron router (the Table 5 "+ ours" rows). Representatives are
+/// recomputed from the baseline's own expert partition.
+pub fn with_analytical_router(
+    moe: &MoeLayerWeights,
+    ffn: &FfnWeights,
+    profile: &ActivationProfile,
+) -> MoeLayerWeights {
+    let mut out = moe.clone();
+    let mut representatives = Vec::with_capacity(moe.experts.len());
+    for mem in &moe.expert_neurons {
+        // centroid of the expert's activation columns
+        let pts = profile.columns_tensor(mem);
+        let q = pts.shape[1];
+        let mut centroid = vec![0.0f32; q];
+        for r in 0..pts.shape[0] {
+            for (c, v) in centroid.iter_mut().zip(pts.row(r)) {
+                *c += v;
+            }
+        }
+        for c in centroid.iter_mut() {
+            *c /= pts.shape[0] as f32;
+        }
+        let mut best = 0usize;
+        let mut best_d = f64::INFINITY;
+        for r in 0..pts.shape[0] {
+            let d: f64 = pts
+                .row(r)
+                .iter()
+                .zip(&centroid)
+                .map(|(a, b)| ((a - b) as f64) * ((a - b) as f64))
+                .sum();
+            if d < best_d {
+                best_d = d;
+                best = r;
+            }
+        }
+        representatives.push(mem[best]);
+    }
+    out.router = Router::Analytical(RouterWeights {
+        w_gate_r: ffn.w_gate.select_cols(&representatives),
+        w_up_r: ffn.w_up.select_cols(&representatives),
+    });
+    out.representatives = representatives;
+    out
+}
+
+/// Shared helper: build a MoeLayerWeights from an explicit neuron
+/// partition (no shared experts — these baselines don't have them, so
+/// the "shared" slice is empty and all experts are routed).
+pub(crate) fn moe_from_partition(
+    ffn: &FfnWeights,
+    partition: Vec<Vec<usize>>,
+    active: usize,
+    router: Router,
+) -> MoeLayerWeights {
+    let n_r = partition.len();
+    let d = ffn.w_gate.shape[0];
+    let experts: Vec<FfnWeights> = partition.iter().map(|idx| ffn.slice_neurons(idx)).collect();
+    MoeLayerWeights {
+        spec: crate::model::MoeSpec::new(0, active, n_r)
+            .expect("partition always yields a valid spec"),
+        shared: FfnWeights {
+            w_gate: crate::tensor::Tensor::zeros(&[d, 0]),
+            w_up: crate::tensor::Tensor::zeros(&[d, 0]),
+            w_down: crate::tensor::Tensor::zeros(&[0, d]),
+        },
+        experts,
+        router,
+        gate_scale: vec![0.0; n_r],
+        gate_bias: vec![0.0; n_r],
+        shared_neurons: Vec::new(),
+        expert_neurons: partition,
+        representatives: Vec::new(),
+        compensation: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::util::Rng;
+
+    #[test]
+    fn empty_shared_expert_moe_runs() {
+        let mut rng = Rng::new(201);
+        let d = 8;
+        let d_h = 32;
+        let ffn = FfnWeights {
+            w_gate: Tensor::randn(&mut rng, &[d, d_h], 0.5),
+            w_up: Tensor::randn(&mut rng, &[d, d_h], 0.5),
+            w_down: Tensor::randn(&mut rng, &[d_h, d], 0.5),
+        };
+        let partition: Vec<Vec<usize>> = (0..4).map(|e| (e * 8..(e + 1) * 8).collect()).collect();
+        let w = Tensor::randn(&mut rng, &[d, 4], 0.5);
+        let moe = moe_from_partition(&ffn, partition, 4, Router::Linear(w));
+        let x = Tensor::randn(&mut rng, &[6, d], 1.0);
+        // all 4 active -> must equal dense
+        let dense = crate::tensor::swiglu_ffn(&x, &ffn.w_gate, &ffn.w_up, &ffn.w_down);
+        let (out, _) = crate::moe::moe_ffn_forward(&moe, &x);
+        assert!(dense.max_abs_diff(&out) < 1e-4);
+    }
+
+    #[test]
+    fn analytical_router_swap_keeps_partition() {
+        let mut rng = Rng::new(202);
+        let d = 8;
+        let d_h = 32;
+        let ffn = FfnWeights {
+            w_gate: Tensor::randn(&mut rng, &[d, d_h], 0.5),
+            w_up: Tensor::randn(&mut rng, &[d, d_h], 0.5),
+            w_down: Tensor::randn(&mut rng, &[d_h, d], 0.5),
+        };
+        let x = Tensor::randn(&mut rng, &[60, d], 1.0);
+        let h = crate::tensor::swiglu_hidden(&x, &ffn.w_gate, &ffn.w_up);
+        let prof = crate::profiling::ActivationProfile::from_hidden(&h, 6);
+        let partition: Vec<Vec<usize>> = (0..4).map(|e| (e * 8..(e + 1) * 8).collect()).collect();
+        let w = Tensor::randn(&mut rng, &[d, 4], 0.5);
+        let moe = moe_from_partition(&ffn, partition.clone(), 2, Router::Linear(w));
+        let swapped = with_analytical_router(&moe, &ffn, &prof);
+        assert_eq!(swapped.expert_neurons, partition);
+        assert!(matches!(swapped.router, Router::Analytical(_)));
+        // representative of each expert must be a member of it
+        for (e, &r) in swapped.representatives.iter().enumerate() {
+            assert!(partition[e].contains(&r));
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! Structured pruning stand-in for SliceGPT / SLEB (Tables 1): remove
+//! the least-important FFN neurons *statically* (same neurons for every
+//! input), shrinking the weight matrices. Importance is the
+//! calibration-mean contribution `E[|h_i|]·‖w_down[i,:]‖` — the same
+//! signal the WINA/Wanda family uses for structured removal.
+
+use crate::baselines::wina::down_norms;
+use crate::model::{FfnWeights, LayerFfn, ModelWeights};
+use crate::profiling::ActivationProfile;
+use crate::tensor::top_k_indices;
+
+/// Prune `drop_frac` of neurons from one FFN by importance.
+pub fn prune_ffn(ffn: &FfnWeights, profile: &ActivationProfile, drop_frac: f64) -> FfnWeights {
+    let d_h = ffn.hidden_dim();
+    assert_eq!(profile.d_h, d_h);
+    let keep = d_h - ((d_h as f64 * drop_frac).round() as usize).min(d_h);
+    let norms = down_norms(ffn);
+    let importance: Vec<f32> = profile
+        .mean_abs_h
+        .iter()
+        .zip(&norms)
+        .map(|(h, n)| h * n)
+        .collect();
+    let mut kept = top_k_indices(&importance, keep);
+    kept.sort_unstable();
+    ffn.slice_neurons(&kept)
+}
+
+/// Prune every dense FFN layer of a model (the 20%-reduction setting of
+/// Table 1; attention is left intact, matching the "effective FFN
+/// sparsity" note in §5.1).
+pub fn prune_model(
+    model: &ModelWeights,
+    profiles: &[ActivationProfile],
+    drop_frac: f64,
+) -> ModelWeights {
+    let mut out = model.clone();
+    for (l, layer) in out.layers.iter_mut().enumerate() {
+        if let LayerFfn::Dense(f) = &layer.ffn {
+            layer.ffn = LayerFfn::Dense(prune_ffn(f, &profiles[l], drop_frac));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{self, Tensor};
+    use crate::util::Rng;
+
+    #[test]
+    fn prune_removes_requested_fraction() {
+        let mut rng = Rng::new(281);
+        let ffn = FfnWeights {
+            w_gate: Tensor::randn(&mut rng, &[8, 40], 0.5),
+            w_up: Tensor::randn(&mut rng, &[8, 40], 0.5),
+            w_down: Tensor::randn(&mut rng, &[40, 8], 0.5),
+        };
+        let x = Tensor::randn(&mut rng, &[50, 8], 1.0);
+        let h = tensor::swiglu_hidden(&x, &ffn.w_gate, &ffn.w_up);
+        let prof = ActivationProfile::from_hidden(&h, 8);
+        let pruned = prune_ffn(&ffn, &prof, 0.25);
+        assert_eq!(pruned.hidden_dim(), 30);
+    }
+
+    #[test]
+    fn pruning_keeps_important_neurons() {
+        let mut rng = Rng::new(282);
+        let mut ffn = FfnWeights {
+            w_gate: Tensor::randn(&mut rng, &[8, 40], 0.1),
+            w_up: Tensor::randn(&mut rng, &[8, 40], 0.1),
+            w_down: Tensor::randn(&mut rng, &[40, 8], 0.1),
+        };
+        // inflate neuron 7 so it dominates outputs
+        for r in 0..8 {
+            *ffn.w_gate.at2_mut(r, 7) *= 30.0;
+            *ffn.w_up.at2_mut(r, 7) *= 30.0;
+        }
+        let x = Tensor::randn(&mut rng, &[50, 8], 1.0);
+        let h = tensor::swiglu_hidden(&x, &ffn.w_gate, &ffn.w_up);
+        let prof = ActivationProfile::from_hidden(&h, 8);
+        let pruned = prune_ffn(&ffn, &prof, 0.5);
+        // neuron 7's gate column must survive: check its (huge) values
+        // appear among the pruned w_gate columns
+        let orig_col: Vec<f32> = (0..8).map(|r| ffn.w_gate.at2(r, 7)).collect();
+        let survives = (0..pruned.hidden_dim()).any(|c| {
+            (0..8).all(|r| (pruned.w_gate.at2(r, c) - orig_col[r]).abs() < 1e-9)
+        });
+        assert!(survives, "dominant neuron pruned away");
+    }
+
+    #[test]
+    fn prune_model_shrinks_all_layers() {
+        let cfg = crate::model::model_config("tiny").unwrap();
+        let mut rng = Rng::new(283);
+        let model = ModelWeights::random(&cfg, &mut rng);
+        let fwd = crate::eval::forward::DenseForward::new(&model);
+        let calib: Vec<usize> = (0..64).map(|_| rng.below(cfg.vocab)).collect();
+        let profiles: Vec<ActivationProfile> = fwd
+            .capture_hidden(&calib)
+            .iter()
+            .map(|h| ActivationProfile::from_hidden(h, 16))
+            .collect();
+        let pruned = prune_model(&model, &profiles, 0.2);
+        for l in 0..cfg.n_layers {
+            assert_eq!(pruned.dense_ffn(l).hidden_dim(), cfg.d_ff - cfg.d_ff / 5);
+        }
+        // pruned model still runs
+        let fwd2 = crate::eval::forward::DenseForward::new(&pruned);
+        let logits = fwd2.logits(&[1, 2, 3]);
+        assert_eq!(logits.shape, vec![3, cfg.vocab]);
+    }
+}

@@ -1,0 +1,161 @@
+//! Read-ME (Cai et al. 2024) stand-in: *domain-aware* expert
+//! construction — neurons are grouped by which calibration *domain*
+//! they respond to most, and routing is a **global** (sequence-level)
+//! decision rather than per-token. This reproduces Read-ME's
+//! router-decoupled design at our scale; Table 5 shows why per-token
+//! routing wins on mixed-domain streams.
+
+use crate::baselines::moe_from_partition;
+use crate::model::{FfnWeights, MoeLayerWeights, Router};
+use crate::profiling::ActivationProfile;
+use crate::tensor::Tensor;
+
+/// Build the domain-aware partition: for each neuron, compute its
+/// activation rate within each domain's calibration slice, assign it to
+/// its argmax domain, then balance to equal sizes (experts cycle over
+/// domains when `n_experts > n_domains`).
+pub fn domain_partition(
+    profiles: &[&ActivationProfile],
+    n_experts: usize,
+) -> Vec<Vec<usize>> {
+    assert!(!profiles.is_empty());
+    let d_h = profiles[0].d_h;
+    assert_eq!(d_h % n_experts, 0);
+    let m = d_h / n_experts;
+    let n_dom = profiles.len();
+    let rates: Vec<Vec<f32>> = profiles.iter().map(|p| p.rates()).collect();
+
+    // score per neuron: preferred domain and preference strength
+    let mut neurons: Vec<(usize, usize, f32)> = (0..d_h)
+        .map(|i| {
+            let mut best = 0usize;
+            for dom in 1..n_dom {
+                if rates[dom][i] > rates[best][i] {
+                    best = dom;
+                }
+            }
+            (i, best, rates[best][i])
+        })
+        .collect();
+    // strongest preference first so each domain's expert gets its most
+    // characteristic neurons
+    neurons.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap().then(a.0.cmp(&b.0)));
+
+    let mut partition: Vec<Vec<usize>> = vec![Vec::new(); n_experts];
+    // experts are assigned to domains round-robin
+    let expert_domain: Vec<usize> = (0..n_experts).map(|e| e % n_dom).collect();
+    let mut spill = Vec::new();
+    for (i, dom, _) in neurons {
+        // first expert of this domain with space
+        let slot = (0..n_experts)
+            .find(|&e| expert_domain[e] == dom && partition[e].len() < m);
+        match slot {
+            Some(e) => partition[e].push(i),
+            None => spill.push(i),
+        }
+    }
+    // spill into any expert with space
+    for i in spill {
+        let e = (0..n_experts).find(|&e| partition[e].len() < m).unwrap();
+        partition[e].push(i);
+    }
+    for mem in partition.iter_mut() {
+        mem.sort_unstable();
+    }
+    partition
+}
+
+/// Build the Read-ME-style layer: domain partition + a *global* linear
+/// router trained on domain-mean inputs (one prototype per expert —
+/// scores are similarities to domain prototypes, so every token of a
+/// sequence routes the same way).
+pub fn readme_convert(
+    ffn: &FfnWeights,
+    profiles: &[&ActivationProfile],
+    domain_means: &[Tensor],
+    active: usize,
+    n_experts: usize,
+) -> MoeLayerWeights {
+    let partition = domain_partition(profiles, n_experts);
+    // router columns = prototypes of each expert's domain
+    let d = ffn.w_gate.shape[0];
+    let mut w = Tensor::zeros(&[d, n_experts]);
+    for e in 0..n_experts {
+        let dom = e % domain_means.len();
+        let proto = &domain_means[dom];
+        for r in 0..d {
+            *w.at2_mut(r, e) = proto.data[r];
+        }
+    }
+    moe_from_partition(ffn, partition, active, Router::Linear(w))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn domain_profiles(rng: &mut Rng, d_h: usize) -> (ActivationProfile, ActivationProfile) {
+        // domain A lights the first half of neurons, B the second half
+        let q = 80;
+        let mut ha = Tensor::zeros(&[q, d_h]);
+        let mut hb = Tensor::zeros(&[q, d_h]);
+        for t in 0..q {
+            for i in 0..d_h {
+                let base = 0.01 * rng.normal();
+                ha.row_mut(t)[i] = if i < d_h / 2 { 1.0 + base } else { base };
+                hb.row_mut(t)[i] = if i >= d_h / 2 { 1.0 + base } else { base };
+            }
+        }
+        (
+            ActivationProfile::from_hidden(&ha, d_h / 4),
+            ActivationProfile::from_hidden(&hb, d_h / 4),
+        )
+    }
+
+    #[test]
+    fn domain_partition_separates_domains() {
+        let mut rng = Rng::new(261);
+        let d_h = 32;
+        let (pa, pb) = domain_profiles(&mut rng, d_h);
+        let partition = domain_partition(&[&pa, &pb], 4);
+        // experts 0,2 ↔ domain A (first half), 1,3 ↔ domain B
+        let first_half = |mem: &Vec<usize>| mem.iter().filter(|&&i| i < d_h / 2).count();
+        assert!(first_half(&partition[0]) >= 6, "expert0 {:?}", partition[0]);
+        assert!(first_half(&partition[2]) >= 6);
+        assert!(first_half(&partition[1]) <= 2);
+        assert!(first_half(&partition[3]) <= 2);
+    }
+
+    #[test]
+    fn partition_is_balanced() {
+        let mut rng = Rng::new(262);
+        let (pa, pb) = domain_profiles(&mut rng, 32);
+        let partition = domain_partition(&[&pa, &pb], 8);
+        for mem in &partition {
+            assert_eq!(mem.len(), 4);
+        }
+        let mut all: Vec<usize> = partition.into_iter().flatten().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn convert_runs() {
+        let mut rng = Rng::new(263);
+        let d = 8;
+        let d_h = 32;
+        let ffn = FfnWeights {
+            w_gate: Tensor::randn(&mut rng, &[d, d_h], 0.5),
+            w_up: Tensor::randn(&mut rng, &[d, d_h], 0.5),
+            w_down: Tensor::randn(&mut rng, &[d_h, d], 0.5),
+        };
+        let (pa, pb) = domain_profiles(&mut rng, d_h);
+        let means = vec![Tensor::randn(&mut rng, &[d], 1.0), Tensor::randn(&mut rng, &[d], 1.0)];
+        let moe = readme_convert(&ffn, &[&pa, &pb], &means, 3, 4);
+        assert_eq!(moe.experts.len(), 4);
+        let x = Tensor::randn(&mut rng, &[5, d], 1.0);
+        let (out, _) = crate::moe::moe_ffn_forward(&moe, &x);
+        assert_eq!(out.shape, vec![5, d]);
+    }
+}

@@ -1,0 +1,137 @@
+//! WINA (Chen et al. 2025): training-free *neuron-level* activation
+//! sparsity. Per token, keep the top fraction of neurons ranked by
+//! `|h_i| · ‖w_down[i,:]‖₂` (weight-informed magnitude) and zero the
+//! rest. Orthogonal to expert-level restructuring — Table 8 composes it
+//! with CMoE inside each expert.
+
+use crate::model::FfnWeights;
+use crate::tensor::{self, Tensor};
+
+/// Precomputed column norms of `w_down` (the weight-informed part).
+pub fn down_norms(ffn: &FfnWeights) -> Vec<f32> {
+    let d_h = ffn.hidden_dim();
+    let d = ffn.w_down.shape[1];
+    (0..d_h)
+        .map(|i| {
+            let row = &ffn.w_down.data[i * d..(i + 1) * d];
+            row.iter().map(|v| v * v).sum::<f32>().sqrt()
+        })
+        .collect()
+}
+
+/// FFN forward with WINA sparsity: per token keep `keep` fraction of
+/// neurons by weight-informed score, zero the rest. `keep = 1.0`
+/// recovers the dense FFN exactly.
+pub fn wina_ffn_forward(ffn: &FfnWeights, x: &Tensor, keep: f32) -> Tensor {
+    assert!((0.0..=1.0).contains(&keep));
+    let mut h = tensor::swiglu_hidden(x, &ffn.w_gate, &ffn.w_up);
+    let d_h = ffn.hidden_dim();
+    let k = ((d_h as f32 * keep).round() as usize).clamp(0, d_h);
+    if k < d_h {
+        let norms = down_norms(ffn);
+        for t in 0..h.shape[0] {
+            let row = h.row_mut(t);
+            let scores: Vec<f32> =
+                row.iter().zip(&norms).map(|(v, n)| v.abs() * n).collect();
+            let top = tensor::top_k_indices(&scores, k);
+            let keep_set: std::collections::HashSet<usize> = top.into_iter().collect();
+            for (i, v) in row.iter_mut().enumerate() {
+                if !keep_set.contains(&i) {
+                    *v = 0.0;
+                }
+            }
+        }
+    }
+    tensor::matmul(&h, &ffn.w_down)
+}
+
+/// The FLOPs keep-fraction WINA achieves at ratio `keep` (identity —
+/// named for call-site clarity in the Table 8 harness).
+pub fn wina_keep_fraction(keep: f64) -> f64 {
+    keep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn ffn(rng: &mut Rng) -> FfnWeights {
+        FfnWeights {
+            w_gate: Tensor::randn(rng, &[10, 40], 0.5),
+            w_up: Tensor::randn(rng, &[10, 40], 0.5),
+            w_down: Tensor::randn(rng, &[40, 10], 0.5),
+        }
+    }
+
+    #[test]
+    fn keep_one_is_dense() {
+        let mut rng = Rng::new(271);
+        let f = ffn(&mut rng);
+        let x = Tensor::randn(&mut rng, &[6, 10], 1.0);
+        let dense = tensor::swiglu_ffn(&x, &f.w_gate, &f.w_up, &f.w_down);
+        let wina = wina_ffn_forward(&f, &x, 1.0);
+        assert!(dense.max_abs_diff(&wina) < 1e-6);
+    }
+
+    #[test]
+    fn error_grows_as_keep_shrinks() {
+        let mut rng = Rng::new(272);
+        let f = ffn(&mut rng);
+        let x = Tensor::randn(&mut rng, &[32, 10], 1.0);
+        let dense = tensor::swiglu_ffn(&x, &f.w_gate, &f.w_up, &f.w_down);
+        let mut last = 0.0f32;
+        for keep in [0.75f32, 0.5, 0.25] {
+            let w = wina_ffn_forward(&f, &x, keep);
+            let err = dense.max_abs_diff(&w);
+            assert!(err >= last, "error not monotone at keep={keep}");
+            last = err;
+        }
+        assert!(last > 0.0);
+    }
+
+    #[test]
+    fn wina_beats_naive_magnitude_pruning() {
+        // weight-informed ranking should reconstruct at least as well as
+        // |h| alone when down-projection norms vary strongly
+        let mut rng = Rng::new(273);
+        let mut f = ffn(&mut rng);
+        // make down-norms wildly non-uniform
+        for i in 0..40 {
+            let scale = if i % 2 == 0 { 4.0 } else { 0.05 };
+            for v in f.w_down.row_mut(i) {
+                *v *= scale;
+            }
+        }
+        let x = Tensor::randn(&mut rng, &[64, 10], 1.0);
+        let dense = tensor::swiglu_ffn(&x, &f.w_gate, &f.w_up, &f.w_down);
+        // naive: zero by |h| only
+        let mut h = tensor::swiglu_hidden(&x, &f.w_gate, &f.w_up);
+        for t in 0..64 {
+            let row = h.row_mut(t);
+            let scores: Vec<f32> = row.iter().map(|v| v.abs()).collect();
+            let top: std::collections::HashSet<usize> =
+                tensor::top_k_indices(&scores, 20).into_iter().collect();
+            for (i, v) in row.iter_mut().enumerate() {
+                if !top.contains(&i) {
+                    *v = 0.0;
+                }
+            }
+        }
+        let naive = tensor::matmul(&h, &f.w_down);
+        let wina = wina_ffn_forward(&f, &x, 0.5);
+        let err = |a: &Tensor| -> f64 {
+            let mut d = dense.clone();
+            for (x, y) in d.data.iter_mut().zip(&a.data) {
+                *x -= y;
+            }
+            d.norm() as f64
+        };
+        assert!(
+            err(&wina) <= err(&naive) * 1.01,
+            "WINA {:.4} should beat naive {:.4}",
+            err(&wina),
+            err(&naive)
+        );
+    }
+}

@@ -1,0 +1,230 @@
+//! Shared experiment context: the pretrained checkpoint, calibration
+//! profiles, converted-model cache, task suites and corpora — so each
+//! experiment runner stays small and the expensive pieces are computed
+//! once.
+
+use crate::baselines;
+use crate::converter::{convert_model, ConvertOptions, ConvertedModel};
+use crate::data::corpus::{gen_corpus, CorpusSpec, Domain};
+use crate::data::tasks_gen::{gen_choice_tasks, TaskFamily};
+use crate::data::encode;
+use crate::eval::forward::DenseForward;
+use crate::eval::tasks::TaskSuite;
+use crate::model::{LayerFfn, ModelWeights, MoeLayerWeights, MoeSpec};
+use crate::profiling::{profile_dense_model, ActivationProfile};
+use crate::util::json::Json;
+use anyhow::{Context as _, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// Default calibration setup, mirroring the paper's §5.1 (8 examples,
+/// K_a = 10; our sequences are 256 tokens at `small`'s max_seq).
+pub const CALIB_EXAMPLES: usize = 8;
+pub const CALIB_SEQ: usize = 256;
+pub const KA: usize = 10;
+
+/// Experiment context.
+pub struct Ctx {
+    pub artifact_dir: PathBuf,
+    pub out_dir: PathBuf,
+    pub model_name: String,
+    model: Option<ModelWeights>,
+    profiles: HashMap<(String, usize, usize), Vec<ActivationProfile>>, // (domain, n, ka)
+    converted: HashMap<String, ModelWeights>,
+    runtime: Option<std::sync::Arc<crate::runtime::XlaRuntime>>,
+    pub seed: u64,
+}
+
+impl Ctx {
+    pub fn new(artifact_dir: impl Into<PathBuf>, out_dir: impl Into<PathBuf>) -> Ctx {
+        Ctx {
+            artifact_dir: artifact_dir.into(),
+            out_dir: out_dir.into(),
+            model_name: "small".into(),
+            model: None,
+            profiles: HashMap::new(),
+            converted: HashMap::new(),
+            runtime: None,
+            seed: 0xC0DE,
+        }
+    }
+
+    /// The pretrained dense checkpoint (artifacts/small.cmw).
+    pub fn model(&mut self) -> Result<&ModelWeights> {
+        if self.model.is_none() {
+            let path = self.artifact_dir.join(format!("{}.cmw", self.model_name));
+            let m = ModelWeights::load(&path)
+                .with_context(|| format!("load {} (run `make artifacts`)", path.display()))?;
+            self.model = Some(m);
+        }
+        Ok(self.model.as_ref().unwrap())
+    }
+
+    pub fn runtime(&mut self) -> Result<std::sync::Arc<crate::runtime::XlaRuntime>> {
+        if self.runtime.is_none() {
+            self.runtime =
+                Some(std::sync::Arc::new(crate::runtime::XlaRuntime::load(&self.artifact_dir)?));
+        }
+        Ok(self.runtime.as_ref().unwrap().clone())
+    }
+
+    /// Calibration token stream of `n` examples × CALIB_SEQ from a domain.
+    pub fn calib_tokens(&self, domain: Domain, n: usize) -> Vec<usize> {
+        let text = gen_corpus(&CorpusSpec {
+            domain,
+            bytes: n * CALIB_SEQ + 64,
+            seed: self.seed ^ 0xCA11,
+        });
+        let mut toks = encode(&text);
+        toks.truncate(n * CALIB_SEQ);
+        toks
+    }
+
+    /// Held-out evaluation tokens (different seed from calibration).
+    pub fn eval_tokens(&self, domain: Domain, tokens: usize) -> Vec<usize> {
+        let text = gen_corpus(&CorpusSpec {
+            domain,
+            bytes: tokens + 64,
+            seed: self.seed ^ 0xE7A1,
+        });
+        let mut toks = encode(&text);
+        toks.truncate(tokens);
+        toks
+    }
+
+    /// Per-layer activation profiles on a calibration set.
+    pub fn profiles(
+        &mut self,
+        domain: Domain,
+        n_examples: usize,
+        k_a: usize,
+    ) -> Result<Vec<ActivationProfile>> {
+        let key = (domain.name().to_string(), n_examples, k_a);
+        if !self.profiles.contains_key(&key) {
+            let calib = self.calib_tokens(domain, n_examples);
+            let model = self.model()?.clone();
+            let p = profile_dense_model(&model, &calib, CALIB_SEQ, k_a);
+            self.profiles.insert(key.clone(), p);
+        }
+        Ok(self.profiles[&key].clone())
+    }
+
+    /// CMoE conversion of the checkpoint (cached by spec string).
+    pub fn convert(&mut self, spec: &MoeSpec) -> Result<ModelWeights> {
+        let key = format!("cmoe:{spec}");
+        if !self.converted.contains_key(&key) {
+            let profiles = self.profiles(Domain::Markov, CALIB_EXAMPLES, KA)?;
+            let model = self.model()?.clone();
+            let ConvertedModel { model: m, .. } =
+                convert_model(&model, &profiles, spec, &ConvertOptions::default())?;
+            self.converted.insert(key.clone(), m);
+        }
+        Ok(self.converted[&key].clone())
+    }
+
+    /// CMoE conversion + gate fine-tuning on `samples` calibration rows.
+    pub fn convert_finetuned(&mut self, spec: &MoeSpec, samples: usize) -> Result<ModelWeights> {
+        let key = format!("cmoe-ft{samples}:{spec}");
+        if !self.converted.contains_key(&key) {
+            let mut m = self.convert(spec)?;
+            let calib = self.calib_tokens(Domain::Markov, CALIB_EXAMPLES);
+            let dense = self.model()?.clone();
+            finetune_model(&mut m, &dense, &calib, samples)?;
+            self.converted.insert(key.clone(), m);
+        }
+        Ok(self.converted[&key].clone())
+    }
+
+    /// The evaluation suites (Table 1's five-task analog).
+    pub fn suites(&self) -> Vec<TaskSuite> {
+        vec![
+            TaskSuite {
+                name: "Knowledge".into(),
+                tasks: gen_choice_tasks(TaskFamily::Knowledge, 80, self.seed ^ 1),
+            },
+            TaskSuite {
+                name: "Arith".into(),
+                tasks: gen_choice_tasks(TaskFamily::Arith, 80, self.seed ^ 2),
+            },
+            TaskSuite {
+                name: "Pattern".into(),
+                tasks: gen_choice_tasks(TaskFamily::Pattern, 80, self.seed ^ 3),
+            },
+        ]
+    }
+
+    /// Save a results table as JSON.
+    pub fn save(&self, exp: &str, tables: &[crate::util::table::Table]) -> Result<()> {
+        std::fs::create_dir_all(&self.out_dir)?;
+        let arr = Json::Arr(tables.iter().map(|t| t.to_json()).collect());
+        std::fs::write(self.out_dir.join(format!("{exp}.json")), arr.pretty())?;
+        Ok(())
+    }
+}
+
+/// Fine-tune every MoE layer's gates on `samples` token rows drawn from
+/// the calibration stream (the paper's 2k-sample budget analog).
+pub fn finetune_model(
+    moe_model: &mut ModelWeights,
+    dense_model: &ModelWeights,
+    calib: &[usize],
+    samples: usize,
+) -> Result<()> {
+    let fwd = DenseForward::new(dense_model);
+    let take = samples.min(calib.len());
+    let inputs = fwd.capture_ffn_inputs(&calib[..take.min(CALIB_SEQ)]);
+    // gather more chunks if needed
+    let mut per_layer: Vec<crate::tensor::Tensor> = inputs;
+    let mut consumed = take.min(CALIB_SEQ);
+    while consumed < take {
+        let chunk = &calib[consumed..(consumed + CALIB_SEQ).min(take)];
+        if chunk.len() < 2 {
+            break;
+        }
+        let more = fwd.capture_ffn_inputs(chunk);
+        for (acc, m) in per_layer.iter_mut().zip(more) {
+            let mut data = std::mem::take(&mut acc.data);
+            data.extend_from_slice(&m.data);
+            let rows = acc.shape[0] + m.shape[0];
+            *acc = crate::tensor::Tensor::from_vec(data, &[rows, m.shape[1]]);
+        }
+        consumed += CALIB_SEQ;
+    }
+    let cfg = crate::moe::FinetuneConfig::default();
+    for (l, layer) in moe_model.layers.iter_mut().enumerate() {
+        if let LayerFfn::Moe(moe) = &mut layer.ffn {
+            crate::moe::finetune_gates(moe, &per_layer[l], &cfg);
+        }
+    }
+    Ok(())
+}
+
+/// Convert the checkpoint with a per-layer baseline closure (shared by
+/// the Table 1/5 runners).
+pub fn convert_with_baseline(
+    model: &ModelWeights,
+    profiles: &[ActivationProfile],
+    calib: &[usize],
+    f: &dyn Fn(usize, &crate::model::FfnWeights, &crate::tensor::Tensor, &ActivationProfile) -> MoeLayerWeights,
+) -> ModelWeights {
+    let fwd = DenseForward::new(model);
+    let inputs = fwd.capture_ffn_inputs(&calib[..CALIB_SEQ.min(calib.len())]);
+    let mut out = model.clone();
+    for (l, layer) in out.layers.iter_mut().enumerate() {
+        let ffn = match &layer.ffn {
+            LayerFfn::Dense(f) => f.clone(),
+            LayerFfn::Moe(_) => continue,
+        };
+        layer.ffn = LayerFfn::Moe(f(l, &ffn, &inputs[l], &profiles[l]));
+    }
+    out
+}
+
+/// Structured-pruning baseline applied model-wide.
+pub fn pruned_model(
+    model: &ModelWeights,
+    profiles: &[ActivationProfile],
+    drop: f64,
+) -> ModelWeights {
+    baselines::pruning::prune_model(model, profiles, drop)
+}

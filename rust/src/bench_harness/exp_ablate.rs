@@ -1,0 +1,89 @@
+//! Design-choice ablations called out in DESIGN.md (beyond the paper's
+//! tables): exact JV balanced assignment vs greedy rebalancing, the
+//! ATopK K_a sweep, calibration-size scaling of the conversion cost,
+//! and int8 quantization composition (§6).
+
+use crate::bench_harness::common::{Ctx, CALIB_EXAMPLES, CALIB_SEQ, KA};
+use crate::converter::{convert_ffn, reconstruction_error, ConvertOptions};
+use crate::data::corpus::Domain;
+use crate::eval::forward::DenseForward;
+use crate::eval::perplexity;
+use crate::model::MoeSpec;
+use crate::util::table::{f, Table};
+use crate::util::Timer;
+use anyhow::Result;
+
+/// Ablation A: exact Jonker–Volgenant assignment vs the greedy
+/// rebalance, on reconstruction error and conversion time.
+pub fn ablate_assignment(ctx: &mut Ctx) -> Result<Table> {
+    let dense = ctx.model()?.clone();
+    let profiles = ctx.profiles(Domain::Markov, CALIB_EXAMPLES, KA)?;
+    let calib = ctx.calib_tokens(Domain::Markov, CALIB_EXAMPLES);
+    let probe = DenseForward::new(&dense).capture_ffn_inputs(&calib[..CALIB_SEQ]);
+    let spec: MoeSpec = "S3A3E8".parse()?;
+
+    let mut t = Table::new(
+        "Ablation — balanced assignment: exact JV vs greedy",
+        &["Assignment", "Layer", "Recon. error", "Convert time"],
+    );
+    for (label, exact) in [("JV (exact)", true), ("Greedy", false)] {
+        for l in 0..dense.config.n_layers {
+            let ffn = dense.dense_ffn(l);
+            let opts = ConvertOptions { exact_assignment: exact, ..Default::default() };
+            let timer = Timer::start();
+            let moe = convert_ffn(ffn, &profiles[l], &spec, &opts)?;
+            let dt = timer.total();
+            t.row(vec![
+                label.into(),
+                format!("{l}"),
+                f(reconstruction_error(ffn, &moe, &probe[l]), 4),
+                crate::util::timer::fmt_duration(dt),
+            ]);
+        }
+    }
+    ctx.save("ablate_assignment", std::slice::from_ref(&t))?;
+    Ok(t)
+}
+
+/// Ablation B: K_a sweep — how the ATopK width changes the partition
+/// quality (reconstruction at fixed sparsity).
+pub fn ablate_ka(ctx: &mut Ctx) -> Result<Table> {
+    let dense = ctx.model()?.clone();
+    let calib = ctx.calib_tokens(Domain::Markov, CALIB_EXAMPLES);
+    let probe = DenseForward::new(&dense).capture_ffn_inputs(&calib[..CALIB_SEQ]);
+    let spec: MoeSpec = "S3A3E8".parse()?;
+    let mut t = Table::new(
+        "Ablation — ATopK K_a sweep (layer 0, S3A3E8)",
+        &["K_a", "Recon. error", "Rate bimodality"],
+    );
+    for ka in [4usize, 10, 24, 48, 96] {
+        let profiles = ctx.profiles(Domain::Markov, CALIB_EXAMPLES, ka)?;
+        let ffn = dense.dense_ffn(0);
+        let moe = convert_ffn(ffn, &profiles[0], &spec, &ConvertOptions::default())?;
+        t.row(vec![
+            format!("{ka}"),
+            f(reconstruction_error(ffn, &moe, &probe[0]), 4),
+            f(profiles[0].rate_bimodality(), 3),
+        ]);
+    }
+    ctx.save("ablate_ka", std::slice::from_ref(&t))?;
+    Ok(t)
+}
+
+/// Ablation C: int8 weight quantization composed with CMoE (§6).
+pub fn ablate_quant(ctx: &mut Ctx) -> Result<Table> {
+    let dense = ctx.model()?.clone();
+    let ours = ctx.convert(&"S3A3E8".parse()?)?;
+    let toks = ctx.eval_tokens(Domain::Markov, 4096);
+    let mut t = Table::new(
+        "Ablation — int8 PTQ composition (§6)",
+        &["Model", "Precision", "PPL markov"],
+    );
+    for (name, m) in [("Dense", &dense), ("CMoE 25%", &ours)] {
+        t.row(vec![name.into(), "f32".into(), f(perplexity(m, &toks, CALIB_SEQ), 3)]);
+        let q = crate::quant::quantize_model(m);
+        t.row(vec![name.into(), "int8 (sim.)".into(), f(perplexity(&q, &toks, CALIB_SEQ), 3)]);
+    }
+    ctx.save("ablate_quant", std::slice::from_ref(&t))?;
+    Ok(t)
+}

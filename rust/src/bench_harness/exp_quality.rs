@@ -1,0 +1,413 @@
+//! Quality experiments: Tables 1–5, 10, 11 and Figures 4, 6 — accuracy
+//! and perplexity of CMoE vs the baselines on the substitute workloads.
+
+use crate::baselines::{
+    self, emoe::EmoeOptions, llama_moe::LlamaMoeOptions, moefication::MoeficationOptions,
+};
+use crate::bench_harness::common::{self, Ctx, CALIB_EXAMPLES, CALIB_SEQ, KA};
+use crate::data::corpus::Domain;
+use crate::eval::{choice_accuracy, perplexity, self_consistency_accuracy};
+use crate::model::{ModelWeights, MoeSpec};
+use crate::util::table::{f, Table};
+use anyhow::Result;
+
+const EVAL_TOKENS: usize = 8 * 1024;
+
+fn eval_row(ctx: &mut Ctx, name: &str, sparsity: &str, model: &ModelWeights) -> Result<Vec<String>> {
+    let mut cells = vec![name.to_string(), sparsity.to_string()];
+    for suite in ctx.suites() {
+        cells.push(f(choice_accuracy(model, &suite) * 100.0, 2));
+    }
+    let toks = ctx.eval_tokens(Domain::Markov, EVAL_TOKENS);
+    cells.push(f(perplexity(model, &toks, CALIB_SEQ), 2));
+    Ok(cells)
+}
+
+/// Table 1: accuracy at 25% sparsity across methods (S3A3E8; all
+/// sparsified methods fine-tuned on the same 2k-sample budget).
+pub fn table1(ctx: &mut Ctx) -> Result<Table> {
+    let spec: MoeSpec = "S3A3E8".parse()?;
+    let dense = ctx.model()?.clone();
+    let profiles = ctx.profiles(Domain::Markov, CALIB_EXAMPLES, KA)?;
+    let calib = ctx.calib_tokens(Domain::Markov, CALIB_EXAMPLES);
+
+    let mut t = Table::new(
+        "Table 1 — accuracy (%) at 25% FFN sparsity (small, 2k-sample FT)",
+        &["Method", "Sp.", "Knowledge", "Arith", "Pattern", "PPL(markov)"],
+    );
+    t.row(eval_row(ctx, "Dense", "0%", &dense)?);
+
+    // structured pruning (SliceGPT/SLEB stand-in, 20% FFN removal)
+    let pruned = common::pruned_model(&dense, &profiles, 0.20);
+    t.row(eval_row(ctx, "Pruning-20%", "20%", &pruned)?);
+
+    // baselines at matched FLOP budget: 6-of-8 experts active
+    let mk = |modelw: ModelWeights| modelw;
+    let mut add_baseline = |ctx: &mut Ctx, name: &str, m: ModelWeights| -> Result<()> {
+        let mut m = mk(m);
+        common::finetune_model(&mut m, &dense, &calib, 2048)?;
+        t.row(eval_row(ctx, name, "25%", &m)?);
+        Ok(())
+    };
+
+    let lm = common::convert_with_baseline(&dense, &profiles, &calib, &|_, ffn, x, _| {
+        baselines::llama_moe::llama_moe_convert(
+            ffn,
+            x,
+            &LlamaMoeOptions { n_experts: 8, active: 6, ..Default::default() },
+        )
+    });
+    add_baseline(ctx, "LLaMA-MoE", lm)?;
+
+    let moef = common::convert_with_baseline(&dense, &profiles, &calib, &|_, ffn, x, _| {
+        baselines::moefication::moefication_convert(
+            ffn,
+            x,
+            &MoeficationOptions { n_experts: 8, active: 6, ..Default::default() },
+        )
+    });
+    add_baseline(ctx, "MoEfication", moef)?;
+
+    let gmo = common::convert_with_baseline(&dense, &profiles, &calib, &|_, ffn, x, _| {
+        baselines::gmoefication::gmoefication_convert(
+            ffn,
+            x,
+            &MoeficationOptions { n_experts: 8, active: 6, ..Default::default() },
+        )
+    });
+    add_baseline(ctx, "G-MoEfication", gmo)?;
+
+    let em = common::convert_with_baseline(&dense, &profiles, &calib, &|_, ffn, x, _| {
+        baselines::emoe::emoe_convert(
+            ffn,
+            x,
+            &EmoeOptions { n_experts: 8, active: 6, ..Default::default() },
+        )
+    });
+    add_baseline(ctx, "EMoE", em)?;
+
+    let ours = ctx.convert_finetuned(&spec, 2048)?;
+    t.row(eval_row(ctx, "Ours (CMoE)", "25%", &ours)?);
+
+    ctx.save("table1", std::slice::from_ref(&t))?;
+    Ok(t)
+}
+
+/// Table 2: the harder "knowledge / coding / math" analog — here the
+/// same three families at higher item difficulty (longer contexts).
+pub fn table2(ctx: &mut Ctx) -> Result<Table> {
+    use crate::data::tasks_gen::{gen_choice_tasks, TaskFamily};
+    use crate::eval::tasks::TaskSuite;
+    let spec: MoeSpec = "S3A3E8".parse()?;
+    let dense = ctx.model()?.clone();
+    let ours = ctx.convert_finetuned(&spec, 2048)?;
+    let suites: Vec<TaskSuite> = [
+        (TaskFamily::Knowledge, "Knowledge(hard)"),
+        (TaskFamily::Arith, "Arith(hard)"),
+        (TaskFamily::Pattern, "Pattern(hard)"),
+    ]
+    .iter()
+    .map(|(fam, name)| TaskSuite {
+        name: name.to_string(),
+        tasks: gen_choice_tasks(*fam, 120, ctx.seed ^ 0x7AB2),
+    })
+    .collect();
+
+    let mut t = Table::new(
+        "Table 2 — broader evaluation (small, 25% sparsity S3A3E8)",
+        &["Method", "Knowledge(hard)", "Arith(hard)", "Pattern(hard)"],
+    );
+    for (name, m) in [("Dense", &dense), ("Ours (CMoE)", &ours)] {
+        let mut cells = vec![name.to_string()];
+        for s in &suites {
+            cells.push(f(choice_accuracy(m, s) * 100.0, 2));
+        }
+        t.row(cells);
+    }
+    ctx.save("table2", std::slice::from_ref(&t))?;
+    Ok(t)
+}
+
+/// Table 3: training-free vs fine-tuned.
+pub fn table3(ctx: &mut Ctx) -> Result<Table> {
+    let spec: MoeSpec = "S3A3E8".parse()?;
+    let tf = ctx.convert(&spec)?;
+    let ft = ctx.convert_finetuned(&spec, 2048)?;
+    let markov = ctx.eval_tokens(Domain::Markov, EVAL_TOKENS);
+    let arith = ctx.eval_tokens(Domain::Arith, EVAL_TOKENS);
+    let suites = ctx.suites();
+
+    let mut t = Table::new(
+        "Table 3 — training-free vs fine-tuned (small, 25% sparsity)",
+        &["Method", "Regime", "AvgAcc (%)", "PPL markov", "PPL arith"],
+    );
+    let dense = ctx.model()?.clone();
+    for (name, regime, m) in [
+        ("Dense", "—", &dense),
+        ("Ours", "Training-free", &tf),
+        ("Ours", "Fine-tuned (2k)", &ft),
+    ] {
+        let avg: f64 =
+            suites.iter().map(|s| choice_accuracy(m, s)).sum::<f64>() / suites.len() as f64;
+        t.row(vec![
+            name.into(),
+            regime.into(),
+            f(avg * 100.0, 2),
+            f(perplexity(m, &markov, CALIB_SEQ), 2),
+            f(perplexity(m, &arith, CALIB_SEQ), 2),
+        ]);
+    }
+    ctx.save("table3", std::slice::from_ref(&t))?;
+    Ok(t)
+}
+
+/// Table 4: calibration sensitivity — source domain × example count,
+/// plus the shared-expert domain-overlap measurement.
+pub fn table4(ctx: &mut Ctx) -> Result<Table> {
+    let spec: MoeSpec = "S3A3E8".parse()?;
+    let markov_eval = ctx.eval_tokens(Domain::Markov, EVAL_TOKENS);
+    let arith_eval = ctx.eval_tokens(Domain::Arith, EVAL_TOKENS);
+    let mut t = Table::new(
+        "Table 4 — calibration sensitivity (small, 25% sparsity)",
+        &["Source", "n", "AvgAcc (%)", "PPL markov", "PPL arith"],
+    );
+    for domain in [Domain::Markov, Domain::Arith] {
+        for n in [4usize, 8, 16] {
+            let profiles = ctx.profiles(domain, n, KA)?;
+            let dense = ctx.model()?.clone();
+            let conv = crate::converter::convert_model(
+                &dense,
+                &profiles,
+                &spec,
+                &crate::converter::ConvertOptions::default(),
+            )?;
+            let mut m = conv.model;
+            let calib = ctx.calib_tokens(domain, n);
+            common::finetune_model(&mut m, &dense, &calib, 2048)?;
+            let suites = ctx.suites();
+            let avg: f64 =
+                suites.iter().map(|s| choice_accuracy(&m, s)).sum::<f64>() / suites.len() as f64;
+            t.row(vec![
+                domain.name().into(),
+                format!("{n}"),
+                f(avg * 100.0, 2),
+                f(perplexity(&m, &markov_eval, CALIB_SEQ), 2),
+                f(perplexity(&m, &arith_eval, CALIB_SEQ), 2),
+            ]);
+        }
+    }
+    // domain invariance of the shared experts (paper: 80–86% overlap)
+    let pa = ctx.profiles(Domain::Markov, CALIB_EXAMPLES, KA)?;
+    let pb = ctx.profiles(Domain::Arith, CALIB_EXAMPLES, KA)?;
+    let d_ff = ctx.model()?.config.d_ff;
+    let shared_n = spec.shared * (d_ff / spec.total);
+    let overlap: f64 = pa
+        .iter()
+        .zip(&pb)
+        .map(|(a, b)| a.shared_overlap(b, shared_n))
+        .sum::<f64>()
+        / pa.len() as f64;
+    t.row(vec![
+        "overlap(markov,arith)".into(),
+        "-".into(),
+        f(overlap * 100.0, 1),
+        "-".into(),
+        "-".into(),
+    ]);
+    ctx.save("table4", std::slice::from_ref(&t))?;
+    Ok(t)
+}
+
+/// Table 5: clustering × routing ablation (reconstruction + accuracy).
+pub fn table5(ctx: &mut Ctx) -> Result<Table> {
+    let dense = ctx.model()?.clone();
+    let profiles = ctx.profiles(Domain::Markov, CALIB_EXAMPLES, KA)?;
+    let calib = ctx.calib_tokens(Domain::Markov, CALIB_EXAMPLES);
+    let suites = ctx.suites();
+
+    let mut t = Table::new(
+        "Table 5 — clustering and routing ablation (small, 25% sparsity, 2k FT)",
+        &["Method", "Grouping", "Router", "AvgAcc (%)"],
+    );
+    let mut run = |ctx: &mut Ctx,
+                   name: &str,
+                   grouping: &str,
+                   router: &str,
+                   mut m: ModelWeights|
+     -> Result<()> {
+        common::finetune_model(&mut m, &dense, &calib, 2048)?;
+        let avg: f64 =
+            suites.iter().map(|s| choice_accuracy(&m, s)).sum::<f64>() / suites.len() as f64;
+        t.row(vec![name.into(), grouping.into(), router.into(), f(avg * 100.0, 2)]);
+        Ok(())
+    };
+
+    // MoEfication (param k-means + trained linear router)
+    let opts = MoeficationOptions { n_experts: 8, active: 6, ..Default::default() };
+    let moef = common::convert_with_baseline(&dense, &profiles, &calib, &|_, ffn, x, _| {
+        baselines::moefication::moefication_convert(ffn, x, &opts)
+    });
+    run(ctx, "MoEfication", "Param K-means", "Linear", moef.clone())?;
+
+    // Read-ME-like (domain-aware + global router)
+    let pa = ctx.profiles(Domain::Markov, CALIB_EXAMPLES, KA)?;
+    let pb = ctx.profiles(Domain::Arith, CALIB_EXAMPLES, KA)?;
+    let readme = {
+        let fwdin = crate::eval::forward::DenseForward::new(&dense)
+            .capture_ffn_inputs(&calib[..CALIB_SEQ]);
+        let mut m = dense.clone();
+        for (l, layer) in m.layers.iter_mut().enumerate() {
+            let ffn = match &layer.ffn {
+                crate::model::LayerFfn::Dense(f) => f.clone(),
+                _ => continue,
+            };
+            // domain prototypes = mean FFN input per domain (markov uses
+            // the captured inputs; arith approximated by the same means
+            // shifted — the global router is the point of the ablation)
+            let d = ffn.w_gate.shape[0];
+            let mut mean = vec![0.0f32; d];
+            for r in 0..fwdin[l].shape[0] {
+                for (mv, v) in mean.iter_mut().zip(fwdin[l].row(r)) {
+                    *mv += v;
+                }
+            }
+            for mv in mean.iter_mut() {
+                *mv /= fwdin[l].shape[0] as f32;
+            }
+            let proto_a = crate::tensor::Tensor::from_vec(mean.clone(), &[d]);
+            let proto_b = crate::tensor::Tensor::from_vec(
+                mean.iter().map(|v| -v).collect(),
+                &[d],
+            );
+            layer.ffn = crate::model::LayerFfn::Moe(baselines::readme_like::readme_convert(
+                &ffn,
+                &[&pa[l], &pb[l]],
+                &[proto_a, proto_b],
+                6,
+                8,
+            ));
+        }
+        m
+    };
+    run(ctx, "Read-ME", "Domain-aware", "Global", readme.clone())?;
+
+    // + our analytical router swapped into each baseline
+    let swap = |m: &ModelWeights| -> ModelWeights {
+        let mut out = m.clone();
+        for (l, layer) in out.layers.iter_mut().enumerate() {
+            if let crate::model::LayerFfn::Moe(moe) = &layer.ffn {
+                let orig = dense.dense_ffn(l);
+                let swapped = baselines::with_analytical_router(moe, orig, &profiles[l]);
+                layer.ffn = crate::model::LayerFfn::Moe(swapped);
+            }
+        }
+        out
+    };
+    run(ctx, "MoEfication + ours", "Param K-means", "Analytical", swap(&moef))?;
+    run(ctx, "Read-ME + ours", "Domain-aware", "Analytical", swap(&readme))?;
+
+    // full CMoE
+    let ours = ctx.convert(&"S3A3E8".parse()?)?;
+    run(ctx, "Ours", "Activation + shared", "Analytical", ours)?;
+
+    ctx.save("table5", std::slice::from_ref(&t))?;
+    Ok(t)
+}
+
+/// Table 10: perplexity vs sparsity with 16 experts.
+pub fn table10(ctx: &mut Ctx) -> Result<Table> {
+    let toks = ctx.eval_tokens(Domain::Markov, EVAL_TOKENS);
+    let dense = ctx.model()?.clone();
+    let mut t = Table::new(
+        "Table 10 — perplexity vs sparsity (small, 16 experts)",
+        &["Config", "Sparsity", "PPL"],
+    );
+    t.row(vec!["Dense".into(), "0".into(), f(perplexity(&dense, &toks, CALIB_SEQ), 3)]);
+    // S4 shared fixed; sweep active routed experts
+    for (spec_s, sp) in [
+        ("S4A2E16", "0.625"),
+        ("S4A4E16", "0.5"),
+        ("S4A6E16", "0.375"),
+        ("S4A8E16", "0.25"),
+        ("S4A10E16", "0.125"),
+    ] {
+        let spec: MoeSpec = spec_s.parse()?;
+        let m = ctx.convert_finetuned(&spec, 2048)?;
+        t.row(vec![spec_s.into(), sp.into(), f(perplexity(&m, &toks, CALIB_SEQ), 3)]);
+    }
+    ctx.save("table10", std::slice::from_ref(&t))?;
+    Ok(t)
+}
+
+/// Table 11: k-sample self-consistency.
+pub fn table11(ctx: &mut Ctx) -> Result<Table> {
+    let dense = ctx.model()?.clone();
+    let ours = ctx.convert_finetuned(&"S3A3E8".parse()?, 2048)?;
+    let suites = ctx.suites();
+    let mut t = Table::new(
+        "Table 11 — k-sample self-consistency (small, 25% sparsity)",
+        &["Method", "k", "Knowledge", "Arith", "Pattern", "Avg"],
+    );
+    for (name, m) in [("Dense", &dense), ("Ours", &ours)] {
+        for (k, temp) in [(1usize, 0.0f32), (5, 0.7)] {
+            let mut cells = vec![name.to_string(), format!("{k}")];
+            let mut accs = Vec::new();
+            for s in &suites {
+                let a = self_consistency_accuracy(m, s, k, temp, ctx.seed ^ k as u64);
+                accs.push(a);
+                cells.push(f(a * 100.0, 2));
+            }
+            cells.push(f(accs.iter().sum::<f64>() / accs.len() as f64 * 100.0, 2));
+            t.row(cells);
+        }
+    }
+    ctx.save("table11", std::slice::from_ref(&t))?;
+    Ok(t)
+}
+
+/// Figure 4: data efficiency — accuracy/PPL vs fine-tuning samples.
+pub fn fig4(ctx: &mut Ctx) -> Result<Table> {
+    let spec: MoeSpec = "S3A3E8".parse()?;
+    let toks = ctx.eval_tokens(Domain::Markov, EVAL_TOKENS);
+    let suites = ctx.suites();
+    let mut t = Table::new(
+        "Figure 4 — data efficiency (small, 25% sparsity)",
+        &["FT samples", "AvgAcc (%)", "PPL markov"],
+    );
+    for samples in [0usize, 256, 512, 1024, 2048] {
+        let m = if samples == 0 {
+            ctx.convert(&spec)?
+        } else {
+            ctx.convert_finetuned(&spec, samples)?
+        };
+        let avg: f64 =
+            suites.iter().map(|s| choice_accuracy(&m, s)).sum::<f64>() / suites.len() as f64;
+        t.row(vec![
+            format!("{samples}"),
+            f(avg * 100.0, 2),
+            f(perplexity(&m, &toks, CALIB_SEQ), 2),
+        ]);
+    }
+    ctx.save("fig4", std::slice::from_ref(&t))?;
+    Ok(t)
+}
+
+/// Figure 6: expert-configuration impact at fixed 25% sparsity.
+pub fn fig6(ctx: &mut Ctx) -> Result<Table> {
+    let suites = ctx.suites();
+    let mut t = Table::new(
+        "Figure 6 — expert configuration impact (25% sparsity)",
+        &["Config", "Knowledge", "Arith", "Pattern"],
+    );
+    for spec_s in ["S1A5E8", "S3A3E8", "S2A4E8", "S4A8E16", "S6A6E16", "S3A9E16"] {
+        let spec: MoeSpec = spec_s.parse()?;
+        let m = ctx.convert_finetuned(&spec, 2048)?;
+        let mut cells = vec![spec_s.to_string()];
+        for s in &suites {
+            cells.push(f(choice_accuracy(&m, s) * 100.0, 2));
+        }
+        t.row(cells);
+    }
+    ctx.save("fig6", std::slice::from_ref(&t))?;
+    Ok(t)
+}

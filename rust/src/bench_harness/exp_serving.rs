@@ -1,0 +1,240 @@
+//! Serving experiments: Table 9 (speedup across expert configurations,
+//! context lengths, and memory- vs compute-bound regimes) and Figure 5
+//! (load-balance adaptation), all measured through the real engine +
+//! PJRT artifacts.
+
+use crate::bench_harness::common::Ctx;
+use crate::model::{ModelWeights, MoeSpec};
+use crate::serving::{Engine, EngineConfig, ExecMode, GenParams, Request};
+use crate::util::table::{f, speedup, Table};
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Run a decode-throughput measurement: returns tok/s.
+fn measure_tps(
+    rt: Arc<crate::runtime::XlaRuntime>,
+    model: ModelWeights,
+    cfg: EngineConfig,
+    batch: usize,
+    prompt_len: usize,
+    new_tokens: usize,
+) -> Result<f64> {
+    let engine = Engine::new(rt, model, cfg)?;
+    let reqs: Vec<Request> = (0..batch)
+        .map(|i| {
+            let prompt: Vec<usize> = (0..prompt_len).map(|j| (i * 7 + j * 13) % 250).collect();
+            Request::new(
+                i as u64,
+                prompt,
+                GenParams { max_new_tokens: new_tokens, temperature: 0.0, seed: i as u64, stop_token: None },
+            )
+        })
+        .collect();
+    // warmup wave (compilation)
+    let warm: Vec<Request> = reqs.iter().take(batch).cloned().map(|mut r| {
+        r.params.max_new_tokens = 2;
+        r
+    }).collect();
+    engine.run_queue(warm)?;
+    engine.metrics.lock().unwrap().waves.clear();
+    engine.run_queue(reqs)?;
+    let m = engine.metrics.lock().unwrap();
+    Ok(m.decode_tps())
+}
+
+fn engine_cfg(
+    model_name: &str,
+    kv_len: usize,
+    batch: usize,
+    mode: ExecMode,
+    spec: Option<MoeSpec>,
+) -> EngineConfig {
+    let mut cfg = match mode {
+        ExecMode::Dense => EngineConfig::dense(model_name, kv_len),
+        m => EngineConfig::moe(model_name, kv_len, spec.unwrap(), m),
+    };
+    cfg.batcher.buckets = vec![batch];
+    cfg.batcher.max_wait = std::time::Duration::ZERO;
+    cfg
+}
+
+/// Shared helper (also used by Table 7): dense-vs-ours decode tok/s.
+pub fn decode_throughput(
+    ctx: &mut Ctx,
+    dense: &ModelWeights,
+    ours: &ModelWeights,
+    batch: usize,
+    kv_len: usize,
+) -> Result<(f64, f64)> {
+    let rt = ctx.runtime()?;
+    let name = ctx.model_name.clone();
+    let new_tokens = kv_len / 2 - 2;
+    let dense_tps = measure_tps(
+        rt.clone(),
+        dense.clone(),
+        engine_cfg(&name, kv_len, batch, ExecMode::Dense, None),
+        batch,
+        16,
+        new_tokens,
+    )?;
+    let spec = match &ours.layers[0].ffn {
+        crate::model::LayerFfn::Moe(m) => m.spec,
+        _ => anyhow::bail!("ours must be converted"),
+    };
+    let ours_tps = measure_tps(
+        rt,
+        ours.clone(),
+        engine_cfg(&name, kv_len, batch, ExecMode::MoeOrchestrated, Some(spec)),
+        batch,
+        16,
+        new_tokens,
+    )?;
+    Ok((dense_tps, ours_tps))
+}
+
+/// Table 9: inference speedup across SxAyEz configs × context length ×
+/// batch regime. Short/long context = KV 64 / 256; memory-bound = b1,
+/// compute-bound = b32 (the paper's BS>400 analog on this testbed).
+pub fn table9(ctx: &mut Ctx) -> Result<Table> {
+    let rt = ctx.runtime()?;
+    let name = ctx.model_name.clone();
+    let dense = ctx.model()?.clone();
+    let mut t = Table::new(
+        "Table 9 — decode speedup vs dense (small; orchestrated MoE)",
+        &["Config", "Mem-bound b1 ctx64", "Mem-bound b1 ctx256", "Comp-bound b32 ctx64", "Comp-bound b32 ctx256"],
+    );
+    for spec_s in ["S1A5E8", "S3A3E8", "S2A4E8", "S4A8E16", "S6A6E16", "S3A9E16"] {
+        let spec: MoeSpec = spec_s.parse()?;
+        let ours = ctx.convert_finetuned(&spec, 2048)?;
+        let mut cells = vec![spec_s.to_string()];
+        for (batch, kv_len) in [(1usize, 64usize), (1, 256), (32, 64), (32, 256)] {
+            let new_tokens = (kv_len / 2 - 2).min(48);
+            let d_tps = measure_tps(
+                rt.clone(),
+                dense.clone(),
+                engine_cfg(&name, kv_len, batch, ExecMode::Dense, None),
+                batch,
+                16,
+                new_tokens,
+            )?;
+            // orchestrated needs prefill_moe which is compiled only for
+            // S3A3E8/S1A5E8; fall back to monolithic prefill spec? For
+            // S2A4E8 we approximate prefill with the S3A3E8 artifact
+            // being absent → run MoeOrchestrated only when compiled.
+            let have_prefill = rt.has_artifact(&format!(
+                "prefill_moe_{name}_{spec_s}_b{batch}_s16_t{kv_len}"
+            ));
+            let o_tps = if have_prefill {
+                measure_tps(
+                    rt.clone(),
+                    ours.clone(),
+                    engine_cfg(&name, kv_len, batch, ExecMode::MoeOrchestrated, Some(spec)),
+                    batch,
+                    16,
+                    new_tokens,
+                )?
+            } else {
+                f64::NAN
+            };
+            if o_tps.is_nan() {
+                cells.push("n/a".into());
+            } else {
+                cells.push(speedup(o_tps / d_tps));
+            }
+        }
+        t.row(cells);
+    }
+    ctx.save("table9", std::slice::from_ref(&t))?;
+    Ok(t)
+}
+
+/// Figure 5: expert utilization before/after bias adaptation, measured
+/// live in the orchestrated engine.
+///
+/// The balanced clustering already yields near-uniform routing on this
+/// checkpoint, so (as a controlled "before" state mirroring the paper's
+/// skewed final layer) we plant a +0.3 routing bias on expert 0 of
+/// every layer; adaptation must drain it back toward uniform.
+pub fn fig5(ctx: &mut Ctx) -> Result<Table> {
+    let spec: MoeSpec = "S3A3E8".parse()?;
+    let mut ours = ctx.convert(&spec)?;
+    for layer in ours.layers.iter_mut() {
+        if let crate::model::LayerFfn::Moe(m) = &mut layer.ffn {
+            m.gate_bias[0] = 0.3;
+        }
+    }
+    let rt = ctx.runtime()?;
+    let name = ctx.model_name.clone();
+
+    let run = |balance: bool| -> Result<Vec<f64>> {
+        let mut cfg = engine_cfg(&name, 64, 8, ExecMode::MoeOrchestrated, Some(spec));
+        cfg.balance = if balance {
+            Some(crate::moe::BalanceConfig { gamma: 5e-3, interval: 1 })
+        } else {
+            None
+        };
+        let engine = Engine::new(rt.clone(), ours.clone(), cfg)?;
+        // drive enough waves for adaptation to act
+        for w in 0..6 {
+            let reqs: Vec<Request> = (0..8)
+                .map(|i| {
+                    let prompt: Vec<usize> =
+                        (0..16).map(|j| (w * 31 + i * 7 + j * 13) % 250).collect();
+                    Request::new(
+                        (w * 8 + i) as u64,
+                        prompt,
+                        GenParams { max_new_tokens: 16, ..Default::default() },
+                    )
+                })
+                .collect();
+            engine.run_queue(reqs)?;
+        }
+        // measure final-layer utilization spread via a probe wave
+        let biases = engine.current_biases();
+        let last = biases.last().unwrap().clone();
+        Ok(last.iter().map(|&b| b as f64).collect())
+    };
+
+    let without = run(false)?;
+    let with = run(true)?;
+
+    // measure the utilization each bias vector induces on a probe batch
+    // (rust-side routing — identical logic to the engine's)
+    let calib = ctx.calib_tokens(crate::data::corpus::Domain::Markov, 4);
+    let dense = ctx.model()?.clone();
+    let inputs = crate::eval::forward::DenseForward::new(&dense)
+        .capture_ffn_inputs(&calib[..256]);
+    let last_l = dense.config.n_layers - 1;
+    let crate::model::LayerFfn::Moe(moe0) = &ours.layers[last_l].ffn else {
+        anyhow::bail!("expected MoE layer");
+    };
+    let utilization = |biases: &[f64]| -> Vec<f64> {
+        let mut m = moe0.clone();
+        for (b, &v) in m.gate_bias.iter_mut().zip(biases) {
+            *b = v as f32;
+        }
+        let (_, stats) = crate::moe::moe_ffn_forward(&m, &inputs[last_l]);
+        stats.utilization()
+    };
+    let u_before = utilization(&without);
+    let u_after = utilization(&with);
+
+    let mut t = Table::new(
+        "Figure 5 — load balancing: final-layer expert utilization (uniform = 1/N_r = 0.2)",
+        &["Expert", "util (no adaptation)", "util (γ=5e-3)", "bias (adapted)"],
+    );
+    for e in 0..without.len() {
+        t.row(vec![format!("{e}"), f(u_before[e], 3), f(u_after[e], 3), f(with[e], 4)]);
+    }
+    let spread = |u: &[f64]| {
+        u.iter().cloned().fold(0.0, f64::max) - u.iter().cloned().fold(1.0, f64::min)
+    };
+    t.row(vec![
+        "max-min".into(),
+        f(spread(&u_before), 3),
+        f(spread(&u_after), 3),
+        "-".into(),
+    ]);
+    ctx.save("fig5", std::slice::from_ref(&t))?;
+    Ok(t)
+}

@@ -1,0 +1,61 @@
+//! The experiment harness: one runner per table/figure of the paper's
+//! evaluation (DESIGN.md §5 maps each to its experiment id).
+//!
+//! `cmoe bench --exp table1` (or `fig2`, `all`, …) regenerates the
+//! corresponding table/figure rows on this testbed's substitute
+//! workloads; results print as aligned text and are exported to
+//! `results/<exp>.json`.
+
+pub mod common;
+pub mod runner;
+mod exp_ablate;
+mod exp_figs;
+mod exp_quality;
+mod exp_efficiency;
+mod exp_serving;
+
+use crate::util::table::Table;
+use anyhow::{bail, Result};
+use common::Ctx;
+
+/// Every experiment id, in paper order.
+pub const ALL_EXPERIMENTS: &[&str] = &[
+    "fig1", "fig2", "table1", "table2", "table3", "table4", "table5", "table6", "table7",
+    "table8", "table9", "table10", "table11", "fig4", "fig5", "fig6",
+];
+
+/// Run one experiment by id.
+pub fn run(exp: &str, ctx: &mut Ctx) -> Result<Vec<Table>> {
+    Ok(match exp {
+        "fig1" => vec![exp_figs::fig1(ctx)?],
+        "fig2" => vec![exp_figs::fig2(ctx)?],
+        "fig4" => vec![exp_quality::fig4(ctx)?],
+        "fig5" => vec![exp_serving::fig5(ctx)?],
+        "fig6" => vec![exp_quality::fig6(ctx)?],
+        "table1" => vec![exp_quality::table1(ctx)?],
+        "table2" => vec![exp_quality::table2(ctx)?],
+        "table3" => vec![exp_quality::table3(ctx)?],
+        "table4" => vec![exp_quality::table4(ctx)?],
+        "table5" => vec![exp_quality::table5(ctx)?],
+        "table6" => vec![exp_efficiency::table6(ctx)?],
+        "table7" => vec![exp_efficiency::table7(ctx)?],
+        "table8" => vec![exp_efficiency::table8(ctx)?],
+        "table9" => vec![exp_serving::table9(ctx)?],
+        "table10" => vec![exp_quality::table10(ctx)?],
+        "table11" => vec![exp_quality::table11(ctx)?],
+        "ablate" => vec![
+            exp_ablate::ablate_assignment(ctx)?,
+            exp_ablate::ablate_ka(ctx)?,
+            exp_ablate::ablate_quant(ctx)?,
+        ],
+        "all" => {
+            let mut out = Vec::new();
+            for e in ALL_EXPERIMENTS {
+                eprintln!("== running {e} ==");
+                out.extend(run(e, ctx)?);
+            }
+            out
+        }
+        _ => bail!("unknown experiment '{exp}' (available: {ALL_EXPERIMENTS:?} or 'all')"),
+    })
+}

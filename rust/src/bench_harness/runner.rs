@@ -1,0 +1,65 @@
+//! Criterion-style micro-bench runner (criterion itself is unavailable
+//! offline). Used by the `cargo bench` targets in `rust/benches/`.
+
+use crate::util::timer::{fmt_duration, measure};
+use std::time::Duration;
+
+/// One benchmark group printer.
+pub struct BenchRunner {
+    group: String,
+    min_iters: usize,
+    min_time: Duration,
+}
+
+impl BenchRunner {
+    pub fn new(group: &str) -> Self {
+        BenchRunner {
+            group: group.to_string(),
+            min_iters: 10,
+            min_time: Duration::from_millis(300),
+        }
+    }
+
+    pub fn with_budget(mut self, min_iters: usize, min_time: Duration) -> Self {
+        self.min_iters = min_iters;
+        self.min_time = min_time;
+        self
+    }
+
+    /// Time a closure; prints mean ± std, median, and throughput if
+    /// `items_per_iter` is given.
+    pub fn bench<F: FnMut()>(&self, name: &str, items_per_iter: Option<f64>, f: F) {
+        let samples = measure(f, self.min_iters, self.min_time);
+        let ns: Vec<f32> = samples.iter().map(|d| d.as_secs_f32() * 1e9).collect();
+        let mean = crate::util::stats::mean(&ns);
+        let sd = crate::util::stats::std_dev(&ns);
+        let p50 = crate::util::stats::percentile(&ns, 50.0);
+        let mean_d = Duration::from_nanos(mean as u64);
+        let p50_d = Duration::from_nanos(p50 as u64);
+        let thru = items_per_iter
+            .map(|items| format!("  {:>10.1} items/s", items / (mean as f64 / 1e9)))
+            .unwrap_or_default();
+        println!(
+            "{}/{name:<32} {:>10} ±{:>4.1}%  p50 {:>10}  n={}{}",
+            self.group,
+            fmt_duration(mean_d),
+            if mean > 0.0 { sd / mean * 100.0 } else { 0.0 },
+            fmt_duration(p50_d),
+            samples.len(),
+            thru,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_prints() {
+        let r = BenchRunner::new("test").with_budget(3, Duration::from_millis(1));
+        r.bench("noop", Some(1.0), || {
+            std::hint::black_box(42);
+        });
+    }
+}

@@ -1,0 +1,379 @@
+//! Clustering algorithms for expert construction.
+//!
+//! * [`balanced_kmeans`] — CMoE's constrained balanced K-means (§A.3):
+//!   every cluster gets exactly `m` members; the assignment step is a
+//!   Jonker–Volgenant LAP over a cost matrix whose cluster columns are
+//!   replicated `m` times. On binary activation columns the L2 distance
+//!   is the square root of the Hamming distance (Eq. 19), so this is
+//!   co-activation clustering.
+//! * [`lloyd_kmeans`] — plain (unbalanced) K-means, used by the
+//!   MoEfication / EMoE baselines which cluster *weight* vectors.
+
+use crate::lap::{self, CostMatrix};
+use crate::tensor::Tensor;
+use crate::util::pool;
+use crate::util::Rng;
+
+/// Result of a clustering run over `n` points.
+#[derive(Clone, Debug)]
+pub struct Clustering {
+    /// point -> cluster id
+    pub assign: Vec<usize>,
+    /// cluster centroids `[k, dim]`
+    pub centroids: Tensor,
+    /// summed within-cluster squared distance
+    pub inertia: f64,
+    /// iterations executed
+    pub iters: usize,
+}
+
+impl Clustering {
+    /// Members of each cluster (sorted ascending for determinism).
+    pub fn members(&self, k: usize) -> Vec<Vec<usize>> {
+        let mut out = vec![Vec::new(); k];
+        for (p, &c) in self.assign.iter().enumerate() {
+            out[c].push(p);
+        }
+        out
+    }
+}
+
+#[inline]
+fn sq_dist(a: &[f32], b: &[f32]) -> f64 {
+    let mut s = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        let d = (*x - *y) as f64;
+        s += d * d;
+    }
+    s
+}
+
+/// Balanced K-means: exactly `n/k` points per cluster (requires `k | n`).
+///
+/// `points` is `[n, dim]`. Each iteration solves an exact LAP assigning
+/// points to `k` clusters × `m` replicated slots, then recomputes
+/// centroids (Eq. 20–21). Initial centroids are chosen by the caller-
+/// provided `init` indices (CMoE uses the highest-activation-rate
+/// remaining neurons; see `converter`).
+pub fn balanced_kmeans(
+    points: &Tensor,
+    k: usize,
+    init: &[usize],
+    max_iters: usize,
+) -> Clustering {
+    assert_eq!(points.rank(), 2);
+    let n = points.shape[0];
+    let dim = points.shape[1];
+    assert!(k > 0 && n % k == 0, "balanced_kmeans requires k | n (n={n}, k={k})");
+    assert_eq!(init.len(), k, "need k initial centroid indices");
+    let m = n / k;
+
+    let mut centroids = points.select_rows(init);
+    let mut assign = vec![0usize; n];
+    let mut last_inertia = f64::INFINITY;
+    let mut iters = 0;
+
+    for it in 0..max_iters {
+        iters = it + 1;
+        // distance matrix point x cluster (parallel over points)
+        let mut dist = vec![0.0f64; n * k];
+        {
+            let centroids = &centroids;
+            pool::par_chunks_mut(&mut dist, k, |p, row| {
+                let pt = points.row(p);
+                for (c, slot) in row.iter_mut().enumerate() {
+                    *slot = sq_dist(pt, centroids.row(c));
+                }
+            });
+        }
+        // LAP with replicated columns: column index j maps to cluster j / m.
+        // (Costs replicate; we expand lazily through the closure.)
+        let cost = CostMatrix::from_fn(n, n, |p, j| dist[p * k + j / m]);
+        let sol = lap::solve(&cost);
+        let mut new_assign = vec![0usize; n];
+        for p in 0..n {
+            new_assign[p] = sol.row_to_col[p] / m;
+        }
+
+        // centroid update
+        let mut new_centroids = Tensor::zeros(&[k, dim]);
+        let mut counts = vec![0usize; k];
+        for p in 0..n {
+            let c = new_assign[p];
+            counts[c] += 1;
+            let crow = new_centroids.row_mut(c);
+            for (d, v) in crow.iter_mut().zip(points.row(p)) {
+                *d += *v;
+            }
+        }
+        for c in 0..k {
+            debug_assert_eq!(counts[c], m, "balance violated");
+            let crow = new_centroids.row_mut(c);
+            for v in crow.iter_mut() {
+                *v /= m as f32;
+            }
+        }
+
+        let inertia: f64 = (0..n).map(|p| sq_dist(points.row(p), new_centroids.row(new_assign[p]))).sum();
+        let converged = new_assign == assign || (last_inertia - inertia).abs() < 1e-9;
+        assign = new_assign;
+        centroids = new_centroids;
+        last_inertia = inertia;
+        if converged {
+            break;
+        }
+    }
+
+    Clustering { assign, centroids, inertia: last_inertia, iters }
+}
+
+/// Plain Lloyd K-means with k-means++ initialization. Unbalanced; the
+/// MoEfication baseline post-balances by size-capped reassignment.
+pub fn lloyd_kmeans(points: &Tensor, k: usize, rng: &mut Rng, max_iters: usize) -> Clustering {
+    assert_eq!(points.rank(), 2);
+    let n = points.shape[0];
+    let dim = points.shape[1];
+    assert!(k <= n);
+
+    // k-means++ seeding
+    let mut centers: Vec<usize> = vec![rng.below(n)];
+    let mut d2: Vec<f64> = (0..n).map(|p| sq_dist(points.row(p), points.row(centers[0]))).collect();
+    while centers.len() < k {
+        let total: f64 = d2.iter().sum();
+        let next = if total <= 0.0 {
+            rng.below(n)
+        } else {
+            let mut t = rng.f64() * total;
+            let mut pick = n - 1;
+            for (p, &w) in d2.iter().enumerate() {
+                t -= w;
+                if t <= 0.0 {
+                    pick = p;
+                    break;
+                }
+            }
+            pick
+        };
+        centers.push(next);
+        for p in 0..n {
+            d2[p] = d2[p].min(sq_dist(points.row(p), points.row(next)));
+        }
+    }
+    let mut centroids = points.select_rows(&centers);
+    let mut assign = vec![0usize; n];
+    let mut inertia = f64::INFINITY;
+    let mut iters = 0;
+
+    for it in 0..max_iters {
+        iters = it + 1;
+        let mut changed = false;
+        let mut new_inertia = 0.0f64;
+        for p in 0..n {
+            let mut best = 0;
+            let mut best_d = f64::INFINITY;
+            for c in 0..k {
+                let d = sq_dist(points.row(p), centroids.row(c));
+                if d < best_d {
+                    best_d = d;
+                    best = c;
+                }
+            }
+            if assign[p] != best {
+                changed = true;
+                assign[p] = best;
+            }
+            new_inertia += best_d;
+        }
+        let mut new_centroids = Tensor::zeros(&[k, dim]);
+        let mut counts = vec![0usize; k];
+        for p in 0..n {
+            counts[assign[p]] += 1;
+            let crow = new_centroids.row_mut(assign[p]);
+            for (d, v) in crow.iter_mut().zip(points.row(p)) {
+                *d += *v;
+            }
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                let crow = new_centroids.row_mut(c);
+                for v in crow.iter_mut() {
+                    *v /= counts[c] as f32;
+                }
+            } else {
+                // keep previous centroid for empty cluster
+                let prev = centroids.row(c).to_vec();
+                new_centroids.row_mut(c).copy_from_slice(&prev);
+            }
+        }
+        centroids = new_centroids;
+        inertia = new_inertia;
+        if !changed {
+            break;
+        }
+    }
+    Clustering { assign, centroids, inertia, iters }
+}
+
+/// Force a (possibly unbalanced) assignment to exact balance by moving
+/// overflow points to their nearest under-full cluster. Used to make the
+/// MoEfication/EMoE baselines produce equal-size experts like the paper's
+/// setup requires (all methods use N equal experts).
+pub fn rebalance(points: &Tensor, clustering: &mut Clustering, k: usize) {
+    let n = points.shape[0];
+    assert!(n % k == 0);
+    let m = n / k;
+    let mut counts = vec![0usize; k];
+    for &c in &clustering.assign {
+        counts[c] += 1;
+    }
+    // order points within overfull clusters by distance to their centroid
+    // (farthest leave first)
+    loop {
+        let Some(over) = (0..k).find(|&c| counts[c] > m) else { break };
+        // farthest member of `over`
+        let mut worst_p = usize::MAX;
+        let mut worst_d = -1.0f64;
+        for p in 0..n {
+            if clustering.assign[p] == over {
+                let d = sq_dist(points.row(p), clustering.centroids.row(over));
+                if d > worst_d {
+                    worst_d = d;
+                    worst_p = p;
+                }
+            }
+        }
+        // nearest under-full cluster
+        let mut best_c = usize::MAX;
+        let mut best_d = f64::INFINITY;
+        for c in 0..k {
+            if counts[c] < m {
+                let d = sq_dist(points.row(worst_p), clustering.centroids.row(c));
+                if d < best_d {
+                    best_d = d;
+                    best_c = c;
+                }
+            }
+        }
+        clustering.assign[worst_p] = best_c;
+        counts[over] -= 1;
+        counts[best_c] += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Config};
+
+    /// Generate `k` well-separated blobs of `m` points each.
+    fn blobs(rng: &mut Rng, k: usize, m: usize, dim: usize, sep: f32) -> (Tensor, Vec<usize>) {
+        let n = k * m;
+        let mut pts = Tensor::zeros(&[n, dim]);
+        let mut truth = vec![0usize; n];
+        let centers: Vec<Vec<f32>> =
+            (0..k).map(|_| (0..dim).map(|_| rng.normal() * sep).collect()).collect();
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        for (slot, &p) in order.iter().enumerate() {
+            let c = slot / m;
+            truth[p] = c;
+            let row = pts.row_mut(p);
+            for (d, v) in row.iter_mut().enumerate() {
+                *v = centers[c][d] + 0.05 * rng.normal();
+            }
+        }
+        (pts, truth)
+    }
+
+    /// cluster-id permutation-invariant agreement
+    fn agreement(a: &[usize], b: &[usize], k: usize) -> f64 {
+        // majority mapping a->b
+        let mut counts = vec![vec![0usize; k]; k];
+        for (&x, &y) in a.iter().zip(b) {
+            counts[x][y] += 1;
+        }
+        let mut hits = 0usize;
+        for row in &counts {
+            hits += row.iter().max().unwrap();
+        }
+        hits as f64 / a.len() as f64
+    }
+
+    #[test]
+    fn balanced_kmeans_exact_balance() {
+        let mut rng = Rng::new(2);
+        let (pts, _) = blobs(&mut rng, 4, 8, 6, 5.0);
+        let init: Vec<usize> = (0..4).collect();
+        let cl = balanced_kmeans(&pts, 4, &init, 20);
+        let members = cl.members(4);
+        for m in &members {
+            assert_eq!(m.len(), 8);
+        }
+    }
+
+    #[test]
+    fn balanced_kmeans_recovers_planted_blobs() {
+        let mut rng = Rng::new(3);
+        let (pts, truth) = blobs(&mut rng, 4, 8, 6, 8.0);
+        // init from one true member of each blob for determinism
+        let mut init = Vec::new();
+        for c in 0..4 {
+            init.push(truth.iter().position(|&t| t == c).unwrap());
+        }
+        let cl = balanced_kmeans(&pts, 4, &init, 30);
+        let agr = agreement(&cl.assign, &truth, 4);
+        assert!(agr > 0.95, "agreement {agr}");
+    }
+
+    #[test]
+    fn balanced_kmeans_property_balance_and_permutation() {
+        check("balanced-kmeans", Config { cases: 20, max_size: 6, ..Default::default() }, |rng, size| {
+            let k = rng.range(1, size.min(4) + 1);
+            let m = rng.range(1, 5);
+            let dim = rng.range(1, 6);
+            let n = k * m;
+            let pts = Tensor::randn(rng, &[n, dim], 1.0);
+            let init: Vec<usize> = (0..k).collect();
+            let cl = balanced_kmeans(&pts, k, &init, 10);
+            let members = cl.members(k);
+            for mem in &members {
+                crate::prop_assert!(mem.len() == m, "imbalanced: {:?}", members.iter().map(|x| x.len()).collect::<Vec<_>>());
+            }
+            // every point appears exactly once
+            let mut all: Vec<usize> = members.into_iter().flatten().collect();
+            all.sort_unstable();
+            crate::prop_assert!(all == (0..n).collect::<Vec<_>>(), "not a partition");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn lloyd_recovers_blobs() {
+        let mut rng = Rng::new(4);
+        let (pts, truth) = blobs(&mut rng, 3, 12, 5, 8.0);
+        let cl = lloyd_kmeans(&pts, 3, &mut rng, 50);
+        let agr = agreement(&cl.assign, &truth, 3);
+        assert!(agr > 0.95, "agreement {agr}");
+    }
+
+    #[test]
+    fn rebalance_fixes_sizes() {
+        let mut rng = Rng::new(5);
+        let (pts, _) = blobs(&mut rng, 3, 10, 4, 2.0);
+        let mut cl = lloyd_kmeans(&pts, 3, &mut rng, 50);
+        rebalance(&pts, &mut cl, 3);
+        let members = cl.members(3);
+        for m in members {
+            assert_eq!(m.len(), 10);
+        }
+    }
+
+    #[test]
+    fn binary_vectors_hamming_equivalence() {
+        // Eq. 19: squared L2 on binary vectors == Hamming distance
+        let a = [1.0f32, 0.0, 1.0, 1.0, 0.0];
+        let b = [0.0f32, 0.0, 1.0, 0.0, 1.0];
+        let hamming = a.iter().zip(&b).filter(|(x, y)| x != y).count() as f64;
+        assert_eq!(sq_dist(&a, &b), hamming);
+    }
+}

@@ -1,0 +1,202 @@
+//! Hierarchical restructuring (§4.4): apply CMoE recursively to the
+//! routed experts of an existing MoE layer, producing two-level routing
+//! — the top router picks primary experts, each expert's sub-router
+//! picks sub-experts (Eq. 10).
+
+use crate::converter::{convert_ffn, ConvertOptions};
+use crate::model::{MoeLayerWeights, MoeSpec};
+use crate::moe::{moe_ffn_forward, route_tokens};
+use crate::profiling::ActivationProfile;
+use crate::tensor::{self, Tensor};
+use anyhow::Result;
+
+/// A two-level MoE layer: the original top level plus one sub-MoE per
+/// routed expert.
+#[derive(Clone, Debug)]
+pub struct HierMoeLayer {
+    /// Top-level layer (its `experts` are retained for bookkeeping but
+    /// forward uses the sub-layers).
+    pub top: MoeLayerWeights,
+    /// Sub-restructured version of each routed expert.
+    pub sub: Vec<MoeLayerWeights>,
+    pub sub_spec: MoeSpec,
+}
+
+impl HierMoeLayer {
+    /// Effective fraction of FFN neurons active per token:
+    /// shared + selected experts × (their shared + active fraction).
+    pub fn active_fraction(&self) -> f64 {
+        let top = &self.top.spec;
+        let sub = &self.sub_spec;
+        let shared_frac = top.shared as f64 / top.total as f64;
+        let routed_frac = top.active as f64 / top.total as f64;
+        shared_frac + routed_frac * sub.active_fraction()
+    }
+}
+
+/// Build the per-expert activation profile by restricting a layer
+/// profile to the expert's neuron columns.
+fn restrict_profile(
+    profile: &ActivationProfile,
+    neurons: &[usize],
+    k_a: usize,
+) -> ActivationProfile {
+    // Rebuild hidden "magnitudes" from the binary matrix restricted to
+    // the expert's neurons; rates within the expert are re-derived from
+    // per-neuron columns. We keep the binary columns as-is (the ATopK
+    // selection was global, which matches how the top level profiles).
+    let q = profile.q;
+    let d_h = neurons.len();
+    let mut a = vec![0u8; q * d_h];
+    for t in 0..q {
+        for (j, &i) in neurons.iter().enumerate() {
+            a[t * d_h + j] = profile.a[t * profile.d_h + i];
+        }
+    }
+    let mean_abs_h: Vec<f32> = neurons.iter().map(|&i| profile.mean_abs_h[i]).collect();
+    ActivationProfile { d_h, q, k_a, a, mean_abs_h, h_sample: profile.h_sample.clone() }
+}
+
+/// Restructure each routed expert of `moe` into a sub-MoE with
+/// `sub_spec`. `profile` is the original layer's activation profile.
+pub fn hierarchical_convert(
+    moe: &MoeLayerWeights,
+    profile: &ActivationProfile,
+    sub_spec: &MoeSpec,
+    opts: &ConvertOptions,
+) -> Result<HierMoeLayer> {
+    let mut sub = Vec::with_capacity(moe.experts.len());
+    for (e, expert) in moe.experts.iter().enumerate() {
+        let p = restrict_profile(profile, &moe.expert_neurons[e], profile.k_a.min(expert.hidden_dim()));
+        let s = convert_ffn(expert, &p, sub_spec, opts)?;
+        sub.push(s);
+    }
+    Ok(HierMoeLayer { top: moe.clone(), sub, sub_spec: *sub_spec })
+}
+
+/// Two-level forward: top-level routing picks experts; each selected
+/// expert computes through its own sub-MoE (Eq. 10). The top-level
+/// shared expert stays dense.
+pub fn hier_moe_forward(layer: &HierMoeLayer, x: &Tensor) -> Tensor {
+    let _q = x.shape[0];
+    let d = x.shape[1];
+    let mut out = tensor::swiglu_ffn(
+        x,
+        &layer.top.shared.w_gate,
+        &layer.top.shared.w_up,
+        &layer.top.shared.w_down,
+    );
+    let decisions = route_tokens(&layer.top, x);
+    let n_r = layer.top.spec.routed();
+    let mut groups: Vec<Vec<(usize, f32)>> = vec![Vec::new(); n_r];
+    for (t, dec) in decisions.iter().enumerate() {
+        for (k, &e) in dec.experts.iter().enumerate() {
+            groups[e].push((t, dec.gates[k]));
+        }
+    }
+    for (e, group) in groups.iter().enumerate() {
+        if group.is_empty() {
+            continue;
+        }
+        let idx: Vec<usize> = group.iter().map(|&(t, _)| t).collect();
+        let xe = x.select_rows(&idx);
+        let (ye, _) = moe_ffn_forward(&layer.sub[e], &xe);
+        for (r, &(t, g)) in group.iter().enumerate() {
+            let src = ye.row(r);
+            let dst = &mut out.row_mut(t)[..d];
+            for (o, v) in dst.iter_mut().zip(src) {
+                *o += g * v;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::FfnWeights;
+    use crate::util::Rng;
+
+    fn build_hier(rng: &mut Rng) -> (FfnWeights, MoeLayerWeights, HierMoeLayer) {
+        let d = 8;
+        let d_h = 128;
+        let ffn = FfnWeights {
+            w_gate: Tensor::randn(rng, &[d, d_h], 0.4),
+            w_up: Tensor::randn(rng, &[d, d_h], 0.4),
+            w_down: Tensor::randn(rng, &[d_h, d], 0.4),
+        };
+        let x = Tensor::randn(rng, &[150, d], 1.0);
+        let h = tensor::swiglu_hidden(&x, &ffn.w_gate, &ffn.w_up);
+        let prof = ActivationProfile::from_hidden(&h, 24);
+        let top_spec: MoeSpec = "S2A2E8".parse().unwrap(); // experts of 16 neurons
+        let moe = convert_ffn(&ffn, &prof, &top_spec, &ConvertOptions::default()).unwrap();
+        let sub_spec: MoeSpec = "S1A2E4".parse().unwrap(); // sub-experts of 4
+        let hier = hierarchical_convert(&moe, &prof, &sub_spec, &ConvertOptions::default()).unwrap();
+        (ffn, moe, hier)
+    }
+
+    #[test]
+    fn hierarchy_shapes() {
+        let mut rng = Rng::new(41);
+        let (_, moe, hier) = build_hier(&mut rng);
+        assert_eq!(hier.sub.len(), moe.experts.len());
+        for s in &hier.sub {
+            assert_eq!(s.experts.len(), 3); // E4 S1 → 3 routed
+            assert_eq!(s.shared.hidden_dim(), 4);
+            for e in &s.experts {
+                assert_eq!(e.hidden_dim(), 4);
+            }
+        }
+    }
+
+    #[test]
+    fn sub_conversion_partitions_each_expert() {
+        let mut rng = Rng::new(42);
+        let (_, moe, hier) = build_hier(&mut rng);
+        for (e, s) in hier.sub.iter().enumerate() {
+            // sub-layer neuron ids index *within* the expert slice
+            assert_eq!(s.covered_neurons(), (0..moe.experts[e].hidden_dim()).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn full_activation_hierarchy_matches_dense() {
+        // top all-active + sub all-active must reproduce the dense FFN
+        let mut rng = Rng::new(43);
+        let d = 8;
+        let d_h = 128;
+        let ffn = FfnWeights {
+            w_gate: Tensor::randn(&mut rng, &[d, d_h], 0.4),
+            w_up: Tensor::randn(&mut rng, &[d, d_h], 0.4),
+            w_down: Tensor::randn(&mut rng, &[d_h, d], 0.4),
+        };
+        let xc = Tensor::randn(&mut rng, &[150, d], 1.0);
+        let h = tensor::swiglu_hidden(&xc, &ffn.w_gate, &ffn.w_up);
+        let prof = ActivationProfile::from_hidden(&h, 24);
+        let top: MoeSpec = "S2A6E8".parse().unwrap();
+        let moe = convert_ffn(&ffn, &prof, &top, &ConvertOptions::default()).unwrap();
+        let sub: MoeSpec = "S1A3E4".parse().unwrap();
+        let hier = hierarchical_convert(&moe, &prof, &sub, &ConvertOptions::default()).unwrap();
+        let x = Tensor::randn(&mut rng, &[10, d], 1.0);
+        let dense = tensor::swiglu_ffn(&x, &ffn.w_gate, &ffn.w_up, &ffn.w_down);
+        let out = hier_moe_forward(&hier, &x);
+        assert!(dense.max_abs_diff(&out) < 1e-4, "diff {}", dense.max_abs_diff(&out));
+    }
+
+    #[test]
+    fn active_fraction_math() {
+        let mut rng = Rng::new(44);
+        let (_, _, hier) = build_hier(&mut rng);
+        // top S2A2E8: 2/8 shared + 2/8 routed × sub S1A2E4 (3/4 active)
+        let expect = 0.25 + 0.25 * 0.75;
+        assert!((hier.active_fraction() - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hier_sparser_than_top_alone() {
+        let mut rng = Rng::new(45);
+        let (_, moe, hier) = build_hier(&mut rng);
+        assert!(hier.active_fraction() < moe.spec.active_fraction());
+    }
+}

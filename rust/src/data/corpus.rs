@@ -1,0 +1,176 @@
+//! Deterministic synthetic corpus generation (shared with
+//! `python/compile/datagen.py`, which implements the identical
+//! generators on the identical PCG stream so pretraining and evaluation
+//! see the same distribution).
+
+use crate::util::Rng;
+
+/// Corpus domain.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Domain {
+    /// Markov-chain word text (WikiText-2 stand-in).
+    Markov,
+    /// Arithmetic + pattern strings (C4/structured stand-in).
+    Arith,
+}
+
+impl Domain {
+    pub fn parse(s: &str) -> Option<Domain> {
+        match s {
+            "markov" => Some(Domain::Markov),
+            "arith" => Some(Domain::Arith),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Domain::Markov => "markov",
+            Domain::Arith => "arith",
+        }
+    }
+}
+
+/// Corpus request.
+#[derive(Clone, Copy, Debug)]
+pub struct CorpusSpec {
+    pub domain: Domain,
+    pub bytes: usize,
+    pub seed: u64,
+}
+
+/// Small word lexicon for the markov domain (stable order matters —
+/// python mirrors it).
+const LEXICON: &[&str] = &[
+    "the", "model", "expert", "router", "token", "layer", "neuron", "dense", "sparse", "gate",
+    "shared", "routed", "cache", "batch", "serve", "fast", "slow", "high", "low", "with", "from",
+    "into", "over", "under", "runs", "emits", "learns", "splits", "merges", "activates",
+];
+
+/// Generate a corpus string of roughly `spec.bytes` bytes.
+pub fn gen_corpus(spec: &CorpusSpec) -> String {
+    let mut rng = Rng::new(spec.seed ^ (spec.domain as u64).wrapping_mul(0x9E37_79B9));
+    match spec.domain {
+        Domain::Markov => gen_markov(&mut rng, spec.bytes),
+        Domain::Arith => gen_arith(&mut rng, spec.bytes),
+    }
+}
+
+fn gen_markov(rng: &mut Rng, bytes: usize) -> String {
+    // Order-1 Markov over the lexicon with a deterministic transition
+    // structure: word i prefers words (2i+1) and (3i+2) mod N, giving
+    // non-uniform, learnable bigram statistics.
+    let n = LEXICON.len();
+    let mut out = String::with_capacity(bytes + 16);
+    let mut cur = rng.below(n);
+    while out.len() < bytes {
+        out.push_str(LEXICON[cur]);
+        out.push(' ');
+        let r = rng.f32();
+        cur = if r < 0.45 {
+            (2 * cur + 1) % n
+        } else if r < 0.8 {
+            (3 * cur + 2) % n
+        } else {
+            rng.below(n)
+        };
+        if rng.f32() < 0.07 {
+            out.pop();
+            out.push_str(". ");
+        }
+    }
+    out.truncate(bytes);
+    out
+}
+
+fn gen_arith(rng: &mut Rng, bytes: usize) -> String {
+    // interleave addition equations and letter patterns
+    let mut out = String::with_capacity(bytes + 32);
+    while out.len() < bytes {
+        if rng.f32() < 0.7 {
+            let a = rng.below(100);
+            let b = rng.below(100);
+            out.push_str(&format!("{a}+{b}={};", a + b));
+        } else {
+            // pattern: abcabcabc…
+            let period = rng.range(2, 5);
+            let reps = rng.range(2, 5);
+            let start = b'a' + rng.below(6) as u8;
+            for _ in 0..reps {
+                for k in 0..period {
+                    out.push((start + k as u8) as char);
+                }
+            }
+            out.push(';');
+        }
+    }
+    out.truncate(bytes);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let spec = CorpusSpec { domain: Domain::Markov, bytes: 500, seed: 7 };
+        assert_eq!(gen_corpus(&spec), gen_corpus(&spec));
+    }
+
+    #[test]
+    fn domains_differ() {
+        let a = gen_corpus(&CorpusSpec { domain: Domain::Markov, bytes: 300, seed: 7 });
+        let b = gen_corpus(&CorpusSpec { domain: Domain::Arith, bytes: 300, seed: 7 });
+        assert_ne!(a, b);
+        assert!(b.contains('+') && b.contains('='));
+        assert!(!a.contains('+'));
+    }
+
+    #[test]
+    fn requested_size() {
+        for bytes in [10, 100, 4096] {
+            let s = gen_corpus(&CorpusSpec { domain: Domain::Arith, bytes, seed: 1 });
+            assert_eq!(s.len(), bytes);
+        }
+    }
+
+    #[test]
+    fn arith_equations_are_correct() {
+        let s = gen_corpus(&CorpusSpec { domain: Domain::Arith, bytes: 2000, seed: 3 });
+        let mut checked = 0;
+        for part in s.split(';') {
+            if let Some((lhs, rhs)) = part.split_once('=') {
+                if let Some((a, b)) = lhs.split_once('+') {
+                    if let (Ok(a), Ok(b), Ok(c)) =
+                        (a.parse::<u64>(), b.parse::<u64>(), rhs.parse::<u64>())
+                    {
+                        assert_eq!(a + b, c, "bad equation {part}");
+                        checked += 1;
+                    }
+                }
+            }
+        }
+        assert!(checked > 10, "too few equations parsed: {checked}");
+    }
+
+    #[test]
+    fn markov_bigrams_are_skewed() {
+        // the transition structure must create non-uniform bigrams —
+        // that's what makes the corpus learnable
+        let s = gen_corpus(&CorpusSpec { domain: Domain::Markov, bytes: 50_000, seed: 11 });
+        let words: Vec<&str> = s.split_whitespace().collect();
+        let mut follow_the = std::collections::HashMap::new();
+        for w in words.windows(2) {
+            if w[0] == "the" {
+                *follow_the.entry(w[1]).or_insert(0usize) += 1;
+            }
+        }
+        let total: usize = follow_the.values().sum();
+        let max = follow_the.values().copied().max().unwrap_or(0);
+        assert!(
+            max as f64 > total as f64 * 0.2,
+            "bigram distribution too uniform: max {max}/{total}"
+        );
+    }
+}

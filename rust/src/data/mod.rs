@@ -1,0 +1,47 @@
+//! Synthetic corpora and tokenization.
+//!
+//! Two distribution-distinct domains substitute for WikiText-2 / C4
+//! (DESIGN.md §2):
+//! * **markov** — character-level text from a fixed-order Markov chain
+//!   over a word lexicon (natural-language-ish statistics).
+//! * **arith** — compositional arithmetic/pattern sequences with exact
+//!   structure (`a+b=c;` with carries, plus pattern-completion strings),
+//!   giving the model something *learnable* so PPL and task accuracy are
+//!   meaningful.
+//!
+//! Tokenization is byte-level (vocab 256) so the rust and python sides
+//! agree trivially.
+
+pub mod corpus;
+pub mod tasks_gen;
+
+pub use corpus::{gen_corpus, CorpusSpec, Domain};
+pub use tasks_gen::{gen_choice_tasks, ChoiceTask};
+
+/// Byte-level tokenizer: text ⇄ token ids (identity on bytes).
+pub fn encode(text: &str) -> Vec<usize> {
+    text.bytes().map(|b| b as usize).collect()
+}
+
+/// Decode token ids back to text (lossy on invalid UTF-8).
+pub fn decode(tokens: &[usize]) -> String {
+    let bytes: Vec<u8> = tokens.iter().map(|&t| t as u8).collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let s = "3+4=7;12+9=21;";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn encode_is_byte_level() {
+        assert_eq!(encode("AB"), vec![65, 66]);
+        assert!(encode("hello").iter().all(|&t| t < 256));
+    }
+}

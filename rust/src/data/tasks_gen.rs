@@ -1,0 +1,175 @@
+//! Synthetic multiple-choice task generation — the stand-in for
+//! PIQA/ARC/HellaSwag/MMLU-style suites (DESIGN.md §2). Each task is a
+//! context plus `n_choices` completions exactly one of which continues
+//! the context under the corpus's generative rules; models are scored
+//! by likelihood ranking, the same protocol lm-eval uses.
+
+use crate::util::Rng;
+
+/// One multiple-choice item.
+#[derive(Clone, Debug)]
+pub struct ChoiceTask {
+    pub context: String,
+    pub choices: Vec<String>,
+    pub answer: usize,
+}
+
+/// Task families, roughly ordered by difficulty. The "knowledge" family
+/// plays the MMLU role (recall of the lexicon's transition rules), the
+/// "arith" family plays GSM8K (multi-digit addition), the "pattern"
+/// family plays HellaSwag (sequence completion).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskFamily {
+    /// Next-word under the markov transition rules.
+    Knowledge,
+    /// `a+b=?` with numeric distractors.
+    Arith,
+    /// Periodic pattern completion.
+    Pattern,
+}
+
+impl TaskFamily {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskFamily::Knowledge => "knowledge",
+            TaskFamily::Arith => "arith",
+            TaskFamily::Pattern => "pattern",
+        }
+    }
+}
+
+/// Generate `n` items of a family.
+pub fn gen_choice_tasks(family: TaskFamily, n: usize, seed: u64) -> Vec<ChoiceTask> {
+    let mut rng = Rng::new(seed ^ (family as u64).wrapping_mul(0xABCD_1234));
+    (0..n)
+        .map(|_| match family {
+            TaskFamily::Knowledge => knowledge_item(&mut rng),
+            TaskFamily::Arith => arith_item(&mut rng),
+            TaskFamily::Pattern => pattern_item(&mut rng),
+        })
+        .collect()
+}
+
+const LEXICON: &[&str] = &[
+    "the", "model", "expert", "router", "token", "layer", "neuron", "dense", "sparse", "gate",
+    "shared", "routed", "cache", "batch", "serve", "fast", "slow", "high", "low", "with", "from",
+    "into", "over", "under", "runs", "emits", "learns", "splits", "merges", "activates",
+];
+
+fn knowledge_item(rng: &mut Rng) -> ChoiceTask {
+    // context ends on word w; the dominant continuation is (2w+1) mod N
+    let n = LEXICON.len();
+    let mut cur = rng.below(n);
+    let mut ctx = String::new();
+    for _ in 0..rng.range(3, 7) {
+        ctx.push_str(LEXICON[cur]);
+        ctx.push(' ');
+        cur = (2 * cur + 1) % n;
+    }
+    ctx.push_str(LEXICON[cur]);
+    ctx.push(' ');
+    let answer_word = LEXICON[(2 * cur + 1) % n];
+    let mut choices = vec![answer_word.to_string()];
+    while choices.len() < 4 {
+        let w = LEXICON[rng.below(n)];
+        if w != answer_word && !choices.iter().any(|c| c == w) {
+            choices.push(w.to_string());
+        }
+    }
+    shuffle_with_answer(rng, ctx, choices)
+}
+
+fn arith_item(rng: &mut Rng) -> ChoiceTask {
+    let a = rng.below(100);
+    let b = rng.below(100);
+    let c = a + b;
+    let ctx = format!("{a}+{b}=");
+    let mut wrongs = Vec::new();
+    for delta in [1i64, -1, 10] {
+        let w = (c as i64 + delta).max(0) as usize;
+        if w != c {
+            wrongs.push(format!("{w};"));
+        }
+    }
+    let mut choices = vec![format!("{c};")];
+    choices.extend(wrongs.into_iter().take(3));
+    shuffle_with_answer(rng, ctx, choices)
+}
+
+fn pattern_item(rng: &mut Rng) -> ChoiceTask {
+    let period = rng.range(2, 5);
+    let start = b'a' + rng.below(6) as u8;
+    let unit: String = (0..period).map(|k| (start + k as u8) as char).collect();
+    let ctx = format!("{0}{0}{1}", unit, &unit[..period - 1]);
+    let correct = unit.chars().last().unwrap().to_string();
+    let mut choices = vec![correct.clone()];
+    let mut c = b'a';
+    while choices.len() < 4 {
+        let s = (c as char).to_string();
+        if s != correct && !choices.contains(&s) {
+            choices.push(s);
+        }
+        c += 1;
+    }
+    shuffle_with_answer(rng, ctx, choices)
+}
+
+fn shuffle_with_answer(rng: &mut Rng, context: String, mut choices: Vec<String>) -> ChoiceTask {
+    // choices[0] is correct; shuffle and track it
+    let correct = choices[0].clone();
+    rng.shuffle(&mut choices);
+    let answer = choices.iter().position(|c| *c == correct).unwrap();
+    ChoiceTask { context, choices, answer }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let a = gen_choice_tasks(TaskFamily::Arith, 10, 3);
+        let b = gen_choice_tasks(TaskFamily::Arith, 10, 3);
+        assert_eq!(a.len(), 10);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.context, y.context);
+            assert_eq!(x.answer, y.answer);
+        }
+    }
+
+    #[test]
+    fn arith_answers_are_correct_sums() {
+        for t in gen_choice_tasks(TaskFamily::Arith, 50, 5) {
+            let lhs = t.context.trim_end_matches('=');
+            let (a, b) = lhs.split_once('+').unwrap();
+            let sum: usize = a.parse::<usize>().unwrap() + b.parse::<usize>().unwrap();
+            assert_eq!(t.choices[t.answer], format!("{sum};"));
+        }
+    }
+
+    #[test]
+    fn four_distinct_choices() {
+        for fam in [TaskFamily::Knowledge, TaskFamily::Arith, TaskFamily::Pattern] {
+            for t in gen_choice_tasks(fam, 30, 9) {
+                assert_eq!(t.choices.len(), 4, "{fam:?}");
+                let mut c = t.choices.clone();
+                c.sort();
+                c.dedup();
+                assert_eq!(c.len(), 4, "{fam:?} duplicate choices {:?}", t.choices);
+                assert!(t.answer < 4);
+            }
+        }
+    }
+
+    #[test]
+    fn pattern_answer_completes_period() {
+        for t in gen_choice_tasks(TaskFamily::Pattern, 30, 11) {
+            let full = format!("{}{}", t.context, t.choices[t.answer]);
+            // the completed string must be periodic with some period 2..5
+            let ok = (2..5).any(|p| full.bytes().enumerate().all(|(i, b)| {
+                i < p || b == full.as_bytes()[i - p]
+            }));
+            assert!(ok, "completion not periodic: {full}");
+        }
+    }
+}

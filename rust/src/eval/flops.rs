@@ -1,0 +1,138 @@
+//! Analytic FLOPs/MACs accounting (Tables 7/8): count multiply-
+//! accumulates per token for dense, CMoE, WINA-augmented and
+//! hierarchical models. 1 MAC = 2 FLOPs.
+
+use crate::model::{LayerFfn, ModelWeights, MoeSpec, TransformerConfig};
+
+/// Per-token compute accounting.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FlopsReport {
+    pub macs_attn: f64,
+    pub macs_ffn: f64,
+    pub macs_router: f64,
+    pub macs_logits: f64,
+}
+
+impl FlopsReport {
+    pub fn macs_total(&self) -> f64 {
+        self.macs_attn + self.macs_ffn + self.macs_router + self.macs_logits
+    }
+    pub fn flops_total(&self) -> f64 {
+        2.0 * self.macs_total()
+    }
+    /// Relative FFN+router savings vs a dense report.
+    pub fn savings_vs(&self, dense: &FlopsReport) -> f64 {
+        1.0 - self.flops_total() / dense.flops_total()
+    }
+}
+
+/// MACs/token for the *current* structure of `model` (dense layers count
+/// fully, MoE layers count shared + N_k experts + router).
+/// `wina_keep` < 1.0 additionally scales expert/dense FFN MACs by the
+/// WINA neuron-keep fraction (Table 8's composition).
+pub fn count_flops(model: &ModelWeights, wina_keep: f64) -> FlopsReport {
+    let cfg = &model.config;
+    let d = cfg.d_model as f64;
+    let mut r = FlopsReport::default();
+    r.macs_attn = cfg.n_layers as f64 * 4.0 * d * d; // q,k,v,o projections
+    r.macs_logits = d * cfg.vocab as f64;
+    for layer in &model.layers {
+        match &layer.ffn {
+            LayerFfn::Dense(f) => {
+                r.macs_ffn += 3.0 * d * f.hidden_dim() as f64 * wina_keep;
+            }
+            LayerFfn::Moe(moe) => {
+                let m = moe.experts[0].hidden_dim() as f64;
+                let shared = moe.shared.hidden_dim() as f64;
+                let active = moe.spec.active as f64 * m;
+                r.macs_ffn += 3.0 * d * (shared + active) * wina_keep;
+                r.macs_router += d * moe.spec.routed() as f64 * 2.0; // gate+up columns
+            }
+        }
+    }
+    r
+}
+
+/// Closed-form expected MACs/token for a spec applied to a config —
+/// used for sweeps without building weights.
+pub fn spec_macs(cfg: &TransformerConfig, spec: Option<&MoeSpec>, wina_keep: f64) -> f64 {
+    let d = cfg.d_model as f64;
+    let attn = cfg.n_layers as f64 * 4.0 * d * d;
+    let logits = d * cfg.vocab as f64;
+    let ffn = match spec {
+        None => cfg.n_layers as f64 * 3.0 * d * cfg.d_ff as f64 * wina_keep,
+        Some(s) => {
+            let m = (cfg.d_ff / s.total) as f64;
+            let per_layer = 3.0 * d * ((s.shared + s.active) as f64 * m) * wina_keep
+                + d * s.routed() as f64 * 2.0;
+            cfg.n_layers as f64 * per_layer
+        }
+    };
+    attn + ffn + logits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::converter::{convert_model, ConvertOptions};
+    use crate::eval::forward::DenseForward;
+    use crate::model::{model_config, ModelWeights};
+    use crate::profiling::ActivationProfile;
+    use crate::util::Rng;
+
+    fn converted(spec: &str) -> (ModelWeights, ModelWeights) {
+        let cfg = model_config("tiny").unwrap();
+        let mut rng = Rng::new(91);
+        let model = ModelWeights::random(&cfg, &mut rng);
+        let fwd = DenseForward::new(&model);
+        let calib: Vec<usize> = (0..64).map(|_| rng.below(cfg.vocab)).collect();
+        let profiles: Vec<ActivationProfile> = fwd
+            .capture_hidden(&calib)
+            .iter()
+            .map(|h| ActivationProfile::from_hidden(h, 16))
+            .collect();
+        let conv =
+            convert_model(&model, &profiles, &spec.parse().unwrap(), &ConvertOptions::default())
+                .unwrap();
+        (model, conv.model)
+    }
+
+    #[test]
+    fn moe_saves_ffn_flops() {
+        let (dense, moe) = converted("S3A3E8");
+        let rd = count_flops(&dense, 1.0);
+        let rm = count_flops(&moe, 1.0);
+        assert!(rm.macs_ffn < rd.macs_ffn);
+        // 6/8 of neurons active → ffn MACs ratio 0.75
+        assert!((rm.macs_ffn / rd.macs_ffn - 0.75).abs() < 1e-9);
+        assert!(rm.macs_router > 0.0);
+        assert!(rm.savings_vs(&rd) > 0.0);
+        assert_eq!(rm.macs_attn, rd.macs_attn);
+    }
+
+    #[test]
+    fn spec_macs_matches_counted() {
+        let (dense, moe) = converted("S3A3E8");
+        let cfg = &dense.config;
+        let analytic_dense = spec_macs(cfg, None, 1.0);
+        let analytic_moe = spec_macs(cfg, Some(&"S3A3E8".parse().unwrap()), 1.0);
+        assert!((count_flops(&dense, 1.0).macs_total() - analytic_dense).abs() < 1e-6);
+        assert!((count_flops(&moe, 1.0).macs_total() - analytic_moe).abs() < 1e-6);
+    }
+
+    #[test]
+    fn wina_composes_multiplicatively() {
+        let (_, moe) = converted("S3A3E8");
+        let full = count_flops(&moe, 1.0);
+        let wina = count_flops(&moe, 0.75);
+        assert!((wina.macs_ffn / full.macs_ffn - 0.75).abs() < 1e-9);
+        assert_eq!(wina.macs_router, full.macs_router);
+    }
+
+    #[test]
+    fn flops_are_2x_macs() {
+        let (dense, _) = converted("S3A3E8");
+        let r = count_flops(&dense, 1.0);
+        assert!((r.flops_total() - 2.0 * r.macs_total()).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,308 @@
+//! Pure-rust reference forward pass.
+//!
+//! The serving engine executes compiled XLA artifacts; this forward is
+//! the numerics oracle — it handles dense *and* MoE-restructured layers
+//! (dispatching through [`crate::moe::moe_ffn_forward`]) and is used by
+//! profiling, perplexity evaluation, the task suites and the
+//! artifact-parity integration tests.
+
+use crate::model::{LayerFfn, ModelWeights};
+use crate::moe::MoeForwardStats;
+use crate::tensor::{self, Tensor};
+
+/// Per-forward statistics (routing counts per MoE layer).
+#[derive(Clone, Debug, Default)]
+pub struct ForwardStats {
+    /// One entry per MoE layer encountered (layer index, stats).
+    pub moe: Vec<(usize, MoeForwardStats)>,
+}
+
+/// Reference forward executor over a model.
+pub struct DenseForward<'a> {
+    pub model: &'a ModelWeights,
+}
+
+impl<'a> DenseForward<'a> {
+    pub fn new(model: &'a ModelWeights) -> Self {
+        DenseForward { model }
+    }
+
+    /// Logits for every position of `tokens` (one causal sequence).
+    pub fn logits(&self, tokens: &[usize]) -> Tensor {
+        self.run(tokens, false, None).0
+    }
+
+    /// Logits + routing stats (for Figure 5 / FLOPs accounting).
+    pub fn logits_with_stats(&self, tokens: &[usize]) -> (Tensor, ForwardStats) {
+        let mut stats = ForwardStats::default();
+        let (logits, _) = self.run(tokens, false, Some(&mut stats));
+        (logits, stats)
+    }
+
+    /// FFN hidden states per layer (dense layers only — used by the
+    /// activation profiler).
+    pub fn capture_hidden(&self, tokens: &[usize]) -> Vec<Tensor> {
+        self.run(tokens, true, None).1
+    }
+
+    /// Normed FFN *inputs* per layer (`x_n` fed to each FFN) — the
+    /// calibration tensor the baseline converters train routers on.
+    pub fn capture_ffn_inputs(&self, tokens: &[usize]) -> Vec<Tensor> {
+        let mut inputs = Vec::new();
+        self.run_with_input_capture(tokens, &mut inputs);
+        inputs
+    }
+
+    fn run_with_input_capture(&self, tokens: &[usize], inputs: &mut Vec<Tensor>) {
+        // a second pass that records xn before each FFN; kept separate
+        // from `run` to avoid burdening the common path
+        let cfg = &self.model.config;
+        let q = tokens.len();
+        let d = cfg.d_model;
+        let mut x = Tensor::zeros(&[q, d]);
+        for (t, &id) in tokens.iter().enumerate() {
+            let e = self.model.embed.row(id);
+            let p = self.model.pos.row(t);
+            let row = x.row_mut(t);
+            for j in 0..d {
+                row[j] = e[j] + p[j];
+            }
+        }
+        for layer in &self.model.layers {
+            let xn = tensor::rmsnorm_rows(&x, &layer.attn_norm, 1e-6);
+            let attn_out = causal_attention(&xn, layer, cfg.n_heads);
+            tensor::add_inplace(&mut x, &attn_out);
+            let xn = tensor::rmsnorm_rows(&x, &layer.ffn_norm, 1e-6);
+            let ffn_out = match &layer.ffn {
+                LayerFfn::Dense(f) => tensor::swiglu_ffn(&xn, &f.w_gate, &f.w_up, &f.w_down),
+                LayerFfn::Moe(moe) => crate::moe::moe_ffn_forward(moe, &xn).0,
+            };
+            inputs.push(xn);
+            tensor::add_inplace(&mut x, &ffn_out);
+        }
+    }
+
+    fn run(
+        &self,
+        tokens: &[usize],
+        capture: bool,
+        mut stats: Option<&mut ForwardStats>,
+    ) -> (Tensor, Vec<Tensor>) {
+        let cfg = &self.model.config;
+        let q = tokens.len();
+        assert!(q > 0 && q <= cfg.max_seq, "sequence length {q} out of range");
+        let d = cfg.d_model;
+
+        // embeddings + learned positions
+        let mut x = Tensor::zeros(&[q, d]);
+        for (t, &id) in tokens.iter().enumerate() {
+            assert!(id < cfg.vocab, "token id {id} >= vocab");
+            let e = self.model.embed.row(id);
+            let p = self.model.pos.row(t);
+            let row = x.row_mut(t);
+            for j in 0..d {
+                row[j] = e[j] + p[j];
+            }
+        }
+
+        let mut captured = Vec::new();
+        for (l, layer) in self.model.layers.iter().enumerate() {
+            // --- attention block ---
+            let xn = tensor::rmsnorm_rows(&x, &layer.attn_norm, 1e-6);
+            let attn_out = causal_attention(&xn, layer, cfg.n_heads);
+            tensor::add_inplace(&mut x, &attn_out);
+
+            // --- FFN block ---
+            let xn = tensor::rmsnorm_rows(&x, &layer.ffn_norm, 1e-6);
+            let ffn_out = match &layer.ffn {
+                LayerFfn::Dense(f) => {
+                    if capture {
+                        let h = tensor::swiglu_hidden(&xn, &f.w_gate, &f.w_up);
+                        let out = tensor::matmul(&h, &f.w_down);
+                        captured.push(h);
+                        out
+                    } else {
+                        tensor::swiglu_ffn(&xn, &f.w_gate, &f.w_up, &f.w_down)
+                    }
+                }
+                LayerFfn::Moe(moe) => {
+                    let (out, s) = crate::moe::moe_ffn_forward(moe, &xn);
+                    if let Some(st) = stats.as_deref_mut() {
+                        st.moe.push((l, s));
+                    }
+                    out
+                }
+            };
+            tensor::add_inplace(&mut x, &ffn_out);
+        }
+
+        let xn = tensor::rmsnorm_rows(&x, &self.model.final_norm, 1e-6);
+        let logits = tensor::matmul(&xn, &self.model.unembed);
+        (logits, captured)
+    }
+}
+
+/// Public re-export of the attention primitive for custom evaluation
+/// loops (e.g. the WINA-composed forward in the bench harness).
+pub fn attention_for_tests(
+    x: &Tensor,
+    layer: &crate::model::LayerWeights,
+    n_heads: usize,
+) -> Tensor {
+    causal_attention(x, layer, n_heads)
+}
+
+/// Multi-head causal self-attention for one sequence `x: [q, d]`.
+fn causal_attention(x: &Tensor, layer: &crate::model::LayerWeights, n_heads: usize) -> Tensor {
+    let q_len = x.shape[0];
+    let d = x.shape[1];
+    let hd = d / n_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+
+    let qm = tensor::matmul(x, &layer.attn.wq);
+    let km = tensor::matmul(x, &layer.attn.wk);
+    let vm = tensor::matmul(x, &layer.attn.wv);
+
+    let mut ctx = Tensor::zeros(&[q_len, d]);
+    for h in 0..n_heads {
+        let off = h * hd;
+        for t in 0..q_len {
+            // scores over prefix 0..=t
+            let qrow = &qm.row(t)[off..off + hd];
+            let mut scores = Vec::with_capacity(t + 1);
+            for s in 0..=t {
+                let krow = &km.row(s)[off..off + hd];
+                let dot: f32 = qrow.iter().zip(krow).map(|(a, b)| a * b).sum();
+                scores.push(dot * scale);
+            }
+            let probs = tensor::softmax(&scores);
+            let orow = &mut ctx.row_mut(t)[off..off + hd];
+            for (s, &p) in probs.iter().enumerate() {
+                let vrow = &vm.row(s)[off..off + hd];
+                for (o, v) in orow.iter_mut().zip(vrow) {
+                    *o += p * v;
+                }
+            }
+        }
+    }
+    tensor::matmul(&ctx, &layer.attn.wo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::model_config;
+    use crate::util::Rng;
+
+    #[test]
+    fn logits_shape_and_finiteness() {
+        let cfg = model_config("tiny").unwrap();
+        let mut rng = Rng::new(61);
+        let model = ModelWeights::random(&cfg, &mut rng);
+        let fwd = DenseForward::new(&model);
+        let tokens: Vec<usize> = (0..12).map(|_| rng.below(cfg.vocab)).collect();
+        let logits = fwd.logits(&tokens);
+        assert_eq!(logits.shape, vec![12, cfg.vocab]);
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn capture_matches_layer_count() {
+        let cfg = model_config("tiny").unwrap();
+        let mut rng = Rng::new(62);
+        let model = ModelWeights::random(&cfg, &mut rng);
+        let fwd = DenseForward::new(&model);
+        let tokens: Vec<usize> = (0..8).map(|_| rng.below(cfg.vocab)).collect();
+        let h = fwd.capture_hidden(&tokens);
+        assert_eq!(h.len(), cfg.n_layers);
+        for t in &h {
+            assert_eq!(t.shape, vec![8, cfg.d_ff]);
+        }
+    }
+
+    #[test]
+    fn causality_prefix_invariance() {
+        // logits at position t must not depend on tokens after t
+        let cfg = model_config("tiny").unwrap();
+        let mut rng = Rng::new(63);
+        let model = ModelWeights::random(&cfg, &mut rng);
+        let fwd = DenseForward::new(&model);
+        let a: Vec<usize> = (0..10).map(|_| rng.below(cfg.vocab)).collect();
+        let mut b = a.clone();
+        b[9] = (b[9] + 1) % cfg.vocab; // change only the last token
+        let la = fwd.logits(&a);
+        let lb = fwd.logits(&b);
+        for t in 0..9 {
+            for v in 0..cfg.vocab {
+                assert!(
+                    (la.at2(t, v) - lb.at2(t, v)).abs() < 1e-5,
+                    "position {t} leaked future tokens"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn moe_model_forward_runs_and_reports_stats() {
+        use crate::converter::{convert_model, ConvertOptions};
+        use crate::profiling::ActivationProfile;
+        let cfg = model_config("tiny").unwrap();
+        let mut rng = Rng::new(64);
+        let model = ModelWeights::random(&cfg, &mut rng);
+        let calib: Vec<usize> = (0..128).map(|_| rng.below(cfg.vocab)).collect();
+        let fwd = DenseForward::new(&model);
+        let hs = fwd.capture_hidden(&calib[..64.min(calib.len())]);
+        let profiles: Vec<ActivationProfile> =
+            hs.iter().map(|h| ActivationProfile::from_hidden(h, 16)).collect();
+        let spec = "S3A3E8".parse().unwrap();
+        let conv = convert_model(&model, &profiles, &spec, &ConvertOptions::default()).unwrap();
+        let fwd2 = DenseForward::new(&conv.model);
+        let tokens: Vec<usize> = (0..16).map(|_| rng.below(cfg.vocab)).collect();
+        let (logits, stats) = fwd2.logits_with_stats(&tokens);
+        assert_eq!(logits.shape, vec![16, cfg.vocab]);
+        assert_eq!(stats.moe.len(), cfg.n_layers);
+        for (_, s) in &stats.moe {
+            assert_eq!(s.tokens, 16);
+            assert_eq!(s.expert_tokens.iter().sum::<usize>(), 16 * 3);
+        }
+    }
+
+    #[test]
+    fn converted_model_logits_stay_close_to_dense() {
+        use crate::converter::{convert_model, ConvertOptions};
+        use crate::profiling::ActivationProfile;
+        let cfg = model_config("tiny").unwrap();
+        let mut rng = Rng::new(65);
+        let model = ModelWeights::random(&cfg, &mut rng);
+        let fwd = DenseForward::new(&model);
+        let calib: Vec<usize> = (0..64).map(|_| rng.below(cfg.vocab)).collect();
+        let hs = fwd.capture_hidden(&calib);
+        let profiles: Vec<ActivationProfile> =
+            hs.iter().map(|h| ActivationProfile::from_hidden(h, 32)).collect();
+        // nearly dense spec (only 1 of 6 routed experts off)
+        let spec = "S2A5E8".parse().unwrap();
+        let conv = convert_model(&model, &profiles, &spec, &ConvertOptions::default()).unwrap();
+        let tokens: Vec<usize> = (0..12).map(|_| rng.below(cfg.vocab)).collect();
+        let dense_logits = fwd.logits(&tokens);
+        let moe_logits = DenseForward::new(&conv.model).logits(&tokens);
+        // A random (untrained) model has near-uniform logits, so argmax
+        // is fragile; require both argmax agreement above chance AND a
+        // small relative logit perturbation.
+        let mut same = 0;
+        for t in 0..12 {
+            let am = |l: &Tensor| {
+                (0..cfg.vocab).max_by(|&a, &b| l.at2(t, a).partial_cmp(&l.at2(t, b)).unwrap()).unwrap()
+            };
+            if am(&dense_logits) == am(&moe_logits) {
+                same += 1;
+            }
+        }
+        assert!(same >= 4, "argmax agreement only {same}/12 (chance ≈ 0/12)");
+        let mut diff = dense_logits.clone();
+        for (a, b) in diff.data.iter_mut().zip(&moe_logits.data) {
+            *a -= b;
+        }
+        let rel = diff.norm() / dense_logits.norm();
+        assert!(rel < 0.5, "relative logit perturbation {rel} too large");
+    }
+}

@@ -1,0 +1,15 @@
+//! Evaluation: rust-reference forward pass, perplexity, choice-ranking
+//! task suites, self-consistency voting and the analytic FLOPs/MACs
+//! counter used by Tables 7/8.
+
+pub mod forward;
+pub mod ppl;
+pub mod tasks;
+pub mod flops;
+pub mod selfconsistency;
+
+pub use flops::{FlopsReport, count_flops};
+pub use forward::{DenseForward, ForwardStats};
+pub use ppl::perplexity;
+pub use selfconsistency::self_consistency_accuracy;
+pub use tasks::{choice_accuracy, TaskSuite};

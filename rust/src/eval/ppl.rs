@@ -1,0 +1,71 @@
+//! Perplexity evaluation over a token stream (Tables 3/4/10).
+
+use crate::eval::forward::DenseForward;
+use crate::model::ModelWeights;
+
+/// Negative log-likelihood of `tokens[1..]` given prefixes, summed.
+/// Returns (total_nll, token_count).
+pub fn nll(model: &ModelWeights, tokens: &[usize], seq_len: usize) -> (f64, usize) {
+    let fwd = DenseForward::new(model);
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for chunk in tokens.chunks(seq_len) {
+        if chunk.len() < 2 {
+            continue;
+        }
+        let logits = fwd.logits(chunk);
+        for t in 0..chunk.len() - 1 {
+            let row = logits.row(t);
+            let target = chunk[t + 1];
+            // log-softmax
+            let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let lse: f32 = row.iter().map(|&v| (v - max).exp()).sum::<f32>().ln() + max;
+            total += (lse - row[target]) as f64;
+            count += 1;
+        }
+    }
+    (total, count)
+}
+
+/// Perplexity `exp(mean NLL)` over a corpus, chunked at `seq_len`.
+pub fn perplexity(model: &ModelWeights, tokens: &[usize], seq_len: usize) -> f64 {
+    let (total, count) = nll(model, tokens, seq_len);
+    if count == 0 {
+        return f64::NAN;
+    }
+    (total / count as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::model_config;
+    use crate::util::Rng;
+
+    #[test]
+    fn random_model_ppl_near_vocab() {
+        // An untrained model's PPL should be near |vocab| on random data.
+        let cfg = model_config("tiny").unwrap();
+        let mut rng = Rng::new(71);
+        let model = ModelWeights::random(&cfg, &mut rng);
+        let tokens: Vec<usize> = (0..256).map(|_| rng.below(cfg.vocab)).collect();
+        let ppl = perplexity(&model, &tokens, 64);
+        assert!(ppl.is_finite());
+        assert!(
+            ppl > cfg.vocab as f64 * 0.3 && ppl < cfg.vocab as f64 * 3.0,
+            "ppl {ppl} not near vocab {}",
+            cfg.vocab
+        );
+    }
+
+    #[test]
+    fn short_chunks_are_skipped() {
+        let cfg = model_config("tiny").unwrap();
+        let mut rng = Rng::new(72);
+        let model = ModelWeights::random(&cfg, &mut rng);
+        let (nll_v, count) = nll(&model, &[1], 64);
+        assert_eq!(count, 0);
+        assert_eq!(nll_v, 0.0);
+        assert!(perplexity(&model, &[1], 64).is_nan());
+    }
+}

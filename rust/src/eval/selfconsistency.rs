@@ -1,0 +1,93 @@
+//! k-sample self-consistency (Table 11): sample the model's choice `k`
+//! times with temperature over the choice posteriors and majority-vote.
+//!
+//! For choice tasks the sampling distribution is the softmax of
+//! length-normalized choice log-likelihoods at temperature `t`; k = 1
+//! with t = 0 degenerates to greedy ranking (the Table 1 protocol).
+
+use crate::data::ChoiceTask;
+use crate::eval::tasks::{completion_loglik, TaskSuite};
+use crate::model::ModelWeights;
+use crate::util::Rng;
+
+/// Accuracy under k-sample majority voting.
+pub fn self_consistency_accuracy(
+    model: &ModelWeights,
+    suite: &TaskSuite,
+    k: usize,
+    temperature: f32,
+    seed: u64,
+) -> f64 {
+    if suite.tasks.is_empty() {
+        return 0.0;
+    }
+    let mut rng = Rng::new(seed);
+    let mut correct = 0usize;
+    for task in &suite.tasks {
+        if vote(model, task, k, temperature, &mut rng) == task.answer {
+            correct += 1;
+        }
+    }
+    correct as f64 / suite.tasks.len() as f64
+}
+
+fn vote(model: &ModelWeights, task: &ChoiceTask, k: usize, temperature: f32, rng: &mut Rng) -> usize {
+    let lls: Vec<f32> = task
+        .choices
+        .iter()
+        .map(|c| (completion_loglik(model, &task.context, c) / c.len().max(1) as f64) as f32)
+        .collect();
+    if k <= 1 || temperature <= 0.0 {
+        return argmax(&lls);
+    }
+    let mut counts = vec![0usize; task.choices.len()];
+    for _ in 0..k {
+        counts[rng.sample_logits(&lls, temperature)] += 1;
+    }
+    argmax(&counts.iter().map(|&c| c as f32).collect::<Vec<_>>())
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for i in 1..xs.len() {
+        if xs[i] > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tasks_gen::{gen_choice_tasks, TaskFamily};
+    use crate::model::model_config;
+
+    #[test]
+    fn k1_matches_greedy() {
+        let cfg = model_config("tiny").unwrap();
+        let mut rng = Rng::new(101);
+        let model = ModelWeights::random(&cfg, &mut rng);
+        let suite = TaskSuite {
+            name: "p".into(),
+            tasks: gen_choice_tasks(TaskFamily::Pattern, 15, 2),
+        };
+        let greedy = crate::eval::tasks::choice_accuracy(&model, &suite);
+        let sc = self_consistency_accuracy(&model, &suite, 1, 0.7, 0);
+        assert!((greedy - sc).abs() < 1e-12);
+    }
+
+    #[test]
+    fn voting_is_deterministic_given_seed() {
+        let cfg = model_config("tiny").unwrap();
+        let mut rng = Rng::new(102);
+        let model = ModelWeights::random(&cfg, &mut rng);
+        let suite = TaskSuite {
+            name: "a".into(),
+            tasks: gen_choice_tasks(TaskFamily::Arith, 10, 3),
+        };
+        let a = self_consistency_accuracy(&model, &suite, 5, 1.0, 42);
+        let b = self_consistency_accuracy(&model, &suite, 5, 1.0, 42);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,111 @@
+//! Choice-ranking task evaluation (the Table 1/2 protocol): score each
+//! candidate completion by the model's total log-likelihood of its
+//! tokens given the context, pick the argmax, report accuracy.
+
+use crate::data::{encode, ChoiceTask};
+use crate::eval::forward::DenseForward;
+use crate::model::ModelWeights;
+
+/// A named set of choice tasks (one "benchmark").
+#[derive(Clone, Debug)]
+pub struct TaskSuite {
+    pub name: String,
+    pub tasks: Vec<ChoiceTask>,
+}
+
+/// Log-likelihood of `completion` following `context`.
+pub fn completion_loglik(model: &ModelWeights, context: &str, completion: &str) -> f64 {
+    let ctx = encode(context);
+    let comp = encode(completion);
+    let mut full = ctx.clone();
+    full.extend_from_slice(&comp);
+    let max_seq = model.config.max_seq;
+    if full.len() > max_seq {
+        // keep the suffix (completion must stay intact)
+        full.drain(..full.len() - max_seq);
+    }
+    let fwd = DenseForward::new(model);
+    let logits = fwd.logits(&full);
+    let comp_start = full.len() - comp.len();
+    let mut ll = 0.0f64;
+    for t in comp_start..full.len() {
+        // position t is predicted by logits at t-1
+        let row = logits.row(t - 1);
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse: f32 = row.iter().map(|&v| (v - max).exp()).sum::<f32>().ln() + max;
+        ll += (row[full[t]] - lse) as f64;
+    }
+    ll
+}
+
+/// Greedy choice-ranking accuracy over a suite.
+pub fn choice_accuracy(model: &ModelWeights, suite: &TaskSuite) -> f64 {
+    if suite.tasks.is_empty() {
+        return 0.0;
+    }
+    let mut correct = 0usize;
+    for task in &suite.tasks {
+        let pick = best_choice(model, task);
+        if pick == task.answer {
+            correct += 1;
+        }
+    }
+    correct as f64 / suite.tasks.len() as f64
+}
+
+/// Argmax-likelihood choice for one task.
+pub fn best_choice(model: &ModelWeights, task: &ChoiceTask) -> usize {
+    let mut best = 0usize;
+    let mut best_ll = f64::NEG_INFINITY;
+    for (i, choice) in task.choices.iter().enumerate() {
+        // length-normalized loglik, as lm-eval does for acc_norm
+        let ll = completion_loglik(model, &task.context, choice)
+            / choice.len().max(1) as f64;
+        if ll > best_ll {
+            best_ll = ll;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tasks_gen::{gen_choice_tasks, TaskFamily};
+    use crate::model::model_config;
+    use crate::util::Rng;
+
+    #[test]
+    fn random_model_scores_near_chance() {
+        let cfg = model_config("tiny").unwrap();
+        let mut rng = Rng::new(81);
+        let model = crate::model::ModelWeights::random(&cfg, &mut rng);
+        let suite = TaskSuite {
+            name: "arith".into(),
+            tasks: gen_choice_tasks(TaskFamily::Arith, 40, 1),
+        };
+        let acc = choice_accuracy(&model, &suite);
+        assert!((0.0..=0.65).contains(&acc), "untrained acc {acc} suspiciously high");
+    }
+
+    #[test]
+    fn loglik_is_negative_and_finite() {
+        let cfg = model_config("tiny").unwrap();
+        let mut rng = Rng::new(82);
+        let model = crate::model::ModelWeights::random(&cfg, &mut rng);
+        let ll = completion_loglik(&model, "12+34=", "46;");
+        assert!(ll.is_finite());
+        assert!(ll < 0.0);
+    }
+
+    #[test]
+    fn long_context_truncates_from_left() {
+        let cfg = model_config("tiny").unwrap();
+        let mut rng = Rng::new(83);
+        let model = crate::model::ModelWeights::random(&cfg, &mut rng);
+        let ctx = "x".repeat(cfg.max_seq + 50);
+        let ll = completion_loglik(&model, &ctx, "ab");
+        assert!(ll.is_finite());
+    }
+}

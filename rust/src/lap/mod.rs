@@ -1,0 +1,284 @@
+//! Linear Assignment Problem solvers.
+//!
+//! The balanced-clustering step of CMoE (§A.3) assigns `N_r·m` neurons to
+//! `N_r` clusters of exactly `m` slots each by replicating each cluster
+//! column `m` times and solving the resulting square LAP with the
+//! **Jonker–Volgenant** shortest-augmenting-path algorithm
+//! (Jonker & Volgenant 1988), `O(n³)` worst case.
+//!
+//! [`solve`] is the JV solver (dual potentials + Dijkstra-style
+//! augmentation, the same scheme scipy's `linear_sum_assignment` uses);
+//! [`solve_greedy`] is a fast approximate fallback used by ablations.
+
+/// Cost matrix in row-major order, `nr × nc` with `nr <= nc`.
+#[derive(Clone, Debug)]
+pub struct CostMatrix {
+    pub nr: usize,
+    pub nc: usize,
+    pub cost: Vec<f64>,
+}
+
+impl CostMatrix {
+    pub fn new(nr: usize, nc: usize) -> Self {
+        assert!(nr <= nc, "LAP requires rows <= cols (got {nr}x{nc})");
+        CostMatrix { nr, nc, cost: vec![0.0; nr * nc] }
+    }
+
+    pub fn from_fn(nr: usize, nc: usize, f: impl Fn(usize, usize) -> f64) -> Self {
+        let mut m = CostMatrix::new(nr, nc);
+        for i in 0..nr {
+            for j in 0..nc {
+                m.cost[i * nc + j] = f(i, j);
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.cost[i * self.nc + j]
+    }
+}
+
+/// Result: `row_to_col[i]` is the column assigned to row `i`;
+/// `total` is the summed cost.
+#[derive(Clone, Debug)]
+pub struct Assignment {
+    pub row_to_col: Vec<usize>,
+    pub total: f64,
+}
+
+/// Exact LAP via shortest augmenting paths with dual potentials.
+///
+/// For each row we grow a Dijkstra tree over columns until reaching an
+/// unassigned column, then augment along the path and update potentials.
+/// Costs may be any finite f64.
+pub fn solve(m: &CostMatrix) -> Assignment {
+    let (nr, nc) = (m.nr, m.nc);
+    const UNASSIGNED: usize = usize::MAX;
+    // col j -> row assigned to it
+    let mut col_to_row = vec![UNASSIGNED; nc];
+    let mut row_to_col = vec![UNASSIGNED; nr];
+    // dual potential on columns
+    let mut v = vec![0.0f64; nc];
+
+    // scratch
+    let mut shortest = vec![0.0f64; nc];
+    let mut prev_col = vec![UNASSIGNED; nc];
+    let mut done = vec![false; nc];
+
+    for cur_row in 0..nr {
+        // Dijkstra from cur_row over the reduced-cost graph
+        shortest.iter_mut().for_each(|x| *x = f64::INFINITY);
+        done.iter_mut().for_each(|x| *x = false);
+        prev_col.iter_mut().for_each(|x| *x = UNASSIGNED);
+
+        let mut min_dist = 0.0f64;
+        let mut i = cur_row; // row being scanned
+        let mut h = 0.0f64; // reduced cost of the matched edge into row i
+        let mut sink = UNASSIGNED;
+        // path bookkeeping: prev_col[j] = column scanned before j on path
+        let mut last_col = UNASSIGNED;
+
+        while sink == UNASSIGNED {
+            // relax edges from row i: dist = min_dist + (c[i,j]-v[j]) - h,
+            // where h = c[i,last_col] - v[last_col] - min_dist (JV 1987)
+            let base = i * nc;
+            for j in 0..nc {
+                if done[j] {
+                    continue;
+                }
+                let red = m.cost[base + j] - v[j] - h;
+                if red < shortest[j] {
+                    shortest[j] = red;
+                    prev_col[j] = last_col;
+                }
+            }
+            // pick closest not-done column
+            let mut best = UNASSIGNED;
+            let mut best_d = f64::INFINITY;
+            for j in 0..nc {
+                if !done[j] && shortest[j] < best_d {
+                    best_d = shortest[j];
+                    best = j;
+                }
+            }
+            debug_assert!(best != UNASSIGNED, "LAP: no augmenting path (non-finite costs?)");
+            min_dist = best_d;
+            done[best] = true;
+            last_col = best;
+            if col_to_row[best] == UNASSIGNED {
+                sink = best;
+            } else {
+                i = col_to_row[best];
+                h = m.cost[i * nc + best] - v[best] - min_dist;
+            }
+        }
+
+        // update potentials for scanned columns
+        for j in 0..nc {
+            if done[j] && j != sink {
+                v[j] += shortest[j] - min_dist;
+            }
+        }
+
+        // augment: walk back via prev_col
+        let mut j = sink;
+        loop {
+            let pc = prev_col[j];
+            let r = if pc == UNASSIGNED { cur_row } else { col_to_row[pc] };
+            col_to_row[j] = r;
+            row_to_col[r] = j;
+            if pc == UNASSIGNED {
+                break;
+            }
+            j = pc;
+        }
+    }
+
+    let total = (0..nr).map(|i| m.at(i, row_to_col[i])).sum();
+    Assignment { row_to_col, total }
+}
+
+/// Greedy approximate LAP: repeatedly take the globally cheapest
+/// (row, col) among unassigned. `O(nr·nc·log)`-ish via sort.
+pub fn solve_greedy(m: &CostMatrix) -> Assignment {
+    let (nr, nc) = (m.nr, m.nc);
+    let mut edges: Vec<(usize, usize)> = (0..nr)
+        .flat_map(|i| (0..nc).map(move |j| (i, j)))
+        .collect();
+    edges.sort_by(|&(ai, aj), &(bi, bj)| m.at(ai, aj).partial_cmp(&m.at(bi, bj)).unwrap());
+    let mut row_done = vec![false; nr];
+    let mut col_done = vec![false; nc];
+    let mut row_to_col = vec![usize::MAX; nr];
+    let mut assigned = 0;
+    for (i, j) in edges {
+        if !row_done[i] && !col_done[j] {
+            row_done[i] = true;
+            col_done[j] = true;
+            row_to_col[i] = j;
+            assigned += 1;
+            if assigned == nr {
+                break;
+            }
+        }
+    }
+    let total = (0..nr).map(|i| m.at(i, row_to_col[i])).sum();
+    Assignment { row_to_col, total }
+}
+
+/// Brute-force optimal assignment for tests (square-ish, nr <= 9).
+#[cfg(test)]
+pub fn solve_brute(m: &CostMatrix) -> Assignment {
+    fn rec(
+        m: &CostMatrix,
+        row: usize,
+        used: &mut Vec<bool>,
+        cur: f64,
+        cur_asg: &mut Vec<usize>,
+        best: &mut (f64, Vec<usize>),
+    ) {
+        if row == m.nr {
+            if cur < best.0 {
+                *best = (cur, cur_asg.clone());
+            }
+            return;
+        }
+        for j in 0..m.nc {
+            if !used[j] {
+                used[j] = true;
+                cur_asg.push(j);
+                rec(m, row + 1, used, cur + m.at(row, j), cur_asg, best);
+                cur_asg.pop();
+                used[j] = false;
+            }
+        }
+    }
+    let mut best = (f64::INFINITY, vec![]);
+    rec(m, 0, &mut vec![false; m.nc], 0.0, &mut Vec::new(), &mut best);
+    Assignment { row_to_col: best.1, total: best.0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Config};
+
+    fn assert_valid(a: &Assignment, nr: usize) {
+        assert_eq!(a.row_to_col.len(), nr);
+        let mut seen = std::collections::HashSet::new();
+        for &c in &a.row_to_col {
+            assert!(seen.insert(c), "column {c} assigned twice");
+        }
+    }
+
+    #[test]
+    fn known_small_case() {
+        // classic 3x3
+        let m = CostMatrix::from_fn(3, 3, |i, j| [[4., 1., 3.], [2., 0., 5.], [3., 2., 2.]][i][j]);
+        let a = solve(&m);
+        assert_valid(&a, 3);
+        assert!((a.total - 5.0).abs() < 1e-9, "total={}", a.total); // 1 + 2 + 2
+    }
+
+    #[test]
+    fn rectangular_case() {
+        let m = CostMatrix::from_fn(2, 4, |i, j| ((i * 4 + j) as f64 * 7.0) % 5.0);
+        let a = solve(&m);
+        assert_valid(&a, 2);
+        let b = solve_brute(&m);
+        assert!((a.total - b.total).abs() < 1e-9);
+    }
+
+    #[test]
+    fn matches_brute_force_on_random() {
+        check("jv-vs-brute", Config { cases: 60, max_size: 7, ..Default::default() }, |rng, size| {
+            let nr = rng.range(1, size + 1);
+            let nc = rng.range(nr, size + 2);
+            let mut vals = vec![0.0f64; nr * nc];
+            for v in vals.iter_mut() {
+                *v = (rng.below(1000) as f64) / 100.0;
+            }
+            let m = CostMatrix { nr, nc, cost: vals };
+            let jv = solve(&m);
+            let bf = solve_brute(&m);
+            crate::prop_assert!(
+                (jv.total - bf.total).abs() < 1e-9,
+                "jv {} vs brute {} on {nr}x{nc}",
+                jv.total,
+                bf.total
+            );
+            let mut seen = std::collections::HashSet::new();
+            for &c in &jv.row_to_col {
+                crate::prop_assert!(seen.insert(c), "dup column");
+            }
+            let _ = m;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn negative_costs_ok() {
+        let m = CostMatrix::from_fn(3, 3, |i, j| -((i + 1) as f64) * ((j + 1) as f64));
+        let a = solve(&m);
+        let b = solve_brute(&m);
+        assert!((a.total - b.total).abs() < 1e-9);
+    }
+
+    #[test]
+    fn greedy_is_valid_and_close() {
+        let m = CostMatrix::from_fn(6, 6, |i, j| ((i * 31 + j * 17) % 13) as f64);
+        let g = solve_greedy(&m);
+        assert_valid(&g, 6);
+        let opt = solve(&m);
+        assert!(g.total >= opt.total - 1e-9, "greedy beat optimal?!");
+    }
+
+    #[test]
+    fn identity_costs_prefer_diagonal() {
+        let m = CostMatrix::from_fn(4, 4, |i, j| if i == j { 0.0 } else { 10.0 });
+        let a = solve(&m);
+        assert_eq!(a.row_to_col, vec![0, 1, 2, 3]);
+        assert_eq!(a.total, 0.0);
+    }
+}

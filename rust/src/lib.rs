@@ -1,0 +1,78 @@
+//! # CMoE — Analytical FFN-to-MoE Restructuring
+//!
+//! A production-oriented reproduction of *"Analytical FFN-to-MoE
+//! Restructuring via Activation Pattern Analysis"* (the CMoE system):
+//! a post-training framework that converts dense SwiGLU FFN layers into
+//! sparse Mixture-of-Experts layers using only a tiny calibration set,
+//! with an **analytical router** derived from representative-neuron
+//! statistics — no router training required.
+//!
+//! ## Architecture (three layers)
+//!
+//! * **L3 (this crate)** — the coordinator: conversion pipeline
+//!   ([`converter`]), baselines ([`baselines`]), serving engine
+//!   ([`serving`]) with continuous batching and capacity-factor expert
+//!   dispatch, evaluation ([`eval`]) and the bench harness
+//!   ([`bench_harness`]) that regenerates every table/figure of the paper.
+//! * **L2 (python/compile/model.py)** — the JAX transformer, lowered once
+//!   to HLO text artifacts (`make artifacts`).
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the SwiGLU /
+//!   grouped-expert hot paths, lowered inside the same HLO.
+//!
+//! Python never runs on the request path; [`runtime`] loads the AOT
+//! artifacts through the PJRT C API (`xla` crate) and executes them.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use cmoe::model::{ModelWeights, MoeSpec};
+//! use cmoe::converter::{ConvertOptions, convert_model};
+//! use cmoe::profiling::ActivationProfile;
+//!
+//! let weights = ModelWeights::load("artifacts/small.cmw").unwrap();
+//! let spec: MoeSpec = "S3A3E8".parse().unwrap();
+//! // calibration hidden states are captured via eval::forward or runtime
+//! # let profiles: Vec<ActivationProfile> = vec![];
+//! let result = convert_model(&weights, &profiles, &spec, &ConvertOptions::default()).unwrap();
+//! println!("converted {} layers in {:?}", result.model.layers.len(), result.report.total);
+//! ```
+
+pub mod util;
+pub mod tensor;
+pub mod lap;
+pub mod clustering;
+pub mod model;
+pub mod profiling;
+pub mod converter;
+pub mod baselines;
+pub mod moe;
+pub mod runtime;
+pub mod serving;
+pub mod eval;
+pub mod quant;
+pub mod data;
+pub mod bench_harness;
+
+#[cfg(test)]
+pub(crate) mod testutil;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Version string reported by the CLI.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// Default location of AOT artifacts relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
+
+/// Artifact directory for tests: `$CARGO_MANIFEST_DIR/artifacts` when it
+/// holds a manifest, else `None` (runtime-dependent tests self-skip so a
+/// fresh clone can still `cargo test` before `make artifacts`).
+pub fn test_artifact_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(DEFAULT_ARTIFACT_DIR);
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        None
+    }
+}

@@ -1,0 +1,272 @@
+//! `cmoe` — the CLI for the CMoE reproduction.
+//!
+//! ```text
+//! cmoe convert  --model artifacts/small.cmw --spec S3A3E8 --out converted.cmw [--finetune 2048]
+//! cmoe profile  --model artifacts/small.cmw [--domain markov] [--ka 10]
+//! cmoe eval     --model <cmw> [--ppl markov,arith]
+//! cmoe serve    --model <cmw> --mode dense|moe|orchestrated [--spec S3A3E8] --requests 32
+//! cmoe bench    --exp table1|fig2|all [--out results/]
+//! cmoe info     # artifact + zoo inventory
+//! ```
+
+use anyhow::{bail, Context, Result};
+use cmoe::bench_harness::{self, common::Ctx};
+use cmoe::data::corpus::Domain;
+use cmoe::model::{ModelWeights, MoeSpec};
+use cmoe::util::argparse::Args;
+
+fn main() {
+    let args = Args::from_env(&["verbose", "no-finetune"]);
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn artifact_dir(args: &Args) -> String {
+    args.get_or("artifacts", cmoe::DEFAULT_ARTIFACT_DIR).to_string()
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("convert") => cmd_convert(args),
+        Some("profile") => cmd_profile(args),
+        Some("eval") => cmd_eval(args),
+        Some("serve") => cmd_serve(args),
+        Some("bench") => cmd_bench(args),
+        Some("info") => cmd_info(args),
+        Some(other) => bail!("unknown subcommand '{other}' (try: convert profile eval serve bench info)"),
+        None => {
+            println!("cmoe {} — analytical FFN-to-MoE restructuring", cmoe::VERSION);
+            println!("subcommands: convert profile eval serve bench info");
+            Ok(())
+        }
+    }
+}
+
+fn load_model(args: &Args) -> Result<ModelWeights> {
+    let default = format!("{}/small.cmw", artifact_dir(args));
+    let path = args.get_or("model", &default);
+    ModelWeights::load(path).with_context(|| format!("loading model from {path}"))
+}
+
+fn profiles_for(
+    model: &ModelWeights,
+    domain: Domain,
+    examples: usize,
+    ka: usize,
+) -> Vec<cmoe::profiling::ActivationProfile> {
+    let text = cmoe::data::corpus::gen_corpus(&cmoe::data::corpus::CorpusSpec {
+        domain,
+        bytes: examples * 256 + 64,
+        seed: 0xC0DE ^ 0xCA11,
+    });
+    let mut toks = cmoe::data::encode(&text);
+    toks.truncate(examples * 256);
+    cmoe::profiling::profile_dense_model(model, &toks, 256, ka)
+}
+
+fn cmd_convert(args: &Args) -> Result<()> {
+    let model = load_model(args)?;
+    let spec: MoeSpec = args.get_or("spec", "S3A3E8").parse()?;
+    let domain = Domain::parse(args.get_or("domain", "markov")).context("bad --domain")?;
+    let ka = args.get_usize("ka", 10);
+    let examples = args.get_usize("calib-examples", 8);
+    let out = args.get_or("out", "converted.cmw");
+
+    println!("profiling {} examples ({:?}, K_a={ka})…", examples, domain);
+    let profiles = profiles_for(&model, domain, examples, ka);
+    println!("converting to {spec}…");
+    let conv = cmoe::converter::convert_model(
+        &model,
+        &profiles,
+        &spec,
+        &cmoe::converter::ConvertOptions::default(),
+    )?;
+    println!(
+        "converted {} layers in {:?} (shared {:?} cluster {:?} router {:?} slice {:?})",
+        conv.report.layers,
+        conv.report.total,
+        conv.report.shared_select,
+        conv.report.clustering,
+        conv.report.router,
+        conv.report.slicing
+    );
+    let mut m = conv.model;
+    let ft = args.get_usize("finetune", 2048);
+    if ft > 0 && !args.has("no-finetune") {
+        println!("fine-tuning gates on {ft} samples…");
+        let text = cmoe::data::corpus::gen_corpus(&cmoe::data::corpus::CorpusSpec {
+            domain,
+            bytes: ft * 2,
+            seed: 0xC0DE ^ 0xCA11,
+        });
+        let toks = cmoe::data::encode(&text);
+        cmoe::bench_harness::common::finetune_model(&mut m, &model, &toks, ft)?;
+    }
+    m.save(out)?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let model = load_model(args)?;
+    let domain = Domain::parse(args.get_or("domain", "markov")).context("bad --domain")?;
+    let ka = args.get_usize("ka", 10);
+    let profiles = profiles_for(&model, domain, args.get_usize("calib-examples", 8), ka);
+    for (l, p) in profiles.iter().enumerate() {
+        println!(
+            "layer {l}: q={} K_a={} bimodality={:.3} sparsity(|h|<0.05)={:.3}",
+            p.q,
+            p.k_a,
+            p.rate_bimodality(),
+            p.sparsity_fraction(0.05)
+        );
+    }
+    if args.has("verbose") {
+        println!("\nactivation-rate histogram (layer 0):");
+        println!("{}", profiles[0].rate_histogram(20).ascii(50));
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let model = load_model(args)?;
+    let suites = [
+        cmoe::eval::tasks::TaskSuite {
+            name: "Knowledge".into(),
+            tasks: cmoe::data::gen_choice_tasks(
+                cmoe::data::tasks_gen::TaskFamily::Knowledge,
+                80,
+                0xC0DE ^ 1,
+            ),
+        },
+        cmoe::eval::tasks::TaskSuite {
+            name: "Arith".into(),
+            tasks: cmoe::data::gen_choice_tasks(
+                cmoe::data::tasks_gen::TaskFamily::Arith,
+                80,
+                0xC0DE ^ 2,
+            ),
+        },
+        cmoe::eval::tasks::TaskSuite {
+            name: "Pattern".into(),
+            tasks: cmoe::data::gen_choice_tasks(
+                cmoe::data::tasks_gen::TaskFamily::Pattern,
+                80,
+                0xC0DE ^ 3,
+            ),
+        },
+    ];
+    for s in &suites {
+        println!("{}: {:.2}%", s.name, cmoe::eval::choice_accuracy(&model, s) * 100.0);
+    }
+    for name in args.get_or("ppl", "markov,arith").split(',') {
+        let Some(domain) = Domain::parse(name) else { continue };
+        let text = cmoe::data::corpus::gen_corpus(&cmoe::data::corpus::CorpusSpec {
+            domain,
+            bytes: 8 * 1024 + 64,
+            seed: 0xC0DE ^ 0xE7A1,
+        });
+        let toks = cmoe::data::encode(&text);
+        println!("PPL {}: {:.3}", name, cmoe::eval::perplexity(&model, &toks, 256));
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use cmoe::serving::{Engine, EngineConfig, ExecMode, GenParams, Request};
+    let model = load_model(args)?;
+    let rt = std::sync::Arc::new(cmoe::runtime::XlaRuntime::load(artifact_dir(args))?);
+    let model_name = args.get_or("model-name", "small").to_string();
+    let kv_len = args.get_usize("kv-len", 256);
+    let mode = match args.get_or("mode", "dense") {
+        "dense" => ExecMode::Dense,
+        "moe" => ExecMode::MoeMonolithic,
+        "orchestrated" => ExecMode::MoeOrchestrated,
+        m => bail!("unknown --mode {m}"),
+    };
+    let spec: Option<MoeSpec> = args.get("spec").map(|s| s.parse()).transpose()?;
+    let mut cfg = match mode {
+        ExecMode::Dense => EngineConfig::dense(&model_name, kv_len),
+        m => EngineConfig::moe(
+            &model_name,
+            kv_len,
+            spec.context("MoE modes need --spec")?,
+            m,
+        ),
+    };
+    let batch = args.get_usize("batch", 8);
+    cfg.batcher.buckets = vec![batch];
+    cfg.batcher.max_wait = std::time::Duration::ZERO;
+    let engine = Engine::new(rt, model, cfg)?;
+
+    let n = args.get_usize("requests", 16);
+    let new_tokens = args.get_usize("max-new-tokens", 32);
+    let reqs: Vec<Request> = (0..n)
+        .map(|i| {
+            let prompt_text = cmoe::data::corpus::gen_corpus(&cmoe::data::corpus::CorpusSpec {
+                domain: Domain::Arith,
+                bytes: 16,
+                seed: i as u64,
+            });
+            Request::new(
+                i as u64,
+                cmoe::data::encode(&prompt_text),
+                GenParams {
+                    max_new_tokens: new_tokens,
+                    temperature: args.get_f64("temperature", 0.0) as f32,
+                    seed: i as u64,
+                    stop_token: None,
+                },
+            )
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let results = engine.run_queue(reqs)?;
+    let elapsed = t0.elapsed();
+    for r in results.iter().take(4) {
+        println!("req {} -> {:?}", r.id, cmoe::data::decode(&r.tokens));
+    }
+    let m = engine.metrics.lock().unwrap();
+    println!("{} requests in {:?} — {}", results.len(), elapsed, m.summary());
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let exp = args.get_or("exp", "all").to_string();
+    let out = args.get_or("out", "results").to_string();
+    let mut ctx = Ctx::new(artifact_dir(args), out);
+    let tables = bench_harness::run(&exp, &mut ctx)?;
+    for t in &tables {
+        println!("\n{}", t.render());
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    println!("model zoo:");
+    for &(name, vocab, d, l, h, dff, seq) in cmoe::model::MODEL_ZOO {
+        println!("  {name}: vocab={vocab} d={d} layers={l} heads={h} d_ff={dff} max_seq={seq}");
+    }
+    let dir = artifact_dir(args);
+    match cmoe::runtime::Manifest::load(std::path::Path::new(&dir).join("manifest.json").as_path())
+    {
+        Ok(m) => {
+            println!("artifacts in {dir}: {}", m.artifacts.len());
+            if args.has("verbose") {
+                let mut names: Vec<&String> = m.artifacts.keys().collect();
+                names.sort();
+                for n in names {
+                    println!("  {n}");
+                }
+            }
+        }
+        Err(_) => println!("no artifacts in {dir} (run `make artifacts`)"),
+    }
+    Ok(())
+}

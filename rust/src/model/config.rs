@@ -1,0 +1,200 @@
+//! Transformer and MoE configuration types.
+
+use anyhow::{bail, Result};
+use std::fmt;
+use std::str::FromStr;
+
+/// Architecture hyperparameters of a LLaMA-style decoder-only model
+/// (RMSNorm, rotary-free learned positions for simplicity, SwiGLU FFN).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TransformerConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    /// FFN hidden dimension `d_h` (the dimension CMoE partitions).
+    pub d_ff: usize,
+    /// Maximum sequence length artifacts are compiled for.
+    pub max_seq: usize,
+}
+
+impl TransformerConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Total parameter count (weights only, tied unembedding not counted).
+    pub fn param_count(&self) -> usize {
+        let attn = 4 * self.d_model * self.d_model;
+        let ffn = 3 * self.d_model * self.d_ff;
+        let norms = 2 * self.d_model;
+        self.vocab * self.d_model                 // embed
+            + self.n_layers * (attn + ffn + norms)
+            + self.d_model                        // final norm
+            + self.vocab * self.d_model // unembed
+            + self.max_seq * self.d_model // learned positions
+    }
+
+    /// Analytic FLOPs for one token of dense forward (2·MACs).
+    pub fn flops_per_token_dense(&self) -> f64 {
+        let attn_proj = 4.0 * (self.d_model * self.d_model) as f64;
+        let ffn = 3.0 * (self.d_model * self.d_ff) as f64;
+        let logits = (self.d_model * self.vocab) as f64;
+        2.0 * (self.n_layers as f64 * (attn_proj + ffn) + logits)
+    }
+}
+
+/// MoE expert layout written `SxAyEz`: `x` shared experts + `y` active
+/// routed experts out of `z` total experts (so `z - x` routed total).
+///
+/// The paper's default is `S3A3E8` at 25% sparsity: 3 shared + 3-of-5
+/// routed active → 6/8 of neurons active per token.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct MoeSpec {
+    /// Number of shared (always-active) experts `N_s`.
+    pub shared: usize,
+    /// Number of routed experts activated per token `N_k`.
+    pub active: usize,
+    /// Total experts `N = N_s + N_r`.
+    pub total: usize,
+}
+
+impl MoeSpec {
+    pub fn new(shared: usize, active: usize, total: usize) -> Result<Self> {
+        let spec = MoeSpec { shared, active, total };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.total == 0 {
+            bail!("MoeSpec: total experts must be > 0");
+        }
+        if self.shared >= self.total {
+            bail!("MoeSpec: shared ({}) must be < total ({})", self.shared, self.total);
+        }
+        if self.active > self.routed() {
+            bail!(
+                "MoeSpec: active ({}) exceeds routed experts ({})",
+                self.active,
+                self.routed()
+            );
+        }
+        Ok(())
+    }
+
+    /// Number of routed experts `N_r = N - N_s`.
+    pub fn routed(&self) -> usize {
+        self.total - self.shared
+    }
+
+    /// Fraction of FFN neurons *inactive* per token — the paper's
+    /// "sparsity" (e.g. S3A3E8 → 1 - 6/8 = 25%).
+    pub fn sparsity(&self) -> f64 {
+        1.0 - (self.shared + self.active) as f64 / self.total as f64
+    }
+
+    /// Expert size `m = d_h / N`; errors if `N ∤ d_h`.
+    pub fn expert_size(&self, d_ff: usize) -> Result<usize> {
+        if d_ff % self.total != 0 {
+            bail!("expert count {} does not divide d_ff {}", self.total, d_ff);
+        }
+        Ok(d_ff / self.total)
+    }
+
+    /// FFN FLOPs multiplier vs dense (active fraction of neurons, plus
+    /// the router's own `2·d·N_r` MACs folded in by the caller).
+    pub fn active_fraction(&self) -> f64 {
+        (self.shared + self.active) as f64 / self.total as f64
+    }
+}
+
+impl FromStr for MoeSpec {
+    type Err = anyhow::Error;
+
+    /// Parse `"S3A3E8"` (case-insensitive).
+    fn from_str(s: &str) -> Result<Self> {
+        let up = s.to_ascii_uppercase();
+        let bytes = up.as_bytes();
+        if bytes.first() != Some(&b'S') {
+            bail!("MoeSpec must start with 'S': {s}");
+        }
+        let a_pos = up.find('A').ok_or_else(|| anyhow::anyhow!("MoeSpec missing 'A': {s}"))?;
+        let e_pos = up.find('E').ok_or_else(|| anyhow::anyhow!("MoeSpec missing 'E': {s}"))?;
+        if !(1 < a_pos && a_pos < e_pos) {
+            bail!("malformed MoeSpec: {s}");
+        }
+        let shared: usize = up[1..a_pos].parse()?;
+        let active: usize = up[a_pos + 1..e_pos].parse()?;
+        let total: usize = up[e_pos + 1..].parse()?;
+        MoeSpec::new(shared, active, total)
+    }
+}
+
+impl fmt::Display for MoeSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "S{}A{}E{}", self.shared, self.active, self.total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_display_roundtrip() {
+        for s in ["S3A3E8", "S1A5E8", "S6A6E16", "S3A9E16", "S2A4E8", "S4A8E16"] {
+            let spec: MoeSpec = s.parse().unwrap();
+            assert_eq!(spec.to_string(), s);
+        }
+    }
+
+    #[test]
+    fn paper_default_sparsity() {
+        let spec: MoeSpec = "S3A3E8".parse().unwrap();
+        assert_eq!(spec.routed(), 5);
+        assert!((spec.sparsity() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table9_configs_all_25pct() {
+        for s in ["S1A5E8", "S3A3E8", "S2A4E8", "S4A8E16", "S6A6E16", "S3A9E16"] {
+            let spec: MoeSpec = s.parse().unwrap();
+            assert!((spec.sparsity() - 0.25).abs() < 1e-12, "{s}: {}", spec.sparsity());
+        }
+    }
+
+    #[test]
+    fn invalid_specs_rejected() {
+        assert!("S8A1E8".parse::<MoeSpec>().is_err()); // shared == total
+        assert!("S3A6E8".parse::<MoeSpec>().is_err()); // active > routed
+        assert!("A3E8".parse::<MoeSpec>().is_err());
+        assert!("S3E8".parse::<MoeSpec>().is_err());
+        assert!("garbage".parse::<MoeSpec>().is_err());
+    }
+
+    #[test]
+    fn expert_size_divides() {
+        let spec: MoeSpec = "S3A3E8".parse().unwrap();
+        assert_eq!(spec.expert_size(1024).unwrap(), 128);
+        assert!(spec.expert_size(1001).is_err());
+    }
+
+    #[test]
+    fn config_param_count_sane() {
+        let cfg = TransformerConfig {
+            name: "t".into(),
+            vocab: 256,
+            d_model: 128,
+            n_layers: 2,
+            n_heads: 4,
+            d_ff: 512,
+            max_seq: 128,
+        };
+        // embed 32768 + pos 16384 + layers 2*(65536 + 196608 + 256) + final 128 + unembed 32768
+        assert_eq!(cfg.param_count(), 256 * 128 + 128 * 128 + 2 * (4 * 128 * 128 + 3 * 128 * 512 + 256) + 128 + 256 * 128);
+        assert_eq!(cfg.head_dim(), 32);
+        assert!(cfg.flops_per_token_dense() > 0.0);
+    }
+}

@@ -1,0 +1,359 @@
+//! `.cmw` — the CMoE weight file format.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic   "CMW1"            4 bytes
+//! hlen    u64               header byte length
+//! header  JSON              { "config": {...}, "tensors": {name: {shape, offset}},
+//!                             "meta": {...} }
+//! data    f32[]             concatenated tensor payloads, 64-byte aligned start
+//! ```
+//! The python build path (`python/compile/pretrain.py`) writes the same
+//! format with numpy so the rust side can load trained checkpoints
+//! without any python at runtime.
+
+use crate::model::weights::*;
+use crate::model::{MoeSpec, TransformerConfig};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"CMW1";
+const ALIGN: usize = 64;
+
+/// An open `.cmw` file: named tensors + free-form meta.
+pub struct CmwFile {
+    pub tensors: BTreeMap<String, Tensor>,
+    pub config: Json,
+    pub meta: Json,
+}
+
+/// Write named tensors with a config/meta header.
+pub fn write_cmw(
+    path: &Path,
+    config: &Json,
+    meta: &Json,
+    tensors: &BTreeMap<String, Tensor>,
+) -> Result<()> {
+    let mut offset = 0usize;
+    let mut theader = Json::obj();
+    for (name, t) in tensors {
+        let mut e = Json::obj();
+        e.set("shape", t.shape.clone());
+        e.set("offset", offset);
+        theader.set(name, e);
+        offset += t.numel() * 4;
+    }
+    let mut header = Json::obj();
+    header.set("config", config.clone());
+    header.set("meta", meta.clone());
+    header.set("tensors", theader);
+    let hbytes = header.to_string().into_bytes();
+
+    let data_start = 4 + 8 + hbytes.len();
+    let pad = (ALIGN - data_start % ALIGN) % ALIGN;
+
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?,
+    );
+    f.write_all(MAGIC)?;
+    f.write_all(&((hbytes.len() + pad) as u64).to_le_bytes())?;
+    f.write_all(&hbytes)?;
+    f.write_all(&vec![b' '; pad])?;
+    for t in tensors.values() {
+        // SAFETY-free: serialize f32s explicitly as LE bytes
+        let mut buf = Vec::with_capacity(t.numel() * 4);
+        for v in &t.data {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        f.write_all(&buf)?;
+    }
+    f.flush()?;
+    Ok(())
+}
+
+/// Read a `.cmw` file fully into memory.
+pub fn read_cmw(path: &Path) -> Result<CmwFile> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+    );
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: not a CMW1 file", path.display());
+    }
+    let mut hlen = [0u8; 8];
+    f.read_exact(&mut hlen)?;
+    let hlen = u64::from_le_bytes(hlen) as usize;
+    let mut hbytes = vec![0u8; hlen];
+    f.read_exact(&mut hbytes)?;
+    let header = Json::parse(std::str::from_utf8(&hbytes)?.trim_end())
+        .with_context(|| "parse cmw header")?;
+    let mut rest = Vec::new();
+    f.read_to_end(&mut rest)?;
+
+    let mut tensors = BTreeMap::new();
+    let tmap = header.get("tensors").as_obj().context("tensors key")?;
+    for (name, entry) in tmap {
+        let shape: Vec<usize> = entry
+            .get("shape")
+            .as_arr()
+            .context("shape")?
+            .iter()
+            .map(|v| v.as_usize().unwrap_or(0))
+            .collect();
+        let offset = entry.get("offset").as_usize().context("offset")?;
+        let numel: usize = shape.iter().product();
+        let end = offset + numel * 4;
+        if end > rest.len() {
+            bail!("tensor {name} out of bounds ({end} > {})", rest.len());
+        }
+        let mut data = Vec::with_capacity(numel);
+        for c in rest[offset..end].chunks_exact(4) {
+            data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        tensors.insert(name.clone(), Tensor::from_vec(data, &shape));
+    }
+    Ok(CmwFile { tensors, config: header.get("config").clone(), meta: header.get("meta").clone() })
+}
+
+// ---------------------------------------------------------------------------
+// Model-level (de)serialization
+// ---------------------------------------------------------------------------
+
+fn config_to_json(c: &TransformerConfig) -> Json {
+    let mut j = Json::obj();
+    j.set("name", c.name.as_str())
+        .set("vocab", c.vocab)
+        .set("d_model", c.d_model)
+        .set("n_layers", c.n_layers)
+        .set("n_heads", c.n_heads)
+        .set("d_ff", c.d_ff)
+        .set("max_seq", c.max_seq);
+    j
+}
+
+fn config_from_json(j: &Json) -> Result<TransformerConfig> {
+    Ok(TransformerConfig {
+        name: j.get("name").as_str().unwrap_or("unnamed").to_string(),
+        vocab: j.get("vocab").as_usize().context("vocab")?,
+        d_model: j.get("d_model").as_usize().context("d_model")?,
+        n_layers: j.get("n_layers").as_usize().context("n_layers")?,
+        n_heads: j.get("n_heads").as_usize().context("n_heads")?,
+        d_ff: j.get("d_ff").as_usize().context("d_ff")?,
+        max_seq: j.get("max_seq").as_usize().context("max_seq")?,
+    })
+}
+
+fn vec_tensor(v: &[f32]) -> Tensor {
+    Tensor::from_vec(v.to_vec(), &[v.len()])
+}
+
+fn idx_tensor(v: &[usize]) -> Tensor {
+    Tensor::from_vec(v.iter().map(|&i| i as f32).collect(), &[v.len()])
+}
+
+fn tensor_idx(t: &Tensor) -> Vec<usize> {
+    t.data.iter().map(|&f| f as usize).collect()
+}
+
+pub(crate) fn save_model(m: &ModelWeights, path: &Path) -> Result<()> {
+    let mut t: BTreeMap<String, Tensor> = BTreeMap::new();
+    let mut meta = Json::obj();
+    t.insert("embed".into(), m.embed.clone());
+    t.insert("pos".into(), m.pos.clone());
+    t.insert("final_norm".into(), vec_tensor(&m.final_norm));
+    t.insert("unembed".into(), m.unembed.clone());
+
+    let mut layer_kinds = Vec::new();
+    for (l, lw) in m.layers.iter().enumerate() {
+        let p = format!("layers.{l}");
+        t.insert(format!("{p}.attn_norm"), vec_tensor(&lw.attn_norm));
+        t.insert(format!("{p}.ffn_norm"), vec_tensor(&lw.ffn_norm));
+        t.insert(format!("{p}.attn.wq"), lw.attn.wq.clone());
+        t.insert(format!("{p}.attn.wk"), lw.attn.wk.clone());
+        t.insert(format!("{p}.attn.wv"), lw.attn.wv.clone());
+        t.insert(format!("{p}.attn.wo"), lw.attn.wo.clone());
+        match &lw.ffn {
+            LayerFfn::Dense(f) => {
+                layer_kinds.push("dense".to_string());
+                t.insert(format!("{p}.ffn.w_gate"), f.w_gate.clone());
+                t.insert(format!("{p}.ffn.w_up"), f.w_up.clone());
+                t.insert(format!("{p}.ffn.w_down"), f.w_down.clone());
+            }
+            LayerFfn::Moe(moe) => {
+                layer_kinds.push(moe.spec.to_string());
+                t.insert(format!("{p}.shared.w_gate"), moe.shared.w_gate.clone());
+                t.insert(format!("{p}.shared.w_up"), moe.shared.w_up.clone());
+                t.insert(format!("{p}.shared.w_down"), moe.shared.w_down.clone());
+                for (e, ex) in moe.experts.iter().enumerate() {
+                    t.insert(format!("{p}.experts.{e}.w_gate"), ex.w_gate.clone());
+                    t.insert(format!("{p}.experts.{e}.w_up"), ex.w_up.clone());
+                    t.insert(format!("{p}.experts.{e}.w_down"), ex.w_down.clone());
+                }
+                match &moe.router {
+                    Router::Analytical(r) => {
+                        t.insert(format!("{p}.router.w_gate_r"), r.w_gate_r.clone());
+                        t.insert(format!("{p}.router.w_up_r"), r.w_up_r.clone());
+                    }
+                    Router::Linear(w) => {
+                        t.insert(format!("{p}.router.linear"), w.clone());
+                    }
+                }
+                t.insert(format!("{p}.gate_scale"), vec_tensor(&moe.gate_scale));
+                t.insert(format!("{p}.gate_bias"), vec_tensor(&moe.gate_bias));
+                t.insert(format!("{p}.shared_neurons"), idx_tensor(&moe.shared_neurons));
+                t.insert(format!("{p}.representatives"), idx_tensor(&moe.representatives));
+                for (e, idx) in moe.expert_neurons.iter().enumerate() {
+                    t.insert(format!("{p}.expert_neurons.{e}"), idx_tensor(idx));
+                }
+                if let Some(comp) = &moe.compensation {
+                    for (e, c) in comp.iter().enumerate() {
+                        t.insert(format!("{p}.compensation.{e}"), vec_tensor(c));
+                    }
+                }
+            }
+        }
+    }
+    meta.set("layer_kinds", layer_kinds);
+    write_cmw(path, &config_to_json(&m.config), &meta, &t)
+}
+
+pub(crate) fn load_model(path: &Path) -> Result<ModelWeights> {
+    let file = read_cmw(path)?;
+    let config = config_from_json(&file.config)?;
+    let t = &file.tensors;
+    let get = |name: &str| -> Result<Tensor> {
+        t.get(name).cloned().ok_or_else(|| anyhow::anyhow!("missing tensor {name}"))
+    };
+    let kinds = file.meta.get("layer_kinds");
+    let mut layers = Vec::new();
+    for l in 0..config.n_layers {
+        let p = format!("layers.{l}");
+        let kind = kinds
+            .as_arr()
+            .and_then(|a| a.get(l))
+            .and_then(|v| v.as_str())
+            .unwrap_or("dense")
+            .to_string();
+        let ffn = if kind == "dense" {
+            LayerFfn::Dense(FfnWeights {
+                w_gate: get(&format!("{p}.ffn.w_gate"))?,
+                w_up: get(&format!("{p}.ffn.w_up"))?,
+                w_down: get(&format!("{p}.ffn.w_down"))?,
+            })
+        } else {
+            let spec: MoeSpec = kind.parse()?;
+            let mut experts = Vec::new();
+            let mut expert_neurons = Vec::new();
+            for e in 0..spec.routed() {
+                experts.push(FfnWeights {
+                    w_gate: get(&format!("{p}.experts.{e}.w_gate"))?,
+                    w_up: get(&format!("{p}.experts.{e}.w_up"))?,
+                    w_down: get(&format!("{p}.experts.{e}.w_down"))?,
+                });
+                expert_neurons.push(tensor_idx(&get(&format!("{p}.expert_neurons.{e}"))?));
+            }
+            LayerFfn::Moe(MoeLayerWeights {
+                spec,
+                shared: FfnWeights {
+                    w_gate: get(&format!("{p}.shared.w_gate"))?,
+                    w_up: get(&format!("{p}.shared.w_up"))?,
+                    w_down: get(&format!("{p}.shared.w_down"))?,
+                },
+                experts,
+                router: if t.contains_key(&format!("{p}.router.linear")) {
+                    Router::Linear(get(&format!("{p}.router.linear"))?)
+                } else {
+                    Router::Analytical(RouterWeights {
+                        w_gate_r: get(&format!("{p}.router.w_gate_r"))?,
+                        w_up_r: get(&format!("{p}.router.w_up_r"))?,
+                    })
+                },
+                gate_scale: get(&format!("{p}.gate_scale"))?.data,
+                gate_bias: get(&format!("{p}.gate_bias"))?.data,
+                shared_neurons: tensor_idx(&get(&format!("{p}.shared_neurons"))?),
+                expert_neurons,
+                representatives: tensor_idx(&get(&format!("{p}.representatives"))?),
+                compensation: if t.contains_key(&format!("{p}.compensation.0")) {
+                    Some(
+                        (0..spec.routed())
+                            .map(|e| get(&format!("{p}.compensation.{e}")).map(|t| t.data))
+                            .collect::<Result<Vec<_>>>()?,
+                    )
+                } else {
+                    None
+                },
+            })
+        };
+        layers.push(LayerWeights {
+            attn_norm: get(&format!("{p}.attn_norm"))?.data,
+            attn: AttnWeights {
+                wq: get(&format!("{p}.attn.wq"))?,
+                wk: get(&format!("{p}.attn.wk"))?,
+                wv: get(&format!("{p}.attn.wv"))?,
+                wo: get(&format!("{p}.attn.wo"))?,
+            },
+            ffn_norm: get(&format!("{p}.ffn_norm"))?.data,
+            ffn,
+        });
+    }
+    Ok(ModelWeights {
+        config,
+        embed: get("embed")?,
+        pos: get("pos")?,
+        layers,
+        final_norm: get("final_norm")?.data,
+        unembed: get("unembed")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::model_config;
+    use crate::util::Rng;
+
+    #[test]
+    fn raw_cmw_roundtrip() {
+        let dir = std::env::temp_dir().join("cmoe_test_fmt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("raw.cmw");
+        let mut tensors = BTreeMap::new();
+        let mut rng = Rng::new(3);
+        tensors.insert("a".to_string(), Tensor::randn(&mut rng, &[3, 4], 1.0));
+        tensors.insert("b.c".to_string(), Tensor::randn(&mut rng, &[7], 1.0));
+        let mut cfg = Json::obj();
+        cfg.set("d_model", 16usize);
+        write_cmw(&path, &cfg, &Json::Null, &tensors).unwrap();
+        let back = read_cmw(&path).unwrap();
+        assert_eq!(back.tensors.len(), 2);
+        assert_eq!(back.tensors["a"], tensors["a"]);
+        assert_eq!(back.tensors["b.c"], tensors["b.c"]);
+        assert_eq!(back.config.get("d_model").as_usize().unwrap(), 16);
+    }
+
+    #[test]
+    fn dense_model_roundtrip() {
+        let cfg = model_config("tiny").unwrap();
+        let mut rng = Rng::new(4);
+        let m = ModelWeights::random(&cfg, &mut rng);
+        let path = std::env::temp_dir().join("cmoe_test_dense.cmw");
+        m.save(&path).unwrap();
+        let back = ModelWeights::load(&path).unwrap();
+        assert_eq!(back.config, m.config);
+        assert_eq!(back.embed, m.embed);
+        assert_eq!(back.dense_ffn(0).w_gate, m.dense_ffn(0).w_gate);
+        assert_eq!(back.layers.len(), m.layers.len());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = std::env::temp_dir().join("cmoe_test_bad.cmw");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(read_cmw(&path).is_err());
+    }
+}

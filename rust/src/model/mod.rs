@@ -1,0 +1,16 @@
+//! Model definitions: transformer configuration, the `SxAyEz` MoE
+//! specification grammar, weight containers, and the `.cmw` on-disk
+//! weight format shared with the python build path.
+
+mod config;
+mod weights;
+mod format;
+mod zoo;
+
+pub use config::{MoeSpec, TransformerConfig};
+pub use weights::{
+    AttnWeights, FfnWeights, LayerFfn, LayerWeights, ModelWeights, MoeLayerWeights, Router,
+    RouterWeights,
+};
+pub use format::{read_cmw, write_cmw, CmwFile};
+pub use zoo::{model_config, MODEL_ZOO};

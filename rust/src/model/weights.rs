@@ -1,0 +1,244 @@
+//! Weight containers for dense and MoE-restructured models.
+//!
+//! Conventions (matching `python/compile/model.py`):
+//! * All projection matrices are stored **input-major**: `w: [d_in, d_out]`
+//!   and applied as `y = x @ w`.
+//! * FFN: `w_gate, w_up: [d, d_h]`, `w_down: [d_h, d]` (Eq. 3).
+//! * A *neuron* `i` is the triple (`w_gate[:, i]`, `w_up[:, i]`,
+//!   `w_down[i, :]`); expert slices carve neurons out of these matrices.
+
+use crate::model::{MoeSpec, TransformerConfig};
+use crate::tensor::Tensor;
+
+/// Attention projections for one layer.
+#[derive(Clone, Debug)]
+pub struct AttnWeights {
+    pub wq: Tensor,
+    pub wk: Tensor,
+    pub wv: Tensor,
+    pub wo: Tensor,
+}
+
+/// Dense SwiGLU FFN weights (one layer, or one expert slice).
+#[derive(Clone, Debug)]
+pub struct FfnWeights {
+    pub w_gate: Tensor,
+    pub w_up: Tensor,
+    pub w_down: Tensor,
+}
+
+impl FfnWeights {
+    /// Hidden (neuron) dimension of this FFN / expert.
+    pub fn hidden_dim(&self) -> usize {
+        self.w_gate.shape[1]
+    }
+
+    /// Carve the neuron subset `idx` into a standalone FFN (expert).
+    pub fn slice_neurons(&self, idx: &[usize]) -> FfnWeights {
+        FfnWeights {
+            w_gate: self.w_gate.select_cols(idx),
+            w_up: self.w_up.select_cols(idx),
+            w_down: self.w_down.select_rows(idx),
+        }
+    }
+}
+
+/// Analytical router weights: the representative-neuron columns
+/// (Eq. 8) — `w_gate_r, w_up_r: [d, N_r]`.
+#[derive(Clone, Debug)]
+pub struct RouterWeights {
+    pub w_gate_r: Tensor,
+    pub w_up_r: Tensor,
+}
+
+/// Router variants. CMoE uses [`Router::Analytical`]; the MoEfication /
+/// LLaMA-MoE baselines (and the Table 5 ablation) use a trained
+/// [`Router::Linear`] MLP scoring head.
+#[derive(Clone, Debug)]
+pub enum Router {
+    /// Representative-neuron SwiGLU scores (Eq. 8), training-free.
+    Analytical(RouterWeights),
+    /// Learned linear scorer `s = x @ w`, `w: [d, N_r]`.
+    Linear(Tensor),
+}
+
+impl Router {
+    /// Router scores for a batch `x: [q, d]` → `[q, N_r]`.
+    pub fn scores(&self, x: &Tensor) -> Tensor {
+        match self {
+            Router::Analytical(r) => crate::tensor::swiglu_hidden(x, &r.w_gate_r, &r.w_up_r),
+            Router::Linear(w) => crate::tensor::matmul(x, w),
+        }
+    }
+
+    pub fn n_routed(&self) -> usize {
+        match self {
+            Router::Analytical(r) => r.w_gate_r.shape[1],
+            Router::Linear(w) => w.shape[1],
+        }
+    }
+}
+
+/// A CMoE-restructured FFN layer: shared expert + routed experts +
+/// analytical router + gate parameters (Eq. 4/8/9).
+#[derive(Clone, Debug)]
+pub struct MoeLayerWeights {
+    pub spec: MoeSpec,
+    /// Merged shared expert (the `N_s` shared experts are contiguous in
+    /// one slice — they always fire together, so they are fused).
+    pub shared: FfnWeights,
+    /// `N_r` routed experts of `m` neurons each.
+    pub experts: Vec<FfnWeights>,
+    pub router: Router,
+    /// Learnable gate scaling `u` (init 0 ⇒ gates start at exactly 1).
+    pub gate_scale: Vec<f32>,
+    /// Load-balancing bias `b` added to scores pre-top-k (not to gates).
+    pub gate_bias: Vec<f32>,
+    /// Original-FFN neuron index of every shared neuron (bookkeeping:
+    /// conversion must be a permutation; tests rely on this).
+    pub shared_neurons: Vec<usize>,
+    /// Original neuron indices per routed expert.
+    pub expert_neurons: Vec<Vec<usize>>,
+    /// Representative neuron (original index) per routed expert.
+    pub representatives: Vec<usize>,
+    /// G-MoEfication-style compensation: the calibration-mean output
+    /// `E[E_i(x)]` of each routed expert, added for *deactivated*
+    /// experts instead of zero (None for plain CMoE / MoEfication).
+    pub compensation: Option<Vec<Vec<f32>>>,
+}
+
+impl MoeLayerWeights {
+    /// All original neuron indices covered by this layer, sorted.
+    pub fn covered_neurons(&self) -> Vec<usize> {
+        let mut all: Vec<usize> = self
+            .shared_neurons
+            .iter()
+            .copied()
+            .chain(self.expert_neurons.iter().flatten().copied())
+            .collect();
+        all.sort_unstable();
+        all
+    }
+}
+
+/// FFN slot of a layer: still dense, or restructured.
+#[derive(Clone, Debug)]
+pub enum LayerFfn {
+    Dense(FfnWeights),
+    Moe(MoeLayerWeights),
+}
+
+/// One transformer block.
+#[derive(Clone, Debug)]
+pub struct LayerWeights {
+    pub attn_norm: Vec<f32>,
+    pub attn: AttnWeights,
+    pub ffn_norm: Vec<f32>,
+    pub ffn: LayerFfn,
+}
+
+/// A full model.
+#[derive(Clone, Debug)]
+pub struct ModelWeights {
+    pub config: TransformerConfig,
+    pub embed: Tensor,
+    /// Learned absolute position embeddings `[max_seq, d]`.
+    pub pos: Tensor,
+    pub layers: Vec<LayerWeights>,
+    pub final_norm: Vec<f32>,
+    pub unembed: Tensor,
+}
+
+impl ModelWeights {
+    /// Load from a `.cmw` file (see [`crate::model::read_cmw`]).
+    pub fn load(path: impl AsRef<std::path::Path>) -> crate::Result<ModelWeights> {
+        crate::model::format::load_model(path.as_ref())
+    }
+
+    /// Save to a `.cmw` file. MoE layers round-trip completely
+    /// (expert slices, router, gate parameters, neuron bookkeeping).
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> crate::Result<()> {
+        crate::model::format::save_model(self, path.as_ref())
+    }
+
+    /// Borrow the dense FFN of layer `l` (panics on MoE layers — used by
+    /// conversion, which runs before restructuring).
+    pub fn dense_ffn(&self, l: usize) -> &FfnWeights {
+        match &self.layers[l].ffn {
+            LayerFfn::Dense(f) => f,
+            LayerFfn::Moe(_) => panic!("layer {l} already restructured"),
+        }
+    }
+
+    /// Generate a random dense model (used by tests and throughput
+    /// benches where trained weights don't matter).
+    pub fn random(config: &TransformerConfig, rng: &mut crate::util::Rng) -> ModelWeights {
+        let d = config.d_model;
+        let dh = config.d_ff;
+        let v = config.vocab;
+        let std_e = 0.02;
+        let std_p = (1.0 / d as f32).sqrt();
+        let layers = (0..config.n_layers)
+            .map(|_| LayerWeights {
+                attn_norm: vec![1.0; d],
+                attn: AttnWeights {
+                    wq: Tensor::randn(rng, &[d, d], std_p),
+                    wk: Tensor::randn(rng, &[d, d], std_p),
+                    wv: Tensor::randn(rng, &[d, d], std_p),
+                    wo: Tensor::randn(rng, &[d, d], std_p),
+                },
+                ffn_norm: vec![1.0; d],
+                ffn: LayerFfn::Dense(FfnWeights {
+                    w_gate: Tensor::randn(rng, &[d, dh], std_p),
+                    w_up: Tensor::randn(rng, &[d, dh], std_p),
+                    w_down: Tensor::randn(rng, &[dh, d], std_p),
+                }),
+            })
+            .collect();
+        ModelWeights {
+            config: config.clone(),
+            embed: Tensor::randn(rng, &[v, d], std_e),
+            pos: Tensor::randn(rng, &[config.max_seq, d], std_e),
+            layers,
+            final_norm: vec![1.0; d],
+            unembed: Tensor::randn(rng, &[d, v], std_p),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::model_config;
+    use crate::util::Rng;
+
+    #[test]
+    fn slice_neurons_shapes() {
+        let mut rng = Rng::new(1);
+        let ffn = FfnWeights {
+            w_gate: Tensor::randn(&mut rng, &[8, 32], 1.0),
+            w_up: Tensor::randn(&mut rng, &[8, 32], 1.0),
+            w_down: Tensor::randn(&mut rng, &[32, 8], 1.0),
+        };
+        let e = ffn.slice_neurons(&[1, 5, 9, 30]);
+        assert_eq!(e.w_gate.shape, vec![8, 4]);
+        assert_eq!(e.w_up.shape, vec![8, 4]);
+        assert_eq!(e.w_down.shape, vec![4, 8]);
+        assert_eq!(e.hidden_dim(), 4);
+        // column 1 of slice == column 5 of original
+        for r in 0..8 {
+            assert_eq!(e.w_gate.at2(r, 1), ffn.w_gate.at2(r, 5));
+        }
+        assert_eq!(e.w_down.row(2), ffn.w_down.row(9));
+    }
+
+    #[test]
+    fn random_model_shapes() {
+        let cfg = model_config("tiny").unwrap();
+        let mut rng = Rng::new(2);
+        let m = ModelWeights::random(&cfg, &mut rng);
+        assert_eq!(m.layers.len(), cfg.n_layers);
+        assert_eq!(m.embed.shape, vec![cfg.vocab, cfg.d_model]);
+        assert_eq!(m.dense_ffn(0).hidden_dim(), cfg.d_ff);
+    }
+}

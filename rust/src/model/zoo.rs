@@ -1,0 +1,54 @@
+//! The model zoo: named configurations used throughout tests, examples
+//! and the bench harness. `small` is the checkpoint pretrained at
+//! artifact-build time (python/compile/pretrain.py); `tiny` is for fast
+//! tests; `base` is the larger throughput-bench config.
+
+use crate::model::TransformerConfig;
+use anyhow::{bail, Result};
+
+/// (name, vocab, d_model, n_layers, n_heads, d_ff, max_seq)
+pub const MODEL_ZOO: &[(&str, usize, usize, usize, usize, usize, usize)] = &[
+    // d_ff divisible by 8 and 16 so every SxAyEz config in the paper fits
+    ("tiny", 256, 64, 2, 4, 256, 128),
+    ("small", 256, 128, 4, 4, 512, 256),
+    ("base", 256, 256, 6, 8, 1024, 256),
+];
+
+/// Look up a zoo config by name.
+pub fn model_config(name: &str) -> Result<TransformerConfig> {
+    for &(n, vocab, d_model, n_layers, n_heads, d_ff, max_seq) in MODEL_ZOO {
+        if n == name {
+            return Ok(TransformerConfig {
+                name: n.to_string(),
+                vocab,
+                d_model,
+                n_layers,
+                n_heads,
+                d_ff,
+                max_seq,
+            });
+        }
+    }
+    bail!("unknown model '{name}' (zoo: {:?})", MODEL_ZOO.iter().map(|z| z.0).collect::<Vec<_>>())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_lookup() {
+        let c = model_config("small").unwrap();
+        assert_eq!(c.d_ff, 512);
+        assert!(model_config("nonexistent").is_err());
+    }
+
+    #[test]
+    fn all_zoo_configs_divisible_by_16_experts() {
+        for &(name, ..) in MODEL_ZOO {
+            let c = model_config(name).unwrap();
+            assert_eq!(c.d_ff % 16, 0, "{name}: d_ff={} not divisible by 16", c.d_ff);
+            assert_eq!(c.d_model % c.n_heads, 0, "{name}: head dim fractional");
+        }
+    }
+}

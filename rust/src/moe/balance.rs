@@ -1,0 +1,196 @@
+//! Auxiliary-loss-free load balancing (§4.3, after DeepSeek-V3).
+//!
+//! After each step, expert `i`'s bias is nudged by ±γ toward the uniform
+//! utilization target `p* = 1/N_r`: overloaded experts are made less
+//! attractive for *selection* (the bias is added to scores pre-top-k but
+//! never multiplies outputs). The serving engine runs a [`BiasAdapter`]
+//! per MoE layer online; the fine-tuner runs one per layer during its
+//! epoch.
+
+use crate::model::MoeLayerWeights;
+
+/// Tracks per-expert token counts within an adaptation window.
+#[derive(Clone, Debug)]
+pub struct UtilizationTracker {
+    pub counts: Vec<u64>,
+    pub total: u64,
+}
+
+impl UtilizationTracker {
+    pub fn new(n_experts: usize) -> Self {
+        UtilizationTracker { counts: vec![0; n_experts], total: 0 }
+    }
+
+    pub fn record(&mut self, expert_tokens: &[usize]) {
+        assert_eq!(expert_tokens.len(), self.counts.len());
+        for (c, &n) in self.counts.iter_mut().zip(expert_tokens) {
+            *c += n as u64;
+        }
+        self.total += expert_tokens.iter().sum::<usize>() as u64;
+    }
+
+    pub fn reset(&mut self) {
+        self.counts.iter_mut().for_each(|c| *c = 0);
+        self.total = 0;
+    }
+
+    /// Utilization fractions p_i (sum to 1 when total > 0).
+    pub fn fractions(&self) -> Vec<f64> {
+        self.counts
+            .iter()
+            .map(|&c| if self.total == 0 { 0.0 } else { c as f64 / self.total as f64 })
+            .collect()
+    }
+
+    /// Max-over-min imbalance ratio (∞ if some expert got zero tokens
+    /// and others didn't; 1.0 is perfectly balanced).
+    pub fn imbalance(&self) -> f64 {
+        let max = self.counts.iter().copied().max().unwrap_or(0);
+        let min = self.counts.iter().copied().min().unwrap_or(0);
+        if max == 0 {
+            1.0
+        } else if min == 0 {
+            f64::INFINITY
+        } else {
+            max as f64 / min as f64
+        }
+    }
+}
+
+/// Configuration for bias adaptation.
+#[derive(Clone, Copy, Debug)]
+pub struct BalanceConfig {
+    /// Bias step γ (paper: 1e-3).
+    pub gamma: f32,
+    /// Steps between bias updates (1 = every batch).
+    pub interval: usize,
+}
+
+impl Default for BalanceConfig {
+    fn default() -> Self {
+        BalanceConfig { gamma: 1e-3, interval: 1 }
+    }
+}
+
+/// Online adaptive-bias updater for one MoE layer.
+#[derive(Clone, Debug)]
+pub struct BiasAdapter {
+    pub cfg: BalanceConfig,
+    pub tracker: UtilizationTracker,
+    steps: usize,
+}
+
+impl BiasAdapter {
+    pub fn new(n_routed: usize, cfg: BalanceConfig) -> Self {
+        BiasAdapter { cfg, tracker: UtilizationTracker::new(n_routed), steps: 0 }
+    }
+
+    /// Record a step's routing counts and, on the update interval, nudge
+    /// the layer's biases: overloaded (p_i > p*) ⇒ b_i -= γ, underloaded
+    /// ⇒ b_i += γ.
+    pub fn step(&mut self, moe: &mut MoeLayerWeights, expert_tokens: &[usize]) {
+        self.tracker.record(expert_tokens);
+        self.steps += 1;
+        if self.steps % self.cfg.interval != 0 || self.tracker.total == 0 {
+            return;
+        }
+        let p_star = 1.0 / moe.spec.routed() as f64;
+        let fr = self.tracker.fractions();
+        for (i, &p) in fr.iter().enumerate() {
+            if p > p_star {
+                moe.gate_bias[i] -= self.cfg.gamma;
+            } else if p < p_star {
+                moe.gate_bias[i] += self.cfg.gamma;
+            }
+        }
+        self.tracker.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::{moe_ffn_forward, route_tokens};
+    use crate::tensor::Tensor;
+    use crate::util::Rng;
+
+    fn skewed_moe(rng: &mut Rng) -> crate::model::MoeLayerWeights {
+        use crate::converter::{convert_ffn, ConvertOptions};
+        use crate::model::FfnWeights;
+        use crate::profiling::ActivationProfile;
+        let d = 12;
+        let d_h = 48;
+        let ffn = FfnWeights {
+            w_gate: Tensor::randn(rng, &[d, d_h], 0.5),
+            w_up: Tensor::randn(rng, &[d, d_h], 0.5),
+            w_down: Tensor::randn(rng, &[d_h, d], 0.5),
+        };
+        let x = Tensor::randn(rng, &[128, d], 1.0);
+        let h = crate::tensor::swiglu_hidden(&x, &ffn.w_gate, &ffn.w_up);
+        let prof = ActivationProfile::from_hidden(&h, 6);
+        convert_ffn(&ffn, &prof, &"S2A2E8".parse().unwrap(), &ConvertOptions::default()).unwrap()
+    }
+
+    #[test]
+    fn tracker_fractions_and_imbalance() {
+        let mut t = UtilizationTracker::new(3);
+        t.record(&[8, 1, 1]);
+        let f = t.fractions();
+        assert!((f[0] - 0.8).abs() < 1e-12);
+        assert!((t.imbalance() - 8.0).abs() < 1e-12);
+        t.reset();
+        assert_eq!(t.total, 0);
+        assert_eq!(t.imbalance(), 1.0);
+    }
+
+    #[test]
+    fn bias_moves_toward_underloaded() {
+        let mut rng = Rng::new(21);
+        let mut moe = skewed_moe(&mut rng);
+        let mut adapter = BiasAdapter::new(moe.spec.routed(), BalanceConfig::default());
+        adapter.step(&mut moe, &[100, 0, 0, 0, 0, 0]);
+        assert!(moe.gate_bias[0] < 0.0, "overloaded expert bias should drop");
+        assert!(moe.gate_bias[1] > 0.0, "underloaded expert bias should rise");
+    }
+
+    #[test]
+    fn adaptation_reduces_imbalance_end_to_end() {
+        // Figure 5: run many batches with adaptation; the post-adaptation
+        // utilization spread must shrink.
+        let mut rng = Rng::new(22);
+        let mut moe = skewed_moe(&mut rng);
+        // manufacture a hot expert (the paper's Figure-5 "before" state):
+        // a large initial bias forces expert 0 into nearly every top-k;
+        // adaptation must drain it back toward uniform utilization.
+        moe.gate_bias[0] = 0.5;
+        moe.gate_bias[1] = -0.3;
+        // measure initial imbalance
+        let measure = |moe: &crate::model::MoeLayerWeights, rng: &mut Rng| -> f64 {
+            let x = Tensor::randn(rng, &[256, 12], 1.0);
+            let (_, stats) = moe_ffn_forward(moe, &x);
+            let u = stats.utilization();
+            let max = u.iter().cloned().fold(0.0, f64::max);
+            let min = u.iter().cloned().fold(1.0, f64::min);
+            max - min
+        };
+        let before = measure(&moe, &mut rng);
+        let mut adapter =
+            BiasAdapter::new(moe.spec.routed(), BalanceConfig { gamma: 5e-3, interval: 1 });
+        for _ in 0..400 {
+            let x = Tensor::randn(&mut rng, &[32, 12], 1.0);
+            let dec = route_tokens(&moe, &x);
+            let mut counts = vec![0usize; moe.spec.routed()];
+            for d in &dec {
+                for &e in &d.experts {
+                    counts[e] += 1;
+                }
+            }
+            adapter.step(&mut moe, &counts);
+        }
+        let after = measure(&moe, &mut rng);
+        assert!(
+            after < before * 0.7 || after < 0.05,
+            "imbalance did not improve: before={before:.4} after={after:.4}"
+        );
+    }
+}

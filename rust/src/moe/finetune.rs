@@ -1,0 +1,234 @@
+//! Lightweight gate fine-tuning (§4.3's learnable scaling + load
+//! balancing, on the 2k-sample budget of the paper).
+//!
+//! The paper fine-tunes with LoRA against the language-model loss; in
+//! this reproduction the fine-tuner optimizes the *layerwise
+//! reconstruction loss* `‖F_MoE(x) − F_dense(x)‖²` — the standard
+//! post-training substitute (see DESIGN.md §2). Because conversion is a
+//! pure partition, the dense teacher equals the all-experts-active MoE
+//! output, so no extra weights are needed.
+//!
+//! Gradients of the loss w.r.t. the gate scales `u` are analytic:
+//! with `g_i = 1 + s'_i·u_i` (Eq. 9) and residual
+//! `r = F_MoE − F_dense`, we get `∂L/∂u_i = 2·s'_i·⟨E_i(x), r⟩` for
+//! selected experts. `u` is updated with Adam; the load-balance bias is
+//! co-adapted by a [`super::BiasAdapter`] exactly as in serving.
+
+use crate::model::MoeLayerWeights;
+use crate::moe::balance::{BalanceConfig, BiasAdapter};
+use crate::moe::gating::route_tokens;
+use crate::tensor::{self, Tensor};
+
+/// Fine-tuning hyperparameters (paper: lr 1e-3 for router scaling,
+/// γ = 1e-3 for load balancing, 1 epoch).
+#[derive(Clone, Copy, Debug)]
+pub struct FinetuneConfig {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub batch: usize,
+    pub epochs: usize,
+    pub balance: BalanceConfig,
+}
+
+impl Default for FinetuneConfig {
+    fn default() -> Self {
+        FinetuneConfig {
+            lr: 1e-3,
+            beta1: 0.9,
+            beta2: 0.95,
+            eps: 1e-8,
+            batch: 32,
+            epochs: 1,
+            balance: BalanceConfig::default(),
+        }
+    }
+}
+
+/// Outcome of a fine-tuning run.
+#[derive(Clone, Debug)]
+pub struct FinetuneReport {
+    pub loss_before: f64,
+    pub loss_after: f64,
+    pub steps: usize,
+    pub samples: usize,
+}
+
+/// Mean reconstruction loss over a batch (teacher = all experts active).
+fn reconstruction_loss(moe: &MoeLayerWeights, x: &Tensor) -> f64 {
+    let (sparse, _) = crate::moe::moe_ffn_forward(moe, x);
+    let dense = dense_teacher(moe, x);
+    let mut s = 0.0f64;
+    for (a, b) in sparse.data.iter().zip(&dense.data) {
+        let d = (a - b) as f64;
+        s += d * d;
+    }
+    s / x.shape[0] as f64
+}
+
+/// Dense FFN output recomposed from the partition (gates = 1, all on).
+fn dense_teacher(moe: &MoeLayerWeights, x: &Tensor) -> Tensor {
+    let mut out =
+        tensor::swiglu_ffn(x, &moe.shared.w_gate, &moe.shared.w_up, &moe.shared.w_down);
+    for e in &moe.experts {
+        let ye = tensor::swiglu_ffn(x, &e.w_gate, &e.w_up, &e.w_down);
+        tensor::add_inplace(&mut out, &ye);
+    }
+    out
+}
+
+/// Fine-tune the gate scales `u` (and co-adapt biases `b`) of one MoE
+/// layer on calibration inputs `x: [q, d]`.
+pub fn finetune_gates(
+    moe: &mut MoeLayerWeights,
+    x: &Tensor,
+    cfg: &FinetuneConfig,
+) -> FinetuneReport {
+    let q = x.shape[0];
+    let n_r = moe.spec.routed();
+    let loss_before = reconstruction_loss(moe, x);
+
+    let mut m_adam = vec![0.0f32; n_r];
+    let mut v_adam = vec![0.0f32; n_r];
+    let mut t_step = 0usize;
+    let mut adapter = BiasAdapter::new(n_r, cfg.balance);
+
+    for _epoch in 0..cfg.epochs {
+        for start in (0..q).step_by(cfg.batch) {
+            let end = (start + cfg.batch).min(q);
+            let idx: Vec<usize> = (start..end).collect();
+            let xb = x.select_rows(&idx);
+            let b = xb.shape[0];
+
+            // forward with current gates
+            let decisions = route_tokens(moe, &xb);
+            let dense = dense_teacher(moe, &xb);
+            // residual r = F_moe - F_dense, accumulated per token
+            let mut grad = vec![0.0f32; n_r];
+            let mut counts = vec![0usize; n_r];
+            // compute per-expert outputs once per token group
+            let (sparse, _) = crate::moe::moe_ffn_forward(moe, &xb);
+            let d = xb.shape[1];
+            for (t, dec) in decisions.iter().enumerate() {
+                let r: Vec<f32> = (0..d)
+                    .map(|j| sparse.at2(t, j) - dense.at2(t, j))
+                    .collect();
+                let sp = tensor::softmax(&dec.scores);
+                let xt = xb.select_rows(&[t]);
+                for &e in &dec.experts {
+                    counts[e] += 1;
+                    // E_e(x_t) · r
+                    let ye = tensor::swiglu_ffn(
+                        &xt,
+                        &moe.experts[e].w_gate,
+                        &moe.experts[e].w_up,
+                        &moe.experts[e].w_down,
+                    );
+                    let dot: f32 = ye.data.iter().zip(&r).map(|(a, b)| a * b).sum();
+                    grad[e] += 2.0 * sp[e] * dot / b as f32;
+                }
+            }
+
+            // Adam update on u
+            t_step += 1;
+            let bc1 = 1.0 - cfg.beta1.powi(t_step as i32);
+            let bc2 = 1.0 - cfg.beta2.powi(t_step as i32);
+            for i in 0..n_r {
+                m_adam[i] = cfg.beta1 * m_adam[i] + (1.0 - cfg.beta1) * grad[i];
+                v_adam[i] = cfg.beta2 * v_adam[i] + (1.0 - cfg.beta2) * grad[i] * grad[i];
+                let mh = m_adam[i] / bc1;
+                let vh = v_adam[i] / bc2;
+                moe.gate_scale[i] -= cfg.lr * mh / (vh.sqrt() + cfg.eps);
+            }
+            adapter.step(moe, &counts);
+        }
+    }
+
+    let loss_after = reconstruction_loss(moe, x);
+    FinetuneReport { loss_before, loss_after, steps: t_step, samples: q }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::converter::{convert_ffn, ConvertOptions};
+    use crate::model::{FfnWeights, MoeSpec};
+    use crate::profiling::ActivationProfile;
+    use crate::util::Rng;
+
+    fn setup(rng: &mut Rng) -> (FfnWeights, MoeLayerWeights, Tensor) {
+        let d = 12;
+        let d_h = 64;
+        let ffn = FfnWeights {
+            w_gate: Tensor::randn(rng, &[d, d_h], 0.5),
+            w_up: Tensor::randn(rng, &[d, d_h], 0.5),
+            w_down: Tensor::randn(rng, &[d_h, d], 0.5),
+        };
+        let xc = Tensor::randn(rng, &[256, d], 1.0);
+        let h = tensor::swiglu_hidden(&xc, &ffn.w_gate, &ffn.w_up);
+        let prof = ActivationProfile::from_hidden(&h, 12);
+        let spec: MoeSpec = "S2A2E8".parse().unwrap();
+        let moe = convert_ffn(&ffn, &prof, &spec, &ConvertOptions::default()).unwrap();
+        (ffn, moe, xc)
+    }
+
+    #[test]
+    fn teacher_equals_original_dense_ffn() {
+        let mut rng = Rng::new(51);
+        let (ffn, moe, _) = setup(&mut rng);
+        let x = Tensor::randn(&mut rng, &[9, 12], 1.0);
+        let teacher = dense_teacher(&moe, &x);
+        let dense = tensor::swiglu_ffn(&x, &ffn.w_gate, &ffn.w_up, &ffn.w_down);
+        assert!(teacher.max_abs_diff(&dense) < 1e-4);
+    }
+
+    #[test]
+    fn finetune_reduces_reconstruction_loss() {
+        let mut rng = Rng::new(52);
+        let (_, mut moe, xc) = setup(&mut rng);
+        let cfg = FinetuneConfig { epochs: 3, ..Default::default() };
+        let report = finetune_gates(&mut moe, &xc, &cfg);
+        assert!(report.steps > 0);
+        assert!(
+            report.loss_after <= report.loss_before,
+            "loss went up: {} -> {}",
+            report.loss_before,
+            report.loss_after
+        );
+        // u must have moved
+        assert!(moe.gate_scale.iter().any(|&u| u.abs() > 1e-6));
+    }
+
+    #[test]
+    fn finetune_zero_epochs_is_noop() {
+        let mut rng = Rng::new(53);
+        let (_, mut moe, xc) = setup(&mut rng);
+        let cfg = FinetuneConfig { epochs: 0, ..Default::default() };
+        let report = finetune_gates(&mut moe, &xc, &cfg);
+        assert_eq!(report.steps, 0);
+        assert_eq!(report.loss_before, report.loss_after);
+        assert!(moe.gate_scale.iter().all(|&u| u == 0.0));
+    }
+
+    #[test]
+    fn more_data_helps_or_holds() {
+        // Figure 4 shape: loss(2k-sample FT) <= loss(64-sample FT) on the
+        // same held-out probe (within tolerance).
+        let mut rng = Rng::new(54);
+        let (_, moe0, xc) = setup(&mut rng);
+        let probe = Tensor::randn(&mut rng, &[128, 12], 1.0);
+        let mut small = moe0.clone();
+        let mut large = moe0.clone();
+        let cfg = FinetuneConfig { epochs: 2, ..Default::default() };
+        let idx_small: Vec<usize> = (0..64).collect();
+        finetune_gates(&mut small, &xc.select_rows(&idx_small), &cfg);
+        finetune_gates(&mut large, &xc, &cfg);
+        let l_small = reconstruction_loss(&small, &probe);
+        let l_large = reconstruction_loss(&large, &probe);
+        assert!(
+            l_large <= l_small * 1.10,
+            "2k-sample FT much worse than 64-sample: {l_large} vs {l_small}"
+        );
+    }
+}

@@ -1,0 +1,244 @@
+//! Routing and gated MoE forward (rust reference path).
+//!
+//! The serving engine executes experts through XLA artifacts; this
+//! module is the bit-exact rust-side reference used by evaluation, the
+//! fine-tuner, and tests. Routing logic (scores → bias → top-N_k →
+//! gates) is shared by both paths via [`route_tokens`].
+
+use crate::model::MoeLayerWeights;
+use crate::tensor::{self, Tensor};
+
+/// Routing decision for one token.
+#[derive(Clone, Debug)]
+pub struct GateDecision {
+    /// Selected routed-expert ids (len = N_k), unordered.
+    pub experts: Vec<usize>,
+    /// Gate value per selected expert (`1 + s'_i · u_i`, Eq. 9).
+    pub gates: Vec<f32>,
+    /// Raw router scores `s` (len = N_r) — kept for fine-tuning.
+    pub scores: Vec<f32>,
+}
+
+/// Compute router scores for a batch of (normed) token vectors
+/// `x: [q, d]` and produce per-token gate decisions.
+///
+/// Scores are the representative-neuron SwiGLU responses (Eq. 8);
+/// selection adds the load-balance bias *only for ranking* (the bias
+/// never scales outputs), gates are `1 + softmax(s)_i · u_i`.
+pub fn route_tokens(moe: &MoeLayerWeights, x: &Tensor) -> Vec<GateDecision> {
+    let scores = moe.router.scores(x);
+    route_from_scores(moe, &scores)
+}
+
+/// Gate decisions from precomputed raw router scores `[q, N_r]` (the
+/// fused-artifact path computes scores on device; this finishes the
+/// bias + top-N_k + gate logic on host, where the bias adapts).
+pub fn route_from_scores(moe: &MoeLayerWeights, scores: &Tensor) -> Vec<GateDecision> {
+    let q = scores.shape[0];
+    let n_r = moe.spec.routed();
+    debug_assert_eq!(scores.shape[1], n_r);
+    let n_k = moe.spec.active;
+    let mut out = Vec::with_capacity(q);
+    for t in 0..q {
+        let s = scores.row(t);
+        let sp = tensor::softmax(s);
+        let ranked: Vec<f32> = (0..n_r).map(|i| sp[i] + moe.gate_bias[i]).collect();
+        let selected = tensor::top_k_indices(&ranked, n_k);
+        let gates = selected.iter().map(|&i| 1.0 + sp[i] * moe.gate_scale[i]).collect();
+        out.push(GateDecision { experts: selected, gates, scores: s.to_vec() });
+    }
+    out
+}
+
+/// Statistics of one MoE forward (feeds Figure 5 and the FLOPs counter).
+#[derive(Clone, Debug, Default)]
+pub struct MoeForwardStats {
+    /// tokens routed to each expert
+    pub expert_tokens: Vec<usize>,
+    /// total tokens processed
+    pub tokens: usize,
+}
+
+impl MoeForwardStats {
+    /// Utilization fraction p_i per expert (shares of routed tokens;
+    /// sums to 1 when any token was routed).
+    pub fn utilization(&self) -> Vec<f64> {
+        let total: usize = self.expert_tokens.iter().sum();
+        self.expert_tokens
+            .iter()
+            .map(|&c| if total == 0 { 0.0 } else { c as f64 / total as f64 })
+            .collect()
+    }
+}
+
+/// Full MoE FFN forward `F_MoE(x) = E_s(x) + Σ g_i E_i(x)` (Eq. 4) for a
+/// batch `x: [q, d]`. Returns output and routing stats.
+pub fn moe_ffn_forward(moe: &MoeLayerWeights, x: &Tensor) -> (Tensor, MoeForwardStats) {
+    let q = x.shape[0];
+    let d = x.shape[1];
+    let decisions = route_tokens(moe, x);
+
+    // shared expert: dense over the whole batch
+    let mut out = tensor::swiglu_ffn(x, &moe.shared.w_gate, &moe.shared.w_up, &moe.shared.w_down);
+
+    // group tokens by expert so each expert runs one batched GEMM —
+    // the same schedule the serving engine's dispatcher uses.
+    let n_r = moe.spec.routed();
+    let mut groups: Vec<Vec<(usize, f32)>> = vec![Vec::new(); n_r];
+    for (t, dec) in decisions.iter().enumerate() {
+        for (k, &e) in dec.experts.iter().enumerate() {
+            groups[e].push((t, dec.gates[k]));
+        }
+    }
+    // G-MoEfication compensation: deactivated experts contribute their
+    // calibration-mean output instead of zero. Add the total once, then
+    // subtract each *selected* expert's compensation inside its group.
+    if let Some(comp) = &moe.compensation {
+        let mut total = vec![0.0f32; d];
+        for c in comp {
+            for (t, v) in total.iter_mut().zip(c) {
+                *t += v;
+            }
+        }
+        for t in 0..q {
+            let row = out.row_mut(t);
+            for (o, v) in row.iter_mut().zip(&total) {
+                *o += v;
+            }
+        }
+        for (t, dec) in decisions.iter().enumerate() {
+            let row = out.row_mut(t);
+            for &e in &dec.experts {
+                for (o, v) in row.iter_mut().zip(&comp[e]) {
+                    *o -= v;
+                }
+            }
+        }
+    }
+
+    let mut stats = MoeForwardStats { expert_tokens: vec![0; n_r], tokens: q };
+    for (e, group) in groups.iter().enumerate() {
+        stats.expert_tokens[e] = group.len();
+        if group.is_empty() {
+            continue;
+        }
+        let idx: Vec<usize> = group.iter().map(|&(t, _)| t).collect();
+        let xe = x.select_rows(&idx);
+        let ye = tensor::swiglu_ffn(&xe, &moe.experts[e].w_gate, &moe.experts[e].w_up, &moe.experts[e].w_down);
+        for (r, &(t, g)) in group.iter().enumerate() {
+            let src = ye.row(r);
+            let dst = &mut out.row_mut(t)[..d];
+            for (o, v) in dst.iter_mut().zip(src) {
+                *o += g * v;
+            }
+        }
+    }
+    (out, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::converter::{convert_ffn, ConvertOptions};
+    use crate::model::{FfnWeights, MoeSpec};
+    use crate::profiling::ActivationProfile;
+    use crate::util::Rng;
+
+    /// Build a converted MoE layer from a random FFN for testing.
+    fn test_moe(rng: &mut Rng, spec: &str) -> (FfnWeights, MoeLayerWeights) {
+        let d = 16;
+        let d_h = 64;
+        let ffn = FfnWeights {
+            w_gate: Tensor::randn(rng, &[d, d_h], 0.4),
+            w_up: Tensor::randn(rng, &[d, d_h], 0.4),
+            w_down: Tensor::randn(rng, &[d_h, d], 0.4),
+        };
+        let x = Tensor::randn(rng, &[200, d], 1.0);
+        let h = tensor::swiglu_hidden(&x, &ffn.w_gate, &ffn.w_up);
+        let prof = ActivationProfile::from_hidden(&h, 8);
+        let spec: MoeSpec = spec.parse().unwrap();
+        let moe = convert_ffn(&ffn, &prof, &spec, &ConvertOptions::default()).unwrap();
+        (ffn, moe)
+    }
+
+    #[test]
+    fn all_experts_active_reconstructs_exactly() {
+        // With N_k = N_r and u = 0 the MoE must equal the dense FFN
+        // (partition + gates of 1 ⇒ identical sum, Eq. 5 with S_de = ∅).
+        let mut rng = Rng::new(11);
+        let (ffn, moe) = test_moe(&mut rng, "S3A5E8");
+        let x = Tensor::randn(&mut rng, &[12, 16], 1.0);
+        let dense = tensor::swiglu_ffn(&x, &ffn.w_gate, &ffn.w_up, &ffn.w_down);
+        let (sparse, _) = moe_ffn_forward(&moe, &x);
+        assert!(
+            dense.max_abs_diff(&sparse) < 1e-4,
+            "full-activation MoE differs from dense: {}",
+            dense.max_abs_diff(&sparse)
+        );
+    }
+
+    #[test]
+    fn sparse_moe_is_close_but_not_exact() {
+        let mut rng = Rng::new(12);
+        let (ffn, moe) = test_moe(&mut rng, "S3A3E8");
+        let x = Tensor::randn(&mut rng, &[40, 16], 1.0);
+        let dense = tensor::swiglu_ffn(&x, &ffn.w_gate, &ffn.w_up, &ffn.w_down);
+        let (sparse, stats) = moe_ffn_forward(&moe, &x);
+        let rel = {
+            let mut diff = dense.clone();
+            for (a, b) in diff.data.iter_mut().zip(&sparse.data) {
+                *a -= b;
+            }
+            diff.norm() / dense.norm()
+        };
+        assert!(rel < 0.8, "reconstruction error too large: {rel}");
+        assert!(rel > 0.0, "sparse forward suspiciously exact");
+        // every token went to exactly N_k experts
+        let total: usize = stats.expert_tokens.iter().sum();
+        assert_eq!(total, 40 * 3);
+    }
+
+    #[test]
+    fn route_tokens_respects_nk_and_bias() {
+        let mut rng = Rng::new(13);
+        let (_, mut moe) = test_moe(&mut rng, "S3A3E8");
+        let x = Tensor::randn(&mut rng, &[10, 16], 1.0);
+        let dec = route_tokens(&moe, &x);
+        for d in &dec {
+            assert_eq!(d.experts.len(), 3);
+            assert_eq!(d.scores.len(), 5);
+            // default gates are exactly 1 (u initialized to 0)
+            assert!(d.gates.iter().all(|&g| (g - 1.0).abs() < 1e-7));
+        }
+        // huge bias forces expert 4 into every selection...
+        moe.gate_bias[4] = 1e6;
+        let dec2 = route_tokens(&moe, &x);
+        assert!(dec2.iter().all(|d| d.experts.contains(&4)));
+        // ...but gates stay at 1: bias must not leak into outputs
+        for d in &dec2 {
+            assert!(d.gates.iter().all(|&g| (g - 1.0).abs() < 1e-7));
+        }
+    }
+
+    #[test]
+    fn gate_scale_changes_gates() {
+        let mut rng = Rng::new(14);
+        let (_, mut moe) = test_moe(&mut rng, "S3A3E8");
+        for u in moe.gate_scale.iter_mut() {
+            *u = 2.0;
+        }
+        let x = Tensor::randn(&mut rng, &[5, 16], 1.0);
+        let dec = route_tokens(&moe, &x);
+        for d in &dec {
+            assert!(d.gates.iter().all(|&g| g > 1.0), "gates {:?}", d.gates);
+        }
+    }
+
+    #[test]
+    fn utilization_sums_to_one() {
+        let stats = MoeForwardStats { expert_tokens: vec![10, 30, 0, 20], tokens: 60 };
+        let u = stats.utilization();
+        assert!((u.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert_eq!(u[2], 0.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! MoE runtime logic: analytical-router scoring, top-`N_k` gating with
+//! load-balancing bias (Eq. 9), expert utilization tracking, the
+//! adaptive bias updater (§4.3), and the lightweight gate fine-tuner.
+
+mod gating;
+mod balance;
+mod finetune;
+
+pub use balance::{BalanceConfig, BiasAdapter, UtilizationTracker};
+pub use finetune::{finetune_gates, FinetuneConfig, FinetuneReport};
+pub use gating::{moe_ffn_forward, route_from_scores, route_tokens, GateDecision, MoeForwardStats};

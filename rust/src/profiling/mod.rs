@@ -1,0 +1,276 @@
+//! Activation profiling (paper §3, §A.2).
+//!
+//! Given FFN hidden states `H ∈ R^{q×d_h}` captured on a calibration
+//! set, build the ATopK binary activation matrix `A` (per token, the
+//! top-`K_a` neurons by |h|), per-neuron activation rates `μ`, and the
+//! statistics behind Figures 1–2 (activation distribution, bimodality).
+//!
+//! Hidden states come either from [`crate::runtime`] (the `ffn_hidden`
+//! artifact — the production path) or from [`crate::tensor::swiglu_hidden`]
+//! (pure-rust path used by tests and the conversion CLI when artifacts
+//! are not built yet).
+
+use crate::tensor::{atopk_mask, Tensor};
+use crate::util::stats::{bimodality_coefficient, Histogram};
+
+/// Activation profile of ONE FFN layer over a calibration set.
+#[derive(Clone, Debug)]
+pub struct ActivationProfile {
+    /// Neuron count `d_h`.
+    pub d_h: usize,
+    /// Tokens profiled `q`.
+    pub q: usize,
+    /// ATopK parameter `K_a`.
+    pub k_a: usize,
+    /// Binary activation matrix, row-major `[q, d_h]` (Eq. 14).
+    pub a: Vec<u8>,
+    /// Per-neuron mean |h| (used by the WINA baseline and router checks).
+    pub mean_abs_h: Vec<f32>,
+    /// Sampled raw activations (for the Figure-1 histogram).
+    pub h_sample: Vec<f32>,
+}
+
+impl ActivationProfile {
+    /// Build a profile from hidden states `h: [q, d_h]`.
+    pub fn from_hidden(h: &Tensor, k_a: usize) -> ActivationProfile {
+        assert_eq!(h.rank(), 2);
+        let (q, d_h) = (h.shape[0], h.shape[1]);
+        assert!(k_a <= d_h, "K_a={k_a} > d_h={d_h}");
+        let a = atopk_mask(h, k_a);
+        let mut mean_abs_h = vec![0.0f32; d_h];
+        for t in 0..q {
+            let row = h.row(t);
+            for (i, v) in row.iter().enumerate() {
+                mean_abs_h[i] += v.abs();
+            }
+        }
+        for v in mean_abs_h.iter_mut() {
+            *v /= q as f32;
+        }
+        // reservoir-free subsample for fig1: every k-th value, cap 100k
+        let stride = (q * d_h / 100_000).max(1);
+        let h_sample: Vec<f32> = h.data.iter().step_by(stride).copied().collect();
+        ActivationProfile { d_h, q, k_a, a, mean_abs_h, h_sample }
+    }
+
+    /// Merge another profile of the same layer (concatenates tokens).
+    pub fn merge(&mut self, other: &ActivationProfile) {
+        assert_eq!(self.d_h, other.d_h);
+        assert_eq!(self.k_a, other.k_a);
+        let q0 = self.q;
+        self.a.extend_from_slice(&other.a);
+        for i in 0..self.d_h {
+            self.mean_abs_h[i] = (self.mean_abs_h[i] * q0 as f32
+                + other.mean_abs_h[i] * other.q as f32)
+                / (q0 + other.q) as f32;
+        }
+        self.h_sample.extend_from_slice(&other.h_sample);
+        self.q += other.q;
+    }
+
+    /// Activation rates `μ_i = mean(c_i)` (Eq. 15).
+    pub fn rates(&self) -> Vec<f32> {
+        let mut mu = vec![0.0f32; self.d_h];
+        for t in 0..self.q {
+            let row = &self.a[t * self.d_h..(t + 1) * self.d_h];
+            for (i, &b) in row.iter().enumerate() {
+                mu[i] += b as f32;
+            }
+        }
+        for v in mu.iter_mut() {
+            *v /= self.q as f32;
+        }
+        mu
+    }
+
+    /// Activation feature column `c_i ∈ {0,1}^q` of neuron `i`.
+    pub fn column(&self, i: usize) -> Vec<f32> {
+        (0..self.q).map(|t| self.a[t * self.d_h + i] as f32).collect()
+    }
+
+    /// Rows = selected neurons, cols = tokens: the points clustered by
+    /// balanced K-means (`[n, q]`).
+    pub fn columns_tensor(&self, neurons: &[usize]) -> Tensor {
+        let mut t = Tensor::zeros(&[neurons.len(), self.q]);
+        for (r, &i) in neurons.iter().enumerate() {
+            let row = t.row_mut(r);
+            for (tok, v) in row.iter_mut().enumerate() {
+                *v = self.a[tok * self.d_h + i] as f32;
+            }
+        }
+        t
+    }
+
+    /// Figure 1: histogram of raw hidden activations.
+    pub fn activation_histogram(&self, bins: usize) -> Histogram {
+        let lo = self.h_sample.iter().cloned().fold(f32::INFINITY, f32::min);
+        let hi = self.h_sample.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let (lo, hi) = if lo < hi { (lo, hi) } else { (-1.0, 1.0) };
+        Histogram::from_values(&self.h_sample, lo, hi + 1e-6, bins)
+    }
+
+    /// Figure 2: histogram of activation rates.
+    pub fn rate_histogram(&self, bins: usize) -> Histogram {
+        Histogram::from_values(&self.rates(), 0.0, 1.0 + 1e-6, bins)
+    }
+
+    /// Bimodality coefficient of the rate distribution (> 5/9 ⇒ the
+    /// two-group structure of §3.2 is present).
+    pub fn rate_bimodality(&self) -> f64 {
+        bimodality_coefficient(&self.rates())
+    }
+
+    /// Fraction of |h| values below `threshold` — quantifies Figure 1's
+    /// "sharply peaked at zero".
+    pub fn sparsity_fraction(&self, threshold: f32) -> f64 {
+        if self.h_sample.is_empty() {
+            return 0.0;
+        }
+        self.h_sample.iter().filter(|v| v.abs() < threshold).count() as f64
+            / self.h_sample.len() as f64
+    }
+
+    /// Indices of the `n` highest-rate neurons (shared-expert candidates,
+    /// Eq. 16). Ties broken by lower index.
+    pub fn top_rate_neurons(&self, n: usize) -> Vec<usize> {
+        let mu = self.rates();
+        crate::tensor::top_k_indices(&mu, n)
+    }
+
+    /// Overlap |A ∩ B| / n between the top-`n` neuron sets of two
+    /// profiles — the paper's domain-invariance measurement (§5.3,
+    /// 80–86% overlap across math/science/code).
+    pub fn shared_overlap(&self, other: &ActivationProfile, n: usize) -> f64 {
+        let a: std::collections::HashSet<usize> = self.top_rate_neurons(n).into_iter().collect();
+        let b: std::collections::HashSet<usize> = other.top_rate_neurons(n).into_iter().collect();
+        a.intersection(&b).count() as f64 / n as f64
+    }
+}
+
+/// Capture profiles for every layer of a dense model with pure-rust
+/// matmuls (no XLA dependency): runs the *real* forward pass token by
+/// token including attention, so the hidden states match the model the
+/// serving path executes. `tokens: [q]` ids, processed in one sequence
+/// chunk per `seq_len` window.
+pub fn profile_dense_model(
+    model: &crate::model::ModelWeights,
+    token_ids: &[usize],
+    seq_len: usize,
+    k_a: usize,
+) -> Vec<ActivationProfile> {
+    let fwd = crate::eval::forward::DenseForward::new(model);
+    let mut profiles: Vec<Option<ActivationProfile>> = vec![None; model.config.n_layers];
+    for chunk in token_ids.chunks(seq_len) {
+        let caps = fwd.capture_hidden(chunk);
+        for (l, h) in caps.into_iter().enumerate() {
+            let p = ActivationProfile::from_hidden(&h, k_a);
+            match &mut profiles[l] {
+                Some(acc) => acc.merge(&p),
+                slot => *slot = Some(p),
+            }
+        }
+    }
+    profiles.into_iter().map(|p| p.expect("no calibration tokens")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn synthetic_hidden(rng: &mut Rng, q: usize, d_h: usize, hot: &[usize]) -> Tensor {
+        // "hot" neurons get large activations on every token; others are
+        // small noise with occasional structured spikes.
+        let mut h = Tensor::zeros(&[q, d_h]);
+        for t in 0..q {
+            let row = h.row_mut(t);
+            for (i, v) in row.iter_mut().enumerate() {
+                *v = 0.01 * rng.normal();
+            }
+            for &i in hot {
+                row[i] = 2.0 + rng.normal() * 0.1;
+            }
+            // a few conditional neurons fire per token
+            for _ in 0..4 {
+                let i = rng.below(d_h);
+                row[i] += 1.0;
+            }
+        }
+        h
+    }
+
+    #[test]
+    fn rates_detect_hot_neurons() {
+        let mut rng = Rng::new(1);
+        let hot = [3usize, 17, 42];
+        let h = synthetic_hidden(&mut rng, 200, 64, &hot);
+        let p = ActivationProfile::from_hidden(&h, 8);
+        let mu = p.rates();
+        for &i in &hot {
+            assert!(mu[i] > 0.99, "hot neuron {i} rate {}", mu[i]);
+        }
+        let top = p.top_rate_neurons(3);
+        let mut ts = top.clone();
+        ts.sort_unstable();
+        assert_eq!(ts, hot.to_vec());
+    }
+
+    #[test]
+    fn rates_are_k_over_dh_on_average() {
+        let mut rng = Rng::new(2);
+        let h = Tensor::randn(&mut rng, &[100, 50], 1.0);
+        let p = ActivationProfile::from_hidden(&h, 10);
+        let mu = p.rates();
+        let mean_rate: f32 = mu.iter().sum::<f32>() / 50.0;
+        assert!((mean_rate - 0.2).abs() < 1e-6, "mean rate {mean_rate} != K_a/d_h");
+    }
+
+    #[test]
+    fn merge_concatenates() {
+        let mut rng = Rng::new(3);
+        let h1 = Tensor::randn(&mut rng, &[30, 16], 1.0);
+        let h2 = Tensor::randn(&mut rng, &[20, 16], 1.0);
+        let mut p1 = ActivationProfile::from_hidden(&h1, 4);
+        let p2 = ActivationProfile::from_hidden(&h2, 4);
+        p1.merge(&p2);
+        assert_eq!(p1.q, 50);
+        assert_eq!(p1.a.len(), 50 * 16);
+        let mean_rate: f32 = p1.rates().iter().sum::<f32>() / 16.0;
+        assert!((mean_rate - 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bimodality_on_structured_activations() {
+        let mut rng = Rng::new(4);
+        let hot: Vec<usize> = (0..8).collect();
+        let h = synthetic_hidden(&mut rng, 300, 128, &hot);
+        let p = ActivationProfile::from_hidden(&h, 12);
+        assert!(p.rate_bimodality() > 5.0 / 9.0, "bimodality {}", p.rate_bimodality());
+    }
+
+    #[test]
+    fn columns_tensor_matches_column() {
+        let mut rng = Rng::new(5);
+        let h = Tensor::randn(&mut rng, &[40, 12], 1.0);
+        let p = ActivationProfile::from_hidden(&h, 3);
+        let t = p.columns_tensor(&[5, 9]);
+        assert_eq!(t.shape, vec![2, 40]);
+        assert_eq!(t.row(0), p.column(5).as_slice());
+        assert_eq!(t.row(1), p.column(9).as_slice());
+    }
+
+    #[test]
+    fn overlap_of_identical_profiles_is_one() {
+        let mut rng = Rng::new(6);
+        let h = Tensor::randn(&mut rng, &[50, 32], 1.0);
+        let p = ActivationProfile::from_hidden(&h, 6);
+        assert_eq!(p.shared_overlap(&p, 8), 1.0);
+    }
+
+    #[test]
+    fn sparsity_fraction_counts_near_zero() {
+        let h = Tensor::from_vec(vec![0.001, -0.002, 5.0, 0.0003], &[1, 4]);
+        let p = ActivationProfile::from_hidden(&h, 1);
+        assert!((p.sparsity_fraction(0.01) - 0.75).abs() < 1e-9);
+    }
+}

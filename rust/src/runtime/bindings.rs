@@ -1,0 +1,158 @@
+//! Weight-buffer bindings: upload a [`ModelWeights`] to the PJRT device
+//! once, in exactly the argument order the artifacts expect
+//! (`aot.py`'s sorted-name convention), and keep the buffers alive for
+//! the serving engine's hot loop.
+
+use crate::model::{LayerFfn, ModelWeights, Router};
+use crate::runtime::XlaRuntime;
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Dense-model parameter buffers in sorted-name order (matches
+/// `aot.py::dense_param_names`). BTreeMap iteration is byte-lexicographic,
+/// identical to python's `sorted()` on ASCII names.
+pub struct ModelBuffers {
+    pub named: BTreeMap<String, xla::PjRtBuffer>,
+}
+
+impl ModelBuffers {
+    /// Upload all dense parameters of a model. MoE layers contribute
+    /// zero-filled placeholders for the (unused) dense FFN slots only if
+    /// `fill_ffn_zeros` — the dense artifacts need those args, the MoE
+    /// artifacts don't reference them.
+    pub fn from_model(rt: &XlaRuntime, model: &ModelWeights) -> Result<ModelBuffers> {
+        let mut named = BTreeMap::new();
+        let mut up = |name: String, t: &Tensor| -> Result<()> {
+            named.insert(name, rt.upload(t)?);
+            Ok(())
+        };
+        up("embed".into(), &model.embed)?;
+        up("pos".into(), &model.pos)?;
+        up("final_norm".into(), &vec1(&model.final_norm))?;
+        up("unembed".into(), &model.unembed)?;
+        for (l, layer) in model.layers.iter().enumerate() {
+            let p = format!("layers.{l}");
+            up(format!("{p}.attn_norm"), &vec1(&layer.attn_norm))?;
+            up(format!("{p}.ffn_norm"), &vec1(&layer.ffn_norm))?;
+            up(format!("{p}.attn.wq"), &layer.attn.wq)?;
+            up(format!("{p}.attn.wk"), &layer.attn.wk)?;
+            up(format!("{p}.attn.wv"), &layer.attn.wv)?;
+            up(format!("{p}.attn.wo"), &layer.attn.wo)?;
+            if let LayerFfn::Dense(f) = &layer.ffn {
+                up(format!("{p}.ffn.w_gate"), &f.w_gate)?;
+                up(format!("{p}.ffn.w_up"), &f.w_up)?;
+                up(format!("{p}.ffn.w_down"), &f.w_down)?;
+            }
+        }
+        Ok(ModelBuffers { named })
+    }
+
+    /// Buffers in sorted order, followed by `extra` (runtime inputs).
+    pub fn args_with<'a>(&'a self, extra: &[&'a xla::PjRtBuffer]) -> Vec<&'a xla::PjRtBuffer> {
+        self.named.values().chain(extra.iter().copied()).collect()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&xla::PjRtBuffer> {
+        self.named.get(name)
+    }
+}
+
+fn vec1(v: &[f32]) -> Tensor {
+    Tensor::from_vec(v.to_vec(), &[v.len()])
+}
+
+/// Stacked MoE-layer buffers in sorted-name order (matches
+/// `aot.py::moe_param_names`): per layer,
+/// `moe.{l}.{bias, experts.w_down, experts.w_gate, experts.w_up,
+/// router.w_gate_r, router.w_up_r, scale, shared.w_down, shared.w_gate,
+/// shared.w_up}`.
+pub struct MoeModelBuffers {
+    pub named: BTreeMap<String, xla::PjRtBuffer>,
+}
+
+impl MoeModelBuffers {
+    pub fn from_model(rt: &XlaRuntime, model: &ModelWeights) -> Result<MoeModelBuffers> {
+        let mut named = BTreeMap::new();
+        for (l, layer) in model.layers.iter().enumerate() {
+            let LayerFfn::Moe(moe) = &layer.ffn else {
+                bail!("layer {l} is not MoE — convert the model first");
+            };
+            let Router::Analytical(rw) = &moe.router else {
+                bail!("layer {l}: monolithic MoE artifacts need the analytical router");
+            };
+            let p = format!("moe.{l}");
+            let n_r = moe.experts.len();
+            let d = moe.shared.w_gate.shape[0];
+            let m = moe.experts[0].hidden_dim();
+            // stack experts: [Nr, d, m] / [Nr, m, d]
+            let stack = |f: &dyn Fn(usize) -> Tensor, shape: &[usize]| -> Tensor {
+                let mut out = Tensor::zeros(shape);
+                let per = shape[1] * shape[2];
+                for e in 0..n_r {
+                    let t = f(e);
+                    out.data[e * per..(e + 1) * per].copy_from_slice(&t.data);
+                }
+                out
+            };
+            let ew_g = stack(&|e| moe.experts[e].w_gate.clone(), &[n_r, d, m]);
+            let ew_u = stack(&|e| moe.experts[e].w_up.clone(), &[n_r, d, m]);
+            let ew_d = stack(&|e| moe.experts[e].w_down.clone(), &[n_r, m, d]);
+            named.insert(format!("{p}.experts.w_gate"), rt.upload(&ew_g)?);
+            named.insert(format!("{p}.experts.w_up"), rt.upload(&ew_u)?);
+            named.insert(format!("{p}.experts.w_down"), rt.upload(&ew_d)?);
+            named.insert(format!("{p}.shared.w_gate"), rt.upload(&moe.shared.w_gate)?);
+            named.insert(format!("{p}.shared.w_up"), rt.upload(&moe.shared.w_up)?);
+            named.insert(format!("{p}.shared.w_down"), rt.upload(&moe.shared.w_down)?);
+            named.insert(format!("{p}.router.w_gate_r"), rt.upload(&rw.w_gate_r)?);
+            named.insert(format!("{p}.router.w_up_r"), rt.upload(&rw.w_up_r)?);
+            named.insert(format!("{p}.scale"), rt.upload(&vec1(&moe.gate_scale))?);
+            named.insert(format!("{p}.bias"), rt.upload(&vec1(&moe.gate_bias))?);
+        }
+        Ok(MoeModelBuffers { named })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&xla::PjRtBuffer> {
+        self.named.get(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::model_config;
+    use crate::util::Rng;
+
+    #[test]
+    fn dense_buffer_names_match_aot_convention() {
+        // the exact arg-order contract with aot.py: sorted names
+        let cfg = model_config("tiny").unwrap();
+        let mut rng = Rng::new(311);
+        let model = ModelWeights::random(&cfg, &mut rng);
+        // build name list without uploading (no runtime needed)
+        let mut names = vec![
+            "embed".to_string(),
+            "pos".into(),
+            "final_norm".into(),
+            "unembed".into(),
+        ];
+        for l in 0..cfg.n_layers {
+            let p = format!("layers.{l}");
+            names.push(format!("{p}.attn_norm"));
+            names.push(format!("{p}.ffn_norm"));
+            for w in ["wq", "wk", "wv", "wo"] {
+                names.push(format!("{p}.attn.{w}"));
+            }
+            for w in ["w_gate", "w_up", "w_down"] {
+                names.push(format!("{p}.ffn.{w}"));
+            }
+        }
+        names.sort();
+        // expected python sort: layers.0.attn.wk < layers.0.attn.wo < wq < wv
+        let i = names.iter().position(|n| n == "layers.0.attn.wk").unwrap();
+        assert_eq!(names[i + 1], "layers.0.attn.wo");
+        assert_eq!(names[i + 2], "layers.0.attn.wq");
+        assert_eq!(names[i + 3], "layers.0.attn.wv");
+        let _ = model;
+    }
+}

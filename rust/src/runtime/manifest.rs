@@ -1,0 +1,142 @@
+//! The artifact manifest (written by `python/compile/aot.py`).
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Dtype of an artifact argument.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+/// One argument of an artifact, in call order.
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub file: String,
+    pub args: Vec<ArgSpec>,
+    pub outputs: Vec<String>,
+    pub meta: Json,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub artifacts: HashMap<String, ArtifactInfo>,
+    pub models: Json,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let j = Json::parse(&text).context("parse manifest.json")?;
+        let mut artifacts = HashMap::new();
+        for (name, a) in j.get("artifacts").as_obj().context("artifacts")? {
+            let args = a
+                .get("args")
+                .as_arr()
+                .context("args")?
+                .iter()
+                .map(|arg| ArgSpec {
+                    name: arg.get("name").as_str().unwrap_or("?").to_string(),
+                    shape: arg
+                        .get("shape")
+                        .as_arr()
+                        .map(|s| s.iter().filter_map(|v| v.as_usize()).collect())
+                        .unwrap_or_default(),
+                    dtype: if arg.get("dtype").as_str() == Some("i32") {
+                        Dtype::I32
+                    } else {
+                        Dtype::F32
+                    },
+                })
+                .collect();
+            let outputs = a
+                .get("outputs")
+                .as_arr()
+                .map(|o| o.iter().filter_map(|v| v.as_str().map(String::from)).collect())
+                .unwrap_or_default();
+            artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    file: a.get("file").as_str().unwrap_or("").to_string(),
+                    args,
+                    outputs,
+                    meta: a.get("meta").clone(),
+                },
+            );
+        }
+        Ok(Manifest { artifacts, models: j.get("models").clone() })
+    }
+
+    /// Batch buckets available for a (family, model) pair, ascending —
+    /// e.g. `decode_dense_small_b{B}_t{T}`. Used by the batcher.
+    pub fn batch_buckets(&self, prefix: &str) -> Vec<usize> {
+        let mut out: Vec<usize> = self
+            .artifacts
+            .values()
+            .filter_map(|a| {
+                let name = &a.file;
+                if name.starts_with(prefix) {
+                    a.meta.get("batch").as_usize()
+                } else {
+                    None
+                }
+            })
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join("cmoe_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("manifest.json");
+        std::fs::write(
+            &path,
+            r#"{
+              "version": 1,
+              "models": {"tiny": {"d_model": 64}},
+              "artifacts": {
+                "decode_dense_tiny_b1_t128": {
+                  "file": "decode_dense_tiny_b1_t128.hlo.txt",
+                  "args": [
+                    {"name": "embed", "shape": [256, 64], "dtype": "f32"},
+                    {"name": "pos", "shape": [], "dtype": "i32"}
+                  ],
+                  "outputs": ["logits", "kv"],
+                  "meta": {"batch": 1, "model": "tiny"}
+                }
+              }
+            }"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&path).unwrap();
+        let a = &m.artifacts["decode_dense_tiny_b1_t128"];
+        assert_eq!(a.args.len(), 2);
+        assert_eq!(a.args[0].shape, vec![256, 64]);
+        assert_eq!(a.args[0].dtype, Dtype::F32);
+        assert_eq!(a.args[1].dtype, Dtype::I32);
+        assert_eq!(a.outputs, vec!["logits", "kv"]);
+        assert_eq!(m.models.get("tiny").get("d_model").as_usize(), Some(64));
+        assert_eq!(m.batch_buckets("decode_dense_tiny"), vec![1]);
+    }
+}

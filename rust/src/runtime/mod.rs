@@ -1,0 +1,213 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts (`make artifacts`)
+//! and executes them on the CPU PJRT client. Python never runs here.
+//!
+//! Key design points:
+//! * **HLO text interchange** — `HloModuleProto::from_text_file`
+//!   re-assigns instruction ids, sidestepping the 64-bit-id proto
+//!   incompatibility between jax ≥ 0.5 and xla_extension 0.5.1.
+//! * **Weights upload once** — artifacts take weights as arguments;
+//!   [`ModelBuffers`] caches weight `PjRtBuffer`s per model so the hot
+//!   loop only uploads activations (`execute_b`).
+//! * **Executable cache** — each artifact is compiled on first use and
+//!   memoized (compilation is tens of ms; decode steps are sub-ms).
+
+mod manifest;
+mod bindings;
+
+pub use bindings::{ModelBuffers, MoeModelBuffers};
+pub use manifest::{ArgSpec, ArtifactInfo, Manifest};
+
+use crate::tensor::Tensor;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// Handle to the PJRT client + artifact registry.
+pub struct XlaRuntime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl XlaRuntime {
+    /// Open an artifact directory (must contain `manifest.json`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(XlaRuntime { client, manifest, dir, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Artifact names available.
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.manifest.artifacts.keys().cloned().collect()
+    }
+
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.manifest.artifacts.contains_key(name)
+    }
+
+    /// Compile (or fetch the cached) executable for an artifact.
+    pub fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let info = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        let path = self.dir.join(&info.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        let exe = Arc::new(exe);
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Precompile a set of artifacts (warm-up before serving).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    // ---- host <-> device transfers ------------------------------------
+
+    /// Upload an f32 tensor.
+    pub fn upload(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(&t.data, &t.shape, None)
+            .map_err(|e| anyhow!("upload: {e:?}"))
+    }
+
+    /// Upload a raw f32 slice with an explicit shape.
+    pub fn upload_f32(&self, data: &[f32], shape: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, shape, None)
+            .map_err(|e| anyhow!("upload_f32: {e:?}"))
+    }
+
+    /// Upload i32 data (token ids, positions).
+    pub fn upload_i32(&self, data: &[i32], shape: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, shape, None)
+            .map_err(|e| anyhow!("upload_i32: {e:?}"))
+    }
+
+    /// Upload a scalar i32 (shape []).
+    pub fn upload_scalar_i32(&self, v: i32) -> Result<xla::PjRtBuffer> {
+        self.upload_i32(&[v], &[])
+    }
+
+    /// Download a buffer into a [`Tensor`] with the given shape.
+    pub fn download(&self, buf: &xla::PjRtBuffer, shape: &[usize]) -> Result<Tensor> {
+        let lit = buf.to_literal_sync().map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let data: Vec<f32> = lit.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        if data.len() != shape.iter().product::<usize>() {
+            bail!("download: {} elements but shape {:?}", data.len(), shape);
+        }
+        Ok(Tensor::from_vec(data, shape))
+    }
+
+    /// Execute an artifact on device buffers. The jax-lowered modules
+    /// return a tuple; PJRT untuples it, so element `k` of the result is
+    /// the k-th output (single replica).
+    pub fn execute(
+        &self,
+        name: &str,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let exe = self.executable(name)?;
+        let info = &self.manifest.artifacts[name];
+        if args.len() != info.args.len() {
+            bail!(
+                "artifact '{name}' wants {} args, got {} — arg order: {:?}",
+                info.args.len(),
+                args.len(),
+                info.args.iter().map(|a| a.name.as_str()).collect::<Vec<_>>()
+            );
+        }
+        let mut out = exe.execute_b(args).map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        if out.is_empty() {
+            bail!("execute {name}: no replica output");
+        }
+        Ok(out.swap_remove(0))
+    }
+
+    /// Execute with host literals (slow path: uploads everything).
+    pub fn execute_literals(
+        &self,
+        name: &str,
+        args: &[xla::Literal],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let exe = self.executable(name)?;
+        let mut out = exe.execute(args).map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        if out.is_empty() {
+            bail!("execute {name}: no replica output");
+        }
+        Ok(out.swap_remove(0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// These tests need `make artifacts` to have run; they are skipped
+    /// (not failed) otherwise so `cargo test` works on a fresh clone.
+    fn runtime() -> Option<XlaRuntime> {
+        let dir = crate::test_artifact_dir()?;
+        XlaRuntime::load(dir).ok()
+    }
+
+    #[test]
+    fn manifest_lists_tiny_artifacts() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.has_artifact("ffn_hidden_tiny_q128"));
+        assert!(rt.has_artifact("decode_dense_tiny_b1_t128"));
+    }
+
+    #[test]
+    fn ffn_hidden_artifact_matches_rust_tensor_math() {
+        let Some(rt) = runtime() else { return };
+        let mut rng = crate::util::Rng::new(301);
+        let d = 64;
+        let dh = 256; // tiny config
+        let x = Tensor::randn(&mut rng, &[128, d], 1.0);
+        let wg = Tensor::randn(&mut rng, &[d, dh], 0.3);
+        let wu = Tensor::randn(&mut rng, &[d, dh], 0.3);
+        let bufs =
+            [rt.upload(&x).unwrap(), rt.upload(&wg).unwrap(), rt.upload(&wu).unwrap()];
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        let out = rt.execute("ffn_hidden_tiny_q128", &refs).unwrap();
+        let got = rt.download(&out[0], &[128, dh]).unwrap();
+        let want = crate::tensor::swiglu_hidden(&x, &wg, &wu);
+        assert!(got.max_abs_diff(&want) < 1e-3, "diff {}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn wrong_arg_count_is_reported() {
+        let Some(rt) = runtime() else { return };
+        let b = rt.upload_scalar_i32(0).unwrap();
+        let err = match rt.execute("ffn_hidden_tiny_q128", &[&b]) {
+            Err(e) => e,
+            Ok(_) => panic!("expected arg-count error"),
+        };
+        assert!(err.to_string().contains("wants 3 args"));
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.executable("no_such_artifact").is_err());
+    }
+}

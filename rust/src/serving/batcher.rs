@@ -1,0 +1,143 @@
+//! Wave-forming continuous batcher.
+//!
+//! Requests accumulate in a FIFO queue; [`Batcher::take_wave`] forms the
+//! largest available batch that fits a compiled bucket size
+//! (e.g. {1, 8, 32}), waiting up to `max_wait` for more arrivals when
+//! the queue is smaller than the largest bucket. Prompts inside a wave
+//! are left-padded bucket-wise by the engine.
+
+use crate::serving::request::Request;
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// Batcher policy.
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    /// Compiled batch buckets, ascending (from the artifact manifest).
+    pub buckets: Vec<usize>,
+    /// How long to hold a non-full wave open for late arrivals.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { buckets: vec![1, 8, 32], max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// FIFO queue + wave former. Thread-safe wrapper lives in the engine.
+pub struct Batcher {
+    cfg: BatcherConfig,
+    queue: VecDeque<(Request, Instant)>,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        assert!(!cfg.buckets.is_empty(), "need at least one batch bucket");
+        let mut cfg = cfg;
+        cfg.buckets.sort_unstable();
+        Batcher { cfg, queue: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, r: Request) {
+        self.queue.push_back((r, Instant::now()));
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Bucket the next wave would use for `n` queued requests: the
+    /// smallest bucket ≥ n, or the largest bucket if n exceeds all.
+    pub fn bucket_for(&self, n: usize) -> usize {
+        for &b in &self.cfg.buckets {
+            if n <= b {
+                return b;
+            }
+        }
+        *self.cfg.buckets.last().unwrap()
+    }
+
+    /// Pop a wave: up to `bucket` requests (bucket chosen by queue
+    /// depth + hold policy). Returns requests with their enqueue times.
+    /// `None` if the queue is empty or still within the hold window.
+    pub fn take_wave(&mut self) -> Option<Vec<(Request, Instant)>> {
+        let n = self.queue.len();
+        if n == 0 {
+            return None;
+        }
+        let max_bucket = *self.cfg.buckets.last().unwrap();
+        let oldest = self.queue.front().unwrap().1;
+        // hold a partial wave open while fresh and below the max bucket
+        if n < max_bucket && oldest.elapsed() < self.cfg.max_wait {
+            return None;
+        }
+        let bucket = self.bucket_for(n);
+        let take = n.min(bucket);
+        Some(self.queue.drain(..take).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::request::GenParams;
+
+    fn req(id: u64) -> Request {
+        Request::new(id, vec![1, 2], GenParams::default())
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let b = Batcher::new(BatcherConfig { buckets: vec![1, 8, 32], max_wait: Duration::ZERO });
+        assert_eq!(b.bucket_for(1), 1);
+        assert_eq!(b.bucket_for(2), 8);
+        assert_eq!(b.bucket_for(8), 8);
+        assert_eq!(b.bucket_for(9), 32);
+        assert_eq!(b.bucket_for(100), 32);
+    }
+
+    #[test]
+    fn wave_never_exceeds_bucket() {
+        let mut b =
+            Batcher::new(BatcherConfig { buckets: vec![1, 4], max_wait: Duration::ZERO });
+        for i in 0..10 {
+            b.push(req(i));
+        }
+        let wave = b.take_wave().unwrap();
+        assert_eq!(wave.len(), 4);
+        assert_eq!(b.len(), 6);
+        // FIFO order preserved
+        assert_eq!(wave[0].0.id, 0);
+        assert_eq!(wave[3].0.id, 3);
+    }
+
+    #[test]
+    fn hold_window_delays_partial_waves() {
+        let mut b = Batcher::new(BatcherConfig {
+            buckets: vec![1, 8],
+            max_wait: Duration::from_secs(60),
+        });
+        b.push(req(0));
+        // fresh single request below max bucket: held
+        assert!(b.take_wave().is_none());
+        // fill to the max bucket: released immediately
+        for i in 1..8 {
+            b.push(req(i));
+        }
+        assert_eq!(b.take_wave().unwrap().len(), 8);
+    }
+
+    #[test]
+    fn zero_wait_releases_immediately() {
+        let mut b =
+            Batcher::new(BatcherConfig { buckets: vec![1, 8], max_wait: Duration::ZERO });
+        b.push(req(0));
+        assert_eq!(b.take_wave().unwrap().len(), 1);
+        assert!(b.take_wave().is_none());
+    }
+}

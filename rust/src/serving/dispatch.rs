@@ -1,0 +1,226 @@
+//! Capacity-factor expert dispatch (the schedule GPU MoE serving uses,
+//! and the Table 9 FLOPs-saving mechanism).
+//!
+//! Given per-token routing decisions, gather each expert's tokens into
+//! a fixed-capacity block `xs: [N_r, C, d]` (padding unused slots with
+//! zeros) so ALL routed experts execute in ONE grouped-kernel call.
+//! Tokens that overflow an expert's capacity are returned and processed
+//! in a follow-up round (never dropped — reconstruction, not quality,
+//! would silently degrade otherwise).
+
+use crate::moe::GateDecision;
+use crate::tensor::Tensor;
+
+/// Builds grouped expert inputs and scatters outputs back.
+#[derive(Clone, Debug)]
+pub struct ExpertDispatcher {
+    pub n_experts: usize,
+    pub capacity: usize,
+    pub d: usize,
+}
+
+/// One dispatch round.
+#[derive(Debug)]
+pub struct Dispatch {
+    /// `[N_r, C, d]` gathered (zero-padded) token block.
+    pub xs: Tensor,
+    /// Per expert: the (token, gate) filling each used slot.
+    pub slots: Vec<Vec<(usize, f32)>>,
+    /// Assignments that did not fit: (token, expert, gate).
+    pub overflow: Vec<(usize, usize, f32)>,
+}
+
+impl ExpertDispatcher {
+    pub fn new(n_experts: usize, capacity: usize, d: usize) -> Self {
+        assert!(n_experts > 0 && capacity > 0 && d > 0);
+        ExpertDispatcher { n_experts, capacity, d }
+    }
+
+    /// Build a dispatch from normed token states `xn: [B, d]` and the
+    /// per-token decisions (token order preserved per expert — FIFO
+    /// capacity assignment, matching the GShard convention).
+    pub fn build(&self, xn: &Tensor, decisions: &[GateDecision]) -> Dispatch {
+        let assignments: Vec<(usize, usize, f32)> = decisions
+            .iter()
+            .enumerate()
+            .flat_map(|(t, dec)| {
+                dec.experts.iter().zip(&dec.gates).map(move |(&e, &g)| (t, e, g))
+            })
+            .collect();
+        self.build_from_assignments(xn, &assignments)
+    }
+
+    /// Build from explicit (token, expert, gate) triples (used for
+    /// overflow rounds).
+    pub fn build_from_assignments(
+        &self,
+        xn: &Tensor,
+        assignments: &[(usize, usize, f32)],
+    ) -> Dispatch {
+        assert_eq!(xn.shape[1], self.d);
+        let mut xs = Tensor::zeros(&[self.n_experts, self.capacity, self.d]);
+        let mut slots: Vec<Vec<(usize, f32)>> = vec![Vec::new(); self.n_experts];
+        let mut overflow = Vec::new();
+        for &(t, e, g) in assignments {
+            debug_assert!(e < self.n_experts, "expert {e} out of range");
+            if slots[e].len() < self.capacity {
+                let slot = slots[e].len();
+                let dst_off = (e * self.capacity + slot) * self.d;
+                xs.data[dst_off..dst_off + self.d].copy_from_slice(xn.row(t));
+                slots[e].push((t, g));
+            } else {
+                overflow.push((t, e, g));
+            }
+        }
+        Dispatch { xs, slots, overflow }
+    }
+
+    /// Scatter-add gated expert outputs `ys: [N_r, C, d]` into
+    /// `out: [B, d]`.
+    pub fn combine(&self, dispatch: &Dispatch, ys: &Tensor, out: &mut Tensor) {
+        assert_eq!(ys.shape, vec![self.n_experts, self.capacity, self.d]);
+        assert_eq!(out.shape[1], self.d);
+        for (e, slot_list) in dispatch.slots.iter().enumerate() {
+            for (slot, &(t, g)) in slot_list.iter().enumerate() {
+                let src_off = (e * self.capacity + slot) * self.d;
+                let src = &ys.data[src_off..src_off + self.d];
+                let dst = out.row_mut(t);
+                for (o, v) in dst.iter_mut().zip(src) {
+                    *o += g * v;
+                }
+            }
+        }
+    }
+
+    /// Tokens actually occupying slots in this dispatch (for FLOPs
+    /// accounting / utilization tracking).
+    pub fn used_slots(dispatch: &Dispatch) -> Vec<usize> {
+        dispatch.slots.iter().map(|s| s.len()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn decisions_of(assign: &[(usize, Vec<(usize, f32)>)]) -> Vec<GateDecision> {
+        assign
+            .iter()
+            .map(|(_, pairs)| GateDecision {
+                experts: pairs.iter().map(|&(e, _)| e).collect(),
+                gates: pairs.iter().map(|&(_, g)| g).collect(),
+                scores: vec![],
+            })
+            .collect()
+    }
+
+    #[test]
+    fn gather_places_tokens_in_expert_blocks() {
+        let mut rng = Rng::new(321);
+        let xn = Tensor::randn(&mut rng, &[3, 4], 1.0);
+        let disp = ExpertDispatcher::new(2, 2, 4);
+        let dec = decisions_of(&[
+            (0, vec![(0, 1.0)]),
+            (1, vec![(1, 1.0)]),
+            (2, vec![(0, 1.0)]),
+        ]);
+        let d = disp.build(&xn, &dec);
+        assert!(d.overflow.is_empty());
+        assert_eq!(d.slots[0], vec![(0, 1.0), (2, 1.0)]);
+        assert_eq!(d.slots[1], vec![(1, 1.0)]);
+        // expert 0 slot 1 holds token 2's row
+        assert_eq!(&d.xs.data[(0 * 2 + 1) * 4..(0 * 2 + 1) * 4 + 4], xn.row(2));
+        // unused slot is zero
+        assert!(d.xs.data[(1 * 2 + 1) * 4..(1 * 2 + 1) * 4 + 4].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn overflow_is_captured_not_dropped() {
+        let mut rng = Rng::new(322);
+        let xn = Tensor::randn(&mut rng, &[4, 3], 1.0);
+        let disp = ExpertDispatcher::new(2, 1, 3);
+        let dec = decisions_of(&[
+            (0, vec![(0, 1.0)]),
+            (1, vec![(0, 2.0)]),
+            (2, vec![(0, 3.0)]),
+            (3, vec![(1, 1.0)]),
+        ]);
+        let d = disp.build(&xn, &dec);
+        assert_eq!(d.slots[0].len(), 1);
+        assert_eq!(d.overflow, vec![(1, 0, 2.0), (2, 0, 3.0)]);
+        // second round drains the overflow
+        let d2 = disp.build_from_assignments(&xn, &d.overflow);
+        assert_eq!(d2.slots[0], vec![(1, 2.0)]);
+        assert_eq!(d2.overflow, vec![(2, 0, 3.0)]);
+    }
+
+    #[test]
+    fn combine_is_exact_gated_sum() {
+        // gather→(identity expert)→combine must equal Σ g·x per token
+        let mut rng = Rng::new(323);
+        let b = 5;
+        let d = 4;
+        let xn = Tensor::randn(&mut rng, &[b, d], 1.0);
+        let disp = ExpertDispatcher::new(3, 4, d);
+        let dec: Vec<GateDecision> = (0..b)
+            .map(|t| GateDecision {
+                experts: vec![t % 3, (t + 1) % 3],
+                gates: vec![1.0, 0.5],
+                scores: vec![],
+            })
+            .collect();
+        let dd = disp.build(&xn, &dec);
+        assert!(dd.overflow.is_empty());
+        // experts compute identity: ys = xs
+        let ys = dd.xs.clone();
+        let mut out = Tensor::zeros(&[b, d]);
+        disp.combine(&dd, &ys, &mut out);
+        for t in 0..b {
+            for j in 0..d {
+                let want = 1.0 * xn.at2(t, j) + 0.5 * xn.at2(t, j);
+                assert!((out.at2(t, j) - want).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn dispatch_preserves_every_assignment() {
+        // property: slots + overflow = all assignments
+        crate::util::prop::check(
+            "dispatch-conservation",
+            crate::util::prop::Config { cases: 40, max_size: 24, ..Default::default() },
+            |rng, size| {
+                let b = rng.range(1, size + 2);
+                let n_e = rng.range(1, 6);
+                let cap = rng.range(1, 5);
+                let d = rng.range(1, 6);
+                let xn = Tensor::randn(rng, &[b, d], 1.0);
+                let disp = ExpertDispatcher::new(n_e, cap, d);
+                let dec: Vec<GateDecision> = (0..b)
+                    .map(|_| {
+                        let k = rng.range(1, n_e + 1);
+                        let experts = rng.choose_k(n_e, k);
+                        GateDecision {
+                            gates: vec![1.0; k],
+                            experts,
+                            scores: vec![],
+                        }
+                    })
+                    .collect();
+                let total: usize = dec.iter().map(|d| d.experts.len()).sum();
+                let dd = disp.build(&xn, &dec);
+                let placed: usize = dd.slots.iter().map(|s| s.len()).sum();
+                crate::prop_assert!(
+                    placed + dd.overflow.len() == total,
+                    "lost assignments: {placed} + {} != {total}",
+                    dd.overflow.len()
+                );
+                for s in &dd.slots {
+                    crate::prop_assert!(s.len() <= cap, "capacity exceeded");
+                }
+                Ok(())
+            },
+        );
+    }
+}

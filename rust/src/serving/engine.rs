@@ -1,0 +1,549 @@
+//! The serving engine: wave scheduling over compiled decode steps.
+
+use crate::model::{LayerFfn, ModelWeights, MoeSpec};
+use crate::moe::{route_from_scores, route_tokens, BalanceConfig, BiasAdapter};
+use crate::runtime::{ModelBuffers, MoeModelBuffers, XlaRuntime};
+use crate::serving::batcher::{Batcher, BatcherConfig};
+use crate::serving::dispatch::ExpertDispatcher;
+use crate::serving::metrics::{EngineMetrics, WaveMetrics};
+use crate::serving::request::{Request, RequestResult};
+use crate::tensor::{self, Tensor};
+use anyhow::{anyhow, bail, Context, Result};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// How the wave executes each step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Monolithic dense decode artifact (baseline).
+    Dense,
+    /// Monolithic masked-MoE decode artifact (1 call, no FLOP saving).
+    MoeMonolithic,
+    /// Rust-coordinated expert dispatch (FLOPs actually skipped).
+    MoeOrchestrated,
+}
+
+/// Engine configuration.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Zoo model name ("small", …) — selects artifact family.
+    pub model_name: String,
+    pub mode: ExecMode,
+    /// Required for the MoE modes.
+    pub spec: Option<MoeSpec>,
+    /// KV length bucket (must be compiled: e.g. 64 or 256 for `small`).
+    pub kv_len: usize,
+    pub batcher: BatcherConfig,
+    /// Online load-balance adaptation (orchestrated mode only).
+    pub balance: Option<BalanceConfig>,
+}
+
+impl EngineConfig {
+    pub fn dense(model_name: &str, kv_len: usize) -> Self {
+        EngineConfig {
+            model_name: model_name.into(),
+            mode: ExecMode::Dense,
+            spec: None,
+            kv_len,
+            batcher: BatcherConfig::default(),
+            balance: None,
+        }
+    }
+
+    pub fn moe(model_name: &str, kv_len: usize, spec: MoeSpec, mode: ExecMode) -> Self {
+        EngineConfig {
+            model_name: model_name.into(),
+            mode,
+            spec: Some(spec),
+            kv_len,
+            batcher: BatcherConfig::default(),
+            balance: Some(BalanceConfig::default()),
+        }
+    }
+}
+
+/// The engine. Holds the runtime, uploaded weights, and (for the
+/// orchestrated mode) a host-side copy of the MoE layers whose
+/// load-balance biases adapt online.
+pub struct Engine {
+    pub rt: Arc<XlaRuntime>,
+    pub cfg: EngineConfig,
+    model: ModelWeights,
+    dense_bufs: ModelBuffers,
+    moe_bufs: Option<MoeModelBuffers>,
+    /// Host-side MoE routing state (layer copies whose biases adapt
+    /// online) — orchestrated mode only.
+    moe_state: std::sync::Mutex<MoeState>,
+    pub metrics: std::sync::Mutex<EngineMetrics>,
+}
+
+/// Host copies of the MoE layers plus their bias adapters.
+struct MoeState {
+    layers: Vec<crate::model::MoeLayerWeights>,
+    adapters: Vec<BiasAdapter>,
+}
+
+impl Engine {
+    pub fn new(rt: Arc<XlaRuntime>, model: ModelWeights, cfg: EngineConfig) -> Result<Engine> {
+        let dense_bufs = ModelBuffers::from_model(&rt, &model)?;
+        let is_moe = model.layers.iter().any(|l| matches!(l.ffn, LayerFfn::Moe(_)));
+        match cfg.mode {
+            ExecMode::Dense if is_moe => bail!("dense mode needs a dense model"),
+            ExecMode::MoeMonolithic | ExecMode::MoeOrchestrated if !is_moe => {
+                bail!("MoE mode needs a converted model")
+            }
+            _ => {}
+        }
+        let moe_bufs =
+            if is_moe { Some(MoeModelBuffers::from_model(&rt, &model)?) } else { None };
+        let moe_layers: Vec<_> = model
+            .layers
+            .iter()
+            .filter_map(|l| match &l.ffn {
+                LayerFfn::Moe(m) => Some(m.clone()),
+                _ => None,
+            })
+            .collect();
+        let adapters = moe_layers
+            .iter()
+            .map(|m| BiasAdapter::new(m.spec.routed(), cfg.balance.unwrap_or_default()))
+            .collect();
+        Ok(Engine {
+            rt,
+            cfg,
+            model,
+            dense_bufs,
+            moe_bufs,
+            moe_state: std::sync::Mutex::new(MoeState { layers: moe_layers, adapters }),
+            metrics: std::sync::Mutex::new(EngineMetrics::default()),
+        })
+    }
+
+    /// Current per-layer load-balance biases (orchestrated mode).
+    pub fn current_biases(&self) -> Vec<Vec<f32>> {
+        self.moe_state.lock().unwrap().layers.iter().map(|m| m.gate_bias.clone()).collect()
+    }
+
+    pub fn model(&self) -> &ModelWeights {
+        &self.model
+    }
+
+    fn spec_str(&self) -> String {
+        self.cfg.spec.map(|s| s.to_string()).unwrap_or_default()
+    }
+
+    /// Compiled prefill lengths for this model/batch, ascending.
+    fn prefill_lens(&self, b: usize) -> Vec<usize> {
+        let prefix = match self.cfg.mode {
+            ExecMode::Dense => format!("prefill_dense_{}_b{b}_s", self.cfg.model_name),
+            _ => format!("prefill_moe_{}_{}_b{b}_s", self.cfg.model_name, self.spec_str()),
+        };
+        let suffix = format!("_t{}", self.cfg.kv_len);
+        let mut lens: Vec<usize> = self
+            .rt
+            .manifest
+            .artifacts
+            .keys()
+            .filter_map(|k| {
+                k.strip_prefix(&prefix)?.strip_suffix(&suffix)?.parse().ok()
+            })
+            .collect();
+        lens.sort_unstable();
+        lens
+    }
+
+    /// Run a standalone batch of requests (wave-at-a-time; convenience
+    /// for benches and examples).
+    pub fn run_queue(&self, requests: Vec<Request>) -> Result<Vec<RequestResult>> {
+        let mut batcher = Batcher::new(self.cfg.batcher.clone());
+        for r in requests {
+            batcher.push(r);
+        }
+        let mut results = Vec::new();
+        while !batcher.is_empty() {
+            if let Some(wave) = batcher.take_wave() {
+                results.extend(self.generate_wave(wave)?);
+            }
+        }
+        results.sort_by_key(|r| r.id);
+        Ok(results)
+    }
+
+    /// Execute one wave to completion.
+    pub fn generate_wave(&self, wave: Vec<(Request, Instant)>) -> Result<Vec<RequestResult>> {
+        let t_start = Instant::now();
+        let n_real = wave.len();
+        assert!(n_real > 0);
+        let bucket = {
+            let mut b = n_real;
+            let buckets = &self.cfg.batcher.buckets;
+            for &cand in buckets {
+                if n_real <= cand {
+                    b = cand;
+                    break;
+                }
+            }
+            b
+        };
+
+        // --- pick a prefill length: smallest compiled s >= max prompt; if
+        // prompts exceed the largest s, keep their suffix (documented
+        // engine limit; benches compile matching lengths) ---
+        let lens = self.prefill_lens(bucket);
+        if lens.is_empty() {
+            bail!(
+                "no prefill artifact for model={} mode={:?} b={bucket} t={}",
+                self.cfg.model_name,
+                self.cfg.mode,
+                self.cfg.kv_len
+            );
+        }
+        let max_prompt = wave.iter().map(|(r, _)| r.prompt.len()).max().unwrap();
+        let s = *lens.iter().find(|&&l| l >= max_prompt).unwrap_or(lens.last().unwrap());
+
+        // tokens [bucket, s]: right-align prompts (pad front with 0 —
+        // prefix padding perturbs only the padded positions' logits,
+        // which are never read)
+        let mut tokens = vec![0i32; bucket * s];
+        for (i, (r, _)) in wave.iter().enumerate() {
+            let p = if r.prompt.len() > s { &r.prompt[r.prompt.len() - s..] } else { &r.prompt };
+            let off = i * s + (s - p.len());
+            for (j, &tok) in p.iter().enumerate() {
+                tokens[off + j] = tok as i32;
+            }
+        }
+
+        // --- prefill ---
+        let t_prefill = Instant::now();
+        let cfgm = &self.model.config;
+        let v = cfgm.vocab;
+        let prefill_name = match self.cfg.mode {
+            ExecMode::Dense => format!(
+                "prefill_dense_{}_b{bucket}_s{s}_t{}",
+                self.cfg.model_name, self.cfg.kv_len
+            ),
+            _ => format!(
+                "prefill_moe_{}_{}_b{bucket}_s{s}_t{}",
+                self.cfg.model_name,
+                self.spec_str(),
+                self.cfg.kv_len
+            ),
+        };
+        let tok_buf = self.rt.upload_i32(&tokens, &[bucket, s])?;
+        let args = self.param_args(&[&tok_buf]);
+        let out = self.rt.execute(&prefill_name, &args).context("prefill")?;
+        let logits = self.rt.download(&out[0], &[bucket, s, v])?;
+        let mut kv_buf = out.into_iter().nth(1).ok_or_else(|| anyhow!("prefill: no kv"))?;
+        let prefill_time = t_prefill.elapsed();
+
+        // --- sample first tokens ---
+        let mut rngs: Vec<crate::util::Rng> =
+            wave.iter().map(|(r, _)| crate::util::Rng::new(r.params.seed)).collect();
+        let mut generated: Vec<Vec<usize>> = vec![Vec::new(); n_real];
+        let mut active: Vec<bool> = vec![true; n_real];
+        let mut cur = vec![0i32; bucket];
+        for i in 0..n_real {
+            let row_start = (i * s + (s - 1)) * v;
+            let row = &logits.data[row_start..row_start + v];
+            let tok = rngs[i].sample_logits(row, wave[i].0.params.temperature);
+            generated[i].push(tok);
+            cur[i] = tok as i32;
+            if wave[i].0.params.stop_token == Some(tok) || wave[i].0.params.max_new_tokens <= 1 {
+                active[i] = false;
+            }
+        }
+        let ttft = t_start.elapsed();
+
+        // --- decode loop ---
+        let t_decode = Instant::now();
+        let mut pos = s;
+        let mut steps = 0usize;
+        // orchestrated mode splits kv into per-layer buffers once
+        let mut kv_layers: Vec<xla::PjRtBuffer> = Vec::new();
+        if self.cfg.mode == ExecMode::MoeOrchestrated {
+            let name = format!(
+                "split_kv_{}_b{bucket}_t{}",
+                self.cfg.model_name, self.cfg.kv_len
+            );
+            kv_layers = self.rt.execute(&name, &[&kv_buf])?;
+        }
+
+        while active.iter().any(|&a| a) && pos < self.cfg.kv_len {
+            let tok_buf = self.rt.upload_i32(&cur, &[bucket])?;
+            let pos_buf = self.rt.upload_scalar_i32(pos as i32)?;
+            let logits = match self.cfg.mode {
+                ExecMode::Dense | ExecMode::MoeMonolithic => {
+                    let name = match self.cfg.mode {
+                        ExecMode::Dense => format!(
+                            "decode_dense_{}_b{bucket}_t{}",
+                            self.cfg.model_name, self.cfg.kv_len
+                        ),
+                        _ => format!(
+                            "decode_moe_{}_{}_b{bucket}_t{}",
+                            self.cfg.model_name,
+                            self.spec_str(),
+                            self.cfg.kv_len
+                        ),
+                    };
+                    let args = self.param_args(&[&tok_buf, &kv_buf, &pos_buf]);
+                    let mut out = self.rt.execute(&name, &args)?;
+                    let kv_new = out.pop().ok_or_else(|| anyhow!("decode: no kv"))?;
+                    let logits = self.rt.download(&out[0], &[bucket, v])?;
+                    kv_buf = kv_new;
+                    logits
+                }
+                ExecMode::MoeOrchestrated => {
+                    self.orchestrated_step(bucket, &tok_buf, &pos_buf, &mut kv_layers)?
+                }
+            };
+
+            // sample
+            for i in 0..n_real {
+                if !active[i] {
+                    continue;
+                }
+                let row = &logits.data[i * v..(i + 1) * v];
+                let tok = rngs[i].sample_logits(row, wave[i].0.params.temperature);
+                generated[i].push(tok);
+                cur[i] = tok as i32;
+                if wave[i].0.params.stop_token == Some(tok)
+                    || generated[i].len() >= wave[i].0.params.max_new_tokens
+                {
+                    active[i] = false;
+                }
+            }
+            pos += 1;
+            steps += 1;
+        }
+        let decode_time = t_decode.elapsed();
+
+        // --- metrics + results ---
+        let mut m = self.metrics.lock().unwrap();
+        m.record_wave(WaveMetrics {
+            batch: bucket,
+            prompt_tokens: n_real * s,
+            generated_tokens: generated.iter().map(|g| g.len()).sum(),
+            prefill: prefill_time,
+            decode: decode_time,
+            decode_steps: steps,
+        });
+        let mut results = Vec::new();
+        for (i, (r, enqueued)) in wave.into_iter().enumerate() {
+            let latency = enqueued.elapsed();
+            m.record_request(ttft, latency);
+            results.push(RequestResult {
+                id: r.id,
+                tokens: std::mem::take(&mut generated[i]),
+                ttft,
+                latency,
+                queued: t_start.duration_since(enqueued),
+            });
+        }
+        Ok(results)
+    }
+
+    /// Parameter buffers + extra inputs, in artifact argument order.
+    fn param_args<'a>(&'a self, extra: &[&'a xla::PjRtBuffer]) -> Vec<&'a xla::PjRtBuffer> {
+        let mut args: Vec<&xla::PjRtBuffer> = self.dense_bufs.named.values().collect();
+        if let Some(mb) = &self.moe_bufs {
+            args.extend(mb.named.values());
+        }
+        args.extend(extra.iter().copied());
+        args
+    }
+
+    /// One rust-orchestrated MoE decode step: embed → per-layer
+    /// [attention artifact → host routing → grouped expert artifact] →
+    /// logits artifact. Returns host logits `[bucket, v]`.
+    fn orchestrated_step(
+        &self,
+        bucket: usize,
+        tok_buf: &xla::PjRtBuffer,
+        pos_buf: &xla::PjRtBuffer,
+        kv_layers: &mut [xla::PjRtBuffer],
+    ) -> Result<Tensor> {
+        let name = &self.cfg.model_name;
+        let cfgm = &self.model.config;
+        let d = cfgm.d_model;
+        let v = cfgm.vocab;
+        let t = self.cfg.kv_len;
+
+        // embed
+        let out = self.rt.execute(
+            &format!("embed_{name}_b{bucket}"),
+            &[
+                self.dense_bufs.get("embed").unwrap(),
+                self.dense_bufs.get("pos").unwrap(),
+                tok_buf,
+                pos_buf,
+            ],
+        )?;
+        let mut x = self.rt.download(&out[0], &[bucket, d])?;
+
+        let mut state = self.moe_state.lock().unwrap();
+        let n_layers = state.layers.len();
+        for l in 0..n_layers {
+            let p = format!("layers.{l}");
+            let mp = format!("moe.{l}");
+            let mb = self.moe_bufs.as_ref().unwrap();
+            let n_r0 = state.layers[l].spec.routed();
+            let sh = state.layers[l].shared.hidden_dim();
+
+            // PERF L3-1: fused attention + pre-norm + router + shared
+            // expert in one artifact (falls back to the unfused path
+            // when the fused artifact isn't compiled)
+            let fused = format!("attn_moe_pre_{name}_e{n_r0}_h{sh}_b{bucket}_t{t}");
+            let (xn, scores, shared_out) = if self.rt.has_artifact(&fused) {
+                let x_buf = self.rt.upload(&x)?;
+                let out = self.rt.execute(
+                    &fused,
+                    &[
+                        &x_buf,
+                        &kv_layers[l],
+                        self.dense_bufs.get(&format!("{p}.attn.wq")).unwrap(),
+                        self.dense_bufs.get(&format!("{p}.attn.wk")).unwrap(),
+                        self.dense_bufs.get(&format!("{p}.attn.wv")).unwrap(),
+                        self.dense_bufs.get(&format!("{p}.attn.wo")).unwrap(),
+                        self.dense_bufs.get(&format!("{p}.attn_norm")).unwrap(),
+                        self.dense_bufs.get(&format!("{p}.ffn_norm")).unwrap(),
+                        mb.get(&format!("{mp}.router.w_gate_r")).unwrap(),
+                        mb.get(&format!("{mp}.router.w_up_r")).unwrap(),
+                        mb.get(&format!("{mp}.shared.w_gate")).unwrap(),
+                        mb.get(&format!("{mp}.shared.w_up")).unwrap(),
+                        mb.get(&format!("{mp}.shared.w_down")).unwrap(),
+                        pos_buf,
+                    ],
+                )?;
+                let mut it = out.into_iter();
+                let x_new = it.next().ok_or_else(|| anyhow!("pre: no x"))?;
+                let kv_new = it.next().ok_or_else(|| anyhow!("pre: no kv"))?;
+                let xn_b = it.next().ok_or_else(|| anyhow!("pre: no xn"))?;
+                let scores_b = it.next().ok_or_else(|| anyhow!("pre: no scores"))?;
+                let shared_b = it.next().ok_or_else(|| anyhow!("pre: no shared"))?;
+                x = self.rt.download(&x_new, &[bucket, d])?;
+                kv_layers[l] = kv_new;
+                (
+                    self.rt.download(&xn_b, &[bucket, d])?,
+                    Some(self.rt.download(&scores_b, &[bucket, n_r0])?),
+                    self.rt.download(&shared_b, &[bucket, d])?,
+                )
+            } else {
+                // unfused fallback
+                let x_buf = self.rt.upload(&x)?;
+                let out = self.rt.execute(
+                    &format!("attn_layer_{name}_b{bucket}_t{t}"),
+                    &[
+                        &x_buf,
+                        &kv_layers[l],
+                        self.dense_bufs.get(&format!("{p}.attn.wq")).unwrap(),
+                        self.dense_bufs.get(&format!("{p}.attn.wk")).unwrap(),
+                        self.dense_bufs.get(&format!("{p}.attn.wv")).unwrap(),
+                        self.dense_bufs.get(&format!("{p}.attn.wo")).unwrap(),
+                        self.dense_bufs.get(&format!("{p}.attn_norm")).unwrap(),
+                        pos_buf,
+                    ],
+                )?;
+                x = self.rt.download(&out[0], &[bucket, d])?;
+                kv_layers[l] = out.into_iter().nth(1).ok_or_else(|| anyhow!("attn: no kv"))?;
+                let xn = tensor::rmsnorm_rows(&x, &self.model.layers[l].ffn_norm, 1e-6);
+                let shared_out = if sh > 0 {
+                    let xn_buf = self.rt.upload(&xn)?;
+                    let out = self.rt.execute(
+                        &format!("ffn_{name}_h{sh}_b{bucket}"),
+                        &[
+                            &xn_buf,
+                            mb.get(&format!("{mp}.shared.w_gate")).unwrap(),
+                            mb.get(&format!("{mp}.shared.w_up")).unwrap(),
+                            mb.get(&format!("{mp}.shared.w_down")).unwrap(),
+                        ],
+                    )?;
+                    self.rt.download(&out[0], &[bucket, d])?
+                } else {
+                    Tensor::zeros(&[bucket, d])
+                };
+                (xn, None, shared_out)
+            };
+
+            // host: routing from (device-computed or host-computed)
+            // scores — bias adaptation lives here either way
+            let decisions = match scores {
+                Some(s) => route_from_scores(&state.layers[l], &s),
+                None => route_tokens(&state.layers[l], &xn),
+            };
+
+            // grouped experts (device), with overflow rounds
+            let n_r = state.layers[l].spec.routed();
+            let m = state.layers[l].experts[0].hidden_dim();
+            let cap = self.expert_capacity(bucket, n_r)?;
+            let disp = ExpertDispatcher::new(n_r, cap, d);
+            let mut ffn_out = shared_out;
+            let mut assignments: Vec<(usize, usize, f32)> = decisions
+                .iter()
+                .enumerate()
+                .flat_map(|(tk, dec)| {
+                    dec.experts.iter().zip(&dec.gates).map(move |(&e, &g)| (tk, e, g))
+                })
+                .collect();
+            let mut counts = vec![0usize; n_r];
+            while !assignments.is_empty() {
+                let dd = disp.build_from_assignments(&xn, &assignments);
+                let xs_buf = self.rt.upload(&dd.xs)?;
+                let out = self.rt.execute(
+                    &format!("experts_{name}_e{n_r}_mm{m}_c{cap}_b{bucket}"),
+                    &[
+                        &xs_buf,
+                        mb.get(&format!("{mp}.experts.w_gate")).unwrap(),
+                        mb.get(&format!("{mp}.experts.w_up")).unwrap(),
+                        mb.get(&format!("{mp}.experts.w_down")).unwrap(),
+                    ],
+                )?;
+                let ys = self.rt.download(&out[0], &[n_r, cap, d])?;
+                disp.combine(&dd, &ys, &mut ffn_out);
+                for (e, sl) in dd.slots.iter().enumerate() {
+                    counts[e] += sl.len();
+                }
+                assignments = dd.overflow;
+            }
+            // residual
+            tensor::add_inplace(&mut x, &ffn_out);
+
+            // online bias adaptation (§4.3) on the host-side copy —
+            // only when the engine was configured with a balance policy
+            if self.cfg.balance.is_some() {
+                let st = &mut *state;
+                st.adapters[l].step(&mut st.layers[l], &counts);
+            }
+        }
+        drop(state);
+
+        // logits (device)
+        let x_buf = self.rt.upload(&x)?;
+        let out = self.rt.execute(
+            &format!("logits_{name}_b{bucket}"),
+            &[
+                &x_buf,
+                self.dense_bufs.get("final_norm").unwrap(),
+                self.dense_bufs.get("unembed").unwrap(),
+            ],
+        )?;
+        self.rt.download(&out[0], &[bucket, v])
+    }
+
+    /// Capacity compiled for this (model, batch, experts) combination.
+    fn expert_capacity(&self, bucket: usize, n_r: usize) -> Result<usize> {
+        let prefix = format!("experts_{}_e{n_r}_mm", self.cfg.model_name);
+        let suffix = format!("_b{bucket}");
+        self.rt
+            .manifest
+            .artifacts
+            .iter()
+            .find_map(|(k, a)| {
+                if k.starts_with(&prefix) && k.ends_with(&suffix) {
+                    a.meta.get("capacity").as_usize()
+                } else {
+                    None
+                }
+            })
+            .ok_or_else(|| anyhow!("no experts artifact for e{n_r} b{bucket}"))
+    }
+}

@@ -1,0 +1,138 @@
+//! Serving metrics: TTFT / per-token latency / throughput, with
+//! percentile summaries for the bench harness (Tables 7-9).
+
+use crate::util::stats::percentile;
+use std::time::Duration;
+
+/// Metrics for one wave.
+#[derive(Clone, Debug, Default)]
+pub struct WaveMetrics {
+    pub batch: usize,
+    pub prompt_tokens: usize,
+    pub generated_tokens: usize,
+    pub prefill: Duration,
+    pub decode: Duration,
+    pub decode_steps: usize,
+}
+
+impl WaveMetrics {
+    /// Decode throughput in generated tokens per second.
+    pub fn decode_tps(&self) -> f64 {
+        if self.decode.is_zero() {
+            return 0.0;
+        }
+        self.generated_tokens as f64 / self.decode.as_secs_f64()
+    }
+
+    /// Mean time-per-output-token across the wave.
+    pub fn tpot(&self) -> Duration {
+        if self.decode_steps == 0 {
+            return Duration::ZERO;
+        }
+        self.decode / self.decode_steps as u32
+    }
+}
+
+/// Aggregated engine metrics.
+#[derive(Clone, Debug, Default)]
+pub struct EngineMetrics {
+    pub waves: Vec<WaveMetrics>,
+    pub ttfts_ms: Vec<f32>,
+    pub latencies_ms: Vec<f32>,
+}
+
+impl EngineMetrics {
+    pub fn record_wave(&mut self, w: WaveMetrics) {
+        self.waves.push(w);
+    }
+
+    pub fn record_request(&mut self, ttft: Duration, latency: Duration) {
+        self.ttfts_ms.push(ttft.as_secs_f32() * 1e3);
+        self.latencies_ms.push(latency.as_secs_f32() * 1e3);
+    }
+
+    pub fn total_generated(&self) -> usize {
+        self.waves.iter().map(|w| w.generated_tokens).sum()
+    }
+
+    pub fn total_decode_time(&self) -> Duration {
+        self.waves.iter().map(|w| w.decode).sum()
+    }
+
+    /// Aggregate decode throughput (tok/s).
+    pub fn decode_tps(&self) -> f64 {
+        let t = self.total_decode_time().as_secs_f64();
+        if t == 0.0 {
+            return 0.0;
+        }
+        self.total_generated() as f64 / t
+    }
+
+    pub fn ttft_p50_ms(&self) -> f32 {
+        percentile(&self.ttfts_ms, 50.0)
+    }
+
+    pub fn ttft_p99_ms(&self) -> f32 {
+        percentile(&self.ttfts_ms, 99.0)
+    }
+
+    pub fn latency_p50_ms(&self) -> f32 {
+        percentile(&self.latencies_ms, 50.0)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{} waves, {} tokens, decode {:.1} tok/s, TTFT p50 {:.1}ms p99 {:.1}ms",
+            self.waves.len(),
+            self.total_generated(),
+            self.decode_tps(),
+            self.ttft_p50_ms(),
+            self.ttft_p99_ms(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wave_tps() {
+        let w = WaveMetrics {
+            batch: 8,
+            prompt_tokens: 64,
+            generated_tokens: 80,
+            prefill: Duration::from_millis(10),
+            decode: Duration::from_millis(200),
+            decode_steps: 10,
+        };
+        assert!((w.decode_tps() - 400.0).abs() < 1e-6);
+        assert_eq!(w.tpot(), Duration::from_millis(20));
+    }
+
+    #[test]
+    fn engine_aggregation() {
+        let mut m = EngineMetrics::default();
+        for _ in 0..3 {
+            m.record_wave(WaveMetrics {
+                batch: 1,
+                prompt_tokens: 4,
+                generated_tokens: 10,
+                prefill: Duration::from_millis(5),
+                decode: Duration::from_millis(100),
+                decode_steps: 10,
+            });
+            m.record_request(Duration::from_millis(5), Duration::from_millis(105));
+        }
+        assert_eq!(m.total_generated(), 30);
+        assert!((m.decode_tps() - 100.0).abs() < 1.0);
+        assert!(m.summary().contains("3 waves"));
+    }
+
+    #[test]
+    fn empty_metrics_are_safe() {
+        let m = EngineMetrics::default();
+        assert_eq!(m.decode_tps(), 0.0);
+        assert_eq!(m.ttft_p50_ms(), 0.0);
+    }
+}

@@ -1,0 +1,30 @@
+//! The serving engine: continuous batching over AOT-compiled decode
+//! steps, with three execution modes —
+//!
+//! * **Dense** — the monolithic `decode_dense_*` artifact (baseline).
+//! * **MoeMonolithic** — one `decode_moe_*` call per step with in-graph
+//!   masked routing (all experts computed; the 1-call eval path).
+//! * **MoeOrchestrated** — the paper's serving contribution realized:
+//!   attention via artifacts, routing + capacity-factor expert dispatch
+//!   coordinated in rust, experts executed by the grouped Pallas
+//!   artifact — FLOPs actually skipped for deactivated experts, and
+//!   load-balancing bias adapted online (§4.3).
+//!
+//! Scheduling is wave-based continuous batching: requests queue, the
+//! batcher forms the largest bucket-sized wave available, the wave
+//! prefills together and decodes until every member finishes; finished
+//! slots are masked out. Python is never on this path.
+
+mod request;
+mod batcher;
+mod engine;
+mod dispatch;
+mod metrics;
+mod server;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use dispatch::ExpertDispatcher;
+pub use engine::{Engine, EngineConfig, ExecMode};
+pub use metrics::{EngineMetrics, WaveMetrics};
+pub use request::{GenParams, Request, RequestResult};
+pub use server::{EngineServer, Ticket};

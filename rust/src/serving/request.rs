@@ -1,0 +1,59 @@
+//! Request / response types.
+
+use std::time::Duration;
+
+/// Sampling parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct GenParams {
+    pub max_new_tokens: usize,
+    /// 0.0 = greedy.
+    pub temperature: f32,
+    pub seed: u64,
+    /// Stop at this token id (None = run to max_new_tokens).
+    pub stop_token: Option<usize>,
+}
+
+impl Default for GenParams {
+    fn default() -> Self {
+        GenParams { max_new_tokens: 32, temperature: 0.0, seed: 0, stop_token: None }
+    }
+}
+
+/// A generation request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<usize>,
+    pub params: GenParams,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<usize>, params: GenParams) -> Self {
+        Request { id, prompt, params }
+    }
+}
+
+/// Completed generation.
+#[derive(Clone, Debug)]
+pub struct RequestResult {
+    pub id: u64,
+    pub tokens: Vec<usize>,
+    /// Time to first token (prefill).
+    pub ttft: Duration,
+    /// Total latency including queueing.
+    pub latency: Duration,
+    pub queued: Duration,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults() {
+        let p = GenParams::default();
+        assert_eq!(p.temperature, 0.0);
+        let r = Request::new(1, vec![1, 2, 3], p);
+        assert_eq!(r.prompt.len(), 3);
+    }
+}

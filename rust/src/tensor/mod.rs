@@ -1,0 +1,224 @@
+//! Dense f32 tensor substrate for the conversion/analysis path.
+//!
+//! The *serving* hot path runs through XLA-compiled artifacts
+//! ([`crate::runtime`]); this module exists so the converter, baselines,
+//! gate fine-tuner and evaluation utilities can do linear algebra on raw
+//! weights without a Python dependency. It implements exactly what those
+//! consumers need: a contiguous row-major `Tensor`, a blocked+threaded
+//! matmul, SwiGLU pieces, softmax/top-k, and slicing/gather by neuron
+//! index.
+
+mod ops;
+
+pub use ops::*;
+
+use crate::util::Rng;
+use std::fmt;
+
+/// Contiguous row-major f32 tensor with up to 3 dimensions (the crate
+/// never needs more; batch dims are flattened by callers).
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}[", self.shape)?;
+        for (i, v) in self.data.iter().take(6).enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{v:.4}")?;
+        }
+        if self.data.len() > 6 {
+            write!(f, ", …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { data: vec![0.0; n], shape: shape.to_vec() }
+    }
+
+    pub fn from_vec(data: Vec<f32>, shape: &[usize]) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape/data mismatch");
+        Tensor { data, shape: shape.to_vec() }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        let n = shape.iter().product();
+        Tensor { data: vec![v; n], shape: shape.to_vec() }
+    }
+
+    /// i.i.d. normal entries scaled by `std`.
+    pub fn randn(rng: &mut Rng, shape: &[usize], std: f32) -> Self {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(&mut t.data, std);
+        t
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Rows of a 2-D tensor.
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.rank(), 2);
+        self.shape[0]
+    }
+
+    /// Cols of a 2-D tensor.
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.rank(), 2);
+        self.shape[1]
+    }
+
+    #[inline]
+    pub fn at2(&self, r: usize, c: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[r * self.shape[1] + c]
+    }
+
+    #[inline]
+    pub fn at2_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert_eq!(self.rank(), 2);
+        let c1 = self.shape[1];
+        &mut self.data[r * c1 + c]
+    }
+
+    /// Borrow row `r` of a 2-D tensor.
+    pub fn row(&self, r: usize) -> &[f32] {
+        assert_eq!(self.rank(), 2);
+        let c = self.shape[1];
+        &self.data[r * c..(r + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        assert_eq!(self.rank(), 2);
+        let c = self.shape[1];
+        &mut self.data[r * c..(r + 1) * c]
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(self.numel(), shape.iter().product::<usize>(), "reshape numel mismatch");
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// 2-D transpose (copies).
+    pub fn t(&self) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut out = Tensor::zeros(&[c, r]);
+        for i in 0..r {
+            for j in 0..c {
+                out.data[j * r + i] = self.data[i * c + j];
+            }
+        }
+        out
+    }
+
+    /// Select columns by index (2-D): result is `[rows, idx.len()]`.
+    /// This is how expert weight slices are carved out of FFN matrices.
+    pub fn select_cols(&self, idx: &[usize]) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut out = Tensor::zeros(&[r, idx.len()]);
+        for i in 0..r {
+            let src = &self.data[i * c..(i + 1) * c];
+            let dst = &mut out.data[i * idx.len()..(i + 1) * idx.len()];
+            for (k, &j) in idx.iter().enumerate() {
+                debug_assert!(j < c, "col index {j} out of {c}");
+                dst[k] = src[j];
+            }
+        }
+        out
+    }
+
+    /// Select rows by index (2-D): result is `[idx.len(), cols]`.
+    pub fn select_rows(&self, idx: &[usize]) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let c = self.shape[1];
+        let mut out = Tensor::zeros(&[idx.len(), c]);
+        for (k, &i) in idx.iter().enumerate() {
+            out.row_mut(k).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+
+    /// Max |a - b| between same-shape tensors.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let t = Tensor::from_vec(vec![1., 2., 3., 4., 5., 6.], &[2, 3]);
+        assert_eq!(t.at2(0, 2), 3.0);
+        assert_eq!(t.at2(1, 0), 4.0);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(1);
+        let t = Tensor::randn(&mut rng, &[5, 7], 1.0);
+        assert_eq!(t.t().t(), t);
+    }
+
+    #[test]
+    fn select_cols_carves_slices() {
+        let t = Tensor::from_vec((0..12).map(|v| v as f32).collect(), &[3, 4]);
+        let s = t.select_cols(&[3, 1]);
+        assert_eq!(s.shape, vec![3, 2]);
+        assert_eq!(s.row(0), &[3., 1.]);
+        assert_eq!(s.row(2), &[11., 9.]);
+    }
+
+    #[test]
+    fn select_rows_gathers() {
+        let t = Tensor::from_vec((0..12).map(|v| v as f32).collect(), &[4, 3]);
+        let s = t.select_rows(&[2, 0]);
+        assert_eq!(s.shape, vec![2, 3]);
+        assert_eq!(s.row(0), &[6., 7., 8.]);
+        assert_eq!(s.row(1), &[0., 1., 2.]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn bad_shape_panics() {
+        Tensor::from_vec(vec![1.0; 5], &[2, 3]);
+    }
+
+    #[test]
+    fn norm_and_diff() {
+        let a = Tensor::from_vec(vec![3.0, 4.0], &[2]);
+        assert!((a.norm() - 5.0).abs() < 1e-6);
+        let b = Tensor::from_vec(vec![3.0, 4.5], &[2]);
+        assert!((a.max_abs_diff(&b) - 0.5).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,352 @@
+//! Tensor operations: blocked/threaded matmul, SwiGLU, softmax, top-k.
+//!
+//! The matmul uses a cache-blocked i-k-j loop order with 8-wide manual
+//! unrolling over j and row-parallelism via `util::pool` — enough to keep
+//! the conversion path (seconds, not hours) and the rust-side fine-tuner
+//! fast. See EXPERIMENTS.md §Perf for measured numbers.
+
+use super::Tensor;
+use crate::util::pool;
+
+/// `out = a @ b` for 2-D tensors `[m,k] x [k,n] -> [m,n]`.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.rank(), 2);
+    assert_eq!(b.rank(), 2);
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (k2, n) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2, "matmul inner dim mismatch: {k} vs {k2}");
+    let mut out = Tensor::zeros(&[m, n]);
+    matmul_into(a, b, &mut out);
+    out
+}
+
+/// `out += / = a @ b` writing into a preallocated output (hot-loop reuse).
+pub fn matmul_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let n = b.shape[1];
+    assert_eq!(out.shape, vec![m, n]);
+    out.data.fill(0.0);
+    if m == 0 || n == 0 || k == 0 {
+        return; // degenerate dims (e.g. an empty shared-expert slice)
+    }
+    let a_data = &a.data;
+    let b_data = &b.data;
+    // Row-parallel: each task owns a band of output rows.
+    let band = ((m + pool::num_threads() - 1) / pool::num_threads()).max(1);
+    pool::par_chunks_mut(&mut out.data, band * n, |band_idx, out_chunk| {
+        let row0 = band_idx * band;
+        let rows = out_chunk.len() / n;
+        // blocked over k for cache reuse
+        const KB: usize = 64;
+        for kb in (0..k).step_by(KB) {
+            let k_end = (kb + KB).min(k);
+            for r in 0..rows {
+                let i = row0 + r;
+                let a_row = &a_data[i * k..(i + 1) * k];
+                let o_row = &mut out_chunk[r * n..(r + 1) * n];
+                for kk in kb..k_end {
+                    let av = a_row[kk];
+                    if av == 0.0 {
+                        continue; // sparse activations: skip zero rows cheaply
+                    }
+                    let b_row = &b_data[kk * n..(kk + 1) * n];
+                    // 8-wide unroll
+                    let chunks = n / 8;
+                    for c in 0..chunks {
+                        let j = c * 8;
+                        o_row[j] += av * b_row[j];
+                        o_row[j + 1] += av * b_row[j + 1];
+                        o_row[j + 2] += av * b_row[j + 2];
+                        o_row[j + 3] += av * b_row[j + 3];
+                        o_row[j + 4] += av * b_row[j + 4];
+                        o_row[j + 5] += av * b_row[j + 5];
+                        o_row[j + 6] += av * b_row[j + 6];
+                        o_row[j + 7] += av * b_row[j + 7];
+                    }
+                    for j in chunks * 8..n {
+                        o_row[j] += av * b_row[j];
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Naive reference matmul for testing the blocked one.
+pub fn matmul_naive(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let n = b.shape[1];
+    let mut out = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += a.data[i * k + kk] * b.data[kk * n + j];
+            }
+            out.data[i * n + j] = acc;
+        }
+    }
+    out
+}
+
+/// SiLU / Swish: `x * sigmoid(x)`.
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Elementwise Swish in place.
+pub fn silu_inplace(t: &mut Tensor) {
+    for v in t.data.iter_mut() {
+        *v = silu(*v);
+    }
+}
+
+/// Elementwise product in place: `a *= b`.
+pub fn mul_inplace(a: &mut Tensor, b: &Tensor) {
+    assert_eq!(a.shape, b.shape);
+    for (x, y) in a.data.iter_mut().zip(&b.data) {
+        *x *= *y;
+    }
+}
+
+/// `a += b` in place.
+pub fn add_inplace(a: &mut Tensor, b: &Tensor) {
+    assert_eq!(a.shape, b.shape);
+    for (x, y) in a.data.iter_mut().zip(&b.data) {
+        *x += *y;
+    }
+}
+
+/// `a += s * b` in place.
+pub fn axpy(a: &mut Tensor, s: f32, b: &Tensor) {
+    assert_eq!(a.shape, b.shape);
+    for (x, y) in a.data.iter_mut().zip(&b.data) {
+        *x += s * *y;
+    }
+}
+
+/// SwiGLU hidden states: `H = Swish(X @ Wg) ⊙ (X @ Wu)`.
+/// `x: [q, d]`, `w_gate/w_up: [d, d_h]` → `[q, d_h]`.
+/// This mirrors Eq. (13); the XLA artifact `ffn_hidden` computes the same
+/// thing on the compiled path — `tests/artifact_parity.rs` cross-checks.
+pub fn swiglu_hidden(x: &Tensor, w_gate: &Tensor, w_up: &Tensor) -> Tensor {
+    let mut g = matmul(x, w_gate);
+    let u = matmul(x, w_up);
+    silu_inplace(&mut g);
+    mul_inplace(&mut g, &u);
+    g
+}
+
+/// Full SwiGLU FFN: `F(x) = H @ Wd` with `w_down: [d_h, d]` (Eq. 3).
+pub fn swiglu_ffn(x: &Tensor, w_gate: &Tensor, w_up: &Tensor, w_down: &Tensor) -> Tensor {
+    let h = swiglu_hidden(x, w_gate, w_up);
+    matmul(&h, w_down)
+}
+
+/// Row-wise softmax in place over the last dim of a 2-D tensor.
+pub fn softmax_rows(t: &mut Tensor) {
+    assert_eq!(t.rank(), 2);
+    let (r, c) = (t.shape[0], t.shape[1]);
+    for i in 0..r {
+        let row = &mut t.data[i * c..(i + 1) * c];
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+/// Softmax of a 1-D slice, returned as a new Vec (used for gate scores
+/// `s' = Softmax(s)` in Eq. 9).
+pub fn softmax(xs: &[f32]) -> Vec<f32> {
+    let max = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = xs.iter().map(|&v| (v - max).exp()).collect();
+    let sum: f32 = exps.iter().sum();
+    exps.iter().map(|&e| e / sum).collect()
+}
+
+/// Indices of the `k` largest values (descending by value; ties broken by
+/// lower index for determinism). `O(n log k)` via a small heap-free scan —
+/// `k` is tiny (≤ experts) everywhere this is called.
+pub fn top_k_indices(xs: &[f32], k: usize) -> Vec<usize> {
+    let k = k.min(xs.len());
+    let mut best: Vec<usize> = Vec::with_capacity(k + 1);
+    for (i, &v) in xs.iter().enumerate() {
+        // insert i into the sorted-by-value list if it beats the tail
+        let pos = best
+            .iter()
+            .position(|&b| v > xs[b] || (v == xs[b] && i < b))
+            .unwrap_or(best.len());
+        if pos < k {
+            best.insert(pos, i);
+            if best.len() > k {
+                best.pop();
+            }
+        }
+    }
+    best
+}
+
+/// ATopK per row: boolean mask of the top-`k` entries of each row by
+/// |value| (§A.2 Step 2). Returns a `[rows, cols]` 0/1 u8 matrix.
+pub fn atopk_mask(h: &Tensor, k: usize) -> Vec<u8> {
+    assert_eq!(h.rank(), 2);
+    let (r, c) = (h.shape[0], h.shape[1]);
+    let mut mask = vec![0u8; r * c];
+    pool::par_chunks_mut(&mut mask, c, |row_idx, mrow| {
+        let hrow = &h.data[row_idx * c..(row_idx + 1) * c];
+        let abs: Vec<f32> = hrow.iter().map(|v| v.abs()).collect();
+        for i in top_k_indices(&abs, k) {
+            mrow[i] = 1;
+        }
+    });
+    mask
+}
+
+/// RMSNorm of rows with learned gain `g`: `x / rms(x) * g`.
+pub fn rmsnorm_rows(x: &Tensor, g: &[f32], eps: f32) -> Tensor {
+    assert_eq!(x.rank(), 2);
+    let (r, c) = (x.shape[0], x.shape[1]);
+    assert_eq!(g.len(), c);
+    let mut out = Tensor::zeros(&[r, c]);
+    for i in 0..r {
+        let row = x.row(i);
+        let ms = row.iter().map(|v| v * v).sum::<f32>() / c as f32;
+        let inv = 1.0 / (ms + eps).sqrt();
+        let orow = out.row_mut(i);
+        for j in 0..c {
+            orow[j] = row[j] * inv * g[j];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Config};
+    use crate::util::Rng;
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(5);
+        for (m, k, n) in [(1, 1, 1), (3, 4, 5), (17, 33, 9), (64, 128, 32)] {
+            let a = Tensor::randn(&mut rng, &[m, k], 1.0);
+            let b = Tensor::randn(&mut rng, &[k, n], 1.0);
+            let fast = matmul(&a, &b);
+            let slow = matmul_naive(&a, &b);
+            assert!(fast.max_abs_diff(&slow) < 1e-4, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn matmul_property_random_shapes() {
+        check("matmul-vs-naive", Config { cases: 24, max_size: 40, ..Default::default() }, |rng, size| {
+            let m = rng.range(1, size + 2);
+            let k = rng.range(1, size + 2);
+            let n = rng.range(1, size + 2);
+            let a = Tensor::randn(rng, &[m, k], 1.0);
+            let b = Tensor::randn(rng, &[k, n], 1.0);
+            let d = matmul(&a, &b).max_abs_diff(&matmul_naive(&a, &b));
+            crate::prop_assert!(d < 1e-3, "diff {d} at ({m},{k},{n})");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn silu_values() {
+        assert!((silu(0.0) - 0.0).abs() < 1e-7);
+        assert!((silu(10.0) - 10.0).abs() < 1e-3); // saturates to identity
+        assert!(silu(-10.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn swiglu_decomposes_as_neuron_sum() {
+        // Eq. (1): F(x) = Σ_i h_i · w_down[i,:]
+        let mut rng = Rng::new(6);
+        let (d, dh) = (8, 16);
+        let x = Tensor::randn(&mut rng, &[3, d], 1.0);
+        let wg = Tensor::randn(&mut rng, &[d, dh], 0.5);
+        let wu = Tensor::randn(&mut rng, &[d, dh], 0.5);
+        let wd = Tensor::randn(&mut rng, &[dh, d], 0.5);
+        let full = swiglu_ffn(&x, &wg, &wu, &wd);
+        let h = swiglu_hidden(&x, &wg, &wu);
+        let mut acc = Tensor::zeros(&[3, d]);
+        for i in 0..dh {
+            for t in 0..3 {
+                for j in 0..d {
+                    acc.data[t * d + j] += h.at2(t, i) * wd.at2(i, j);
+                }
+            }
+        }
+        assert!(full.max_abs_diff(&acc) < 1e-4);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn top_k_basic_and_ties() {
+        assert_eq!(top_k_indices(&[0.1, 5.0, 3.0, 4.0], 2), vec![1, 3]);
+        // ties broken by lower index
+        assert_eq!(top_k_indices(&[2.0, 2.0, 2.0], 2), vec![0, 1]);
+        assert_eq!(top_k_indices(&[1.0], 5), vec![0]);
+    }
+
+    #[test]
+    fn top_k_property_contains_max() {
+        check("topk-max", Config { cases: 64, ..Default::default() }, |rng, size| {
+            let n = rng.range(1, size + 2);
+            let xs: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let k = rng.range(1, n + 1);
+            let top = top_k_indices(&xs, k);
+            crate::prop_assert!(top.len() == k.min(n), "wrong count");
+            let max_i = (0..n).max_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap()).unwrap();
+            crate::prop_assert!(xs[top[0]] == xs[max_i], "first isn't max");
+            // returned values are ≥ every excluded value
+            let min_in = top.iter().map(|&i| xs[i]).fold(f32::INFINITY, f32::min);
+            for i in 0..n {
+                if !top.contains(&i) {
+                    crate::prop_assert!(xs[i] <= min_in, "excluded {i} beats included");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn atopk_mask_rows_have_k_ones() {
+        let mut rng = Rng::new(8);
+        let h = Tensor::randn(&mut rng, &[10, 32], 1.0);
+        let mask = atopk_mask(&h, 5);
+        for r in 0..10 {
+            let ones: u32 = mask[r * 32..(r + 1) * 32].iter().map(|&v| v as u32).sum();
+            assert_eq!(ones, 5);
+        }
+    }
+
+    #[test]
+    fn atopk_selects_by_magnitude() {
+        let h = Tensor::from_vec(vec![0.1, -9.0, 0.2, 8.0], &[1, 4]);
+        let mask = atopk_mask(&h, 2);
+        assert_eq!(mask, vec![0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn rmsnorm_unit_rows() {
+        let x = Tensor::from_vec(vec![3.0, 4.0], &[1, 2]);
+        let out = rmsnorm_rows(&x, &[1.0, 1.0], 1e-6);
+        let rms = (out.data.iter().map(|v| v * v).sum::<f32>() / 2.0).sqrt();
+        assert!((rms - 1.0).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,77 @@
+//! Test-only helpers shared across modules.
+//!
+//! [`structured_ffn`] builds FFN weights that genuinely exhibit the
+//! paper's §3 activation structure when driven by gaussian inputs:
+//! * **hot neurons** — large-norm gate/up columns whose |h| ranks in the
+//!   ATopK for almost every token (activation rate ≈ 1);
+//! * **grouped neurons** — gate columns aligned with one of `n_groups`
+//!   latent input directions, so group members co-activate exactly when
+//!   the token points along their direction (rates ≪ 1, clustered).
+//!
+//! This is the planted-structure ground truth used to verify that the
+//! converter recovers shared experts and co-activation clusters, and
+//! that CMoE's comparative claims hold where the paper says they do.
+
+#![cfg(test)]
+
+use crate::model::FfnWeights;
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// Planted structure description returned with the weights.
+pub struct PlantedFfn {
+    pub ffn: FfnWeights,
+    /// Indices of always-hot neurons.
+    pub hot: Vec<usize>,
+    /// Group id per neuron (usize::MAX for hot neurons).
+    pub group_of: Vec<usize>,
+}
+
+/// Build a structured FFN: `n_hot` hot neurons + the rest in
+/// `n_groups` co-activation groups.
+pub fn structured_ffn(
+    rng: &mut Rng,
+    d: usize,
+    d_h: usize,
+    n_hot: usize,
+    n_groups: usize,
+) -> PlantedFfn {
+    // latent directions (unit-ish)
+    let dirs: Vec<Vec<f32>> = (0..n_groups)
+        .map(|_| {
+            let mut v: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+            let n = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+            v.iter_mut().for_each(|x| *x /= n);
+            v
+        })
+        .collect();
+
+    let mut ids: Vec<usize> = (0..d_h).collect();
+    rng.shuffle(&mut ids);
+    let hot: Vec<usize> = ids[..n_hot].to_vec();
+    let mut group_of = vec![usize::MAX; d_h];
+    for (k, &i) in ids[n_hot..].iter().enumerate() {
+        group_of[i] = k % n_groups;
+    }
+
+    let mut w_gate = Tensor::zeros(&[d, d_h]);
+    let mut w_up = Tensor::zeros(&[d, d_h]);
+    let w_down = Tensor::randn(rng, &[d_h, d], (1.0 / d_h as f32).sqrt());
+    for i in 0..d_h {
+        if group_of[i] == usize::MAX {
+            // hot: big random column → |h| large for nearly all inputs
+            for r in 0..d {
+                *w_gate.at2_mut(r, i) = 3.0 * rng.normal();
+                *w_up.at2_mut(r, i) = 1.5 * rng.normal();
+            }
+        } else {
+            // grouped: aligned with the group direction + small noise
+            let u = &dirs[group_of[i]];
+            for r in 0..d {
+                *w_gate.at2_mut(r, i) = 2.0 * u[r] + 0.15 * rng.normal();
+                *w_up.at2_mut(r, i) = 0.8 * rng.normal();
+            }
+        }
+    }
+    PlantedFfn { ffn: FfnWeights { w_gate, w_up, w_down }, hot, group_of }
+}

@@ -1,0 +1,115 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `prog <subcommand> --flag value --switch positional...`.
+//! Flags may be given as `--name value` or `--name=value`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, named flags, positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    /// `known_switches` lists boolean flags that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(args: I, known_switches: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if known_switches.contains(&name) {
+                    out.switches.push(name.to_string());
+                } else if let Some(next) = it.peek() {
+                    if next.starts_with("--") {
+                        out.switches.push(name.to_string());
+                    } else {
+                        out.flags.insert(name.to_string(), it.next().unwrap());
+                    }
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env(known_switches: &[&str]) -> Args {
+        Args::parse(std::env::args().skip(1), known_switches)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = Args::parse(v(&["convert", "--model", "small", "--spec=S3A3E8", "x.cmw"]), &[]);
+        assert_eq!(a.subcommand.as_deref(), Some("convert"));
+        assert_eq!(a.get("model"), Some("small"));
+        assert_eq!(a.get("spec"), Some("S3A3E8"));
+        assert_eq!(a.positional, vec!["x.cmw"]);
+    }
+
+    #[test]
+    fn switches() {
+        let a = Args::parse(v(&["serve", "--verbose", "--port", "8080"]), &["verbose"]);
+        assert!(a.has("verbose"));
+        assert_eq!(a.get_usize("port", 0), 8080);
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = Args::parse(v(&["bench", "--dry-run"]), &[]);
+        assert!(a.has("dry-run"));
+    }
+
+    #[test]
+    fn adjacent_switches_without_registry() {
+        let a = Args::parse(v(&["x", "--a", "--b", "val"]), &[]);
+        assert!(a.has("a"));
+        assert_eq!(a.get("b"), Some("val"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(v(&["eval"]), &[]);
+        assert_eq!(a.get_or("out", "results"), "results");
+        assert_eq!(a.get_f64("temp", 0.7), 0.7);
+    }
+}

@@ -1,0 +1,19 @@
+//! Small self-contained substrates: RNG, JSON, CLI parsing, statistics,
+//! thread pool, property-testing helpers, timing and table formatting.
+//!
+//! These exist because the build environment is fully offline — the usual
+//! crates (rand, serde, clap, criterion, proptest, tokio) are not
+//! available, so the library carries its own minimal, well-tested
+//! equivalents (see DESIGN.md §2).
+
+pub mod rng;
+pub mod json;
+pub mod argparse;
+pub mod stats;
+pub mod pool;
+pub mod prop;
+pub mod timer;
+pub mod table;
+
+pub use rng::Rng;
+pub use timer::Timer;

@@ -1,0 +1,148 @@
+//! Scoped data-parallel helpers built on `std::thread` (rayon/tokio are
+//! unavailable offline).
+//!
+//! The converter and the rust-side tensor math use [`par_chunks_mut`] /
+//! [`par_for`] to spread embarrassingly parallel work over cores. The
+//! serving engine uses plain dedicated threads (see `serving::engine`),
+//! not this pool.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use (cores, capped; overridable with
+/// the `CMOE_THREADS` env var).
+pub fn num_threads() -> usize {
+    static CACHED: AtomicUsize = AtomicUsize::new(0);
+    let c = CACHED.load(Ordering::Relaxed);
+    if c != 0 {
+        return c;
+    }
+    let n = std::env::var("CMOE_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4))
+        .clamp(1, 64);
+    CACHED.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Run `f(chunk_index, chunk)` over disjoint mutable chunks of `data`
+/// in parallel. Chunks are `chunk_size` long (last may be shorter).
+pub fn par_chunks_mut<T: Send, F>(data: &mut [T], chunk_size: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Send + Sync,
+{
+    assert!(chunk_size > 0);
+    let nthreads = num_threads();
+    if data.len() <= chunk_size || nthreads == 1 {
+        for (i, chunk) in data.chunks_mut(chunk_size).enumerate() {
+            f(i, chunk);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk_size).enumerate().collect();
+    let chunks = std::sync::Mutex::new(chunks.into_iter().map(Some).collect::<Vec<_>>());
+    std::thread::scope(|s| {
+        for _ in 0..nthreads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                let item = {
+                    let mut guard = chunks.lock().unwrap();
+                    if i >= guard.len() {
+                        return;
+                    }
+                    guard[i].take()
+                };
+                if let Some((idx, chunk)) = item {
+                    f(idx, chunk);
+                }
+            });
+        }
+    });
+}
+
+/// Parallel for over `0..n`: each worker claims indices atomically.
+pub fn par_for<F>(n: usize, f: F)
+where
+    F: Fn(usize) + Send + Sync,
+{
+    let nthreads = num_threads().min(n.max(1));
+    if nthreads <= 1 || n <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..nthreads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    return;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Parallel map collecting results in order.
+pub fn par_map<T: Send, F>(n: usize, f: F) -> Vec<T>
+where
+    F: Fn(usize) -> T + Send + Sync,
+{
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    {
+        let slots: Vec<std::sync::Mutex<&mut Option<T>>> =
+            out.iter_mut().map(std::sync::Mutex::new).collect();
+        par_for(n, |i| {
+            let v = f(i);
+            **slots[i].lock().unwrap() = Some(v);
+        });
+    }
+    out.into_iter().map(|o| o.expect("par_map slot unfilled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn par_for_covers_all_indices_once() {
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        par_for(1000, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn par_map_order() {
+        let v = par_map(257, |i| i * 3);
+        assert_eq!(v.len(), 257);
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i * 3);
+        }
+    }
+
+    #[test]
+    fn par_chunks_mut_writes_disjoint() {
+        let mut data = vec![0usize; 1003];
+        par_chunks_mut(&mut data, 100, |idx, chunk| {
+            for v in chunk.iter_mut() {
+                *v = idx + 1;
+            }
+        });
+        assert!(data.iter().all(|&v| v > 0));
+        assert_eq!(data[0], 1);
+        assert_eq!(data[1002], 11);
+    }
+
+    #[test]
+    fn num_threads_sane() {
+        let n = num_threads();
+        assert!((1..=64).contains(&n));
+    }
+}

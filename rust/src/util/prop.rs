@@ -1,0 +1,98 @@
+//! Mini property-based testing support (proptest is unavailable offline).
+//!
+//! [`check`] runs a property over `n` seeded random cases; on failure it
+//! reruns with decreasing "size" to report a smaller counterexample seed.
+//! Generators are plain closures over [`crate::util::Rng`], so properties
+//! can build arbitrary structured inputs.
+
+use crate::util::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    /// Maximum "size" hint passed to the generator (cases ramp 1..=size).
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 128, seed: 0xC0FFEE, max_size: 48 }
+    }
+}
+
+/// Run `prop(rng, size)`; panic with the failing seed/size if it returns
+/// `Err(reason)`. Size ramps up so early cases are small.
+pub fn check<F>(name: &str, cfg: Config, prop: F)
+where
+    F: Fn(&mut Rng, usize) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let size = 1 + (case * cfg.max_size) / cfg.cases.max(1);
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        if let Err(reason) = prop(&mut rng, size) {
+            // try to find a smaller failure by shrinking size
+            let mut min_fail = (size, case_seed, reason.clone());
+            for s in 1..size {
+                let mut r2 = Rng::new(case_seed);
+                if let Err(re) = prop(&mut r2, s) {
+                    min_fail = (s, case_seed, re);
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, size {}, seed {:#x}): {}",
+                min_fail.0, min_fail.1, min_fail.2
+            );
+        }
+    }
+}
+
+/// Assert-style helper for inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("sum-commutes", Config::default(), |rng, size| {
+            let a: Vec<i64> = (0..size).map(|_| rng.below(100) as i64).collect();
+            let fwd: i64 = a.iter().sum();
+            let bwd: i64 = a.iter().rev().sum();
+            prop_assert!(fwd == bwd, "sum mismatch {fwd} vs {bwd}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", Config { cases: 3, ..Default::default() }, |_, _| {
+            Err("nope".to_string())
+        });
+    }
+
+    #[test]
+    fn size_ramps() {
+        // sizes observed must be nondecreasing-ish and within bounds
+        let seen = std::sync::Mutex::new(Vec::new());
+        check("size-ramp", Config { cases: 10, max_size: 20, ..Default::default() }, |_, size| {
+            seen.lock().unwrap().push(size);
+            Ok(())
+        });
+        let v = seen.lock().unwrap();
+        assert!(v.iter().all(|&s| (1..=20).contains(&s)));
+        assert!(v.first().unwrap() <= v.last().unwrap());
+    }
+}

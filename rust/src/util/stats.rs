@@ -1,0 +1,181 @@
+//! Descriptive statistics and histograms used by profiling, metrics and
+//! the bench harness.
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f32>() / xs.len() as f32
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f32]) -> f32 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f32>() / xs.len() as f32).sqrt()
+}
+
+/// Percentile by linear interpolation on sorted copy; `p` in [0, 100].
+pub fn percentile(xs: &[f32], p: f64) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f32> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = (rank - lo as f64) as f32;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+/// Fixed-width histogram over `[lo, hi)` with `bins` buckets; values
+/// outside the range are clamped into the edge buckets.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f32,
+    pub hi: f32,
+    pub counts: Vec<u64>,
+    pub total: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f32, hi: f32, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Histogram { lo, hi, counts: vec![0; bins], total: 0 }
+    }
+
+    pub fn from_values(xs: &[f32], lo: f32, hi: f32, bins: usize) -> Self {
+        let mut h = Histogram::new(lo, hi, bins);
+        for &x in xs {
+            h.add(x);
+        }
+        h
+    }
+
+    pub fn add(&mut self, x: f32) {
+        let bins = self.counts.len();
+        let t = ((x - self.lo) / (self.hi - self.lo) * bins as f32) as isize;
+        let idx = t.clamp(0, bins as isize - 1) as usize;
+        self.counts[idx] += 1;
+        self.total += 1;
+    }
+
+    /// Bucket centers (for plotting / export).
+    pub fn centers(&self) -> Vec<f32> {
+        let w = (self.hi - self.lo) / self.counts.len() as f32;
+        (0..self.counts.len()).map(|i| self.lo + w * (i as f32 + 0.5)).collect()
+    }
+
+    /// Normalized densities (sum = 1).
+    pub fn densities(&self) -> Vec<f64> {
+        let t = self.total.max(1) as f64;
+        self.counts.iter().map(|&c| c as f64 / t).collect()
+    }
+
+    /// Render an ASCII bar chart — used by `cmoe bench --exp fig*`.
+    pub fn ascii(&self, width: usize) -> String {
+        let max = self.counts.iter().copied().max().unwrap_or(1).max(1);
+        let centers = self.centers();
+        let mut out = String::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            let bar = "#".repeat((c as usize * width / max as usize).max(usize::from(c > 0)));
+            out.push_str(&format!("{:>9.4} | {:<width$} {}\n", centers[i], bar, c, width = width));
+        }
+        out
+    }
+}
+
+/// Bimodality coefficient (Pfister et al.): (skew² + 1) / kurtosis.
+/// Values > 5/9 suggest bi- or multi-modality. Used to quantify the
+/// paper's Figure-2 observation on activation rates.
+pub fn bimodality_coefficient(xs: &[f32]) -> f64 {
+    let n = xs.len() as f64;
+    if n < 4.0 {
+        return 0.0;
+    }
+    let m = mean(xs) as f64;
+    let mut m2 = 0.0;
+    let mut m3 = 0.0;
+    let mut m4 = 0.0;
+    for &x in xs {
+        let d = x as f64 - m;
+        m2 += d * d;
+        m3 += d * d * d;
+        m4 += d * d * d * d;
+    }
+    m2 /= n;
+    m3 /= n;
+    m4 /= n;
+    if m2 <= 0.0 {
+        return 0.0;
+    }
+    let skew = m3 / m2.powf(1.5);
+    let kurt = m4 / (m2 * m2);
+    // small-sample correction per the standard BC definition
+    let corr = 3.0 * (n - 1.0) * (n - 1.0) / ((n - 2.0) * (n - 3.0));
+    (skew * skew + 1.0) / (kurt + corr - 3.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std() {
+        let xs = [1.0f32, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-6);
+        assert!((std_dev(&xs) - 1.1180339).abs() < 1e-5);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs: Vec<f32> = (0..=100).map(|i| i as f32).collect();
+        assert!((percentile(&xs, 50.0) - 50.0).abs() < 1e-6);
+        assert!((percentile(&xs, 99.0) - 99.0).abs() < 1e-6);
+        assert!((percentile(&xs, 0.0) - 0.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn histogram_counts_and_clamping() {
+        let mut h = Histogram::new(0.0, 1.0, 10);
+        h.add(0.05);
+        h.add(0.95);
+        h.add(-3.0); // clamps to first
+        h.add(7.0); // clamps to last
+        assert_eq!(h.counts[0], 2);
+        assert_eq!(h.counts[9], 2);
+        assert_eq!(h.total, 4);
+        let d = h.densities();
+        assert!((d.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bimodality_separates_uni_and_bi() {
+        // unimodal normal-ish
+        let mut r = crate::util::Rng::new(3);
+        let uni: Vec<f32> = (0..5000).map(|_| r.normal()).collect();
+        // bimodal: two well-separated spikes
+        let bi: Vec<f32> =
+            (0..5000).map(|i| if i % 10 == 0 { 1.0 } else { 0.05 + 0.01 * r.normal() }).collect();
+        let b_uni = bimodality_coefficient(&uni);
+        let b_bi = bimodality_coefficient(&bi);
+        assert!(b_uni < 5.0 / 9.0, "unimodal BC = {b_uni}");
+        assert!(b_bi > 5.0 / 9.0, "bimodal BC = {b_bi}");
+    }
+
+    #[test]
+    fn ascii_renders() {
+        let h = Histogram::from_values(&[0.1, 0.1, 0.9], 0.0, 1.0, 4);
+        let s = h.ascii(20);
+        assert!(s.lines().count() == 4);
+        assert!(s.contains('#'));
+    }
+}

@@ -1,0 +1,135 @@
+//! Aligned plain-text table rendering for the bench harness — every
+//! `cmoe bench --exp tableN` prints rows in the same shape as the
+//! paper's tables.
+
+/// A simple column-aligned table.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render with per-column width alignment.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::new();
+            for i in 0..ncol {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                let cell = &cells[i];
+                line.push_str(cell);
+                for _ in cell.chars().count()..widths[i] {
+                    line.push(' ');
+                }
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Export as a JSON object (for results/*.json).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut o = Json::obj();
+        o.set("title", self.title.as_str());
+        o.set("header", self.header.clone());
+        o.set(
+            "rows",
+            Json::Arr(self.rows.iter().map(|r| Json::from(r.clone())).collect()),
+        );
+        o
+    }
+}
+
+/// Format helper: fixed decimals.
+pub fn f(v: f64, decimals: usize) -> String {
+    format!("{:.*}", decimals, v)
+}
+
+/// Format helper: percent with sign, e.g. `-16.6%`.
+pub fn pct(v: f64) -> String {
+    format!("{:+.1}%", v * 100.0)
+}
+
+/// Format helper: speedup, e.g. `1.17x`.
+pub fn speedup(v: f64) -> String {
+    format!("{:.2}x", v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_aligns_columns() {
+        let mut t = Table::new("Demo", &["Method", "PPL"]);
+        t.row(vec!["Dense".into(), "5.27".into()]);
+        t.row(vec!["Ours (25%)".into(), "5.78".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert!(lines[0].contains("Demo"));
+        assert!(lines[1].starts_with("Method"));
+        // column starts align
+        let col = lines[1].find("PPL").unwrap();
+        assert_eq!(lines[3].find("5.27").unwrap(), col);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn json_export() {
+        let mut t = Table::new("x", &["a"]);
+        t.row(vec!["1".into()]);
+        let j = t.to_json();
+        assert_eq!(j.get("title").as_str().unwrap(), "x");
+        assert_eq!(j.get("rows").as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(f(1.2345, 2), "1.23");
+        assert_eq!(pct(-0.166), "-16.6%");
+        assert_eq!(speedup(1.171), "1.17x");
+    }
+}

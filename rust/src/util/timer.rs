@@ -1,0 +1,97 @@
+//! Wall-clock timing helpers used by the conversion report, metrics and
+//! the bench harness.
+
+use std::time::{Duration, Instant};
+
+/// A simple start/lap timer.
+#[derive(Debug, Clone)]
+pub struct Timer {
+    start: Instant,
+    last: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        let now = Instant::now();
+        Timer { start: now, last: now }
+    }
+
+    /// Time since construction.
+    pub fn total(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Time since the previous `lap()` (or construction).
+    pub fn lap(&mut self) -> Duration {
+        let now = Instant::now();
+        let d = now - self.last;
+        self.last = now;
+        d
+    }
+}
+
+/// Run `f` at least `min_iters` times and for at least `min_time`,
+/// returning per-iteration durations — the measurement core of the
+/// in-repo criterion replacement (see `bench_harness::runner`).
+pub fn measure<F: FnMut()>(mut f: F, min_iters: usize, min_time: Duration) -> Vec<Duration> {
+    let mut samples = Vec::new();
+    let t0 = Instant::now();
+    loop {
+        let s = Instant::now();
+        f();
+        samples.push(s.elapsed());
+        if samples.len() >= min_iters && t0.elapsed() >= min_time {
+            break;
+        }
+        // hard cap so a pathologically slow subject cannot hang a bench run
+        if samples.len() >= 100_000 {
+            break;
+        }
+    }
+    samples
+}
+
+/// Format a duration human-readably (µs/ms/s).
+pub fn fmt_duration(d: Duration) -> String {
+    let us = d.as_secs_f64() * 1e6;
+    if us < 1000.0 {
+        format!("{us:.1}µs")
+    } else if us < 1_000_000.0 {
+        format!("{:.2}ms", us / 1000.0)
+    } else {
+        format!("{:.3}s", us / 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lap_and_total_advance() {
+        let mut t = Timer::start();
+        std::thread::sleep(Duration::from_millis(2));
+        let lap1 = t.lap();
+        assert!(lap1 >= Duration::from_millis(1));
+        assert!(t.total() >= lap1);
+    }
+
+    #[test]
+    fn measure_returns_enough_samples() {
+        let samples = measure(
+            || {
+                std::hint::black_box(1 + 1);
+            },
+            10,
+            Duration::from_millis(1),
+        );
+        assert!(samples.len() >= 10);
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert!(fmt_duration(Duration::from_micros(5)).ends_with("µs"));
+        assert!(fmt_duration(Duration::from_millis(5)).ends_with("ms"));
+        assert!(fmt_duration(Duration::from_secs(5)).ends_with('s'));
+    }
+}

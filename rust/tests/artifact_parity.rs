@@ -1,0 +1,129 @@
+//! Integration: the compiled XLA artifacts must agree with the pure-rust
+//! reference forward pass on identical weights — this pins L1+L2 (jax /
+//! Pallas) to L3 (rust) numerics. Skipped when `make artifacts` hasn't
+//! run.
+
+use cmoe::eval::forward::DenseForward;
+use cmoe::model::{model_config, ModelWeights};
+use cmoe::runtime::{ModelBuffers, XlaRuntime};
+use cmoe::util::Rng;
+
+fn runtime() -> Option<XlaRuntime> {
+    let dir = cmoe::test_artifact_dir()?;
+    Some(XlaRuntime::load(dir).expect("artifacts exist but failed to load"))
+}
+
+#[test]
+fn prefill_artifact_matches_rust_forward() {
+    let Some(rt) = runtime() else { return };
+    let cfg = model_config("tiny").unwrap();
+    let mut rng = Rng::new(401);
+    let model = ModelWeights::random(&cfg, &mut rng);
+
+    let tokens: Vec<usize> = (0..16).map(|_| rng.below(cfg.vocab)).collect();
+    // rust reference
+    let want = DenseForward::new(&model).logits(&tokens);
+
+    // artifact
+    let bufs = ModelBuffers::from_model(&rt, &model).unwrap();
+    let toks_i32: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+    let tok_buf = rt.upload_i32(&toks_i32, &[1, 16]).unwrap();
+    let args = bufs.args_with(&[&tok_buf]);
+    let out = rt.execute("prefill_dense_tiny_b1_s16_t128", &args).unwrap();
+    let got = rt.download(&out[0], &[1, 16, cfg.vocab]).unwrap();
+
+    let mut max_diff = 0.0f32;
+    for t in 0..16 {
+        for v in 0..cfg.vocab {
+            let d = (got.data[t * cfg.vocab + v] - want.at2(t, v)).abs();
+            max_diff = max_diff.max(d);
+        }
+    }
+    assert!(max_diff < 2e-3, "artifact vs rust logits diverge: {max_diff}");
+}
+
+#[test]
+fn decode_artifact_continues_prefill() {
+    let Some(rt) = runtime() else { return };
+    let cfg = model_config("tiny").unwrap();
+    let mut rng = Rng::new(402);
+    let model = ModelWeights::random(&cfg, &mut rng);
+    let bufs = ModelBuffers::from_model(&rt, &model).unwrap();
+
+    // 17 tokens: prefill 16, decode 1 — must match rust forward of all 17
+    let tokens: Vec<usize> = (0..17).map(|_| rng.below(cfg.vocab)).collect();
+    let want = DenseForward::new(&model).logits(&tokens);
+
+    let toks_i32: Vec<i32> = tokens[..16].iter().map(|&t| t as i32).collect();
+    let tok_buf = rt.upload_i32(&toks_i32, &[1, 16]).unwrap();
+    let args = bufs.args_with(&[&tok_buf]);
+    let out = rt.execute("prefill_dense_tiny_b1_s16_t128", &args).unwrap();
+    let kv = &out[1];
+
+    let step_tok = rt.upload_i32(&[tokens[16] as i32], &[1]).unwrap();
+    let pos = rt.upload_scalar_i32(16).unwrap();
+    let args = bufs.args_with(&[&step_tok, kv, &pos]);
+    let out = rt.execute("decode_dense_tiny_b1_t128", &args).unwrap();
+    let got = rt.download(&out[0], &[1, cfg.vocab]).unwrap();
+
+    let mut max_diff = 0.0f32;
+    for v in 0..cfg.vocab {
+        max_diff = max_diff.max((got.data[v] - want.at2(16, v)).abs());
+    }
+    assert!(max_diff < 2e-3, "decode logits diverge from rust forward: {max_diff}");
+}
+
+#[test]
+fn moe_decode_artifact_matches_rust_moe_forward() {
+    let Some(rt) = runtime() else { return };
+    let cfg = model_config("tiny").unwrap();
+    let mut rng = Rng::new(403);
+    let model = ModelWeights::random(&cfg, &mut rng);
+
+    // convert with the spec compiled for tiny (S2A2E8)
+    let fwd = DenseForward::new(&model);
+    let calib: Vec<usize> = (0..96).map(|_| rng.below(cfg.vocab)).collect();
+    let profiles: Vec<_> = fwd
+        .capture_hidden(&calib)
+        .iter()
+        .map(|h| cmoe::profiling::ActivationProfile::from_hidden(h, 24))
+        .collect();
+    let conv = cmoe::converter::convert_model(
+        &model,
+        &profiles,
+        &"S2A2E8".parse().unwrap(),
+        &cmoe::converter::ConvertOptions::default(),
+    )
+    .unwrap();
+
+    // rust reference on the converted model
+    let tokens: Vec<usize> = (0..17).map(|_| rng.below(cfg.vocab)).collect();
+    let want = DenseForward::new(&conv.model).logits(&tokens);
+
+    // artifact path
+    let dense_bufs = ModelBuffers::from_model(&rt, &conv.model).unwrap();
+    let moe_bufs = cmoe::runtime::MoeModelBuffers::from_model(&rt, &conv.model).unwrap();
+    let toks_i32: Vec<i32> = tokens[..16].iter().map(|&t| t as i32).collect();
+    let tok_buf = rt.upload_i32(&toks_i32, &[1, 16]).unwrap();
+    let mut args: Vec<&xla::PjRtBuffer> = dense_bufs.named.values().collect();
+    args.extend(moe_bufs.named.values());
+    args.push(&tok_buf);
+    let out = rt.execute("prefill_moe_tiny_S2A2E8_b1_s16_t128", &args).unwrap();
+    let kv = &out[1];
+
+    let step_tok = rt.upload_i32(&[tokens[16] as i32], &[1]).unwrap();
+    let pos = rt.upload_scalar_i32(16).unwrap();
+    let mut args: Vec<&xla::PjRtBuffer> = dense_bufs.named.values().collect();
+    args.extend(moe_bufs.named.values());
+    args.push(&step_tok);
+    args.push(kv);
+    args.push(&pos);
+    let out = rt.execute("decode_moe_tiny_S2A2E8_b1_t128", &args).unwrap();
+    let got = rt.download(&out[0], &[1, cfg.vocab]).unwrap();
+
+    let mut max_diff = 0.0f32;
+    for v in 0..cfg.vocab {
+        max_diff = max_diff.max((got.data[v] - want.at2(16, v)).abs());
+    }
+    assert!(max_diff < 5e-3, "MoE decode diverges from rust MoE forward: {max_diff}");
+}

@@ -1,0 +1,164 @@
+//! Integration: the full user pipeline — profile → convert → fine-tune
+//! → save → load → serve — plus robustness of the persistence layer.
+
+use cmoe::converter::{convert_model, ConvertOptions};
+use cmoe::eval::forward::DenseForward;
+use cmoe::model::{model_config, LayerFfn, ModelWeights};
+use cmoe::profiling::ActivationProfile;
+use cmoe::util::Rng;
+
+fn converted_tiny(rng: &mut Rng) -> (ModelWeights, ModelWeights) {
+    let cfg = model_config("tiny").unwrap();
+    let dense = ModelWeights::random(&cfg, rng);
+    let calib: Vec<usize> = (0..96).map(|_| rng.below(cfg.vocab)).collect();
+    let profiles: Vec<ActivationProfile> = DenseForward::new(&dense)
+        .capture_hidden(&calib)
+        .iter()
+        .map(|h| ActivationProfile::from_hidden(h, 24))
+        .collect();
+    let moe = convert_model(&dense, &profiles, &"S2A2E8".parse().unwrap(), &ConvertOptions::default())
+        .unwrap()
+        .model;
+    (dense, moe)
+}
+
+#[test]
+fn convert_save_load_preserves_forward_exactly() {
+    let mut rng = Rng::new(601);
+    let (_, moe) = converted_tiny(&mut rng);
+    let path = std::env::temp_dir().join("cmoe_rt_moe.cmw");
+    moe.save(&path).unwrap();
+    let back = ModelWeights::load(&path).unwrap();
+
+    // identical forward on identical inputs (bit-exact weights)
+    let tokens: Vec<usize> = (0..10).map(|_| rng.below(256)).collect();
+    let a = DenseForward::new(&moe).logits(&tokens);
+    let b = DenseForward::new(&back).logits(&tokens);
+    assert_eq!(a.data, b.data, "save/load changed the model");
+
+    // MoE bookkeeping survives
+    for (la, lb) in moe.layers.iter().zip(&back.layers) {
+        let (LayerFfn::Moe(ma), LayerFfn::Moe(mb)) = (&la.ffn, &lb.ffn) else {
+            panic!("layer kind lost");
+        };
+        assert_eq!(ma.spec, mb.spec);
+        assert_eq!(ma.shared_neurons, mb.shared_neurons);
+        assert_eq!(ma.expert_neurons, mb.expert_neurons);
+        assert_eq!(ma.representatives, mb.representatives);
+        assert_eq!(ma.gate_bias, mb.gate_bias);
+    }
+}
+
+#[test]
+fn finetuned_gates_survive_roundtrip() {
+    let mut rng = Rng::new(602);
+    let (dense, mut moe) = converted_tiny(&mut rng);
+    // fine-tune gates so u != 0, bias != 0
+    let calib: Vec<usize> = (0..128).map(|_| rng.below(256)).collect();
+    let inputs = DenseForward::new(&dense).capture_ffn_inputs(&calib);
+    for (l, layer) in moe.layers.iter_mut().enumerate() {
+        if let LayerFfn::Moe(m) = &mut layer.ffn {
+            cmoe::moe::finetune_gates(m, &inputs[l], &cmoe::moe::FinetuneConfig::default());
+        }
+    }
+    let path = std::env::temp_dir().join("cmoe_rt_ft.cmw");
+    moe.save(&path).unwrap();
+    let back = ModelWeights::load(&path).unwrap();
+    for (la, lb) in moe.layers.iter().zip(&back.layers) {
+        let (LayerFfn::Moe(ma), LayerFfn::Moe(mb)) = (&la.ffn, &lb.ffn) else { unreachable!() };
+        assert_eq!(ma.gate_scale, mb.gate_scale);
+        assert!(ma.gate_scale.iter().any(|&u| u != 0.0), "fine-tune was a no-op");
+    }
+}
+
+#[test]
+fn truncated_cmw_rejected_gracefully() {
+    let mut rng = Rng::new(603);
+    let (_, moe) = converted_tiny(&mut rng);
+    let path = std::env::temp_dir().join("cmoe_rt_trunc.cmw");
+    moe.save(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    // chop the payload at several points — must error, never panic
+    for frac in [0.1, 0.5, 0.95] {
+        let cut = (bytes.len() as f64 * frac) as usize;
+        let tpath = std::env::temp_dir().join(format!("cmoe_rt_trunc_{cut}.cmw"));
+        std::fs::write(&tpath, &bytes[..cut]).unwrap();
+        assert!(ModelWeights::load(&tpath).is_err(), "truncation at {frac} accepted");
+    }
+}
+
+#[test]
+fn corrupted_header_rejected_gracefully() {
+    let mut rng = Rng::new(604);
+    let (dense, _) = converted_tiny(&mut rng);
+    let path = std::env::temp_dir().join("cmoe_rt_corrupt.cmw");
+    dense.save(&path).unwrap();
+    let mut bytes = std::fs::read(&path).unwrap();
+    // scribble over the JSON header region
+    for b in bytes[16..48].iter_mut() {
+        *b = b'#';
+    }
+    std::fs::write(&path, &bytes).unwrap();
+    assert!(ModelWeights::load(&path).is_err());
+}
+
+#[test]
+fn quantized_converted_model_roundtrips_and_serves_reference() {
+    // §6 composition through persistence: quantize(convert(m)) →
+    // save → load → forward is finite and close to unquantized
+    let mut rng = Rng::new(605);
+    let (_, moe) = converted_tiny(&mut rng);
+    let q = cmoe::quant::quantize_model(&moe);
+    let path = std::env::temp_dir().join("cmoe_rt_quant.cmw");
+    q.save(&path).unwrap();
+    let back = ModelWeights::load(&path).unwrap();
+    let tokens: Vec<usize> = (0..8).map(|_| rng.below(256)).collect();
+    let a = DenseForward::new(&moe).logits(&tokens);
+    let b = DenseForward::new(&back).logits(&tokens);
+    let mut diff = a.clone();
+    for (x, y) in diff.data.iter_mut().zip(&b.data) {
+        *x -= y;
+    }
+    assert!(b.data.iter().all(|v| v.is_finite()));
+    assert!(
+        (diff.norm() / a.norm()) < 0.2,
+        "int8 drift too large: {}",
+        diff.norm() / a.norm()
+    );
+}
+
+#[test]
+fn server_concurrent_submitters() {
+    // EngineServer under concurrent producers: every ticket resolves,
+    // ids map to the right results (needs artifacts; self-skips)
+    let Some(dir) = cmoe::test_artifact_dir() else { return };
+    let mut rng = Rng::new(606);
+    let cfg = model_config("tiny").unwrap();
+    let dense = ModelWeights::random(&cfg, &mut rng);
+    let mut ecfg = cmoe::serving::EngineConfig::dense("tiny", 128);
+    ecfg.batcher.buckets = vec![1];
+    ecfg.batcher.max_wait = std::time::Duration::ZERO;
+    let server =
+        std::sync::Arc::new(cmoe::serving::EngineServer::start(dir, dense, ecfg).unwrap());
+    let mut handles = Vec::new();
+    for tid in 0..4u64 {
+        let s = server.clone();
+        handles.push(std::thread::spawn(move || {
+            for i in 0..3u64 {
+                let id = tid * 100 + i;
+                let prompt = vec![(id % 250) as usize; 6];
+                let ticket = s.submit(cmoe::serving::Request::new(
+                    id,
+                    prompt,
+                    cmoe::serving::GenParams { max_new_tokens: 2, ..Default::default() },
+                ));
+                let r = ticket.wait().unwrap();
+                assert_eq!(r.id, id);
+                assert_eq!(r.tokens.len(), 2);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}
