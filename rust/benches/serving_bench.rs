@@ -1,6 +1,13 @@
-//! End-to-end serving benchmarks (Tables 7/9 backing): decode
-//! throughput per mode × batch × context, through the real engine +
-//! PJRT artifacts. Requires `make artifacts`.
+//! Serving benchmarks. Two sections:
+//!
+//! 1. **Grouped-dispatch sweep** (always runs, artifact-free): dense vs
+//!    per-token vs grouped expert execution across batch size and
+//!    activation ratio — the evidence that grouped dispatch turns CMoE's
+//!    FLOP savings into throughput, and that its scratch arena stops
+//!    allocating after warmup (the "arena growths" column must be 0).
+//! 2. **Engine end-to-end** (Tables 7/9 backing): decode throughput per
+//!    mode × batch × context through the real engine + PJRT artifacts;
+//!    requires `make artifacts`.
 
 use cmoe::bench_harness::runner::BenchRunner;
 use cmoe::eval::forward::DenseForward;
@@ -12,8 +19,17 @@ use std::sync::Arc;
 use std::time::Duration;
 
 fn main() {
+    match cmoe::bench_harness::exp_serving::dispatch_sweep_table(
+        7,
+        5,
+        Duration::from_millis(60),
+    ) {
+        Ok(t) => println!("{}\n", t.render()),
+        Err(e) => eprintln!("dispatch sweep failed: {e:#}"),
+    }
+
     let Some(dir) = cmoe::test_artifact_dir() else {
-        eprintln!("artifacts missing — run `make artifacts` first");
+        eprintln!("artifacts missing — engine section skipped (run `make artifacts` first)");
         return;
     };
     let rt = Arc::new(cmoe::runtime::XlaRuntime::load(&dir).unwrap());

@@ -12,16 +12,17 @@ mod exp_ablate;
 mod exp_figs;
 mod exp_quality;
 mod exp_efficiency;
-mod exp_serving;
+pub mod exp_serving;
 
 use crate::util::table::Table;
 use anyhow::{bail, Result};
 use common::Ctx;
 
-/// Every experiment id, in paper order.
+/// Every experiment id, in paper order; `dispatch` (the grouped expert
+/// dispatch sweep, artifact-free) rides at the end.
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "fig1", "fig2", "table1", "table2", "table3", "table4", "table5", "table6", "table7",
-    "table8", "table9", "table10", "table11", "fig4", "fig5", "fig6",
+    "table8", "table9", "table10", "table11", "fig4", "fig5", "fig6", "dispatch",
 ];
 
 /// Run one experiment by id.
@@ -41,6 +42,7 @@ pub fn run(exp: &str, ctx: &mut Ctx) -> Result<Vec<Table>> {
         "table7" => vec![exp_efficiency::table7(ctx)?],
         "table8" => vec![exp_efficiency::table8(ctx)?],
         "table9" => vec![exp_serving::table9(ctx)?],
+        "dispatch" => vec![exp_serving::dispatch_sweep(ctx)?],
         "table10" => vec![exp_quality::table10(ctx)?],
         "table11" => vec![exp_quality::table11(ctx)?],
         "ablate" => vec![

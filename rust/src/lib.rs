@@ -11,9 +11,13 @@
 //!
 //! * **L3 (this crate)** — the coordinator: conversion pipeline
 //!   ([`converter`]), baselines ([`baselines`]), serving engine
-//!   ([`serving`]) with continuous batching and capacity-factor expert
-//!   dispatch, evaluation ([`eval`]) and the bench harness
+//!   ([`serving`]) with continuous batching and zero-allocation grouped
+//!   expert dispatch, evaluation ([`eval`]) and the bench harness
 //!   ([`bench_harness`]) that regenerates every table/figure of the paper.
+//!
+//! The end-to-end picture (module map, execution modes, and the decode
+//! wave's path through the grouped dispatcher) is documented in
+//! `docs/ARCHITECTURE.md` at the repo root.
 //! * **L2 (python/compile/model.py)** — the JAX transformer, lowered once
 //!   to HLO text artifacts (`make artifacts`).
 //! * **L1 (python/compile/kernels/)** — Pallas kernels for the SwiGLU /

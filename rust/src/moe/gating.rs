@@ -50,6 +50,127 @@ pub fn route_from_scores(moe: &MoeLayerWeights, scores: &Tensor) -> Vec<GateDeci
     out
 }
 
+/// Expert-major (CSR-style) routing layout for one wave: for each
+/// routed expert, the contiguous list of (token, gate) assignments.
+///
+/// This is the "expert → token index list" view the grouped dispatcher
+/// consumes, inverted from the per-token [`GateDecision`] list the
+/// router emits. Layout invariants (relied on by
+/// `serving::dispatch::GroupedDispatcher` and its parity tests):
+///
+/// * rows `offsets[e] .. offsets[e+1]` belong to expert `e`, experts
+///   ascending — the *expert block layout* of every gathered buffer;
+/// * within an expert block, tokens keep ascending wave order;
+/// * `token_idx`/`gates` are parallel arrays of length
+///   [`GroupedRouting::total_rows`].
+///
+/// [`GroupedRouting::rebuild`] is allocation-free once the buffers have
+/// grown to the wave's steady-state size (vectors are reused via
+/// `clear` + `resize`), which is what keeps the decode hot loop free of
+/// per-wave heap traffic.
+#[derive(Clone, Debug, Default)]
+pub struct GroupedRouting {
+    n_experts: usize,
+    /// `offsets[e]..offsets[e+1]` = rows of expert `e`; length
+    /// `n_experts + 1`.
+    offsets: Vec<usize>,
+    /// Wave-token index of each row, expert-major.
+    token_idx: Vec<usize>,
+    /// Gate value of each row (parallel to `token_idx`).
+    gates: Vec<f32>,
+    /// Scratch write cursors for the fill pass.
+    cursor: Vec<usize>,
+}
+
+impl GroupedRouting {
+    pub fn new(n_experts: usize) -> GroupedRouting {
+        GroupedRouting {
+            n_experts,
+            offsets: vec![0; n_experts + 1],
+            token_idx: Vec::new(),
+            gates: Vec::new(),
+            cursor: vec![0; n_experts],
+        }
+    }
+
+    /// Invert per-token decisions into the expert-major layout.
+    /// Two passes (count, then fill) — no sorting, `O(assignments)`.
+    /// Reuses all internal buffers; only grows them when a wave is
+    /// larger than anything seen before.
+    pub fn rebuild(&mut self, n_experts: usize, decisions: &[GateDecision]) {
+        self.n_experts = n_experts;
+        self.offsets.clear();
+        self.offsets.resize(n_experts + 1, 0);
+        self.cursor.clear();
+        self.cursor.resize(n_experts, 0);
+        // count into offsets[e + 1], then prefix-sum
+        for dec in decisions {
+            debug_assert_eq!(
+                dec.experts.len(),
+                dec.gates.len(),
+                "malformed GateDecision: experts/gates length mismatch"
+            );
+            for &e in &dec.experts {
+                debug_assert!(e < n_experts, "expert {e} out of range {n_experts}");
+                self.offsets[e + 1] += 1;
+            }
+        }
+        for e in 0..n_experts {
+            self.offsets[e + 1] += self.offsets[e];
+        }
+        let total = self.offsets[n_experts];
+        self.token_idx.clear();
+        self.token_idx.resize(total, 0);
+        self.gates.clear();
+        self.gates.resize(total, 0.0);
+        self.cursor.copy_from_slice(&self.offsets[..n_experts]);
+        for (t, dec) in decisions.iter().enumerate() {
+            for (&e, &g) in dec.experts.iter().zip(&dec.gates) {
+                let row = self.cursor[e];
+                self.cursor[e] += 1;
+                self.token_idx[row] = t;
+                self.gates[row] = g;
+            }
+        }
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.n_experts
+    }
+
+    /// Total gathered rows (= total (token, expert) assignments).
+    pub fn total_rows(&self) -> usize {
+        *self.offsets.last().unwrap_or(&0)
+    }
+
+    /// Row range of expert `e` in the gathered buffers.
+    pub fn expert_rows(&self, e: usize) -> std::ops::Range<usize> {
+        self.offsets[e]..self.offsets[e + 1]
+    }
+
+    /// Tokens routed to expert `e`.
+    pub fn count(&self, e: usize) -> usize {
+        self.offsets[e + 1] - self.offsets[e]
+    }
+
+    /// The expert owning gathered row `r` (`r < total_rows()`); skips
+    /// empty experts. O(log n_experts).
+    pub fn expert_of_row(&self, r: usize) -> usize {
+        debug_assert!(r < self.total_rows());
+        self.offsets.partition_point(|&o| o <= r) - 1
+    }
+
+    /// Wave-token index per row, expert-major.
+    pub fn token_idx(&self) -> &[usize] {
+        &self.token_idx
+    }
+
+    /// Gate value per row, parallel to [`GroupedRouting::token_idx`].
+    pub fn gates(&self) -> &[f32] {
+        &self.gates
+    }
+}
+
 /// Statistics of one MoE forward (feeds Figure 5 and the FLOPs counter).
 #[derive(Clone, Debug, Default)]
 pub struct MoeForwardStats {
@@ -232,6 +353,113 @@ mod tests {
         for d in &dec {
             assert!(d.gates.iter().all(|&g| g > 1.0), "gates {:?}", d.gates);
         }
+    }
+
+    #[test]
+    fn grouped_routing_inverts_decisions() {
+        let dec = vec![
+            GateDecision { experts: vec![2, 0], gates: vec![0.5, 1.5], scores: vec![] },
+            GateDecision { experts: vec![0], gates: vec![2.0], scores: vec![] },
+            GateDecision { experts: vec![2], gates: vec![3.0], scores: vec![] },
+        ];
+        let mut r = GroupedRouting::new(4);
+        r.rebuild(4, &dec);
+        assert_eq!(r.total_rows(), 4);
+        // expert 0: tokens 0, 1 in wave order
+        assert_eq!(r.expert_rows(0), 0..2);
+        assert_eq!(&r.token_idx()[0..2], &[0, 1]);
+        assert_eq!(&r.gates()[0..2], &[1.5, 2.0]);
+        // experts 1 and 3 are empty
+        assert_eq!(r.count(1), 0);
+        assert_eq!(r.count(3), 0);
+        // expert 2: tokens 0, 2
+        assert_eq!(r.expert_rows(2), 2..4);
+        assert_eq!(&r.token_idx()[2..4], &[0, 2]);
+        assert_eq!(&r.gates()[2..4], &[0.5, 3.0]);
+        // row → expert lookup skips the empty expert 1
+        assert_eq!(r.expert_of_row(0), 0);
+        assert_eq!(r.expert_of_row(1), 0);
+        assert_eq!(r.expert_of_row(2), 2);
+        assert_eq!(r.expert_of_row(3), 2);
+    }
+
+    #[test]
+    fn grouped_routing_reuse_across_waves() {
+        // rebuild must stay correct when the expert count and wave size
+        // shrink and grow between calls (buffer-reuse paths)
+        let mut r = GroupedRouting::new(2);
+        let big: Vec<GateDecision> = (0..20)
+            .map(|t| GateDecision {
+                experts: vec![t % 5],
+                gates: vec![t as f32],
+                scores: vec![],
+            })
+            .collect();
+        r.rebuild(5, &big);
+        assert_eq!(r.total_rows(), 20);
+        assert_eq!(r.n_experts(), 5);
+        for e in 0..5 {
+            assert_eq!(r.count(e), 4);
+        }
+        // shrink to an empty wave
+        r.rebuild(3, &[]);
+        assert_eq!(r.total_rows(), 0);
+        assert_eq!(r.n_experts(), 3);
+        assert_eq!(r.count(2), 0);
+        // grow again
+        r.rebuild(5, &big);
+        let total: usize = (0..5).map(|e| r.count(e)).sum();
+        assert_eq!(total, 20);
+        // conservation: every (token, expert, gate) triple shows up once
+        for (t, dec) in big.iter().enumerate() {
+            let e = dec.experts[0];
+            let rows = r.expert_rows(e);
+            let hit = rows
+                .clone()
+                .filter(|&row| r.token_idx()[row] == t && r.gates()[row] == dec.gates[0])
+                .count();
+            assert_eq!(hit, 1, "token {t} expert {e}");
+        }
+    }
+
+    #[test]
+    fn grouped_routing_conservation_property() {
+        crate::util::prop::check(
+            "grouped-routing-conservation",
+            crate::util::prop::Config { cases: 48, max_size: 32, ..Default::default() },
+            |rng, size| {
+                let b = rng.range(1, size + 2);
+                let n_e = rng.range(1, 9);
+                let dec: Vec<GateDecision> = (0..b)
+                    .map(|_| {
+                        let k = rng.range(1, n_e + 1);
+                        let experts = rng.choose_k(n_e, k);
+                        GateDecision {
+                            gates: (0..k).map(|_| rng.normal()).collect(),
+                            experts,
+                            scores: vec![],
+                        }
+                    })
+                    .collect();
+                let total: usize = dec.iter().map(|d| d.experts.len()).sum();
+                let mut r = GroupedRouting::new(n_e);
+                r.rebuild(n_e, &dec);
+                crate::prop_assert!(r.total_rows() == total, "row count mismatch");
+                let counted: usize = (0..n_e).map(|e| r.count(e)).sum();
+                crate::prop_assert!(counted == total, "offsets don't cover rows");
+                for e in 0..n_e {
+                    let rows = r.expert_rows(e);
+                    crate::prop_assert!(rows.start <= rows.end, "offsets not monotone");
+                    // tokens ascend within an expert block
+                    let toks = &r.token_idx()[rows];
+                    crate::prop_assert!(
+                        toks.windows(2).all(|w| w[0] < w[1]),
+                        "tokens out of order for expert {e}: {toks:?}"
+                    );
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

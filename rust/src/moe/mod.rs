@@ -1,6 +1,13 @@
 //! MoE runtime logic: analytical-router scoring, top-`N_k` gating with
 //! load-balancing bias (Eq. 9), expert utilization tracking, the
 //! adaptive bias updater (§4.3), and the lightweight gate fine-tuner.
+//!
+//! Routing produces two views of the same decision: the per-token
+//! [`GateDecision`] list (what evaluation and fine-tuning consume) and
+//! the expert-major [`GroupedRouting`] index lists (what the serving
+//! engine's grouped dispatcher consumes — see
+//! `serving::dispatch::GroupedDispatcher` for the execution side and
+//! the layout invariants).
 
 mod gating;
 mod balance;
@@ -8,4 +15,7 @@ mod finetune;
 
 pub use balance::{BalanceConfig, BiasAdapter, UtilizationTracker};
 pub use finetune::{finetune_gates, FinetuneConfig, FinetuneReport};
-pub use gating::{moe_ffn_forward, route_from_scores, route_tokens, GateDecision, MoeForwardStats};
+pub use gating::{
+    moe_ffn_forward, route_from_scores, route_tokens, GateDecision, GroupedRouting,
+    MoeForwardStats,
+};

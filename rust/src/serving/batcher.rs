@@ -66,19 +66,33 @@ impl Batcher {
     /// depth + hold policy). Returns requests with their enqueue times.
     /// `None` if the queue is empty or still within the hold window.
     pub fn take_wave(&mut self) -> Option<Vec<(Request, Instant)>> {
+        let mut wave = Vec::new();
+        if self.take_wave_into(&mut wave) {
+            Some(wave)
+        } else {
+            None
+        }
+    }
+
+    /// Like [`Batcher::take_wave`], but drains into a caller-owned
+    /// buffer (cleared first) so the steady-state serve loop re-forms
+    /// waves without allocating. Returns whether a wave was formed.
+    pub fn take_wave_into(&mut self, out: &mut Vec<(Request, Instant)>) -> bool {
+        out.clear();
         let n = self.queue.len();
         if n == 0 {
-            return None;
+            return false;
         }
         let max_bucket = *self.cfg.buckets.last().unwrap();
         let oldest = self.queue.front().unwrap().1;
         // hold a partial wave open while fresh and below the max bucket
         if n < max_bucket && oldest.elapsed() < self.cfg.max_wait {
-            return None;
+            return false;
         }
         let bucket = self.bucket_for(n);
         let take = n.min(bucket);
-        Some(self.queue.drain(..take).collect())
+        out.extend(self.queue.drain(..take));
+        true
     }
 }
 
@@ -130,6 +144,27 @@ mod tests {
             b.push(req(i));
         }
         assert_eq!(b.take_wave().unwrap().len(), 8);
+    }
+
+    #[test]
+    fn take_wave_into_reuses_buffer() {
+        let mut b =
+            Batcher::new(BatcherConfig { buckets: vec![1, 4], max_wait: Duration::ZERO });
+        for i in 0..6 {
+            b.push(req(i));
+        }
+        let mut wave = Vec::new();
+        assert!(b.take_wave_into(&mut wave));
+        assert_eq!(wave.len(), 4);
+        let cap = wave.capacity();
+        // second wave reuses the same backing storage
+        assert!(b.take_wave_into(&mut wave));
+        assert_eq!(wave.len(), 2);
+        assert_eq!(wave.capacity(), cap);
+        assert_eq!(wave[0].0.id, 4);
+        // empty queue clears the buffer and reports no wave
+        assert!(!b.take_wave_into(&mut wave));
+        assert!(wave.is_empty());
     }
 
     #[test]

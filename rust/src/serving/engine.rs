@@ -1,10 +1,17 @@
 //! The serving engine: wave scheduling over compiled decode steps.
+//!
+//! In [`ExecMode::MoeOrchestrated`], attention and the shared expert
+//! run through compiled artifacts while routing and the routed experts
+//! are coordinated in rust. Routed-expert execution is selected by
+//! [`ExpertExec`]: the default grouped host path (one GEMM per expert
+//! per layer over arena-backed buffers — see `serving::dispatch`) or
+//! the capacity-factor device artifact.
 
 use crate::model::{LayerFfn, ModelWeights, MoeSpec};
-use crate::moe::{route_from_scores, route_tokens, BalanceConfig, BiasAdapter};
+use crate::moe::{route_from_scores, route_tokens, BalanceConfig, BiasAdapter, GroupedRouting};
 use crate::runtime::{ModelBuffers, MoeModelBuffers, XlaRuntime};
 use crate::serving::batcher::{Batcher, BatcherConfig};
-use crate::serving::dispatch::ExpertDispatcher;
+use crate::serving::dispatch::{DispatchArena, ExpertDispatcher, GroupedDispatcher};
 use crate::serving::metrics::{EngineMetrics, WaveMetrics};
 use crate::serving::request::{Request, RequestResult};
 use crate::tensor::{self, Tensor};
@@ -23,6 +30,19 @@ pub enum ExecMode {
     MoeOrchestrated,
 }
 
+/// How `MoeOrchestrated` executes the routed experts of a layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExpertExec {
+    /// Grouped host dispatch (default): gather per-expert token blocks,
+    /// one SwiGLU GEMM per expert per layer, scatter back — zero heap
+    /// allocations in steady state (per-engine scratch arena).
+    HostGrouped,
+    /// Capacity-factor device artifact (`experts_*`): fixed `[N_r,C,d]`
+    /// zero-padded blocks, one grouped-kernel call, overflow rounds.
+    /// Requires the artifact to be compiled for the wave's bucket.
+    DeviceCapacity,
+}
+
 /// Engine configuration.
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
@@ -36,6 +56,8 @@ pub struct EngineConfig {
     pub batcher: BatcherConfig,
     /// Online load-balance adaptation (orchestrated mode only).
     pub balance: Option<BalanceConfig>,
+    /// Routed-expert execution strategy (orchestrated mode only).
+    pub expert_exec: ExpertExec,
 }
 
 impl EngineConfig {
@@ -47,6 +69,7 @@ impl EngineConfig {
             kv_len,
             batcher: BatcherConfig::default(),
             balance: None,
+            expert_exec: ExpertExec::HostGrouped,
         }
     }
 
@@ -58,6 +81,7 @@ impl EngineConfig {
             kv_len,
             batcher: BatcherConfig::default(),
             balance: Some(BalanceConfig::default()),
+            expert_exec: ExpertExec::HostGrouped,
         }
     }
 }
@@ -77,10 +101,24 @@ pub struct Engine {
     pub metrics: std::sync::Mutex<EngineMetrics>,
 }
 
-/// Host copies of the MoE layers plus their bias adapters.
+/// Host copies of the MoE layers plus their bias adapters, and the
+/// per-engine grouped-dispatch scratch (routing index lists + arena)
+/// reused across layers, steps, and waves — the decode loop's
+/// zero-allocation working set.
 struct MoeState {
     layers: Vec<crate::model::MoeLayerWeights>,
     adapters: Vec<BiasAdapter>,
+    /// Expert-major routing lists, rebuilt in place each layer-step.
+    routing: GroupedRouting,
+    /// Gather/GEMM/scatter scratch; grows during warmup, then stable.
+    arena: DispatchArena,
+    /// Per-expert token counts of the current layer-step (feeds the
+    /// bias adapter and the occupancy gauge).
+    counts: Vec<usize>,
+    /// Per-expert tokens accumulated over the current decode step's
+    /// layers; flushed to `EngineMetrics::dispatch` once per step so
+    /// the metrics mutex stays off the per-layer hot path.
+    step_tokens: Vec<u64>,
 }
 
 impl Engine {
@@ -108,13 +146,21 @@ impl Engine {
             .iter()
             .map(|m| BiasAdapter::new(m.spec.routed(), cfg.balance.unwrap_or_default()))
             .collect();
+        let max_routed = moe_layers.iter().map(|m| m.spec.routed()).max().unwrap_or(0);
         Ok(Engine {
             rt,
             cfg,
             model,
             dense_bufs,
             moe_bufs,
-            moe_state: std::sync::Mutex::new(MoeState { layers: moe_layers, adapters }),
+            moe_state: std::sync::Mutex::new(MoeState {
+                layers: moe_layers,
+                adapters,
+                routing: GroupedRouting::new(max_routed),
+                arena: DispatchArena::new(),
+                counts: vec![0; max_routed],
+                step_tokens: vec![0; max_routed],
+            }),
             metrics: std::sync::Mutex::new(EngineMetrics::default()),
         })
     }
@@ -160,17 +206,20 @@ impl Engine {
             batcher.push(r);
         }
         let mut results = Vec::new();
+        let mut wave = Vec::new();
         while !batcher.is_empty() {
-            if let Some(wave) = batcher.take_wave() {
-                results.extend(self.generate_wave(wave)?);
+            if batcher.take_wave_into(&mut wave) {
+                results.extend(self.generate_wave(&mut wave)?);
             }
         }
         results.sort_by_key(|r| r.id);
         Ok(results)
     }
 
-    /// Execute one wave to completion.
-    pub fn generate_wave(&self, wave: Vec<(Request, Instant)>) -> Result<Vec<RequestResult>> {
+    /// Execute one wave to completion. The wave buffer is drained (so
+    /// callers can reuse its allocation for the next wave); on error it
+    /// is left intact.
+    pub fn generate_wave(&self, wave: &mut Vec<(Request, Instant)>) -> Result<Vec<RequestResult>> {
         let t_start = Instant::now();
         let n_real = wave.len();
         assert!(n_real > 0);
@@ -328,7 +377,7 @@ impl Engine {
             decode_steps: steps,
         });
         let mut results = Vec::new();
-        for (i, (r, enqueued)) in wave.into_iter().enumerate() {
+        for (i, (r, enqueued)) in wave.drain(..).enumerate() {
             let latency = enqueued.elapsed();
             m.record_request(ttft, latency);
             results.push(RequestResult {
@@ -381,6 +430,8 @@ impl Engine {
         let mut x = self.rt.download(&out[0], &[bucket, d])?;
 
         let mut state = self.moe_state.lock().unwrap();
+        state.step_tokens.iter_mut().for_each(|v| *v = 0);
+        let mut layer_dispatches = 0u64;
         let n_layers = state.layers.len();
         for l in 0..n_layers {
             let p = format!("layers.{l}");
@@ -471,38 +522,63 @@ impl Engine {
                 None => route_tokens(&state.layers[l], &xn),
             };
 
-            // grouped experts (device), with overflow rounds
+            // routed experts: grouped host dispatch (default) or the
+            // capacity-factor device artifact
             let n_r = state.layers[l].spec.routed();
             let m = state.layers[l].experts[0].hidden_dim();
-            let cap = self.expert_capacity(bucket, n_r)?;
-            let disp = ExpertDispatcher::new(n_r, cap, d);
             let mut ffn_out = shared_out;
-            let mut assignments: Vec<(usize, usize, f32)> = decisions
-                .iter()
-                .enumerate()
-                .flat_map(|(tk, dec)| {
-                    dec.experts.iter().zip(&dec.gates).map(move |(&e, &g)| (tk, e, g))
-                })
-                .collect();
-            let mut counts = vec![0usize; n_r];
-            while !assignments.is_empty() {
-                let dd = disp.build_from_assignments(&xn, &assignments);
-                let xs_buf = self.rt.upload(&dd.xs)?;
-                let out = self.rt.execute(
-                    &format!("experts_{name}_e{n_r}_mm{m}_c{cap}_b{bucket}"),
-                    &[
-                        &xs_buf,
-                        mb.get(&format!("{mp}.experts.w_gate")).unwrap(),
-                        mb.get(&format!("{mp}.experts.w_up")).unwrap(),
-                        mb.get(&format!("{mp}.experts.w_down")).unwrap(),
-                    ],
-                )?;
-                let ys = self.rt.download(&out[0], &[n_r, cap, d])?;
-                disp.combine(&dd, &ys, &mut ffn_out);
-                for (e, sl) in dd.slots.iter().enumerate() {
-                    counts[e] += sl.len();
+            let st = &mut *state;
+            if st.counts.len() < n_r {
+                st.counts.resize(n_r, 0);
+            }
+            st.counts[..n_r].fill(0);
+            match self.cfg.expert_exec {
+                ExpertExec::HostGrouped => {
+                    // one GEMM per expert per layer over arena-backed
+                    // expert blocks; no padding, no overflow rounds
+                    st.routing.rebuild(n_r, &decisions);
+                    let disp = GroupedDispatcher::new(d, m);
+                    disp.forward(
+                        &xn,
+                        &st.routing,
+                        &st.layers[l].experts,
+                        &mut st.arena,
+                        &mut ffn_out,
+                    );
+                    for (e, c) in st.counts[..n_r].iter_mut().enumerate() {
+                        *c = st.routing.count(e);
+                    }
                 }
-                assignments = dd.overflow;
+                ExpertExec::DeviceCapacity => {
+                    let cap = self.expert_capacity(bucket, n_r)?;
+                    let disp = ExpertDispatcher::new(n_r, cap, d);
+                    let mut assignments: Vec<(usize, usize, f32)> = decisions
+                        .iter()
+                        .enumerate()
+                        .flat_map(|(tk, dec)| {
+                            dec.experts.iter().zip(&dec.gates).map(move |(&e, &g)| (tk, e, g))
+                        })
+                        .collect();
+                    while !assignments.is_empty() {
+                        let dd = disp.build_from_assignments(&xn, &assignments);
+                        let xs_buf = self.rt.upload(&dd.xs)?;
+                        let out = self.rt.execute(
+                            &format!("experts_{name}_e{n_r}_mm{m}_c{cap}_b{bucket}"),
+                            &[
+                                &xs_buf,
+                                mb.get(&format!("{mp}.experts.w_gate")).unwrap(),
+                                mb.get(&format!("{mp}.experts.w_up")).unwrap(),
+                                mb.get(&format!("{mp}.experts.w_down")).unwrap(),
+                            ],
+                        )?;
+                        let ys = self.rt.download(&out[0], &[n_r, cap, d])?;
+                        disp.combine(&dd, &ys, &mut ffn_out);
+                        for (e, sl) in dd.slots.iter().enumerate() {
+                            st.counts[e] += sl.len();
+                        }
+                        assignments = dd.overflow;
+                    }
+                }
             }
             // residual
             tensor::add_inplace(&mut x, &ffn_out);
@@ -510,9 +586,23 @@ impl Engine {
             // online bias adaptation (§4.3) on the host-side copy —
             // only when the engine was configured with a balance policy
             if self.cfg.balance.is_some() {
-                let st = &mut *state;
-                st.adapters[l].step(&mut st.layers[l], &counts);
+                st.adapters[l].step(&mut st.layers[l], &st.counts[..n_r]);
             }
+
+            // occupancy bookkeeping stays inside the already-held MoE
+            // state lock; it flushes to the metrics mutex once per step
+            for (acc, &c) in st.step_tokens.iter_mut().zip(&st.counts[..n_r]) {
+                *acc += c as u64;
+            }
+            layer_dispatches += 1;
+        }
+        // flush dispatch gauges once per step — the arena's post-warmup
+        // stability is the zero-allocation signal the bench asserts on
+        {
+            let st = &*state;
+            let mut mtr = self.metrics.lock().unwrap();
+            mtr.dispatch.record_step(&st.step_tokens, layer_dispatches);
+            mtr.dispatch.record_arena(st.arena.high_water_bytes(), st.arena.grow_events());
         }
         drop(state);
 

@@ -1,8 +1,58 @@
-//! Serving metrics: TTFT / per-token latency / throughput, with
-//! percentile summaries for the bench harness (Tables 7-9).
+//! Serving metrics: TTFT / per-token latency / throughput with
+//! percentile summaries for the bench harness (Tables 7-9), plus the
+//! grouped-dispatch gauges ([`DispatchMetrics`]): per-expert occupancy
+//! and the scratch-arena high-water mark whose post-warmup stability is
+//! the observable "zero per-wave buffer allocations" signal.
 
 use crate::util::stats::percentile;
 use std::time::Duration;
+
+/// Gauges for the orchestrated engine's grouped expert dispatch.
+#[derive(Clone, Debug, Default)]
+pub struct DispatchMetrics {
+    /// Cumulative tokens dispatched to each routed-expert id, summed
+    /// over layers and decode steps (feeds the occupancy view).
+    pub expert_tokens: Vec<u64>,
+    /// Number of layer-dispatches recorded.
+    pub dispatches: u64,
+    /// Scratch-arena high-water mark in bytes (monotone).
+    pub arena_high_water_bytes: usize,
+    /// Arena growth events so far. Constant after warmup ⇔ the decode
+    /// steady state performs no per-wave buffer allocations in dispatch.
+    pub arena_grow_events: u64,
+}
+
+impl DispatchMetrics {
+    /// Record a whole decode step at once: per-expert tokens already
+    /// summed over `layers` layer-dispatches. The engine accumulates in
+    /// its (already-locked) MoE state and flushes here once per step,
+    /// keeping this mutex off the per-layer hot path.
+    pub fn record_step(&mut self, counts: &[u64], layers: u64) {
+        if self.expert_tokens.len() < counts.len() {
+            self.expert_tokens.resize(counts.len(), 0);
+        }
+        for (acc, &c) in self.expert_tokens.iter_mut().zip(counts) {
+            *acc += c;
+        }
+        self.dispatches += layers;
+    }
+
+    /// Update the arena gauges (monotone high-water mark + grow count).
+    pub fn record_arena(&mut self, high_water_bytes: usize, grow_events: u64) {
+        self.arena_high_water_bytes = self.arena_high_water_bytes.max(high_water_bytes);
+        self.arena_grow_events = self.arena_grow_events.max(grow_events);
+    }
+
+    /// Per-expert share of all dispatched tokens (sums to 1 when any
+    /// token was dispatched).
+    pub fn occupancy(&self) -> Vec<f64> {
+        let total: u64 = self.expert_tokens.iter().sum();
+        self.expert_tokens
+            .iter()
+            .map(|&c| if total == 0 { 0.0 } else { c as f64 / total as f64 })
+            .collect()
+    }
+}
 
 /// Metrics for one wave.
 #[derive(Clone, Debug, Default)]
@@ -39,6 +89,9 @@ pub struct EngineMetrics {
     pub waves: Vec<WaveMetrics>,
     pub ttfts_ms: Vec<f32>,
     pub latencies_ms: Vec<f32>,
+    /// Grouped-dispatch gauges (orchestrated mode only; stays at its
+    /// default for dense/monolithic engines).
+    pub dispatch: DispatchMetrics,
 }
 
 impl EngineMetrics {
@@ -81,14 +134,22 @@ impl EngineMetrics {
     }
 
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "{} waves, {} tokens, decode {:.1} tok/s, TTFT p50 {:.1}ms p99 {:.1}ms",
             self.waves.len(),
             self.total_generated(),
             self.decode_tps(),
             self.ttft_p50_ms(),
             self.ttft_p99_ms(),
-        )
+        );
+        if self.dispatch.dispatches > 0 {
+            s.push_str(&format!(
+                ", dispatch arena {}KiB ({} growths)",
+                self.dispatch.arena_high_water_bytes / 1024,
+                self.dispatch.arena_grow_events,
+            ));
+        }
+        s
     }
 }
 
@@ -134,5 +195,29 @@ mod tests {
         let m = EngineMetrics::default();
         assert_eq!(m.decode_tps(), 0.0);
         assert_eq!(m.ttft_p50_ms(), 0.0);
+        assert!(m.dispatch.occupancy().is_empty());
+        assert!(!m.summary().contains("dispatch arena"));
+    }
+
+    #[test]
+    fn dispatch_gauges_accumulate() {
+        let mut d = DispatchMetrics::default();
+        d.record_step(&[3, 0, 1], 1);
+        d.record_step(&[1, 2, 1], 1);
+        assert_eq!(d.expert_tokens, vec![4, 2, 2]);
+        assert_eq!(d.dispatches, 2);
+        let occ = d.occupancy();
+        assert!((occ.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((occ[0] - 0.5).abs() < 1e-12);
+        // arena gauges are monotone
+        d.record_arena(4096, 1);
+        d.record_arena(2048, 1);
+        assert_eq!(d.arena_high_water_bytes, 4096);
+        assert_eq!(d.arena_grow_events, 1);
+        // counts may widen if a later layer has more experts, and a
+        // step may flush several layers at once
+        d.record_step(&[0, 0, 0, 5], 6);
+        assert_eq!(d.expert_tokens, vec![4, 2, 2, 5]);
+        assert_eq!(d.dispatches, 8);
     }
 }

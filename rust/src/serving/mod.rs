@@ -5,26 +5,35 @@
 //! * **MoeMonolithic** — one `decode_moe_*` call per step with in-graph
 //!   masked routing (all experts computed; the 1-call eval path).
 //! * **MoeOrchestrated** — the paper's serving contribution realized:
-//!   attention via artifacts, routing + capacity-factor expert dispatch
-//!   coordinated in rust, experts executed by the grouped Pallas
-//!   artifact — FLOPs actually skipped for deactivated experts, and
-//!   load-balancing bias adapted online (§4.3).
+//!   attention via artifacts, routing coordinated in rust, and routed
+//!   experts executed by **grouped dispatch** — tokens gathered into
+//!   contiguous per-expert blocks, one SwiGLU GEMM per expert per
+//!   layer, results scattered back, all through a reusable per-engine
+//!   scratch arena so the steady-state decode loop performs no per-wave
+//!   buffer allocations. FLOPs are actually skipped for deactivated
+//!   experts, and the load-balancing bias adapts online (§4.3). The
+//!   legacy capacity-factor device schedule remains available via
+//!   [`ExpertExec::DeviceCapacity`].
 //!
 //! Scheduling is wave-based continuous batching: requests queue, the
 //! batcher forms the largest bucket-sized wave available, the wave
 //! prefills together and decodes until every member finishes; finished
 //! slots are masked out. Python is never on this path.
+//!
+//! The grouped-dispatch data layout and determinism guarantees are
+//! documented in [`dispatch`]'s module docs and, end to end, in
+//! `docs/ARCHITECTURE.md` at the repo root.
 
 mod request;
 mod batcher;
 mod engine;
-mod dispatch;
+pub mod dispatch;
 mod metrics;
 mod server;
 
 pub use batcher::{Batcher, BatcherConfig};
-pub use dispatch::ExpertDispatcher;
-pub use engine::{Engine, EngineConfig, ExecMode};
-pub use metrics::{EngineMetrics, WaveMetrics};
+pub use dispatch::{per_token_reference, DispatchArena, ExpertDispatcher, GroupedDispatcher};
+pub use engine::{Engine, EngineConfig, ExecMode, ExpertExec};
+pub use metrics::{DispatchMetrics, EngineMetrics, WaveMetrics};
 pub use request::{GenParams, Request, RequestResult};
 pub use server::{EngineServer, Ticket};

@@ -132,6 +132,8 @@ fn serve_loop(engine: Engine, rx: Receiver<Msg>) {
     let mut batcher = Batcher::new(engine.cfg.batcher.clone());
     let mut waiters: HashMap<u64, Sender<Result<RequestResult, String>>> = HashMap::new();
     let mut draining = false;
+    // reused across waves (take_wave_into + generate_wave drain it)
+    let mut wave: Vec<(Request, std::time::Instant)> = Vec::new();
     loop {
         // ingest — block briefly when idle, drain eagerly otherwise
         let timeout =
@@ -156,9 +158,9 @@ fn serve_loop(engine: Engine, rx: Receiver<Msg>) {
             Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => draining = true,
         }
 
-        if let Some(wave) = batcher.take_wave() {
+        if batcher.take_wave_into(&mut wave) {
             let ids: Vec<u64> = wave.iter().map(|(r, _)| r.id).collect();
-            match engine.generate_wave(wave) {
+            match engine.generate_wave(&mut wave) {
                 Ok(results) => {
                     for res in results {
                         if let Some(tx) = waiters.remove(&res.id) {

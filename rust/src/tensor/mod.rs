@@ -1,12 +1,15 @@
-//! Dense f32 tensor substrate for the conversion/analysis path.
+//! Dense f32 tensor substrate for the conversion/analysis path **and**
+//! the serving engine's grouped expert dispatch.
 //!
-//! The *serving* hot path runs through XLA-compiled artifacts
-//! ([`crate::runtime`]); this module exists so the converter, baselines,
-//! gate fine-tuner and evaluation utilities can do linear algebra on raw
-//! weights without a Python dependency. It implements exactly what those
-//! consumers need: a contiguous row-major `Tensor`, a blocked+threaded
-//! matmul, SwiGLU pieces, softmax/top-k, and slicing/gather by neuron
-//! index.
+//! Attention/logits on the serving hot path run through XLA-compiled
+//! artifacts ([`crate::runtime`]); this module provides the host-side
+//! linear algebra: a contiguous row-major `Tensor`, a blocked+threaded
+//! matmul, SwiGLU pieces, softmax/top-k, slicing/gather by neuron
+//! index — and the allocation-free dispatch kernels ([`matmul_rows`],
+//! [`swiglu_rows_into`], [`gather_rows`], [`scatter_add_scaled`]) whose
+//! shared serial band GEMM fixes the floating-point accumulation order,
+//! making grouped expert execution bit-identical to the per-token
+//! reference (see `serving::dispatch` for the layout invariants).
 
 mod ops;
 

@@ -1,9 +1,19 @@
-//! Tensor operations: blocked/threaded matmul, SwiGLU, softmax, top-k.
+//! Tensor operations: blocked/threaded matmul, SwiGLU, softmax, top-k,
+//! and the allocation-free grouped-dispatch kernels (gather / grouped
+//! SwiGLU / scatter-add) the serving engine's expert dispatcher runs on.
 //!
 //! The matmul uses a cache-blocked i-k-j loop order with 8-wide manual
 //! unrolling over j and row-parallelism via `util::pool` — enough to keep
 //! the conversion path (seconds, not hours) and the rust-side fine-tuner
 //! fast. See EXPERIMENTS.md §Perf for measured numbers.
+//!
+//! **Determinism invariant.** The serial row-band kernel [`matmul_rows`]
+//! is the single implementation behind [`matmul`], [`matmul_into`] and
+//! [`swiglu_rows_into`]: for a given output row, the floating-point
+//! accumulation order is fixed (k-blocked, then k-ascending) regardless
+//! of how rows are banded across threads or grouped across experts.
+//! This is what lets the grouped expert dispatcher promise bit-identical
+//! results to the per-token reference path.
 
 use super::Tensor;
 use crate::util::pool;
@@ -20,7 +30,7 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     out
 }
 
-/// `out += / = a @ b` writing into a preallocated output (hot-loop reuse).
+/// `out = a @ b` writing into a preallocated output (hot-loop reuse).
 pub fn matmul_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
     let (m, k) = (a.shape[0], a.shape[1]);
     let n = b.shape[1];
@@ -36,40 +46,55 @@ pub fn matmul_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
     pool::par_chunks_mut(&mut out.data, band * n, |band_idx, out_chunk| {
         let row0 = band_idx * band;
         let rows = out_chunk.len() / n;
-        // blocked over k for cache reuse
-        const KB: usize = 64;
-        for kb in (0..k).step_by(KB) {
-            let k_end = (kb + KB).min(k);
-            for r in 0..rows {
-                let i = row0 + r;
-                let a_row = &a_data[i * k..(i + 1) * k];
-                let o_row = &mut out_chunk[r * n..(r + 1) * n];
-                for kk in kb..k_end {
-                    let av = a_row[kk];
-                    if av == 0.0 {
-                        continue; // sparse activations: skip zero rows cheaply
-                    }
-                    let b_row = &b_data[kk * n..(kk + 1) * n];
-                    // 8-wide unroll
-                    let chunks = n / 8;
-                    for c in 0..chunks {
-                        let j = c * 8;
-                        o_row[j] += av * b_row[j];
-                        o_row[j + 1] += av * b_row[j + 1];
-                        o_row[j + 2] += av * b_row[j + 2];
-                        o_row[j + 3] += av * b_row[j + 3];
-                        o_row[j + 4] += av * b_row[j + 4];
-                        o_row[j + 5] += av * b_row[j + 5];
-                        o_row[j + 6] += av * b_row[j + 6];
-                        o_row[j + 7] += av * b_row[j + 7];
-                    }
-                    for j in chunks * 8..n {
-                        o_row[j] += av * b_row[j];
-                    }
+        matmul_rows(&a_data[row0 * k..(row0 + rows) * k], b_data, out_chunk, k, n);
+    });
+}
+
+/// Serial cache-blocked matmul over a band of rows:
+/// `out[r,:] = a_rows[r,:] @ b` with `a_rows: [rows, k]` and `b: [k, n]`
+/// flat row-major. This is the kernel `matmul_into` runs per thread
+/// band, exposed so the grouped expert dispatcher can drive its own
+/// banding (by tokens-per-expert) while producing bit-identical rows.
+pub fn matmul_rows(a_rows: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize) {
+    assert!(k > 0 && n > 0, "matmul_rows: degenerate dims k={k} n={n}");
+    debug_assert_eq!(a_rows.len() % k, 0);
+    debug_assert_eq!(out.len() % n, 0);
+    let rows = a_rows.len() / k;
+    debug_assert_eq!(out.len() / n, rows, "matmul_rows: rows mismatch");
+    debug_assert_eq!(b.len(), k * n);
+    out.fill(0.0);
+    // blocked over k for cache reuse
+    const KB: usize = 64;
+    for kb in (0..k).step_by(KB) {
+        let k_end = (kb + KB).min(k);
+        for r in 0..rows {
+            let a_row = &a_rows[r * k..(r + 1) * k];
+            let o_row = &mut out[r * n..(r + 1) * n];
+            for kk in kb..k_end {
+                let av = a_row[kk];
+                if av == 0.0 {
+                    continue; // sparse activations: skip zero rows cheaply
+                }
+                let b_row = &b[kk * n..(kk + 1) * n];
+                // 8-wide unroll
+                let chunks = n / 8;
+                for c in 0..chunks {
+                    let j = c * 8;
+                    o_row[j] += av * b_row[j];
+                    o_row[j + 1] += av * b_row[j + 1];
+                    o_row[j + 2] += av * b_row[j + 2];
+                    o_row[j + 3] += av * b_row[j + 3];
+                    o_row[j + 4] += av * b_row[j + 4];
+                    o_row[j + 5] += av * b_row[j + 5];
+                    o_row[j + 6] += av * b_row[j + 6];
+                    o_row[j + 7] += av * b_row[j + 7];
+                }
+                for j in chunks * 8..n {
+                    o_row[j] += av * b_row[j];
                 }
             }
         }
-    });
+    }
 }
 
 /// Naive reference matmul for testing the blocked one.
@@ -142,6 +167,74 @@ pub fn swiglu_hidden(x: &Tensor, w_gate: &Tensor, w_up: &Tensor) -> Tensor {
 pub fn swiglu_ffn(x: &Tensor, w_gate: &Tensor, w_up: &Tensor, w_down: &Tensor) -> Tensor {
     let h = swiglu_hidden(x, w_gate, w_up);
     matmul(&h, w_down)
+}
+
+/// Allocation-free grouped SwiGLU over a flat block of rows:
+/// `out[r,:] = (Swish(x[r,:] @ Wg) ⊙ (x[r,:] @ Wu)) @ Wd`.
+///
+/// `x_rows: [rows, d]` flat; `hidden`/`up` are caller-owned scratch of
+/// at least `rows * m` (`m` = `w_gate.shape[1]`); `out: [rows, d]` flat.
+/// All three GEMMs run through [`matmul_rows`], so each output row is
+/// bit-identical to `swiglu_ffn` on the same row — the property the
+/// grouped expert dispatcher's parity tests rely on. Serial by design:
+/// the caller (dispatcher or pool) owns the parallelism.
+pub fn swiglu_rows_into(
+    x_rows: &[f32],
+    w_gate: &Tensor,
+    w_up: &Tensor,
+    w_down: &Tensor,
+    hidden: &mut [f32],
+    up: &mut [f32],
+    out: &mut [f32],
+) {
+    let d = w_gate.shape[0];
+    let m = w_gate.shape[1];
+    debug_assert_eq!(w_up.shape, vec![d, m]);
+    debug_assert_eq!(w_down.shape, vec![m, d]);
+    debug_assert_eq!(x_rows.len() % d, 0);
+    let rows = x_rows.len() / d;
+    let (hidden, up) = (&mut hidden[..rows * m], &mut up[..rows * m]);
+    let out = &mut out[..rows * d];
+    matmul_rows(x_rows, &w_gate.data, hidden, d, m);
+    matmul_rows(x_rows, &w_up.data, up, d, m);
+    for (h, u) in hidden.iter_mut().zip(up.iter()) {
+        *h = silu(*h) * *u;
+    }
+    matmul_rows(hidden, &w_down.data, out, m, d);
+}
+
+/// Gather rows of a 2-D tensor into a flat destination block:
+/// `dst[i,:] = src[idx[i],:]`. `dst` must hold `idx.len() * d` floats.
+/// This is the dispatch-side gather that builds contiguous per-expert
+/// activation blocks out of a wave's token states.
+pub fn gather_rows(src: &Tensor, idx: &[usize], dst: &mut [f32]) {
+    assert_eq!(src.rank(), 2);
+    let d = src.shape[1];
+    let dst = &mut dst[..idx.len() * d];
+    for (i, &t) in idx.iter().enumerate() {
+        dst[i * d..(i + 1) * d].copy_from_slice(src.row(t));
+    }
+}
+
+/// Scatter-add gate-scaled rows back into a 2-D tensor:
+/// `out[idx[i],:] += scale[i] * src[i,:]` for each flat source row, in
+/// row order (the combine of gather→GEMM→scatter). Iteration order is
+/// part of the contract: rows arrive expert-major from the dispatcher,
+/// so a token's expert contributions accumulate in ascending-expert
+/// order — the same order `moe_ffn_forward` uses, keeping the two paths
+/// bit-identical.
+pub fn scatter_add_scaled(src: &[f32], d: usize, idx: &[usize], scale: &[f32], out: &mut Tensor) {
+    assert_eq!(out.rank(), 2);
+    assert_eq!(out.shape[1], d);
+    assert_eq!(idx.len(), scale.len());
+    let src = &src[..idx.len() * d];
+    for (i, (&t, &g)) in idx.iter().zip(scale.iter()).enumerate() {
+        let row = &src[i * d..(i + 1) * d];
+        let dst = out.row_mut(t);
+        for (o, v) in dst.iter_mut().zip(row) {
+            *o += g * v;
+        }
+    }
 }
 
 /// Row-wise softmax in place over the last dim of a 2-D tensor.
@@ -257,6 +350,78 @@ mod tests {
             crate::prop_assert!(d < 1e-3, "diff {d} at ({m},{k},{n})");
             Ok(())
         });
+    }
+
+    #[test]
+    fn matmul_rows_equals_matmul_any_banding() {
+        // the serial band kernel must reproduce matmul_into exactly for
+        // every row-band decomposition (bit-for-bit, not approximately)
+        let mut rng = Rng::new(51);
+        let (m, k, n) = (13, 37, 21);
+        let a = Tensor::randn(&mut rng, &[m, k], 1.0);
+        let b = Tensor::randn(&mut rng, &[k, n], 1.0);
+        let whole = matmul(&a, &b);
+        for band in [1usize, 2, 5, 13] {
+            let mut out = vec![0.0f32; m * n];
+            let mut r0 = 0;
+            while r0 < m {
+                let rows = band.min(m - r0);
+                matmul_rows(
+                    &a.data[r0 * k..(r0 + rows) * k],
+                    &b.data,
+                    &mut out[r0 * n..(r0 + rows) * n],
+                    k,
+                    n,
+                );
+                r0 += rows;
+            }
+            assert_eq!(out, whole.data, "band={band}");
+        }
+    }
+
+    #[test]
+    fn swiglu_rows_into_matches_swiglu_ffn_exactly() {
+        let mut rng = Rng::new(52);
+        let (rows, d, m) = (7, 12, 20);
+        let x = Tensor::randn(&mut rng, &[rows, d], 1.0);
+        let wg = Tensor::randn(&mut rng, &[d, m], 0.5);
+        let wu = Tensor::randn(&mut rng, &[d, m], 0.5);
+        let wd = Tensor::randn(&mut rng, &[m, d], 0.5);
+        let want = swiglu_ffn(&x, &wg, &wu, &wd);
+        let mut hidden = vec![0.0f32; rows * m];
+        let mut up = vec![0.0f32; rows * m];
+        let mut out = vec![0.0f32; rows * d];
+        swiglu_rows_into(&x.data, &wg, &wu, &wd, &mut hidden, &mut up, &mut out);
+        assert_eq!(out, want.data);
+        // oversized scratch is fine (the dispatcher reuses one arena)
+        let mut hidden2 = vec![9.0f32; rows * m + 64];
+        let mut up2 = vec![9.0f32; rows * m + 64];
+        let mut out2 = vec![9.0f32; rows * d + 64];
+        swiglu_rows_into(&x.data, &wg, &wu, &wd, &mut hidden2, &mut up2, &mut out2);
+        assert_eq!(&out2[..rows * d], &want.data[..]);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let mut rng = Rng::new(53);
+        let src = Tensor::randn(&mut rng, &[5, 3], 1.0);
+        let idx = [4usize, 0, 4, 2];
+        let mut block = vec![0.0f32; idx.len() * 3];
+        gather_rows(&src, &idx, &mut block);
+        assert_eq!(&block[0..3], src.row(4));
+        assert_eq!(&block[3..6], src.row(0));
+        // scatter the gathered rows back with gates; token 4 appears
+        // twice so it accumulates both contributions
+        let mut out = Tensor::zeros(&[5, 3]);
+        let gates = [1.0f32, 2.0, 0.5, 1.0];
+        scatter_add_scaled(&block, 3, &idx, &gates, &mut out);
+        for j in 0..3 {
+            assert!((out.at2(4, j) - 1.5 * src.at2(4, j)).abs() < 1e-6);
+            assert!((out.at2(0, j) - 2.0 * src.at2(0, j)).abs() < 1e-6);
+            assert!((out.at2(2, j) - src.at2(2, j)).abs() < 1e-6);
+            assert_eq!(out.at2(1, j), 0.0);
+            assert_eq!(out.at2(3, j), 0.0);
+        }
     }
 
     #[test]

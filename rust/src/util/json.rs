@@ -227,13 +227,22 @@ fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
 }
 
-/// Error with byte offset for diagnostics.
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {pos}: {msg}")]
+/// Error with byte offset for diagnostics. (Display/Error are
+/// hand-implemented — thiserror is unavailable offline, like the rest
+/// of the usual crates; see the module docs.)
+#[derive(Debug)]
 pub struct JsonError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 struct Parser<'a> {
     bytes: &'a [u8],

@@ -1,0 +1,199 @@
+//! Offline stand-in for the `anyhow` crate (vendored subset).
+//!
+//! The build environment has no network access, so the workspace carries
+//! this minimal re-implementation of exactly the surface the codebase
+//! uses: [`Error`], [`Result`], the [`Context`] extension trait for
+//! `Result` and `Option`, and the `anyhow!` / `bail!` / `ensure!`
+//! macros. Semantics mirror the real crate where it matters:
+//!
+//! * `{}` prints the outermost message, `{:#}` prints the whole context
+//!   chain outermost-first joined by `": "`, `{:?}` prints the message
+//!   plus a `Caused by:` list.
+//! * `?` converts any `std::error::Error + Send + Sync + 'static` into
+//!   [`Error`] (the message is captured; the source is not retained).
+
+use std::fmt;
+
+/// A string-chain error value. `chain[0]` is the root cause; each
+/// `.context(..)` call pushes a new outermost message.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from any displayable message (mirrors
+    /// `anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Error {
+        self.chain.push(c.to_string());
+        self
+    }
+
+    /// The outermost (most recently attached) message.
+    fn outer(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+
+    /// The innermost (root cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.first().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            for (i, m) in self.chain.iter().rev().enumerate() {
+                if i > 0 {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{m}")?;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.outer())
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.outer())?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for m in self.chain.iter().rev().skip(1) {
+                write!(f, "\n    {m}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `Error` deliberately does NOT implement `std::error::Error` (same as
+// the real anyhow), which is what makes this blanket conversion coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>` — a `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attaching extension for `Result` and `Option` (subset of
+/// `anyhow::Context`).
+pub trait Context<T> {
+    /// Attach a context message, converting the error to [`Error`].
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    /// Attach a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(c)
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(f())
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/path/afba8d")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.root_cause().is_empty());
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let e = io_fail().context("reading config").unwrap_err();
+        let plain = format!("{e}");
+        let alt = format!("{e:#}");
+        assert_eq!(plain, "reading config");
+        assert!(alt.starts_with("reading config: "));
+        assert!(format!("{e:?}").contains("Caused by:"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(format!("{e}"), "missing value");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Err(anyhow!("fell through with {}", x))
+        }
+        assert_eq!(format!("{}", f(12).unwrap_err()), "x too big: 12");
+        assert_eq!(format!("{}", f(5).unwrap_err()), "five is right out");
+        assert_eq!(format!("{}", f(1).unwrap_err()), "fell through with 1");
+    }
+}

@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# Local pre-PR gate (documented in docs/ARCHITECTURE.md):
+#   build → tests → docs → clippy, all warnings fatal.
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "error: cargo not found on PATH — install a Rust toolchain (>= 1.70)" >&2
+    echo "       (rustup.rs, or your distro's rustc+cargo packages)" >&2
+    exit 1
+fi
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+echo "==> cargo doc --no-deps"
+RUSTDOCFLAGS="${RUSTDOCFLAGS:--D warnings}" cargo doc --no-deps
+
+echo "==> cargo clippy --all-targets -- -D warnings"
+cargo clippy --all-targets -- -D warnings
+
+echo "check.sh: all gates passed"
