@@ -26,10 +26,28 @@ pub fn gmoefication_convert(
 
 /// Calibration-mean output of each routed expert.
 pub fn expert_mean_outputs(moe: &MoeLayerWeights, calib_x: &Tensor) -> Vec<Vec<f32>> {
+    mean_outputs(moe.experts.iter(), calib_x)
+}
+
+/// Partition form of [`expert_mean_outputs`]: mean outputs of the
+/// expert *slices* of `ffn`, before a layer is assembled — what the
+/// pipeline's router stage uses to attach compensation.
+pub fn partition_mean_outputs(
+    ffn: &FfnWeights,
+    partition: &[Vec<usize>],
+    calib_x: &Tensor,
+) -> Vec<Vec<f32>> {
+    let slices: Vec<FfnWeights> = partition.iter().map(|idx| ffn.slice_neurons(idx)).collect();
+    mean_outputs(slices.iter(), calib_x)
+}
+
+fn mean_outputs<'a>(
+    experts: impl Iterator<Item = &'a FfnWeights>,
+    calib_x: &Tensor,
+) -> Vec<Vec<f32>> {
     let q = calib_x.shape[0];
     let d = calib_x.shape[1];
-    moe.experts
-        .iter()
+    experts
         .map(|e| {
             let y = tensor::swiglu_ffn(calib_x, &e.w_gate, &e.w_up, &e.w_down);
             let mut mean = vec![0.0f32; d];

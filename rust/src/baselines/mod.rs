@@ -29,85 +29,50 @@ pub mod pruning;
 pub use router_train::train_linear_router;
 pub use wina::{wina_ffn_forward, wina_keep_fraction};
 
-use crate::model::{FfnWeights, MoeLayerWeights, Router, RouterWeights};
+use crate::converter::{self, LayerPartition, RouterBuild};
+use crate::model::{FfnWeights, MoeLayerWeights, Router};
 use crate::profiling::ActivationProfile;
 
 /// Swap any baseline's router for CMoE's analytical representative-
 /// neuron router (the Table 5 "+ ours" rows). Representatives are
-/// recomputed from the baseline's own expert partition.
+/// recomputed from the baseline's own expert partition via the shared
+/// Eq. 25 helper [`converter::representative_neurons`] — the same code
+/// the pipeline's analytical `RouterBuilder` runs, so the swap and the
+/// registry's `<base>+cmoe-router` hybrids cannot diverge.
 pub fn with_analytical_router(
     moe: &MoeLayerWeights,
     ffn: &FfnWeights,
     profile: &ActivationProfile,
 ) -> MoeLayerWeights {
     let mut out = moe.clone();
-    let mut representatives = Vec::with_capacity(moe.experts.len());
-    for mem in &moe.expert_neurons {
-        // centroid of the expert's activation columns
-        let pts = profile.columns_tensor(mem);
-        let q = pts.shape[1];
-        let mut centroid = vec![0.0f32; q];
-        for r in 0..pts.shape[0] {
-            for (c, v) in centroid.iter_mut().zip(pts.row(r)) {
-                *c += v;
-            }
-        }
-        for c in centroid.iter_mut() {
-            *c /= pts.shape[0] as f32;
-        }
-        let mut best = 0usize;
-        let mut best_d = f64::INFINITY;
-        for r in 0..pts.shape[0] {
-            let d: f64 = pts
-                .row(r)
-                .iter()
-                .zip(&centroid)
-                .map(|(a, b)| ((a - b) as f64) * ((a - b) as f64))
-                .sum();
-            if d < best_d {
-                best_d = d;
-                best = r;
-            }
-        }
-        representatives.push(mem[best]);
-    }
-    out.router = Router::Analytical(RouterWeights {
-        w_gate_r: ffn.w_gate.select_cols(&representatives),
-        w_up_r: ffn.w_up.select_cols(&representatives),
-    });
+    let representatives = converter::representative_neurons(profile, &moe.expert_neurons);
+    out.router = converter::analytical_router(ffn, &representatives);
     out.representatives = representatives;
     out
 }
 
 /// Shared helper: build a MoeLayerWeights from an explicit neuron
 /// partition (no shared experts — these baselines don't have them, so
-/// the "shared" slice is empty and all experts are routed).
+/// the "shared" slice is empty and all experts are routed). Assembly
+/// itself is [`converter::assemble_moe_layer`], shared with CMoE.
 pub(crate) fn moe_from_partition(
     ffn: &FfnWeights,
     partition: Vec<Vec<usize>>,
     active: usize,
     router: Router,
 ) -> MoeLayerWeights {
-    let n_r = partition.len();
-    let d = ffn.w_gate.shape[0];
-    let experts: Vec<FfnWeights> = partition.iter().map(|idx| ffn.slice_neurons(idx)).collect();
-    MoeLayerWeights {
-        spec: crate::model::MoeSpec::new(0, active, n_r)
+    let part = LayerPartition {
+        spec: crate::model::MoeSpec::new(0, active, partition.len())
             .expect("partition always yields a valid spec"),
-        shared: FfnWeights {
-            w_gate: crate::tensor::Tensor::zeros(&[d, 0]),
-            w_up: crate::tensor::Tensor::zeros(&[d, 0]),
-            w_down: crate::tensor::Tensor::zeros(&[0, d]),
-        },
-        experts,
-        router,
-        gate_scale: vec![0.0; n_r],
-        gate_bias: vec![0.0; n_r],
         shared_neurons: Vec::new(),
         expert_neurons: partition,
-        representatives: Vec::new(),
-        compensation: None,
-    }
+        representatives: None,
+    };
+    converter::assemble_moe_layer(
+        ffn,
+        &part,
+        RouterBuild { router, representatives: Vec::new(), compensation: None },
+    )
 }
 
 #[cfg(test)]

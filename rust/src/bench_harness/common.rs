@@ -2,16 +2,19 @@
 //! profiles, converted-model cache, task suites and corpora — so each
 //! experiment runner stays small and the expensive pieces are computed
 //! once.
+//!
+//! Conversions run through the [`crate::pipeline`] method registry:
+//! [`Ctx::convert_method`] caches any `(method, spec, finetune)` cell,
+//! with the profiling pass shared across the whole sweep via
+//! [`Ctx::profiles`] + [`crate::pipeline::Pipeline::with_profiles`].
 
-use crate::baselines;
-use crate::converter::{convert_model, ConvertOptions, ConvertedModel};
-use crate::data::corpus::{gen_corpus, CorpusSpec, Domain};
+use crate::data::calibration::{CalibrationSpec, DEFAULT_KA, DEFAULT_SEQ};
+use crate::data::corpus::Domain;
 use crate::data::tasks_gen::{gen_choice_tasks, TaskFamily};
-use crate::data::encode;
-use crate::eval::forward::DenseForward;
 use crate::eval::tasks::TaskSuite;
-use crate::model::{LayerFfn, ModelWeights, MoeLayerWeights, MoeSpec};
-use crate::profiling::{profile_dense_model, ActivationProfile};
+use crate::model::{ModelWeights, MoeSpec};
+use crate::pipeline::Pipeline;
+use crate::profiling::ActivationProfile;
 use crate::util::json::Json;
 use anyhow::{Context as _, Result};
 use std::collections::HashMap;
@@ -19,9 +22,14 @@ use std::path::PathBuf;
 
 /// Default calibration setup, mirroring the paper's §5.1 (8 examples,
 /// K_a = 10; our sequences are 256 tokens at `small`'s max_seq).
-pub const CALIB_EXAMPLES: usize = 8;
-pub const CALIB_SEQ: usize = 256;
-pub const KA: usize = 10;
+pub const CALIB_EXAMPLES: usize = crate::data::calibration::DEFAULT_EXAMPLES;
+pub const CALIB_SEQ: usize = DEFAULT_SEQ;
+pub const KA: usize = DEFAULT_KA;
+
+/// Gate fine-tuning against the dense teacher — the pipeline's
+/// finetune stage, re-exported for experiment runners that fine-tune
+/// models built outside a pipeline run.
+pub use crate::pipeline::finetune_model;
 
 /// Experiment context.
 pub struct Ctx {
@@ -68,31 +76,23 @@ impl Ctx {
         Ok(self.runtime.as_ref().unwrap().clone())
     }
 
+    /// The calibration setup every experiment shares (seeded by
+    /// `self.seed`, so streams are reproducible across runners).
+    pub fn calib_spec(&self, domain: Domain, n_examples: usize, k_a: usize) -> CalibrationSpec {
+        CalibrationSpec { domain, examples: n_examples, seq: CALIB_SEQ, k_a, seed: self.seed }
+    }
+
     /// Calibration token stream of `n` examples × CALIB_SEQ from a domain.
     pub fn calib_tokens(&self, domain: Domain, n: usize) -> Vec<usize> {
-        let text = gen_corpus(&CorpusSpec {
-            domain,
-            bytes: n * CALIB_SEQ + 64,
-            seed: self.seed ^ 0xCA11,
-        });
-        let mut toks = encode(&text);
-        toks.truncate(n * CALIB_SEQ);
-        toks
+        self.calib_spec(domain, n, KA).calib_tokens()
     }
 
     /// Held-out evaluation tokens (different seed from calibration).
     pub fn eval_tokens(&self, domain: Domain, tokens: usize) -> Vec<usize> {
-        let text = gen_corpus(&CorpusSpec {
-            domain,
-            bytes: tokens + 64,
-            seed: self.seed ^ 0xE7A1,
-        });
-        let mut toks = encode(&text);
-        toks.truncate(tokens);
-        toks
+        self.calib_spec(domain, CALIB_EXAMPLES, KA).eval_tokens(tokens)
     }
 
-    /// Per-layer activation profiles on a calibration set.
+    /// Per-layer activation profiles on a calibration set (cached).
     pub fn profiles(
         &mut self,
         domain: Domain,
@@ -101,38 +101,59 @@ impl Ctx {
     ) -> Result<Vec<ActivationProfile>> {
         let key = (domain.name().to_string(), n_examples, k_a);
         if !self.profiles.contains_key(&key) {
-            let calib = self.calib_tokens(domain, n_examples);
+            let spec = self.calib_spec(domain, n_examples, k_a);
             let model = self.model()?.clone();
-            let p = profile_dense_model(&model, &calib, CALIB_SEQ, k_a);
-            self.profiles.insert(key.clone(), p);
+            self.profiles.insert(key.clone(), spec.profiles(&model));
         }
         Ok(self.profiles[&key].clone())
     }
 
-    /// CMoE conversion of the checkpoint (cached by spec string).
-    pub fn convert(&mut self, spec: &MoeSpec) -> Result<ModelWeights> {
-        let key = format!("cmoe:{spec}");
+    /// Convert the checkpoint with any registered method (cached by
+    /// method × spec × fine-tune budget). The per-domain profiling
+    /// passes are computed once and shared across every method in the
+    /// sweep via the pipeline's profile overrides.
+    pub fn convert_method(
+        &mut self,
+        method: &str,
+        spec: &MoeSpec,
+        finetune_samples: usize,
+    ) -> Result<ModelWeights> {
+        let key = format!("{method}:{spec}:ft{finetune_samples}");
         if !self.converted.contains_key(&key) {
+            let method_entry = crate::pipeline::registry::get(method)?;
+            let needs_aux = method_entry.needs_aux_domain;
             let profiles = self.profiles(Domain::Markov, CALIB_EXAMPLES, KA)?;
             let model = self.model()?.clone();
-            let ConvertedModel { model: m, .. } =
-                convert_model(&model, &profiles, spec, &ConvertOptions::default())?;
-            self.converted.insert(key.clone(), m);
+            let mut pipe = Pipeline::from_method(method_entry)
+                .spec(*spec)
+                .calib(self.calib_spec(Domain::Markov, CALIB_EXAMPLES, KA))
+                .with_profiles(profiles)
+                .finetune(finetune_samples);
+            if needs_aux {
+                // the pipeline's aux domain for Markov is Arith — reuse
+                // the cached pass instead of re-profiling per method
+                pipe = pipe.with_aux_profiles(vec![self.profiles(
+                    Domain::Arith,
+                    CALIB_EXAMPLES,
+                    KA,
+                )?]);
+            }
+            let run = pipe
+                .run(&model)
+                .with_context(|| format!("convert via method '{method}'"))?;
+            self.converted.insert(key.clone(), run.model);
         }
         Ok(self.converted[&key].clone())
     }
 
+    /// CMoE conversion of the checkpoint (training-free).
+    pub fn convert(&mut self, spec: &MoeSpec) -> Result<ModelWeights> {
+        self.convert_method("cmoe", spec, 0)
+    }
+
     /// CMoE conversion + gate fine-tuning on `samples` calibration rows.
     pub fn convert_finetuned(&mut self, spec: &MoeSpec, samples: usize) -> Result<ModelWeights> {
-        let key = format!("cmoe-ft{samples}:{spec}");
-        if !self.converted.contains_key(&key) {
-            let mut m = self.convert(spec)?;
-            let calib = self.calib_tokens(Domain::Markov, CALIB_EXAMPLES);
-            let dense = self.model()?.clone();
-            finetune_model(&mut m, &dense, &calib, samples)?;
-            self.converted.insert(key.clone(), m);
-        }
-        Ok(self.converted[&key].clone())
+        self.convert_method("cmoe", spec, samples)
     }
 
     /// The evaluation suites (Table 1's five-task analog).
@@ -162,69 +183,11 @@ impl Ctx {
     }
 }
 
-/// Fine-tune every MoE layer's gates on `samples` token rows drawn from
-/// the calibration stream (the paper's 2k-sample budget analog).
-pub fn finetune_model(
-    moe_model: &mut ModelWeights,
-    dense_model: &ModelWeights,
-    calib: &[usize],
-    samples: usize,
-) -> Result<()> {
-    let fwd = DenseForward::new(dense_model);
-    let take = samples.min(calib.len());
-    let inputs = fwd.capture_ffn_inputs(&calib[..take.min(CALIB_SEQ)]);
-    // gather more chunks if needed
-    let mut per_layer: Vec<crate::tensor::Tensor> = inputs;
-    let mut consumed = take.min(CALIB_SEQ);
-    while consumed < take {
-        let chunk = &calib[consumed..(consumed + CALIB_SEQ).min(take)];
-        if chunk.len() < 2 {
-            break;
-        }
-        let more = fwd.capture_ffn_inputs(chunk);
-        for (acc, m) in per_layer.iter_mut().zip(more) {
-            let mut data = std::mem::take(&mut acc.data);
-            data.extend_from_slice(&m.data);
-            let rows = acc.shape[0] + m.shape[0];
-            *acc = crate::tensor::Tensor::from_vec(data, &[rows, m.shape[1]]);
-        }
-        consumed += CALIB_SEQ;
-    }
-    let cfg = crate::moe::FinetuneConfig::default();
-    for (l, layer) in moe_model.layers.iter_mut().enumerate() {
-        if let LayerFfn::Moe(moe) = &mut layer.ffn {
-            crate::moe::finetune_gates(moe, &per_layer[l], &cfg);
-        }
-    }
-    Ok(())
-}
-
-/// Convert the checkpoint with a per-layer baseline closure (shared by
-/// the Table 1/5 runners).
-pub fn convert_with_baseline(
-    model: &ModelWeights,
-    profiles: &[ActivationProfile],
-    calib: &[usize],
-    f: &dyn Fn(usize, &crate::model::FfnWeights, &crate::tensor::Tensor, &ActivationProfile) -> MoeLayerWeights,
-) -> ModelWeights {
-    let fwd = DenseForward::new(model);
-    let inputs = fwd.capture_ffn_inputs(&calib[..CALIB_SEQ.min(calib.len())]);
-    let mut out = model.clone();
-    for (l, layer) in out.layers.iter_mut().enumerate() {
-        let ffn = match &layer.ffn {
-            LayerFfn::Dense(f) => f.clone(),
-            LayerFfn::Moe(_) => continue,
-        };
-        layer.ffn = LayerFfn::Moe(f(l, &ffn, &inputs[l], &profiles[l]));
-    }
-    out
-}
-
 /// Structured-pruning baseline applied model-wide.
 pub fn pruned_model(
     model: &ModelWeights,
     profiles: &[ActivationProfile],
     drop: f64,
 ) -> ModelWeights {
-    baselines::pruning::prune_model(model, profiles, drop)
+    crate::baselines::pruning::prune_model(model, profiles, drop)
 }

@@ -30,28 +30,24 @@ pub fn table6(ctx: &mut Ctx) -> Result<Table> {
     let construct = timer.total();
     let mut m = conv.model;
     let t2 = Timer::start();
-    common::finetune_model(&mut m, &dense, &calib, 2048)?;
+    common::finetune_model(&mut m, &dense, &calib, 2048, CALIB_SEQ)?;
     let ft = t2.total();
 
     // llama-moe-style split (measured split time; training budget quoted)
+    let baseline_spec: MoeSpec = "S0A6E8".parse()?;
+    let calib_spec = ctx.calib_spec(Domain::Markov, CALIB_EXAMPLES, KA);
     let t3 = Timer::start();
-    let _ = common::convert_with_baseline(&dense, &profiles, &calib, &|_, ffn, x, _| {
-        crate::baselines::llama_moe::llama_moe_convert(
-            ffn,
-            x,
-            &crate::baselines::llama_moe::LlamaMoeOptions::default(),
-        )
-    });
+    let _ = crate::pipeline::Pipeline::for_method("llama-moe")?
+        .spec(baseline_spec)
+        .calib(calib_spec.clone())
+        .run(&dense)?;
     let lm_time = t3.total();
 
     let t4 = Timer::start();
-    let _ = common::convert_with_baseline(&dense, &profiles, &calib, &|_, ffn, x, _| {
-        crate::baselines::moefication::moefication_convert(
-            ffn,
-            x,
-            &crate::baselines::moefication::MoeficationOptions::default(),
-        )
-    });
+    let _ = crate::pipeline::Pipeline::for_method("moefication")?
+        .spec(baseline_spec)
+        .calib(calib_spec)
+        .run(&dense)?;
     let moef_time = t4.total();
 
     let calib_tokens = CALIB_EXAMPLES * CALIB_SEQ + 2048;

@@ -1,15 +1,17 @@
 //! Quality experiments: Tables 1–5, 10, 11 and Figures 4, 6 — accuracy
 //! and perplexity of CMoE vs the baselines on the substitute workloads.
+//! Baseline rows iterate the [`crate::pipeline::registry`] instead of
+//! carrying bespoke conversion code: one registry name per table row.
 
-use crate::baselines::{
-    self, emoe::EmoeOptions, llama_moe::LlamaMoeOptions, moefication::MoeficationOptions,
-};
 use crate::bench_harness::common::{self, Ctx, CALIB_EXAMPLES, CALIB_SEQ, KA};
 use crate::data::corpus::Domain;
 use crate::eval::{choice_accuracy, perplexity, self_consistency_accuracy};
 use crate::model::{ModelWeights, MoeSpec};
 use crate::util::table::{f, Table};
 use anyhow::Result;
+
+/// Fine-tune budget every sparsified row shares (paper: 2k samples).
+const FT_BUDGET: usize = 2048;
 
 const EVAL_TOKENS: usize = 8 * 1024;
 
@@ -23,13 +25,14 @@ fn eval_row(ctx: &mut Ctx, name: &str, sparsity: &str, model: &ModelWeights) -> 
     Ok(cells)
 }
 
-/// Table 1: accuracy at 25% sparsity across methods (S3A3E8; all
-/// sparsified methods fine-tuned on the same 2k-sample budget).
+/// Table 1: accuracy at 25% sparsity across methods (S3A3E8 for ours,
+/// the registry's matched 6-of-8 budget for baselines; all sparsified
+/// methods fine-tuned on the same 2k-sample budget).
 pub fn table1(ctx: &mut Ctx) -> Result<Table> {
     let spec: MoeSpec = "S3A3E8".parse()?;
+    let baseline_spec: MoeSpec = "S0A6E8".parse()?;
     let dense = ctx.model()?.clone();
     let profiles = ctx.profiles(Domain::Markov, CALIB_EXAMPLES, KA)?;
-    let calib = ctx.calib_tokens(Domain::Markov, CALIB_EXAMPLES);
 
     let mut t = Table::new(
         "Table 1 — accuracy (%) at 25% FFN sparsity (small, 2k-sample FT)",
@@ -41,52 +44,18 @@ pub fn table1(ctx: &mut Ctx) -> Result<Table> {
     let pruned = common::pruned_model(&dense, &profiles, 0.20);
     t.row(eval_row(ctx, "Pruning-20%", "20%", &pruned)?);
 
-    // baselines at matched FLOP budget: 6-of-8 experts active
-    let mk = |modelw: ModelWeights| modelw;
-    let mut add_baseline = |ctx: &mut Ctx, name: &str, m: ModelWeights| -> Result<()> {
-        let mut m = mk(m);
-        common::finetune_model(&mut m, &dense, &calib, 2048)?;
-        t.row(eval_row(ctx, name, "25%", &m)?);
-        Ok(())
-    };
+    // baselines at matched FLOP budget, straight from the registry
+    for (label, method) in [
+        ("LLaMA-MoE", "llama-moe"),
+        ("MoEfication", "moefication"),
+        ("G-MoEfication", "gmoefication"),
+        ("EMoE", "emoe"),
+    ] {
+        let m = ctx.convert_method(method, &baseline_spec, FT_BUDGET)?;
+        t.row(eval_row(ctx, label, "25%", &m)?);
+    }
 
-    let lm = common::convert_with_baseline(&dense, &profiles, &calib, &|_, ffn, x, _| {
-        baselines::llama_moe::llama_moe_convert(
-            ffn,
-            x,
-            &LlamaMoeOptions { n_experts: 8, active: 6, ..Default::default() },
-        )
-    });
-    add_baseline(ctx, "LLaMA-MoE", lm)?;
-
-    let moef = common::convert_with_baseline(&dense, &profiles, &calib, &|_, ffn, x, _| {
-        baselines::moefication::moefication_convert(
-            ffn,
-            x,
-            &MoeficationOptions { n_experts: 8, active: 6, ..Default::default() },
-        )
-    });
-    add_baseline(ctx, "MoEfication", moef)?;
-
-    let gmo = common::convert_with_baseline(&dense, &profiles, &calib, &|_, ffn, x, _| {
-        baselines::gmoefication::gmoefication_convert(
-            ffn,
-            x,
-            &MoeficationOptions { n_experts: 8, active: 6, ..Default::default() },
-        )
-    });
-    add_baseline(ctx, "G-MoEfication", gmo)?;
-
-    let em = common::convert_with_baseline(&dense, &profiles, &calib, &|_, ffn, x, _| {
-        baselines::emoe::emoe_convert(
-            ffn,
-            x,
-            &EmoeOptions { n_experts: 8, active: 6, ..Default::default() },
-        )
-    });
-    add_baseline(ctx, "EMoE", em)?;
-
-    let ours = ctx.convert_finetuned(&spec, 2048)?;
+    let ours = ctx.convert_finetuned(&spec, FT_BUDGET)?;
     t.row(eval_row(ctx, "Ours (CMoE)", "25%", &ours)?);
 
     ctx.save("table1", std::slice::from_ref(&t))?;
@@ -183,7 +152,7 @@ pub fn table4(ctx: &mut Ctx) -> Result<Table> {
             )?;
             let mut m = conv.model;
             let calib = ctx.calib_tokens(domain, n);
-            common::finetune_model(&mut m, &dense, &calib, 2048)?;
+            common::finetune_model(&mut m, &dense, &calib, 2048, CALIB_SEQ)?;
             let suites = ctx.suites();
             let avg: f64 =
                 suites.iter().map(|s| choice_accuracy(&m, s)).sum::<f64>() / suites.len() as f64;
@@ -218,97 +187,35 @@ pub fn table4(ctx: &mut Ctx) -> Result<Table> {
     Ok(t)
 }
 
-/// Table 5: clustering × routing ablation (reconstruction + accuracy).
+/// Table 5: clustering × routing ablation (grouping and router of each
+/// row are registry entries; the "+ ours" rows are the registry's
+/// `<base>+cmoe-router` hybrids).
 pub fn table5(ctx: &mut Ctx) -> Result<Table> {
-    let dense = ctx.model()?.clone();
-    let profiles = ctx.profiles(Domain::Markov, CALIB_EXAMPLES, KA)?;
-    let calib = ctx.calib_tokens(Domain::Markov, CALIB_EXAMPLES);
+    let baseline_spec: MoeSpec = "S0A6E8".parse()?;
     let suites = ctx.suites();
 
     let mut t = Table::new(
         "Table 5 — clustering and routing ablation (small, 25% sparsity, 2k FT)",
         &["Method", "Grouping", "Router", "AvgAcc (%)"],
     );
-    let mut run = |ctx: &mut Ctx,
-                   name: &str,
-                   grouping: &str,
-                   router: &str,
-                   mut m: ModelWeights|
-     -> Result<()> {
-        common::finetune_model(&mut m, &dense, &calib, 2048)?;
+    let rows: &[(&str, &str, &str, &str, MoeSpec)] = &[
+        ("MoEfication", "moefication", "Param K-means", "Linear", baseline_spec),
+        ("Read-ME", "readme", "Domain-aware", "Global", baseline_spec),
+        ("MoEfication + ours", "moefication+cmoe-router", "Param K-means", "Analytical", baseline_spec),
+        ("Read-ME + ours", "readme+cmoe-router", "Domain-aware", "Analytical", baseline_spec),
+        ("Ours", "cmoe", "Activation + shared", "Analytical", "S3A3E8".parse()?),
+    ];
+    for &(label, method, grouping, router, spec) in rows {
+        let m = ctx.convert_method(method, &spec, FT_BUDGET)?;
         let avg: f64 =
             suites.iter().map(|s| choice_accuracy(&m, s)).sum::<f64>() / suites.len() as f64;
-        t.row(vec![name.into(), grouping.into(), router.into(), f(avg * 100.0, 2)]);
-        Ok(())
-    };
-
-    // MoEfication (param k-means + trained linear router)
-    let opts = MoeficationOptions { n_experts: 8, active: 6, ..Default::default() };
-    let moef = common::convert_with_baseline(&dense, &profiles, &calib, &|_, ffn, x, _| {
-        baselines::moefication::moefication_convert(ffn, x, &opts)
-    });
-    run(ctx, "MoEfication", "Param K-means", "Linear", moef.clone())?;
-
-    // Read-ME-like (domain-aware + global router)
-    let pa = ctx.profiles(Domain::Markov, CALIB_EXAMPLES, KA)?;
-    let pb = ctx.profiles(Domain::Arith, CALIB_EXAMPLES, KA)?;
-    let readme = {
-        let fwdin = crate::eval::forward::DenseForward::new(&dense)
-            .capture_ffn_inputs(&calib[..CALIB_SEQ]);
-        let mut m = dense.clone();
-        for (l, layer) in m.layers.iter_mut().enumerate() {
-            let ffn = match &layer.ffn {
-                crate::model::LayerFfn::Dense(f) => f.clone(),
-                _ => continue,
-            };
-            // domain prototypes = mean FFN input per domain (markov uses
-            // the captured inputs; arith approximated by the same means
-            // shifted — the global router is the point of the ablation)
-            let d = ffn.w_gate.shape[0];
-            let mut mean = vec![0.0f32; d];
-            for r in 0..fwdin[l].shape[0] {
-                for (mv, v) in mean.iter_mut().zip(fwdin[l].row(r)) {
-                    *mv += v;
-                }
-            }
-            for mv in mean.iter_mut() {
-                *mv /= fwdin[l].shape[0] as f32;
-            }
-            let proto_a = crate::tensor::Tensor::from_vec(mean.clone(), &[d]);
-            let proto_b = crate::tensor::Tensor::from_vec(
-                mean.iter().map(|v| -v).collect(),
-                &[d],
-            );
-            layer.ffn = crate::model::LayerFfn::Moe(baselines::readme_like::readme_convert(
-                &ffn,
-                &[&pa[l], &pb[l]],
-                &[proto_a, proto_b],
-                6,
-                8,
-            ));
-        }
-        m
-    };
-    run(ctx, "Read-ME", "Domain-aware", "Global", readme.clone())?;
-
-    // + our analytical router swapped into each baseline
-    let swap = |m: &ModelWeights| -> ModelWeights {
-        let mut out = m.clone();
-        for (l, layer) in out.layers.iter_mut().enumerate() {
-            if let crate::model::LayerFfn::Moe(moe) = &layer.ffn {
-                let orig = dense.dense_ffn(l);
-                let swapped = baselines::with_analytical_router(moe, orig, &profiles[l]);
-                layer.ffn = crate::model::LayerFfn::Moe(swapped);
-            }
-        }
-        out
-    };
-    run(ctx, "MoEfication + ours", "Param K-means", "Analytical", swap(&moef))?;
-    run(ctx, "Read-ME + ours", "Domain-aware", "Analytical", swap(&readme))?;
-
-    // full CMoE
-    let ours = ctx.convert(&"S3A3E8".parse()?)?;
-    run(ctx, "Ours", "Activation + shared", "Analytical", ours)?;
+        t.row(vec![
+            label.to_string(),
+            grouping.to_string(),
+            router.to_string(),
+            f(avg * 100.0, 2),
+        ]);
+    }
 
     ctx.save("table5", std::slice::from_ref(&t))?;
     Ok(t)

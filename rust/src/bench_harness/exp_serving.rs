@@ -19,7 +19,7 @@ use crate::tensor::{self, Tensor};
 use crate::util::table::{f, speedup, Table};
 use crate::util::timer::measure;
 use crate::util::Rng;
-use anyhow::Result;
+use anyhow::{Context as _, Result};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -29,6 +29,15 @@ use std::time::Duration;
 pub fn dispatch_sweep(ctx: &mut Ctx) -> Result<Table> {
     let t = dispatch_sweep_table(ctx.seed, 5, Duration::from_millis(60))?;
     ctx.save("dispatch", std::slice::from_ref(&t))?;
+    // Perf trajectory across PRs: a second copy at the repo root with a
+    // stable name, so successive PRs can diff decode throughput without
+    // digging through results/ directories. Outside a CMoE checkout it
+    // falls back to the results directory rather than guessing.
+    let root = crate::util::repo_root().unwrap_or_else(|| ctx.out_dir.clone());
+    let path = root.join("BENCH_dispatch.json");
+    std::fs::write(&path, t.to_json().pretty())
+        .with_context(|| format!("write {}", path.display()))?;
+    eprintln!("dispatch sweep exported to {}", path.display());
     Ok(t)
 }
 

@@ -1,5 +1,4 @@
-//! The CMoE conversion pipeline (§4): analytical FFN → MoE
-//! restructuring.
+//! The CMoE conversion math (§4): analytical FFN → MoE restructuring.
 //!
 //! Stages per layer (timed in [`ConvertReport`]):
 //! 1. **Shared-expert selection** — the `N_s·m` highest activation-rate
@@ -14,6 +13,14 @@
 //! 4. **Weight slicing** — experts are views (copies) of the original
 //!    matrices; conversion is a *permutation* of neurons, verified by
 //!    tests and a debug assertion.
+//!
+//! The stages are exposed individually — [`cmoe_layer_partition`]
+//! (1+2+3a), [`analytical_router`] (3b) and [`assemble_moe_layer`] (4) —
+//! so [`crate::pipeline`] can compose them with baseline partitioners
+//! and routers behind one staged, resumable API; [`convert_ffn_timed`]
+//! is the fused single-call form and goes through the exact same code.
+//! The serializable boundary types are [`LayerPartition`] (partition →
+//! router) and [`RouterBuild`] (router → assembly).
 //!
 //! [`hierarchical`] applies the same restructuring to each routed expert
 //! of an existing MoE layer (§4.4).
@@ -75,32 +82,111 @@ pub struct ConvertedModel {
     pub report: ConvertReport,
 }
 
-/// Convert a single dense FFN into a CMoE layer.
-pub fn convert_ffn(
-    ffn: &FfnWeights,
-    profile: &ActivationProfile,
-    spec: &MoeSpec,
-    opts: &ConvertOptions,
-) -> Result<MoeLayerWeights> {
-    let (moe, _report) = convert_ffn_timed(ffn, profile, spec, opts)?;
-    Ok(moe)
+/// Neuron membership produced by a partition stage — the serializable
+/// boundary between partitioning and router construction (JSON codec in
+/// [`crate::pipeline::artifact`]). Baselines emit it with empty
+/// `shared_neurons`; CMoE additionally records the representative
+/// neuron it read off the clustering state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerPartition {
+    pub spec: MoeSpec,
+    /// Original-FFN indices of the fused shared expert's neurons.
+    pub shared_neurons: Vec<usize>,
+    /// Original-FFN indices per routed expert.
+    pub expert_neurons: Vec<Vec<usize>>,
+    /// Representative neuron per routed expert when the partitioner
+    /// already picked one; `None` leaves the Eq. 25 search to the
+    /// router stage ([`representative_neurons`]).
+    pub representatives: Option<Vec<usize>>,
 }
 
-/// Convert with per-stage timings.
-pub fn convert_ffn_timed(
-    ffn: &FfnWeights,
+impl LayerPartition {
+    /// Check the partition is an exact permutation of `0..d_h` with
+    /// `spec.routed()` balanced experts of `d_h / spec.total` neurons
+    /// (and `spec.shared` experts' worth of shared neurons).
+    pub fn validate(&self, d_h: usize) -> Result<()> {
+        let m = self.spec.expert_size(d_h)?;
+        if self.shared_neurons.len() != self.spec.shared * m {
+            bail!(
+                "shared slice holds {} neurons, spec {} wants {}",
+                self.shared_neurons.len(),
+                self.spec,
+                self.spec.shared * m
+            );
+        }
+        if self.expert_neurons.len() != self.spec.routed() {
+            bail!(
+                "{} routed experts, spec {} wants {}",
+                self.expert_neurons.len(),
+                self.spec,
+                self.spec.routed()
+            );
+        }
+        for (e, mem) in self.expert_neurons.iter().enumerate() {
+            if mem.len() != m {
+                bail!("expert {e} holds {} neurons, expected {m}", mem.len());
+            }
+        }
+        let mut all: Vec<usize> = self
+            .shared_neurons
+            .iter()
+            .chain(self.expert_neurons.iter().flatten())
+            .copied()
+            .collect();
+        all.sort_unstable();
+        if all != (0..d_h).collect::<Vec<_>>() {
+            bail!("partition is not a permutation of 0..{d_h}");
+        }
+        if let Some(reps) = &self.representatives {
+            if reps.len() != self.spec.routed() {
+                bail!("{} representatives for {} experts", reps.len(), self.spec.routed());
+            }
+            for (e, r) in reps.iter().enumerate() {
+                if !self.expert_neurons[e].contains(r) {
+                    bail!("representative {r} is not a member of expert {e}");
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-stage wall-clock of [`cmoe_layer_partition`].
+#[derive(Clone, Debug, Default)]
+pub struct PartitionTimings {
+    pub shared_select: Duration,
+    pub clustering: Duration,
+    /// The Eq. 25 representative search (folded into
+    /// [`ConvertReport::router`] by [`convert_ffn_timed`]).
+    pub representative: Duration,
+}
+
+/// Router-stage output consumed by [`assemble_moe_layer`].
+#[derive(Clone, Debug)]
+pub struct RouterBuild {
+    pub router: Router,
+    /// Representative neurons backing an analytical router (empty for
+    /// trained / global routers, matching the baselines' bookkeeping).
+    pub representatives: Vec<usize>,
+    /// G-MoEfication-style calibration-mean compensation, when the
+    /// method uses it.
+    pub compensation: Option<Vec<Vec<f32>>>,
+}
+
+/// Stages 1–3a of the CMoE conversion: shared-expert selection (Eq. 16),
+/// balanced activation clustering (§A.3), and the representative search
+/// against the clustering centroids (Eq. 25). Pure function of the
+/// profile — weights are not touched until [`assemble_moe_layer`].
+pub fn cmoe_layer_partition(
     profile: &ActivationProfile,
     spec: &MoeSpec,
     opts: &ConvertOptions,
-) -> Result<(MoeLayerWeights, ConvertReport)> {
+) -> Result<(LayerPartition, PartitionTimings)> {
     spec.validate()?;
-    let d_h = ffn.hidden_dim();
-    if profile.d_h != d_h {
-        bail!("profile d_h {} != ffn d_h {}", profile.d_h, d_h);
-    }
+    let d_h = profile.d_h;
     let m = spec.expert_size(d_h)?;
     let n_r = spec.routed();
-    let mut report = ConvertReport { layers: 1, ..Default::default() };
+    let mut timings = PartitionTimings::default();
     let mut timer = Timer::start();
 
     // ---- Stage 1: shared experts (Eq. 16) -------------------------------
@@ -108,7 +194,7 @@ pub fn convert_ffn_timed(
     let shared_set: std::collections::HashSet<usize> = shared_neurons.iter().copied().collect();
     let remaining: Vec<usize> = (0..d_h).filter(|i| !shared_set.contains(i)).collect();
     debug_assert_eq!(remaining.len(), n_r * m);
-    report.shared_select = timer.lap();
+    timings.shared_select = timer.lap();
 
     // ---- Stage 2: balanced clustering of routed neurons (§A.3) ----------
     let points = profile.columns_tensor(&remaining);
@@ -128,9 +214,9 @@ pub fn convert_ffn_timed(
         c
     };
     let members = cl.members(n_r);
-    report.clustering = timer.lap();
+    timings.clustering = timer.lap();
 
-    // ---- Stage 3: representative neurons + analytical router (Eq. 25/8) -
+    // ---- Stage 3a: representative neurons (Eq. 25) ----------------------
     let mut representatives = Vec::with_capacity(n_r);
     for (j, mem) in members.iter().enumerate() {
         let centroid = cl.centroids.row(j);
@@ -150,36 +236,143 @@ pub fn convert_ffn_timed(
         }
         representatives.push(remaining[best]);
     }
-    let router = Router::Analytical(RouterWeights {
-        w_gate_r: ffn.w_gate.select_cols(&representatives),
-        w_up_r: ffn.w_up.select_cols(&representatives),
-    });
-    report.router = timer.lap();
+    let expert_neurons: Vec<Vec<usize>> =
+        members.iter().map(|mem| mem.iter().map(|&p| remaining[p]).collect()).collect();
+    timings.representative = timer.lap();
 
-    // ---- Stage 4: weight slicing ----------------------------------------
-    let shared = ffn.slice_neurons(&shared_neurons);
-    let mut experts = Vec::with_capacity(n_r);
-    let mut expert_neurons = Vec::with_capacity(n_r);
-    for mem in &members {
-        let orig: Vec<usize> = mem.iter().map(|&p| remaining[p]).collect();
-        experts.push(ffn.slice_neurons(&orig));
-        expert_neurons.push(orig);
+    Ok((
+        LayerPartition {
+            spec: *spec,
+            shared_neurons,
+            expert_neurons,
+            representatives: Some(representatives),
+        },
+        timings,
+    ))
+}
+
+/// Eq. 25 for an *arbitrary* partition: per expert, the activation
+/// column centroid (member mean) and its nearest member neuron. Shared
+/// by the pipeline's analytical [`crate::pipeline::RouterBuilder`] and
+/// [`crate::baselines::with_analytical_router`] (the Table 5 "+ ours"
+/// hybrids). CMoE's own path reads representatives off the clustering
+/// state in [`cmoe_layer_partition`] instead.
+pub fn representative_neurons(
+    profile: &ActivationProfile,
+    expert_neurons: &[Vec<usize>],
+) -> Vec<usize> {
+    let mut representatives = Vec::with_capacity(expert_neurons.len());
+    for mem in expert_neurons {
+        // centroid of the expert's activation columns
+        let pts = profile.columns_tensor(mem);
+        let q = pts.shape[1];
+        let mut centroid = vec![0.0f32; q];
+        for r in 0..pts.shape[0] {
+            for (c, v) in centroid.iter_mut().zip(pts.row(r)) {
+                *c += v;
+            }
+        }
+        for c in centroid.iter_mut() {
+            *c /= pts.shape[0] as f32;
+        }
+        let mut best = 0usize;
+        let mut best_d = f64::INFINITY;
+        for r in 0..pts.shape[0] {
+            let d: f64 = pts
+                .row(r)
+                .iter()
+                .zip(&centroid)
+                .map(|(a, b)| ((a - b) as f64) * ((a - b) as f64))
+                .sum();
+            if d < best_d {
+                best_d = d;
+                best = r;
+            }
+        }
+        representatives.push(mem[best]);
     }
-    report.slicing = timer.lap();
-    report.total = report.shared_select + report.clustering + report.router + report.slicing;
+    representatives
+}
 
-    let moe = MoeLayerWeights {
-        spec: *spec,
-        shared,
-        experts,
-        router,
+/// Stage 3b: the analytical router — the SwiGLU response of the
+/// representative neurons' weight columns (Eq. 8). No training.
+pub fn analytical_router(ffn: &FfnWeights, representatives: &[usize]) -> Router {
+    Router::Analytical(RouterWeights {
+        w_gate_r: ffn.w_gate.select_cols(representatives),
+        w_up_r: ffn.w_up.select_cols(representatives),
+    })
+}
+
+/// Stage 4: slice the original weights per the partition and attach the
+/// router. The single place [`MoeLayerWeights`] are built — CMoE,
+/// every baseline and the pipeline all assemble here, so the layer
+/// invariants (gate init, neuron bookkeeping) cannot drift apart.
+pub fn assemble_moe_layer(
+    ffn: &FfnWeights,
+    part: &LayerPartition,
+    build: RouterBuild,
+) -> MoeLayerWeights {
+    let n_r = part.expert_neurons.len();
+    MoeLayerWeights {
+        spec: part.spec,
+        shared: ffn.slice_neurons(&part.shared_neurons),
+        experts: part.expert_neurons.iter().map(|idx| ffn.slice_neurons(idx)).collect(),
+        router: build.router,
         gate_scale: vec![0.0; n_r],
         gate_bias: vec![0.0; n_r],
-        shared_neurons,
-        expert_neurons,
-        representatives,
-        compensation: None,
+        shared_neurons: part.shared_neurons.clone(),
+        expert_neurons: part.expert_neurons.clone(),
+        representatives: build.representatives,
+        compensation: build.compensation,
+    }
+}
+
+/// Convert a single dense FFN into a CMoE layer.
+pub fn convert_ffn(
+    ffn: &FfnWeights,
+    profile: &ActivationProfile,
+    spec: &MoeSpec,
+    opts: &ConvertOptions,
+) -> Result<MoeLayerWeights> {
+    let (moe, _report) = convert_ffn_timed(ffn, profile, spec, opts)?;
+    Ok(moe)
+}
+
+/// Convert with per-stage timings. Composes the staged functions above;
+/// the pipeline's `cmoe` method runs the identical code, which is what
+/// the golden equivalence test (`tests/pipeline_golden.rs`) pins down.
+pub fn convert_ffn_timed(
+    ffn: &FfnWeights,
+    profile: &ActivationProfile,
+    spec: &MoeSpec,
+    opts: &ConvertOptions,
+) -> Result<(MoeLayerWeights, ConvertReport)> {
+    let d_h = ffn.hidden_dim();
+    if profile.d_h != d_h {
+        bail!("profile d_h {} != ffn d_h {}", profile.d_h, d_h);
+    }
+    let (part, timings) = cmoe_layer_partition(profile, spec, opts)?;
+    let mut timer = Timer::start();
+    let representatives =
+        part.representatives.clone().expect("cmoe partitioning always picks representatives");
+    let router = analytical_router(ffn, &representatives);
+    let router_build = timer.lap();
+    let moe = assemble_moe_layer(
+        ffn,
+        &part,
+        RouterBuild { router, representatives, compensation: None },
+    );
+    let slicing = timer.lap();
+
+    let mut report = ConvertReport {
+        layers: 1,
+        shared_select: timings.shared_select,
+        clustering: timings.clustering,
+        router: timings.representative + router_build,
+        slicing,
+        ..Default::default()
     };
+    report.total = report.shared_select + report.clustering + report.router + report.slicing;
     debug_assert_eq!(moe.covered_neurons(), (0..d_h).collect::<Vec<_>>(), "not a permutation");
     Ok((moe, report))
 }
@@ -451,6 +644,80 @@ mod tests {
         }
         // double conversion must fail
         assert!(convert_model(&conv.model, &profiles, &spec, &ConvertOptions::default()).is_err());
+    }
+
+    #[test]
+    fn staged_partition_matches_fused_conversion() {
+        // cmoe_layer_partition + analytical_router + assemble_moe_layer
+        // IS convert_ffn — same membership, reps and router weights.
+        let mut rng = Rng::new(39);
+        let (ffn, prof, _, _) = planted(&mut rng, 8, 64, 16, 6, 150);
+        let spec: MoeSpec = "S2A3E8".parse().unwrap();
+        let opts = ConvertOptions::default();
+        let fused = convert_ffn(&ffn, &prof, &spec, &opts).unwrap();
+        let (part, _t) = cmoe_layer_partition(&prof, &spec, &opts).unwrap();
+        assert_eq!(part.shared_neurons, fused.shared_neurons);
+        assert_eq!(part.expert_neurons, fused.expert_neurons);
+        assert_eq!(part.representatives.as_ref().unwrap(), &fused.representatives);
+        part.validate(64).unwrap();
+        let reps = part.representatives.clone().unwrap();
+        let staged = assemble_moe_layer(
+            &ffn,
+            &part,
+            RouterBuild {
+                router: analytical_router(&ffn, &reps),
+                representatives: reps,
+                compensation: None,
+            },
+        );
+        for (a, b) in staged.experts.iter().zip(&fused.experts) {
+            assert_eq!(a.w_gate, b.w_gate);
+            assert_eq!(a.w_down, b.w_down);
+        }
+        let (Router::Analytical(ra), Router::Analytical(rb)) = (&staged.router, &fused.router)
+        else {
+            panic!("router kinds differ")
+        };
+        assert_eq!(ra.w_gate_r, rb.w_gate_r);
+        assert_eq!(ra.w_up_r, rb.w_up_r);
+    }
+
+    #[test]
+    fn layer_partition_validate_catches_corruption() {
+        let spec: MoeSpec = "S1A2E4".parse().unwrap();
+        let good = LayerPartition {
+            spec,
+            shared_neurons: vec![0, 1],
+            expert_neurons: vec![vec![2, 3], vec![4, 5], vec![6, 7]],
+            representatives: Some(vec![2, 5, 6]),
+        };
+        good.validate(8).unwrap();
+        // duplicated neuron
+        let mut dup = good.clone();
+        dup.expert_neurons[0] = vec![2, 2];
+        assert!(dup.validate(8).is_err());
+        // unbalanced expert
+        let mut unb = good.clone();
+        unb.expert_neurons[0] = vec![2, 3, 4];
+        assert!(unb.validate(8).is_err());
+        // representative outside its expert
+        let mut rep = good.clone();
+        rep.representatives = Some(vec![4, 5, 6]);
+        assert!(rep.validate(8).is_err());
+        // wrong width
+        assert!(good.validate(12).is_err());
+    }
+
+    #[test]
+    fn representative_neurons_lie_in_their_expert() {
+        let mut rng = Rng::new(40);
+        let (_, prof, _, _) = planted(&mut rng, 8, 64, 16, 6, 120);
+        let partition: Vec<Vec<usize>> = (0..8).map(|e| (e * 8..(e + 1) * 8).collect()).collect();
+        let reps = representative_neurons(&prof, &partition);
+        assert_eq!(reps.len(), 8);
+        for (e, r) in reps.iter().enumerate() {
+            assert!(partition[e].contains(r), "rep {r} outside expert {e}");
+        }
     }
 
     #[test]

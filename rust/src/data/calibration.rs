@@ -1,0 +1,141 @@
+//! Calibration-corpus wiring, in one place.
+//!
+//! The CLI (`cmoe convert` / `cmoe profile`), the conversion
+//! [`crate::pipeline`] and the bench harness's `Ctx` all need the same
+//! recipe: generate a deterministic corpus slice, byte-tokenize it,
+//! truncate to `examples × seq` tokens, and (for profiling) run the
+//! dense forward to collect per-layer [`ActivationProfile`]s. This
+//! module is the single implementation — the seeds here are the ones
+//! every experiment shares, so calibration streams are reproducible
+//! across the CLI, the pipeline and `cmoe bench`.
+
+use crate::data::corpus::{gen_corpus, CorpusSpec, Domain};
+use crate::data::encode;
+use crate::model::ModelWeights;
+use crate::profiling::{profile_dense_model, ActivationProfile};
+
+/// Paper §5.1 defaults: 8 calibration examples of 256 tokens, ATopK
+/// width `K_a = 10`.
+pub const DEFAULT_EXAMPLES: usize = 8;
+pub const DEFAULT_SEQ: usize = 256;
+pub const DEFAULT_KA: usize = 10;
+/// Base experiment seed; calibration and eval streams derive from it
+/// with fixed xors so they never overlap.
+pub const DEFAULT_SEED: u64 = 0xC0DE;
+
+const CALIB_SALT: u64 = 0xCA11;
+const EVAL_SALT: u64 = 0xE7A1;
+
+/// A fully specified calibration setup. `Default` mirrors the paper's
+/// §5.1 configuration on the markov (WikiText-2 stand-in) domain.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CalibrationSpec {
+    pub domain: Domain,
+    /// Number of calibration examples (sequences).
+    pub examples: usize,
+    /// Tokens per example / profiling chunk length.
+    pub seq: usize,
+    /// ATopK parameter `K_a` for activation profiling.
+    pub k_a: usize,
+    /// Base seed; the calibration and eval corpora are salted from it.
+    pub seed: u64,
+}
+
+impl Default for CalibrationSpec {
+    fn default() -> Self {
+        CalibrationSpec {
+            domain: Domain::Markov,
+            examples: DEFAULT_EXAMPLES,
+            seq: DEFAULT_SEQ,
+            k_a: DEFAULT_KA,
+            seed: DEFAULT_SEED,
+        }
+    }
+}
+
+impl CalibrationSpec {
+    /// Exactly `n_tokens` tokens from the calibration stream.
+    pub fn tokens_of(&self, n_tokens: usize) -> Vec<usize> {
+        let text = gen_corpus(&CorpusSpec {
+            domain: self.domain,
+            bytes: n_tokens + 64,
+            seed: self.seed ^ CALIB_SALT,
+        });
+        let mut toks = encode(&text);
+        toks.truncate(n_tokens);
+        toks
+    }
+
+    /// The calibration token stream (`examples × seq` tokens).
+    pub fn calib_tokens(&self) -> Vec<usize> {
+        self.tokens_of(self.examples * self.seq)
+    }
+
+    /// Held-out evaluation tokens (different salt from calibration, so
+    /// eval text never leaks into profiling or fine-tuning).
+    pub fn eval_tokens(&self, n_tokens: usize) -> Vec<usize> {
+        let text = gen_corpus(&CorpusSpec {
+            domain: self.domain,
+            bytes: n_tokens + 64,
+            seed: self.seed ^ EVAL_SALT,
+        });
+        let mut toks = encode(&text);
+        toks.truncate(n_tokens);
+        toks
+    }
+
+    /// Per-layer activation profiles of `model` on the calibration
+    /// stream — the pipeline's profile stage.
+    pub fn profiles(&self, model: &ModelWeights) -> Vec<ActivationProfile> {
+        profile_dense_model(model, &self.calib_tokens(), self.seq, self.k_a)
+    }
+
+    /// The same spec pointed at another domain (Read-ME's auxiliary
+    /// calibration domains; Table 4's source sweep).
+    pub fn with_domain(&self, domain: Domain) -> CalibrationSpec {
+        CalibrationSpec { domain, ..self.clone() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calib_and_eval_streams_differ() {
+        let spec = CalibrationSpec { examples: 2, seq: 64, ..Default::default() };
+        let calib = spec.calib_tokens();
+        let eval = spec.eval_tokens(128);
+        assert_eq!(calib.len(), 128);
+        assert_eq!(eval.len(), 128);
+        assert_ne!(calib, eval, "calibration and eval corpora must not alias");
+    }
+
+    #[test]
+    fn tokens_are_deterministic_in_seed() {
+        let a = CalibrationSpec::default().tokens_of(100);
+        let b = CalibrationSpec::default().tokens_of(100);
+        assert_eq!(a, b);
+        let c = CalibrationSpec { seed: 1, ..Default::default() }.tokens_of(100);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn with_domain_changes_stream() {
+        let spec = CalibrationSpec { examples: 1, seq: 64, ..Default::default() };
+        let a = spec.calib_tokens();
+        let b = spec.with_domain(Domain::Arith).calib_tokens();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn profiles_cover_every_layer() {
+        let cfg = crate::model::model_config("tiny").unwrap();
+        let mut rng = crate::util::Rng::new(9);
+        let model = ModelWeights::random(&cfg, &mut rng);
+        let spec = CalibrationSpec { examples: 1, seq: 48, k_a: 8, ..Default::default() };
+        let profiles = spec.profiles(&model);
+        assert_eq!(profiles.len(), cfg.n_layers);
+        assert!(profiles.iter().all(|p| p.d_h == cfg.d_ff && p.q == 48));
+    }
+}

@@ -12,9 +12,11 @@
 //! Tokenization is byte-level (vocab 256) so the rust and python sides
 //! agree trivially.
 
+pub mod calibration;
 pub mod corpus;
 pub mod tasks_gen;
 
+pub use calibration::CalibrationSpec;
 pub use corpus::{gen_corpus, CorpusSpec, Domain};
 pub use tasks_gen::{gen_choice_tasks, ChoiceTask};
 

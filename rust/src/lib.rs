@@ -9,11 +9,14 @@
 //!
 //! ## Architecture (three layers)
 //!
-//! * **L3 (this crate)** — the coordinator: conversion pipeline
-//!   ([`converter`]), baselines ([`baselines`]), serving engine
-//!   ([`serving`]) with continuous batching and zero-allocation grouped
-//!   expert dispatch, evaluation ([`eval`]) and the bench harness
-//!   ([`bench_harness`]) that regenerates every table/figure of the paper.
+//! * **L3 (this crate)** — the coordinator: the staged, resumable
+//!   conversion [`pipeline`] (one API over CMoE and every baseline,
+//!   with a method registry and checkpointable stage artifacts), the
+//!   CMoE conversion math ([`converter`]), baselines ([`baselines`]),
+//!   serving engine ([`serving`]) with continuous batching and
+//!   zero-allocation grouped expert dispatch, evaluation ([`eval`]) and
+//!   the bench harness ([`bench_harness`]) that regenerates every
+//!   table/figure of the paper.
 //!
 //! The end-to-end picture (module map, execution modes, and the decode
 //! wave's path through the grouped dispatcher) is documented in
@@ -29,16 +32,18 @@
 //! ## Quick start
 //!
 //! ```no_run
-//! use cmoe::model::{ModelWeights, MoeSpec};
-//! use cmoe::converter::{ConvertOptions, convert_model};
-//! use cmoe::profiling::ActivationProfile;
+//! use cmoe::model::ModelWeights;
+//! use cmoe::pipeline::Pipeline;
 //!
 //! let weights = ModelWeights::load("artifacts/small.cmw").unwrap();
-//! let spec: MoeSpec = "S3A3E8".parse().unwrap();
-//! // calibration hidden states are captured via eval::forward or runtime
-//! # let profiles: Vec<ActivationProfile> = vec![];
-//! let result = convert_model(&weights, &profiles, &spec, &ConvertOptions::default()).unwrap();
-//! println!("converted {} layers in {:?}", result.model.layers.len(), result.report.total);
+//! // any registered method: cmoe, moefication, …, or "<base>+cmoe-router"
+//! let run = Pipeline::for_method("cmoe").unwrap()
+//!     .spec("S3A3E8".parse().unwrap())
+//!     .finetune(2048)
+//!     .run(&weights)
+//!     .unwrap();
+//! println!("{}", run.summary());
+//! run.model.save("converted.cmw").unwrap();
 //! ```
 
 pub mod util;
@@ -49,6 +54,7 @@ pub mod model;
 pub mod profiling;
 pub mod converter;
 pub mod baselines;
+pub mod pipeline;
 pub mod moe;
 pub mod runtime;
 pub mod serving;

@@ -1,7 +1,9 @@
 //! `cmoe` — the CLI for the CMoE reproduction.
 //!
 //! ```text
-//! cmoe convert  --model artifacts/small.cmw --spec S3A3E8 --out converted.cmw [--finetune 2048]
+//! cmoe convert  --model artifacts/small.cmw [--method cmoe] --spec S3A3E8 --out converted.cmw
+//!               [--finetune 2048] [--save-stages stages/] [--resume-from stages/profile.json]
+//! cmoe methods  # conversion-method registry (incl. <base>+cmoe-router hybrids)
 //! cmoe profile  --model artifacts/small.cmw [--domain markov] [--ka 10]
 //! cmoe eval     --model <cmw> [--ppl markov,arith]
 //! cmoe serve    --model <cmw> --mode dense|moe|orchestrated [--spec S3A3E8] --requests 32
@@ -11,8 +13,10 @@
 
 use anyhow::{bail, Context, Result};
 use cmoe::bench_harness::{self, common::Ctx};
+use cmoe::data::calibration::{CalibrationSpec, DEFAULT_SEED, DEFAULT_SEQ};
 use cmoe::data::corpus::Domain;
 use cmoe::model::{ModelWeights, MoeSpec};
+use cmoe::pipeline::{registry, Pipeline};
 use cmoe::util::argparse::Args;
 
 fn main() {
@@ -34,15 +38,18 @@ fn artifact_dir(args: &Args) -> String {
 fn run(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("convert") => cmd_convert(args),
+        Some("methods") => cmd_methods(args),
         Some("profile") => cmd_profile(args),
         Some("eval") => cmd_eval(args),
         Some("serve") => cmd_serve(args),
         Some("bench") => cmd_bench(args),
         Some("info") => cmd_info(args),
-        Some(other) => bail!("unknown subcommand '{other}' (try: convert profile eval serve bench info)"),
+        Some(other) => {
+            bail!("unknown subcommand '{other}' (try: convert methods profile eval serve bench info)")
+        }
         None => {
             println!("cmoe {} — analytical FFN-to-MoE restructuring", cmoe::VERSION);
-            println!("subcommands: convert profile eval serve bench info");
+            println!("subcommands: convert methods profile eval serve bench info");
             Ok(())
         }
     }
@@ -54,70 +61,64 @@ fn load_model(args: &Args) -> Result<ModelWeights> {
     ModelWeights::load(path).with_context(|| format!("loading model from {path}"))
 }
 
-fn profiles_for(
-    model: &ModelWeights,
-    domain: Domain,
-    examples: usize,
-    ka: usize,
-) -> Vec<cmoe::profiling::ActivationProfile> {
-    let text = cmoe::data::corpus::gen_corpus(&cmoe::data::corpus::CorpusSpec {
+fn calib_from_args(args: &Args) -> Result<CalibrationSpec> {
+    let domain = Domain::parse(args.get_or("domain", "markov")).context("bad --domain")?;
+    Ok(CalibrationSpec {
         domain,
-        bytes: examples * 256 + 64,
-        seed: 0xC0DE ^ 0xCA11,
-    });
-    let mut toks = cmoe::data::encode(&text);
-    toks.truncate(examples * 256);
-    cmoe::profiling::profile_dense_model(model, &toks, 256, ka)
+        examples: args.get_usize("calib-examples", 8),
+        seq: DEFAULT_SEQ,
+        k_a: args.get_usize("ka", 10),
+        seed: DEFAULT_SEED,
+    })
 }
 
 fn cmd_convert(args: &Args) -> Result<()> {
     let model = load_model(args)?;
-    let spec: MoeSpec = args.get_or("spec", "S3A3E8").parse()?;
-    let domain = Domain::parse(args.get_or("domain", "markov")).context("bad --domain")?;
-    let ka = args.get_usize("ka", 10);
-    let examples = args.get_usize("calib-examples", 8);
+    let method = args.get_or("method", "cmoe");
+    let calib = calib_from_args(args)?;
     let out = args.get_or("out", "converted.cmw");
 
-    println!("profiling {} examples ({:?}, K_a={ka})…", examples, domain);
-    let profiles = profiles_for(&model, domain, examples, ka);
-    println!("converting to {spec}…");
-    let conv = cmoe::converter::convert_model(
-        &model,
-        &profiles,
-        &spec,
-        &cmoe::converter::ConvertOptions::default(),
-    )?;
-    println!(
-        "converted {} layers in {:?} (shared {:?} cluster {:?} router {:?} slice {:?})",
-        conv.report.layers,
-        conv.report.total,
-        conv.report.shared_select,
-        conv.report.clustering,
-        conv.report.router,
-        conv.report.slicing
-    );
-    let mut m = conv.model;
-    let ft = args.get_usize("finetune", 2048);
-    if ft > 0 && !args.has("no-finetune") {
-        println!("fine-tuning gates on {ft} samples…");
-        let text = cmoe::data::corpus::gen_corpus(&cmoe::data::corpus::CorpusSpec {
-            domain,
-            bytes: ft * 2,
-            seed: 0xC0DE ^ 0xCA11,
-        });
-        let toks = cmoe::data::encode(&text);
-        cmoe::bench_harness::common::finetune_model(&mut m, &model, &toks, ft)?;
+    let mut pipe = Pipeline::for_method(method)?.calib(calib);
+    if let Some(s) = args.get("spec") {
+        pipe = pipe.spec(s.parse()?);
     }
-    m.save(out)?;
+    let ft = if args.has("no-finetune") { 0 } else { args.get_usize("finetune", 2048) };
+    pipe = pipe.finetune(ft);
+    if let Some(dir) = args.get("save-stages") {
+        pipe = pipe.save_stages(dir);
+    }
+    if let Some(path) = args.get("resume-from") {
+        pipe = pipe.resume_from(path);
+    }
+
+    println!("converting with method '{method}' to {} …", pipe.current_spec());
+    let run = pipe.run_and_save(&model, out)?;
+    println!("{}", run.summary());
     println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_methods(_args: &Args) -> Result<()> {
+    let mut t = cmoe::util::table::Table::new(
+        "conversion-method registry (cmoe convert --method <name>)",
+        &["Method", "Grouping", "Router", "Default spec"],
+    );
+    for name in registry::names() {
+        let m = registry::get(&name)?;
+        t.row(vec![m.name, m.grouping.to_string(), m.routing.to_string(), m.default_spec.to_string()]);
+    }
+    println!("{}", t.render());
+    println!(
+        "hybrids: <base>{} swaps any baseline's router for CMoE's analytical one (Table 5's \"+ ours\" rows)",
+        registry::CMOE_ROUTER_SUFFIX
+    );
+    println!("stages resume from --save-stages artifacts: profile.json, partition.json, router.cmw");
     Ok(())
 }
 
 fn cmd_profile(args: &Args) -> Result<()> {
     let model = load_model(args)?;
-    let domain = Domain::parse(args.get_or("domain", "markov")).context("bad --domain")?;
-    let ka = args.get_usize("ka", 10);
-    let profiles = profiles_for(&model, domain, args.get_usize("calib-examples", 8), ka);
+    let profiles = calib_from_args(args)?.profiles(&model);
     for (l, p) in profiles.iter().enumerate() {
         println!(
             "layer {l}: q={} K_a={} bimodality={:.3} sparsity(|h|<0.05)={:.3}",
@@ -167,12 +168,8 @@ fn cmd_eval(args: &Args) -> Result<()> {
     }
     for name in args.get_or("ppl", "markov,arith").split(',') {
         let Some(domain) = Domain::parse(name) else { continue };
-        let text = cmoe::data::corpus::gen_corpus(&cmoe::data::corpus::CorpusSpec {
-            domain,
-            bytes: 8 * 1024 + 64,
-            seed: 0xC0DE ^ 0xE7A1,
-        });
-        let toks = cmoe::data::encode(&text);
+        let toks =
+            CalibrationSpec { domain, ..Default::default() }.eval_tokens(8 * 1024);
         println!("PPL {}: {:.3}", name, cmoe::eval::perplexity(&model, &toks, 256));
     }
     Ok(())

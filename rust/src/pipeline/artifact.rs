@@ -1,0 +1,459 @@
+//! Serializable stage artifacts: every pipeline stage boundary can be
+//! written to disk and resumed from, so the expensive profiling pass is
+//! paid once per sweep and a killed conversion restarts mid-way
+//! (`cmoe convert --resume-from <artifact>`).
+//!
+//! Three artifact kinds, reusing the repo's existing codecs:
+//!
+//! | Stage | File | Codec |
+//! |---|---|---|
+//! | profile | `profile.json` | JSON (`kind: "profile"`); ATopK bits as a `'0'`/`'1'` string; includes aux-domain profiles when the method uses them |
+//! | partition | `partition.json` | JSON (`kind: "partition"`) with spec + neuron lists |
+//! | router | `router.cmw` | `.cmw` tensors (router weights, representatives, compensation) with the partition JSON embedded as meta |
+//!
+//! All float payloads round-trip exactly: f32 → JSON f64 → f32 is
+//! lossless, and `.cmw` stores raw little-endian f32.
+
+use crate::converter::{LayerPartition, RouterBuild};
+use crate::model::{read_cmw, write_cmw, MoeSpec, Router, RouterWeights};
+use crate::profiling::ActivationProfile;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A loaded stage artifact, dispatched on by the pipeline's resume
+/// logic. Later stages subsume earlier ones: a router artifact carries
+/// its partition, so resuming from it skips profiling entirely.
+pub enum StageArtifact {
+    /// Primary-domain profiles plus any auxiliary calibration domains'
+    /// profiles (Read-ME), so a profile resume skips ALL profiling.
+    Profiles { layers: Vec<ActivationProfile>, aux: Vec<Vec<ActivationProfile>> },
+    Partition { method: String, layers: Vec<LayerPartition> },
+    Routers { method: String, layers: Vec<LayerPartition>, builds: Vec<RouterBuild> },
+}
+
+/// Load any pipeline artifact, detecting its kind (`.cmw` extension ⇒
+/// router; otherwise the JSON `kind` field).
+pub fn load_stage(path: &Path) -> Result<StageArtifact> {
+    if path.extension().and_then(|e| e.to_str()) == Some("cmw") {
+        let (method, layers, builds) = load_routers(path)?;
+        return Ok(StageArtifact::Routers { method, layers, builds });
+    }
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read artifact {}", path.display()))?;
+    let j = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+    match j.get("kind").as_str() {
+        Some("profile") => {
+            let (layers, aux) = profiles_from_json(&j)?;
+            Ok(StageArtifact::Profiles { layers, aux })
+        }
+        Some("partition") => {
+            let (method, layers) = partition_from_json(&j)?;
+            Ok(StageArtifact::Partition { method, layers })
+        }
+        other => bail!(
+            "{}: not a pipeline artifact (kind = {:?}; expected \"profile\", \"partition\" or a .cmw router)",
+            path.display(),
+            other
+        ),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// profile.json
+// ---------------------------------------------------------------------------
+
+/// Write per-layer activation profiles: the primary calibration
+/// domain's, plus any auxiliary domains' (one list of layers each).
+pub fn save_profiles(
+    path: &Path,
+    profiles: &[ActivationProfile],
+    aux: &[Vec<ActivationProfile>],
+) -> Result<()> {
+    let mut root = Json::obj();
+    root.set("kind", "profile");
+    root.set("layers", Json::Arr(profiles.iter().map(profile_to_json).collect()));
+    root.set(
+        "aux",
+        Json::Arr(
+            aux.iter()
+                .map(|dom| Json::Arr(dom.iter().map(profile_to_json).collect()))
+                .collect(),
+        ),
+    );
+    std::fs::write(path, root.pretty())
+        .with_context(|| format!("write {}", path.display()))?;
+    Ok(())
+}
+
+/// Read profiles back (exact inverse of [`save_profiles`]):
+/// `(primary layers, aux domains)`.
+pub fn load_profiles(path: &Path) -> Result<(Vec<ActivationProfile>, Vec<Vec<ActivationProfile>>)> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read {}", path.display()))?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+    if j.get("kind").as_str() != Some("profile") {
+        bail!("{}: not a profile artifact", path.display());
+    }
+    profiles_from_json(&j)
+}
+
+fn profile_to_json(p: &ActivationProfile) -> Json {
+    let mut o = Json::obj();
+    o.set("d_h", p.d_h).set("q", p.q).set("k_a", p.k_a);
+    let bits: String = p.a.iter().map(|&b| if b != 0 { '1' } else { '0' }).collect();
+    o.set("a", bits);
+    o.set("mean_abs_h", Json::Arr(p.mean_abs_h.iter().map(|&v| Json::from(v)).collect()));
+    o.set("h_sample", Json::Arr(p.h_sample.iter().map(|&v| Json::from(v)).collect()));
+    o
+}
+
+fn profile_from_json(e: &Json, l: usize) -> Result<ActivationProfile> {
+    let d_h = e.get("d_h").as_usize().with_context(|| format!("layer {l}: d_h"))?;
+    let q = e.get("q").as_usize().with_context(|| format!("layer {l}: q"))?;
+    let k_a = e.get("k_a").as_usize().with_context(|| format!("layer {l}: k_a"))?;
+    let bits = e.get("a").as_str().with_context(|| format!("layer {l}: a"))?;
+    if bits.len() != q * d_h {
+        bail!("layer {l}: activation matrix holds {} bits, expected {}", bits.len(), q * d_h);
+    }
+    let a: Vec<u8> = bits
+        .bytes()
+        .map(|c| match c {
+            b'0' => Ok(0u8),
+            b'1' => Ok(1u8),
+            other => Err(anyhow::anyhow!("layer {l}: bad activation bit {:?}", other as char)),
+        })
+        .collect::<Result<_>>()?;
+    let mean_abs_h =
+        f32_arr(e.get("mean_abs_h"), d_h).with_context(|| format!("layer {l}: mean_abs_h"))?;
+    let h_sample = match e.get("h_sample") {
+        Json::Arr(v) => v
+            .iter()
+            .map(|x| x.as_f64().map(|f| f as f32).context("h_sample value"))
+            .collect::<Result<Vec<f32>>>()?,
+        _ => bail!("layer {l}: h_sample"),
+    };
+    Ok(ActivationProfile { d_h, q, k_a, a, mean_abs_h, h_sample })
+}
+
+fn profiles_from_json(j: &Json) -> Result<(Vec<ActivationProfile>, Vec<Vec<ActivationProfile>>)> {
+    let layers = j.get("layers").as_arr().context("profile artifact: layers")?;
+    let primary = layers
+        .iter()
+        .enumerate()
+        .map(|(l, e)| profile_from_json(e, l))
+        .collect::<Result<Vec<_>>>()?;
+    let mut aux = Vec::new();
+    if let Json::Arr(doms) = j.get("aux") {
+        for dom in doms {
+            let dl = dom.as_arr().context("profile artifact: aux domain")?;
+            aux.push(
+                dl.iter()
+                    .enumerate()
+                    .map(|(l, e)| profile_from_json(e, l))
+                    .collect::<Result<Vec<_>>>()?,
+            );
+        }
+    }
+    Ok((primary, aux))
+}
+
+fn f32_arr(j: &Json, expect_len: usize) -> Result<Vec<f32>> {
+    let arr = j.as_arr().context("expected array")?;
+    if arr.len() != expect_len {
+        bail!("array length {} != {expect_len}", arr.len());
+    }
+    arr.iter().map(|v| v.as_f64().map(|f| f as f32).context("non-number")).collect()
+}
+
+// ---------------------------------------------------------------------------
+// partition.json
+// ---------------------------------------------------------------------------
+
+/// Write the per-layer partition of `method`.
+pub fn save_partition(path: &Path, method: &str, parts: &[LayerPartition]) -> Result<()> {
+    std::fs::write(path, partition_to_json(method, parts).pretty())
+        .with_context(|| format!("write {}", path.display()))?;
+    Ok(())
+}
+
+/// Read a partition artifact back.
+pub fn load_partition(path: &Path) -> Result<(String, Vec<LayerPartition>)> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read {}", path.display()))?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+    partition_from_json(&j)
+}
+
+fn partition_to_json(method: &str, parts: &[LayerPartition]) -> Json {
+    let mut layers = Vec::with_capacity(parts.len());
+    for p in parts {
+        let mut o = Json::obj();
+        o.set("spec", p.spec.to_string());
+        o.set("shared", idx_json(&p.shared_neurons));
+        o.set(
+            "experts",
+            Json::Arr(p.expert_neurons.iter().map(|mem| idx_json(mem)).collect()),
+        );
+        match &p.representatives {
+            Some(r) => o.set("representatives", idx_json(r)),
+            None => o.set("representatives", Json::Null),
+        };
+        layers.push(o);
+    }
+    let mut root = Json::obj();
+    root.set("kind", "partition").set("method", method).set("layers", Json::Arr(layers));
+    root
+}
+
+fn partition_from_json(j: &Json) -> Result<(String, Vec<LayerPartition>)> {
+    if j.get("kind").as_str() != Some("partition") {
+        bail!("not a partition artifact");
+    }
+    let method = j.get("method").as_str().context("partition artifact: method")?.to_string();
+    let layers = j.get("layers").as_arr().context("partition artifact: layers")?;
+    let mut out = Vec::with_capacity(layers.len());
+    for (l, e) in layers.iter().enumerate() {
+        let spec: MoeSpec = e
+            .get("spec")
+            .as_str()
+            .with_context(|| format!("layer {l}: spec"))?
+            .parse()?;
+        let shared_neurons = idx_from_json(e.get("shared")).with_context(|| format!("layer {l}: shared"))?;
+        let expert_neurons = e
+            .get("experts")
+            .as_arr()
+            .with_context(|| format!("layer {l}: experts"))?
+            .iter()
+            .map(idx_from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let representatives = match e.get("representatives") {
+            Json::Null => None,
+            other => Some(idx_from_json(other).with_context(|| format!("layer {l}: representatives"))?),
+        };
+        out.push(LayerPartition { spec, shared_neurons, expert_neurons, representatives });
+    }
+    Ok((method, out))
+}
+
+fn idx_json(idx: &[usize]) -> Json {
+    Json::Arr(idx.iter().map(|&i| Json::from(i)).collect())
+}
+
+fn idx_from_json(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()
+        .context("expected index array")?
+        .iter()
+        .map(|v| v.as_usize().context("non-integer index"))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// router.cmw
+// ---------------------------------------------------------------------------
+
+fn idx_tensor(v: &[usize]) -> Tensor {
+    Tensor::from_vec(v.iter().map(|&i| i as f32).collect(), &[v.len()])
+}
+
+fn tensor_idx(t: &Tensor) -> Vec<usize> {
+    t.data.iter().map(|&f| f as usize).collect()
+}
+
+/// Write routers (+ the partition they were built for, as meta) to a
+/// `.cmw` file — the deepest resume point before assembly.
+pub fn save_routers(
+    path: &Path,
+    method: &str,
+    parts: &[LayerPartition],
+    builds: &[RouterBuild],
+) -> Result<()> {
+    assert_eq!(parts.len(), builds.len(), "one router per partitioned layer");
+    let mut tensors: BTreeMap<String, Tensor> = BTreeMap::new();
+    for (l, b) in builds.iter().enumerate() {
+        let p = format!("layers.{l}");
+        match &b.router {
+            Router::Analytical(r) => {
+                tensors.insert(format!("{p}.router.w_gate_r"), r.w_gate_r.clone());
+                tensors.insert(format!("{p}.router.w_up_r"), r.w_up_r.clone());
+            }
+            Router::Linear(w) => {
+                tensors.insert(format!("{p}.router.linear"), w.clone());
+            }
+        }
+        tensors.insert(format!("{p}.representatives"), idx_tensor(&b.representatives));
+        if let Some(comp) = &b.compensation {
+            for (e, c) in comp.iter().enumerate() {
+                tensors.insert(
+                    format!("{p}.compensation.{e}"),
+                    Tensor::from_vec(c.clone(), &[c.len()]),
+                );
+            }
+        }
+    }
+    let mut config = Json::obj();
+    config.set("kind", "router").set("method", method).set("layers", parts.len());
+    let meta = partition_to_json(method, parts);
+    write_cmw(path, &config, &meta, &tensors)
+}
+
+/// Read a router artifact back: (method, partition, router builds).
+pub fn load_routers(path: &Path) -> Result<(String, Vec<LayerPartition>, Vec<RouterBuild>)> {
+    let file = read_cmw(path)?;
+    if file.config.get("kind").as_str() != Some("router") {
+        bail!("{}: not a router artifact", path.display());
+    }
+    let (method, parts) = partition_from_json(&file.meta)
+        .with_context(|| format!("{}: embedded partition", path.display()))?;
+    let t = &file.tensors;
+    let get = |name: &str| -> Result<Tensor> {
+        t.get(name).cloned().ok_or_else(|| anyhow::anyhow!("missing tensor {name}"))
+    };
+    let mut builds = Vec::with_capacity(parts.len());
+    for (l, part) in parts.iter().enumerate() {
+        let p = format!("layers.{l}");
+        let router = if t.contains_key(&format!("{p}.router.linear")) {
+            Router::Linear(get(&format!("{p}.router.linear"))?)
+        } else {
+            Router::Analytical(RouterWeights {
+                w_gate_r: get(&format!("{p}.router.w_gate_r"))?,
+                w_up_r: get(&format!("{p}.router.w_up_r"))?,
+            })
+        };
+        let representatives = tensor_idx(&get(&format!("{p}.representatives"))?);
+        let compensation = if t.contains_key(&format!("{p}.compensation.0")) {
+            Some(
+                (0..part.spec.routed())
+                    .map(|e| get(&format!("{p}.compensation.{e}")).map(|t| t.data))
+                    .collect::<Result<Vec<_>>>()?,
+            )
+        } else {
+            None
+        };
+        builds.push(RouterBuild { router, representatives, compensation });
+    }
+    Ok((method, parts, builds))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("cmoe_pipeline_artifact");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn sample_parts() -> Vec<LayerPartition> {
+        vec![
+            LayerPartition {
+                spec: "S1A2E4".parse().unwrap(),
+                shared_neurons: vec![3, 0],
+                expert_neurons: vec![vec![1, 2], vec![4, 5], vec![6, 7]],
+                representatives: Some(vec![2, 4, 7]),
+            },
+            LayerPartition {
+                spec: "S0A2E4".parse().unwrap(),
+                shared_neurons: vec![],
+                expert_neurons: vec![vec![0, 1], vec![2, 3], vec![4, 5], vec![6, 7]],
+                representatives: None,
+            },
+        ]
+    }
+
+    #[test]
+    fn profile_artifact_roundtrips_exactly() {
+        let mut rng = Rng::new(41);
+        let h = Tensor::randn(&mut rng, &[30, 16], 1.0);
+        let ha = Tensor::randn(&mut rng, &[20, 16], 1.0);
+        let profiles =
+            vec![ActivationProfile::from_hidden(&h, 4), ActivationProfile::from_hidden(&h, 7)];
+        let aux = vec![vec![
+            ActivationProfile::from_hidden(&ha, 4),
+            ActivationProfile::from_hidden(&ha, 7),
+        ]];
+        let path = tmp("p.profile.json");
+        save_profiles(&path, &profiles, &aux).unwrap();
+        let (back, back_aux) = load_profiles(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back_aux.len(), 1);
+        for (a, b) in profiles.iter().zip(&back).chain(aux[0].iter().zip(&back_aux[0])) {
+            assert_eq!(a.d_h, b.d_h);
+            assert_eq!(a.q, b.q);
+            assert_eq!(a.k_a, b.k_a);
+            assert_eq!(a.a, b.a);
+            assert_eq!(a.mean_abs_h, b.mean_abs_h, "f32 roundtrip must be exact");
+            assert_eq!(a.h_sample, b.h_sample);
+        }
+    }
+
+    #[test]
+    fn partition_artifact_roundtrips() {
+        let parts = sample_parts();
+        let path = tmp("p.partition.json");
+        save_partition(&path, "cmoe", &parts).unwrap();
+        let (method, back) = load_partition(&path).unwrap();
+        assert_eq!(method, "cmoe");
+        assert_eq!(back, parts);
+    }
+
+    #[test]
+    fn router_artifact_roundtrips_all_router_kinds() {
+        let mut rng = Rng::new(42);
+        let parts = sample_parts();
+        let builds = vec![
+            RouterBuild {
+                router: Router::Analytical(RouterWeights {
+                    w_gate_r: Tensor::randn(&mut rng, &[4, 3], 1.0),
+                    w_up_r: Tensor::randn(&mut rng, &[4, 3], 1.0),
+                }),
+                representatives: vec![2, 4, 7],
+                compensation: None,
+            },
+            RouterBuild {
+                router: Router::Linear(Tensor::randn(&mut rng, &[4, 4], 1.0)),
+                representatives: vec![],
+                compensation: Some(vec![vec![0.5, -0.25, 0.0, 1.0]; 4]),
+            },
+        ];
+        let path = tmp("p.router.cmw");
+        save_routers(&path, "gmoefication", &parts, &builds).unwrap();
+        let (method, bparts, bbuilds) = load_routers(&path).unwrap();
+        assert_eq!(method, "gmoefication");
+        assert_eq!(bparts, parts);
+        for (a, b) in builds.iter().zip(&bbuilds) {
+            assert_eq!(a.representatives, b.representatives);
+            assert_eq!(a.compensation, b.compensation);
+            match (&a.router, &b.router) {
+                (Router::Analytical(x), Router::Analytical(y)) => {
+                    assert_eq!(x.w_gate_r, y.w_gate_r);
+                    assert_eq!(x.w_up_r, y.w_up_r);
+                }
+                (Router::Linear(x), Router::Linear(y)) => assert_eq!(x, y),
+                _ => panic!("router kind changed in roundtrip"),
+            }
+        }
+    }
+
+    #[test]
+    fn load_stage_dispatches_on_kind() {
+        let parts = sample_parts();
+        let ppath = tmp("s.partition.json");
+        save_partition(&ppath, "emoe", &parts).unwrap();
+        match load_stage(&ppath).unwrap() {
+            StageArtifact::Partition { method, layers } => {
+                assert_eq!(method, "emoe");
+                assert_eq!(layers, parts);
+            }
+            _ => panic!("wrong artifact kind"),
+        }
+        let bad = tmp("s.garbage.json");
+        std::fs::write(&bad, "{\"kind\": \"nope\"}").unwrap();
+        assert!(load_stage(&bad).is_err());
+    }
+}

@@ -1,0 +1,51 @@
+//! The pipeline's optional fine-tune stage: lightweight gate
+//! fine-tuning of every MoE layer against the dense teacher
+//! (§4.3's learnable scaling + load balancing on the paper's 2k-sample
+//! budget). Moved here from the bench harness so the CLI, the
+//! [`super::Pipeline`] and `cmoe bench` all share one implementation.
+
+use crate::eval::forward::DenseForward;
+use crate::model::{LayerFfn, ModelWeights};
+use anyhow::Result;
+
+/// Fine-tune every MoE layer's gates on `samples` token rows drawn from
+/// the calibration stream (the paper's 2k-sample budget analog). FFN
+/// inputs are captured from the *dense* teacher in `seq`-token chunks —
+/// pass the calibration sequence length so attention context matches
+/// profiling.
+pub fn finetune_model(
+    moe_model: &mut ModelWeights,
+    dense_model: &ModelWeights,
+    calib: &[usize],
+    samples: usize,
+    seq: usize,
+) -> Result<()> {
+    let seq = seq.max(2);
+    let fwd = DenseForward::new(dense_model);
+    let take = samples.min(calib.len());
+    let inputs = fwd.capture_ffn_inputs(&calib[..take.min(seq)]);
+    // gather more chunks if needed
+    let mut per_layer: Vec<crate::tensor::Tensor> = inputs;
+    let mut consumed = take.min(seq);
+    while consumed < take {
+        let chunk = &calib[consumed..(consumed + seq).min(take)];
+        if chunk.len() < 2 {
+            break;
+        }
+        let more = fwd.capture_ffn_inputs(chunk);
+        for (acc, m) in per_layer.iter_mut().zip(more) {
+            let mut data = std::mem::take(&mut acc.data);
+            data.extend_from_slice(&m.data);
+            let rows = acc.shape[0] + m.shape[0];
+            *acc = crate::tensor::Tensor::from_vec(data, &[rows, m.shape[1]]);
+        }
+        consumed += seq;
+    }
+    let cfg = crate::moe::FinetuneConfig::default();
+    for (l, layer) in moe_model.layers.iter_mut().enumerate() {
+        if let LayerFfn::Moe(moe) = &mut layer.ffn {
+            crate::moe::finetune_gates(moe, &per_layer[l], &cfg);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,247 @@
+//! The [`Partitioner`] / [`RouterBuilder`] implementations behind the
+//! method registry — each one a thin adapter over the corresponding
+//! math in [`crate::converter`] and [`crate::baselines`], so a method
+//! plugin is ~the size of its options struct.
+
+use crate::baselines;
+use crate::converter::{self, ConvertOptions, LayerPartition, RouterBuild};
+use crate::model::{FfnWeights, MoeSpec, Router};
+use crate::pipeline::{Partitioner, RouterBuilder, StageCtx};
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+fn ensure_no_shared(spec: &MoeSpec, what: &str) -> Result<()> {
+    if spec.shared != 0 {
+        bail!("{what} has no shared experts — use an S0 spec (got {spec})");
+    }
+    Ok(())
+}
+
+fn ensure_divides(d_h: usize, spec: &MoeSpec, what: &str) -> Result<()> {
+    if d_h % spec.total != 0 {
+        bail!("{what}: expert count {} does not divide d_ff {d_h}", spec.total);
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Partitioners
+// ---------------------------------------------------------------------------
+
+/// CMoE (§4): shared-expert selection + balanced activation clustering.
+/// Picks representatives off the clustering state, so its analytical
+/// router needs no further profile access.
+#[derive(Clone, Debug, Default)]
+pub struct CmoePartitioner {
+    pub opts: ConvertOptions,
+}
+
+impl Partitioner for CmoePartitioner {
+    fn needs_profile(&self) -> bool {
+        true
+    }
+    fn provides_representatives(&self) -> bool {
+        true
+    }
+    fn partition(&self, ffn: &FfnWeights, spec: &MoeSpec, ctx: &StageCtx) -> Result<LayerPartition> {
+        let profile = ctx.profile()?;
+        if profile.d_h != ffn.hidden_dim() {
+            bail!("profile d_h {} != ffn d_h {}", profile.d_h, ffn.hidden_dim());
+        }
+        let (part, _timings) = converter::cmoe_layer_partition(profile, spec, &self.opts)?;
+        Ok(part)
+    }
+}
+
+/// MoEfication / G-MoEfication: k-means over gate-weight columns.
+#[derive(Clone, Debug)]
+pub struct WeightKmeansPartitioner {
+    pub iters: usize,
+    pub seed: u64,
+}
+
+impl Partitioner for WeightKmeansPartitioner {
+    fn needs_profile(&self) -> bool {
+        false
+    }
+    fn partition(&self, ffn: &FfnWeights, spec: &MoeSpec, _ctx: &StageCtx) -> Result<LayerPartition> {
+        ensure_no_shared(spec, "moefication")?;
+        ensure_divides(ffn.hidden_dim(), spec, "moefication")?;
+        let expert_neurons =
+            baselines::moefication::weight_kmeans_partition(ffn, spec.total, self.iters, self.seed);
+        Ok(LayerPartition {
+            spec: *spec,
+            shared_neurons: Vec::new(),
+            expert_neurons,
+            representatives: None,
+        })
+    }
+}
+
+/// LLaMA-MoE: uniform random split.
+#[derive(Clone, Debug)]
+pub struct RandomPartitioner {
+    pub seed: u64,
+}
+
+impl Partitioner for RandomPartitioner {
+    fn needs_profile(&self) -> bool {
+        false
+    }
+    fn partition(&self, ffn: &FfnWeights, spec: &MoeSpec, _ctx: &StageCtx) -> Result<LayerPartition> {
+        ensure_no_shared(spec, "llama-moe")?;
+        ensure_divides(ffn.hidden_dim(), spec, "llama-moe")?;
+        let expert_neurons =
+            baselines::llama_moe::random_partition(ffn.hidden_dim(), spec.total, self.seed);
+        Ok(LayerPartition {
+            spec: *spec,
+            shared_neurons: Vec::new(),
+            expert_neurons,
+            representatives: None,
+        })
+    }
+}
+
+/// EMoE: k-means over up-projection key vectors.
+#[derive(Clone, Debug)]
+pub struct KeyKmeansPartitioner {
+    pub iters: usize,
+    pub seed: u64,
+}
+
+impl Partitioner for KeyKmeansPartitioner {
+    fn needs_profile(&self) -> bool {
+        false
+    }
+    fn partition(&self, ffn: &FfnWeights, spec: &MoeSpec, _ctx: &StageCtx) -> Result<LayerPartition> {
+        ensure_no_shared(spec, "emoe")?;
+        ensure_divides(ffn.hidden_dim(), spec, "emoe")?;
+        let expert_neurons =
+            baselines::emoe::key_kmeans_partition(ffn, spec.total, self.iters, self.seed);
+        Ok(LayerPartition {
+            spec: *spec,
+            shared_neurons: Vec::new(),
+            expert_neurons,
+            representatives: None,
+        })
+    }
+}
+
+/// Read-ME: domain-aware grouping over the primary + auxiliary
+/// calibration domains' activation profiles.
+#[derive(Clone, Debug, Default)]
+pub struct DomainPartitioner;
+
+impl Partitioner for DomainPartitioner {
+    fn needs_profile(&self) -> bool {
+        true
+    }
+    fn partition(&self, ffn: &FfnWeights, spec: &MoeSpec, ctx: &StageCtx) -> Result<LayerPartition> {
+        ensure_no_shared(spec, "readme")?;
+        ensure_divides(ffn.hidden_dim(), spec, "readme")?;
+        let primary = ctx.profile()?;
+        if ctx.aux_profiles.is_empty() {
+            bail!("readme needs profiles from at least two calibration domains");
+        }
+        let mut profs: Vec<&crate::profiling::ActivationProfile> = vec![primary];
+        profs.extend(ctx.aux_profiles.iter().copied());
+        let expert_neurons = baselines::readme_like::domain_partition(&profs, spec.total);
+        Ok(LayerPartition {
+            spec: *spec,
+            shared_neurons: Vec::new(),
+            expert_neurons,
+            representatives: None,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Router builders
+// ---------------------------------------------------------------------------
+
+/// CMoE's analytical representative-neuron router (Eq. 25/8). Reuses
+/// the partitioner's representatives when present; otherwise runs the
+/// shared Eq. 25 search — which is exactly what the Table 5
+/// `<base>+cmoe-router` hybrids do. `compensation` keeps
+/// G-MoEfication's mean-output repair when hybridizing it.
+#[derive(Clone, Debug)]
+pub struct AnalyticalRouterBuilder {
+    pub compensation: bool,
+}
+
+impl RouterBuilder for AnalyticalRouterBuilder {
+    fn wants_profile(&self) -> bool {
+        true
+    }
+    fn build(&self, ffn: &FfnWeights, part: &LayerPartition, ctx: &StageCtx) -> Result<RouterBuild> {
+        let representatives = match &part.representatives {
+            Some(r) => r.clone(),
+            None => converter::representative_neurons(ctx.profile()?, &part.expert_neurons),
+        };
+        let compensation = if self.compensation {
+            let x = ctx.calib_inputs()?;
+            Some(baselines::gmoefication::partition_mean_outputs(ffn, &part.expert_neurons, x))
+        } else {
+            None
+        };
+        Ok(RouterBuild {
+            router: converter::analytical_router(ffn, &representatives),
+            representatives,
+            compensation,
+        })
+    }
+}
+
+/// The baselines' trained linear scorer (MoEfication / LLaMA-MoE /
+/// EMoE); with `compensation` it is G-MoEfication's router stage.
+#[derive(Clone, Debug)]
+pub struct TrainedLinearRouterBuilder {
+    pub cfg: baselines::router_train::RouterTrainConfig,
+    pub compensation: bool,
+}
+
+impl RouterBuilder for TrainedLinearRouterBuilder {
+    fn build(&self, ffn: &FfnWeights, part: &LayerPartition, ctx: &StageCtx) -> Result<RouterBuild> {
+        let x = ctx.calib_inputs()?;
+        let w = baselines::train_linear_router(ffn, &part.expert_neurons, x, &self.cfg);
+        let compensation = if self.compensation {
+            Some(baselines::gmoefication::partition_mean_outputs(ffn, &part.expert_neurons, x))
+        } else {
+            None
+        };
+        Ok(RouterBuild { router: Router::Linear(w), representatives: Vec::new(), compensation })
+    }
+}
+
+/// Read-ME's global (sequence-level) router: expert columns are domain
+/// prototypes — the calibration-mean FFN input for the primary domain
+/// and its negation for the auxiliary one, cycling over experts, as in
+/// the Table 5 ablation.
+#[derive(Clone, Debug, Default)]
+pub struct GlobalPrototypeRouterBuilder;
+
+impl RouterBuilder for GlobalPrototypeRouterBuilder {
+    fn build(&self, _ffn: &FfnWeights, part: &LayerPartition, ctx: &StageCtx) -> Result<RouterBuild> {
+        let x = ctx.calib_inputs()?;
+        let (q, d) = (x.shape[0], x.shape[1]);
+        let mut mean = vec![0.0f32; d];
+        for r in 0..q {
+            for (m, v) in mean.iter_mut().zip(x.row(r)) {
+                *m += v;
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= q as f32;
+        }
+        let n_r = part.expert_neurons.len();
+        let mut w = Tensor::zeros(&[d, n_r]);
+        for e in 0..n_r {
+            // prototypes cycle: domain 0 = mean, domain 1 = -mean
+            let sign = if e % 2 == 0 { 1.0f32 } else { -1.0 };
+            for r in 0..d {
+                *w.at2_mut(r, e) = sign * mean[r];
+            }
+        }
+        Ok(RouterBuild { router: Router::Linear(w), representatives: Vec::new(), compensation: None })
+    }
+}

@@ -1,0 +1,689 @@
+//! The staged, resumable conversion pipeline — ONE API over CMoE and
+//! every baseline (§4's observation that dense→MoE restructuring is a
+//! pipeline, made first-class):
+//!
+//! ```text
+//!   profile ──> partition ──> router ──> assemble ──> finetune ──> save
+//!      │            │            │
+//!      ▼            ▼            ▼
+//!  profile.json  partition.json  router.cmw        (stage artifacts)
+//! ```
+//!
+//! * **profile** — per-layer [`ActivationProfile`]s on the calibration
+//!   stream ([`CalibrationSpec`]); skipped when the method needs none.
+//! * **partition** — a [`Partitioner`] turns profile + weights into a
+//!   [`LayerPartition`] (expert neuron membership) per layer.
+//! * **router** — a [`RouterBuilder`] turns a partition into a
+//!   [`RouterBuild`] (router weights + representatives + compensation).
+//! * **assemble** — [`crate::converter::assemble_moe_layer`] slices the
+//!   original weights; the only constructor of MoE layers.
+//! * **finetune** — optional gate fine-tuning against the dense teacher.
+//!
+//! Every stage boundary serializes through [`artifact`] (`cmoe convert
+//! --save-stages <dir>`), and [`Pipeline::resume_from`] restarts from
+//! any of the three files — so one expensive profiling pass is shared
+//! by a whole method sweep, and a killed conversion resumes mid-way.
+//!
+//! Methods are named entries in [`registry`] (`cmoe`, `moefication`,
+//! `gmoefication`, `llama-moe`, `emoe`, `readme`, plus the Table 5
+//! hybrids `<base>+cmoe-router`). The `cmoe` entry composes the exact
+//! functions [`crate::converter::convert_ffn_timed`] runs, so the
+//! pipeline's output is bit-identical to the classic
+//! `converter::convert_model` path — pinned by the golden test in
+//! `tests/pipeline_golden.rs` and `scripts/check.sh`.
+
+pub mod artifact;
+mod finetune;
+pub mod methods;
+pub mod registry;
+
+pub use crate::converter::{LayerPartition, RouterBuild};
+pub use finetune::finetune_model;
+pub use registry::Method;
+
+use crate::converter;
+use crate::data::calibration::CalibrationSpec;
+use crate::data::corpus::Domain;
+use crate::eval::forward::DenseForward;
+use crate::model::{FfnWeights, LayerFfn, ModelWeights, MoeSpec};
+use crate::profiling::ActivationProfile;
+use crate::tensor::Tensor;
+use crate::util::timer::fmt_duration;
+use crate::util::Timer;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+/// Per-layer inputs a stage implementation may draw on. Fields are
+/// optional because the pipeline only computes what the method's flags
+/// request; the accessors turn a missing input into a clear error.
+pub struct StageCtx<'a> {
+    pub layer: usize,
+    /// Primary-domain activation profile of this layer.
+    pub profile: Option<&'a ActivationProfile>,
+    /// Profiles of auxiliary calibration domains (Read-ME), same layer.
+    pub aux_profiles: Vec<&'a ActivationProfile>,
+    /// Captured FFN inputs `x: [q, d]` of this layer on the calibration
+    /// prefix (router training, compensation, global prototypes).
+    pub calib_inputs: Option<&'a Tensor>,
+}
+
+impl<'a> StageCtx<'a> {
+    /// The activation profile, or a descriptive error.
+    pub fn profile(&self) -> Result<&'a ActivationProfile> {
+        self.profile.with_context(|| {
+            format!("layer {}: stage needs an activation profile but the profile stage was skipped", self.layer)
+        })
+    }
+
+    /// Captured calibration inputs, or a descriptive error.
+    pub fn calib_inputs(&self) -> Result<&'a Tensor> {
+        self.calib_inputs.with_context(|| {
+            format!("layer {}: stage needs captured calibration FFN inputs", self.layer)
+        })
+    }
+}
+
+/// Expert-membership stage: profile + weights → [`LayerPartition`].
+pub trait Partitioner {
+    /// Whether partitioning reads activation profiles (drives the
+    /// pipeline's decision to run the profile stage).
+    fn needs_profile(&self) -> bool;
+    /// Whether the produced partitions carry representatives (CMoE
+    /// does), letting an analytical router skip profiling entirely.
+    fn provides_representatives(&self) -> bool {
+        false
+    }
+    fn partition(&self, ffn: &FfnWeights, spec: &MoeSpec, ctx: &StageCtx) -> Result<LayerPartition>;
+}
+
+/// Router stage: partition → [`RouterBuild`].
+pub trait RouterBuilder {
+    /// Whether the builder may need profiles (only when the partition
+    /// lacks precomputed representatives).
+    fn wants_profile(&self) -> bool {
+        false
+    }
+    fn build(&self, ffn: &FfnWeights, part: &LayerPartition, ctx: &StageCtx) -> Result<RouterBuild>;
+}
+
+/// Pipeline stage identifiers, in execution order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    Profile,
+    Partition,
+    Router,
+    Assemble,
+    Finetune,
+    Save,
+}
+
+impl Stage {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::Profile => "profile",
+            Stage::Partition => "partition",
+            Stage::Router => "router",
+            Stage::Assemble => "assemble",
+            Stage::Finetune => "finetune",
+            Stage::Save => "save",
+        }
+    }
+}
+
+/// What one stage did in a [`Pipeline::run`].
+#[derive(Clone, Debug)]
+pub struct StageRecord {
+    pub stage: Stage,
+    pub duration: Duration,
+    /// Stage artifact written (fresh runs with `--save-stages`) or
+    /// loaded (resumed stages).
+    pub artifact: Option<PathBuf>,
+    pub resumed: bool,
+}
+
+impl StageRecord {
+    fn resumed(stage: Stage, path: &Path) -> StageRecord {
+        StageRecord {
+            stage,
+            duration: Duration::ZERO,
+            artifact: Some(path.to_path_buf()),
+            resumed: true,
+        }
+    }
+}
+
+/// Output of a pipeline run: the converted model plus the stage log.
+pub struct PipelineRun {
+    pub model: ModelWeights,
+    pub stages: Vec<StageRecord>,
+}
+
+impl PipelineRun {
+    /// Record of `stage`, if it executed or was resumed.
+    pub fn stage(&self, stage: Stage) -> Option<&StageRecord> {
+        self.stages.iter().find(|r| r.stage == stage)
+    }
+
+    /// Human-readable per-stage summary (printed by `cmoe convert`).
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        for r in &self.stages {
+            let line = if r.resumed {
+                format!(
+                    "  {:<9} resumed from {}",
+                    r.stage.name(),
+                    r.artifact.as_ref().map(|p| p.display().to_string()).unwrap_or_default()
+                )
+            } else {
+                let art = r
+                    .artifact
+                    .as_ref()
+                    .map(|p| format!("  -> {}", p.display()))
+                    .unwrap_or_default();
+                format!("  {:<9} {}{}", r.stage.name(), fmt_duration(r.duration), art)
+            };
+            s.push_str(&line);
+            s.push('\n');
+        }
+        s.trim_end().to_string()
+    }
+}
+
+/// The staged conversion driver. Build one with [`Pipeline::for_method`]
+/// (registry lookup) or [`Pipeline::from_method`], chain the setters,
+/// then [`run`](Pipeline::run) it over a dense checkpoint.
+pub struct Pipeline {
+    method: Method,
+    spec: MoeSpec,
+    calib: CalibrationSpec,
+    finetune_samples: usize,
+    stage_dir: Option<PathBuf>,
+    resume_from: Option<PathBuf>,
+    profiles_override: Option<Vec<ActivationProfile>>,
+    aux_profiles_override: Option<Vec<Vec<ActivationProfile>>>,
+}
+
+impl Pipeline {
+    /// Pipeline for a registered method name (see [`registry::names`]).
+    pub fn for_method(name: &str) -> Result<Pipeline> {
+        Ok(Pipeline::from_method(registry::get(name)?))
+    }
+
+    /// Pipeline for an explicit (possibly custom) method.
+    pub fn from_method(method: Method) -> Pipeline {
+        let spec = method.default_spec;
+        Pipeline {
+            method,
+            spec,
+            calib: CalibrationSpec::default(),
+            finetune_samples: 0,
+            stage_dir: None,
+            resume_from: None,
+            profiles_override: None,
+            aux_profiles_override: None,
+        }
+    }
+
+    /// Override the expert layout (defaults to the method's).
+    pub fn spec(mut self, spec: MoeSpec) -> Pipeline {
+        self.spec = spec;
+        self
+    }
+
+    /// Calibration setup for profiling / router training / fine-tuning.
+    pub fn calib(mut self, calib: CalibrationSpec) -> Pipeline {
+        self.calib = calib;
+        self
+    }
+
+    /// Enable the fine-tune stage on `samples` calibration rows
+    /// (0 = training-free).
+    pub fn finetune(mut self, samples: usize) -> Pipeline {
+        self.finetune_samples = samples;
+        self
+    }
+
+    /// Write stage artifacts (`profile.json`, `partition.json`,
+    /// `router.cmw`) into `dir` as stages complete.
+    pub fn save_stages(mut self, dir: impl Into<PathBuf>) -> Pipeline {
+        self.stage_dir = Some(dir.into());
+        self
+    }
+
+    /// Resume from a previously saved stage artifact; everything up to
+    /// and including that stage is loaded instead of recomputed.
+    pub fn resume_from(mut self, path: impl Into<PathBuf>) -> Pipeline {
+        self.resume_from = Some(path.into());
+        self
+    }
+
+    /// Inject precomputed profiles (the bench harness shares one
+    /// profiling pass across a whole method sweep this way).
+    pub fn with_profiles(mut self, profiles: Vec<ActivationProfile>) -> Pipeline {
+        self.profiles_override = Some(profiles);
+        self
+    }
+
+    /// Inject precomputed auxiliary-domain profiles (one `Vec` of
+    /// layers per extra calibration domain, for domain-aware methods).
+    pub fn with_aux_profiles(mut self, aux: Vec<Vec<ActivationProfile>>) -> Pipeline {
+        self.aux_profiles_override = Some(aux);
+        self
+    }
+
+    pub fn method_name(&self) -> &str {
+        &self.method.name
+    }
+
+    pub fn current_spec(&self) -> MoeSpec {
+        self.spec
+    }
+
+    fn stage_path(&self, file: &str) -> Result<Option<PathBuf>> {
+        let Some(dir) = &self.stage_dir else { return Ok(None) };
+        std::fs::create_dir_all(dir).with_context(|| format!("create {}", dir.display()))?;
+        Ok(Some(dir.join(file)))
+    }
+
+    /// Partitions are shareable within a base method family only
+    /// (`moefication` ↔ `moefication+cmoe-router`, …).
+    fn check_artifact_method(&self, artifact_method: &str) -> Result<()> {
+        if registry::base_name(artifact_method) != registry::base_name(&self.method.name) {
+            bail!(
+                "artifact was produced by method '{artifact_method}' but this pipeline runs '{}' \
+                 — stage artifacts are only shared within a base method family",
+                self.method.name
+            );
+        }
+        Ok(())
+    }
+
+    /// A resumed artifact's expert layout must match the requested spec
+    /// — otherwise the run would silently ship a different activation
+    /// ratio than the caller asked (and the CLI printed).
+    fn check_artifact_spec(&self, layers: &[LayerPartition]) -> Result<()> {
+        for (l, p) in layers.iter().enumerate() {
+            if p.spec != self.spec {
+                bail!(
+                    "layer {l} of the artifact was partitioned as {} but the pipeline requests {} \
+                     — pass --spec {} to resume this artifact",
+                    p.spec,
+                    self.spec,
+                    p.spec
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Auxiliary calibration domains for domain-aware methods: the
+    /// "other" synthetic domain at the same calibration settings.
+    fn aux_specs(&self) -> Vec<CalibrationSpec> {
+        let other = match self.calib.domain {
+            Domain::Markov => Domain::Arith,
+            Domain::Arith => Domain::Markov,
+        };
+        vec![self.calib.with_domain(other)]
+    }
+
+    /// Run the staged conversion over a dense checkpoint.
+    pub fn run(&self, model: &ModelWeights) -> Result<PipelineRun> {
+        let n_layers = model.config.n_layers;
+        for (l, layer) in model.layers.iter().enumerate() {
+            if !matches!(layer.ffn, LayerFfn::Dense(_)) {
+                bail!(
+                    "layer {l} is already MoE — the pipeline restructures dense checkpoints \
+                     (use converter::hierarchical_convert for MoE layers)"
+                );
+            }
+        }
+        let mut stages: Vec<StageRecord> = Vec::new();
+        let mut profiles: Option<Vec<ActivationProfile>> = self.profiles_override.clone();
+        let mut aux: Option<Vec<Vec<ActivationProfile>>> = self.aux_profiles_override.clone();
+        let mut parts_res: Option<Vec<LayerPartition>> = None;
+        let mut builds_res: Option<Vec<RouterBuild>> = None;
+
+        // ---- resume ------------------------------------------------------
+        if let Some(path) = &self.resume_from {
+            let art = artifact::load_stage(path)
+                .with_context(|| format!("resume from {}", path.display()))?;
+            match art {
+                artifact::StageArtifact::Profiles { layers, aux: a } => {
+                    if layers.len() != n_layers {
+                        bail!(
+                            "profile artifact holds {} layers, model has {n_layers}",
+                            layers.len()
+                        );
+                    }
+                    for dom in &a {
+                        if dom.len() != n_layers {
+                            bail!(
+                                "profile artifact aux domain holds {} layers, model has {n_layers}",
+                                dom.len()
+                            );
+                        }
+                    }
+                    stages.push(StageRecord::resumed(Stage::Profile, path));
+                    profiles = Some(layers);
+                    if !a.is_empty() {
+                        aux = Some(a);
+                    }
+                }
+                artifact::StageArtifact::Partition { method, layers } => {
+                    self.check_artifact_method(&method)?;
+                    if layers.len() != n_layers {
+                        bail!("partition artifact holds {} layers, model has {n_layers}", layers.len());
+                    }
+                    self.check_artifact_spec(&layers)?;
+                    stages.push(StageRecord::resumed(Stage::Partition, path));
+                    parts_res = Some(layers);
+                }
+                artifact::StageArtifact::Routers { method, layers, builds } => {
+                    // Routers are method-specific: a hybrid must not ship
+                    // its base method's trained router (or vice versa), so
+                    // unlike partitions this demands an exact name match.
+                    if method != self.method.name {
+                        bail!(
+                            "router artifact was produced by method '{method}' but this pipeline \
+                             runs '{}' — routers are method-specific; resume from the \
+                             partition.json instead",
+                            self.method.name
+                        );
+                    }
+                    if layers.len() != n_layers {
+                        bail!("router artifact holds {} layers, model has {n_layers}", layers.len());
+                    }
+                    self.check_artifact_spec(&layers)?;
+                    stages.push(StageRecord::resumed(Stage::Partition, path));
+                    stages.push(StageRecord::resumed(Stage::Router, path));
+                    parts_res = Some(layers);
+                    builds_res = Some(builds);
+                }
+            }
+        }
+
+        let need_partition = parts_res.is_none();
+        let need_router = builds_res.is_none();
+
+        // ---- stage: profile ---------------------------------------------
+        // Run only when some downstream stage actually reads profiles —
+        // an analytical router whose partition already carries
+        // representatives does not re-profile.
+        let partition_wants_profile = need_partition && self.method.partitioner.needs_profile();
+        let router_wants_profile = need_router
+            && self.method.router.wants_profile()
+            && !match &parts_res {
+                Some(ps) => ps.iter().all(|p| p.representatives.is_some()),
+                None => self.method.partitioner.provides_representatives(),
+            };
+        let need_primary = profiles.is_none() && (partition_wants_profile || router_wants_profile);
+        let need_aux =
+            aux.is_none() && need_partition && self.method.needs_aux_domain;
+        if need_primary || need_aux {
+            let mut timer = Timer::start();
+            if need_primary {
+                profiles = Some(self.calib.profiles(model));
+            }
+            if need_aux {
+                aux = Some(self.aux_specs().iter().map(|c| c.profiles(model)).collect());
+            }
+            let art = match self.stage_path("profile.json")? {
+                Some(path) => {
+                    artifact::save_profiles(
+                        &path,
+                        profiles.as_deref().unwrap_or(&[]),
+                        aux.as_deref().unwrap_or(&[]),
+                    )?;
+                    Some(path)
+                }
+                None => None,
+            };
+            stages.push(StageRecord {
+                stage: Stage::Profile,
+                duration: timer.lap(),
+                artifact: art,
+                resumed: false,
+            });
+        }
+
+        // ---- stage: partition -------------------------------------------
+        let parts: Vec<LayerPartition> = match parts_res {
+            Some(p) => p,
+            None => {
+                let mut timer = Timer::start();
+                let aux_ref: &[Vec<ActivationProfile>] = aux.as_deref().unwrap_or(&[]);
+                let mut v = Vec::with_capacity(n_layers);
+                for l in 0..n_layers {
+                    let ctx = StageCtx {
+                        layer: l,
+                        profile: profiles.as_ref().map(|ps| &ps[l]),
+                        aux_profiles: aux_ref.iter().map(|dom| &dom[l]).collect(),
+                        calib_inputs: None,
+                    };
+                    let part = self
+                        .method
+                        .partitioner
+                        .partition(model.dense_ffn(l), &self.spec, &ctx)
+                        .with_context(|| {
+                            format!("method '{}': partition layer {l}", self.method.name)
+                        })?;
+                    v.push(part);
+                }
+                let art = match self.stage_path("partition.json")? {
+                    Some(path) => {
+                        artifact::save_partition(&path, &self.method.name, &v)?;
+                        Some(path)
+                    }
+                    None => None,
+                };
+                stages.push(StageRecord {
+                    stage: Stage::Partition,
+                    duration: timer.lap(),
+                    artifact: art,
+                    resumed: false,
+                });
+                v
+            }
+        };
+
+        // ---- stage: router ----------------------------------------------
+        let builds: Vec<RouterBuild> = match builds_res {
+            Some(b) => b,
+            None => {
+                let mut timer = Timer::start();
+                let calib_inputs: Option<Vec<Tensor>> = if self.method.needs_calib_inputs {
+                    let toks = self.calib.calib_tokens();
+                    let take = self.calib.seq.min(toks.len());
+                    Some(DenseForward::new(model).capture_ffn_inputs(&toks[..take]))
+                } else {
+                    None
+                };
+                let mut v = Vec::with_capacity(n_layers);
+                for l in 0..n_layers {
+                    let ctx = StageCtx {
+                        layer: l,
+                        profile: profiles.as_ref().map(|ps| &ps[l]),
+                        aux_profiles: Vec::new(),
+                        calib_inputs: calib_inputs.as_ref().map(|c| &c[l]),
+                    };
+                    let b = self
+                        .method
+                        .router
+                        .build(model.dense_ffn(l), &parts[l], &ctx)
+                        .with_context(|| {
+                            format!("method '{}': router layer {l}", self.method.name)
+                        })?;
+                    v.push(b);
+                }
+                let art = match self.stage_path("router.cmw")? {
+                    Some(path) => {
+                        artifact::save_routers(&path, &self.method.name, &parts, &v)?;
+                        Some(path)
+                    }
+                    None => None,
+                };
+                stages.push(StageRecord {
+                    stage: Stage::Router,
+                    duration: timer.lap(),
+                    artifact: art,
+                    resumed: false,
+                });
+                v
+            }
+        };
+
+        // ---- stage: assemble --------------------------------------------
+        let mut timer = Timer::start();
+        let mut out = model.clone();
+        for (l, build) in builds.into_iter().enumerate() {
+            let ffn = model.dense_ffn(l);
+            parts[l].validate(ffn.hidden_dim()).with_context(|| {
+                format!("method '{}': invalid partition for layer {l}", self.method.name)
+            })?;
+            out.layers[l].ffn = LayerFfn::Moe(converter::assemble_moe_layer(ffn, &parts[l], build));
+        }
+        stages.push(StageRecord {
+            stage: Stage::Assemble,
+            duration: timer.lap(),
+            artifact: None,
+            resumed: false,
+        });
+
+        // ---- stage: finetune --------------------------------------------
+        if self.finetune_samples > 0 {
+            let mut timer = Timer::start();
+            let tokens = self
+                .calib
+                .tokens_of(self.finetune_samples.max(self.calib.examples * self.calib.seq));
+            finetune::finetune_model(&mut out, model, &tokens, self.finetune_samples, self.calib.seq)?;
+            stages.push(StageRecord {
+                stage: Stage::Finetune,
+                duration: timer.lap(),
+                artifact: None,
+                resumed: false,
+            });
+        }
+
+        Ok(PipelineRun { model: out, stages })
+    }
+
+    /// [`run`](Pipeline::run) plus the save stage: persist the converted
+    /// model to `out_path`.
+    pub fn run_and_save(&self, model: &ModelWeights, out_path: impl AsRef<Path>) -> Result<PipelineRun> {
+        let mut run = self.run(model)?;
+        let mut timer = Timer::start();
+        run.model.save(out_path.as_ref())?;
+        run.stages.push(StageRecord {
+            stage: Stage::Save,
+            duration: timer.lap(),
+            artifact: Some(out_path.as_ref().to_path_buf()),
+            resumed: false,
+        });
+        Ok(run)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn tiny_model() -> ModelWeights {
+        let cfg = crate::model::model_config("tiny").unwrap();
+        let mut rng = Rng::new(77);
+        ModelWeights::random(&cfg, &mut rng)
+    }
+
+    fn fast_calib() -> CalibrationSpec {
+        CalibrationSpec { examples: 1, seq: 48, k_a: 8, ..Default::default() }
+    }
+
+    #[test]
+    fn cmoe_pipeline_converts_every_layer() {
+        let model = tiny_model();
+        let run = Pipeline::for_method("cmoe")
+            .unwrap()
+            .spec("S2A2E8".parse().unwrap())
+            .calib(fast_calib())
+            .run(&model)
+            .unwrap();
+        assert!(run.model.layers.iter().all(|l| matches!(l.ffn, LayerFfn::Moe(_))));
+        // profile, partition, router, assemble — no finetune requested
+        assert!(run.stage(Stage::Profile).is_some());
+        assert!(run.stage(Stage::Partition).is_some());
+        assert!(run.stage(Stage::Router).is_some());
+        assert!(run.stage(Stage::Assemble).is_some());
+        assert!(run.stage(Stage::Finetune).is_none());
+    }
+
+    #[test]
+    fn profiles_override_skips_profiling_stage() {
+        let model = tiny_model();
+        let profiles = fast_calib().profiles(&model);
+        let run = Pipeline::for_method("cmoe")
+            .unwrap()
+            .spec("S2A2E8".parse().unwrap())
+            .calib(fast_calib())
+            .with_profiles(profiles)
+            .run(&model)
+            .unwrap();
+        assert!(run.stage(Stage::Profile).is_none(), "override must skip the profile stage");
+    }
+
+    #[test]
+    fn methods_that_need_no_profile_never_profile() {
+        let model = tiny_model();
+        let run = Pipeline::for_method("llama-moe")
+            .unwrap()
+            .calib(fast_calib())
+            .run(&model)
+            .unwrap();
+        assert!(run.stage(Stage::Profile).is_none(), "random split must not pay for profiling");
+    }
+
+    #[test]
+    fn finetune_stage_moves_gate_scales() {
+        let model = tiny_model();
+        let run = Pipeline::for_method("cmoe")
+            .unwrap()
+            .spec("S2A2E8".parse().unwrap())
+            .calib(fast_calib())
+            .finetune(64)
+            .run(&model)
+            .unwrap();
+        assert!(run.stage(Stage::Finetune).is_some());
+        let moved = run.model.layers.iter().any(|l| match &l.ffn {
+            LayerFfn::Moe(m) => m.gate_scale.iter().any(|&u| u != 0.0),
+            _ => false,
+        });
+        assert!(moved, "fine-tuning was a no-op");
+    }
+
+    #[test]
+    fn converting_a_converted_model_fails() {
+        let model = tiny_model();
+        let pipe = Pipeline::for_method("cmoe").unwrap().spec("S2A2E8".parse().unwrap()).calib(fast_calib());
+        let run = pipe.run(&model).unwrap();
+        assert!(pipe.run(&run.model).is_err());
+    }
+
+    #[test]
+    fn mismatched_resume_method_rejected() {
+        let model = tiny_model();
+        let dir = std::env::temp_dir().join("cmoe_pipeline_mismatch");
+        let run = Pipeline::for_method("llama-moe")
+            .unwrap()
+            .calib(fast_calib())
+            .save_stages(&dir)
+            .run(&model)
+            .unwrap();
+        let art = run.stage(Stage::Partition).unwrap().artifact.clone().unwrap();
+        let err = Pipeline::for_method("emoe")
+            .unwrap()
+            .calib(fast_calib())
+            .resume_from(&art)
+            .run(&model);
+        assert!(err.is_err(), "partition artifacts must not cross method families");
+    }
+}

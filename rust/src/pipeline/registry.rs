@@ -1,0 +1,203 @@
+//! The method registry: every dense→MoE conversion method the repo
+//! implements, addressable by name (`cmoe convert --method <name>`,
+//! `cmoe methods`), plus the Table 5 hybrids `<base>+cmoe-router`
+//! (any baseline's partition driven by CMoE's analytical router).
+//!
+//! A method is a [`Partitioner`] + [`RouterBuilder`] pair with the
+//! flags the [`super::Pipeline`] needs to plan its stages. Adding a
+//! method is: implement the two traits (usually thin adapters, see
+//! [`super::methods`]), add a `Method` row here — the CLI listing,
+//! the bench-harness sweeps and the registry parity test suite pick it
+//! up automatically.
+
+use crate::baselines::router_train::RouterTrainConfig;
+use crate::model::MoeSpec;
+use crate::pipeline::methods::{
+    AnalyticalRouterBuilder, CmoePartitioner, DomainPartitioner, GlobalPrototypeRouterBuilder,
+    KeyKmeansPartitioner, RandomPartitioner, TrainedLinearRouterBuilder,
+    WeightKmeansPartitioner,
+};
+use crate::pipeline::{Partitioner, RouterBuilder};
+use anyhow::{bail, Result};
+
+/// Suffix that swaps any base method's router for CMoE's analytical
+/// one (the Table 5 "+ ours" rows).
+pub const CMOE_ROUTER_SUFFIX: &str = "+cmoe-router";
+
+/// Base method names, in paper order.
+pub const BASE_METHODS: &[&str] =
+    &["cmoe", "moefication", "gmoefication", "llama-moe", "emoe", "readme"];
+
+/// A registered conversion method: the two stage implementations plus
+/// what the pipeline must prepare for them.
+pub struct Method {
+    pub name: String,
+    /// Human description of the expert grouping (for `cmoe methods`).
+    pub grouping: &'static str,
+    /// Human description of the router.
+    pub routing: &'static str,
+    /// Spec used when the caller doesn't pass `--spec`. Baselines
+    /// default to 6-of-8 active (S0A6E8) to match CMoE's 25% sparsity
+    /// FLOP budget (Table 1).
+    pub default_spec: MoeSpec,
+    /// Router stage needs captured FFN inputs (router training /
+    /// compensation / global prototypes).
+    pub needs_calib_inputs: bool,
+    /// Partition stage needs profiles of a second calibration domain.
+    pub needs_aux_domain: bool,
+    pub partitioner: Box<dyn Partitioner>,
+    pub router: Box<dyn RouterBuilder>,
+}
+
+/// Strip the hybrid suffix: the partition-producing base method name.
+pub fn base_name(name: &str) -> &str {
+    name.strip_suffix(CMOE_ROUTER_SUFFIX).unwrap_or(name)
+}
+
+/// All registered method names: bases first, then hybrids.
+pub fn names() -> Vec<String> {
+    let mut v: Vec<String> = BASE_METHODS.iter().map(|s| s.to_string()).collect();
+    for b in BASE_METHODS {
+        if *b != "cmoe" {
+            v.push(format!("{b}{CMOE_ROUTER_SUFFIX}"));
+        }
+    }
+    v
+}
+
+fn baseline_spec() -> MoeSpec {
+    MoeSpec::new(0, 6, 8).expect("S0A6E8 is valid")
+}
+
+/// Look up a method by name. Unknown names error with the available
+/// set; `<base>+cmoe-router` resolves the base and swaps its router.
+pub fn get(name: &str) -> Result<Method> {
+    if let Some(base) = name.strip_suffix(CMOE_ROUTER_SUFFIX) {
+        if base == "cmoe" {
+            bail!("'cmoe' already uses the analytical router; drop the {CMOE_ROUTER_SUFFIX} suffix");
+        }
+        let mut m = get(base)?;
+        // keep G-MoEfication's compensation when only the router is swapped
+        let keep_compensation = base == "gmoefication";
+        m.router = Box::new(AnalyticalRouterBuilder { compensation: keep_compensation });
+        m.routing = "Analytical (Eq. 25/8)";
+        m.needs_calib_inputs = keep_compensation;
+        m.name = format!("{base}{CMOE_ROUTER_SUFFIX}");
+        return Ok(m);
+    }
+    let m = match name {
+        "cmoe" => Method {
+            name: "cmoe".into(),
+            grouping: "Activation-pattern balanced k-means + shared experts (§4)",
+            routing: "Analytical representative neurons (Eq. 8)",
+            default_spec: MoeSpec::new(3, 3, 8).expect("S3A3E8 is valid"),
+            needs_calib_inputs: false,
+            needs_aux_domain: false,
+            partitioner: Box::new(CmoePartitioner::default()),
+            router: Box::new(AnalyticalRouterBuilder { compensation: false }),
+        },
+        "moefication" => Method {
+            name: "moefication".into(),
+            grouping: "K-means on gate-weight columns",
+            routing: "Trained linear",
+            default_spec: baseline_spec(),
+            needs_calib_inputs: true,
+            needs_aux_domain: false,
+            partitioner: Box::new(WeightKmeansPartitioner { iters: 30, seed: 0x30EF }),
+            router: Box::new(TrainedLinearRouterBuilder {
+                cfg: RouterTrainConfig::default(),
+                compensation: false,
+            }),
+        },
+        "gmoefication" => Method {
+            name: "gmoefication".into(),
+            grouping: "K-means on gate-weight columns",
+            routing: "Trained linear + mean-output compensation",
+            default_spec: baseline_spec(),
+            needs_calib_inputs: true,
+            needs_aux_domain: false,
+            partitioner: Box::new(WeightKmeansPartitioner { iters: 30, seed: 0x30EF }),
+            router: Box::new(TrainedLinearRouterBuilder {
+                cfg: RouterTrainConfig::default(),
+                compensation: true,
+            }),
+        },
+        "llama-moe" => Method {
+            name: "llama-moe".into(),
+            grouping: "Uniform random split",
+            routing: "Trained linear",
+            default_spec: baseline_spec(),
+            needs_calib_inputs: true,
+            needs_aux_domain: false,
+            partitioner: Box::new(RandomPartitioner { seed: 0x11A }),
+            router: Box::new(TrainedLinearRouterBuilder {
+                cfg: RouterTrainConfig::default(),
+                compensation: false,
+            }),
+        },
+        "emoe" => Method {
+            name: "emoe".into(),
+            grouping: "K-means on up-projection key vectors",
+            routing: "Trained linear",
+            default_spec: baseline_spec(),
+            needs_calib_inputs: true,
+            needs_aux_domain: false,
+            partitioner: Box::new(KeyKmeansPartitioner { iters: 30, seed: 0xE40E }),
+            router: Box::new(TrainedLinearRouterBuilder {
+                cfg: RouterTrainConfig::default(),
+                compensation: false,
+            }),
+        },
+        "readme" => Method {
+            name: "readme".into(),
+            grouping: "Domain-aware grouping (two calibration domains)",
+            routing: "Global domain-prototype (sequence-level)",
+            default_spec: baseline_spec(),
+            needs_calib_inputs: true,
+            needs_aux_domain: true,
+            partitioner: Box::new(DomainPartitioner),
+            router: Box::new(GlobalPrototypeRouterBuilder),
+        },
+        other => bail!(
+            "unknown method '{other}' — available: {}; hybrids: <base>{CMOE_ROUTER_SUFFIX}",
+            BASE_METHODS.join(", ")
+        ),
+    };
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_listed_name_resolves() {
+        for name in names() {
+            let m = get(&name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(m.name, name);
+            assert_eq!(m.default_spec.sparsity(), 0.25, "{name}: default spec is not 25% sparse");
+        }
+    }
+
+    #[test]
+    fn hybrid_swaps_router_and_keeps_base_partitioner() {
+        let m = get("moefication+cmoe-router").unwrap();
+        assert_eq!(m.routing, "Analytical (Eq. 25/8)");
+        assert!(!m.needs_calib_inputs, "analytical hybrid needs no router training data");
+        let g = get("gmoefication+cmoe-router").unwrap();
+        assert!(g.needs_calib_inputs, "compensation still needs calibration inputs");
+    }
+
+    #[test]
+    fn bogus_names_rejected() {
+        assert!(get("dot-moe").is_err());
+        assert!(get("cmoe+cmoe-router").is_err());
+        assert!(get("nope+cmoe-router").is_err());
+    }
+
+    #[test]
+    fn base_name_strips_suffix() {
+        assert_eq!(base_name("emoe+cmoe-router"), "emoe");
+        assert_eq!(base_name("cmoe"), "cmoe");
+    }
+}

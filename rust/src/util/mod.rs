@@ -17,3 +17,21 @@ pub mod table;
 
 pub use rng::Rng;
 pub use timer::Timer;
+
+/// Walk up from the current directory to the root of *this* repository
+/// — the first ancestor carrying the CMoE checkout signature
+/// (`ROADMAP.md` next to `rust/Cargo.toml`), so the bench harness can
+/// drop cross-PR trajectory files (`BENCH_*.json`) in a stable place.
+/// Deliberately NOT just "nearest `.git`": an installed binary run
+/// inside an unrelated checkout must not scribble into it.
+pub fn repo_root() -> Option<std::path::PathBuf> {
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        if dir.join("ROADMAP.md").exists() && dir.join("rust").join("Cargo.toml").exists() {
+            return Some(dir);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}

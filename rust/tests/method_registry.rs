@@ -1,0 +1,126 @@
+//! Method-registry parity suite: EVERY registered method (bases and
+//! `+cmoe-router` hybrids) must produce a structurally sound MoE model
+//! — expert membership an exact permutation of `d_ff` neurons with
+//! balanced sizes — that round-trips through save/load bit-exactly.
+//! Run explicitly by `scripts/check.sh`.
+
+use cmoe::data::calibration::CalibrationSpec;
+use cmoe::eval::forward::DenseForward;
+use cmoe::model::{model_config, LayerFfn, ModelWeights, Router};
+use cmoe::pipeline::{registry, Pipeline};
+use cmoe::util::Rng;
+
+fn fast_calib() -> CalibrationSpec {
+    CalibrationSpec { examples: 1, seq: 96, k_a: 12, ..Default::default() }
+}
+
+#[test]
+fn every_registry_method_partitions_and_roundtrips() {
+    let cfg = model_config("tiny").unwrap();
+    let mut rng = Rng::new(0x5EED);
+    let dense = ModelWeights::random(&cfg, &mut rng);
+    let probe: Vec<usize> = (0..10).map(|i| (i * 31) % 256).collect();
+    let tmp = std::env::temp_dir().join("cmoe_method_registry");
+    std::fs::create_dir_all(&tmp).unwrap();
+
+    let names = registry::names();
+    assert!(names.len() >= 7, "registry shrank below the seven-method surface: {names:?}");
+
+    for name in names {
+        let method = registry::get(&name).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        let spec = method.default_spec;
+        let run = Pipeline::from_method(method)
+            .spec(spec)
+            .calib(fast_calib())
+            .run(&dense)
+            .unwrap_or_else(|e| panic!("{name}: pipeline failed: {e:#}"));
+
+        // --- partition invariants per layer --------------------------
+        let m_size = cfg.d_ff / spec.total;
+        for (l, layer) in run.model.layers.iter().enumerate() {
+            let LayerFfn::Moe(moe) = &layer.ffn else {
+                panic!("{name}: layer {l} not converted");
+            };
+            assert_eq!(
+                moe.covered_neurons(),
+                (0..cfg.d_ff).collect::<Vec<_>>(),
+                "{name}: layer {l} is not an exact permutation of d_ff neurons"
+            );
+            assert_eq!(moe.experts.len(), spec.routed(), "{name}: layer {l} expert count");
+            assert!(
+                moe.experts.iter().all(|e| e.hidden_dim() == m_size),
+                "{name}: layer {l} experts are not balanced to {m_size} neurons"
+            );
+            assert_eq!(
+                moe.shared.hidden_dim(),
+                spec.shared * m_size,
+                "{name}: layer {l} shared expert size"
+            );
+            // router arity matches the partition
+            assert_eq!(moe.router.n_routed(), spec.routed(), "{name}: layer {l} router arity");
+            // hybrids and cmoe carry in-expert representatives
+            if name == "cmoe" || name.ends_with(registry::CMOE_ROUTER_SUFFIX) {
+                assert!(
+                    matches!(moe.router, Router::Analytical(_)),
+                    "{name}: layer {l} should use the analytical router"
+                );
+                assert_eq!(moe.representatives.len(), spec.routed());
+                for (e, r) in moe.representatives.iter().enumerate() {
+                    assert!(
+                        moe.expert_neurons[e].contains(r),
+                        "{name}: layer {l} representative {r} outside expert {e}"
+                    );
+                }
+            }
+        }
+
+        // --- save/load round-trip ------------------------------------
+        let path = tmp.join(format!("{}.cmw", name.replace('+', "_")));
+        run.model.save(&path).unwrap_or_else(|e| panic!("{name}: save: {e:#}"));
+        let back = ModelWeights::load(&path).unwrap_or_else(|e| panic!("{name}: load: {e:#}"));
+        let la = DenseForward::new(&run.model).logits(&probe);
+        let lb = DenseForward::new(&back).logits(&probe);
+        assert_eq!(la.data, lb.data, "{name}: save/load changed the forward pass");
+        for (l, (a, b)) in run.model.layers.iter().zip(&back.layers).enumerate() {
+            let (LayerFfn::Moe(ma), LayerFfn::Moe(mb)) = (&a.ffn, &b.ffn) else {
+                panic!("{name}: layer {l} kind lost in round-trip");
+            };
+            assert_eq!(ma.expert_neurons, mb.expert_neurons, "{name}: layer {l} bookkeeping");
+            assert_eq!(ma.shared_neurons, mb.shared_neurons);
+            assert_eq!(ma.representatives, mb.representatives);
+            assert_eq!(ma.compensation, mb.compensation, "{name}: layer {l} compensation");
+        }
+    }
+}
+
+#[test]
+fn baseline_methods_reject_shared_expert_specs() {
+    let cfg = model_config("tiny").unwrap();
+    let mut rng = Rng::new(0x5EEE);
+    let dense = ModelWeights::random(&cfg, &mut rng);
+    for name in ["moefication", "llama-moe", "emoe", "readme"] {
+        let err = Pipeline::for_method(name)
+            .unwrap()
+            .spec("S2A4E8".parse().unwrap())
+            .calib(fast_calib())
+            .run(&dense);
+        assert!(err.is_err(), "{name}: must reject shared-expert specs");
+    }
+}
+
+#[test]
+fn gmoefication_carries_compensation_in_both_router_variants() {
+    let cfg = model_config("tiny").unwrap();
+    let mut rng = Rng::new(0x5EEF);
+    let dense = ModelWeights::random(&cfg, &mut rng);
+    for name in ["gmoefication", "gmoefication+cmoe-router"] {
+        let run = Pipeline::for_method(name).unwrap().calib(fast_calib()).run(&dense).unwrap();
+        for (l, layer) in run.model.layers.iter().enumerate() {
+            let LayerFfn::Moe(moe) = &layer.ffn else { panic!() };
+            let comp = moe.compensation.as_ref().unwrap_or_else(|| {
+                panic!("{name}: layer {l} lost its mean-output compensation")
+            });
+            assert_eq!(comp.len(), moe.spec.routed());
+        }
+    }
+}

@@ -1,0 +1,196 @@
+//! Golden test: the staged `Pipeline` with method `cmoe` must produce
+//! output **bit-identical** to the classic `converter::convert_model`
+//! path, and stage-artifact resume must reproduce the exact same model
+//! from any checkpoint. Run explicitly by `scripts/check.sh`.
+
+use cmoe::converter::{convert_model, ConvertOptions};
+use cmoe::data::calibration::CalibrationSpec;
+use cmoe::eval::forward::DenseForward;
+use cmoe::model::{model_config, LayerFfn, ModelWeights, Router};
+use cmoe::pipeline::{Pipeline, Stage};
+use cmoe::profiling::ActivationProfile;
+use cmoe::util::Rng;
+
+fn tiny_setup(seed: u64) -> (ModelWeights, Vec<ActivationProfile>) {
+    let cfg = model_config("tiny").unwrap();
+    let mut rng = Rng::new(seed);
+    let dense = ModelWeights::random(&cfg, &mut rng);
+    let calib: Vec<usize> = (0..128).map(|_| rng.below(cfg.vocab)).collect();
+    let profiles: Vec<ActivationProfile> = DenseForward::new(&dense)
+        .capture_hidden(&calib)
+        .iter()
+        .map(|h| ActivationProfile::from_hidden(h, 24))
+        .collect();
+    (dense, profiles)
+}
+
+/// Field-by-field bitwise equality of two converted models.
+fn assert_models_identical(a: &ModelWeights, b: &ModelWeights, what: &str) {
+    assert_eq!(a.layers.len(), b.layers.len(), "{what}: layer count");
+    for (l, (la, lb)) in a.layers.iter().zip(&b.layers).enumerate() {
+        let (LayerFfn::Moe(ma), LayerFfn::Moe(mb)) = (&la.ffn, &lb.ffn) else {
+            panic!("{what}: layer {l} is not MoE on both sides");
+        };
+        assert_eq!(ma.spec, mb.spec, "{what}: layer {l} spec");
+        assert_eq!(ma.shared_neurons, mb.shared_neurons, "{what}: layer {l} shared neurons");
+        assert_eq!(ma.expert_neurons, mb.expert_neurons, "{what}: layer {l} expert neurons");
+        assert_eq!(ma.representatives, mb.representatives, "{what}: layer {l} representatives");
+        assert_eq!(ma.gate_scale, mb.gate_scale, "{what}: layer {l} gate scale");
+        assert_eq!(ma.gate_bias, mb.gate_bias, "{what}: layer {l} gate bias");
+        assert_eq!(ma.compensation, mb.compensation, "{what}: layer {l} compensation");
+        assert_eq!(ma.shared.w_gate, mb.shared.w_gate, "{what}: layer {l} shared w_gate");
+        assert_eq!(ma.shared.w_up, mb.shared.w_up, "{what}: layer {l} shared w_up");
+        assert_eq!(ma.shared.w_down, mb.shared.w_down, "{what}: layer {l} shared w_down");
+        assert_eq!(ma.experts.len(), mb.experts.len());
+        for (e, (ea, eb)) in ma.experts.iter().zip(&mb.experts).enumerate() {
+            assert_eq!(ea.w_gate, eb.w_gate, "{what}: layer {l} expert {e} w_gate");
+            assert_eq!(ea.w_up, eb.w_up, "{what}: layer {l} expert {e} w_up");
+            assert_eq!(ea.w_down, eb.w_down, "{what}: layer {l} expert {e} w_down");
+        }
+        match (&ma.router, &mb.router) {
+            (Router::Analytical(ra), Router::Analytical(rb)) => {
+                assert_eq!(ra.w_gate_r, rb.w_gate_r, "{what}: layer {l} router w_gate_r");
+                assert_eq!(ra.w_up_r, rb.w_up_r, "{what}: layer {l} router w_up_r");
+            }
+            (Router::Linear(wa), Router::Linear(wb)) => {
+                assert_eq!(wa, wb, "{what}: layer {l} linear router");
+            }
+            _ => panic!("{what}: layer {l} router kind differs"),
+        }
+    }
+}
+
+fn tmp_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("cmoe_pipeline_golden").join(name);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn pipeline_cmoe_is_bit_identical_to_convert_model() {
+    let (dense, profiles) = tiny_setup(701);
+    let spec = "S2A2E8".parse().unwrap();
+
+    let reference =
+        convert_model(&dense, &profiles, &spec, &ConvertOptions::default()).unwrap().model;
+    let run = Pipeline::for_method("cmoe")
+        .unwrap()
+        .spec(spec)
+        .with_profiles(profiles)
+        .run(&dense)
+        .unwrap();
+
+    assert_models_identical(&reference, &run.model, "pipeline vs convert_model");
+
+    // …down to the serialized bytes (deterministic .cmw layout)
+    let dir = tmp_dir("bytes");
+    let pa = dir.join("reference.cmw");
+    let pb = dir.join("pipeline.cmw");
+    reference.save(&pa).unwrap();
+    run.model.save(&pb).unwrap();
+    assert_eq!(
+        std::fs::read(&pa).unwrap(),
+        std::fs::read(&pb).unwrap(),
+        "saved .cmw artifacts must be byte-identical"
+    );
+
+    // and the forward pass is literally the same function of the input
+    let tokens: Vec<usize> = (0..12).map(|i| (i * 17) % 256).collect();
+    let la = DenseForward::new(&reference).logits(&tokens);
+    let lb = DenseForward::new(&run.model).logits(&tokens);
+    assert_eq!(la.data, lb.data, "logits diverged");
+}
+
+#[test]
+fn stage_artifacts_resume_bit_identically() {
+    let cfg = model_config("tiny").unwrap();
+    let mut rng = Rng::new(702);
+    let dense = ModelWeights::random(&cfg, &mut rng);
+    let calib = CalibrationSpec { examples: 1, seq: 64, k_a: 8, ..Default::default() };
+    let spec: cmoe::model::MoeSpec = "S2A2E8".parse().unwrap();
+    let dir = tmp_dir("resume");
+
+    let mk = || {
+        Pipeline::for_method("cmoe")
+            .unwrap()
+            .spec(spec)
+            .calib(calib.clone())
+    };
+    let full = mk().save_stages(&dir).run(&dense).unwrap();
+    // all three artifacts exist
+    for f in ["profile.json", "partition.json", "router.cmw"] {
+        assert!(dir.join(f).exists(), "{f} missing after --save-stages run");
+    }
+
+    for f in ["profile.json", "partition.json", "router.cmw"] {
+        let resumed = mk().resume_from(dir.join(f)).run(&dense).unwrap();
+        assert_models_identical(&full.model, &resumed.model, &format!("resume from {f}"));
+        assert!(
+            resumed.stages.iter().any(|s| s.resumed),
+            "resume from {f} recorded no resumed stage"
+        );
+    }
+
+    // resuming from the router artifact skips profiling AND partitioning
+    let from_router = mk().resume_from(dir.join("router.cmw")).run(&dense).unwrap();
+    assert!(from_router.stage(Stage::Profile).is_none(), "router resume must not re-profile");
+    let part = from_router.stage(Stage::Partition).unwrap();
+    assert!(part.resumed, "router resume must not re-partition");
+}
+
+#[test]
+fn hybrid_resume_reuses_base_partition() {
+    // The sweep pattern: partition once with the base method, then build
+    // the +cmoe-router hybrid from the saved partition — identical to
+    // running the hybrid end-to-end.
+    let cfg = model_config("tiny").unwrap();
+    let mut rng = Rng::new(703);
+    let dense = ModelWeights::random(&cfg, &mut rng);
+    let calib = CalibrationSpec { examples: 1, seq: 64, k_a: 8, ..Default::default() };
+    let dir = tmp_dir("hybrid");
+
+    let _base = Pipeline::for_method("moefication")
+        .unwrap()
+        .calib(calib.clone())
+        .save_stages(&dir)
+        .run(&dense)
+        .unwrap();
+
+    let direct = Pipeline::for_method("moefication+cmoe-router")
+        .unwrap()
+        .calib(calib.clone())
+        .run(&dense)
+        .unwrap();
+    let resumed = Pipeline::for_method("moefication+cmoe-router")
+        .unwrap()
+        .calib(calib)
+        .resume_from(dir.join("partition.json"))
+        .run(&dense)
+        .unwrap();
+    assert_models_identical(&direct.model, &resumed.model, "hybrid via partition resume");
+}
+
+#[test]
+fn finetuned_pipeline_matches_classic_convert_plus_finetune() {
+    // The CLI's full path (convert + finetune) equals the classic
+    // two-step recipe on the same calibration stream.
+    let (dense, profiles) = tiny_setup(704);
+    let spec = "S2A2E8".parse().unwrap();
+    let calib = CalibrationSpec::default();
+    let samples = 96usize;
+
+    let mut classic =
+        convert_model(&dense, &profiles, &spec, &ConvertOptions::default()).unwrap().model;
+    let tokens = calib.tokens_of(samples.max(calib.examples * calib.seq));
+    cmoe::pipeline::finetune_model(&mut classic, &dense, &tokens, samples, calib.seq).unwrap();
+
+    let run = Pipeline::for_method("cmoe")
+        .unwrap()
+        .spec(spec)
+        .calib(calib)
+        .with_profiles(profiles)
+        .finetune(samples)
+        .run(&dense)
+        .unwrap();
+    assert_models_identical(&classic, &run.model, "finetuned pipeline");
+}

@@ -17,6 +17,15 @@ cargo build --release
 echo "==> cargo test -q"
 cargo test -q
 
+# Pin the conversion-pipeline contract explicitly and under the release
+# profile (the debug pass above already ran them once; release reuses
+# the build from step 1 and additionally catches optimization-dependent
+# drift in the bit-identity guarantee): the staged Pipeline's cmoe
+# method must stay bit-identical to converter::convert_model, and every
+# registry method must satisfy the partition invariants.
+echo "==> golden CMoE pipeline equivalence + method-registry parity (release)"
+cargo test -q --release --test pipeline_golden --test method_registry
+
 echo "==> cargo doc --no-deps"
 RUSTDOCFLAGS="${RUSTDOCFLAGS:--D warnings}" cargo doc --no-deps
 
