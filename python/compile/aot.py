@@ -6,6 +6,12 @@ protos — see /opt/xla-example/README.md). Weights are ARGUMENTS, never
 baked in, so one artifact serves any checkpoint of matching shape; the
 manifest records the exact argument order for the rust runtime.
 
+Decode-family artifacts (decode_*, attn_layer, attn_moe_pre, embed)
+take per-ROW positions `pos: i32[B]` so rows of one batch may sit at
+different KV depths — the ABI the rust engine's continuous in-flight
+batching requires (slots admitted at different times decode together).
+The wave path passes the same position for every row.
+
 Artifact families (per model config):
   prefill_dense_{m}_b{B}_s{S}_t{T}   tokens → logits + KV cache
   decode_dense_{m}_b{B}_t{T}         one dense decode step
@@ -188,7 +194,7 @@ def emit_model_artifacts(em, name, batches, specs_moe, kv_lens, prefill_lens):
             args = pspecs + [
                 ("token", spec((b,), I32)),
                 ("kv", spec((nl, 2, b, h, t, hd))),
-                ("pos", spec((), I32)),
+                ("pos", spec((b,), I32)),
             ]
             em.emit(
                 f"decode_dense_{name}_b{b}_t{t}",
@@ -275,7 +281,7 @@ def emit_model_artifacts(em, name, batches, specs_moe, kv_lens, prefill_lens):
                     + [
                         ("token", spec((b,), I32)),
                         ("kv", spec((nl, 2, b, h, t, hd))),
-                        ("pos", spec((), I32)),
+                        ("pos", spec((b,), I32)),
                     ],
                     ["logits[b,v]", "kv"],
                     {"model": name, "spec": spec_str, "batch": b, "kv_len": t},
@@ -333,7 +339,7 @@ def emit_model_artifacts(em, name, batches, specs_moe, kv_lens, prefill_lens):
                     ("wv", spec((d, d))),
                     ("wo", spec((d, d))),
                     ("attn_norm", spec((d,))),
-                    ("pos", spec((), I32)),
+                    ("pos", spec((b,), I32)),
                 ],
                 ["x[b,d]", "kv_layer"],
                 {"model": name, "batch": b, "kv_len": t},
@@ -345,7 +351,7 @@ def emit_model_artifacts(em, name, batches, specs_moe, kv_lens, prefill_lens):
                 ("embed", spec((v, d))),
                 ("pos_table", spec((cfg["max_seq"], d))),
                 ("token", spec((b,), I32)),
-                ("pos", spec((), I32)),
+                ("pos", spec((b,), I32)),
             ],
             ["x[b,d]"],
             {"model": name, "batch": b},
@@ -394,7 +400,7 @@ def emit_model_artifacts(em, name, batches, specs_moe, kv_lens, prefill_lens):
                         ("shared.w_gate", spec((d, sh))),
                         ("shared.w_up", spec((d, sh))),
                         ("shared.w_down", spec((sh, d))),
-                        ("pos", spec((), I32)),
+                        ("pos", spec((b,), I32)),
                     ],
                     ["x[b,d]", "kv_layer", "xn[b,d]", "scores[b,nr]", "shared_y[b,d]"],
                     {"model": name, "batch": b, "kv_len": t, "n_r": n_r, "hidden": sh},

@@ -14,8 +14,8 @@ expert's SwiGLU in one launch:
 The grid iterates experts × capacity tiles; BlockSpec pins one expert's
 weight panel in VMEM while its token tile streams through — the same
 schedule GPU MoE kernels express with one threadblock per expert, which
-is the hardware adaptation DESIGN.md §3 describes (batched-einsum MXU
-form instead of a loop of small GEMMs).
+is the hardware adaptation (batched-einsum MXU form instead of a loop
+of small GEMMs); docs/ARCHITECTURE.md's L1 row maps it into the stack.
 """
 
 import functools

@@ -12,7 +12,8 @@ output block:
     Wd    [bdh, d]
     y     [bq, d]    — accumulated in place across the dh axis
 
-TPU mapping (DESIGN.md §9): with d=128, bdh=128, f32, the working set
+TPU mapping (docs/ARCHITECTURE.md, L1 kernels): with d=128, bdh=128,
+f32, the working set
 is bq·d + 3·d·bdh + bq·d ≈ 200 KiB ≪ 16 MiB VMEM; the MXU sees
 [bq,128]×[128,128] matmuls — full systolic tiles. On this CPU testbed
 the kernel MUST run under interpret=True (Mosaic custom-calls cannot

@@ -98,7 +98,11 @@ def _attention_kv(x, kv_k, kv_v, wq, wk, wv, wo, n_heads, pos):
 
     x:      [B, d]        current token's hidden state
     kv_k/v: [B, H, T, hd] cache (only positions < pos are valid)
-    pos:    scalar i32    index the new entry is written to
+    pos:    i32 [B] — per-ROW write/attend position, so rows of one
+            batch may sit at different KV depths (continuous batching:
+            slots admitted at different times decode together). A
+            scalar is also accepted (all rows at the same depth — the
+            wave path / legacy artifacts).
     Returns (out [B, d], new_kv_k, new_kv_v).
     """
     b, d = x.shape
@@ -107,10 +111,20 @@ def _attention_kv(x, kv_k, kv_v, wq, wk, wv, wo, n_heads, pos):
     q = (x @ wq).reshape(b, n_heads, hd)
     k_new = (x @ wk).reshape(b, n_heads, hd)
     v_new = (x @ wv).reshape(b, n_heads, hd)
-    kv_k = jax.lax.dynamic_update_slice(kv_k, k_new[:, :, None, :], (0, 0, pos, 0))
-    kv_v = jax.lax.dynamic_update_slice(kv_v, v_new[:, :, None, :], (0, 0, pos, 0))
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        kv_k = jax.lax.dynamic_update_slice(kv_k, k_new[:, :, None, :], (0, 0, pos, 0))
+        kv_v = jax.lax.dynamic_update_slice(kv_v, v_new[:, :, None, :], (0, 0, pos, 0))
+        valid = jnp.arange(t)[None, None, :] <= pos
+    else:
+        # per-row scatter: row i writes its new K/V at pos[i] and
+        # attends positions <= pos[i]
+        rows = jnp.arange(b)[:, None]
+        heads = jnp.arange(n_heads)[None, :]
+        kv_k = kv_k.at[rows, heads, pos[:, None], :].set(k_new)
+        kv_v = kv_v.at[rows, heads, pos[:, None], :].set(v_new)
+        valid = jnp.arange(t)[None, None, :] <= pos[:, None, None]
     scores = jnp.einsum("bhd,bhtd->bht", q, kv_k) / (hd**0.5)
-    valid = jnp.arange(t)[None, None, :] <= pos
     scores = jnp.where(valid, scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
     ctx = jnp.einsum("bht,bhtd->bhd", probs, kv_v).reshape(b, d)
@@ -171,14 +185,15 @@ def prefill(params, tokens, cfg, kv_len):
 def decode_step(params, token, kv, pos, cfg):
     """One decode step.
 
-    token: [B] i32; kv: [L, 2, B, H, T, hd]; pos: scalar i32.
+    token: [B] i32; kv: [L, 2, B, H, T, hd]; pos: i32 [B] per-row
+    positions (scalar also accepted — see `_attention_kv`).
     Returns (logits [B, V], new kv).
     """
     b = token.shape[0]
     d = cfg["d_model"]
     n_heads = cfg["n_heads"]
     x = params["embed"][token] + params["pos"][pos]
-    # PERF (EXPERIMENTS.md §Perf L2-1): collect per-layer caches and
+    # PERF L2-1 (docs/ARCHITECTURE.md): collect per-layer caches and
     # stack ONCE at the end — `kv.at[l].set(...)` per layer materializes
     # a full-cache copy per layer (8 × 134 MB at b32/t256), which
     # dominated the dense decode step.
@@ -300,7 +315,7 @@ def moe_decode_step(params, moe_params, token, kv, pos, cfg, n_k):
     """Decode step with every FFN replaced by the masked MoE layer.
 
     moe_params[l] = dict(shared=(g,u,d), experts=(g,u,d), router=(g,u),
-    scale, bias).
+    scale, bias). `pos` is i32 [B] per-row (scalar accepted).
     """
     b = token.shape[0]
     n_heads = cfg["n_heads"]
@@ -337,7 +352,8 @@ def moe_decode_step(params, moe_params, token, kv, pos, cfg, n_k):
 
 
 def embed_tokens(params, token, pos):
-    """[B] → [B, d]."""
+    """[B] → [B, d]. `pos` i32 [B] (per-row) or scalar — numpy
+    indexing broadcasts either way."""
     return params["embed"][token] + params["pos"][pos]
 
 

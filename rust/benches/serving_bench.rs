@@ -7,7 +7,10 @@
 //!    allocating after warmup (the "arena growths" column must be 0).
 //! 2. **Engine end-to-end** (Tables 7/9 backing): decode throughput per
 //!    mode × batch × context through the real engine + PJRT artifacts;
-//!    requires `make artifacts`.
+//!    requires `make artifacts`. Runs the run-to-completion wave path
+//!    on purpose — it isolates the decode-kernel delta (device-resident
+//!    KV, fixed batch); the scheduling comparison is `cmoe bench --exp
+//!    serving`.
 
 use cmoe::bench_harness::runner::BenchRunner;
 use cmoe::eval::forward::DenseForward;
@@ -81,12 +84,12 @@ fn main() {
         cfg.batcher.buckets = vec![batch];
         cfg.batcher.max_wait = Duration::ZERO;
         let engine = Engine::new(rt.clone(), dense.clone(), cfg).unwrap();
-        engine.run_queue(make_reqs(batch)).unwrap(); // warmup/compile
+        engine.run_queue_waves(make_reqs(batch)).unwrap(); // warmup/compile
         r.bench(
             &format!("decode_dense_b{batch}_kv{kv}"),
             Some((batch * steps) as f64),
             || {
-                engine.run_queue(make_reqs(batch)).unwrap();
+                engine.run_queue_waves(make_reqs(batch)).unwrap();
             },
         );
 
@@ -96,12 +99,12 @@ fn main() {
         cfg.batcher.buckets = vec![batch];
         cfg.batcher.max_wait = Duration::ZERO;
         let engine = Engine::new(rt.clone(), moe.clone(), cfg).unwrap();
-        engine.run_queue(make_reqs(batch)).unwrap();
+        engine.run_queue_waves(make_reqs(batch)).unwrap();
         r.bench(
             &format!("decode_moe_orch_b{batch}_kv{kv}"),
             Some((batch * steps) as f64),
             || {
-                engine.run_queue(make_reqs(batch)).unwrap();
+                engine.run_queue_waves(make_reqs(batch)).unwrap();
             },
         );
 
@@ -110,12 +113,12 @@ fn main() {
         cfg.batcher.buckets = vec![batch];
         cfg.batcher.max_wait = Duration::ZERO;
         let engine = Engine::new(rt.clone(), moe.clone(), cfg).unwrap();
-        engine.run_queue(make_reqs(batch)).unwrap();
+        engine.run_queue_waves(make_reqs(batch)).unwrap();
         r.bench(
             &format!("decode_moe_mono_b{batch}_kv{kv}"),
             Some((batch * steps) as f64),
             || {
-                engine.run_queue(make_reqs(batch)).unwrap();
+                engine.run_queue_waves(make_reqs(batch)).unwrap();
             },
         );
     }

@@ -1,4 +1,5 @@
-//! Design-choice ablations called out in DESIGN.md (beyond the paper's
+//! Design-choice ablations beyond the paper's tables (the substitutions
+//! docs/ARCHITECTURE.md motivates):
 //! tables): exact JV balanced assignment vs greedy rebalancing, the
 //! ATopK K_a sweep, calibration-size scaling of the conversion cost,
 //! and int8 quantization composition (§6).

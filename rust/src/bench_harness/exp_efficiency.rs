@@ -183,7 +183,7 @@ pub fn table8(ctx: &mut Ctx) -> Result<Table> {
         "Ours + WINA".into(),
         f(r_both.flops_total() / 1e6, 2),
         pct(-r_both.savings_vs(&rd)),
-        "composed (see DESIGN.md)".into(),
+        "composed (see docs/ARCHITECTURE.md)".into(),
     ]);
     ctx.save("table8", std::slice::from_ref(&t))?;
     Ok(t)

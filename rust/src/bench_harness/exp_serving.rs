@@ -1,10 +1,19 @@
 //! Serving experiments: Table 9 (speedup across expert configurations,
 //! context lengths, and memory- vs compute-bound regimes), Figure 5
 //! (load-balance adaptation) — both measured through the real engine +
-//! PJRT artifacts — and the artifact-free **grouped-dispatch sweep**
-//! ([`dispatch_sweep`]): dense vs per-token vs grouped expert execution
-//! across batch size and activation ratio, the repo's evidence that
-//! CMoE's FLOP savings translate into decode throughput.
+//! PJRT artifacts — and two artifact-free sweeps that run on a fresh
+//! clone:
+//!
+//! * the **grouped-dispatch sweep** ([`dispatch_sweep`]): dense vs
+//!   per-token vs grouped expert execution across batch size and
+//!   activation ratio — CMoE's FLOP savings as decode throughput;
+//! * the **scheduling sweep** ([`serving_sweep`]): continuous
+//!   in-flight batching vs run-to-completion waves on Poisson
+//!   open-loop arrival traces with mixed prompt/generation lengths,
+//!   measured in decode-step throughput, batch-row occupancy, and
+//!   step-metered TTFT — the head-of-line-blocking evidence behind
+//!   the continuous scheduler. Exported to the repo-root
+//!   `BENCH_serving.json` for the cross-PR perf trajectory.
 
 use crate::bench_harness::common::Ctx;
 use crate::converter::{convert_ffn, ConvertOptions};
@@ -12,14 +21,16 @@ use crate::model::{FfnWeights, ModelWeights, MoeSpec};
 use crate::moe::{route_tokens, GroupedRouting};
 use crate::profiling::ActivationProfile;
 use crate::serving::{
-    per_token_reference, DispatchArena, Engine, EngineConfig, ExecMode, GenParams,
-    GroupedDispatcher, Request,
+    per_token_reference, stub_reference, BatcherConfig, ContinuousSession, DispatchArena,
+    Engine, EngineConfig, ExecMode, GenParams, GroupedDispatcher, Request, StubForward,
 };
 use crate::tensor::{self, Tensor};
+use crate::util::stats::percentile;
 use crate::util::table::{f, speedup, Table};
 use crate::util::timer::measure;
 use crate::util::Rng;
 use anyhow::{Context as _, Result};
+use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -156,7 +167,249 @@ pub fn dispatch_sweep_table(seed: u64, min_iters: usize, min_time: Duration) -> 
     Ok(t)
 }
 
-/// Run a decode-throughput measurement: returns tok/s.
+// ---------------------------------------------------------------------------
+// Scheduling sweep: continuous in-flight batching vs run-to-completion
+// ---------------------------------------------------------------------------
+
+const SWEEP_VOCAB: usize = 23;
+const SWEEP_KV_CAP: usize = 128;
+const SWEEP_BUCKETS: &[usize] = &[1, 8, 32];
+
+/// Knuth Poisson sampler (λ small, so the naive product is fine).
+fn poisson(rng: &mut Rng, lambda: f64) -> usize {
+    let l = (-lambda).exp();
+    let mut k = 0usize;
+    let mut p = 1.0f64;
+    loop {
+        p *= rng.f32() as f64;
+        if p <= l {
+            return k;
+        }
+        k += 1;
+    }
+}
+
+/// Open-loop Poisson trace: `(arrival_step, request)` with mixed
+/// prompt lengths (1–16), generation budgets (2–41) and occasional
+/// stop tokens.
+fn gen_trace(rng: &mut Rng, lambda: f64, n_req: usize) -> Vec<(u64, Request)> {
+    let mut out = Vec::with_capacity(n_req);
+    let mut step = 0u64;
+    while out.len() < n_req {
+        for _ in 0..poisson(rng, lambda) {
+            if out.len() >= n_req {
+                break;
+            }
+            let id = out.len() as u64;
+            let prompt: Vec<usize> =
+                (0..1 + rng.below(16)).map(|_| rng.below(SWEEP_VOCAB)).collect();
+            let params = GenParams {
+                max_new_tokens: 2 + rng.below(40),
+                temperature: 0.0,
+                seed: id ^ 0x5EED,
+                stop_token: if rng.f32() < 0.2 { Some(rng.below(SWEEP_VOCAB)) } else { None },
+            };
+            out.push((step, Request::new(id, prompt, params)));
+        }
+        step += 1;
+    }
+    out
+}
+
+/// Step-metered outcome of one scheduling policy over one trace.
+struct SimOutcome {
+    requests: usize,
+    tokens: usize,
+    decode_steps: u64,
+    /// GEMM rows executed over all decode steps (bucket-padded).
+    row_steps: u64,
+    /// Rows that carried a live request.
+    live_rows: u64,
+    ttft_steps: Vec<f32>,
+    queue_steps: Vec<f32>,
+}
+
+impl SimOutcome {
+    fn tok_per_step(&self) -> f64 {
+        if self.decode_steps == 0 {
+            return 0.0;
+        }
+        self.tokens as f64 / self.decode_steps as f64
+    }
+
+    fn occupancy(&self) -> f64 {
+        if self.row_steps == 0 {
+            return 0.0;
+        }
+        self.live_rows as f64 / self.row_steps as f64
+    }
+
+    fn row(&self, sched: &str, lambda: f64) -> Vec<String> {
+        vec![
+            sched.into(),
+            format!("{lambda:.1}"),
+            self.requests.to_string(),
+            self.tokens.to_string(),
+            self.decode_steps.to_string(),
+            f(self.tok_per_step(), 2),
+            format!("{:.0}%", self.occupancy() * 100.0),
+            f(percentile(&self.ttft_steps, 50.0) as f64, 1),
+            f(percentile(&self.ttft_steps, 99.0) as f64, 1),
+            f(percentile(&self.queue_steps, 50.0) as f64, 1),
+        ]
+    }
+}
+
+/// Replay a trace through the real [`ContinuousSession`] driving the
+/// deterministic stub model. First tokens sample during the admission
+/// step, so TTFT in steps is `queued_steps + 1` (mirroring the wave
+/// path's prefill step).
+fn continuous_sim(trace: &[(u64, Request)]) -> Result<SimOutcome> {
+    let pool = *SWEEP_BUCKETS.last().unwrap();
+    let mut sess = ContinuousSession::new(
+        BatcherConfig { buckets: SWEEP_BUCKETS.to_vec(), max_wait: Duration::ZERO },
+        StubForward::new(pool, SWEEP_VOCAB, SWEEP_KV_CAP),
+    );
+    let mut next = 0;
+    let mut tokens = 0usize;
+    let mut done = 0usize;
+    let mut ttft_steps = Vec::new();
+    let mut queue_steps = Vec::new();
+    while next < trace.len() || !sess.is_idle() {
+        while next < trace.len() && trace[next].0 <= sess.step_index() {
+            sess.enqueue(trace[next].1.clone());
+            next += 1;
+        }
+        for r in sess.step()? {
+            tokens += r.tokens.len();
+            done += 1;
+            ttft_steps.push(r.queued_steps as f32 + 1.0);
+            queue_steps.push(r.queued_steps as f32);
+        }
+        anyhow::ensure!(sess.step_index() < 10_000_000, "sweep failed to converge");
+    }
+    let m = sess.metrics();
+    Ok(SimOutcome {
+        requests: done,
+        tokens,
+        decode_steps: m.decode_steps,
+        row_steps: m.bucket_row_steps,
+        live_rows: m.live_row_steps,
+        ttft_steps,
+        queue_steps,
+    })
+}
+
+/// Run-to-completion comparator on the same trace: waves form in
+/// arrival order at the wave-bucket policy, decode until their longest
+/// member finishes (retired members pad every step), and the next wave
+/// waits for the whole previous one. Per-request token counts come
+/// from [`stub_reference`] — by the token-identity guarantee they are
+/// exactly what the wave engine would generate, so only the schedule
+/// needs simulating (a wave of lengths `L` costs `max(L) - 1` decode
+/// steps after its prefill step).
+fn wave_sim(trace: &[(u64, Request)]) -> SimOutcome {
+    let bucket_for = |n: usize| crate::serving::covering_bucket(SWEEP_BUCKETS, n);
+    let mut queue: VecDeque<usize> = VecDeque::new();
+    let mut next = 0;
+    let mut t = 0u64;
+    let mut out = SimOutcome {
+        requests: 0,
+        tokens: 0,
+        decode_steps: 0,
+        row_steps: 0,
+        live_rows: 0,
+        ttft_steps: Vec::new(),
+        queue_steps: Vec::new(),
+    };
+    loop {
+        while next < trace.len() && trace[next].0 <= t {
+            queue.push_back(next);
+            next += 1;
+        }
+        if queue.is_empty() {
+            if next >= trace.len() {
+                break;
+            }
+            t = trace[next].0; // idle until the next arrival
+            continue;
+        }
+        let bucket = bucket_for(queue.len());
+        let take = queue.len().min(bucket);
+        let members: Vec<usize> = queue.drain(..take).collect();
+        let lens: Vec<usize> = members
+            .iter()
+            .map(|&i| stub_reference(&trace[i].1, SWEEP_VOCAB, SWEEP_KV_CAP).len())
+            .collect();
+        let max_len = *lens.iter().max().unwrap();
+        for (&i, &len) in members.iter().zip(&lens) {
+            out.requests += 1;
+            out.tokens += len;
+            out.live_rows += (len - 1) as u64;
+            out.ttft_steps.push((t - trace[i].0) as f32 + 1.0);
+            out.queue_steps.push((t - trace[i].0) as f32);
+        }
+        out.decode_steps += (max_len - 1) as u64;
+        out.row_steps += ((max_len - 1) * bucket) as u64;
+        // the wave occupies prefill + decode steps; the next wave (and
+        // every queued request) waits for all of it
+        t += max_len as u64;
+    }
+    out
+}
+
+/// The scheduling sweep as a bench-harness experiment (`cmoe bench
+/// --exp serving`). Artifact-free; exports a repo-root
+/// `BENCH_serving.json` so successive PRs can diff serving throughput,
+/// TTFT and occupancy without digging through results/ directories.
+pub fn serving_sweep(ctx: &mut Ctx) -> Result<Table> {
+    let t = serving_sweep_table(ctx.seed, 160)?;
+    ctx.save("serving", std::slice::from_ref(&t))?;
+    let root = crate::util::repo_root().unwrap_or_else(|| ctx.out_dir.clone());
+    let path = root.join("BENCH_serving.json");
+    std::fs::write(&path, t.to_json().pretty())
+        .with_context(|| format!("write {}", path.display()))?;
+    eprintln!("serving sweep exported to {}", path.display());
+    Ok(t)
+}
+
+/// The scheduling sweep core (`cmoe bench --exp serving`), artifact-
+/// free and fully deterministic: one shared trace per arrival rate,
+/// replayed through both scheduling policies.
+pub fn serving_sweep_table(seed: u64, n_req: usize) -> Result<Table> {
+    let mut t = Table::new(
+        "Serving sweep — continuous in-flight batching vs run-to-completion waves \
+         (stub model; decode-step metering; buckets {1,8,32}, pool 32)",
+        &[
+            "Scheduler",
+            "λ/step",
+            "Requests",
+            "Tokens",
+            "Decode steps",
+            "tok/step",
+            "Occupancy",
+            "TTFT p50 (steps)",
+            "TTFT p99 (steps)",
+            "Queue p50 (steps)",
+        ],
+    );
+    for &lambda in &[0.5f64, 2.0, 6.0] {
+        let mut rng = Rng::new(seed ^ ((lambda * 16.0) as u64) ^ 0x5EED);
+        let trace = gen_trace(&mut rng, lambda, n_req);
+        let cont = continuous_sim(&trace)?;
+        let waves = wave_sim(&trace);
+        t.row(cont.row("continuous", lambda));
+        t.row(waves.row("waves", lambda));
+    }
+    Ok(t)
+}
+
+/// Run a decode-throughput measurement: returns tok/s. Uses the
+/// run-to-completion wave path deliberately: Tables 7/9 isolate the
+/// dense-vs-MoE *decode kernel* delta, and the wave path keeps KV
+/// device-resident (the continuous scheduler's per-slot KV round-trip
+/// would measure scheduling overhead instead — that comparison lives
+/// in [`serving_sweep`]).
 fn measure_tps(
     rt: Arc<crate::runtime::XlaRuntime>,
     model: ModelWeights,
@@ -181,9 +434,9 @@ fn measure_tps(
         r.params.max_new_tokens = 2;
         r
     }).collect();
-    engine.run_queue(warm)?;
+    engine.run_queue_waves(warm)?;
     engine.metrics.lock().unwrap().waves.clear();
-    engine.run_queue(reqs)?;
+    engine.run_queue_waves(reqs)?;
     let m = engine.metrics.lock().unwrap();
     Ok(m.decode_tps())
 }
@@ -388,6 +641,53 @@ pub fn fig5(ctx: &mut Ctx) -> Result<Table> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn serving_sweep_continuous_beats_waves() {
+        // the acceptance gate: on mixed-length Poisson workloads,
+        // continuous batching must deliver ≥ run-to-completion
+        // decode-step throughput, and ≥ batch-row occupancy
+        let t = serving_sweep_table(0xC0DE, 96).unwrap();
+        assert_eq!(t.rows.len(), 6, "3 arrival rates × 2 schedulers");
+        for pair in t.rows.chunks(2) {
+            let (cont, waves) = (&pair[0], &pair[1]);
+            assert_eq!(cont[0], "continuous");
+            assert_eq!(waves[0], "waves");
+            assert_eq!(cont[1], waves[1], "rows must share λ");
+            assert_eq!(cont[3], waves[3], "token totals must match (same trace)");
+            let tps_c: f64 = cont[5].parse().unwrap();
+            let tps_w: f64 = waves[5].parse().unwrap();
+            assert!(
+                tps_c >= tps_w,
+                "continuous {tps_c} tok/step < waves {tps_w} at λ={}",
+                cont[1]
+            );
+            let occ = |s: &str| s.trim_end_matches('%').parse::<f64>().unwrap();
+            assert!(
+                occ(&cont[6]) + 1.0 >= occ(&waves[6]),
+                "continuous occupancy regressed: {} vs {}",
+                cont[6],
+                waves[6]
+            );
+        }
+    }
+
+    #[test]
+    fn trace_generation_is_poisson_shaped_and_deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        let ta = gen_trace(&mut a, 2.0, 64);
+        let tb = gen_trace(&mut b, 2.0, 64);
+        assert_eq!(ta.len(), 64);
+        for ((sa, ra), (sb, rb)) in ta.iter().zip(&tb) {
+            assert_eq!(sa, sb);
+            assert_eq!(ra.prompt, rb.prompt);
+            assert_eq!(ra.params.max_new_tokens, rb.params.max_new_tokens);
+        }
+        // arrivals are non-decreasing and not all at once
+        assert!(ta.windows(2).all(|w| w[0].0 <= w[1].0));
+        assert!(ta.last().unwrap().0 > 0, "λ=2 should spread 64 arrivals over steps");
+    }
 
     #[test]
     fn dispatch_sweep_runs_and_arena_is_stable() {

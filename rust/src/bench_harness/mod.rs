@@ -1,5 +1,6 @@
 //! The experiment harness: one runner per table/figure of the paper's
-//! evaluation (DESIGN.md §5 maps each to its experiment id).
+//! evaluation (docs/ARCHITECTURE.md, "Build & verification", maps the
+//! harness into the repo's layers).
 //!
 //! `cmoe bench --exp table1` (or `fig2`, `all`, …) regenerates the
 //! corresponding table/figure rows on this testbed's substitute
@@ -19,10 +20,11 @@ use anyhow::{bail, Result};
 use common::Ctx;
 
 /// Every experiment id, in paper order; `dispatch` (the grouped expert
-/// dispatch sweep, artifact-free) rides at the end.
+/// dispatch sweep) and `serving` (continuous-vs-waves scheduling
+/// sweep), both artifact-free, ride at the end.
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "fig1", "fig2", "table1", "table2", "table3", "table4", "table5", "table6", "table7",
-    "table8", "table9", "table10", "table11", "fig4", "fig5", "fig6", "dispatch",
+    "table8", "table9", "table10", "table11", "fig4", "fig5", "fig6", "dispatch", "serving",
 ];
 
 /// Run one experiment by id.
@@ -43,6 +45,7 @@ pub fn run(exp: &str, ctx: &mut Ctx) -> Result<Vec<Table>> {
         "table8" => vec![exp_efficiency::table8(ctx)?],
         "table9" => vec![exp_serving::table9(ctx)?],
         "dispatch" => vec![exp_serving::dispatch_sweep(ctx)?],
+        "serving" => vec![exp_serving::serving_sweep(ctx)?],
         "table10" => vec![exp_quality::table10(ctx)?],
         "table11" => vec![exp_quality::table11(ctx)?],
         "ablate" => vec![

@@ -1,7 +1,7 @@
 //! Synthetic corpora and tokenization.
 //!
 //! Two distribution-distinct domains substitute for WikiText-2 / C4
-//! (DESIGN.md §2):
+//! (docs/ARCHITECTURE.md module map: `data`):
 //! * **markov** — character-level text from a fixed-order Markov chain
 //!   over a word lexicon (natural-language-ish statistics).
 //! * **arith** — compositional arithmetic/pattern sequences with exact

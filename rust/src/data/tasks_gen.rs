@@ -1,5 +1,6 @@
 //! Synthetic multiple-choice task generation — the stand-in for
-//! PIQA/ARC/HellaSwag/MMLU-style suites (DESIGN.md §2). Each task is a
+//! PIQA/ARC/HellaSwag/MMLU-style suites (docs/ARCHITECTURE.md module
+//! map: `data`). Each task is a
 //! context plus `n_choices` completions exactly one of which continues
 //! the context under the corpus's generative rules; models are scored
 //! by likelihood ranking, the same protocol lm-eval uses.

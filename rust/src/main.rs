@@ -7,7 +7,8 @@
 //! cmoe profile  --model artifacts/small.cmw [--domain markov] [--ka 10]
 //! cmoe eval     --model <cmw> [--ppl markov,arith]
 //! cmoe serve    --model <cmw> --mode dense|moe|orchestrated [--spec S3A3E8] --requests 32
-//! cmoe bench    --exp table1|fig2|all [--out results/]
+//!               [--sched continuous|waves] [--buckets 1,8,32]
+//! cmoe bench    --exp table1|fig2|serving|all [--out results/]
 //! cmoe info     # artifact + zoo inventory
 //! ```
 
@@ -198,8 +199,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ),
     };
     let batch = args.get_usize("batch", 8);
-    cfg.batcher.buckets = vec![batch];
+    // --buckets 1,8,32 gives the continuous scheduler its ladder; the
+    // default single bucket pins both schedulers to one compiled batch
+    cfg.batcher.buckets = match args.get("buckets") {
+        Some(s) => {
+            let buckets = s
+                .split(',')
+                .map(|b| b.trim().parse::<usize>().context("bad --buckets"))
+                .collect::<Result<Vec<_>>>()?;
+            if buckets.is_empty() || buckets.contains(&0) {
+                bail!("--buckets needs a non-empty list of batch sizes >= 1");
+            }
+            buckets
+        }
+        None => vec![batch],
+    };
     cfg.batcher.max_wait = std::time::Duration::ZERO;
+    let sched = args.get_or("sched", "continuous").to_string();
     let engine = Engine::new(rt, model, cfg)?;
 
     let n = args.get_usize("requests", 16);
@@ -224,13 +240,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         })
         .collect();
     let t0 = std::time::Instant::now();
-    let results = engine.run_queue(reqs)?;
+    let results = match sched.as_str() {
+        "continuous" => engine.run_queue(reqs)?,
+        "waves" => engine.run_queue_waves(reqs)?,
+        s => bail!("unknown --sched {s} (continuous|waves)"),
+    };
     let elapsed = t0.elapsed();
     for r in results.iter().take(4) {
         println!("req {} -> {:?}", r.id, cmoe::data::decode(&r.tokens));
     }
     let m = engine.metrics.lock().unwrap();
-    println!("{} requests in {:?} — {}", results.len(), elapsed, m.summary());
+    println!(
+        "{} requests in {:?} [{sched}] — {}",
+        results.len(),
+        elapsed,
+        m.summary()
+    );
     Ok(())
 }
 

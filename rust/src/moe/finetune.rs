@@ -4,7 +4,8 @@
 //! The paper fine-tunes with LoRA against the language-model loss; in
 //! this reproduction the fine-tuner optimizes the *layerwise
 //! reconstruction loss* `‖F_MoE(x) − F_dense(x)‖²` — the standard
-//! post-training substitute (see DESIGN.md §2). Because conversion is a
+//! post-training substitute (docs/ARCHITECTURE.md, "The conversion
+//! pipeline"). Because conversion is a
 //! pure partition, the dense teacher equals the all-experts-active MoE
 //! output, so no extra weights are needed.
 //!

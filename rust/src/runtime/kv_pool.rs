@@ -1,0 +1,278 @@
+//! Per-slot KV cache pool for continuous batching.
+//!
+//! The wave engine keeps one device-resident KV buffer per wave,
+//! shaped `[L, 2, bucket, H, T, hd]` — fine when batch membership is
+//! frozen for the wave's lifetime. Continuous batching changes batch
+//! membership (and the bucket) every step, so KV ownership moves to
+//! the *slot*: each KV slot owns a host-resident `[L, 2, H, T, hd]`
+//! buffer, and every step the engine gathers the live slots' rows into
+//! a bucket-shaped batch buffer, runs the compiled step, and scatters
+//! the updated rows back.
+//!
+//! Cost model: this round-trips KV through the host once per decode
+//! step — the price of changing the bucket under AOT-compiled
+//! fixed-shape artifacts. The wave path keeps its device-resident KV
+//! (no regression there); a future device-side slot pool (a
+//! `gather_kv`/`scatter_kv` artifact pair) slots in behind the same
+//! gather/scatter interface. Scheduling correctness is independent of
+//! where KV lives, which is what the scheduler test suites exercise.
+//!
+//! Layout contract (matches `python/compile/aot.py`):
+//! * batch KV: `[L, 2, B, H, T, hd]`, row-major;
+//! * per-layer KV (orchestrated mode): `[2, B, H, T, hd]`;
+//! * slot KV: `[L, 2, H, T, hd]` — the batch layout with the batch
+//!   axis removed.
+//!
+//! Slots allocate lazily on first write and keep their buffer across
+//! release/reuse (prefill overwrites the whole slot, including the
+//! zero padding beyond the prompt, so stale data can never leak into a
+//! recycled slot).
+
+/// Host-side pool of per-slot KV buffers.
+pub struct KvSlotPool {
+    layers: usize,
+    kv_len: usize,
+    /// Elements in one `[H, T, hd]` plane.
+    plane: usize,
+    /// Elements in one slot buffer: `layers * 2 * plane`.
+    slot_elems: usize,
+    slots: Vec<Option<Vec<f32>>>,
+    /// Most slots ever allocated at once (memory gauge).
+    pub high_water_slots: usize,
+}
+
+impl KvSlotPool {
+    pub fn new(
+        pool: usize,
+        layers: usize,
+        heads: usize,
+        kv_len: usize,
+        head_dim: usize,
+    ) -> KvSlotPool {
+        let plane = heads * kv_len * head_dim;
+        KvSlotPool {
+            layers,
+            kv_len,
+            plane,
+            slot_elems: layers * 2 * plane,
+            slots: (0..pool).map(|_| None).collect(),
+            high_water_slots: 0,
+        }
+    }
+
+    pub fn pool_size(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn kv_len(&self) -> usize {
+        self.kv_len
+    }
+
+    /// Elements in a full batch buffer at `bucket` rows.
+    pub fn batch_elems(&self, bucket: usize) -> usize {
+        self.slot_elems * bucket
+    }
+
+    /// Elements in one layer's batch buffer at `bucket` rows.
+    pub fn layer_elems(&self, bucket: usize) -> usize {
+        2 * bucket * self.plane
+    }
+
+    fn ensure(&mut self, slot: usize) -> &mut Vec<f32> {
+        if self.slots[slot].is_none() {
+            self.slots[slot] = Some(vec![0.0; self.slot_elems]);
+            let n = self.slots.iter().filter(|s| s.is_some()).count();
+            self.high_water_slots = self.high_water_slots.max(n);
+        }
+        self.slots[slot].as_mut().unwrap()
+    }
+
+    /// Copy row `row` of a downloaded `[L, 2, B, H, T, hd]` batch
+    /// buffer into `slot` (prefill ingest — full overwrite).
+    pub fn store_from_batch(&mut self, slot: usize, batch: &[f32], bucket: usize, row: usize) {
+        assert_eq!(batch.len(), self.batch_elems(bucket), "kv batch size");
+        assert!(row < bucket);
+        let plane = self.plane;
+        let buf = self.ensure(slot);
+        for lc in 0..self.layers * 2 {
+            let src = (lc * bucket + row) * plane;
+            let dst = lc * plane;
+            buf[dst..dst + plane].copy_from_slice(&batch[src..src + plane]);
+        }
+    }
+
+    /// Build a `[L, 2, bucket, H, T, hd]` batch buffer from `rows`
+    /// (slot ids, one per live row); rows beyond `rows.len()` are
+    /// zero. `out` is resized and fully overwritten.
+    pub fn gather_full(&self, rows: &[usize], bucket: usize, out: &mut Vec<f32>) {
+        assert!(rows.len() <= bucket);
+        out.clear();
+        out.resize(self.batch_elems(bucket), 0.0);
+        let plane = self.plane;
+        for lc in 0..self.layers * 2 {
+            for (b, &slot) in rows.iter().enumerate() {
+                let buf = self.slots[slot].as_ref().expect("gather from empty kv slot");
+                let src = lc * plane;
+                let dst = (lc * bucket + b) * plane;
+                out[dst..dst + plane].copy_from_slice(&buf[src..src + plane]);
+            }
+        }
+    }
+
+    /// Scatter the live rows of an updated `[L, 2, bucket, H, T, hd]`
+    /// batch buffer back into their slots.
+    pub fn scatter_full(&mut self, rows: &[usize], bucket: usize, batch: &[f32]) {
+        assert!(rows.len() <= bucket);
+        assert_eq!(batch.len(), self.batch_elems(bucket), "kv batch size");
+        let plane = self.plane;
+        for (b, &slot) in rows.iter().enumerate() {
+            let buf = self.ensure(slot);
+            for lc in 0..self.layers * 2 {
+                let src = (lc * bucket + b) * plane;
+                let dst = lc * plane;
+                buf[dst..dst + plane].copy_from_slice(&batch[src..src + plane]);
+            }
+        }
+    }
+
+    /// Build one layer's `[2, bucket, H, T, hd]` batch buffer
+    /// (orchestrated mode uploads KV per layer).
+    pub fn gather_layer(&self, layer: usize, rows: &[usize], bucket: usize, out: &mut Vec<f32>) {
+        assert!(layer < self.layers && rows.len() <= bucket);
+        out.clear();
+        out.resize(self.layer_elems(bucket), 0.0);
+        let plane = self.plane;
+        for c in 0..2 {
+            for (b, &slot) in rows.iter().enumerate() {
+                let buf = self.slots[slot].as_ref().expect("gather from empty kv slot");
+                let src = (layer * 2 + c) * plane;
+                let dst = (c * bucket + b) * plane;
+                out[dst..dst + plane].copy_from_slice(&buf[src..src + plane]);
+            }
+        }
+    }
+
+    /// Scatter one layer's updated `[2, bucket, H, T, hd]` buffer back.
+    pub fn scatter_layer(&mut self, layer: usize, rows: &[usize], bucket: usize, batch: &[f32]) {
+        assert!(layer < self.layers && rows.len() <= bucket);
+        assert_eq!(batch.len(), self.layer_elems(bucket), "kv layer size");
+        let plane = self.plane;
+        for (b, &slot) in rows.iter().enumerate() {
+            let buf = self.ensure(slot);
+            for c in 0..2 {
+                let src = (c * bucket + b) * plane;
+                let dst = (layer * 2 + c) * plane;
+                buf[dst..dst + plane].copy_from_slice(&batch[src..src + plane]);
+            }
+        }
+    }
+
+    /// The slot retired. The buffer is kept for reuse — the next
+    /// prefill overwrites it end to end.
+    pub fn release(&mut self, _slot: usize) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled_batch(pool: &KvSlotPool, bucket: usize, tag: f32) -> Vec<f32> {
+        // element value encodes (lc, row, plane index) so any layout
+        // mistake shows up as a mismatch somewhere
+        let plane = pool.plane;
+        let mut v = vec![0.0; pool.batch_elems(bucket)];
+        for lc in 0..pool.layers * 2 {
+            for b in 0..bucket {
+                for p in 0..plane {
+                    v[(lc * bucket + b) * plane + p] =
+                        tag + lc as f32 * 1000.0 + b as f32 * 10.0 + p as f32 * 0.001;
+                }
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn store_gather_roundtrip() {
+        let mut pool = KvSlotPool::new(4, 2, 2, 3, 2);
+        let batch = filled_batch(&pool, 3, 0.5);
+        pool.store_from_batch(2, &batch, 3, 1);
+        pool.store_from_batch(0, &batch, 3, 0);
+        // gather [slot2, slot0] at bucket 4: row 0 ← slot2 (batch row 1),
+        // row 1 ← slot0 (batch row 0), rows 2..4 zero
+        let mut out = Vec::new();
+        pool.gather_full(&[2, 0], 4, &mut out);
+        let plane = 2 * 3 * 2;
+        for lc in 0..4 {
+            for p in 0..plane {
+                let want_r0 = batch[(lc * 3 + 1) * plane + p];
+                let want_r1 = batch[(lc * 3) * plane + p];
+                assert_eq!(out[(lc * 4) * plane + p], want_r0);
+                assert_eq!(out[(lc * 4 + 1) * plane + p], want_r1);
+                assert_eq!(out[(lc * 4 + 2) * plane + p], 0.0);
+                assert_eq!(out[(lc * 4 + 3) * plane + p], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn scatter_then_gather_is_identity_on_live_rows() {
+        let mut pool = KvSlotPool::new(3, 2, 2, 2, 2);
+        let batch = filled_batch(&pool, 2, 7.0);
+        pool.scatter_full(&[1, 2], 2, &batch);
+        let mut out = Vec::new();
+        pool.gather_full(&[1, 2], 2, &mut out);
+        assert_eq!(out, batch);
+        // reordering rows permutes the batch rows accordingly
+        pool.gather_full(&[2, 1], 2, &mut out);
+        assert_ne!(out, batch);
+        let plane = 2 * 2 * 2;
+        assert_eq!(out[0], batch[plane]); // row 0 now holds slot 2's data
+    }
+
+    #[test]
+    fn layer_view_matches_full_view() {
+        let mut pool = KvSlotPool::new(2, 3, 2, 2, 2);
+        let batch = filled_batch(&pool, 2, 3.0);
+        pool.scatter_full(&[0, 1], 2, &batch);
+        let plane = 2 * 2 * 2;
+        for l in 0..3 {
+            let mut lv = Vec::new();
+            pool.gather_layer(l, &[0, 1], 2, &mut lv);
+            for c in 0..2 {
+                for b in 0..2 {
+                    let full = ((l * 2 + c) * 2 + b) * plane;
+                    let lay = (c * 2 + b) * plane;
+                    assert_eq!(&lv[lay..lay + plane], &batch[full..full + plane]);
+                }
+            }
+        }
+        // scatter one layer at a different bucket and read it back whole
+        let mut lv = Vec::new();
+        pool.gather_layer(1, &[1], 1, &mut lv);
+        for x in lv.iter_mut() {
+            *x += 100.0;
+        }
+        pool.scatter_layer(1, &[1], 1, &lv);
+        let mut full = Vec::new();
+        pool.gather_full(&[1], 1, &mut full);
+        for c in 0..2 {
+            for p in 0..plane {
+                let batch_src = ((2 + c) * 2 + 1) * plane + p; // l=1, row 1
+                assert_eq!(full[((2 + c)) * plane + p], batch[batch_src] + 100.0);
+            }
+        }
+    }
+
+    #[test]
+    fn high_water_tracks_allocations() {
+        let mut pool = KvSlotPool::new(4, 1, 1, 2, 1);
+        assert_eq!(pool.high_water_slots, 0);
+        let b = vec![0.0; pool.batch_elems(1)];
+        pool.store_from_batch(0, &b, 1, 0);
+        pool.store_from_batch(3, &b, 1, 0);
+        pool.release(0);
+        pool.store_from_batch(0, &b, 1, 0); // reuse, no new allocation
+        assert_eq!(pool.high_water_slots, 2);
+    }
+}

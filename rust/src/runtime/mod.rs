@@ -13,8 +13,10 @@
 
 mod manifest;
 mod bindings;
+mod kv_pool;
 
 pub use bindings::{ModelBuffers, MoeModelBuffers};
+pub use kv_pool::KvSlotPool;
 pub use manifest::{ArgSpec, ArtifactInfo, Manifest};
 
 use crate::tensor::Tensor;
@@ -101,11 +103,6 @@ impl XlaRuntime {
         self.client
             .buffer_from_host_buffer(data, shape, None)
             .map_err(|e| anyhow!("upload_i32: {e:?}"))
-    }
-
-    /// Upload a scalar i32 (shape []).
-    pub fn upload_scalar_i32(&self, v: i32) -> Result<xla::PjRtBuffer> {
-        self.upload_i32(&[v], &[])
     }
 
     /// Download a buffer into a [`Tensor`] with the given shape.
@@ -197,7 +194,7 @@ mod tests {
     #[test]
     fn wrong_arg_count_is_reported() {
         let Some(rt) = runtime() else { return };
-        let b = rt.upload_scalar_i32(0).unwrap();
+        let b = rt.upload_i32(&[0], &[1]).unwrap();
         let err = match rt.execute("ffn_hidden_tiny_q128", &[&b]) {
             Err(e) => e,
             Ok(_) => panic!("expected arg-count error"),

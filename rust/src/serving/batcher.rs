@@ -1,10 +1,15 @@
-//! Wave-forming continuous batcher.
+//! The admission queue: FIFO request intake for both scheduling paths.
 //!
-//! Requests accumulate in a FIFO queue; [`Batcher::take_wave`] forms the
-//! largest available batch that fits a compiled bucket size
-//! (e.g. {1, 8, 32}), waiting up to `max_wait` for more arrivals when
-//! the queue is smaller than the largest bucket. Prompts inside a wave
-//! are left-padded bucket-wise by the engine.
+//! * **Continuous scheduler** (the default engine path):
+//!   [`Batcher::admit_into`] pops up to the number of free KV slots at
+//!   every step; the `max_wait` hold window applies only while the
+//!   engine is idle, letting a first batch fill before prefill starts.
+//! * **Run-to-completion waves** (reference/benchmark path):
+//!   [`Batcher::take_wave`] forms the largest available batch that fits
+//!   a compiled bucket size (e.g. {1, 8, 32}), waiting up to `max_wait`
+//!   for more arrivals when the queue is smaller than the largest
+//!   bucket. Prompts inside a wave are left-padded bucket-wise by the
+//!   engine.
 
 use crate::serving::request::Request;
 use std::collections::VecDeque;
@@ -23,6 +28,16 @@ impl Default for BatcherConfig {
     fn default() -> Self {
         BatcherConfig { buckets: vec![1, 8, 32], max_wait: Duration::from_millis(2) }
     }
+}
+
+/// The single bucket-policy primitive every scheduling surface shares
+/// (batcher waves, the continuous scheduler, the engine's step
+/// forward, the wave simulator): smallest bucket ≥ `n`, or the largest
+/// when `n` exceeds them all. `buckets` must be ascending and
+/// non-empty.
+pub fn covering_bucket(buckets: &[usize], n: usize) -> usize {
+    debug_assert!(buckets.windows(2).all(|w| w[0] <= w[1]), "buckets must be ascending");
+    *buckets.iter().find(|&&b| n <= b).unwrap_or_else(|| buckets.last().unwrap())
 }
 
 /// FIFO queue + wave former. Thread-safe wrapper lives in the engine.
@@ -54,12 +69,42 @@ impl Batcher {
     /// Bucket the next wave would use for `n` queued requests: the
     /// smallest bucket ≥ n, or the largest bucket if n exceeds all.
     pub fn bucket_for(&self, n: usize) -> usize {
-        for &b in &self.cfg.buckets {
-            if n <= b {
-                return b;
+        covering_bucket(&self.cfg.buckets, n)
+    }
+
+    /// Pop the oldest queued request (error-drain path).
+    pub fn pop_front(&mut self) -> Option<(Request, Instant)> {
+        self.queue.pop_front()
+    }
+
+    /// Admission for the continuous scheduler: move up to `n` requests
+    /// FIFO into `out` (cleared first). While `idle` (no live slots),
+    /// the wave hold policy applies — a queue smaller than the largest
+    /// bucket whose oldest entry is younger than `max_wait` is held, so
+    /// an idle engine can form a fuller first batch. A busy engine
+    /// admits immediately: a free slot always costs less than an empty
+    /// row. Returns the number admitted.
+    pub fn admit_into(
+        &mut self,
+        n: usize,
+        idle: bool,
+        out: &mut Vec<(Request, Instant)>,
+    ) -> usize {
+        out.clear();
+        let q = self.queue.len();
+        if q == 0 || n == 0 {
+            return 0;
+        }
+        if idle {
+            let max_bucket = *self.cfg.buckets.last().unwrap();
+            let oldest = self.queue.front().unwrap().1;
+            if q < max_bucket && oldest.elapsed() < self.cfg.max_wait {
+                return 0;
             }
         }
-        *self.cfg.buckets.last().unwrap()
+        let take = q.min(n);
+        out.extend(self.queue.drain(..take));
+        take
     }
 
     /// Pop a wave: up to `bucket` requests (bucket chosen by queue
@@ -165,6 +210,31 @@ mod tests {
         // empty queue clears the buffer and reports no wave
         assert!(!b.take_wave_into(&mut wave));
         assert!(wave.is_empty());
+    }
+
+    #[test]
+    fn admit_into_fifo_and_hold() {
+        let mut b = Batcher::new(BatcherConfig {
+            buckets: vec![1, 4],
+            max_wait: Duration::from_secs(60),
+        });
+        for i in 0..6 {
+            b.push(req(i));
+        }
+        let mut out = Vec::new();
+        // idle engine, queue (6) ≥ max bucket (4): released despite the window
+        assert_eq!(b.admit_into(3, true, &mut out), 3);
+        assert_eq!(out.iter().map(|(r, _)| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        // idle + fresh + below max bucket: held
+        assert_eq!(b.admit_into(4, true, &mut out), 0);
+        assert!(out.is_empty());
+        // busy engine: admits immediately, capped at free slots
+        assert_eq!(b.admit_into(2, false, &mut out), 2);
+        assert_eq!(out[0].0.id, 3);
+        assert_eq!(b.len(), 1);
+        assert_eq!(b.admit_into(8, false, &mut out), 1);
+        assert!(b.is_empty());
+        assert_eq!(b.admit_into(8, false, &mut out), 0);
     }
 
     #[test]

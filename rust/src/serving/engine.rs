@@ -1,4 +1,18 @@
-//! The serving engine: wave scheduling over compiled decode steps.
+//! The serving engine over compiled decode steps, with two scheduling
+//! paths:
+//!
+//! * **Continuous in-flight batching** (default — [`Engine::run_queue`],
+//!   [`Engine::continuous_session`]): the `serving::scheduler` session
+//!   admits queued requests into free KV slots at every decode step,
+//!   retires them the step they finish, and runs each step at the
+//!   smallest compiled bucket covering the live slots. KV lives
+//!   per-slot in a host [`KvSlotPool`] and is gathered/scattered
+//!   around each artifact call ([`EngineStepForward`]).
+//! * **Run-to-completion waves** ([`Engine::run_queue_waves`],
+//!   [`Engine::generate_wave`]): the pre-continuous reference path —
+//!   one batch prefills together and decodes until its last member
+//!   finishes, KV device-resident for the wave. Kept for benchmarking
+//!   (the continuous-vs-waves sweep) and as the token-identity oracle.
 //!
 //! In [`ExecMode::MoeOrchestrated`], attention and the shared expert
 //! run through compiled artifacts while routing and the routed experts
@@ -6,14 +20,20 @@
 //! [`ExpertExec`]: the default grouped host path (one GEMM per expert
 //! per layer over arena-backed buffers — see `serving::dispatch`) or
 //! the capacity-factor device artifact.
+//!
+//! Decode-family artifacts take **per-row positions** (`pos: i32[b]`),
+//! which is what lets rows of one batch sit at different KV depths —
+//! the ABI requirement behind mid-flight admission. The wave path
+//! simply uploads the same position for every row.
 
 use crate::model::{LayerFfn, ModelWeights, MoeSpec};
 use crate::moe::{route_from_scores, route_tokens, BalanceConfig, BiasAdapter, GroupedRouting};
-use crate::runtime::{ModelBuffers, MoeModelBuffers, XlaRuntime};
-use crate::serving::batcher::{Batcher, BatcherConfig};
+use crate::runtime::{KvSlotPool, ModelBuffers, MoeModelBuffers, XlaRuntime};
+use crate::serving::batcher::{covering_bucket, Batcher, BatcherConfig};
 use crate::serving::dispatch::{DispatchArena, ExpertDispatcher, GroupedDispatcher};
 use crate::serving::metrics::{EngineMetrics, WaveMetrics};
 use crate::serving::request::{Request, RequestResult};
+use crate::serving::scheduler::{ContinuousSession, PrefillOutcome, StepForward};
 use crate::tensor::{self, Tensor};
 use anyhow::{anyhow, bail, Context, Result};
 use std::sync::Arc;
@@ -198,9 +218,54 @@ impl Engine {
         lens
     }
 
-    /// Run a standalone batch of requests (wave-at-a-time; convenience
-    /// for benches and examples).
+    /// Run a standalone batch of requests through the **continuous
+    /// scheduler** (the default serving path): per-step admission into
+    /// KV slots, per-step retirement, minimal covering buckets.
     pub fn run_queue(&self, requests: Vec<Request>) -> Result<Vec<RequestResult>> {
+        let mut session = self.continuous_session();
+        for r in requests {
+            session.enqueue(r);
+        }
+        let results = session.drain()?;
+        self.record_results(&results);
+        self.flush_session(&mut session);
+        Ok(results)
+    }
+
+    /// Start a continuous-batching session on this engine. The caller
+    /// owns the step loop ([`ContinuousSession::step`]) and may enqueue
+    /// between steps — that is mid-flight admission; the threaded
+    /// server does exactly this.
+    pub fn continuous_session(&self) -> ContinuousSession<EngineStepForward<'_>> {
+        ContinuousSession::new(self.cfg.batcher.clone(), EngineStepForward::new(self))
+    }
+
+    /// Record per-request latency metrics for finished results.
+    pub(crate) fn record_results(&self, results: &[RequestResult]) {
+        let mut m = self.metrics.lock().unwrap();
+        for r in results {
+            m.record_request(r.ttft, r.latency);
+        }
+    }
+
+    /// Fold a session's scheduler gauges + run summary into the engine
+    /// metrics (call when the session goes idle).
+    pub(crate) fn flush_session(&self, session: &mut ContinuousSession<EngineStepForward<'_>>) {
+        let sm = session.take_metrics();
+        let wm = session.take_run_summary();
+        let mut m = self.metrics.lock().unwrap();
+        m.scheduler.merge(&sm);
+        if let Some(w) = wm {
+            m.record_wave(w);
+        }
+    }
+
+    /// Run a standalone batch wave-at-a-time (**run-to-completion**
+    /// reference path): each wave decodes until its last member
+    /// finishes while retired members pad the batch. Kept for the
+    /// continuous-vs-waves benchmark and as the token-identity oracle
+    /// — per-request outputs are identical to [`Engine::run_queue`].
+    pub fn run_queue_waves(&self, requests: Vec<Request>) -> Result<Vec<RequestResult>> {
         let mut batcher = Batcher::new(self.cfg.batcher.clone());
         for r in requests {
             batcher.push(r);
@@ -317,9 +382,13 @@ impl Engine {
             kv_layers = self.rt.execute(&name, &[&kv_buf])?;
         }
 
+        let mut pos_rows = vec![0i32; bucket];
         while active.iter().any(|&a| a) && pos < self.cfg.kv_len {
             let tok_buf = self.rt.upload_i32(&cur, &[bucket])?;
-            let pos_buf = self.rt.upload_scalar_i32(pos as i32)?;
+            // decode artifacts take per-row positions (continuous
+            // batching ABI); a wave's rows all sit at the same depth
+            pos_rows.fill(pos as i32);
+            let pos_buf = self.rt.upload_i32(&pos_rows, &[bucket])?;
             let logits = match self.cfg.mode {
                 ExecMode::Dense | ExecMode::MoeMonolithic => {
                     let name = match self.cfg.mode {
@@ -386,6 +455,7 @@ impl Engine {
                 ttft,
                 latency,
                 queued: t_start.duration_since(enqueued),
+                queued_steps: 0,
             });
         }
         Ok(results)
@@ -635,5 +705,209 @@ impl Engine {
                 }
             })
             .ok_or_else(|| anyhow!("no experts artifact for e{n_r} b{bucket}"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Artifact-backed StepForward: the continuous scheduler's model half
+// ---------------------------------------------------------------------------
+
+/// [`StepForward`] over the engine's compiled artifacts. KV ownership
+/// is per-slot ([`KvSlotPool`]): each decode step gathers the live
+/// slots' KV rows into a bucket-shaped buffer, runs the compiled step
+/// with per-row positions, and scatters the updated rows back. Every
+/// configured batch bucket must be compiled — the scheduler switches
+/// buckets as occupancy changes.
+///
+/// Prefill groups admissions by their compiled prefill length (the
+/// smallest `s` covering each prompt) so a request's prefill padding —
+/// and therefore its token stream — does not depend on which other
+/// requests happened to be admitted alongside it.
+pub struct EngineStepForward<'e> {
+    eng: &'e Engine,
+    kv: KvSlotPool,
+    /// Configured buckets, ascending (minimal-covering prefill groups).
+    buckets: Vec<usize>,
+    // gather/scatter scratch, reused across steps
+    kv_batch: Vec<f32>,
+    kv_layer: Vec<f32>,
+    toks_pad: Vec<i32>,
+    pos_pad: Vec<i32>,
+}
+
+impl<'e> EngineStepForward<'e> {
+    fn new(eng: &'e Engine) -> EngineStepForward<'e> {
+        let mut buckets = eng.cfg.batcher.buckets.clone();
+        buckets.sort_unstable();
+        buckets.dedup();
+        let pool = *buckets.last().expect("engine needs at least one batch bucket");
+        let c = &eng.model.config;
+        EngineStepForward {
+            eng,
+            kv: KvSlotPool::new(pool, c.n_layers, c.n_heads, eng.cfg.kv_len, c.head_dim()),
+            buckets,
+            kv_batch: Vec::new(),
+            kv_layer: Vec::new(),
+            toks_pad: Vec::new(),
+            pos_pad: Vec::new(),
+        }
+    }
+
+    fn min_bucket(&self, n: usize) -> usize {
+        covering_bucket(&self.buckets, n)
+    }
+
+    fn prefill_name(&self, bucket: usize, s: usize) -> String {
+        let eng = self.eng;
+        match eng.cfg.mode {
+            ExecMode::Dense => format!(
+                "prefill_dense_{}_b{bucket}_s{s}_t{}",
+                eng.cfg.model_name, eng.cfg.kv_len
+            ),
+            _ => format!(
+                "prefill_moe_{}_{}_b{bucket}_s{s}_t{}",
+                eng.cfg.model_name,
+                eng.spec_str(),
+                eng.cfg.kv_len
+            ),
+        }
+    }
+
+    /// Batched prefill of one same-`s` group, writing each member's KV
+    /// row into its slot.
+    fn prefill_group(
+        &mut self,
+        s: usize,
+        members: &[(usize, usize)], // (input index, slot id)
+        prompts: &[&[usize]],
+        out: &mut [Option<PrefillOutcome>],
+    ) -> Result<()> {
+        let eng = self.eng;
+        let c = &eng.model.config;
+        let (v, t) = (c.vocab, eng.cfg.kv_len);
+        let bucket = self.min_bucket(members.len());
+        let name = self.prefill_name(bucket, s);
+
+        let mut tokens = vec![0i32; bucket * s];
+        for (row, &(idx, _)) in members.iter().enumerate() {
+            let p = prompts[idx];
+            let p = if p.len() > s { &p[p.len() - s..] } else { p };
+            let off = row * s + (s - p.len());
+            for (j, &tok) in p.iter().enumerate() {
+                tokens[off + j] = tok as i32;
+            }
+        }
+        let tok_buf = eng.rt.upload_i32(&tokens, &[bucket, s])?;
+        let args = eng.param_args(&[&tok_buf]);
+        let outb = eng.rt.execute(&name, &args).context("continuous prefill")?;
+        let logits = eng.rt.download(&outb[0], &[bucket, s, v])?;
+        let kv = eng.rt.download(
+            &outb[1],
+            &[c.n_layers, 2, bucket, c.n_heads, t, c.head_dim()],
+        )?;
+        for (row, &(idx, slot)) in members.iter().enumerate() {
+            self.kv.store_from_batch(slot, &kv.data, bucket, row);
+            let o = (row * s + (s - 1)) * v;
+            out[idx] = Some(PrefillOutcome { logits: logits.data[o..o + v].to_vec(), pos: s });
+        }
+        Ok(())
+    }
+}
+
+impl StepForward for EngineStepForward<'_> {
+    fn prefill(&mut self, slots: &[usize], prompts: &[&[usize]]) -> Result<Vec<PrefillOutcome>> {
+        // compiled prefill lengths; the (bucket × s) artifact grid is
+        // uniform, so any configured bucket enumerates the same lengths
+        let lens = self.eng.prefill_lens(self.buckets[0]);
+        if lens.is_empty() {
+            bail!(
+                "no prefill artifact for model={} mode={:?} b={} t={}",
+                self.eng.cfg.model_name,
+                self.eng.cfg.mode,
+                self.buckets[0],
+                self.eng.cfg.kv_len
+            );
+        }
+        // group members by their own covering prefill length — a
+        // request's padding must not depend on its admission cohort
+        let mut groups: std::collections::BTreeMap<usize, Vec<(usize, usize)>> =
+            std::collections::BTreeMap::new();
+        for (idx, (&slot, &p)) in slots.iter().zip(prompts).enumerate() {
+            let s = *lens.iter().find(|&&l| l >= p.len()).unwrap_or(lens.last().unwrap());
+            groups.entry(s).or_default().push((idx, slot));
+        }
+        let mut out: Vec<Option<PrefillOutcome>> = (0..slots.len()).map(|_| None).collect();
+        for (s, members) in &groups {
+            self.prefill_group(*s, members, prompts, &mut out)?;
+        }
+        Ok(out.into_iter().map(|o| o.expect("prefill group missed a member")).collect())
+    }
+
+    fn decode(
+        &mut self,
+        slots: &[usize],
+        tokens: &[i32],
+        pos: &[usize],
+        bucket: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        let eng = self.eng;
+        let c = &eng.model.config;
+        let (v, t, nl, h, hd) = (c.vocab, eng.cfg.kv_len, c.n_layers, c.n_heads, c.head_dim());
+
+        self.toks_pad.clear();
+        self.toks_pad.extend_from_slice(tokens);
+        self.toks_pad.resize(bucket, 0);
+        self.pos_pad.clear();
+        self.pos_pad.extend(pos.iter().map(|&p| p as i32));
+        self.pos_pad.resize(bucket, 0);
+        let tok_buf = eng.rt.upload_i32(&self.toks_pad, &[bucket])?;
+        let pos_buf = eng.rt.upload_i32(&self.pos_pad, &[bucket])?;
+
+        let logits = match eng.cfg.mode {
+            ExecMode::Dense | ExecMode::MoeMonolithic => {
+                self.kv.gather_full(slots, bucket, &mut self.kv_batch);
+                let kv_buf = eng.rt.upload_f32(&self.kv_batch, &[nl, 2, bucket, h, t, hd])?;
+                let name = match eng.cfg.mode {
+                    ExecMode::Dense => format!(
+                        "decode_dense_{}_b{bucket}_t{t}",
+                        eng.cfg.model_name
+                    ),
+                    _ => format!(
+                        "decode_moe_{}_{}_b{bucket}_t{t}",
+                        eng.cfg.model_name,
+                        eng.spec_str()
+                    ),
+                };
+                let args = eng.param_args(&[&tok_buf, &kv_buf, &pos_buf]);
+                let mut outb = eng.rt.execute(&name, &args).context("continuous decode")?;
+                let kv_new = outb.pop().ok_or_else(|| anyhow!("decode: no kv"))?;
+                let logits = eng.rt.download(&outb[0], &[bucket, v])?;
+                let kv_host = eng.rt.download(&kv_new, &[nl, 2, bucket, h, t, hd])?;
+                self.kv.scatter_full(slots, bucket, &kv_host.data);
+                logits
+            }
+            ExecMode::MoeOrchestrated => {
+                let mut kv_layers = Vec::with_capacity(nl);
+                for l in 0..nl {
+                    self.kv.gather_layer(l, slots, bucket, &mut self.kv_layer);
+                    kv_layers.push(eng.rt.upload_f32(&self.kv_layer, &[2, bucket, h, t, hd])?);
+                }
+                let logits = eng.orchestrated_step(bucket, &tok_buf, &pos_buf, &mut kv_layers)?;
+                for (l, buf) in kv_layers.iter().enumerate() {
+                    let kv_host = eng.rt.download(buf, &[2, bucket, h, t, hd])?;
+                    self.kv.scatter_layer(l, slots, bucket, &kv_host.data);
+                }
+                logits
+            }
+        };
+        Ok((0..slots.len()).map(|i| logits.data[i * v..(i + 1) * v].to_vec()).collect())
+    }
+
+    fn release(&mut self, slot: usize) {
+        self.kv.release(slot);
+    }
+
+    fn kv_capacity(&self) -> usize {
+        self.eng.cfg.kv_len
     }
 }

@@ -1,11 +1,85 @@
 //! Serving metrics: TTFT / per-token latency / throughput with
-//! percentile summaries for the bench harness (Tables 7-9), plus the
+//! percentile summaries for the bench harness (Tables 7-9), the
 //! grouped-dispatch gauges ([`DispatchMetrics`]): per-expert occupancy
 //! and the scratch-arena high-water mark whose post-warmup stability is
-//! the observable "zero per-wave buffer allocations" signal.
+//! the observable "zero per-wave buffer allocations" signal — and the
+//! continuous-batching gauges ([`SchedulerMetrics`]): queue wait,
+//! slot-pool occupancy, and slot churn under per-step admission.
+//!
+//! TTFT semantics differ between the two scheduling paths: the
+//! run-to-completion wave path measures TTFT from wave start (queueing
+//! reported separately), while the continuous scheduler measures the
+//! user-perceived enqueue→first-token time, because admission happens
+//! mid-flight and queue wait is part of what the scheduler controls.
 
 use crate::util::stats::percentile;
 use std::time::Duration;
+
+/// Gauges for the continuous in-flight batching scheduler
+/// (`serving::scheduler`). All counters are cumulative over the
+/// engine's lifetime; per-run views come from diffing snapshots.
+#[derive(Clone, Debug, Default)]
+pub struct SchedulerMetrics {
+    /// Decode steps executed (each runs one bucket-sized batch).
+    pub decode_steps: u64,
+    /// Requests admitted into a KV slot.
+    pub admitted: u64,
+    /// Requests retired (stop token, max_new_tokens, or KV-full).
+    pub retired: u64,
+    /// Admissions that reused a previously-retired slot (the pool
+    /// recycles retired slots before touching fresh ones).
+    pub slot_reuses: u64,
+    /// Most slots live at once.
+    pub peak_live: usize,
+    /// Σ live rows over decode steps (numerator of occupancy).
+    pub live_row_steps: u64,
+    /// Σ bucket rows over decode steps (denominator of occupancy —
+    /// the GEMM rows actually executed, padding included).
+    pub bucket_row_steps: u64,
+    /// Per-request enqueue→admission wait, milliseconds.
+    pub queue_wait_ms: Vec<f32>,
+}
+
+impl SchedulerMetrics {
+    /// Share of executed batch rows that carried a live request
+    /// (1.0 = every GEMM row was real work; the wave engine's
+    /// run-to-completion padding shows up here as < 1).
+    pub fn occupancy(&self) -> f64 {
+        if self.bucket_row_steps == 0 {
+            return 0.0;
+        }
+        self.live_row_steps as f64 / self.bucket_row_steps as f64
+    }
+
+    /// Admissions + retirements per decode step.
+    pub fn churn_per_step(&self) -> f64 {
+        if self.decode_steps == 0 {
+            return 0.0;
+        }
+        (self.admitted + self.retired) as f64 / self.decode_steps as f64
+    }
+
+    pub fn queue_wait_p50_ms(&self) -> f32 {
+        percentile(&self.queue_wait_ms, 50.0)
+    }
+
+    pub fn queue_wait_p99_ms(&self) -> f32 {
+        percentile(&self.queue_wait_ms, 99.0)
+    }
+
+    /// Fold another snapshot into this one (engine-lifetime totals
+    /// absorb per-session scheduler counters).
+    pub fn merge(&mut self, o: &SchedulerMetrics) {
+        self.decode_steps += o.decode_steps;
+        self.admitted += o.admitted;
+        self.retired += o.retired;
+        self.slot_reuses += o.slot_reuses;
+        self.peak_live = self.peak_live.max(o.peak_live);
+        self.live_row_steps += o.live_row_steps;
+        self.bucket_row_steps += o.bucket_row_steps;
+        self.queue_wait_ms.extend_from_slice(&o.queue_wait_ms);
+    }
+}
 
 /// Gauges for the orchestrated engine's grouped expert dispatch.
 #[derive(Clone, Debug, Default)]
@@ -92,6 +166,9 @@ pub struct EngineMetrics {
     /// Grouped-dispatch gauges (orchestrated mode only; stays at its
     /// default for dense/monolithic engines).
     pub dispatch: DispatchMetrics,
+    /// Continuous-batching gauges (stays at its default when only the
+    /// run-to-completion wave path ran).
+    pub scheduler: SchedulerMetrics,
 }
 
 impl EngineMetrics {
@@ -149,6 +226,14 @@ impl EngineMetrics {
                 self.dispatch.arena_grow_events,
             ));
         }
+        if self.scheduler.decode_steps > 0 {
+            s.push_str(&format!(
+                ", sched occupancy {:.0}% churn {:.2}/step queue-wait p50 {:.1}ms",
+                self.scheduler.occupancy() * 100.0,
+                self.scheduler.churn_per_step(),
+                self.scheduler.queue_wait_p50_ms(),
+            ));
+        }
         s
     }
 }
@@ -197,6 +282,33 @@ mod tests {
         assert_eq!(m.ttft_p50_ms(), 0.0);
         assert!(m.dispatch.occupancy().is_empty());
         assert!(!m.summary().contains("dispatch arena"));
+    }
+
+    #[test]
+    fn scheduler_gauges() {
+        let mut s = SchedulerMetrics::default();
+        assert_eq!(s.occupancy(), 0.0);
+        assert_eq!(s.churn_per_step(), 0.0);
+        s.decode_steps = 10;
+        s.admitted = 6;
+        s.retired = 4;
+        s.live_row_steps = 30;
+        s.bucket_row_steps = 40;
+        s.queue_wait_ms = vec![1.0, 3.0, 5.0];
+        assert!((s.occupancy() - 0.75).abs() < 1e-12);
+        assert!((s.churn_per_step() - 1.0).abs() < 1e-12);
+        assert!(s.queue_wait_p50_ms() >= 1.0 && s.queue_wait_p50_ms() <= 5.0);
+
+        let mut t = SchedulerMetrics { peak_live: 2, ..Default::default() };
+        t.merge(&s);
+        assert_eq!(t.decode_steps, 10);
+        assert_eq!(t.peak_live, 2.max(s.peak_live));
+        assert_eq!(t.queue_wait_ms.len(), 3);
+
+        let mut m = EngineMetrics::default();
+        assert!(!m.summary().contains("sched occupancy"));
+        m.scheduler.merge(&s);
+        assert!(m.summary().contains("sched occupancy 75%"));
     }
 
     #[test]

@@ -1,5 +1,5 @@
-//! The serving engine: continuous batching over AOT-compiled decode
-//! steps, with three execution modes —
+//! The serving engine: **continuous in-flight batching** over
+//! AOT-compiled decode steps, with three execution modes —
 //!
 //! * **Dense** — the monolithic `decode_dense_*` artifact (baseline).
 //! * **MoeMonolithic** — one `decode_moe_*` call per step with in-graph
@@ -15,25 +15,38 @@
 //!   legacy capacity-factor device schedule remains available via
 //!   [`ExpertExec::DeviceCapacity`].
 //!
-//! Scheduling is wave-based continuous batching: requests queue, the
-//! batcher forms the largest bucket-sized wave available, the wave
-//! prefills together and decodes until every member finishes; finished
-//! slots are masked out. Python is never on this path.
+//! Scheduling is per-step continuous batching ([`scheduler`]): the
+//! engine owns a fixed pool of KV slots sized to the largest compiled
+//! batch bucket; every decode step it admits queued requests into free
+//! slots (FIFO), retires requests the step they hit their stop token /
+//! `max_new_tokens` / KV capacity, and runs the step at the smallest
+//! compiled bucket covering the live slots — so finished requests
+//! never pad a GEMM and queued requests never wait for a wave
+//! boundary. Per-request token streams are bit-identical to the
+//! run-to-completion wave path ([`Engine::run_queue_waves`], kept as
+//! the benchmark baseline and correctness oracle). Python is never on
+//! this path.
 //!
 //! The grouped-dispatch data layout and determinism guarantees are
-//! documented in [`dispatch`]'s module docs and, end to end, in
-//! `docs/ARCHITECTURE.md` at the repo root.
+//! documented in [`dispatch`]'s module docs; the slot lifecycle and
+//! continuous-batching invariants in [`scheduler`]'s — and, end to
+//! end, in `docs/ARCHITECTURE.md` at the repo root.
 
 mod request;
 mod batcher;
 mod engine;
 pub mod dispatch;
 mod metrics;
+pub mod scheduler;
 mod server;
 
-pub use batcher::{Batcher, BatcherConfig};
+pub use batcher::{covering_bucket, Batcher, BatcherConfig};
 pub use dispatch::{per_token_reference, DispatchArena, ExpertDispatcher, GroupedDispatcher};
-pub use engine::{Engine, EngineConfig, ExecMode, ExpertExec};
-pub use metrics::{DispatchMetrics, EngineMetrics, WaveMetrics};
+pub use engine::{Engine, EngineConfig, EngineStepForward, ExecMode, ExpertExec};
+pub use metrics::{DispatchMetrics, EngineMetrics, SchedulerMetrics, WaveMetrics};
 pub use request::{GenParams, Request, RequestResult};
+pub use scheduler::{
+    stub_logits, stub_reference, ContinuousSession, PrefillOutcome, Scheduler, SlotState,
+    StepForward, StubForward,
+};
 pub use server::{EngineServer, Ticket};

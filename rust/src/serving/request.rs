@@ -38,11 +38,18 @@ impl Request {
 pub struct RequestResult {
     pub id: u64,
     pub tokens: Vec<usize>,
-    /// Time to first token (prefill).
+    /// Time to first token. Wave path: from wave start. Continuous
+    /// path: from enqueue (user-perceived, queue wait included).
     pub ttft: Duration,
     /// Total latency including queueing.
     pub latency: Duration,
+    /// Enqueue→(wave start | slot admission) wait.
     pub queued: Duration,
+    /// Scheduler steps spent queued before admission (continuous path
+    /// only; the wave path reports 0 — its wait is wave-granular and
+    /// captured by `queued`). Deterministic, so simulation tests can
+    /// assert starvation bounds on it.
+    pub queued_steps: u64,
 }
 
 #[cfg(test)]

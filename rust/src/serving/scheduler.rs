@@ -1,0 +1,751 @@
+//! Continuous in-flight batching: a fixed pool of KV slots, per-step
+//! admission and retirement, and a minimal-covering compiled-bucket
+//! choice — the scheduler half of the serving engine.
+//!
+//! The run-to-completion wave path ([`crate::serving::Engine::run_queue_waves`])
+//! holds a whole batch hostage until its longest member finishes:
+//! retired neighbors pad every GEMM and queued requests wait for the
+//! wave boundary. This module inverts that control flow. A
+//! [`Scheduler`] owns `max(buckets)` KV slots; every step it
+//!
+//! 1. **admits** queued requests FIFO into free slots (recycling
+//!    retired slots before touching fresh ones),
+//! 2. **prefills** the admissions and samples their first token,
+//! 3. runs **one decode step** over the live slots at the smallest
+//!    compiled batch bucket covering them, and
+//! 4. **retires** every request that hit its stop token,
+//!    `max_new_tokens`, or the KV capacity — freeing the slot for the
+//!    next step's admission.
+//!
+//! Scheduling is pure host logic, factored away from the artifact
+//! runtime behind the [`StepForward`] trait so it is exhaustively
+//! testable without compiled artifacts: [`StubForward`] is a
+//! deterministic host-only model whose logits depend only on a
+//! request's own context, which makes "continuous batching preserves
+//! each request's exact token stream" a checkable property
+//! (`tests/scheduler.rs`, `tests/continuous_sim.rs`). The artifact
+//! engine drives the *same* [`ContinuousSession`] through its
+//! `EngineStepForward` implementation.
+//!
+//! Invariants (property-tested):
+//! * a slot is never double-assigned; `live + free == pool` always;
+//! * admission order is FIFO in enqueue order;
+//! * retired slots are reused before never-used slots;
+//! * the step bucket is the smallest configured bucket ≥ live count;
+//! * per-request output is token-identical to running that request
+//!   alone (batch rows are independent), hence identical to the
+//!   run-to-completion wave engine;
+//! * a request waits at most the pool-serialized work of the requests
+//!   ahead of it (no starvation; FIFO admission bounds queue wait).
+
+use crate::serving::batcher::{covering_bucket, Batcher, BatcherConfig};
+use crate::serving::metrics::{SchedulerMetrics, WaveMetrics};
+use crate::serving::request::{Request, RequestResult};
+use crate::util::Rng;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// Slot pool
+// ---------------------------------------------------------------------------
+
+/// Per-slot generation state while a request is in flight.
+#[derive(Debug)]
+pub struct SlotState {
+    pub request: Request,
+    /// When the request entered the admission queue.
+    pub enqueued: Instant,
+    /// When it was admitted into this slot.
+    pub admitted_at: Instant,
+    /// Scheduler steps spent waiting in the queue before admission.
+    pub queued_steps: u64,
+    /// Sampling stream (seeded from the request, so the token stream
+    /// is independent of batch composition).
+    pub rng: Rng,
+    /// Tokens generated so far (first token comes from prefill).
+    pub generated: Vec<usize>,
+    /// Last sampled token — the next decode step's input.
+    pub cur: i32,
+    /// Next KV write position (starts at the prefill length).
+    pub pos: usize,
+    /// Enqueue→first-token time, set when prefill samples.
+    pub ttft: Option<Duration>,
+}
+
+/// The KV-slot pool + bucket policy. Owns which request occupies which
+/// slot; knows nothing about tokens or devices (that is the session's
+/// and the [`StepForward`] impl's job).
+pub struct Scheduler {
+    /// Compiled batch buckets, ascending, deduplicated.
+    buckets: Vec<usize>,
+    slots: Vec<Option<SlotState>>,
+    /// Free-slot stack. Initialized so fresh slots pop in ascending
+    /// order; retired slots are pushed on top and therefore reused
+    /// before any never-used slot (LIFO keeps the working set warm).
+    free: Vec<usize>,
+    /// Slots that have ever held a request (feeds the reuse gauge).
+    used: Vec<bool>,
+    pub metrics: SchedulerMetrics,
+}
+
+impl Scheduler {
+    /// Pool size is the largest bucket: the engine can never run a
+    /// batch bigger than its largest compiled artifact.
+    pub fn new(buckets: &[usize]) -> Scheduler {
+        assert!(!buckets.is_empty(), "need at least one batch bucket");
+        let mut buckets = buckets.to_vec();
+        buckets.sort_unstable();
+        buckets.dedup();
+        assert!(buckets[0] >= 1, "bucket 0 is not a batch");
+        let pool = *buckets.last().unwrap();
+        Scheduler {
+            buckets,
+            slots: (0..pool).map(|_| None).collect(),
+            free: (0..pool).rev().collect(),
+            used: vec![false; pool],
+            metrics: SchedulerMetrics::default(),
+        }
+    }
+
+    pub fn pool_size(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn free_count(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn live(&self) -> usize {
+        self.slots.len() - self.free.len()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.free.len() == self.slots.len()
+    }
+
+    pub fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    /// Smallest configured bucket covering `n` live slots. `n` never
+    /// exceeds the pool (== the largest bucket) by construction.
+    pub fn min_bucket(&self, n: usize) -> usize {
+        debug_assert!(n >= 1 && n <= self.pool_size());
+        covering_bucket(&self.buckets, n)
+    }
+
+    /// Assign a request to a free slot. Panics if the pool is full —
+    /// callers must check [`Scheduler::free_count`] first.
+    pub fn assign(
+        &mut self,
+        request: Request,
+        enqueued: Instant,
+        queued_steps: u64,
+        now: Instant,
+    ) -> usize {
+        let sid = self.free.pop().expect("scheduler: no free slot");
+        assert!(self.slots[sid].is_none(), "scheduler: slot {sid} double-assigned");
+        if self.used[sid] {
+            self.metrics.slot_reuses += 1;
+        }
+        self.used[sid] = true;
+        self.metrics.admitted += 1;
+        self.metrics
+            .queue_wait_ms
+            .push(now.saturating_duration_since(enqueued).as_secs_f32() * 1e3);
+        let rng = Rng::new(request.params.seed);
+        self.slots[sid] = Some(SlotState {
+            request,
+            enqueued,
+            admitted_at: now,
+            queued_steps,
+            rng,
+            generated: Vec::new(),
+            cur: 0,
+            pos: 0,
+            ttft: None,
+        });
+        self.metrics.peak_live = self.metrics.peak_live.max(self.live());
+        sid
+    }
+
+    /// Retire a slot, returning its state and freeing the slot for the
+    /// next admission (ahead of never-used slots).
+    pub fn retire(&mut self, sid: usize) -> SlotState {
+        let st = self.slots[sid].take().expect("scheduler: retiring an empty slot");
+        self.free.push(sid);
+        self.metrics.retired += 1;
+        st
+    }
+
+    pub fn slot(&self, sid: usize) -> &SlotState {
+        self.slots[sid].as_ref().expect("scheduler: empty slot")
+    }
+
+    pub fn slot_mut(&mut self, sid: usize) -> &mut SlotState {
+        self.slots[sid].as_mut().expect("scheduler: empty slot")
+    }
+
+    /// Live slot ids, ascending — the step's row order. Ascending order
+    /// is deterministic and stable under retirement, which keeps traces
+    /// replayable; it does not affect values (batch rows are
+    /// independent through the model).
+    pub fn live_rows(&self, out: &mut Vec<usize>) {
+        out.clear();
+        out.extend(
+            self.slots.iter().enumerate().filter(|(_, s)| s.is_some()).map(|(i, _)| i),
+        );
+    }
+
+    /// Record one executed decode step at `bucket` with `live` rows.
+    pub fn record_step(&mut self, bucket: usize, live: usize) {
+        self.metrics.decode_steps += 1;
+        self.metrics.live_row_steps += live as u64;
+        self.metrics.bucket_row_steps += bucket as u64;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The forward abstraction
+// ---------------------------------------------------------------------------
+
+/// Result of prefilling one request into a slot.
+pub struct PrefillOutcome {
+    /// Last-position logits row (the first sample's distribution).
+    pub logits: Vec<f32>,
+    /// KV length after prefill — the first decode step's position.
+    pub pos: usize,
+}
+
+/// What the scheduler needs from a model: prefill into a slot, one
+/// batched decode step over named slots, and slot KV release. The
+/// artifact engine implements this against PJRT buffers + the
+/// per-slot `runtime::KvSlotPool`; [`StubForward`] implements it as a
+/// deterministic host function for artifact-free testing.
+pub trait StepForward {
+    /// Batched prefill of newly admitted requests; `prompts[i]` goes
+    /// to KV slot `slots[i]`. Returns one outcome per slot, same
+    /// order. Implementations must keep each row's result independent
+    /// of the other rows (the token-identity guarantee rests on it).
+    fn prefill(&mut self, slots: &[usize], prompts: &[&[usize]]) -> Result<Vec<PrefillOutcome>>;
+
+    /// One decode step: `slots` are the live rows (ascending),
+    /// `tokens[i]`/`pos[i]` their input token and KV position, padded
+    /// on device to `bucket` rows. Returns one logits row per live
+    /// slot, same order.
+    fn decode(
+        &mut self,
+        slots: &[usize],
+        tokens: &[i32],
+        pos: &[usize],
+        bucket: usize,
+    ) -> Result<Vec<Vec<f32>>>;
+
+    /// The slot retired — its KV may be recycled.
+    fn release(&mut self, slot: usize);
+
+    /// Per-slot KV capacity; a request whose position reaches this is
+    /// force-retired (same truncation rule as the wave engine's
+    /// `pos < kv_len` loop bound).
+    fn kv_capacity(&self) -> usize;
+}
+
+// ---------------------------------------------------------------------------
+// The continuous session: admission → prefill → decode → retire
+// ---------------------------------------------------------------------------
+
+/// One continuous-batching run: an admission queue ([`Batcher`]), the
+/// slot pool, and a [`StepForward`] backend. [`ContinuousSession::step`]
+/// executes one scheduler step and returns the requests retired by it;
+/// callers ingest new requests between steps ([`ContinuousSession::enqueue`]),
+/// which is exactly how the threaded server achieves mid-flight
+/// admission.
+pub struct ContinuousSession<F: StepForward> {
+    batcher: Batcher,
+    sched: Scheduler,
+    fwd: F,
+    /// Steps executed so far (admission bookkeeping is step-indexed so
+    /// queue waits are measurable in deterministic simulation tests).
+    step_idx: u64,
+    /// Request id → step index at enqueue.
+    arrivals: HashMap<u64, u64>,
+    // reused step buffers — the steady-state scheduling loop performs
+    // no per-step allocations outside the forward itself
+    admit_buf: Vec<(Request, Instant)>,
+    slot_buf: Vec<usize>,
+    rows_buf: Vec<usize>,
+    toks_buf: Vec<i32>,
+    pos_buf: Vec<usize>,
+    /// Requests retired during the in-progress step. Normally drained
+    /// by [`ContinuousSession::step`]'s Ok return; if the step's
+    /// forward fails *after* some requests already retired (admission
+    /// phase succeeded, decode failed), their completed results stay
+    /// here — [`ContinuousSession::take_finished`] delivers them so an
+    /// engine error never swallows a finished generation.
+    finished_buf: Vec<RequestResult>,
+    // run aggregates, flushed as one WaveMetrics per busy period
+    prefill_time: Duration,
+    decode_time: Duration,
+    run_decode_steps: usize,
+    run_prompt_tokens: usize,
+    run_generated: usize,
+}
+
+impl<F: StepForward> ContinuousSession<F> {
+    pub fn new(cfg: BatcherConfig, fwd: F) -> ContinuousSession<F> {
+        let sched = Scheduler::new(&cfg.buckets);
+        ContinuousSession {
+            batcher: Batcher::new(cfg),
+            sched,
+            fwd,
+            step_idx: 0,
+            arrivals: HashMap::new(),
+            admit_buf: Vec::new(),
+            slot_buf: Vec::new(),
+            rows_buf: Vec::new(),
+            toks_buf: Vec::new(),
+            pos_buf: Vec::new(),
+            finished_buf: Vec::new(),
+            prefill_time: Duration::ZERO,
+            decode_time: Duration::ZERO,
+            run_decode_steps: 0,
+            run_prompt_tokens: 0,
+            run_generated: 0,
+        }
+    }
+
+    pub fn enqueue(&mut self, r: Request) {
+        self.arrivals.insert(r.id, self.step_idx);
+        self.batcher.push(r);
+    }
+
+    /// Queue depth (not yet admitted).
+    pub fn pending(&self) -> usize {
+        self.batcher.len()
+    }
+
+    pub fn live(&self) -> usize {
+        self.sched.live()
+    }
+
+    /// No queued work and no live slots.
+    pub fn is_idle(&self) -> bool {
+        self.batcher.is_empty() && self.sched.is_idle()
+    }
+
+    pub fn step_index(&self) -> u64 {
+        self.step_idx
+    }
+
+    pub fn metrics(&self) -> &SchedulerMetrics {
+        &self.sched.metrics
+    }
+
+    pub fn forward(&self) -> &F {
+        &self.fwd
+    }
+
+    pub fn forward_mut(&mut self) -> &mut F {
+        &mut self.fwd
+    }
+
+    /// Take the accumulated scheduler gauges (resets them).
+    pub fn take_metrics(&mut self) -> SchedulerMetrics {
+        std::mem::take(&mut self.sched.metrics)
+    }
+
+    /// Summarize the run so far as one [`WaveMetrics`] (resets the
+    /// aggregates). `None` if nothing was generated.
+    pub fn take_run_summary(&mut self) -> Option<WaveMetrics> {
+        if self.run_generated == 0 {
+            return None;
+        }
+        let w = WaveMetrics {
+            batch: self.sched.pool_size(),
+            prompt_tokens: self.run_prompt_tokens,
+            generated_tokens: self.run_generated,
+            prefill: self.prefill_time,
+            decode: self.decode_time,
+            decode_steps: self.run_decode_steps,
+        };
+        self.prefill_time = Duration::ZERO;
+        self.decode_time = Duration::ZERO;
+        self.run_decode_steps = 0;
+        self.run_prompt_tokens = 0;
+        self.run_generated = 0;
+        Some(w)
+    }
+
+    /// Results completed by a step that later returned `Err` (the
+    /// forward failed after some requests had already retired). Empty
+    /// after any successful [`ContinuousSession::step`]. Callers on
+    /// the error path must deliver these before failing the rest.
+    pub fn take_finished(&mut self) -> Vec<RequestResult> {
+        std::mem::take(&mut self.finished_buf)
+    }
+
+    /// Abandon everything in flight and queued (engine error path).
+    /// Returns the affected request ids. Completed-but-undelivered
+    /// results are NOT aborted — drain them first via
+    /// [`ContinuousSession::take_finished`].
+    pub fn abort_all(&mut self) -> Vec<u64> {
+        let mut ids = Vec::new();
+        self.rows_buf.clear();
+        self.sched.live_rows(&mut self.rows_buf);
+        let rows = std::mem::take(&mut self.rows_buf);
+        for sid in rows {
+            let st = self.sched.retire(sid);
+            self.fwd.release(sid);
+            ids.push(st.request.id);
+        }
+        while let Some((r, _)) = self.batcher.pop_front() {
+            ids.push(r.id);
+        }
+        self.arrivals.clear();
+        ids
+    }
+
+    /// Run until idle (standalone-queue convenience; the threaded
+    /// server calls [`ContinuousSession::step`] directly so it can
+    /// ingest arrivals between steps). Results are sorted by id.
+    pub fn drain(&mut self) -> Result<Vec<RequestResult>> {
+        let mut out = Vec::new();
+        while !self.is_idle() {
+            out.extend(self.step()?);
+        }
+        out.sort_by_key(|r| r.id);
+        Ok(out)
+    }
+
+    /// One scheduler step: admit into free slots, prefill admissions
+    /// (their first token samples now — TTFT is enqueue→here), then
+    /// one decode step over all live slots at the minimal covering
+    /// bucket. Returns the requests retired during the step.
+    pub fn step(&mut self) -> Result<Vec<RequestResult>> {
+        let now = Instant::now();
+        let entry_step = self.step_idx;
+        self.step_idx += 1;
+        let kv_cap = self.fwd.kv_capacity();
+
+        // --- admission: FIFO into free slots; the batcher's hold
+        // window applies only while the engine is idle (an idle engine
+        // may wait for a fuller first batch; a busy one admits
+        // immediately — free slots are pure upside) ---
+        let free = self.sched.free_count();
+        if free > 0 && !self.batcher.is_empty() {
+            self.batcher.admit_into(free, self.sched.is_idle(), &mut self.admit_buf);
+            if !self.admit_buf.is_empty() {
+                self.slot_buf.clear();
+                for (r, enq) in self.admit_buf.drain(..) {
+                    let arrival = self.arrivals.remove(&r.id).unwrap_or(entry_step);
+                    let waited = entry_step.saturating_sub(arrival);
+                    self.run_prompt_tokens += r.prompt.len();
+                    self.slot_buf.push(self.sched.assign(r, enq, waited, now));
+                }
+                let t0 = Instant::now();
+                let prompts: Vec<&[usize]> = self
+                    .slot_buf
+                    .iter()
+                    .map(|&sid| self.sched.slot(sid).request.prompt.as_slice())
+                    .collect();
+                let outcomes = self.fwd.prefill(&self.slot_buf, &prompts)?;
+                drop(prompts);
+                self.prefill_time += t0.elapsed();
+                // stamp after the forward: TTFT includes prefill compute
+                let t_first = Instant::now();
+                assert_eq!(outcomes.len(), self.slot_buf.len(), "prefill outcome count");
+                for (i, out) in outcomes.into_iter().enumerate() {
+                    let sid = self.slot_buf[i];
+                    let done = {
+                        let st = self.sched.slot_mut(sid);
+                        st.pos = out.pos;
+                        let tok =
+                            st.rng.sample_logits(&out.logits, st.request.params.temperature);
+                        st.generated.push(tok);
+                        st.cur = tok as i32;
+                        st.ttft = Some(t_first.saturating_duration_since(st.enqueued));
+                        self.run_generated += 1;
+                        st.request.params.stop_token == Some(tok)
+                            || st.generated.len() >= st.request.params.max_new_tokens
+                            || st.pos >= kv_cap
+                    };
+                    if done {
+                        let st = self.sched.retire(sid);
+                        self.fwd.release(sid);
+                        let r = finish(st, t_first);
+                        self.finished_buf.push(r);
+                    }
+                }
+            }
+        }
+
+        // --- one decode step over the live slots ---
+        self.sched.live_rows(&mut self.rows_buf);
+        if self.rows_buf.is_empty() {
+            return Ok(std::mem::take(&mut self.finished_buf));
+        }
+        let live = self.rows_buf.len();
+        let bucket = self.sched.min_bucket(live);
+        self.toks_buf.clear();
+        self.pos_buf.clear();
+        for &sid in &self.rows_buf {
+            let st = self.sched.slot(sid);
+            debug_assert!(st.pos < kv_cap, "live slot at KV capacity");
+            self.toks_buf.push(st.cur);
+            self.pos_buf.push(st.pos);
+        }
+        let t0 = Instant::now();
+        let logits = self.fwd.decode(&self.rows_buf, &self.toks_buf, &self.pos_buf, bucket)?;
+        self.decode_time += t0.elapsed();
+        self.run_decode_steps += 1;
+        // stamp after the forward: latency includes the final decode
+        let t_done = Instant::now();
+        assert_eq!(logits.len(), live, "decode logits row count");
+        for (i, row) in logits.iter().enumerate() {
+            let sid = self.rows_buf[i];
+            let done = {
+                let st = self.sched.slot_mut(sid);
+                let tok = st.rng.sample_logits(row, st.request.params.temperature);
+                st.generated.push(tok);
+                st.cur = tok as i32;
+                st.pos += 1;
+                self.run_generated += 1;
+                st.request.params.stop_token == Some(tok)
+                    || st.generated.len() >= st.request.params.max_new_tokens
+                    || st.pos >= kv_cap
+            };
+            if done {
+                let st = self.sched.retire(sid);
+                self.fwd.release(sid);
+                let r = finish(st, t_done);
+                self.finished_buf.push(r);
+            }
+        }
+        self.sched.record_step(bucket, live);
+        Ok(std::mem::take(&mut self.finished_buf))
+    }
+}
+
+/// Package a retired slot as a request result. Continuous-batching
+/// TTFT is user-perceived (enqueue→first token); `queued` is the
+/// enqueue→admission wait the scheduler controlled.
+fn finish(st: SlotState, now: Instant) -> RequestResult {
+    RequestResult {
+        id: st.request.id,
+        tokens: st.generated,
+        ttft: st.ttft.unwrap_or_default(),
+        latency: now.saturating_duration_since(st.enqueued),
+        queued: st.admitted_at.saturating_duration_since(st.enqueued),
+        queued_steps: st.queued_steps,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic stub model (tests, simulations, benches)
+// ---------------------------------------------------------------------------
+
+/// Deterministic logits for a context: hash the tokens, expand through
+/// the repo Rng. A row depends only on its own context, never on batch
+/// composition — the property that makes scheduler-order bugs visible
+/// as token divergence.
+pub fn stub_logits(ctx: &[usize], vocab: usize) -> Vec<f32> {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325; // FNV-1a offset basis
+    for &t in ctx {
+        h ^= t as u64;
+        h = h.wrapping_mul(0x100_0000_01b3); // FNV-1a prime
+    }
+    let mut rng = Rng::new(h ^ vocab as u64);
+    (0..vocab).map(|_| rng.f32()).collect()
+}
+
+/// Host-only [`StepForward`]: each slot's "KV cache" is its token
+/// context. Used by the scheduler test suites and the artifact-free
+/// serving bench; also a template for plugging non-PJRT backends into
+/// the session.
+pub struct StubForward {
+    vocab: usize,
+    kv_cap: usize,
+    ctx: Vec<Option<Vec<usize>>>,
+    /// Release calls observed (tests assert slot hygiene).
+    pub released: u64,
+}
+
+impl StubForward {
+    pub fn new(pool: usize, vocab: usize, kv_cap: usize) -> StubForward {
+        StubForward { vocab, kv_cap, ctx: (0..pool).map(|_| None).collect(), released: 0 }
+    }
+
+    /// Live contexts currently held (slot hygiene checks).
+    pub fn live_contexts(&self) -> usize {
+        self.ctx.iter().filter(|c| c.is_some()).count()
+    }
+}
+
+impl StepForward for StubForward {
+    fn prefill(&mut self, slots: &[usize], prompts: &[&[usize]]) -> Result<Vec<PrefillOutcome>> {
+        let mut out = Vec::with_capacity(slots.len());
+        for (&sid, &p) in slots.iter().zip(prompts) {
+            anyhow::ensure!(self.ctx[sid].is_none(), "stub: prefill into a live slot {sid}");
+            let ctx = p.to_vec();
+            out.push(PrefillOutcome { logits: stub_logits(&ctx, self.vocab), pos: ctx.len() });
+            self.ctx[sid] = Some(ctx);
+        }
+        Ok(out)
+    }
+
+    fn decode(
+        &mut self,
+        slots: &[usize],
+        tokens: &[i32],
+        _pos: &[usize],
+        bucket: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(slots.len() <= bucket, "stub: {} rows > bucket {bucket}", slots.len());
+        let mut out = Vec::with_capacity(slots.len());
+        for (&sid, &tok) in slots.iter().zip(tokens) {
+            let ctx = self.ctx[sid].as_mut().expect("stub: decode on empty slot");
+            ctx.push(tok as usize);
+            out.push(stub_logits(ctx, self.vocab));
+        }
+        Ok(out)
+    }
+
+    fn release(&mut self, slot: usize) {
+        self.ctx[slot] = None;
+        self.released += 1;
+    }
+
+    fn kv_capacity(&self) -> usize {
+        self.kv_cap
+    }
+}
+
+/// Run-to-completion reference for one request against the stub model:
+/// the same sampling rule as the engines, no scheduler involved. Since
+/// batch rows are independent, this is exactly what any correct
+/// scheduler must emit for the request.
+pub fn stub_reference(r: &Request, vocab: usize, kv_cap: usize) -> Vec<usize> {
+    let mut rng = Rng::new(r.params.seed);
+    let mut ctx = r.prompt.clone();
+    let mut pos = ctx.len();
+    let mut gen = Vec::new();
+    let tok = rng.sample_logits(&stub_logits(&ctx, vocab), r.params.temperature);
+    gen.push(tok);
+    let mut cur = tok;
+    let mut done = r.params.stop_token == Some(tok)
+        || gen.len() >= r.params.max_new_tokens
+        || pos >= kv_cap;
+    while !done {
+        ctx.push(cur);
+        let tok = rng.sample_logits(&stub_logits(&ctx, vocab), r.params.temperature);
+        gen.push(tok);
+        cur = tok;
+        pos += 1;
+        done = r.params.stop_token == Some(tok)
+            || gen.len() >= r.params.max_new_tokens
+            || pos >= kv_cap;
+    }
+    gen
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::request::GenParams;
+
+    fn req(id: u64, max_new: usize) -> Request {
+        Request::new(
+            id,
+            vec![1, 2, 3],
+            GenParams { max_new_tokens: max_new, temperature: 0.0, seed: id, stop_token: None },
+        )
+    }
+
+    #[test]
+    fn pool_and_bucket_shape() {
+        let s = Scheduler::new(&[8, 1, 32, 8]);
+        assert_eq!(s.pool_size(), 32);
+        assert_eq!(s.buckets(), &[1, 8, 32]);
+        assert_eq!(s.min_bucket(1), 1);
+        assert_eq!(s.min_bucket(2), 8);
+        assert_eq!(s.min_bucket(8), 8);
+        assert_eq!(s.min_bucket(9), 32);
+        assert_eq!(s.min_bucket(32), 32);
+    }
+
+    #[test]
+    fn retired_slots_recycle_first() {
+        let mut s = Scheduler::new(&[4]);
+        let now = Instant::now();
+        let a = s.assign(req(0, 4), now, 0, now);
+        let b = s.assign(req(1, 4), now, 0, now);
+        assert_eq!((a, b), (0, 1));
+        s.retire(a);
+        // the just-retired slot 0 is taken before fresh slot 2
+        let c = s.assign(req(2, 4), now, 0, now);
+        assert_eq!(c, 0);
+        assert_eq!(s.metrics.slot_reuses, 1);
+        assert_eq!(s.live(), 2);
+        assert_eq!(s.free_count() + s.live(), s.pool_size());
+    }
+
+    #[test]
+    fn session_runs_queue_to_completion() {
+        let cfg = BatcherConfig { buckets: vec![1, 4], max_wait: Duration::ZERO };
+        let mut sess = ContinuousSession::new(cfg, StubForward::new(4, 11, usize::MAX));
+        for i in 0..6 {
+            sess.enqueue(req(i, 3 + i as usize % 3));
+        }
+        let results = sess.drain().unwrap();
+        assert_eq!(results.len(), 6);
+        for r in &results {
+            assert_eq!(r.tokens, stub_reference(&req(r.id, 3 + r.id as usize % 3), 11, usize::MAX));
+        }
+        assert!(sess.is_idle());
+        assert_eq!(sess.forward().live_contexts(), 0, "every slot released");
+        let m = sess.take_metrics();
+        assert_eq!(m.admitted, 6);
+        assert_eq!(m.retired, 6);
+        assert!(m.slot_reuses >= 2, "6 requests through a 4-slot pool must recycle");
+        let w = sess.take_run_summary().unwrap();
+        assert_eq!(w.generated_tokens, results.iter().map(|r| r.tokens.len()).sum::<usize>());
+    }
+
+    #[test]
+    fn kv_capacity_truncates() {
+        let cfg = BatcherConfig { buckets: vec![1], max_wait: Duration::ZERO };
+        // prompt len 3, cap 5 → prefill at pos 3, two decode steps
+        let mut sess = ContinuousSession::new(cfg, StubForward::new(1, 7, 5));
+        sess.enqueue(req(0, 100));
+        let results = sess.drain().unwrap();
+        assert_eq!(results[0].tokens.len(), 3, "1 prefill + (cap-prompt) decode tokens");
+        assert_eq!(results[0].tokens, stub_reference(&req(0, 100), 7, 5));
+    }
+
+    #[test]
+    fn abort_clears_everything() {
+        let cfg = BatcherConfig { buckets: vec![2], max_wait: Duration::ZERO };
+        let mut sess = ContinuousSession::new(cfg, StubForward::new(2, 7, usize::MAX));
+        for i in 0..5 {
+            sess.enqueue(req(i, 50));
+        }
+        sess.step().unwrap(); // two live, three queued
+        assert_eq!(sess.live(), 2);
+        let mut ids = sess.abort_all();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+        assert!(sess.is_idle());
+        assert_eq!(sess.forward().live_contexts(), 0);
+    }
+
+    #[test]
+    fn stub_logits_depend_only_on_context() {
+        let a = stub_logits(&[1, 2, 3], 13);
+        let b = stub_logits(&[1, 2, 3], 13);
+        let c = stub_logits(&[1, 2, 4], 13);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a.len(), 13);
+    }
+}

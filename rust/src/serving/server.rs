@@ -1,7 +1,14 @@
 //! Threaded serving front-end: asynchronous request submission over
-//! channels with a dedicated engine thread running the continuous-
-//! batching loop (tokio is unavailable offline; std::thread + mpsc is
-//! the substrate — see DESIGN.md §2).
+//! channels with a dedicated engine thread stepping the continuous-
+//! batching scheduler (tokio is unavailable offline; std::thread +
+//! mpsc is the substrate — see docs/ARCHITECTURE.md, "Build &
+//! verification").
+//!
+//! The serve loop interleaves channel ingestion with scheduler steps:
+//! arrivals drained between steps are admitted into free KV slots at
+//! the *next* step — requests join a running batch mid-flight instead
+//! of waiting for the current batch to finish (the head-of-line
+//! pathology of the old wave loop).
 //!
 //! The PJRT wrapper types are `Rc`-based (not `Send`), so the server
 //! thread owns the *entire* runtime: `start` takes the artifact
@@ -19,7 +26,6 @@
 
 use crate::model::ModelWeights;
 use crate::runtime::XlaRuntime;
-use crate::serving::batcher::Batcher;
 use crate::serving::engine::{Engine, EngineConfig};
 use crate::serving::request::{Request, RequestResult};
 use anyhow::Result;
@@ -129,25 +135,24 @@ impl Drop for EngineServer {
 }
 
 fn serve_loop(engine: Engine, rx: Receiver<Msg>) {
-    let mut batcher = Batcher::new(engine.cfg.batcher.clone());
+    let mut session = engine.continuous_session();
     let mut waiters: HashMap<u64, Sender<Result<RequestResult, String>>> = HashMap::new();
     let mut draining = false;
-    // reused across waves (take_wave_into + generate_wave drain it)
-    let mut wave: Vec<(Request, std::time::Instant)> = Vec::new();
     loop {
-        // ingest — block briefly when idle, drain eagerly otherwise
+        // ingest — block briefly when idle, drain eagerly otherwise;
+        // everything drained here is admitted at the next step
         let timeout =
-            if batcher.is_empty() && !draining { Duration::from_millis(50) } else { Duration::ZERO };
+            if session.is_idle() && !draining { Duration::from_millis(50) } else { Duration::ZERO };
         match rx.recv_timeout(timeout) {
             Ok(Msg::Submit(r, tx)) => {
                 waiters.insert(r.id, tx);
-                batcher.push(r);
+                session.enqueue(r);
                 // keep ingesting whatever is immediately available
                 while let Ok(msg) = rx.try_recv() {
                     match msg {
                         Msg::Submit(r, tx) => {
                             waiters.insert(r.id, tx);
-                            batcher.push(r);
+                            session.enqueue(r);
                         }
                         Msg::Shutdown => draining = true,
                     }
@@ -158,28 +163,47 @@ fn serve_loop(engine: Engine, rx: Receiver<Msg>) {
             Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => draining = true,
         }
 
-        if batcher.take_wave_into(&mut wave) {
-            let ids: Vec<u64> = wave.iter().map(|(r, _)| r.id).collect();
-            match engine.generate_wave(&mut wave) {
-                Ok(results) => {
-                    for res in results {
-                        if let Some(tx) = waiters.remove(&res.id) {
-                            let _ = tx.send(Ok(res));
+        if !session.is_idle() {
+            match session.step() {
+                Ok(finished) => {
+                    if !finished.is_empty() {
+                        engine.record_results(&finished);
+                        for res in finished {
+                            if let Some(tx) = waiters.remove(&res.id) {
+                                let _ = tx.send(Ok(res));
+                            }
                         }
                     }
                 }
                 Err(e) => {
+                    // requests that completed earlier in the failed
+                    // step are done — deliver them before failing the
+                    // rest (a lost Sender would hang its Ticket::wait)
+                    let done = session.take_finished();
+                    if !done.is_empty() {
+                        engine.record_results(&done);
+                        for res in done {
+                            if let Some(tx) = waiters.remove(&res.id) {
+                                let _ = tx.send(Ok(res));
+                            }
+                        }
+                    }
+                    // a failed step poisons everything else in flight:
+                    // fail the affected waiters and reset the session
                     let msg = format!("{e:#}");
-                    for id in ids {
+                    for id in session.abort_all() {
                         if let Some(tx) = waiters.remove(&id) {
                             let _ = tx.send(Err(msg.clone()));
                         }
                     }
                 }
             }
+            if session.is_idle() {
+                engine.flush_session(&mut session);
+            }
         }
 
-        if draining && batcher.is_empty() {
+        if draining && session.is_idle() {
             return;
         }
     }

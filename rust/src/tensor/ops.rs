@@ -5,7 +5,8 @@
 //! The matmul uses a cache-blocked i-k-j loop order with 8-wide manual
 //! unrolling over j and row-parallelism via `util::pool` — enough to keep
 //! the conversion path (seconds, not hours) and the rust-side fine-tuner
-//! fast. See EXPERIMENTS.md §Perf for measured numbers.
+//! fast. `cargo bench --bench kernel_bench` reproduces the measured
+//! numbers; docs/ARCHITECTURE.md documents the invariants.
 //!
 //! **Determinism invariant.** The serial row-band kernel [`matmul_rows`]
 //! is the single implementation behind [`matmul`], [`matmul_into`] and

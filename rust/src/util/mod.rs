@@ -4,7 +4,7 @@
 //! These exist because the build environment is fully offline — the usual
 //! crates (rand, serde, clap, criterion, proptest, tokio) are not
 //! available, so the library carries its own minimal, well-tested
-//! equivalents (see DESIGN.md §2).
+//! equivalents (docs/ARCHITECTURE.md module map: `util`).
 
 pub mod rng;
 pub mod json;

@@ -61,7 +61,7 @@ fn decode_artifact_continues_prefill() {
     let kv = &out[1];
 
     let step_tok = rt.upload_i32(&[tokens[16] as i32], &[1]).unwrap();
-    let pos = rt.upload_scalar_i32(16).unwrap();
+    let pos = rt.upload_i32(&[16], &[1]).unwrap(); // per-row pos ABI
     let args = bufs.args_with(&[&step_tok, kv, &pos]);
     let out = rt.execute("decode_dense_tiny_b1_t128", &args).unwrap();
     let got = rt.download(&out[0], &[1, cfg.vocab]).unwrap();
@@ -112,7 +112,7 @@ fn moe_decode_artifact_matches_rust_moe_forward() {
     let kv = &out[1];
 
     let step_tok = rt.upload_i32(&[tokens[16] as i32], &[1]).unwrap();
-    let pos = rt.upload_scalar_i32(16).unwrap();
+    let pos = rt.upload_i32(&[16], &[1]).unwrap(); // per-row pos ABI
     let mut args: Vec<&xla::PjRtBuffer> = dense_bufs.named.values().collect();
     args.extend(moe_bufs.named.values());
     args.push(&step_tok);

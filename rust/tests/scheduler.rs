@@ -1,0 +1,280 @@
+//! Host-only unit + property tests for the continuous-batching
+//! scheduler (`serving::scheduler`). No compiled artifacts needed —
+//! the whole suite runs on a fresh clone, which is the point: the
+//! scheduler is the serving engine's control flow, and control flow is
+//! what these invariants pin down:
+//!
+//! * bucket selection is minimal-covering,
+//! * admission is FIFO in enqueue order,
+//! * a slot is never double-assigned (`live + free == pool`),
+//! * retired slots are reused before never-used slots,
+//! * the batcher's `max_wait` hold window is honored (idle engine
+//!   only),
+//! * per-request token streams match the run-to-completion reference
+//!   regardless of trace shape (the property test).
+
+use cmoe::prop_assert;
+use cmoe::serving::{
+    stub_reference, BatcherConfig, ContinuousSession, GenParams, Request, Scheduler, StubForward,
+};
+use cmoe::util::prop;
+use cmoe::util::Rng;
+use std::time::{Duration, Instant};
+
+const VOCAB: usize = 17;
+
+fn req(id: u64, prompt_len: usize, max_new: usize) -> Request {
+    let prompt: Vec<usize> = (0..prompt_len.max(1)).map(|j| (id as usize * 31 + j * 7) % VOCAB).collect();
+    Request::new(
+        id,
+        prompt,
+        GenParams { max_new_tokens: max_new, temperature: 0.0, seed: id, stop_token: None },
+    )
+}
+
+fn session(buckets: Vec<usize>, max_wait: Duration) -> ContinuousSession<StubForward> {
+    let pool = *buckets.iter().max().unwrap();
+    ContinuousSession::new(
+        BatcherConfig { buckets, max_wait },
+        StubForward::new(pool, VOCAB, usize::MAX),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// bucket selection
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bucket_selection_is_minimal_covering() {
+    let s = Scheduler::new(&[1, 8, 32]);
+    assert_eq!(s.pool_size(), 32);
+    for n in 1..=32 {
+        let b = s.min_bucket(n);
+        assert!(b >= n, "bucket {b} must cover {n}");
+        // minimal: no configured bucket in [n, b)
+        assert!(
+            !s.buckets().iter().any(|&c| c >= n && c < b),
+            "bucket {b} for {n} live is not minimal"
+        );
+    }
+    assert_eq!(s.min_bucket(1), 1);
+    assert_eq!(s.min_bucket(2), 8);
+    assert_eq!(s.min_bucket(9), 32);
+}
+
+// ---------------------------------------------------------------------------
+// admission order + slot accounting
+// ---------------------------------------------------------------------------
+
+#[test]
+fn admission_is_fifo() {
+    let mut sess = session(vec![2], Duration::ZERO);
+    for i in 0..6 {
+        sess.enqueue(req(i, 3, 2));
+    }
+    // pool of 2: ids {0,1} admitted at step 0; each finishes after its
+    // 2nd token (1 decode step), freeing both slots for {2,3}, etc.
+    let results = sess.drain().unwrap();
+    let mut by_id: Vec<(u64, u64)> = results.iter().map(|r| (r.id, r.queued_steps)).collect();
+    by_id.sort_unstable();
+    let waits: Vec<u64> = by_id.iter().map(|&(_, w)| w).collect();
+    assert_eq!(waits, vec![0, 0, 1, 1, 2, 2], "FIFO pairs admitted wave by wave");
+}
+
+#[test]
+fn slots_never_double_assigned_and_recycled_first() {
+    let mut s = Scheduler::new(&[1, 4]);
+    let now = Instant::now();
+    let mut live = Vec::new();
+    for i in 0..4 {
+        let sid = s.assign(req(i, 2, 4), now, 0, now);
+        assert!(!live.contains(&sid), "slot {sid} double-assigned");
+        live.push(sid);
+    }
+    assert_eq!(s.free_count(), 0);
+    assert_eq!(s.live(), 4);
+    // retire 2 and 1; LIFO reuse gives 1 back first, then 2 — both
+    // before any hypothetical fresh slot (there are none left)
+    s.retire(2);
+    s.retire(1);
+    assert_eq!(s.live() + s.free_count(), s.pool_size());
+    assert_eq!(s.assign(req(10, 2, 4), now, 0, now), 1);
+    assert_eq!(s.assign(req(11, 2, 4), now, 0, now), 2);
+    assert_eq!(s.metrics.slot_reuses, 2);
+}
+
+#[test]
+fn retired_slots_reused_before_fresh_via_session() {
+    // pool 4, but requests trickle one at a time: the same slot should
+    // be recycled instead of touching fresh slots
+    let mut sess = session(vec![1, 4], Duration::ZERO);
+    for i in 0..4 {
+        sess.enqueue(req(i, 3, 1)); // 1 token: retire at prefill
+        while !sess.is_idle() {
+            sess.step().unwrap();
+        }
+    }
+    let m = sess.metrics();
+    assert_eq!(m.admitted, 4);
+    assert_eq!(m.slot_reuses, 3, "slot 0 recycled for every follow-up request");
+}
+
+// ---------------------------------------------------------------------------
+// max_wait hold window
+// ---------------------------------------------------------------------------
+
+#[test]
+fn max_wait_holds_idle_engine_only() {
+    let mut sess = session(vec![1, 8], Duration::from_secs(60));
+    sess.enqueue(req(0, 3, 10)); // one long request…
+    // idle + fresh + below max bucket: held, nothing admitted
+    sess.step().unwrap();
+    assert_eq!(sess.live(), 0);
+    assert_eq!(sess.pending(), 1);
+    // …filling to the max bucket releases immediately
+    for i in 1..8 {
+        sess.enqueue(req(i, 3, 1)); // 7 one-token requests retire at prefill
+    }
+    sess.step().unwrap();
+    assert_eq!(sess.metrics().admitted, 8, "full queue released despite the window");
+    assert_eq!(sess.live(), 1, "short requests retired at prefill");
+    // a busy engine admits late arrivals immediately, no hold
+    sess.enqueue(req(100, 3, 4));
+    sess.step().unwrap();
+    assert_eq!(sess.pending(), 0, "mid-flight admission skips the hold window");
+    assert_eq!(sess.live(), 2);
+}
+
+#[test]
+fn zero_wait_admits_single_request_immediately() {
+    let mut sess = session(vec![1, 8], Duration::ZERO);
+    sess.enqueue(req(0, 3, 2));
+    sess.step().unwrap();
+    assert_eq!(sess.live(), 1);
+}
+
+// ---------------------------------------------------------------------------
+// property: any trace through the scheduler is token-exact, slots
+// balance, and occupancy accounting is consistent
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_random_traces_are_token_exact_and_balanced() {
+    prop::check(
+        "continuous scheduling preserves per-request token streams",
+        prop::Config { cases: 60, seed: 0x5C4ED, max_size: 40 },
+        |rng: &mut Rng, size| {
+            // random bucket ladder, arrivals, request shapes
+            let mut buckets = vec![1 + rng.below(4)];
+            while rng.f32() < 0.5 && buckets.len() < 4 {
+                buckets.push(buckets.last().unwrap() + 1 + rng.below(8));
+            }
+            let kv_cap = 24 + rng.below(32);
+            let n_req = 1 + rng.below(size.max(1));
+            let pool = *buckets.iter().max().unwrap();
+            let mut sess = ContinuousSession::new(
+                BatcherConfig { buckets: buckets.clone(), max_wait: Duration::ZERO },
+                StubForward::new(pool, VOCAB, kv_cap),
+            );
+            let mut reqs = Vec::new();
+            for i in 0..n_req {
+                let r = Request::new(
+                    i as u64,
+                    (0..1 + rng.below(12)).map(|_| rng.below(VOCAB)).collect(),
+                    GenParams {
+                        max_new_tokens: 1 + rng.below(20),
+                        temperature: if rng.f32() < 0.5 { 0.0 } else { 0.8 },
+                        seed: rng.next_u64(),
+                        stop_token: if rng.f32() < 0.3 { Some(rng.below(VOCAB)) } else { None },
+                    },
+                );
+                reqs.push(r);
+            }
+            // staggered arrivals: enqueue a random chunk, then step
+            let mut pending: std::collections::VecDeque<Request> = reqs.iter().cloned().collect();
+            let mut results = Vec::new();
+            let mut guard = 0;
+            while !(pending.is_empty() && sess.is_idle()) {
+                let burst = rng.below(4);
+                for _ in 0..burst {
+                    if let Some(r) = pending.pop_front() {
+                        sess.enqueue(r);
+                    }
+                }
+                results.extend(sess.step().map_err(|e| e.to_string())?);
+                guard += 1;
+                prop_assert!(guard < 100_000, "scheduler failed to converge");
+            }
+            prop_assert!(results.len() == n_req, "lost requests: {} != {n_req}", results.len());
+            for r in &results {
+                let want = stub_reference(&reqs[r.id as usize], VOCAB, kv_cap);
+                prop_assert!(
+                    r.tokens == want,
+                    "request {} diverged: {:?} != {:?}",
+                    r.id,
+                    r.tokens,
+                    want
+                );
+            }
+            let m = sess.metrics();
+            prop_assert!(m.admitted == n_req as u64, "admitted {} != {n_req}", m.admitted);
+            prop_assert!(m.retired == n_req as u64, "retired {} != {n_req}", m.retired);
+            prop_assert!(
+                m.live_row_steps <= m.bucket_row_steps,
+                "occupancy over 100%: {} > {}",
+                m.live_row_steps,
+                m.bucket_row_steps
+            );
+            prop_assert!(
+                sess.forward().live_contexts() == 0,
+                "leaked {} slot contexts",
+                sess.forward().live_contexts()
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_bucket_is_minimal_every_step() {
+    // drive the scheduler manually and check the covering invariant on
+    // each recorded step via the session's occupancy counters
+    prop::check(
+        "per-step bucket rows cover live rows minimally",
+        prop::Config { cases: 40, seed: 0xB0CE7, max_size: 24 },
+        |rng: &mut Rng, size| {
+            let buckets = vec![1, 3, 9];
+            let mut sess = ContinuousSession::new(
+                BatcherConfig { buckets, max_wait: Duration::ZERO },
+                StubForward::new(9, VOCAB, usize::MAX),
+            );
+            for i in 0..(1 + rng.below(size.max(1))) {
+                sess.enqueue(req(i as u64, 1 + rng.below(6), 1 + rng.below(9)));
+            }
+            let mut prev_steps = 0;
+            let mut prev_live = 0;
+            let mut prev_bucket = 0;
+            while !sess.is_idle() {
+                sess.step().map_err(|e| e.to_string())?;
+                let m = sess.metrics();
+                if m.decode_steps > prev_steps {
+                    let live = (m.live_row_steps - prev_live) as usize;
+                    let bucket = (m.bucket_row_steps - prev_bucket) as usize;
+                    prop_assert!(bucket >= live, "bucket {bucket} < live {live}");
+                    prop_assert!(
+                        [1usize, 3, 9].contains(&bucket),
+                        "bucket {bucket} not configured"
+                    );
+                    prop_assert!(
+                        ![1usize, 3, 9].iter().any(|&c| c >= live && c < bucket),
+                        "bucket {bucket} for {live} live rows is not minimal"
+                    );
+                    prev_steps = m.decode_steps;
+                    prev_live = m.live_row_steps;
+                    prev_bucket = m.bucket_row_steps;
+                }
+            }
+            Ok(())
+        },
+    );
+}

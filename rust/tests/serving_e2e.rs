@@ -1,4 +1,6 @@
-//! Integration: the serving engine end-to-end in all three exec modes.
+//! Integration: the serving engine end-to-end in all three exec modes,
+//! through both scheduling paths — continuous in-flight batching (the
+//! `run_queue` default) and run-to-completion waves (the reference).
 //! Skipped when artifacts are absent.
 
 use cmoe::eval::forward::DenseForward;
@@ -64,8 +66,13 @@ fn dense_engine_generates() {
         assert!(r.ttft.as_nanos() > 0);
     }
     let m = engine.metrics.lock().unwrap();
-    assert_eq!(m.waves.len(), 2);
+    // continuous scheduling: one run summary, per-step accounting in
+    // the scheduler gauges
+    assert_eq!(m.waves.len(), 1);
     assert!(m.decode_tps() > 0.0);
+    assert_eq!(m.scheduler.admitted, 2);
+    assert_eq!(m.scheduler.retired, 2);
+    assert!(m.scheduler.decode_steps > 0);
 }
 
 #[test]
@@ -146,6 +153,121 @@ fn moe_orchestrated_matches_monolithic_greedy() {
     let mono = gen(ExecMode::MoeMonolithic, moe.clone(), rt.clone());
     let orch = gen(ExecMode::MoeOrchestrated, moe, rt);
     assert_eq!(mono, orch, "orchestrated and monolithic MoE disagree");
+}
+
+/// Build random-weight `small` dense + converted models (the `small`
+/// artifact family is the only one compiled at batch > 1, which the
+/// mixed-length batch tests need).
+fn small_models(rng: &mut Rng) -> (ModelWeights, ModelWeights) {
+    let cfg = model_config("small").unwrap();
+    let dense = ModelWeights::random(&cfg, rng);
+    let fwd = DenseForward::new(&dense);
+    let calib: Vec<usize> = (0..192).map(|_| rng.below(cfg.vocab)).collect();
+    let profiles: Vec<_> = fwd
+        .capture_hidden(&calib)
+        .iter()
+        .map(|h| cmoe::profiling::ActivationProfile::from_hidden(h, 24))
+        .collect();
+    let moe = cmoe::converter::convert_model(
+        &dense,
+        &profiles,
+        &"S3A3E8".parse().unwrap(),
+        &cmoe::converter::ConvertOptions::default(),
+    )
+    .unwrap()
+    .model;
+    (dense, moe)
+}
+
+/// Mixed-length batch: heterogeneous prompts (all ≤ the compiled s so
+/// each request's prefill padding is scheduling-independent), mixed
+/// max_new_tokens, and stop tokens on half the requests.
+fn mixed_requests(first_pass: Option<&[Vec<usize>]>, rng: &mut Rng) -> Vec<Request> {
+    let lens = [12usize, 4, 9, 15, 6, 11];
+    let max_new = [12usize, 3, 8, 5, 10, 2];
+    (0..6)
+        .map(|i| {
+            let prompt: Vec<usize> = (0..lens[i]).map(|_| rng.below(250)).collect();
+            // second pass: requests 0/2/4 stop at their first pass's
+            // 2nd token — genuine mid-batch early retirement
+            let stop_token = first_pass.and_then(|toks| {
+                // only when unambiguous: the 2nd token must differ from
+                // the 1st, so stopping can only happen at index 1
+                if i % 2 == 0 && toks[i].len() > 1 && toks[i][1] != toks[i][0] {
+                    Some(toks[i][1])
+                } else {
+                    None
+                }
+            });
+            Request::new(
+                i as u64,
+                prompt,
+                GenParams { max_new_tokens: max_new[i], temperature: 0.0, seed: i as u64, stop_token },
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn continuous_matches_waves_mixed_lengths_and_stops_all_modes() {
+    // Per-request tokens under continuous in-flight batching must be
+    // identical to the run-to-completion wave engine, for every exec
+    // mode, on one batch mixing prompt lengths, generation lengths and
+    // stop tokens. Fresh engine per run: the orchestrated bias adapter
+    // is engine state (balance is disabled anyway for exactness).
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(417);
+    let (dense, moe) = small_models(&mut rng);
+    let spec: cmoe::model::MoeSpec = "S3A3E8".parse().unwrap();
+    let modes: [(ExecMode, &ModelWeights); 3] = [
+        (ExecMode::Dense, &dense),
+        (ExecMode::MoeMonolithic, &moe),
+        (ExecMode::MoeOrchestrated, &moe),
+    ];
+    for (mode, model) in modes {
+        let mk_cfg = || {
+            let mut cfg = match mode {
+                ExecMode::Dense => EngineConfig::dense("small", 64),
+                m => EngineConfig::moe("small", 64, spec, m),
+            };
+            cfg.batcher.buckets = vec![1, 8];
+            cfg.batcher.max_wait = std::time::Duration::ZERO;
+            cfg.balance = None;
+            cfg
+        };
+        let run = |continuous: bool, reqs: Vec<Request>| {
+            let engine = Engine::new(rt.clone(), model.clone(), mk_cfg()).unwrap();
+            let results = if continuous {
+                engine.run_queue(reqs).unwrap()
+            } else {
+                engine.run_queue_waves(reqs).unwrap()
+            };
+            results.iter().map(|r| r.tokens.clone()).collect::<Vec<_>>()
+        };
+
+        // pass 1 (no stops) discovers tokens; pass 2 adds stop tokens
+        let mut prng = Rng::new(99);
+        let probe = run(true, mixed_requests(None, &mut prng));
+        let mut prng2 = Rng::new(99);
+        let reqs = mixed_requests(Some(probe.as_slice()), &mut prng2);
+        let max_new: Vec<usize> = reqs.iter().map(|r| r.params.max_new_tokens).collect();
+        let stops: Vec<Option<usize>> = reqs.iter().map(|r| r.params.stop_token).collect();
+
+        let cont = run(true, reqs.clone());
+        let waves = run(false, reqs);
+        assert_eq!(cont, waves, "continuous vs waves diverged in {mode:?}");
+        for (i, toks) in cont.iter().enumerate() {
+            assert!(!toks.is_empty() && toks.len() <= max_new[i]);
+            if let Some(stop) = stops[i] {
+                // stop at its 2nd token → early retirement mid-batch
+                assert_eq!(toks.len(), 2, "request {i} ignored its stop token in {mode:?}");
+                assert_eq!(*toks.last().unwrap(), stop);
+            }
+        }
+        // lengths genuinely differ inside the one batch
+        let lens: std::collections::HashSet<usize> = cont.iter().map(|t| t.len()).collect();
+        assert!(lens.len() >= 2, "batch was not mixed-length: {lens:?}");
+    }
 }
 
 #[test]

@@ -26,6 +26,14 @@ cargo test -q
 echo "==> golden CMoE pipeline equivalence + method-registry parity (release)"
 cargo test -q --release --test pipeline_golden --test method_registry
 
+# Pin the continuous-batching contract the same way: the scheduler
+# property suite (bucket/FIFO/slot invariants) and the seeded-trace
+# simulation (token identity vs the run-to-completion reference, no
+# starvation) are host-only — they must pass on a clone with no
+# artifacts, and under --release to catch optimization-dependent drift.
+echo "==> continuous-batching scheduler + seeded-trace simulation (release)"
+cargo test -q --release --test scheduler --test continuous_sim
+
 echo "==> cargo doc --no-deps"
 RUSTDOCFLAGS="${RUSTDOCFLAGS:--D warnings}" cargo doc --no-deps
 
