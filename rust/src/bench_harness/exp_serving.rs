@@ -22,7 +22,8 @@ use crate::moe::{route_tokens, GroupedRouting};
 use crate::profiling::ActivationProfile;
 use crate::serving::{
     per_token_reference, stub_reference, BatcherConfig, ContinuousSession, DispatchArena,
-    Engine, EngineConfig, ExecMode, GenParams, GroupedDispatcher, Request, StubForward,
+    Engine, EngineConfig, ExecMode, GenParams, GroupedDispatcher, Request, StepForward,
+    StubForward,
 };
 use crate::tensor::{self, Tensor};
 use crate::util::stats::percentile;
@@ -361,7 +362,9 @@ fn wave_sim(trace: &[(u64, Request)]) -> SimOutcome {
 /// The scheduling sweep as a bench-harness experiment (`cmoe bench
 /// --exp serving`). Artifact-free; exports a repo-root
 /// `BENCH_serving.json` so successive PRs can diff serving throughput,
-/// TTFT and occupancy without digging through results/ directories.
+/// TTFT and occupancy without digging through results/ directories —
+/// and, since the paged-KV PR, also refreshes `BENCH_prefix.json` so
+/// one `--exp serving` run keeps the whole serving trajectory current.
 pub fn serving_sweep(ctx: &mut Ctx) -> Result<Table> {
     let t = serving_sweep_table(ctx.seed, 160)?;
     ctx.save("serving", std::slice::from_ref(&t))?;
@@ -370,6 +373,197 @@ pub fn serving_sweep(ctx: &mut Ctx) -> Result<Table> {
     std::fs::write(&path, t.to_json().pretty())
         .with_context(|| format!("write {}", path.display()))?;
     eprintln!("serving sweep exported to {}", path.display());
+    export_prefix_json(ctx)?;
+    Ok(t)
+}
+
+// ---------------------------------------------------------------------------
+// Prefix sweep: shared-system-prompt workload, KV page sharing on vs off
+// ---------------------------------------------------------------------------
+
+/// Tokens per KV page in the prefix sweep (system prompts span several
+/// pages, so sharing has something to map).
+const PREFIX_PAGE_LEN: usize = 8;
+/// System-prompt length in tokens (3 pages at `PREFIX_PAGE_LEN`).
+const PREFIX_SYS_LEN: usize = 24;
+/// Distinct system prompts in the workload.
+const PREFIX_N_SYS: usize = 3;
+
+/// Shared-system-prompt open-loop trace: every request is one of
+/// `PREFIX_N_SYS` fixed system prompts plus a short unique user
+/// suffix — the ROADMAP's "millions of users with near-identical
+/// preambles" workload in miniature.
+fn gen_prefix_trace(rng: &mut Rng, lambda: f64, n_req: usize) -> Vec<(u64, Request)> {
+    let sys: Vec<Vec<usize>> = (0..PREFIX_N_SYS)
+        .map(|_| (0..PREFIX_SYS_LEN).map(|_| rng.below(SWEEP_VOCAB)).collect())
+        .collect();
+    let mut out = Vec::with_capacity(n_req);
+    let mut step = 0u64;
+    while out.len() < n_req {
+        for _ in 0..poisson(rng, lambda) {
+            if out.len() >= n_req {
+                break;
+            }
+            let id = out.len() as u64;
+            // suffixes stay below one page, so the cache only ever
+            // holds the genuinely shared system pages
+            let mut prompt = sys[rng.below(PREFIX_N_SYS)].clone();
+            prompt.extend((0..2 + rng.below(6)).map(|_| rng.below(SWEEP_VOCAB)));
+            let params = GenParams {
+                max_new_tokens: 2 + rng.below(24),
+                temperature: 0.0,
+                seed: id ^ 0x9A6E,
+                stop_token: if rng.f32() < 0.15 { Some(rng.below(SWEEP_VOCAB)) } else { None },
+            };
+            out.push((step, Request::new(id, prompt, params)));
+        }
+        step += 1;
+    }
+    out
+}
+
+/// One sharing policy's outcome over one trace.
+struct PrefixOutcome {
+    /// Per-request token streams, indexed by request id (the identity
+    /// oracle between the two policies).
+    tokens_by_id: Vec<Vec<usize>>,
+    decode_steps: u64,
+    generated: usize,
+    prefill_tokens: u64,
+    prefill_saved: u64,
+    hit_rate: f64,
+    high_water_pages: usize,
+    cow_copies: u64,
+    ttft_steps: Vec<f32>,
+}
+
+impl PrefixOutcome {
+    fn tok_per_step(&self) -> f64 {
+        if self.decode_steps == 0 {
+            return 0.0;
+        }
+        self.generated as f64 / self.decode_steps as f64
+    }
+
+    fn row(&self, sharing: &str, lambda: f64) -> Vec<String> {
+        vec![
+            sharing.into(),
+            format!("{lambda:.1}"),
+            self.tokens_by_id.len().to_string(),
+            self.prefill_tokens.to_string(),
+            self.prefill_saved.to_string(),
+            format!("{:.0}%", self.hit_rate * 100.0),
+            self.high_water_pages.to_string(),
+            self.cow_copies.to_string(),
+            f(self.tok_per_step(), 2),
+            f(percentile(&self.ttft_steps, 50.0) as f64, 1),
+        ]
+    }
+}
+
+/// Replay a shared-prefix trace through the continuous session with KV
+/// page sharing on or off (same paged pool either way — only the
+/// prefix cache differs).
+fn prefix_sim(trace: &[(u64, Request)], sharing: bool) -> Result<PrefixOutcome> {
+    let pool = *SWEEP_BUCKETS.last().unwrap();
+    let fwd = if sharing {
+        StubForward::with_prefix_cache(pool, SWEEP_VOCAB, SWEEP_KV_CAP, PREFIX_PAGE_LEN)
+    } else {
+        StubForward::new(pool, SWEEP_VOCAB, SWEEP_KV_CAP)
+    };
+    let mut sess = ContinuousSession::new(
+        BatcherConfig { buckets: SWEEP_BUCKETS.to_vec(), max_wait: Duration::ZERO },
+        fwd,
+    );
+    let mut next = 0;
+    let mut tokens_by_id: Vec<Vec<usize>> = vec![Vec::new(); trace.len()];
+    let mut generated = 0usize;
+    let mut ttft_steps = Vec::new();
+    while next < trace.len() || !sess.is_idle() {
+        while next < trace.len() && trace[next].0 <= sess.step_index() {
+            sess.enqueue(trace[next].1.clone());
+            next += 1;
+        }
+        for r in sess.step()? {
+            generated += r.tokens.len();
+            ttft_steps.push(r.queued_steps as f32 + 1.0);
+            tokens_by_id[r.id as usize] = r.tokens;
+        }
+        anyhow::ensure!(sess.step_index() < 10_000_000, "prefix sweep failed to converge");
+    }
+    let m = sess.metrics();
+    let pm = sess.forward().page_metrics().expect("stub owns a page pool");
+    Ok(PrefixOutcome {
+        decode_steps: m.decode_steps,
+        generated,
+        prefill_tokens: m.prefill_tokens,
+        prefill_saved: m.prefill_tokens_saved,
+        hit_rate: m.prefix_hit_rate(),
+        high_water_pages: pm.high_water_pages,
+        cow_copies: pm.cow_copies,
+        ttft_steps,
+        tokens_by_id,
+    })
+}
+
+/// The prefix-sharing sweep core: one shared-system-prompt trace per
+/// arrival rate, replayed with the prefix cache off and on. Token
+/// identity between the two runs is an invariant, enforced here — the
+/// sweep measures only what sharing is allowed to change: prefill
+/// tokens, page occupancy, hit rate.
+pub fn prefix_sweep_table(seed: u64, n_req: usize) -> Result<Table> {
+    let mut t = Table::new(
+        "Prefix sweep — shared-system-prompt workload, KV page sharing off vs on \
+         (stub model; page_len 8, 3 system prompts × 24 tokens; buckets {1,8,32})",
+        &[
+            "Sharing",
+            "λ/step",
+            "Requests",
+            "Prefill tok",
+            "Reused tok",
+            "Hit rate",
+            "KV pages hw",
+            "COW",
+            "tok/step",
+            "TTFT p50 (steps)",
+        ],
+    );
+    for &lambda in &[1.0f64, 4.0, 8.0] {
+        let mut rng = Rng::new(seed ^ ((lambda * 8.0) as u64) ^ 0x9A6E);
+        let trace = gen_prefix_trace(&mut rng, lambda, n_req);
+        let off = prefix_sim(&trace, false)?;
+        let on = prefix_sim(&trace, true)?;
+        anyhow::ensure!(
+            off.tokens_by_id == on.tokens_by_id,
+            "prefix sharing changed a token stream at λ={lambda}"
+        );
+        anyhow::ensure!(
+            on.prefill_tokens + on.prefill_saved == off.prefill_tokens,
+            "prefill accounting leak at λ={lambda}"
+        );
+        t.row(off.row("off", lambda));
+        t.row(on.row("on", lambda));
+    }
+    Ok(t)
+}
+
+/// The prefix sweep as a bench-harness experiment (`cmoe bench --exp
+/// prefix`). Artifact-free; exports the repo-root `BENCH_prefix.json`
+/// for the cross-PR serving-memory trajectory (also refreshed by
+/// `--exp serving`).
+pub fn prefix_sweep(ctx: &mut Ctx) -> Result<Table> {
+    let t = export_prefix_json(ctx)?;
+    ctx.save("prefix", std::slice::from_ref(&t))?;
+    Ok(t)
+}
+
+fn export_prefix_json(ctx: &mut Ctx) -> Result<Table> {
+    let t = prefix_sweep_table(ctx.seed, 120)?;
+    let root = crate::util::repo_root().unwrap_or_else(|| ctx.out_dir.clone());
+    let path = root.join("BENCH_prefix.json");
+    std::fs::write(&path, t.to_json().pretty())
+        .with_context(|| format!("write {}", path.display()))?;
+    eprintln!("prefix sweep exported to {}", path.display());
     Ok(t)
 }
 
@@ -670,6 +864,39 @@ mod tests {
                 waves[6]
             );
         }
+    }
+
+    #[test]
+    fn prefix_sweep_shares_without_changing_tokens() {
+        // prefix_sweep_table itself enforces the acceptance invariant
+        // (bit-identical tokens, exact prefill accounting); here we pin
+        // that sharing actually *does* something on this workload
+        let t = prefix_sweep_table(0xFACE, 72).unwrap();
+        assert_eq!(t.rows.len(), 6, "3 arrival rates × off/on");
+        let n = |row: &[String], i: usize| row[i].parse::<u64>().unwrap();
+        for pair in t.rows.chunks(2) {
+            let (off, on) = (&pair[0], &pair[1]);
+            assert_eq!(off[0], "off");
+            assert_eq!(on[0], "on");
+            assert_eq!(off[1], on[1], "rows must share λ");
+            assert_eq!(n(off, 4), 0, "sharing off reuses nothing");
+            assert!(
+                n(on, 3) < n(off, 3),
+                "sharing must prefill strictly fewer tokens at λ={}",
+                on[1]
+            );
+            assert!(n(on, 4) > 0, "no tokens reused at λ={}", on[1]);
+        }
+        // busiest arrival rate: resident KV pages must drop strictly
+        // (one physical copy of each hot system prompt instead of one
+        // per live slot); quieter rates only pay the cache's holds
+        let (off, on) = (&t.rows[4], &t.rows[5]);
+        assert!(
+            n(on, 6) < n(off, 6),
+            "page high-water did not drop under sharing: {} vs {}",
+            on[6],
+            off[6]
+        );
     }
 
     #[test]

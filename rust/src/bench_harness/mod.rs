@@ -20,11 +20,13 @@ use anyhow::{bail, Result};
 use common::Ctx;
 
 /// Every experiment id, in paper order; `dispatch` (the grouped expert
-/// dispatch sweep) and `serving` (continuous-vs-waves scheduling
-/// sweep), both artifact-free, ride at the end.
+/// dispatch sweep), `serving` (continuous-vs-waves scheduling sweep)
+/// and `prefix` (shared-system-prompt KV page sharing sweep), all
+/// artifact-free, ride at the end.
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "fig1", "fig2", "table1", "table2", "table3", "table4", "table5", "table6", "table7",
     "table8", "table9", "table10", "table11", "fig4", "fig5", "fig6", "dispatch", "serving",
+    "prefix",
 ];
 
 /// Run one experiment by id.
@@ -46,6 +48,7 @@ pub fn run(exp: &str, ctx: &mut Ctx) -> Result<Vec<Table>> {
         "table9" => vec![exp_serving::table9(ctx)?],
         "dispatch" => vec![exp_serving::dispatch_sweep(ctx)?],
         "serving" => vec![exp_serving::serving_sweep(ctx)?],
+        "prefix" => vec![exp_serving::prefix_sweep(ctx)?],
         "table10" => vec![exp_quality::table10(ctx)?],
         "table11" => vec![exp_quality::table11(ctx)?],
         "ablate" => vec![

@@ -8,6 +8,7 @@
 //! cmoe eval     --model <cmw> [--ppl markov,arith]
 //! cmoe serve    --model <cmw> --mode dense|moe|orchestrated [--spec S3A3E8] --requests 32
 //!               [--sched continuous|waves] [--buckets 1,8,32]
+//!               [--page-len 16] [--prefix-cache]
 //! cmoe bench    --exp table1|fig2|serving|all [--out results/]
 //! cmoe info     # artifact + zoo inventory
 //! ```
@@ -21,7 +22,7 @@ use cmoe::pipeline::{registry, Pipeline};
 use cmoe::util::argparse::Args;
 
 fn main() {
-    let args = Args::from_env(&["verbose", "no-finetune"]);
+    let args = Args::from_env(&["verbose", "no-finetune", "prefix-cache"]);
     let code = match run(&args) {
         Ok(()) => 0,
         Err(e) => {
@@ -215,6 +216,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None => vec![batch],
     };
     cfg.batcher.max_wait = std::time::Duration::ZERO;
+    // paged KV: --page-len sets the slot pool's page size; --prefix-cache
+    // deduplicates shared prefill rows across requests (memory dedup on
+    // the artifact path — see serving::engine)
+    cfg.page_len = args.get_usize("page-len", cmoe::serving::DEFAULT_PAGE_LEN).max(1);
+    cfg.prefix_cache = args.has("prefix-cache");
     let sched = args.get_or("sched", "continuous").to_string();
     let engine = Engine::new(rt, model, cfg)?;
 

@@ -1,62 +1,89 @@
-//! Per-slot KV cache pool for continuous batching.
+//! Paged per-slot KV cache pool for continuous batching.
 //!
-//! The wave engine keeps one device-resident KV buffer per wave,
-//! shaped `[L, 2, bucket, H, T, hd]` — fine when batch membership is
-//! frozen for the wave's lifetime. Continuous batching changes batch
-//! membership (and the bucket) every step, so KV ownership moves to
-//! the *slot*: each KV slot owns a host-resident `[L, 2, H, T, hd]`
-//! buffer, and every step the engine gathers the live slots' rows into
-//! a bucket-shaped batch buffer, runs the compiled step, and scatters
-//! the updated rows back.
+//! The pre-paging pool gave every KV slot a full-length host buffer
+//! `[L, 2, H, T, hd]` — a short prompt paid for the whole horizon, and
+//! identical system-prompt prefixes were stored once per request. This
+//! rewrite moves ownership to fixed-size **pages** (`page_len` tokens ×
+//! `[L, 2, H, hd]`, allocator: [`PagePool`]): a slot holds a page
+//! *table* covering exactly its written extent, pages are
+//! reference-counted so several slots can map the same physical prefix
+//! pages (`serving::prefix_cache` hands them out), and any write into a
+//! shared page copies it first (copy-on-write, [`PagePool::try_page_mut`]).
 //!
-//! Cost model: this round-trips KV through the host once per decode
-//! step — the price of changing the bucket under AOT-compiled
-//! fixed-shape artifacts. The wave path keeps its device-resident KV
-//! (no regression there); a future device-side slot pool (a
-//! `gather_kv`/`scatter_kv` artifact pair) slots in behind the same
-//! gather/scatter interface. Scheduling correctness is independent of
-//! where KV lives, which is what the scheduler test suites exercise.
+//! Cost model: the engine still round-trips KV through the host once
+//! per decode step (the price of changing the bucket under AOT
+//! fixed-shape artifacts), but the *host-resident* footprint is now
+//! `Σ ceil(extent / page_len)` pages instead of `slots × T` planes, the
+//! per-step scatter shrinks from the whole horizon to the one token
+//! position the step wrote, and shared prefixes are stored once.
+//! Gather still materializes a bucket-shaped `[L, 2, B, H, T, hd]`
+//! buffer (zero beyond each slot's extent — exactly the bytes the old
+//! contiguous pool produced, so the artifact path is bit-identical);
+//! a future device-side page table slots in behind the same interface.
 //!
 //! Layout contract (matches `python/compile/aot.py`):
 //! * batch KV: `[L, 2, B, H, T, hd]`, row-major;
 //! * per-layer KV (orchestrated mode): `[2, B, H, T, hd]`;
-//! * slot KV: `[L, 2, H, T, hd]` — the batch layout with the batch
-//!   axis removed.
+//! * page: `[L, 2, H, page_len, hd]` — the batch layout with the batch
+//!   axis removed and `T` cut into `page_len` runs.
 //!
-//! Slots allocate lazily on first write and keep their buffer across
-//! release/reuse (prefill overwrites the whole slot, including the
-//! zero padding beyond the prompt, so stale data can never leak into a
-//! recycled slot).
+//! Stale-data guarantee: pages are zeroed at allocation
+//! ([`PagePool::try_alloc`]) and a slot's extent only covers positions
+//! it wrote or mapped, so a recycled page can never leak another
+//! request's KV — property-tested in `tests/page_pool.rs` (the old
+//! "prefill overwrites the whole slot" discipline no longer applies at
+//! page granularity).
 
-/// Host-side pool of per-slot KV buffers.
+use crate::runtime::pages::PagePool;
+
+/// One slot's view of the paged pool.
+#[derive(Default)]
+struct SlotPages {
+    /// Page ids covering tokens `[0, table.len() * page_len)`.
+    table: Vec<usize>,
+    /// Valid token positions `[0, extent)`.
+    extent: usize,
+}
+
+/// Host-side pool of per-slot paged KV.
 pub struct KvSlotPool {
     layers: usize,
+    heads: usize,
+    /// KV horizon `T` of the batch buffers. Host-only users (the stub
+    /// forward) may pass a huge value; batch gathers are then unusable
+    /// but token reads/writes (all they need) are fine.
     kv_len: usize,
-    /// Elements in one `[H, T, hd]` plane.
-    plane: usize,
-    /// Elements in one slot buffer: `layers * 2 * plane`.
-    slot_elems: usize,
-    slots: Vec<Option<Vec<f32>>>,
-    /// Most slots ever allocated at once (memory gauge).
-    pub high_water_slots: usize,
+    head_dim: usize,
+    pages: PagePool,
+    slots: Vec<SlotPages>,
+    /// Shared-prefix mappings performed (gauge).
+    pub shared_maps: u64,
 }
 
 impl KvSlotPool {
+    /// `max_pages = None` grows on demand; the artifact engine passes
+    /// `pool * ceil(kv_len / page_len)` so the worst case (every slot
+    /// fully private at full horizon) always fits and prefix sharing
+    /// only ever *frees* headroom.
     pub fn new(
         pool: usize,
         layers: usize,
         heads: usize,
         kv_len: usize,
         head_dim: usize,
+        page_len: usize,
+        max_pages: Option<usize>,
     ) -> KvSlotPool {
-        let plane = heads * kv_len * head_dim;
+        assert!(page_len >= 1, "page_len 0 is not a page");
+        let page_elems = layers * 2 * heads * page_len * head_dim;
         KvSlotPool {
             layers,
+            heads,
             kv_len,
-            plane,
-            slot_elems: layers * 2 * plane,
-            slots: (0..pool).map(|_| None).collect(),
-            high_water_slots: 0,
+            head_dim,
+            pages: PagePool::new(page_len, page_elems, max_pages),
+            slots: (0..pool).map(|_| SlotPages::default()).collect(),
+            shared_maps: 0,
         }
     }
 
@@ -68,69 +95,224 @@ impl KvSlotPool {
         self.kv_len
     }
 
+    pub fn page_len(&self) -> usize {
+        self.pages.page_len()
+    }
+
+    /// The allocator (gauges: high-water pages, COW copies, …).
+    pub fn pages(&self) -> &PagePool {
+        &self.pages
+    }
+
+    /// Mutable allocator access for the prefix cache (retain on
+    /// insert, release on eviction).
+    pub fn pages_mut(&mut self) -> &mut PagePool {
+        &mut self.pages
+    }
+
+    /// Elements in one token's column across all `[L, 2, H, hd]` planes.
+    pub fn token_elems(&self) -> usize {
+        self.layers * 2 * self.heads * self.head_dim
+    }
+
     /// Elements in a full batch buffer at `bucket` rows.
     pub fn batch_elems(&self, bucket: usize) -> usize {
-        self.slot_elems * bucket
+        self.layers * 2 * bucket * self.heads * self.kv_len * self.head_dim
     }
 
     /// Elements in one layer's batch buffer at `bucket` rows.
     pub fn layer_elems(&self, bucket: usize) -> usize {
-        2 * bucket * self.plane
+        2 * bucket * self.heads * self.kv_len * self.head_dim
     }
 
-    fn ensure(&mut self, slot: usize) -> &mut Vec<f32> {
-        if self.slots[slot].is_none() {
-            self.slots[slot] = Some(vec![0.0; self.slot_elems]);
-            let n = self.slots.iter().filter(|s| s.is_some()).count();
-            self.high_water_slots = self.high_water_slots.max(n);
+    /// Valid token positions of `slot` (`0` = empty).
+    pub fn extent(&self, slot: usize) -> usize {
+        self.slots[slot].extent
+    }
+
+    /// The slot's page table (ids, in token order).
+    pub fn slot_pages(&self, slot: usize) -> &[usize] {
+        &self.slots[slot].table
+    }
+
+    /// Pages the slot still needs to cover `tokens` positions.
+    pub fn pages_to_cover(&self, slot: usize, tokens: usize) -> usize {
+        let pl = self.pages.page_len();
+        let need = (tokens + pl - 1) / pl;
+        need.saturating_sub(self.slots[slot].table.len())
+    }
+
+    /// Pages allocatable without eviction (`None` = unbounded).
+    pub fn pages_available(&self) -> Option<usize> {
+        self.pages.available()
+    }
+
+    /// Map shared prefix pages into an **empty** slot (one reference
+    /// each). `tokens` must equal the pages' full coverage — partial
+    /// final pages are never shared, so a slot's gather stays
+    /// bit-identical to the unshared path.
+    pub fn map_shared(&mut self, slot: usize, pages: &[usize], tokens: usize) {
+        let st = &self.slots[slot];
+        assert!(st.table.is_empty() && st.extent == 0, "map_shared into an occupied slot {slot}");
+        assert_eq!(tokens, pages.len() * self.pages.page_len(), "shared mapping must be whole pages");
+        for &p in pages {
+            self.pages.retain(p);
         }
-        self.slots[slot].as_mut().unwrap()
+        let st = &mut self.slots[slot];
+        st.table.extend_from_slice(pages);
+        st.extent = tokens;
+        self.shared_maps += 1;
     }
 
-    /// Copy row `row` of a downloaded `[L, 2, B, H, T, hd]` batch
-    /// buffer into `slot` (prefill ingest — full overwrite).
-    pub fn store_from_batch(&mut self, slot: usize, batch: &[f32], bucket: usize, row: usize) {
+    /// Grow the slot's table to cover `tokens` positions with fresh
+    /// zeroed pages. Panics on pool exhaustion — callers reserve
+    /// headroom first (evicting prefix-cache holds under pressure).
+    fn ensure_pages(&mut self, slot: usize, tokens: usize) {
+        let pl = self.pages.page_len();
+        let need = (tokens + pl - 1) / pl;
+        while self.slots[slot].table.len() < need {
+            let p = self
+                .pages
+                .try_alloc()
+                .expect("kv page pool exhausted — reserve/evict before writing");
+            self.slots[slot].table.push(p);
+        }
+    }
+
+    /// Write one token column (`token_elems` values, plane order
+    /// `[L, 2, H, hd]`) at position `pos`, allocating/COW-ing pages as
+    /// needed.
+    pub fn write_token(&mut self, slot: usize, pos: usize, col: &[f32]) {
+        assert_eq!(col.len(), self.token_elems(), "kv token column size");
+        self.ensure_pages(slot, pos + 1);
+        let (pl, hd) = (self.pages.page_len(), self.head_dim);
+        let tp = pos % pl;
+        let st = &mut self.slots[slot];
+        let page = self
+            .pages
+            .try_page_mut(&mut st.table[pos / pl])
+            .expect("kv page pool exhausted during COW");
+        for ph in 0..self.layers * 2 * self.heads {
+            let dst = (ph * pl + tp) * hd;
+            page[dst..dst + hd].copy_from_slice(&col[ph * hd..(ph + 1) * hd]);
+        }
+        st.extent = st.extent.max(pos + 1);
+    }
+
+    /// Read one token column at `pos` (must be below the extent).
+    pub fn read_token(&self, slot: usize, pos: usize, col: &mut [f32]) {
+        assert_eq!(col.len(), self.token_elems(), "kv token column size");
+        let st = &self.slots[slot];
+        assert!(pos < st.extent, "kv read at {pos} beyond extent {}", st.extent);
+        let (pl, hd) = (self.pages.page_len(), self.head_dim);
+        let page = self.pages.page(st.table[pos / pl]);
+        let tp = pos % pl;
+        for ph in 0..self.layers * 2 * self.heads {
+            let src = (ph * pl + tp) * hd;
+            col[ph * hd..(ph + 1) * hd].copy_from_slice(&page[src..src + hd]);
+        }
+    }
+
+    /// Copy token range `[from, to)` of row `row` in a downloaded
+    /// `[L, 2, B, H, T, hd]` batch buffer into the slot's pages
+    /// (prefill ingest stores `[cached, s)`; a decode step stores the
+    /// one position it wrote).
+    pub fn store_from_batch(
+        &mut self,
+        slot: usize,
+        batch: &[f32],
+        bucket: usize,
+        row: usize,
+        from: usize,
+        to: usize,
+    ) {
         assert_eq!(batch.len(), self.batch_elems(bucket), "kv batch size");
-        assert!(row < bucket);
-        let plane = self.plane;
-        let buf = self.ensure(slot);
-        for lc in 0..self.layers * 2 {
-            let src = (lc * bucket + row) * plane;
-            let dst = lc * plane;
-            buf[dst..dst + plane].copy_from_slice(&batch[src..src + plane]);
+        assert!(row < bucket && from <= to && to <= self.kv_len, "kv store range");
+        self.ensure_pages(slot, to);
+        let (pl, hd, t) = (self.pages.page_len(), self.head_dim, self.kv_len);
+        let heads = self.heads;
+        for pi in from / pl..(to + pl - 1) / pl {
+            let t0 = (pi * pl).max(from);
+            let t1 = ((pi + 1) * pl).min(to);
+            let st = &mut self.slots[slot];
+            let page = self
+                .pages
+                .try_page_mut(&mut st.table[pi])
+                .expect("kv page pool exhausted during COW");
+            for lc in 0..self.layers * 2 {
+                for h in 0..heads {
+                    let src = (((lc * bucket + row) * heads + h) * t + t0) * hd;
+                    let dst = ((lc * heads + h) * pl + (t0 - pi * pl)) * hd;
+                    page[dst..dst + (t1 - t0) * hd]
+                        .copy_from_slice(&batch[src..src + (t1 - t0) * hd]);
+                }
+            }
         }
+        let st = &mut self.slots[slot];
+        st.extent = st.extent.max(to);
+    }
+
+    /// Layer-view variant of [`KvSlotPool::store_from_batch`]:
+    /// `batch` is one layer's `[2, B, H, T, hd]` buffer.
+    #[allow(clippy::too_many_arguments)]
+    pub fn store_layer_from_batch(
+        &mut self,
+        layer: usize,
+        slot: usize,
+        batch: &[f32],
+        bucket: usize,
+        row: usize,
+        from: usize,
+        to: usize,
+    ) {
+        assert_eq!(batch.len(), self.layer_elems(bucket), "kv layer size");
+        assert!(layer < self.layers && row < bucket && from <= to && to <= self.kv_len);
+        self.ensure_pages(slot, to);
+        let (pl, hd, t) = (self.pages.page_len(), self.head_dim, self.kv_len);
+        let heads = self.heads;
+        for pi in from / pl..(to + pl - 1) / pl {
+            let t0 = (pi * pl).max(from);
+            let t1 = ((pi + 1) * pl).min(to);
+            let st = &mut self.slots[slot];
+            let page = self
+                .pages
+                .try_page_mut(&mut st.table[pi])
+                .expect("kv page pool exhausted during COW");
+            for c in 0..2 {
+                for h in 0..heads {
+                    let src = (((c * bucket + row) * heads + h) * t + t0) * hd;
+                    let dst = (((layer * 2 + c) * heads + h) * pl + (t0 - pi * pl)) * hd;
+                    page[dst..dst + (t1 - t0) * hd]
+                        .copy_from_slice(&batch[src..src + (t1 - t0) * hd]);
+                }
+            }
+        }
+        let st = &mut self.slots[slot];
+        st.extent = st.extent.max(to);
     }
 
     /// Build a `[L, 2, bucket, H, T, hd]` batch buffer from `rows`
-    /// (slot ids, one per live row); rows beyond `rows.len()` are
-    /// zero. `out` is resized and fully overwritten.
+    /// (slot ids, one per live row); positions beyond each slot's
+    /// mapped pages — and rows beyond `rows.len()` — are zero. `out`
+    /// is resized and fully overwritten.
     pub fn gather_full(&self, rows: &[usize], bucket: usize, out: &mut Vec<f32>) {
         assert!(rows.len() <= bucket);
         out.clear();
         out.resize(self.batch_elems(bucket), 0.0);
-        let plane = self.plane;
-        for lc in 0..self.layers * 2 {
-            for (b, &slot) in rows.iter().enumerate() {
-                let buf = self.slots[slot].as_ref().expect("gather from empty kv slot");
-                let src = lc * plane;
-                let dst = (lc * bucket + b) * plane;
-                out[dst..dst + plane].copy_from_slice(&buf[src..src + plane]);
-            }
-        }
-    }
-
-    /// Scatter the live rows of an updated `[L, 2, bucket, H, T, hd]`
-    /// batch buffer back into their slots.
-    pub fn scatter_full(&mut self, rows: &[usize], bucket: usize, batch: &[f32]) {
-        assert!(rows.len() <= bucket);
-        assert_eq!(batch.len(), self.batch_elems(bucket), "kv batch size");
-        let plane = self.plane;
+        let (pl, hd, t) = (self.pages.page_len(), self.head_dim, self.kv_len);
+        let heads = self.heads;
         for (b, &slot) in rows.iter().enumerate() {
-            let buf = self.ensure(slot);
-            for lc in 0..self.layers * 2 {
-                let src = (lc * bucket + b) * plane;
-                let dst = lc * plane;
-                buf[dst..dst + plane].copy_from_slice(&batch[src..src + plane]);
+            for (pi, &p) in self.slots[slot].table.iter().enumerate() {
+                let t0 = pi * pl;
+                let n = pl.min(t - t0);
+                let page = self.pages.page(p);
+                for lc in 0..self.layers * 2 {
+                    for h in 0..heads {
+                        let src = (lc * heads + h) * pl * hd;
+                        let dst = (((lc * bucket + b) * heads + h) * t + t0) * hd;
+                        out[dst..dst + n * hd].copy_from_slice(&page[src..src + n * hd]);
+                    }
+                }
             }
         }
     }
@@ -141,45 +323,44 @@ impl KvSlotPool {
         assert!(layer < self.layers && rows.len() <= bucket);
         out.clear();
         out.resize(self.layer_elems(bucket), 0.0);
-        let plane = self.plane;
-        for c in 0..2 {
-            for (b, &slot) in rows.iter().enumerate() {
-                let buf = self.slots[slot].as_ref().expect("gather from empty kv slot");
-                let src = (layer * 2 + c) * plane;
-                let dst = (c * bucket + b) * plane;
-                out[dst..dst + plane].copy_from_slice(&buf[src..src + plane]);
-            }
-        }
-    }
-
-    /// Scatter one layer's updated `[2, bucket, H, T, hd]` buffer back.
-    pub fn scatter_layer(&mut self, layer: usize, rows: &[usize], bucket: usize, batch: &[f32]) {
-        assert!(layer < self.layers && rows.len() <= bucket);
-        assert_eq!(batch.len(), self.layer_elems(bucket), "kv layer size");
-        let plane = self.plane;
+        let (pl, hd, t) = (self.pages.page_len(), self.head_dim, self.kv_len);
+        let heads = self.heads;
         for (b, &slot) in rows.iter().enumerate() {
-            let buf = self.ensure(slot);
-            for c in 0..2 {
-                let src = (c * bucket + b) * plane;
-                let dst = (layer * 2 + c) * plane;
-                buf[dst..dst + plane].copy_from_slice(&batch[src..src + plane]);
+            for (pi, &p) in self.slots[slot].table.iter().enumerate() {
+                let t0 = pi * pl;
+                let n = pl.min(t - t0);
+                let page = self.pages.page(p);
+                for c in 0..2 {
+                    for h in 0..heads {
+                        let src = ((layer * 2 + c) * heads + h) * pl * hd;
+                        let dst = (((c * bucket + b) * heads + h) * t + t0) * hd;
+                        out[dst..dst + n * hd].copy_from_slice(&page[src..src + n * hd]);
+                    }
+                }
             }
         }
     }
 
-    /// The slot retired. The buffer is kept for reuse — the next
-    /// prefill overwrites it end to end.
-    pub fn release(&mut self, _slot: usize) {}
+    /// The slot retired: drop every page reference (shared pages live
+    /// on under the prefix cache's hold; private ones return to the
+    /// free list zeroed-on-reuse).
+    pub fn release(&mut self, slot: usize) {
+        let table = std::mem::take(&mut self.slots[slot].table);
+        for p in table {
+            self.pages.release(p);
+        }
+        self.slots[slot].extent = 0;
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    /// Batch buffer whose element value encodes (lc, row, plane index)
+    /// so any layout mistake shows up as a mismatch somewhere.
     fn filled_batch(pool: &KvSlotPool, bucket: usize, tag: f32) -> Vec<f32> {
-        // element value encodes (lc, row, plane index) so any layout
-        // mistake shows up as a mismatch somewhere
-        let plane = pool.plane;
+        let plane = pool.heads * pool.kv_len * pool.head_dim;
         let mut v = vec![0.0; pool.batch_elems(bucket)];
         for lc in 0..pool.layers * 2 {
             for b in 0..bucket {
@@ -193,49 +374,55 @@ mod tests {
     }
 
     #[test]
-    fn store_gather_roundtrip() {
-        let mut pool = KvSlotPool::new(4, 2, 2, 3, 2);
+    fn store_gather_roundtrip_with_pages() {
+        // page_len 2 over T=6: three pages per full slot
+        let mut pool = KvSlotPool::new(4, 2, 2, 6, 2, 2, None);
         let batch = filled_batch(&pool, 3, 0.5);
-        pool.store_from_batch(2, &batch, 3, 1);
-        pool.store_from_batch(0, &batch, 3, 0);
-        // gather [slot2, slot0] at bucket 4: row 0 ← slot2 (batch row 1),
-        // row 1 ← slot0 (batch row 0), rows 2..4 zero
+        pool.store_from_batch(2, &batch, 3, 1, 0, 6);
+        pool.store_from_batch(0, &batch, 3, 0, 0, 4); // partial extent
+        let plane = 2 * 6 * 2;
         let mut out = Vec::new();
         pool.gather_full(&[2, 0], 4, &mut out);
-        let plane = 2 * 3 * 2;
         for lc in 0..4 {
             for p in 0..plane {
                 let want_r0 = batch[(lc * 3 + 1) * plane + p];
-                let want_r1 = batch[(lc * 3) * plane + p];
+                // slot 0 only covers tokens [0, 4): positions 4..6 zero
+                let tok = p / 2 % 6;
+                let want_r1 = if tok < 4 { batch[(lc * 3) * plane + p] } else { 0.0 };
                 assert_eq!(out[(lc * 4) * plane + p], want_r0);
                 assert_eq!(out[(lc * 4 + 1) * plane + p], want_r1);
                 assert_eq!(out[(lc * 4 + 2) * plane + p], 0.0);
                 assert_eq!(out[(lc * 4 + 3) * plane + p], 0.0);
             }
         }
+        assert_eq!(pool.pages().pages_in_use(), 3 + 2);
     }
 
     #[test]
-    fn scatter_then_gather_is_identity_on_live_rows() {
-        let mut pool = KvSlotPool::new(3, 2, 2, 2, 2);
-        let batch = filled_batch(&pool, 2, 7.0);
-        pool.scatter_full(&[1, 2], 2, &batch);
-        let mut out = Vec::new();
-        pool.gather_full(&[1, 2], 2, &mut out);
-        assert_eq!(out, batch);
-        // reordering rows permutes the batch rows accordingly
-        pool.gather_full(&[2, 1], 2, &mut out);
-        assert_ne!(out, batch);
-        let plane = 2 * 2 * 2;
-        assert_eq!(out[0], batch[plane]); // row 0 now holds slot 2's data
+    fn token_store_matches_full_store() {
+        // writing position `pos` via store_from_batch([pos, pos+1)) is
+        // the decode scatter; it must agree with a full-range store
+        let mut a = KvSlotPool::new(2, 2, 1, 5, 2, 2, None);
+        let mut b = KvSlotPool::new(2, 2, 1, 5, 2, 2, None);
+        let batch = filled_batch(&a, 1, 3.0);
+        a.store_from_batch(0, &batch, 1, 0, 0, 5);
+        for pos in 0..5 {
+            b.store_from_batch(0, &batch, 1, 0, pos, pos + 1);
+        }
+        let (mut va, mut vb) = (Vec::new(), Vec::new());
+        a.gather_full(&[0], 1, &mut va);
+        b.gather_full(&[0], 1, &mut vb);
+        assert_eq!(va, vb);
     }
 
     #[test]
     fn layer_view_matches_full_view() {
-        let mut pool = KvSlotPool::new(2, 3, 2, 2, 2);
+        let mut pool = KvSlotPool::new(2, 3, 2, 4, 2, 3, None);
         let batch = filled_batch(&pool, 2, 3.0);
-        pool.scatter_full(&[0, 1], 2, &batch);
-        let plane = 2 * 2 * 2;
+        for row in 0..2 {
+            pool.store_from_batch(row, &batch, 2, row, 0, 4);
+        }
+        let plane = 2 * 4 * 2;
         for l in 0..3 {
             let mut lv = Vec::new();
             pool.gather_layer(l, &[0, 1], 2, &mut lv);
@@ -243,36 +430,91 @@ mod tests {
                 for b in 0..2 {
                     let full = ((l * 2 + c) * 2 + b) * plane;
                     let lay = (c * 2 + b) * plane;
-                    assert_eq!(&lv[lay..lay + plane], &batch[full..full + plane]);
+                    let mut fv = Vec::new();
+                    pool.gather_full(&[0, 1], 2, &mut fv);
+                    assert_eq!(&lv[lay..lay + plane], &fv[full..full + plane]);
                 }
             }
         }
-        // scatter one layer at a different bucket and read it back whole
+        // layer-wise token scatter feeds back into the full view
         let mut lv = Vec::new();
         pool.gather_layer(1, &[1], 1, &mut lv);
         for x in lv.iter_mut() {
             *x += 100.0;
         }
-        pool.scatter_layer(1, &[1], 1, &lv);
+        pool.store_layer_from_batch(1, 1, &lv, 1, 0, 2, 3);
         let mut full = Vec::new();
         pool.gather_full(&[1], 1, &mut full);
         for c in 0..2 {
-            for p in 0..plane {
-                let batch_src = ((2 + c) * 2 + 1) * plane + p; // l=1, row 1
-                assert_eq!(full[((2 + c)) * plane + p], batch[batch_src] + 100.0);
+            for h in 0..2 {
+                for t in 0..4 {
+                    for d in 0..2 {
+                        let p = (h * 4 + t) * 2 + d;
+                        let got = full[(2 + c) * plane + p];
+                        let base = batch[((2 + c) * 2 + 1) * plane + p];
+                        let want = if t == 2 { base + 100.0 } else { base };
+                        assert_eq!(got, want, "c={c} h={h} t={t} d={d}");
+                    }
+                }
             }
         }
     }
 
     #[test]
-    fn high_water_tracks_allocations() {
-        let mut pool = KvSlotPool::new(4, 1, 1, 2, 1);
-        assert_eq!(pool.high_water_slots, 0);
-        let b = vec![0.0; pool.batch_elems(1)];
-        pool.store_from_batch(0, &b, 1, 0);
-        pool.store_from_batch(3, &b, 1, 0);
+    fn write_read_token_roundtrip_and_extent() {
+        let mut pool = KvSlotPool::new(2, 1, 1, usize::MAX / 4, 1, 4, None);
+        assert_eq!(pool.token_elems(), 2);
+        pool.write_token(0, 0, &[5.0, -5.0]);
+        pool.write_token(0, 6, &[7.0, -7.0]); // skips ahead: gap stays zero
+        assert_eq!(pool.extent(0), 7);
+        let mut col = [9.0f32; 2];
+        pool.read_token(0, 0, &mut col);
+        assert_eq!(col, [5.0, -5.0]);
+        pool.read_token(0, 3, &mut col);
+        assert_eq!(col, [0.0, 0.0], "unwritten positions read zero");
+        pool.read_token(0, 6, &mut col);
+        assert_eq!(col, [7.0, -7.0]);
+        assert_eq!(pool.pages().pages_in_use(), 2);
+    }
+
+    #[test]
+    fn shared_mapping_cow_and_release() {
+        let mut pool = KvSlotPool::new(3, 1, 1, 64, 1, 2, None);
+        for t in 0..4 {
+            pool.write_token(0, t, &[t as f32 + 1.0, 0.0]);
+        }
+        // share slot 0's two pages into slot 1 (as the prefix cache would)
+        let pages: Vec<usize> = pool.slot_pages(0).to_vec();
+        pool.map_shared(1, &pages, 4);
+        assert_eq!(pool.extent(1), 4);
+        let mut col = [0.0f32; 2];
+        pool.read_token(1, 2, &mut col);
+        assert_eq!(col[0], 3.0);
+        assert_eq!(pool.pages().pages_in_use(), 2, "shared pages are stored once");
+        // divergent write in slot 1 COWs; slot 0 keeps its bytes
+        pool.write_token(1, 3, &[99.0, 0.0]);
+        pool.read_token(0, 3, &mut col);
+        assert_eq!(col[0], 4.0);
+        pool.read_token(1, 3, &mut col);
+        assert_eq!(col[0], 99.0);
+        assert_eq!(pool.pages().cow_copies, 1);
+        assert_eq!(pool.pages().pages_in_use(), 3);
+        // releases drop references; the still-shared page survives
+        pool.release(1);
+        assert_eq!(pool.pages().pages_in_use(), 2);
         pool.release(0);
-        pool.store_from_batch(0, &b, 1, 0); // reuse, no new allocation
-        assert_eq!(pool.high_water_slots, 2);
+        assert_eq!(pool.pages().pages_in_use(), 0);
+    }
+
+    #[test]
+    fn high_water_tracks_pages_not_slots() {
+        let mut pool = KvSlotPool::new(4, 1, 1, 8, 1, 2, None);
+        pool.write_token(0, 0, &[1.0, 1.0]);
+        pool.write_token(3, 5, &[1.0, 1.0]); // 3 pages for positions [0,6)
+        pool.release(0);
+        pool.write_token(0, 0, &[1.0, 1.0]); // recycles, no new high water
+        assert_eq!(pool.pages().high_water_pages, 4);
+        assert_eq!(pool.pages_to_cover(3, 8), 1);
+        assert_eq!(pool.pages_to_cover(3, 6), 0);
     }
 }

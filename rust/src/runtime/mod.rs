@@ -14,10 +14,12 @@
 mod manifest;
 mod bindings;
 mod kv_pool;
+mod pages;
 
 pub use bindings::{ModelBuffers, MoeModelBuffers};
 pub use kv_pool::KvSlotPool;
 pub use manifest::{ArgSpec, ArtifactInfo, Manifest};
+pub use pages::PagePool;
 
 use crate::tensor::Tensor;
 use anyhow::{anyhow, bail, Context, Result};

@@ -1,0 +1,237 @@
+//! Reference-counted pool of fixed-size KV pages — the allocator under
+//! the paged [`crate::runtime::KvSlotPool`].
+//!
+//! A page holds `page_len` tokens of KV for every `[L, 2, H, hd]`
+//! plane, laid out `[L, 2, H, page_len, hd]` row-major. The pool is a
+//! pure allocator: it knows nothing about slots, prompts or caches —
+//! policy (page tables, prefix sharing, eviction) lives in the slot
+//! pool and `serving::prefix_cache`. That separation is what makes the
+//! allocator exhaustively property-testable (`tests/page_pool.rs`).
+//!
+//! Invariants (property-tested):
+//! * a page's refcount equals the number of live mappings holding it
+//!   (slot page tables + prefix-cache holds);
+//! * `release` on the last reference returns the page to the free
+//!   list; a page is never double-freed (refcount underflow panics);
+//! * allocation hands out **zeroed** pages — recycled or fresh — so a
+//!   recycled page can never leak stale KV into a new slot (this
+//!   supersedes the old slot pool's "prefill overwrites everything"
+//!   discipline, which page-granular ownership can no longer rely on);
+//! * writes through [`PagePool::try_page_mut`] copy-on-write: a page
+//!   mapped by more than one holder is copied before the first
+//!   divergent write, so shared prefix pages are immutable from any
+//!   single mapper's point of view;
+//! * `high_water_pages` (most pages resident at once) is monotone.
+
+/// Reference-counted fixed-size page allocator.
+pub struct PagePool {
+    page_len: usize,
+    page_elems: usize,
+    /// Hard page budget (`None` = grow on demand, host-only stubs).
+    max_pages: Option<usize>,
+    /// Page storage; index = page id. Never shrinks (freed pages are
+    /// recycled through `free`).
+    data: Vec<Vec<f32>>,
+    /// Live references per page id; 0 = free.
+    refcount: Vec<u32>,
+    /// Free-list (LIFO — recycled pages are reused before fresh ones,
+    /// same warmth argument as the scheduler's slot stack).
+    free: Vec<usize>,
+    /// Most pages resident at once (monotone memory gauge).
+    pub high_water_pages: usize,
+    /// Copy-on-write page copies performed so far.
+    pub cow_copies: u64,
+    /// Total successful allocations (fresh + recycled).
+    pub total_allocs: u64,
+}
+
+impl PagePool {
+    /// `page_elems` is the element count of one page
+    /// (`layers * 2 * heads * page_len * head_dim` for a KV pool).
+    pub fn new(page_len: usize, page_elems: usize, max_pages: Option<usize>) -> PagePool {
+        assert!(page_len >= 1, "page_len 0 is not a page");
+        assert!(page_elems >= 1, "empty pages");
+        PagePool {
+            page_len,
+            page_elems,
+            max_pages,
+            data: Vec::new(),
+            refcount: Vec::new(),
+            free: Vec::new(),
+            high_water_pages: 0,
+            cow_copies: 0,
+            total_allocs: 0,
+        }
+    }
+
+    pub fn page_len(&self) -> usize {
+        self.page_len
+    }
+
+    pub fn page_elems(&self) -> usize {
+        self.page_elems
+    }
+
+    /// Pages currently referenced by at least one holder.
+    pub fn pages_in_use(&self) -> usize {
+        self.data.len() - self.free.len()
+    }
+
+    /// Pages ever allocated (backing storage footprint).
+    pub fn pages_allocated(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Pages allocatable right now without anyone releasing
+    /// (`None` = unbounded).
+    pub fn available(&self) -> Option<usize> {
+        self.max_pages.map(|cap| cap.saturating_sub(self.pages_in_use()))
+    }
+
+    pub fn capacity(&self) -> Option<usize> {
+        self.max_pages
+    }
+
+    pub fn refcount(&self, page: usize) -> u32 {
+        self.refcount[page]
+    }
+
+    /// Allocate a zeroed page with refcount 1, or `None` when the
+    /// budget is exhausted (callers evict prefix-cache holds and
+    /// retry — see `serving::prefix_cache`).
+    pub fn try_alloc(&mut self) -> Option<usize> {
+        let page = if let Some(p) = self.free.pop() {
+            // the stale-KV guarantee: recycled pages are zeroed before
+            // they can be mapped again
+            self.data[p].fill(0.0);
+            self.refcount[p] = 1;
+            p
+        } else {
+            if let Some(cap) = self.max_pages {
+                if self.data.len() >= cap {
+                    return None;
+                }
+            }
+            self.data.push(vec![0.0; self.page_elems]);
+            self.refcount.push(1);
+            self.data.len() - 1
+        };
+        self.total_allocs += 1;
+        self.high_water_pages = self.high_water_pages.max(self.pages_in_use());
+        Some(page)
+    }
+
+    /// Add a reference (a second holder maps the page).
+    pub fn retain(&mut self, page: usize) {
+        assert!(self.refcount[page] > 0, "pages: retain on a free page {page}");
+        self.refcount[page] += 1;
+    }
+
+    /// Drop a reference; the last release frees the page.
+    pub fn release(&mut self, page: usize) {
+        assert!(self.refcount[page] > 0, "pages: double free of page {page}");
+        self.refcount[page] -= 1;
+        if self.refcount[page] == 0 {
+            self.free.push(page);
+        }
+    }
+
+    /// Read-only view of a live page.
+    pub fn page(&self, page: usize) -> &[f32] {
+        assert!(self.refcount[page] > 0, "pages: read of a free page {page}");
+        &self.data[page]
+    }
+
+    /// Mutable view with copy-on-write: a shared page (refcount > 1)
+    /// is copied first and `entry` repointed at the private copy, so
+    /// the other holders keep the original bytes. `None` when a copy
+    /// was needed but the pool is exhausted.
+    pub fn try_page_mut(&mut self, entry: &mut usize) -> Option<&mut [f32]> {
+        let p = *entry;
+        assert!(self.refcount[p] > 0, "pages: write to a free page {p}");
+        if self.refcount[p] > 1 {
+            let n = self.try_alloc()?;
+            // split the storage borrow by temporarily moving the
+            // destination page out (a Vec move, not a copy)
+            let mut dst = std::mem::take(&mut self.data[n]);
+            dst.copy_from_slice(&self.data[p]);
+            self.data[n] = dst;
+            self.release(p);
+            self.cow_copies += 1;
+            *entry = n;
+        }
+        Some(&mut self.data[*entry])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_release_recycles_zeroed() {
+        let mut pool = PagePool::new(4, 8, None);
+        let a = pool.try_alloc().unwrap();
+        {
+            let mut e = a;
+            let view = pool.try_page_mut(&mut e).unwrap();
+            view.iter_mut().for_each(|x| *x = 7.0);
+            assert_eq!(e, a, "private page must not COW");
+        }
+        pool.release(a);
+        assert_eq!(pool.pages_in_use(), 0);
+        let b = pool.try_alloc().unwrap();
+        assert_eq!(b, a, "LIFO recycling");
+        assert!(pool.page(b).iter().all(|&x| x == 0.0), "recycled page leaked stale data");
+        assert_eq!(pool.high_water_pages, 1);
+        assert_eq!(pool.total_allocs, 2);
+    }
+
+    #[test]
+    fn cow_preserves_the_shared_original() {
+        let mut pool = PagePool::new(2, 4, None);
+        let p = pool.try_alloc().unwrap();
+        {
+            let mut e = p;
+            pool.try_page_mut(&mut e).unwrap().copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        }
+        pool.retain(p); // second holder
+        let mut entry = p;
+        {
+            let view = pool.try_page_mut(&mut entry).unwrap();
+            view[0] = 9.0;
+        }
+        assert_ne!(entry, p, "divergent write must COW");
+        assert_eq!(pool.refcount(p), 1);
+        assert_eq!(pool.refcount(entry), 1);
+        assert_eq!(pool.page(p), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(pool.page(entry), &[9.0, 2.0, 3.0, 4.0]);
+        assert_eq!(pool.cow_copies, 1);
+    }
+
+    #[test]
+    fn budget_is_enforced() {
+        let mut pool = PagePool::new(2, 2, Some(2));
+        let a = pool.try_alloc().unwrap();
+        let _b = pool.try_alloc().unwrap();
+        assert!(pool.try_alloc().is_none(), "over budget");
+        assert_eq!(pool.available(), Some(0));
+        pool.release(a);
+        assert_eq!(pool.available(), Some(1));
+        assert!(pool.try_alloc().is_some());
+        // a COW under exhaustion reports failure instead of corrupting
+        let mut e = 1usize;
+        pool.retain(1);
+        assert!(pool.try_page_mut(&mut e).is_none());
+        assert_eq!(e, 1, "failed COW must leave the mapping untouched");
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut pool = PagePool::new(2, 2, None);
+        let a = pool.try_alloc().unwrap();
+        pool.release(a);
+        pool.release(a);
+    }
+}

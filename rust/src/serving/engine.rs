@@ -6,8 +6,11 @@
 //!   admits queued requests into free KV slots at every decode step,
 //!   retires them the step they finish, and runs each step at the
 //!   smallest compiled bucket covering the live slots. KV lives
-//!   per-slot in a host [`KvSlotPool`] and is gathered/scattered
-//!   around each artifact call ([`EngineStepForward`]).
+//!   per-slot in a host **paged** [`KvSlotPool`] (fixed-size
+//!   refcounted pages; shared-prefix rows deduplicate through a
+//!   [`PrefixCache`] when `EngineConfig::prefix_cache` is on) and is
+//!   gathered/scattered around each artifact call
+//!   ([`EngineStepForward`]).
 //! * **Run-to-completion waves** ([`Engine::run_queue_waves`],
 //!   [`Engine::generate_wave`]): the pre-continuous reference path —
 //!   one batch prefills together and decodes until its last member
@@ -31,7 +34,8 @@ use crate::moe::{route_from_scores, route_tokens, BalanceConfig, BiasAdapter, Gr
 use crate::runtime::{KvSlotPool, ModelBuffers, MoeModelBuffers, XlaRuntime};
 use crate::serving::batcher::{covering_bucket, Batcher, BatcherConfig};
 use crate::serving::dispatch::{DispatchArena, ExpertDispatcher, GroupedDispatcher};
-use crate::serving::metrics::{EngineMetrics, WaveMetrics};
+use crate::serving::metrics::{EngineMetrics, PageMetrics, WaveMetrics};
+use crate::serving::prefix_cache::PrefixCache;
 use crate::serving::request::{Request, RequestResult};
 use crate::serving::scheduler::{ContinuousSession, PrefillOutcome, StepForward};
 use crate::tensor::{self, Tensor};
@@ -78,7 +82,18 @@ pub struct EngineConfig {
     pub balance: Option<BalanceConfig>,
     /// Routed-expert execution strategy (orchestrated mode only).
     pub expert_exec: ExpertExec,
+    /// Tokens per KV page of the continuous scheduler's paged slot
+    /// pool (`cmoe serve --page-len`). Clamped to `kv_len`.
+    pub page_len: usize,
+    /// Share KV pages across requests whose prefill rows share a
+    /// prefix (`cmoe serve --prefix-cache`). Artifact-path sharing is
+    /// a *memory* dedup: the compiled prefill still runs whole rows,
+    /// but matched prefix pages are stored once and mapped per slot.
+    pub prefix_cache: bool,
 }
+
+/// Default KV page length (tokens) for the paged slot pool.
+pub const DEFAULT_PAGE_LEN: usize = 16;
 
 impl EngineConfig {
     pub fn dense(model_name: &str, kv_len: usize) -> Self {
@@ -90,6 +105,8 @@ impl EngineConfig {
             batcher: BatcherConfig::default(),
             balance: None,
             expert_exec: ExpertExec::HostGrouped,
+            page_len: DEFAULT_PAGE_LEN,
+            prefix_cache: false,
         }
     }
 
@@ -102,6 +119,8 @@ impl EngineConfig {
             batcher: BatcherConfig::default(),
             balance: Some(BalanceConfig::default()),
             expert_exec: ExpertExec::HostGrouped,
+            page_len: DEFAULT_PAGE_LEN,
+            prefix_cache: false,
         }
     }
 }
@@ -253,8 +272,14 @@ impl Engine {
     pub(crate) fn flush_session(&self, session: &mut ContinuousSession<EngineStepForward<'_>>) {
         let sm = session.take_metrics();
         let wm = session.take_run_summary();
+        // delta snapshot: a long-lived server session flushes at every
+        // idle, and lifetime counters must not be re-added each time
+        let pm = session.take_page_metrics();
         let mut m = self.metrics.lock().unwrap();
         m.scheduler.merge(&sm);
+        if let Some(p) = pm {
+            m.pages.merge(&p);
+        }
         if let Some(w) = wm {
             m.record_wave(w);
         }
@@ -713,19 +738,36 @@ impl Engine {
 // ---------------------------------------------------------------------------
 
 /// [`StepForward`] over the engine's compiled artifacts. KV ownership
-/// is per-slot ([`KvSlotPool`]): each decode step gathers the live
-/// slots' KV rows into a bucket-shaped buffer, runs the compiled step
-/// with per-row positions, and scatters the updated rows back. Every
-/// configured batch bucket must be compiled — the scheduler switches
-/// buckets as occupancy changes.
+/// is per-slot and **paged** ([`KvSlotPool`]): a slot's page table
+/// covers exactly its written extent, each decode step gathers the
+/// live slots' pages into a bucket-shaped buffer (zero beyond each
+/// extent — byte-identical to the old contiguous pool), runs the
+/// compiled step with per-row positions, and scatters back only the
+/// one token position the step wrote. Every configured batch bucket
+/// must be compiled — the scheduler switches buckets as occupancy
+/// changes.
 ///
 /// Prefill groups admissions by their compiled prefill length (the
 /// smallest `s` covering each prompt) so a request's prefill padding —
 /// and therefore its token stream — does not depend on which other
 /// requests happened to be admitted alongside it.
+///
+/// With `EngineConfig::prefix_cache` on, prefill rows are additionally
+/// deduplicated through a [`PrefixCache`] keyed on the **padded row**
+/// (front padding + right-aligned prompt — the exact token sequence
+/// the artifact consumes, which fully determines the row's KV: KV at
+/// position `p` is a causal function of row tokens `[0, p]`). Matched
+/// prefix pages are mapped instead of stored, so identical
+/// system-prompt rows keep one physical copy; the compiled prefill
+/// still computes whole rows, so this is a memory dedup, not a compute
+/// skip — [`StepForward::map_prefix`] keeps its no-op default and the
+/// prefill-token meters stay honest. (A compute skip needs a
+/// suffix-continuation prefill artifact and left-aligned rows; the
+/// host-side [`crate::serving::StubForward`] demonstrates that path.)
 pub struct EngineStepForward<'e> {
     eng: &'e Engine,
     kv: KvSlotPool,
+    cache: Option<PrefixCache>,
     /// Configured buckets, ascending (minimal-covering prefill groups).
     buckets: Vec<usize>,
     // gather/scatter scratch, reused across steps
@@ -742,9 +784,24 @@ impl<'e> EngineStepForward<'e> {
         buckets.dedup();
         let pool = *buckets.last().expect("engine needs at least one batch bucket");
         let c = &eng.model.config;
+        let t = eng.cfg.kv_len;
+        let page_len = eng.cfg.page_len.clamp(1, t);
+        // worst case (every slot fully private at the whole horizon)
+        // fits by construction, so prefix sharing only frees headroom
+        // and allocation-after-eviction can never fail
+        let pages_per_slot = (t + page_len - 1) / page_len;
         EngineStepForward {
             eng,
-            kv: KvSlotPool::new(pool, c.n_layers, c.n_heads, eng.cfg.kv_len, c.head_dim()),
+            kv: KvSlotPool::new(
+                pool,
+                c.n_layers,
+                c.n_heads,
+                t,
+                c.head_dim(),
+                page_len,
+                Some(pool * pages_per_slot),
+            ),
+            cache: eng.cfg.prefix_cache.then(|| PrefixCache::new(page_len)),
             buckets,
             kv_batch: Vec::new(),
             kv_layer: Vec::new(),
@@ -755,6 +812,31 @@ impl<'e> EngineStepForward<'e> {
 
     fn min_bucket(&self, n: usize) -> usize {
         covering_bucket(&self.buckets, n)
+    }
+
+    /// Free headroom for `need` page allocations, evicting LRU
+    /// prefix-cache holds under page pressure.
+    fn evict_for(&mut self, need: usize) {
+        if need == 0 {
+            return;
+        }
+        if let Some(avail) = self.kv.pages_available() {
+            if avail < need {
+                if let Some(cache) = &mut self.cache {
+                    cache.evict(self.kv.pages_mut(), need - avail);
+                }
+            }
+        }
+    }
+
+    /// Make sure `slot` can grow to cover `upto` tokens. Only valid
+    /// immediately before that slot's store — for a batch of growths,
+    /// reserve the aggregate with [`EngineStepForward::evict_for`]
+    /// (per-slot checks can each pass while their sum exhausts the
+    /// pool).
+    fn reserve(&mut self, slot: usize, upto: usize) {
+        let need = self.kv.pages_to_cover(slot, upto);
+        self.evict_for(need);
     }
 
     fn prefill_name(&self, bucket: usize, s: usize) -> String {
@@ -806,7 +888,31 @@ impl<'e> EngineStepForward<'e> {
             &[c.n_layers, 2, bucket, c.n_heads, t, c.head_dim()],
         )?;
         for (row, &(idx, slot)) in members.iter().enumerate() {
-            self.kv.store_from_batch(slot, &kv.data, bucket, row);
+            // prefix dedup: the padded row is the exact semantic key of
+            // its KV, so a cached match maps those pages and only the
+            // remainder of the row is stored (identical bytes — KV at
+            // p is a causal function of row tokens [0, p])
+            let (mapped, key) = if let Some(cache) = &mut self.cache {
+                let key: Vec<usize> =
+                    tokens[row * s..(row + 1) * s].iter().map(|&x| x as usize).collect();
+                let (pages, cached) = cache.lookup(&key);
+                if !pages.is_empty() {
+                    self.kv.map_shared(slot, &pages, cached);
+                }
+                (cached, Some(key))
+            } else {
+                (0, None)
+            };
+            self.reserve(slot, s);
+            self.kv.store_from_batch(slot, &kv.data, bucket, row, mapped, s);
+            if let Some(mut key) = key {
+                let full = s / self.kv.page_len();
+                let pages: Vec<usize> = self.kv.slot_pages(slot)[..full].to_vec();
+                key.truncate(full * self.kv.page_len());
+                if let Some(cache) = &mut self.cache {
+                    cache.insert(&key, &pages, self.kv.pages_mut());
+                }
+            }
             let o = (row * s + (s - 1)) * v;
             out[idx] = Some(PrefillOutcome { logits: logits.data[o..o + v].to_vec(), pos: s });
         }
@@ -815,7 +921,16 @@ impl<'e> EngineStepForward<'e> {
 }
 
 impl StepForward for EngineStepForward<'_> {
-    fn prefill(&mut self, slots: &[usize], prompts: &[&[usize]]) -> Result<Vec<PrefillOutcome>> {
+    fn prefill(
+        &mut self,
+        slots: &[usize],
+        prompts: &[&[usize]],
+        cached: &[usize],
+    ) -> Result<Vec<PrefillOutcome>> {
+        // the compiled prefill computes whole rows, so the session maps
+        // no prefix for this backend (map_prefix default); page-level
+        // dedup happens inside prefill_group instead
+        debug_assert!(cached.iter().all(|&c| c == 0), "artifact prefill takes whole prompts");
         // compiled prefill lengths; the (bucket × s) artifact grid is
         // uniform, so any configured bucket enumerates the same lengths
         let lens = self.eng.prefill_lens(self.buckets[0]);
@@ -863,6 +978,16 @@ impl StepForward for EngineStepForward<'_> {
         let tok_buf = eng.rt.upload_i32(&self.toks_pad, &[bucket])?;
         let pos_buf = eng.rt.upload_i32(&self.pos_pad, &[bucket])?;
 
+        // grow page tables before the step (may evict cache holds);
+        // the artifact only writes position pos[i] of row i, so that
+        // is the only token the scatter below stores back. Reserve the
+        // AGGREGATE need: per-slot checks could each see enough
+        // headroom while their sum exhausts the pool mid-scatter.
+        let mut need = 0usize;
+        for (&slot, &p) in slots.iter().zip(pos) {
+            need += self.kv.pages_to_cover(slot, p + 1);
+        }
+        self.evict_for(need);
         let logits = match eng.cfg.mode {
             ExecMode::Dense | ExecMode::MoeMonolithic => {
                 self.kv.gather_full(slots, bucket, &mut self.kv_batch);
@@ -883,7 +1008,9 @@ impl StepForward for EngineStepForward<'_> {
                 let kv_new = outb.pop().ok_or_else(|| anyhow!("decode: no kv"))?;
                 let logits = eng.rt.download(&outb[0], &[bucket, v])?;
                 let kv_host = eng.rt.download(&kv_new, &[nl, 2, bucket, h, t, hd])?;
-                self.kv.scatter_full(slots, bucket, &kv_host.data);
+                for (i, (&slot, &p)) in slots.iter().zip(pos).enumerate() {
+                    self.kv.store_from_batch(slot, &kv_host.data, bucket, i, p, p + 1);
+                }
                 logits
             }
             ExecMode::MoeOrchestrated => {
@@ -895,7 +1022,10 @@ impl StepForward for EngineStepForward<'_> {
                 let logits = eng.orchestrated_step(bucket, &tok_buf, &pos_buf, &mut kv_layers)?;
                 for (l, buf) in kv_layers.iter().enumerate() {
                     let kv_host = eng.rt.download(buf, &[2, bucket, h, t, hd])?;
-                    self.kv.scatter_layer(l, slots, bucket, &kv_host.data);
+                    for (i, (&slot, &p)) in slots.iter().zip(pos).enumerate() {
+                        self.kv
+                            .store_layer_from_batch(l, slot, &kv_host.data, bucket, i, p, p + 1);
+                    }
                 }
                 logits
             }
@@ -909,5 +1039,17 @@ impl StepForward for EngineStepForward<'_> {
 
     fn kv_capacity(&self) -> usize {
         self.eng.cfg.kv_len
+    }
+
+    fn page_metrics(&self) -> Option<PageMetrics> {
+        Some(PageMetrics {
+            page_len: self.kv.page_len(),
+            pages_in_use: self.kv.pages().pages_in_use(),
+            high_water_pages: self.kv.pages().high_water_pages,
+            cow_copies: self.kv.pages().cow_copies,
+            shared_maps: self.kv.shared_maps,
+            cached_pages: self.cache.as_ref().map_or(0, |c| c.cached_pages()),
+            evicted_pages: self.cache.as_ref().map_or(0, |c| c.evicted_pages),
+        })
     }
 }

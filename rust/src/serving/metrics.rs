@@ -36,6 +36,18 @@ pub struct SchedulerMetrics {
     /// Σ bucket rows over decode steps (denominator of occupancy —
     /// the GEMM rows actually executed, padding included).
     pub bucket_row_steps: u64,
+    /// Admissions whose prompt was checked against the prefix cache
+    /// (== admissions when the backend supports prefix mapping).
+    pub prefix_lookups: u64,
+    /// Admissions that mapped a cached prefix instead of prefilling it.
+    pub prefix_hits: u64,
+    /// Prompt tokens actually prefilled (suffix only under prefix
+    /// hits) — the prefill-compute meter the sharing sweep diffs.
+    pub prefill_tokens: u64,
+    /// Prompt tokens served from mapped prefix pages instead of
+    /// prefill. `prefill_tokens + prefill_tokens_saved` equals the
+    /// unshared path's prefill work on the same trace.
+    pub prefill_tokens_saved: u64,
     /// Per-request enqueue→admission wait, milliseconds.
     pub queue_wait_ms: Vec<f32>,
 }
@@ -67,6 +79,14 @@ impl SchedulerMetrics {
         percentile(&self.queue_wait_ms, 99.0)
     }
 
+    /// Share of prefix-cache lookups that mapped at least one page.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prefix_lookups == 0 {
+            return 0.0;
+        }
+        self.prefix_hits as f64 / self.prefix_lookups as f64
+    }
+
     /// Fold another snapshot into this one (engine-lifetime totals
     /// absorb per-session scheduler counters).
     pub fn merge(&mut self, o: &SchedulerMetrics) {
@@ -77,7 +97,52 @@ impl SchedulerMetrics {
         self.peak_live = self.peak_live.max(o.peak_live);
         self.live_row_steps += o.live_row_steps;
         self.bucket_row_steps += o.bucket_row_steps;
+        self.prefix_lookups += o.prefix_lookups;
+        self.prefix_hits += o.prefix_hits;
+        self.prefill_tokens += o.prefill_tokens;
+        self.prefill_tokens_saved += o.prefill_tokens_saved;
         self.queue_wait_ms.extend_from_slice(&o.queue_wait_ms);
+    }
+}
+
+/// Gauges for the paged KV pool + prefix cache (`runtime::KvSlotPool`
+/// over `runtime::PagePool`, `serving::prefix_cache`). Snapshotted
+/// from the step-forward backend when a session flushes.
+#[derive(Clone, Debug, Default)]
+pub struct PageMetrics {
+    /// Tokens per page (0 until a paged backend reported).
+    pub page_len: usize,
+    /// Pages resident at snapshot time (live slots + cache holds).
+    pub pages_in_use: usize,
+    /// Most pages resident at once (monotone) — the resident-KV meter
+    /// the sharing sweep diffs.
+    pub high_water_pages: usize,
+    /// Copy-on-write page copies (first divergent write into a shared
+    /// page).
+    pub cow_copies: u64,
+    /// Shared-prefix mappings performed (`KvSlotPool::map_shared`).
+    pub shared_maps: u64,
+    /// Pages currently held by the prefix cache.
+    pub cached_pages: usize,
+    /// Cache pages evicted under page pressure.
+    pub evicted_pages: u64,
+}
+
+impl PageMetrics {
+    /// Fold a later snapshot into this one. Counters are per-backend
+    /// lifetime: monotone gauges take the max, event counts accumulate
+    /// across sessions (each session owns a fresh pool), and point
+    /// gauges take the latest value.
+    pub fn merge(&mut self, o: &PageMetrics) {
+        if o.page_len != 0 {
+            self.page_len = o.page_len;
+        }
+        self.pages_in_use = o.pages_in_use;
+        self.cached_pages = o.cached_pages;
+        self.high_water_pages = self.high_water_pages.max(o.high_water_pages);
+        self.cow_copies += o.cow_copies;
+        self.shared_maps += o.shared_maps;
+        self.evicted_pages += o.evicted_pages;
     }
 }
 
@@ -169,6 +234,9 @@ pub struct EngineMetrics {
     /// Continuous-batching gauges (stays at its default when only the
     /// run-to-completion wave path ran).
     pub scheduler: SchedulerMetrics,
+    /// Paged-KV gauges (stays at its default until a paged backend
+    /// session flushes).
+    pub pages: PageMetrics,
 }
 
 impl EngineMetrics {
@@ -232,6 +300,22 @@ impl EngineMetrics {
                 self.scheduler.occupancy() * 100.0,
                 self.scheduler.churn_per_step(),
                 self.scheduler.queue_wait_p50_ms(),
+            ));
+        }
+        if self.scheduler.prefix_lookups > 0 {
+            s.push_str(&format!(
+                ", prefix hit {:.0}% ({} tok reused)",
+                self.scheduler.prefix_hit_rate() * 100.0,
+                self.scheduler.prefill_tokens_saved,
+            ));
+        }
+        if self.pages.high_water_pages > 0 {
+            s.push_str(&format!(
+                ", kv pages hw {} (cow {}, cached {}, evicted {})",
+                self.pages.high_water_pages,
+                self.pages.cow_copies,
+                self.pages.cached_pages,
+                self.pages.evicted_pages,
             ));
         }
         s
@@ -309,6 +393,44 @@ mod tests {
         assert!(!m.summary().contains("sched occupancy"));
         m.scheduler.merge(&s);
         assert!(m.summary().contains("sched occupancy 75%"));
+    }
+
+    #[test]
+    fn prefix_and_page_gauges() {
+        let mut s = SchedulerMetrics::default();
+        assert_eq!(s.prefix_hit_rate(), 0.0);
+        s.prefix_lookups = 4;
+        s.prefix_hits = 3;
+        s.prefill_tokens = 10;
+        s.prefill_tokens_saved = 30;
+        assert!((s.prefix_hit_rate() - 0.75).abs() < 1e-12);
+        let mut t = SchedulerMetrics::default();
+        t.merge(&s);
+        t.merge(&s);
+        assert_eq!(t.prefix_hits, 6);
+        assert_eq!(t.prefill_tokens_saved, 60);
+
+        let mut m = EngineMetrics::default();
+        assert!(!m.summary().contains("prefix hit"));
+        assert!(!m.summary().contains("kv pages"));
+        m.scheduler.merge(&s);
+        assert!(m.summary().contains("prefix hit 75%"));
+        let snap = PageMetrics {
+            page_len: 4,
+            pages_in_use: 5,
+            high_water_pages: 9,
+            cow_copies: 2,
+            shared_maps: 3,
+            cached_pages: 4,
+            evicted_pages: 1,
+        };
+        m.pages.merge(&snap);
+        assert!(m.summary().contains("kv pages hw 9"));
+        // monotone gauges keep the max, event counts accumulate
+        m.pages.merge(&PageMetrics { high_water_pages: 7, cow_copies: 1, ..Default::default() });
+        assert_eq!(m.pages.high_water_pages, 9);
+        assert_eq!(m.pages.cow_copies, 3);
+        assert_eq!(m.pages.page_len, 4, "point gauges survive empty snapshots");
     }
 
     #[test]

@@ -37,16 +37,18 @@ mod batcher;
 mod engine;
 pub mod dispatch;
 mod metrics;
+pub mod prefix_cache;
 pub mod scheduler;
 mod server;
 
 pub use batcher::{covering_bucket, Batcher, BatcherConfig};
 pub use dispatch::{per_token_reference, DispatchArena, ExpertDispatcher, GroupedDispatcher};
-pub use engine::{Engine, EngineConfig, EngineStepForward, ExecMode, ExpertExec};
-pub use metrics::{DispatchMetrics, EngineMetrics, SchedulerMetrics, WaveMetrics};
+pub use engine::{Engine, EngineConfig, EngineStepForward, ExecMode, ExpertExec, DEFAULT_PAGE_LEN};
+pub use metrics::{DispatchMetrics, EngineMetrics, PageMetrics, SchedulerMetrics, WaveMetrics};
+pub use prefix_cache::PrefixCache;
 pub use request::{GenParams, Request, RequestResult};
 pub use scheduler::{
     stub_logits, stub_reference, ContinuousSession, PrefillOutcome, Scheduler, SlotState,
-    StepForward, StubForward,
+    StepForward, StubForward, STUB_PAGE_LEN,
 };
 pub use server::{EngineServer, Ticket};

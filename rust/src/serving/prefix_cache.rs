@@ -1,0 +1,285 @@
+//! Prompt-prefix cache over the paged KV pool: a token trie at page
+//! granularity, LRU-evicted under page pressure.
+//!
+//! Heavy serving traffic repeats prompt preambles (system prompts,
+//! few-shot headers). Re-prefilling and re-storing them per request
+//! wastes both compute and KV pages — the dominant serving-side lever
+//! next to expert dispatch (arXiv 2412.14219). This cache keys **full
+//! pages** of KV on the exact token chunk they encode: a trie node per
+//! `page_len`-token chunk, holding one [`PagePool`] reference. Lookup
+//! walks the trie along a prompt's leading chunks and returns the
+//! matched pages; an admitted request maps them
+//! ([`crate::runtime::KvSlotPool::map_shared`]) and prefills only the
+//! remainder.
+//!
+//! Correctness rests on two facts:
+//! * a full-chunk token match implies identical KV content — KV at
+//!   position `p` is a deterministic causal function of tokens
+//!   `[0, p]` (per-position projections; the causal mask lets later
+//!   tokens see, never alter, earlier KV);
+//! * cached pages are immutable: the pool's copy-on-write
+//!   ([`PagePool::try_page_mut`]) copies a shared page before any
+//!   divergent write, so a mapper can never corrupt the cached bytes.
+//!
+//! The artifact engine keys on the *padded prefill row* (front padding
+//! + prompt — see `serving::engine`), which bakes the alignment into
+//! the key; the host stub keys on the prompt itself. Either way the
+//! key is the exact semantic determinant of the cached bytes.
+//!
+//! Eviction is LRU over **leaf** nodes whose page has no mapper other
+//! than the cache itself (refcount 1): a prefix currently mapped by a
+//! live slot is never evicted, and interior nodes are only evictable
+//! once their descendants are gone. Children are kept in a `BTreeMap`
+//! so eviction order — and therefore every replay — is deterministic.
+
+use crate::runtime::PagePool;
+use std::collections::BTreeMap;
+
+struct Node {
+    /// The page holding this chunk's KV (one cache reference).
+    page: usize,
+    /// LRU stamp (logical clock: touched by lookup and insert).
+    last_used: u64,
+    children: BTreeMap<Vec<usize>, Node>,
+}
+
+/// Token-trie prefix cache at page granularity.
+pub struct PrefixCache {
+    page_len: usize,
+    children: BTreeMap<Vec<usize>, Node>,
+    clock: u64,
+    /// Pages currently held by the cache.
+    cached_pages: usize,
+    /// Lifetime counters (gauges).
+    pub lookups: u64,
+    pub hits: u64,
+    pub hit_tokens: u64,
+    pub inserted_pages: u64,
+    pub evicted_pages: u64,
+}
+
+impl PrefixCache {
+    pub fn new(page_len: usize) -> PrefixCache {
+        assert!(page_len >= 1, "page_len 0 is not a page");
+        PrefixCache {
+            page_len,
+            children: BTreeMap::new(),
+            clock: 0,
+            cached_pages: 0,
+            lookups: 0,
+            hits: 0,
+            hit_tokens: 0,
+            inserted_pages: 0,
+            evicted_pages: 0,
+        }
+    }
+
+    pub fn page_len(&self) -> usize {
+        self.page_len
+    }
+
+    /// Pages currently held (each carries one pool reference).
+    pub fn cached_pages(&self) -> usize {
+        self.cached_pages
+    }
+
+    /// Longest cached prefix of `key`: the pages covering its leading
+    /// full `page_len`-token chunks, and the token count they cover
+    /// (`pages.len() * page_len`). The caller maps them and decides how
+    /// much prefill that actually saves (at least the last prompt
+    /// position must still run to produce first-token logits).
+    pub fn lookup(&mut self, key: &[usize]) -> (Vec<usize>, usize) {
+        self.lookups += 1;
+        self.clock += 1;
+        let mut pages = Vec::new();
+        let mut map = &mut self.children;
+        for chunk in key.chunks_exact(self.page_len) {
+            match map.get_mut(chunk) {
+                Some(n) => {
+                    n.last_used = self.clock;
+                    pages.push(n.page);
+                    map = &mut n.children;
+                }
+                None => break,
+            }
+        }
+        let tokens = pages.len() * self.page_len;
+        if !pages.is_empty() {
+            self.hits += 1;
+            self.hit_tokens += tokens as u64;
+        }
+        (pages, tokens)
+    }
+
+    /// Insert `key`'s leading full chunks, holding `slot_pages[i]` for
+    /// chunk `i` (one [`PagePool::retain`] per *new* node). Chunks
+    /// already cached keep their original page — a full-chunk token
+    /// match means the bytes are identical, so deduplication is free.
+    /// Returns the number of pages newly cached.
+    pub fn insert(&mut self, key: &[usize], slot_pages: &[usize], pool: &mut PagePool) -> usize {
+        self.clock += 1;
+        let mut new = 0usize;
+        let mut map = &mut self.children;
+        for (i, chunk) in key.chunks_exact(self.page_len).enumerate() {
+            if i >= slot_pages.len() {
+                break;
+            }
+            let n = map.entry(chunk.to_vec()).or_insert_with(|| {
+                pool.retain(slot_pages[i]);
+                new += 1;
+                Node { page: slot_pages[i], last_used: 0, children: BTreeMap::new() }
+            });
+            n.last_used = self.clock;
+            map = &mut n.children;
+        }
+        self.cached_pages += new;
+        self.inserted_pages += new as u64;
+        new
+    }
+
+    /// Free up to `need` pages under pool pressure: evict
+    /// least-recently-used **leaves** whose page only the cache still
+    /// references (refcount 1) — a prefix mapped by a live slot is
+    /// never evicted. One DFS collects every currently evictable leaf
+    /// (not one walk per page); parents become evictable only once
+    /// their subtree is gone, so chains drain across waves. Returns
+    /// how many pages were actually freed.
+    pub fn evict(&mut self, pool: &mut PagePool, need: usize) -> usize {
+        let mut freed = 0usize;
+        while freed < need {
+            let mut victims: Vec<(u64, Vec<Vec<usize>>)> = Vec::new();
+            let mut path = Vec::new();
+            collect_evictable(&self.children, pool, &mut path, &mut victims);
+            if victims.is_empty() {
+                break;
+            }
+            // oldest first; path order breaks LRU ties deterministically
+            victims.sort();
+            for (_, victim) in victims.into_iter().take(need - freed) {
+                let node = remove_path(&mut self.children, &victim);
+                pool.release(node.page);
+                self.cached_pages -= 1;
+                self.evicted_pages += 1;
+                freed += 1;
+            }
+        }
+        freed
+    }
+}
+
+/// Depth-first scan collecting every evictable leaf (deterministic:
+/// BTreeMap iteration order).
+fn collect_evictable(
+    map: &BTreeMap<Vec<usize>, Node>,
+    pool: &PagePool,
+    path: &mut Vec<Vec<usize>>,
+    out: &mut Vec<(u64, Vec<Vec<usize>>)>,
+) {
+    for (chunk, node) in map {
+        path.push(chunk.clone());
+        if node.children.is_empty() {
+            if pool.refcount(node.page) == 1 {
+                out.push((node.last_used, path.clone()));
+            }
+        } else {
+            collect_evictable(&node.children, pool, path, out);
+        }
+        path.pop();
+    }
+}
+
+/// Remove and return the node at `path` (must exist and be a leaf).
+fn remove_path(map: &mut BTreeMap<Vec<usize>, Node>, path: &[Vec<usize>]) -> Node {
+    if path.len() == 1 {
+        return map.remove(&path[0]).expect("prefix cache: eviction path vanished");
+    }
+    remove_path(
+        &mut map.get_mut(&path[0]).expect("prefix cache: eviction path vanished").children,
+        &path[1..],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool() -> PagePool {
+        PagePool::new(2, 4, None)
+    }
+
+    /// Simulate a slot owning pages for `key` and insert them.
+    fn insert_owned(cache: &mut PrefixCache, pool: &mut PagePool, key: &[usize]) -> Vec<usize> {
+        let n = key.len() / cache.page_len();
+        let pages: Vec<usize> = (0..n).map(|_| pool.try_alloc().unwrap()).collect();
+        cache.insert(key, &pages, pool);
+        // the "slot" retires: only the cache's holds remain
+        for &p in &pages {
+            pool.release(p);
+        }
+        pages
+    }
+
+    #[test]
+    fn lookup_walks_full_chunks_only() {
+        let mut pool = pool();
+        let mut c = PrefixCache::new(2);
+        let pages = insert_owned(&mut c, &mut pool, &[1, 2, 3, 4, 5]);
+        assert_eq!(pages.len(), 2, "partial final chunk never cached");
+        assert_eq!(c.cached_pages(), 2);
+        let (hit, toks) = c.lookup(&[1, 2, 3, 4, 9, 9]);
+        assert_eq!((hit, toks), (pages.clone(), 4));
+        let (hit, toks) = c.lookup(&[1, 2, 7]);
+        assert_eq!((hit.len(), toks), (1, 2));
+        assert_eq!(hit[0], pages[0]);
+        let (hit, toks) = c.lookup(&[1, 3, 3, 4]);
+        assert!(hit.is_empty() && toks == 0, "chunk must match exactly");
+        let (hit, _) = c.lookup(&[1]);
+        assert!(hit.is_empty(), "prompts shorter than a page never hit");
+    }
+
+    #[test]
+    fn insert_dedupes_shared_prefixes() {
+        let mut pool = pool();
+        let mut c = PrefixCache::new(2);
+        let a = insert_owned(&mut c, &mut pool, &[1, 2, 3, 4]);
+        let before = pool.pages_in_use();
+        // same first chunk, new second chunk: only one new page cached
+        let n = 2;
+        let pages: Vec<usize> = (0..n).map(|_| pool.try_alloc().unwrap()).collect();
+        let new = c.insert(&[1, 2, 9, 9], &pages, &mut pool);
+        for &p in &pages {
+            pool.release(p);
+        }
+        assert_eq!(new, 1);
+        assert_eq!(pool.pages_in_use(), before + 1, "duplicate first chunk page freed");
+        let (hit, _) = c.lookup(&[1, 2, 9, 9]);
+        assert_eq!(hit[0], a[0], "existing chunk keeps its original page");
+    }
+
+    #[test]
+    fn eviction_is_lru_leaf_first_and_skips_mapped_pages() {
+        let mut pool = pool();
+        let mut c = PrefixCache::new(2);
+        let a = insert_owned(&mut c, &mut pool, &[1, 1, 2, 2]); // chain A: 2 pages
+        let b = insert_owned(&mut c, &mut pool, &[5, 5]); // chain B: 1 page
+        // a live slot maps chain B's page
+        pool.retain(b[0]);
+        // touch chain A so B is LRU — but B is mapped, so eviction must
+        // take A's leaf instead
+        c.lookup(&[1, 1, 2, 2]);
+        assert_eq!(c.evict(&mut pool, 1), 1);
+        let (hit, _) = c.lookup(&[1, 1, 2, 2]);
+        assert_eq!(hit, vec![a[0]], "A's leaf evicted, its root kept");
+        let (hit, _) = c.lookup(&[5, 5]);
+        assert_eq!(hit, vec![b[0]], "mapped chain survives eviction");
+        // drain everything evictable: A's root goes, B stays mapped
+        assert_eq!(c.evict(&mut pool, 10), 1);
+        assert_eq!(c.cached_pages(), 1);
+        assert_eq!(pool.refcount(b[0]), 2);
+        // once the slot releases, B becomes evictable
+        pool.release(b[0]);
+        assert_eq!(c.evict(&mut pool, 10), 1);
+        assert_eq!(c.cached_pages(), 0);
+        assert_eq!(pool.pages_in_use(), 0, "no leaked pages");
+    }
+}

@@ -36,10 +36,18 @@
 //!   alone (batch rows are independent), hence identical to the
 //!   run-to-completion wave engine;
 //! * a request waits at most the pool-serialized work of the requests
-//!   ahead of it (no starvation; FIFO admission bounds queue wait).
+//!   ahead of it (no starvation; FIFO admission bounds queue wait);
+//! * prefix sharing is invisible in token space: admission may map a
+//!   prompt's cached prefix pages ([`StepForward::map_prefix`]) so
+//!   prefill only computes the suffix, but per-request output stays
+//!   bit-identical with the cache on or off (`tests/continuous_sim.rs`
+//!   pins it; the saving shows up only in the prefill-token and
+//!   page-occupancy gauges).
 
+use crate::runtime::KvSlotPool;
 use crate::serving::batcher::{covering_bucket, Batcher, BatcherConfig};
-use crate::serving::metrics::{SchedulerMetrics, WaveMetrics};
+use crate::serving::metrics::{PageMetrics, SchedulerMetrics, WaveMetrics};
+use crate::serving::prefix_cache::PrefixCache;
 use crate::serving::request::{Request, RequestResult};
 use crate::util::Rng;
 use anyhow::Result;
@@ -220,15 +228,36 @@ pub struct PrefillOutcome {
 
 /// What the scheduler needs from a model: prefill into a slot, one
 /// batched decode step over named slots, and slot KV release. The
-/// artifact engine implements this against PJRT buffers + the
-/// per-slot `runtime::KvSlotPool`; [`StubForward`] implements it as a
+/// artifact engine implements this against PJRT buffers + the paged
+/// per-slot [`KvSlotPool`]; [`StubForward`] implements it as a
 /// deterministic host function for artifact-free testing.
 pub trait StepForward {
+    /// Map the longest cached prefix of `prompt` into `slot`'s KV
+    /// ahead of prefill (prefix-cache backends — the session calls
+    /// this at admission). `None` means this backend consulted no
+    /// cache (the session then skips hit-rate accounting, so a
+    /// cache-less run never reports a meaningless 0% hit rate);
+    /// `Some(n)` maps `n` leading prompt tokens, always less than
+    /// `prompt.len()`, so prefill still computes the last prompt
+    /// position and produces the first token's logits. The default
+    /// never consults a cache.
+    fn map_prefix(&mut self, _slot: usize, _prompt: &[usize]) -> Option<usize> {
+        None
+    }
+
     /// Batched prefill of newly admitted requests; `prompts[i]` goes
-    /// to KV slot `slots[i]`. Returns one outcome per slot, same
-    /// order. Implementations must keep each row's result independent
-    /// of the other rows (the token-identity guarantee rests on it).
-    fn prefill(&mut self, slots: &[usize], prompts: &[&[usize]]) -> Result<Vec<PrefillOutcome>>;
+    /// to KV slot `slots[i]`, whose leading `cached[i]` tokens are
+    /// already resident (from [`StepForward::map_prefix`]) —
+    /// implementations prefill only the suffix `prompts[i][cached[i]..]`.
+    /// Returns one outcome per slot, same order. Implementations must
+    /// keep each row's result independent of the other rows (the
+    /// token-identity guarantee rests on it).
+    fn prefill(
+        &mut self,
+        slots: &[usize],
+        prompts: &[&[usize]],
+        cached: &[usize],
+    ) -> Result<Vec<PrefillOutcome>>;
 
     /// One decode step: `slots` are the live rows (ascending),
     /// `tokens[i]`/`pos[i]` their input token and KV position, padded
@@ -249,6 +278,12 @@ pub trait StepForward {
     /// force-retired (same truncation rule as the wave engine's
     /// `pos < kv_len` loop bound).
     fn kv_capacity(&self) -> usize;
+
+    /// Paged-KV gauges, when this backend owns a page pool. Default:
+    /// no pages to report.
+    fn page_metrics(&self) -> Option<PageMetrics> {
+        None
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -274,9 +309,15 @@ pub struct ContinuousSession<F: StepForward> {
     // no per-step allocations outside the forward itself
     admit_buf: Vec<(Request, Instant)>,
     slot_buf: Vec<usize>,
+    cached_buf: Vec<usize>,
     rows_buf: Vec<usize>,
     toks_buf: Vec<i32>,
     pos_buf: Vec<usize>,
+    /// Page-counter snapshot at the last [`ContinuousSession::take_page_metrics`]
+    /// flush, so repeated flushes of one long-lived session (the
+    /// threaded server flushes at every idle) report deltas instead of
+    /// re-adding lifetime totals.
+    pages_flushed: PageMetrics,
     /// Requests retired during the in-progress step. Normally drained
     /// by [`ContinuousSession::step`]'s Ok return; if the step's
     /// forward fails *after* some requests already retired (admission
@@ -303,9 +344,11 @@ impl<F: StepForward> ContinuousSession<F> {
             arrivals: HashMap::new(),
             admit_buf: Vec::new(),
             slot_buf: Vec::new(),
+            cached_buf: Vec::new(),
             rows_buf: Vec::new(),
             toks_buf: Vec::new(),
             pos_buf: Vec::new(),
+            pages_flushed: PageMetrics::default(),
             finished_buf: Vec::new(),
             prefill_time: Duration::ZERO,
             decode_time: Duration::ZERO,
@@ -353,6 +396,25 @@ impl<F: StepForward> ContinuousSession<F> {
     /// Take the accumulated scheduler gauges (resets them).
     pub fn take_metrics(&mut self) -> SchedulerMetrics {
         std::mem::take(&mut self.sched.metrics)
+    }
+
+    /// Paged-KV gauges since the previous call (event counters as
+    /// deltas; point/monotone gauges current) — so a long-lived
+    /// session flushed repeatedly into [`crate::serving::EngineMetrics`]
+    /// never double-counts. `None` when the backend has no page pool.
+    pub fn take_page_metrics(&mut self) -> Option<PageMetrics> {
+        let cur = self.fwd.page_metrics()?;
+        let delta = PageMetrics {
+            page_len: cur.page_len,
+            pages_in_use: cur.pages_in_use,
+            cached_pages: cur.cached_pages,
+            high_water_pages: cur.high_water_pages,
+            cow_copies: cur.cow_copies.saturating_sub(self.pages_flushed.cow_copies),
+            shared_maps: cur.shared_maps.saturating_sub(self.pages_flushed.shared_maps),
+            evicted_pages: cur.evicted_pages.saturating_sub(self.pages_flushed.evicted_pages),
+        };
+        self.pages_flushed = cur;
+        Some(delta)
     }
 
     /// Summarize the run so far as one [`WaveMetrics`] (resets the
@@ -443,13 +505,35 @@ impl<F: StepForward> ContinuousSession<F> {
                     self.run_prompt_tokens += r.prompt.len();
                     self.slot_buf.push(self.sched.assign(r, enq, waited, now));
                 }
+                // prefix-cache admission: ask the backend to map each
+                // prompt's longest cached prefix before prefill, and
+                // meter the prefill tokens it saves
+                self.cached_buf.clear();
+                for &sid in &self.slot_buf {
+                    let mapped = {
+                        let prompt = self.sched.slot(sid).request.prompt.as_slice();
+                        self.fwd.map_prefix(sid, prompt)
+                    };
+                    let plen = self.sched.slot(sid).request.prompt.len();
+                    let cached = mapped.unwrap_or(0);
+                    debug_assert!(cached < plen.max(1), "mapped prefix must leave a suffix");
+                    if mapped.is_some() {
+                        self.sched.metrics.prefix_lookups += 1;
+                        if cached > 0 {
+                            self.sched.metrics.prefix_hits += 1;
+                            self.sched.metrics.prefill_tokens_saved += cached as u64;
+                        }
+                    }
+                    self.sched.metrics.prefill_tokens += (plen - cached) as u64;
+                    self.cached_buf.push(cached);
+                }
                 let t0 = Instant::now();
                 let prompts: Vec<&[usize]> = self
                     .slot_buf
                     .iter()
                     .map(|&sid| self.sched.slot(sid).request.prompt.as_slice())
                     .collect();
-                let outcomes = self.fwd.prefill(&self.slot_buf, &prompts)?;
+                let outcomes = self.fwd.prefill(&self.slot_buf, &prompts, &self.cached_buf)?;
                 drop(prompts);
                 self.prefill_time += t0.elapsed();
                 // stamp after the forward: TTFT includes prefill compute
@@ -559,37 +643,138 @@ pub fn stub_logits(ctx: &[usize], vocab: usize) -> Vec<f32> {
     (0..vocab).map(|_| rng.f32()).collect()
 }
 
-/// Host-only [`StepForward`]: each slot's "KV cache" is its token
-/// context. Used by the scheduler test suites and the artifact-free
-/// serving bench; also a template for plugging non-PJRT backends into
-/// the session.
+/// Host-only [`StepForward`] over a real paged [`KvSlotPool`]: each
+/// slot's "KV cache" is its token context, stored one token per KV
+/// column (layers = heads = head_dim = 1, so a token column is its
+/// `[k, v]` pair and the k-plane value *is* the token id). Decode
+/// reconstructs the context **from the pages** before computing
+/// logits, so any page-table bug — aliasing, stale data after
+/// recycling, a broken copy-on-write — shows up as token divergence in
+/// the scheduler suites, not just as a bad gauge. Used by the
+/// scheduler/simulation tests and the artifact-free serving benches;
+/// also a template for plugging non-PJRT backends into the session.
+///
+/// With [`StubForward::with_prefix_cache`] the stub additionally runs
+/// a [`PrefixCache`] in front of prefill: admission maps a prompt's
+/// cached prefix pages and prefill writes only the suffix — the
+/// host-only proof of the sharing path's token identity and
+/// prefill-compute savings.
 pub struct StubForward {
     vocab: usize,
     kv_cap: usize,
-    ctx: Vec<Option<Vec<usize>>>,
+    kv: KvSlotPool,
+    cache: Option<PrefixCache>,
     /// Release calls observed (tests assert slot hygiene).
     pub released: u64,
+    /// Prompt tokens written by prefill (suffix only under prefix
+    /// hits) — the stub's own compute meter, cross-checked against
+    /// `SchedulerMetrics::prefill_tokens`.
+    pub prefilled_tokens: u64,
 }
+
+/// Tokens per page of the stub's KV pool (small, so short test
+/// prompts still span several pages).
+pub const STUB_PAGE_LEN: usize = 4;
 
 impl StubForward {
     pub fn new(pool: usize, vocab: usize, kv_cap: usize) -> StubForward {
-        StubForward { vocab, kv_cap, ctx: (0..pool).map(|_| None).collect(), released: 0 }
+        StubForward::build(pool, vocab, kv_cap, STUB_PAGE_LEN, false)
+    }
+
+    /// Stub with the prompt-prefix cache enabled at `page_len`.
+    pub fn with_prefix_cache(
+        pool: usize,
+        vocab: usize,
+        kv_cap: usize,
+        page_len: usize,
+    ) -> StubForward {
+        StubForward::build(pool, vocab, kv_cap, page_len, true)
+    }
+
+    fn build(
+        pool: usize,
+        vocab: usize,
+        kv_cap: usize,
+        page_len: usize,
+        prefix: bool,
+    ) -> StubForward {
+        StubForward {
+            vocab,
+            kv_cap,
+            // unbounded page budget: the host stub's pressure/eviction
+            // behavior is pinned by the dedicated pool/cache suites
+            kv: KvSlotPool::new(pool, 1, 1, kv_cap, 1, page_len, None),
+            cache: prefix.then(|| PrefixCache::new(page_len)),
+            released: 0,
+            prefilled_tokens: 0,
+        }
     }
 
     /// Live contexts currently held (slot hygiene checks).
     pub fn live_contexts(&self) -> usize {
-        self.ctx.iter().filter(|c| c.is_some()).count()
+        (0..self.kv.pool_size()).filter(|&s| self.kv.extent(s) > 0).count()
+    }
+
+    /// The paged KV pool (page-level assertions in tests).
+    pub fn kv(&self) -> &KvSlotPool {
+        &self.kv
+    }
+
+    /// Reconstruct a slot's token context `[0, n)` from its KV pages.
+    fn read_ctx(&self, slot: usize, n: usize) -> Vec<usize> {
+        let mut col = [0.0f32; 2];
+        let mut ctx = Vec::with_capacity(n);
+        for t in 0..n {
+            self.kv.read_token(slot, t, &mut col);
+            ctx.push(col[0] as usize);
+        }
+        ctx
     }
 }
 
 impl StepForward for StubForward {
-    fn prefill(&mut self, slots: &[usize], prompts: &[&[usize]]) -> Result<Vec<PrefillOutcome>> {
+    fn map_prefix(&mut self, slot: usize, prompt: &[usize]) -> Option<usize> {
+        let cache = self.cache.as_mut()?;
+        let (pages, tokens) = cache.lookup(prompt);
+        // the last prompt position must still prefill (its logits seed
+        // the first sample), so a fully-covered prompt maps everything
+        // but re-runs one token — COW keeps the cached page intact
+        let cached = tokens.min(prompt.len().saturating_sub(1));
+        if pages.is_empty() || cached == 0 {
+            return Some(0);
+        }
+        self.kv.map_shared(slot, &pages, tokens);
+        Some(cached)
+    }
+
+    fn prefill(
+        &mut self,
+        slots: &[usize],
+        prompts: &[&[usize]],
+        cached: &[usize],
+    ) -> Result<Vec<PrefillOutcome>> {
         let mut out = Vec::with_capacity(slots.len());
-        for (&sid, &p) in slots.iter().zip(prompts) {
-            anyhow::ensure!(self.ctx[sid].is_none(), "stub: prefill into a live slot {sid}");
-            let ctx = p.to_vec();
-            out.push(PrefillOutcome { logits: stub_logits(&ctx, self.vocab), pos: ctx.len() });
-            self.ctx[sid] = Some(ctx);
+        for ((&sid, &p), &c) in slots.iter().zip(prompts).zip(cached) {
+            anyhow::ensure!(
+                if c == 0 { self.kv.extent(sid) == 0 } else { self.kv.extent(sid) <= p.len() },
+                "stub: prefill into a live slot {sid}"
+            );
+            for (t, &tok) in p.iter().enumerate().skip(c) {
+                self.kv.write_token(sid, t, &[tok as f32, 0.0]);
+            }
+            self.prefilled_tokens += (p.len() - c) as u64;
+            // logits come from the page-reconstructed context: a wrong
+            // prefix mapping diverges the token stream right here
+            let ctx = self.read_ctx(sid, p.len());
+            out.push(PrefillOutcome { logits: stub_logits(&ctx, self.vocab), pos: p.len() });
+            if self.cache.is_some() {
+                let full = p.len() / self.kv.page_len();
+                let pages: Vec<usize> = self.kv.slot_pages(sid)[..full].to_vec();
+                let key = &p[..full * self.kv.page_len()];
+                if let Some(cache) = &mut self.cache {
+                    cache.insert(key, &pages, self.kv.pages_mut());
+                }
+            }
         }
         Ok(out)
     }
@@ -598,26 +783,39 @@ impl StepForward for StubForward {
         &mut self,
         slots: &[usize],
         tokens: &[i32],
-        _pos: &[usize],
+        pos: &[usize],
         bucket: usize,
     ) -> Result<Vec<Vec<f32>>> {
         anyhow::ensure!(slots.len() <= bucket, "stub: {} rows > bucket {bucket}", slots.len());
         let mut out = Vec::with_capacity(slots.len());
-        for (&sid, &tok) in slots.iter().zip(tokens) {
-            let ctx = self.ctx[sid].as_mut().expect("stub: decode on empty slot");
-            ctx.push(tok as usize);
-            out.push(stub_logits(ctx, self.vocab));
+        for ((&sid, &tok), &p) in slots.iter().zip(tokens).zip(pos) {
+            anyhow::ensure!(self.kv.extent(sid) == p, "stub: decode on a stale slot {sid}");
+            self.kv.write_token(sid, p, &[tok as f32, 0.0]);
+            let ctx = self.read_ctx(sid, p + 1);
+            out.push(stub_logits(&ctx, self.vocab));
         }
         Ok(out)
     }
 
     fn release(&mut self, slot: usize) {
-        self.ctx[slot] = None;
+        self.kv.release(slot);
         self.released += 1;
     }
 
     fn kv_capacity(&self) -> usize {
         self.kv_cap
+    }
+
+    fn page_metrics(&self) -> Option<PageMetrics> {
+        Some(PageMetrics {
+            page_len: self.kv.page_len(),
+            pages_in_use: self.kv.pages().pages_in_use(),
+            high_water_pages: self.kv.pages().high_water_pages,
+            cow_copies: self.kv.pages().cow_copies,
+            shared_maps: self.kv.shared_maps,
+            cached_pages: self.cache.as_ref().map_or(0, |c| c.cached_pages()),
+            evicted_pages: self.cache.as_ref().map_or(0, |c| c.evicted_pages),
+        })
     }
 }
 
@@ -737,6 +935,42 @@ mod tests {
         assert_eq!(ids, vec![0, 1, 2, 3, 4]);
         assert!(sess.is_idle());
         assert_eq!(sess.forward().live_contexts(), 0);
+    }
+
+    #[test]
+    fn page_metric_flushes_are_deltas_not_lifetime_totals() {
+        // the threaded server flushes one long-lived session at every
+        // idle; event counters must arrive as deltas or the engine
+        // gauges double-count
+        let cfg = BatcherConfig { buckets: vec![1, 2], max_wait: Duration::ZERO };
+        let mut sess =
+            ContinuousSession::new(cfg, StubForward::with_prefix_cache(2, 11, 64, 4));
+        let mk = |id: u64| {
+            Request::new(
+                id,
+                vec![1, 2, 3, 4, 5, 6, 7, 8, 9],
+                GenParams { max_new_tokens: 2, temperature: 0.0, seed: id, stop_token: None },
+            )
+        };
+        for i in 0..4 {
+            sess.enqueue(mk(i));
+        }
+        sess.drain().unwrap();
+        let a = sess.take_page_metrics().unwrap();
+        assert_eq!(a.shared_maps, 2, "second admission pair must map the cached prefix");
+        for i in 4..6 {
+            sess.enqueue(mk(i));
+        }
+        sess.drain().unwrap();
+        let b = sess.take_page_metrics().unwrap();
+        assert_eq!(b.shared_maps, 2, "flush must report the delta, not lifetime totals");
+        assert!(b.high_water_pages >= a.high_water_pages, "high water is monotone");
+        let c = sess.take_page_metrics().unwrap();
+        assert_eq!(
+            (c.shared_maps, c.cow_copies, c.evicted_pages),
+            (0, 0, 0),
+            "an idle re-flush reports no new events"
+        );
     }
 
     #[test]

@@ -13,7 +13,7 @@
 
 use cmoe::serving::{
     stub_reference, BatcherConfig, ContinuousSession, GenParams, Request, RequestResult,
-    StubForward,
+    SchedulerMetrics, StepForward, StubForward,
 };
 use std::time::Duration;
 
@@ -194,6 +194,123 @@ fn no_starvation_fifo_bound_holds() {
     for w in adm.windows(2) {
         assert!(w[0].1 <= w[1].1, "admission out of FIFO order: {adm:?}");
     }
+}
+
+/// Trace whose prompts share two 16-token "system prompts" (page_len 4
+/// → 4 full shareable pages each) plus 1–3 unique suffix tokens — the
+/// prefix-cache workload. Suffixes stay below a page so the cache only
+/// ever holds the genuinely shared system pages.
+fn shared_prefix_trace() -> Trace {
+    let sys: [Vec<usize>; 2] = [
+        (0..16).map(|j| (j * 3 + 1) % VOCAB).collect(),
+        (0..16).map(|j| (j * 5 + 2) % VOCAB).collect(),
+    ];
+    let g = |max_new, seed| GenParams {
+        max_new_tokens: max_new,
+        temperature: 0.0,
+        seed,
+        stop_token: None,
+    };
+    let mut arrivals: Vec<(u64, Request)> = (0..12u64)
+        .map(|i| {
+            let mut prompt = sys[(i % 2) as usize].clone();
+            prompt.extend((0..1 + i as usize % 3).map(|j| (i as usize * 7 + j) % VOCAB));
+            (i / 3, Request::new(i, prompt, g(2 + i as usize % 6, 40 + i)))
+        })
+        .collect();
+    // two requests whose prompt IS a bare system prompt: the cache
+    // covers the whole prompt, so re-running the last prompt position
+    // (its logits seed the first sample) writes into a shared page —
+    // the copy-on-write path, exercised end to end
+    for (k, i) in [(0usize, 12u64), (1, 13)] {
+        arrivals.push((4, Request::new(i, sys[k].clone(), g(3, 40 + i))));
+    }
+    Trace { arrivals, buckets: vec![1, 4], kv_cap: 64 }
+}
+
+/// Replay `shared_prefix_trace` with the prefix cache on or off,
+/// returning per-request tokens (by id), the scheduler gauges, the
+/// stub's own prefill meter, and (page high-water, COW copies).
+fn run_shared_prefix(
+    t: &Trace,
+    prefix: bool,
+) -> (Vec<Vec<usize>>, SchedulerMetrics, u64, (u64, u64)) {
+    let pool = *t.buckets.iter().max().unwrap();
+    let fwd = if prefix {
+        StubForward::with_prefix_cache(pool, VOCAB, t.kv_cap, 4)
+    } else {
+        StubForward::new(pool, VOCAB, t.kv_cap)
+    };
+    let mut sess = ContinuousSession::new(
+        BatcherConfig { buckets: t.buckets.clone(), max_wait: Duration::ZERO },
+        fwd,
+    );
+    let mut next = 0;
+    let mut tokens = vec![Vec::new(); t.arrivals.len()];
+    while next < t.arrivals.len() || !sess.is_idle() {
+        while next < t.arrivals.len() && t.arrivals[next].0 <= sess.step_index() {
+            sess.enqueue(t.arrivals[next].1.clone());
+            next += 1;
+        }
+        for r in sess.step().expect("stub step cannot fail") {
+            tokens[r.id as usize] = r.tokens;
+        }
+    }
+    let pm = sess.forward().page_metrics().expect("stub owns pages");
+    let prefilled = sess.forward().prefilled_tokens;
+    (tokens, sess.metrics().clone(), prefilled, (pm.high_water_pages as u64, pm.cow_copies))
+}
+
+#[test]
+fn shared_prefix_cache_is_token_invisible_and_saves_prefill() {
+    // the prefix cache is a memory/compute optimization, never a
+    // semantic one: per-request tokens must be bit-identical with the
+    // cache on vs off, while the prefill-token meter strictly drops
+    let t = shared_prefix_trace();
+    let (toks_off, m_off, fill_off, (_, cow_off)) = run_shared_prefix(&t, false);
+    let (toks_on, m_on, fill_on, (_, cow_on)) = run_shared_prefix(&t, true);
+    assert_eq!(cow_off, 0, "no sharing, no COW");
+    assert!(cow_on > 0, "bare-system-prompt requests must exercise copy-on-write");
+    for (i, (a, b)) in toks_off.iter().zip(&toks_on).enumerate() {
+        assert_eq!(a, b, "request {i}: sharing changed the token stream");
+        let want = stub_reference(&t.arrivals[i].1, VOCAB, t.kv_cap);
+        assert_eq!(*a, want, "request {i} diverged from the run-to-completion reference");
+    }
+    // accounting: both paths saw the same prompts; sharing converted
+    // part of the prefill into page mapping, token for token
+    assert_eq!(m_off.prefix_hits, 0);
+    assert_eq!(m_off.prefill_tokens_saved, 0);
+    assert!(m_on.prefix_hits > 0, "shared-prefix trace never hit the cache");
+    assert!(
+        m_on.prefill_tokens < m_off.prefill_tokens,
+        "sharing did not reduce prefilled tokens: {} vs {}",
+        m_on.prefill_tokens,
+        m_off.prefill_tokens
+    );
+    assert_eq!(
+        m_on.prefill_tokens + m_on.prefill_tokens_saved,
+        m_off.prefill_tokens,
+        "prefill accounting must conserve prompt tokens"
+    );
+    // the session meter agrees with the stub's ground-truth write count
+    assert_eq!(fill_off, m_off.prefill_tokens);
+    assert_eq!(fill_on, m_on.prefill_tokens);
+}
+
+#[test]
+fn shared_prefix_replay_is_bit_deterministic_and_dedupes_pages() {
+    let t = shared_prefix_trace();
+    let (a, am, _, (a_hw, a_cow)) = run_shared_prefix(&t, true);
+    let (b, bm, _, (b_hw, b_cow)) = run_shared_prefix(&t, true);
+    assert_eq!(a, b, "cache-on replay must be bit-deterministic");
+    assert_eq!(am.prefill_tokens, bm.prefill_tokens);
+    assert_eq!((a_hw, a_cow), (b_hw, b_cow), "page accounting must replay exactly");
+    // and sharing keeps fewer pages resident than the unshared run
+    let (_, _, _, (off_hw, _)) = run_shared_prefix(&t, false);
+    assert!(
+        a_hw < off_hw,
+        "page high-water did not drop under sharing: {a_hw} vs {off_hw}"
+    );
 }
 
 #[test]

@@ -1,0 +1,329 @@
+//! Randomized property suite for the paged KV pool
+//! (`runtime::PagePool` + `runtime::KvSlotPool`): alloc / map_shared /
+//! write (COW) / release traces checked against a shadow model after
+//! every operation.
+//!
+//! Invariants pinned (the ISSUE-5 acceptance list):
+//! * every page's refcount equals its live mappings (slot page tables
+//!   + cache-like holds) — no page is leaked or double-freed, and a
+//!   drained trace ends with zero pages in use;
+//! * the high-water page gauge is monotone and equals the max
+//!   pages-in-use ever observed;
+//! * a recycled page never leaks stale KV: positions a slot never
+//!   wrote read zero, even after heavy recycling (extends the
+//!   stale-data guarantee documented in `runtime/kv_pool.rs`);
+//! * copy-on-write isolates divergent writes: writing into a shared
+//!   page changes only the writer's view, every other holder keeps
+//!   the original bytes;
+//! * `gather_full` agrees with per-token reads and zero-fills beyond
+//!   each slot's extent.
+
+use cmoe::prop_assert;
+use cmoe::runtime::KvSlotPool;
+use cmoe::util::prop;
+use cmoe::util::Rng;
+use std::collections::{HashMap, HashSet};
+
+const LAYERS: usize = 2;
+const HEADS: usize = 1;
+const HD: usize = 1;
+/// Token column elements: LAYERS * 2 * HEADS * HD.
+const COL: usize = 4;
+const PAGE_LEN: usize = 3;
+const KV_LEN: usize = 60;
+const POOL: usize = 5;
+
+type Col = [f32; COL];
+
+/// Shadow model: expected token columns per live slot, plus the
+/// expected content of every cache-like page hold.
+#[derive(Default)]
+struct Shadow {
+    slots: Vec<Option<Vec<Col>>>,
+    /// (held page ids, expected columns covering them fully).
+    held: Vec<(Vec<usize>, Vec<Col>)>,
+}
+
+fn write_shadow(cols: &mut Vec<Col>, pos: usize, col: Col) {
+    if cols.len() <= pos {
+        cols.resize(pos + 1, [0.0; COL]);
+    }
+    cols[pos] = col;
+}
+
+/// Check every invariant the trace is about.
+fn check(kv: &KvSlotPool, sh: &Shadow, hw_seen: &mut usize) -> Result<(), String> {
+    // per-slot content: extent and every token column
+    let mut col = [0.0f32; COL];
+    for (s, exp) in sh.slots.iter().enumerate() {
+        match exp {
+            None => {
+                prop_assert!(kv.extent(s) == 0, "released slot {s} kept extent {}", kv.extent(s));
+                prop_assert!(kv.slot_pages(s).is_empty(), "released slot {s} kept pages");
+            }
+            Some(cols) => {
+                prop_assert!(
+                    kv.extent(s) == cols.len(),
+                    "slot {s} extent {} != shadow {}",
+                    kv.extent(s),
+                    cols.len()
+                );
+                for (t, want) in cols.iter().enumerate() {
+                    kv.read_token(s, t, &mut col);
+                    prop_assert!(
+                        col == *want,
+                        "slot {s} pos {t}: {col:?} != {want:?} (stale or aliased page)"
+                    );
+                }
+            }
+        }
+    }
+    // held (cache-like) pages keep their bytes regardless of slot writes
+    for (pages, cols) in &sh.held {
+        for (pi, &p) in pages.iter().enumerate() {
+            let page = kv.pages().page(p);
+            for tp in 0..PAGE_LEN {
+                let want = cols[pi * PAGE_LEN + tp];
+                for (ph, &w) in want.iter().enumerate() {
+                    let got = page[(ph * PAGE_LEN + tp) * HD];
+                    prop_assert!(
+                        got == w,
+                        "held page {p} tok {tp} plane {ph}: {got} != {w} (COW failed to isolate)"
+                    );
+                }
+            }
+        }
+    }
+    // refcounts == live mappings; pages_in_use == distinct references
+    let mut refs: HashMap<usize, u32> = HashMap::new();
+    for s in 0..POOL {
+        for &p in kv.slot_pages(s) {
+            *refs.entry(p).or_insert(0) += 1;
+        }
+    }
+    for (pages, _) in &sh.held {
+        for &p in pages {
+            *refs.entry(p).or_insert(0) += 1;
+        }
+    }
+    for (&p, &n) in &refs {
+        prop_assert!(
+            kv.pages().refcount(p) == n,
+            "page {p} refcount {} != {n} live mappings",
+            kv.pages().refcount(p)
+        );
+    }
+    let distinct: HashSet<usize> = refs.keys().copied().collect();
+    prop_assert!(
+        kv.pages().pages_in_use() == distinct.len(),
+        "pages_in_use {} != {} referenced",
+        kv.pages().pages_in_use(),
+        distinct.len()
+    );
+    // high-water: monotone and exactly the max in-use observed
+    prop_assert!(
+        kv.pages().high_water_pages >= *hw_seen,
+        "high water went down: {} < {hw_seen}",
+        kv.pages().high_water_pages
+    );
+    *hw_seen = (*hw_seen).max(kv.pages().pages_in_use());
+    prop_assert!(
+        kv.pages().high_water_pages == *hw_seen,
+        "high water {} != max in-use {hw_seen}",
+        kv.pages().high_water_pages
+    );
+    // gather agrees with token reads and zero-fills beyond the extent
+    if let Some((s, cols)) = sh.slots.iter().enumerate().find_map(|(s, c)| {
+        c.as_ref().map(|c| (s, c))
+    }) {
+        let mut buf = Vec::new();
+        kv.gather_full(&[s], 1, &mut buf);
+        for lc in 0..LAYERS * 2 {
+            for t in 0..KV_LEN {
+                let got = buf[lc * KV_LEN + t];
+                // pages are zero beyond written positions, so gather of
+                // a mapped page's tail is 0 exactly like unmapped space
+                let want = if t < cols.len() { cols[t][lc] } else { 0.0 };
+                prop_assert!(
+                    got == want,
+                    "gather slot {s} lc {lc} tok {t}: {got} != {want}"
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_page_traces_never_leak_alias_or_stale() {
+    // ≥ 200 randomized traces (the acceptance floor), ~size ops each
+    prop::check(
+        "paged KV traces: refcounts, COW isolation, zero-fill, no leaks",
+        prop::Config { cases: 220, seed: 0x9A6E5, max_size: 36 },
+        |rng: &mut Rng, size| {
+            let mut kv = KvSlotPool::new(POOL, LAYERS, HEADS, KV_LEN, HD, PAGE_LEN, None);
+            let mut sh = Shadow { slots: (0..POOL).map(|_| None).collect(), held: Vec::new() };
+            let mut hw_seen = 0usize;
+            let mut stamp = 0f32;
+            let fresh_col = |stamp: &mut f32| -> Col {
+                *stamp += 1.0;
+                [*stamp, -*stamp, *stamp + 1000.0, -*stamp - 1000.0]
+            };
+            for _ in 0..3 * size {
+                match rng.below(6) {
+                    // admit: map an optional held prefix, then write a suffix
+                    0 | 1 => {
+                        let Some(slot) = (0..POOL).find(|&s| sh.slots[s].is_none()) else {
+                            continue;
+                        };
+                        let mut cols: Vec<Col> = Vec::new();
+                        let mut start = 0usize;
+                        if !sh.held.is_empty() && rng.f32() < 0.6 {
+                            let (pages, held_cols) = &sh.held[rng.below(sh.held.len())];
+                            let k = 1 + rng.below(pages.len());
+                            kv.map_shared(slot, &pages[..k], k * PAGE_LEN);
+                            cols.extend_from_slice(&held_cols[..k * PAGE_LEN]);
+                            start = k * PAGE_LEN;
+                        }
+                        let len = (start + rng.below(12)).min(KV_LEN);
+                        for t in start..len {
+                            let c = fresh_col(&mut stamp);
+                            kv.write_token(slot, t, &c);
+                            write_shadow(&mut cols, t, c);
+                        }
+                        sh.slots[slot] = Some(cols);
+                    }
+                    // write more (decode-like growth, occasionally sparse
+                    // — the gap positions must read zero later)
+                    2 => {
+                        let live: Vec<usize> =
+                            (0..POOL).filter(|&s| sh.slots[s].is_some()).collect();
+                        if live.is_empty() {
+                            continue;
+                        }
+                        let slot = live[rng.below(live.len())];
+                        let cols = sh.slots[slot].as_mut().unwrap();
+                        let pos = (cols.len() + rng.below(4)).min(KV_LEN - 1);
+                        let c = fresh_col(&mut stamp);
+                        kv.write_token(slot, pos, &c);
+                        write_shadow(cols, pos, c);
+                    }
+                    // divergent write into the mapped prefix: COW must
+                    // isolate it from every other holder
+                    3 => {
+                        let live: Vec<usize> =
+                            (0..POOL).filter(|&s| sh.slots[s].is_some()).collect();
+                        if live.is_empty() {
+                            continue;
+                        }
+                        let slot = live[rng.below(live.len())];
+                        let cols = sh.slots[slot].as_mut().unwrap();
+                        if cols.is_empty() {
+                            continue;
+                        }
+                        let pos = rng.below(cols.len());
+                        let c = fresh_col(&mut stamp);
+                        kv.write_token(slot, pos, &c);
+                        write_shadow(cols, pos, c);
+                    }
+                    // hold: a cache-like reference to a slot's leading
+                    // fully-written pages
+                    4 => {
+                        let live: Vec<usize> =
+                            (0..POOL).filter(|&s| sh.slots[s].is_some()).collect();
+                        if live.is_empty() {
+                            continue;
+                        }
+                        let slot = live[rng.below(live.len())];
+                        let cols = sh.slots[slot].as_ref().unwrap();
+                        let full = cols.len() / PAGE_LEN;
+                        if full == 0 {
+                            continue;
+                        }
+                        let k = 1 + rng.below(full);
+                        let pages: Vec<usize> = kv.slot_pages(slot)[..k].to_vec();
+                        for &p in &pages {
+                            kv.pages_mut().retain(p);
+                        }
+                        sh.held.push((pages, cols[..k * PAGE_LEN].to_vec()));
+                    }
+                    // release a slot or drop a hold
+                    _ => {
+                        if rng.f32() < 0.5 || sh.held.is_empty() {
+                            let live: Vec<usize> =
+                                (0..POOL).filter(|&s| sh.slots[s].is_some()).collect();
+                            if live.is_empty() {
+                                continue;
+                            }
+                            let slot = live[rng.below(live.len())];
+                            kv.release(slot);
+                            sh.slots[slot] = None;
+                        } else {
+                            let (pages, _) = sh.held.swap_remove(rng.below(sh.held.len()));
+                            for &p in &pages {
+                                kv.pages_mut().release(p);
+                            }
+                        }
+                    }
+                }
+                check(&kv, &sh, &mut hw_seen)?;
+            }
+            // drain everything: no page may survive its last reference
+            for s in 0..POOL {
+                if sh.slots[s].is_some() {
+                    kv.release(s);
+                    sh.slots[s] = None;
+                }
+            }
+            for (pages, _) in sh.held.drain(..) {
+                for p in pages {
+                    kv.pages_mut().release(p);
+                }
+            }
+            prop_assert!(
+                kv.pages().pages_in_use() == 0,
+                "trace leaked {} pages",
+                kv.pages().pages_in_use()
+            );
+            check(&kv, &sh, &mut hw_seen)
+        },
+    );
+}
+
+#[test]
+fn recycled_pages_read_zero_after_dirty_history() {
+    // pointed stale-data check on top of the randomized one: fill a
+    // slot with non-zero KV, release it, then write sparsely into a
+    // fresh slot — every recycled page position not written must be 0
+    let mut kv = KvSlotPool::new(2, LAYERS, HEADS, KV_LEN, HD, PAGE_LEN, None);
+    for t in 0..12 {
+        kv.write_token(0, t, &[9.0; COL]);
+    }
+    kv.release(0);
+    assert_eq!(kv.pages().pages_in_use(), 0);
+    kv.write_token(1, 10, &[5.0; COL]); // recycles the dirty pages
+    let mut col = [1.0f32; COL];
+    for t in 0..10 {
+        kv.read_token(1, t, &mut col);
+        assert_eq!(col, [0.0; COL], "stale KV leaked into recycled page at pos {t}");
+    }
+    kv.read_token(1, 10, &mut col);
+    assert_eq!(col, [5.0; COL]);
+}
+
+#[test]
+fn bounded_pool_exhaustion_is_loud_not_corrupt() {
+    // 2 slots × 2 pages budget: a third slot's write must panic (the
+    // engine reserves/evicts first; silent reuse would alias KV)
+    let mut kv = KvSlotPool::new(3, LAYERS, HEADS, 2 * PAGE_LEN, HD, PAGE_LEN, Some(4));
+    for s in 0..2 {
+        for t in 0..2 * PAGE_LEN {
+            kv.write_token(s, t, &[s as f32; COL]);
+        }
+    }
+    assert_eq!(kv.pages_available(), Some(0));
+    let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        kv.write_token(2, 0, &[7.0; COL]);
+    }));
+    assert!(err.is_err(), "exhausted pool must refuse to allocate");
+}

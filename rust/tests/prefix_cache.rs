@@ -1,0 +1,189 @@
+//! Property suite for `serving::PrefixCache`: the page-granular token
+//! trie checked against a brute-force reference over randomized prompt
+//! sets, plus the eviction-safety guarantees.
+//!
+//! * **Lookup == brute force.** For any insertion history, a lookup's
+//!   cached-token count equals the longest common full-chunk prefix
+//!   with any inserted key (a trie and a max-over-set agree by
+//!   construction — this pins the implementation to that spec).
+//! * **Page identity.** Chunks shared between insertions resolve to
+//!   one physical page; refcounts equal cache holds + simulated slot
+//!   mappings at every step.
+//! * **Eviction safety.** LRU eviction under page pressure never
+//!   releases a page a live slot still maps (refcount > 1), only ever
+//!   shrinks lookup results, and frees exactly what it reports.
+
+use cmoe::prop_assert;
+use cmoe::runtime::PagePool;
+use cmoe::serving::PrefixCache;
+use cmoe::util::prop;
+use cmoe::util::Rng;
+
+const PAGE_LEN: usize = 2;
+const ALPHABET: usize = 3;
+
+/// Brute-force reference: longest shared full-chunk prefix (in tokens)
+/// between `q` and any inserted key.
+fn brute_force_tokens(inserted: &[Vec<usize>], q: &[usize]) -> usize {
+    let mut best = 0usize;
+    for key in inserted {
+        let mut t = 0;
+        while t + PAGE_LEN <= q.len().min(key.len()) && q[t..t + PAGE_LEN] == key[t..t + PAGE_LEN]
+        {
+            t += PAGE_LEN;
+        }
+        best = best.max(t);
+    }
+    best
+}
+
+/// Insert `key` the way a prefill does: the "slot" owns freshly
+/// allocated pages for its full chunks, the cache retains what it
+/// keeps, the slot then releases its own references.
+fn insert_as_slot(cache: &mut PrefixCache, pool: &mut PagePool, key: &[usize]) {
+    let n = key.len() / PAGE_LEN;
+    let pages: Vec<usize> = (0..n).map(|_| pool.try_alloc().expect("unbounded pool")).collect();
+    cache.insert(key, &pages, pool);
+    for p in pages {
+        pool.release(p);
+    }
+}
+
+#[test]
+fn prop_lookup_matches_brute_force_reference() {
+    prop::check(
+        "prefix-cache lookups equal the brute-force longest-chunk-prefix",
+        prop::Config { cases: 220, seed: 0x7A1E5, max_size: 24 },
+        |rng: &mut Rng, size| {
+            let mut pool = PagePool::new(PAGE_LEN, 2 * PAGE_LEN, None);
+            let mut cache = PrefixCache::new(PAGE_LEN);
+            let mut inserted: Vec<Vec<usize>> = Vec::new();
+            for _ in 0..size {
+                // small alphabet so prefixes genuinely collide
+                let key: Vec<usize> =
+                    (0..rng.below(12)).map(|_| rng.below(ALPHABET)).collect();
+                if rng.f32() < 0.6 {
+                    insert_as_slot(&mut cache, &mut pool, &key);
+                    inserted.push(key.clone());
+                }
+                let q: Vec<usize> = if rng.f32() < 0.5 && !inserted.is_empty() {
+                    // probe near an inserted key: copy + perturb tail
+                    let mut q = inserted[rng.below(inserted.len())].clone();
+                    if !q.is_empty() && rng.f32() < 0.7 {
+                        let i = rng.below(q.len());
+                        q[i] = rng.below(ALPHABET);
+                    }
+                    q
+                } else {
+                    (0..rng.below(12)).map(|_| rng.below(ALPHABET)).collect()
+                };
+                let (pages, tokens) = cache.lookup(&q);
+                let want = brute_force_tokens(&inserted, &q);
+                prop_assert!(
+                    tokens == want,
+                    "lookup({q:?}) = {tokens} tokens, brute force says {want}"
+                );
+                prop_assert!(
+                    pages.len() * PAGE_LEN == tokens,
+                    "page count {} disagrees with token count {tokens}",
+                    pages.len()
+                );
+                // every returned page is live and cache-held
+                for &p in &pages {
+                    prop_assert!(pool.refcount(p) >= 1, "lookup returned a freed page {p}");
+                }
+            }
+            // cache holds exactly its accounted pages; drain-evict frees them all
+            prop_assert!(
+                pool.pages_in_use() == cache.cached_pages(),
+                "pool {} != cache accounting {}",
+                pool.pages_in_use(),
+                cache.cached_pages()
+            );
+            let freed = cache.evict(&mut pool, usize::MAX);
+            prop_assert!(
+                pool.pages_in_use() == 0 && cache.cached_pages() == 0,
+                "evict-all leaked {} pages (freed {freed})",
+                pool.pages_in_use()
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_eviction_never_touches_live_mappings_and_only_shrinks() {
+    prop::check(
+        "LRU eviction under pressure spares live-mapped prefixes",
+        prop::Config { cases: 200, seed: 0xEV1C7, max_size: 16 },
+        |rng: &mut Rng, size| {
+            let mut pool = PagePool::new(PAGE_LEN, 2 * PAGE_LEN, None);
+            let mut cache = PrefixCache::new(PAGE_LEN);
+            let mut inserted: Vec<Vec<usize>> = Vec::new();
+            for _ in 0..(1 + size) {
+                let key: Vec<usize> =
+                    (0..PAGE_LEN * (1 + rng.below(4))).map(|_| rng.below(ALPHABET)).collect();
+                insert_as_slot(&mut cache, &mut pool, &key);
+                inserted.push(key);
+            }
+            // a "live slot" maps one cached prefix (retains its pages)
+            let mapped_key = inserted[rng.below(inserted.len())].clone();
+            let (mapped_pages, mapped_tokens) = cache.lookup(&mapped_key);
+            for &p in &mapped_pages {
+                pool.retain(p);
+            }
+            // record pre-eviction lookups for the shrink check
+            let pre: Vec<usize> =
+                inserted.iter().map(|k| cache.lookup(k).1).collect();
+            let before = pool.pages_in_use();
+            let need = 1 + rng.below(before.max(1));
+            let freed = cache.evict(&mut pool, need);
+            prop_assert!(
+                pool.pages_in_use() == before - freed,
+                "evict freed {} pages but reported {freed}",
+                before - pool.pages_in_use()
+            );
+            // the live mapping is untouched: same pages, same coverage
+            let (again_pages, again_tokens) = cache.lookup(&mapped_key);
+            prop_assert!(
+                again_pages == mapped_pages && again_tokens == mapped_tokens,
+                "eviction broke a live-mapped prefix: {again_pages:?} != {mapped_pages:?}"
+            );
+            for &p in &mapped_pages {
+                prop_assert!(
+                    pool.refcount(p) == 2,
+                    "live-mapped page {p} refcount {} != 2",
+                    pool.refcount(p)
+                );
+            }
+            // eviction only shrinks coverage, never invents it
+            for (k, &was) in inserted.iter().zip(&pre) {
+                let now = cache.lookup(k).1;
+                prop_assert!(now <= was, "lookup grew after eviction: {now} > {was} for {k:?}");
+            }
+            // cleanup: slot releases, then everything is evictable
+            for &p in &mapped_pages {
+                pool.release(p);
+            }
+            cache.evict(&mut pool, usize::MAX);
+            prop_assert!(pool.pages_in_use() == 0, "leaked pages after drain");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn lru_order_is_respected_among_evictable_leaves() {
+    let mut pool = PagePool::new(PAGE_LEN, 2 * PAGE_LEN, None);
+    let mut cache = PrefixCache::new(PAGE_LEN);
+    insert_as_slot(&mut cache, &mut pool, &[0, 0]);
+    insert_as_slot(&mut cache, &mut pool, &[1, 1]);
+    insert_as_slot(&mut cache, &mut pool, &[2, 2]);
+    // touch [0,0] and [2,2]; [1,1] becomes LRU
+    cache.lookup(&[0, 0]);
+    cache.lookup(&[2, 2]);
+    assert_eq!(cache.evict(&mut pool, 1), 1);
+    assert_eq!(cache.lookup(&[1, 1]).1, 0, "LRU leaf must go first");
+    assert_eq!(cache.lookup(&[0, 0]).1, PAGE_LEN);
+    assert_eq!(cache.lookup(&[2, 2]).1, PAGE_LEN);
+}

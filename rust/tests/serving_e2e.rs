@@ -271,6 +271,76 @@ fn continuous_matches_waves_mixed_lengths_and_stops_all_modes() {
 }
 
 #[test]
+fn shared_system_prompt_prefix_cache_matches_waves_all_modes() {
+    // Paged KV + prefix cache on the artifact path: a batch whose
+    // requests share a system prompt must produce per-request tokens
+    // identical to (a) the run-to-completion wave engine and (b) the
+    // continuous path with sharing off — the cache is a memory dedup,
+    // never a semantic change. All prompts share one length so their
+    // padded prefill rows share leading pages.
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(418);
+    let (dense, moe) = small_models(&mut rng);
+    let spec: cmoe::model::MoeSpec = "S3A3E8".parse().unwrap();
+    let sys: Vec<usize> = (0..8).map(|_| rng.below(250)).collect();
+    let reqs: Vec<Request> = (0..6)
+        .map(|i| {
+            let mut prompt = sys.clone();
+            prompt.extend((0..4).map(|_| rng.below(250)));
+            Request::new(
+                i as u64,
+                prompt,
+                GenParams {
+                    max_new_tokens: 4 + i % 3,
+                    temperature: 0.0,
+                    seed: i as u64,
+                    stop_token: None,
+                },
+            )
+        })
+        .collect();
+    let modes: [(ExecMode, &ModelWeights); 3] = [
+        (ExecMode::Dense, &dense),
+        (ExecMode::MoeMonolithic, &moe),
+        (ExecMode::MoeOrchestrated, &moe),
+    ];
+    for (mode, model) in modes {
+        let run = |prefix: bool, continuous: bool| {
+            let mut cfg = match mode {
+                ExecMode::Dense => EngineConfig::dense("small", 64),
+                m => EngineConfig::moe("small", 64, spec, m),
+            };
+            cfg.batcher.buckets = vec![1, 8];
+            cfg.batcher.max_wait = std::time::Duration::ZERO;
+            cfg.balance = None;
+            cfg.page_len = 4;
+            cfg.prefix_cache = prefix;
+            let engine = Engine::new(rt.clone(), model.clone(), cfg).unwrap();
+            let results = if continuous {
+                engine.run_queue(reqs.clone()).unwrap()
+            } else {
+                engine.run_queue_waves(reqs.clone()).unwrap()
+            };
+            let shared_maps = engine.metrics.lock().unwrap().pages.shared_maps;
+            (results.iter().map(|r| r.tokens.clone()).collect::<Vec<_>>(), shared_maps)
+        };
+        let (waves, _) = run(false, false);
+        let (cont, _) = run(false, true);
+        let (cont_prefix, shared_maps) = run(true, true);
+        assert_eq!(cont, waves, "continuous vs waves diverged in {mode:?}");
+        assert_eq!(cont_prefix, waves, "prefix sharing changed tokens in {mode:?}");
+        // the batch admits together, so rows after the first map the
+        // first row's padded-prefix pages instead of storing copies
+        assert!(
+            shared_maps >= 5,
+            "expected page dedup across the shared-prompt batch, saw {shared_maps} maps in {mode:?}"
+        );
+        let lens: std::collections::HashSet<usize> = cont_prefix.iter().map(|t| t.len()).collect();
+        assert!(lens.len() >= 2, "batch was not mixed-length: {lens:?}");
+    }
+}
+
+#[test]
 fn stop_token_halts_generation() {
     let Some(rt) = runtime() else { return };
     let mut rng = Rng::new(415);

@@ -34,6 +34,14 @@ cargo test -q --release --test pipeline_golden --test method_registry
 echo "==> continuous-batching scheduler + seeded-trace simulation (release)"
 cargo test -q --release --test scheduler --test continuous_sim
 
+# Pin the paged-KV contract: randomized page-pool traces (no leak /
+# double free / stale read, refcounts == live mappings, monotone high
+# water) and the prefix-cache trie vs its brute-force reference (plus
+# LRU eviction never touching a live-mapped prefix). Host-only, and
+# release-pinned for the same optimization-drift reason.
+echo "==> paged KV pool + prefix cache property suites (release)"
+cargo test -q --release --test page_pool --test prefix_cache
+
 echo "==> cargo doc --no-deps"
 RUSTDOCFLAGS="${RUSTDOCFLAGS:--D warnings}" cargo doc --no-deps
 
