@@ -177,7 +177,7 @@ const SWEEP_KV_CAP: usize = 128;
 const SWEEP_BUCKETS: &[usize] = &[1, 8, 32];
 
 /// Knuth Poisson sampler (λ small, so the naive product is fine).
-fn poisson(rng: &mut Rng, lambda: f64) -> usize {
+pub(super) fn poisson(rng: &mut Rng, lambda: f64) -> usize {
     let l = (-lambda).exp();
     let mut k = 0usize;
     let mut p = 1.0f64;
@@ -268,9 +268,9 @@ impl SimOutcome {
 fn continuous_sim(trace: &[(u64, Request)]) -> Result<SimOutcome> {
     let pool = *SWEEP_BUCKETS.last().unwrap();
     let mut sess = ContinuousSession::new(
-        BatcherConfig { buckets: SWEEP_BUCKETS.to_vec(), max_wait: Duration::ZERO },
+        BatcherConfig { buckets: SWEEP_BUCKETS.to_vec(), max_wait: Duration::ZERO, ..Default::default() },
         StubForward::new(pool, SWEEP_VOCAB, SWEEP_KV_CAP),
-    );
+    )?;
     let mut next = 0;
     let mut tokens = 0usize;
     let mut done = 0usize;
@@ -472,9 +472,9 @@ fn prefix_sim(trace: &[(u64, Request)], sharing: bool) -> Result<PrefixOutcome> 
         StubForward::new(pool, SWEEP_VOCAB, SWEEP_KV_CAP)
     };
     let mut sess = ContinuousSession::new(
-        BatcherConfig { buckets: SWEEP_BUCKETS.to_vec(), max_wait: Duration::ZERO },
+        BatcherConfig { buckets: SWEEP_BUCKETS.to_vec(), max_wait: Duration::ZERO, ..Default::default() },
         fwd,
-    );
+    )?;
     let mut next = 0;
     let mut tokens_by_id: Vec<Vec<usize>> = vec![Vec::new(); trace.len()];
     let mut generated = 0usize;

@@ -14,19 +14,21 @@ mod exp_figs;
 mod exp_quality;
 mod exp_efficiency;
 pub mod exp_serving;
+pub mod exp_slo;
 
 use crate::util::table::Table;
 use anyhow::{bail, Result};
 use common::Ctx;
 
 /// Every experiment id, in paper order; `dispatch` (the grouped expert
-/// dispatch sweep), `serving` (continuous-vs-waves scheduling sweep)
-/// and `prefix` (shared-system-prompt KV page sharing sweep), all
-/// artifact-free, ride at the end.
+/// dispatch sweep), `serving` (continuous-vs-waves scheduling sweep),
+/// `prefix` (shared-system-prompt KV page sharing sweep) and `slo`
+/// (priority/preemption/shed-load burst sweep), all artifact-free,
+/// ride at the end.
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "fig1", "fig2", "table1", "table2", "table3", "table4", "table5", "table6", "table7",
     "table8", "table9", "table10", "table11", "fig4", "fig5", "fig6", "dispatch", "serving",
-    "prefix",
+    "prefix", "slo",
 ];
 
 /// Run one experiment by id.
@@ -49,6 +51,7 @@ pub fn run(exp: &str, ctx: &mut Ctx) -> Result<Vec<Table>> {
         "dispatch" => vec![exp_serving::dispatch_sweep(ctx)?],
         "serving" => vec![exp_serving::serving_sweep(ctx)?],
         "prefix" => vec![exp_serving::prefix_sweep(ctx)?],
+        "slo" => vec![exp_slo::slo_sweep(ctx)?],
         "table10" => vec![exp_quality::table10(ctx)?],
         "table11" => vec![exp_quality::table11(ctx)?],
         "ablate" => vec![

@@ -45,6 +45,50 @@ struct SlotPages {
     extent: usize,
 }
 
+/// A preempted slot's KV, detached from the pool's slot array: the
+/// page table still holds its references (nothing is copied or
+/// freed), so the pages cannot be recycled while parked. Restore with
+/// [`KvSlotPool::unpark`] — into *any* empty slot, not necessarily
+/// the original — or free with [`KvSlotPool::drop_parked`]. Fields
+/// are private: a parked table can only go back through the pool that
+/// issued it.
+#[derive(Debug)]
+pub struct ParkedSlot {
+    table: Vec<usize>,
+    extent: usize,
+}
+
+impl ParkedSlot {
+    /// Valid token positions the parked table covers.
+    pub fn tokens(&self) -> usize {
+        self.extent
+    }
+
+    /// Number of pages kept resident while parked.
+    pub fn page_count(&self) -> usize {
+        self.table.len()
+    }
+}
+
+/// Typed KV pool failure: the recoverable alternative to the
+/// reserve-first panic path, for backends that want pool pressure to
+/// surface as a per-request error instead of a process abort.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvPoolError {
+    /// No free page and nothing evictable — the write cannot proceed.
+    Exhausted,
+}
+
+impl std::fmt::Display for KvPoolError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KvPoolError::Exhausted => write!(f, "kv page pool exhausted"),
+        }
+    }
+}
+
+impl std::error::Error for KvPoolError {}
+
 /// Host-side pool of per-slot paged KV.
 pub struct KvSlotPool {
     layers: usize,
@@ -183,20 +227,40 @@ impl KvSlotPool {
     /// `[L, 2, H, hd]`) at position `pos`, allocating/COW-ing pages as
     /// needed.
     pub fn write_token(&mut self, slot: usize, pos: usize, col: &[f32]) {
+        self.try_write_token(slot, pos, col)
+            .expect("kv page pool exhausted — reserve/evict before writing");
+    }
+
+    /// Fallible [`KvSlotPool::write_token`]: pool exhaustion (fresh
+    /// page or COW copy) comes back as [`KvPoolError::Exhausted`]
+    /// instead of a panic, with the slot's prior pages untouched —
+    /// the fault-containment entry point for host-side backends.
+    pub fn try_write_token(
+        &mut self,
+        slot: usize,
+        pos: usize,
+        col: &[f32],
+    ) -> Result<(), KvPoolError> {
         assert_eq!(col.len(), self.token_elems(), "kv token column size");
-        self.ensure_pages(slot, pos + 1);
-        let (pl, hd) = (self.pages.page_len(), self.head_dim);
+        let pl = self.pages.page_len();
+        let need = pos / pl + 1;
+        while self.slots[slot].table.len() < need {
+            let p = self.pages.try_alloc().ok_or(KvPoolError::Exhausted)?;
+            self.slots[slot].table.push(p);
+        }
+        let hd = self.head_dim;
         let tp = pos % pl;
         let st = &mut self.slots[slot];
         let page = self
             .pages
             .try_page_mut(&mut st.table[pos / pl])
-            .expect("kv page pool exhausted during COW");
+            .ok_or(KvPoolError::Exhausted)?;
         for ph in 0..self.layers * 2 * self.heads {
             let dst = (ph * pl + tp) * hd;
             page[dst..dst + hd].copy_from_slice(&col[ph * hd..(ph + 1) * hd]);
         }
         st.extent = st.extent.max(pos + 1);
+        Ok(())
     }
 
     /// Read one token column at `pos` (must be below the extent).
@@ -351,6 +415,35 @@ impl KvSlotPool {
         }
         self.slots[slot].extent = 0;
     }
+
+    /// Preemption: detach `slot`'s page table without touching any
+    /// refcount. The slot reads as empty afterwards (assignable to a
+    /// new request); the parked pages stay resident — and cannot be
+    /// recycled — until [`KvSlotPool::unpark`] or
+    /// [`KvSlotPool::drop_parked`].
+    pub fn park(&mut self, slot: usize) -> ParkedSlot {
+        let st = &mut self.slots[slot];
+        ParkedSlot { table: std::mem::take(&mut st.table), extent: std::mem::take(&mut st.extent) }
+    }
+
+    /// Restore a parked table into an **empty** slot (any slot, not
+    /// necessarily the one it was parked from). Refcounts are again
+    /// untouched: the references simply move back from the parked
+    /// handle to the slot.
+    pub fn unpark(&mut self, slot: usize, parked: ParkedSlot) {
+        let st = &mut self.slots[slot];
+        assert!(st.table.is_empty() && st.extent == 0, "unpark into an occupied slot {slot}");
+        st.table = parked.table;
+        st.extent = parked.extent;
+    }
+
+    /// Free a parked table without restoring it (the victim was
+    /// aborted, or resumes through drop+recompute instead).
+    pub fn drop_parked(&mut self, parked: ParkedSlot) {
+        for p in parked.table {
+            self.pages.release(p);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -504,6 +597,79 @@ mod tests {
         assert_eq!(pool.pages().pages_in_use(), 2);
         pool.release(0);
         assert_eq!(pool.pages().pages_in_use(), 0);
+    }
+
+    #[test]
+    fn park_unpark_roundtrip_keeps_bytes_and_refcounts() {
+        let mut pool = KvSlotPool::new(3, 1, 1, 64, 1, 2, None);
+        for t in 0..5 {
+            pool.write_token(0, t, &[t as f32 + 1.0, 0.0]);
+        }
+        let in_use = pool.pages().pages_in_use();
+        let parked = pool.park(0);
+        assert_eq!(parked.tokens(), 5);
+        assert_eq!(parked.page_count(), 3);
+        // the slot reads empty, but the pages stay resident
+        assert_eq!(pool.extent(0), 0);
+        assert!(pool.slot_pages(0).is_empty());
+        assert_eq!(pool.pages().pages_in_use(), in_use);
+        // another request can use the vacated slot meanwhile
+        pool.write_token(0, 0, &[42.0, 0.0]);
+        pool.release(0);
+        // restore into a different slot: bytes identical
+        pool.unpark(2, parked);
+        assert_eq!(pool.extent(2), 5);
+        let mut col = [0.0f32; 2];
+        for t in 0..5 {
+            pool.read_token(2, t, &mut col);
+            assert_eq!(col[0], t as f32 + 1.0);
+        }
+        pool.release(2);
+        assert_eq!(pool.pages().pages_in_use(), 0);
+    }
+
+    #[test]
+    fn park_preserves_shared_page_references() {
+        let mut pool = KvSlotPool::new(3, 1, 1, 64, 1, 2, None);
+        for t in 0..2 {
+            pool.write_token(0, t, &[t as f32, 0.0]);
+        }
+        let pages: Vec<usize> = pool.slot_pages(0).to_vec();
+        pool.map_shared(1, &pages, 2);
+        // park the sharer, then retire the original: the page must
+        // survive on the parked table's reference alone
+        let parked = pool.park(1);
+        pool.release(0);
+        assert_eq!(pool.pages().pages_in_use(), 1);
+        let mut col = [0.0f32; 2];
+        pool.unpark(1, parked);
+        pool.read_token(1, 1, &mut col);
+        assert_eq!(col[0], 1.0);
+        pool.release(1);
+        assert_eq!(pool.pages().pages_in_use(), 0);
+    }
+
+    #[test]
+    fn drop_parked_frees_pages() {
+        let mut pool = KvSlotPool::new(2, 1, 1, 64, 1, 2, None);
+        pool.write_token(0, 3, &[1.0, 1.0]);
+        let parked = pool.park(0);
+        assert_eq!(pool.pages().pages_in_use(), 2);
+        pool.drop_parked(parked);
+        assert_eq!(pool.pages().pages_in_use(), 0);
+    }
+
+    #[test]
+    fn try_write_token_reports_exhaustion_without_panicking() {
+        // 2 pages total, page_len 2
+        let mut pool = KvSlotPool::new(2, 1, 1, 64, 1, 2, Some(2));
+        assert!(pool.try_write_token(0, 0, &[1.0, 1.0]).is_ok());
+        assert!(pool.try_write_token(0, 3, &[1.0, 1.0]).is_ok());
+        assert_eq!(pool.try_write_token(1, 0, &[1.0, 1.0]), Err(KvPoolError::Exhausted));
+        // the failed writer's slot is untouched and the pool still works
+        assert_eq!(pool.extent(1), 0);
+        pool.release(0);
+        assert!(pool.try_write_token(1, 0, &[1.0, 1.0]).is_ok());
     }
 
     #[test]

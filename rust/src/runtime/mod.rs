@@ -17,7 +17,7 @@ mod kv_pool;
 mod pages;
 
 pub use bindings::{ModelBuffers, MoeModelBuffers};
-pub use kv_pool::KvSlotPool;
+pub use kv_pool::{KvPoolError, KvSlotPool, ParkedSlot};
 pub use manifest::{ArgSpec, ArtifactInfo, Manifest};
 pub use pages::PagePool;
 

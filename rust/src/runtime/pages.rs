@@ -10,7 +10,10 @@
 //!
 //! Invariants (property-tested):
 //! * a page's refcount equals the number of live mappings holding it
-//!   (slot page tables + prefix-cache holds);
+//!   (slot page tables + prefix-cache holds + parked tables — a
+//!   preempted slot's detached [`crate::runtime::ParkedSlot`] keeps
+//!   its references, so parked KV can never be recycled underneath a
+//!   victim awaiting resume);
 //! * `release` on the last reference returns the page to the free
 //!   list; a page is never double-freed (refcount underflow panics);
 //! * allocation hands out **zeroed** pages — recycled or fresh — so a

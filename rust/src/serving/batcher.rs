@@ -1,19 +1,70 @@
-//! The admission queue: FIFO request intake for both scheduling paths.
+//! The admission queue: priority-class request intake for both
+//! scheduling paths.
 //!
-//! * **Continuous scheduler** (the default engine path):
-//!   [`Batcher::admit_into`] pops up to the number of free KV slots at
-//!   every step; the `max_wait` hold window applies only while the
-//!   engine is idle, letting a first batch fill before prefill starts.
+//! * **Continuous scheduler** (the default engine path): the session
+//!   polls [`Batcher::peek_next`]/[`Batcher::pop_next`] once per free
+//!   KV slot at every step. Admission is FIFO *within* a class and
+//!   class-ordered across classes, with two promotions layered on
+//!   top: a queued request whose step-denominated deadline is about
+//!   to lapse is admitted first (SLO urgency), and a request queued
+//!   longer than `age_promote_steps` outranks fresher higher classes
+//!   (anti-starvation aging). An all-[`Priority::Normal`] workload
+//!   degenerates to the original FIFO batcher exactly.
 //! * **Run-to-completion waves** (reference/benchmark path):
 //!   [`Batcher::take_wave`] forms the largest available batch that fits
 //!   a compiled bucket size (e.g. {1, 8, 32}), waiting up to `max_wait`
 //!   for more arrivals when the queue is smaller than the largest
 //!   bucket. Prompts inside a wave are left-padded bucket-wise by the
 //!   engine.
+//!
+//! **Backpressure**: with `queue_cap` set, each class queue is
+//! bounded. Arrivals past the cap are first degraded
+//! ([`EffortTier::Degraded`], the ROADMAP item 4 activation-ratio
+//! seam) into a small overflow margin, then shed with a typed
+//! [`SubmitOutcome::Rejected`] — queue memory is bounded by
+//! `3 × (queue_cap + degrade_margin)` entries no matter the burst.
 
-use crate::serving::request::Request;
+use crate::serving::clock::Clock;
+use crate::serving::request::{EffortTier, Priority, Request};
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
+
+/// A `BatcherConfig` that cannot form a valid scheduler: surfaced as
+/// a typed error instead of a panic deep in `Scheduler::new`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConfigError {
+    /// `buckets` is empty — there is no batch shape to compile for.
+    NoBuckets,
+    /// A bucket of 0 rows can never hold a request.
+    ZeroBucket,
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::NoBuckets => write!(f, "batcher config: need at least one batch bucket"),
+            ConfigError::ZeroBucket => write!(f, "batcher config: bucket size 0 is invalid"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// How the scheduler makes room for a deadline-urgent higher class
+/// when the pool is full.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PreemptMode {
+    /// Never preempt (the pre-SLO behavior).
+    #[default]
+    Off,
+    /// Park the victim's KV pages (refcounts held, nothing recomputed;
+    /// pages stay resident while parked). Falls back to `Drop` when
+    /// the backend cannot park.
+    Park,
+    /// Release the victim's pages and recompute its context through
+    /// the prefix cache on resume (cheapest memory, costs prefill).
+    Drop,
+}
 
 /// Batcher policy.
 #[derive(Clone, Debug)]
@@ -22,11 +73,89 @@ pub struct BatcherConfig {
     pub buckets: Vec<usize>,
     /// How long to hold a non-full wave open for late arrivals.
     pub max_wait: Duration,
+    /// Bound on each class queue (None = unbounded, the legacy
+    /// behavior). Arrivals past the cap degrade, then shed.
+    pub queue_cap: Option<usize>,
+    /// Extra per-class entries accepted as [`EffortTier::Degraded`]
+    /// once the cap is reached (the degrade-before-shed step). Only
+    /// meaningful with `queue_cap` set.
+    pub degrade_margin: usize,
+    /// Anti-starvation aging: a request queued at least this many
+    /// scheduler steps is admitted ahead of fresher higher classes.
+    /// `u64::MAX` disables aging.
+    pub age_promote_steps: u64,
+    /// Preemption policy for deadline-urgent higher classes.
+    pub preempt: PreemptMode,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { buckets: vec![1, 8, 32], max_wait: Duration::from_millis(2) }
+        BatcherConfig {
+            buckets: vec![1, 8, 32],
+            max_wait: Duration::from_millis(2),
+            queue_cap: None,
+            degrade_margin: 0,
+            age_promote_steps: u64::MAX,
+            preempt: PreemptMode::Off,
+        }
+    }
+}
+
+impl BatcherConfig {
+    /// The single validation primitive: the bucket list sorted and
+    /// deduped, or a typed error. Every scheduling surface
+    /// (`Batcher::new`, `Scheduler::new`, `Engine::new`) funnels
+    /// through this instead of asserting.
+    pub fn normalized(&self) -> Result<Vec<usize>, ConfigError> {
+        if self.buckets.is_empty() {
+            return Err(ConfigError::NoBuckets);
+        }
+        if self.buckets.contains(&0) {
+            return Err(ConfigError::ZeroBucket);
+        }
+        let mut b = self.buckets.clone();
+        b.sort_unstable();
+        b.dedup();
+        Ok(b)
+    }
+}
+
+/// Why a request was shed instead of queued.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShedLoad {
+    /// The class whose bounded queue was full.
+    pub priority: Priority,
+    /// Queue depth (including the degrade margin) at rejection time.
+    pub queue_len: usize,
+}
+
+impl std::fmt::Display for ShedLoad {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "shed load: {} queue full ({} queued)",
+            self.priority.name(),
+            self.queue_len
+        )
+    }
+}
+
+/// Typed admission outcome for a submitted request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitOutcome {
+    /// Queued normally.
+    Queued,
+    /// Queued, but degraded to a lower effort tier to fit the
+    /// overflow margin of a full class queue.
+    QueuedDegraded,
+    /// Shed: the bounded queue (cap + margin) is full. The request
+    /// was not enqueued.
+    Rejected(ShedLoad),
+}
+
+impl SubmitOutcome {
+    pub fn is_queued(&self) -> bool {
+        !matches!(self, SubmitOutcome::Rejected(_))
     }
 }
 
@@ -40,30 +169,84 @@ pub fn covering_bucket(buckets: &[usize], n: usize) -> usize {
     *buckets.iter().find(|&&b| n <= b).unwrap_or_else(|| buckets.last().unwrap())
 }
 
-/// FIFO queue + wave former. Thread-safe wrapper lives in the engine.
+struct Queued {
+    req: Request,
+    enqueued: Instant,
+    /// Scheduler step at arrival (0 on the wave path) — the basis for
+    /// deadline urgency and aging, both step-denominated.
+    arrival_step: u64,
+    /// Global FIFO sequence, so cross-class drains keep exact arrival
+    /// order.
+    seq: u64,
+}
+
+/// Per-class FIFO queues + wave former. Thread-safe wrapper lives in
+/// the engine.
 pub struct Batcher {
     cfg: BatcherConfig,
-    queue: VecDeque<(Request, Instant)>,
+    queues: [VecDeque<Queued>; 3],
+    clock: Clock,
+    next_seq: u64,
 }
 
 impl Batcher {
-    pub fn new(cfg: BatcherConfig) -> Self {
-        assert!(!cfg.buckets.is_empty(), "need at least one batch bucket");
-        let mut cfg = cfg;
-        cfg.buckets.sort_unstable();
-        Batcher { cfg, queue: VecDeque::new() }
+    pub fn new(cfg: BatcherConfig) -> Result<Self, ConfigError> {
+        Batcher::with_clock(cfg, Clock::wall())
     }
 
-    pub fn push(&mut self, r: Request) {
-        self.queue.push_back((r, Instant::now()));
+    pub fn with_clock(cfg: BatcherConfig, clock: Clock) -> Result<Self, ConfigError> {
+        let buckets = cfg.normalized()?;
+        let mut cfg = cfg;
+        cfg.buckets = buckets;
+        Ok(Batcher {
+            cfg,
+            queues: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+            clock,
+            next_seq: 0,
+        })
+    }
+
+    /// Enqueue at the current clock time, arrival step 0 (wave path,
+    /// which has no step counter). The continuous session uses
+    /// [`Batcher::push_at`] so deadlines and aging see real steps.
+    pub fn push(&mut self, r: Request) -> SubmitOutcome {
+        let now = self.clock.now();
+        self.push_at(r, now, 0)
+    }
+
+    /// Enqueue with an explicit arrival time and scheduler step.
+    /// Applies the bounded-queue policy: under `queue_cap`, arrivals
+    /// past the cap are degraded into the overflow margin, then shed.
+    pub fn push_at(&mut self, mut r: Request, now: Instant, step: u64) -> SubmitOutcome {
+        let c = r.priority.index();
+        let mut outcome = SubmitOutcome::Queued;
+        if let Some(cap) = self.cfg.queue_cap {
+            let len = self.queues[c].len();
+            if len >= cap + self.cfg.degrade_margin {
+                return SubmitOutcome::Rejected(ShedLoad { priority: r.priority, queue_len: len });
+            }
+            if len >= cap {
+                r.tier = EffortTier::Degraded;
+                outcome = SubmitOutcome::QueuedDegraded;
+            }
+        }
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.queues[c].push_back(Queued { req: r, enqueued: now, arrival_step: step, seq });
+        outcome
     }
 
     pub fn len(&self) -> usize {
-        self.queue.len()
+        self.queues.iter().map(|q| q.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.queue.is_empty()
+        self.queues.iter().all(|q| q.is_empty())
+    }
+
+    /// Depth of one class queue (bounded-memory observability).
+    pub fn class_len(&self, p: Priority) -> usize {
+        self.queues[p.index()].len()
     }
 
     /// Bucket the next wave would use for `n` queued requests: the
@@ -72,18 +255,113 @@ impl Batcher {
         covering_bucket(&self.cfg.buckets, n)
     }
 
-    /// Pop the oldest queued request (error-drain path).
+    /// Pop the globally oldest queued request regardless of class
+    /// (error-drain path — exact arrival order).
     pub fn pop_front(&mut self) -> Option<(Request, Instant)> {
-        self.queue.pop_front()
+        let c = (0..3)
+            .filter(|&c| !self.queues[c].is_empty())
+            .min_by_key(|&c| self.queues[c].front().unwrap().seq)?;
+        let q = self.queues[c].pop_front().unwrap();
+        Some((q.req, q.enqueued))
+    }
+
+    /// Oldest enqueue time across all classes (hold-window basis).
+    fn oldest(&self) -> Option<Instant> {
+        self.queues.iter().filter_map(|q| q.front()).map(|e| e.enqueued).min()
+    }
+
+    /// The hold policy shared by waves and idle continuous admission:
+    /// a queue smaller than the largest bucket whose oldest entry is
+    /// younger than `max_wait` is held, so an idle engine can form a
+    /// fuller first batch.
+    fn held(&self, now: Instant) -> bool {
+        let n = self.len();
+        if n == 0 {
+            return true;
+        }
+        let max_bucket = *self.cfg.buckets.last().unwrap();
+        n < max_bucket
+            && now.saturating_duration_since(self.oldest().unwrap()) < self.cfg.max_wait
+    }
+
+    /// Which class queue the next admission comes from at `step`
+    /// (hold window not considered): deadline-urgent fronts first (in
+    /// class order), then aged fronts (oldest arrival wins), then
+    /// plain class order. Urgency and aging are evaluated at queue
+    /// fronts only — FIFO within a class is never reordered.
+    fn next_class(&self, step: u64) -> Option<usize> {
+        // 1. urgency: the front would miss its deadline if it waits
+        //    one more step
+        for c in 0..3 {
+            if let Some(front) = self.queues[c].front() {
+                if let Some(d) = front.req.deadline_steps {
+                    if step.saturating_sub(front.arrival_step) >= d {
+                        return Some(c);
+                    }
+                }
+            }
+        }
+        // 2. aging: starving fronts outrank fresher higher classes
+        if self.cfg.age_promote_steps != u64::MAX {
+            let aged = (0..3)
+                .filter_map(|c| {
+                    let front = self.queues[c].front()?;
+                    (step.saturating_sub(front.arrival_step) >= self.cfg.age_promote_steps)
+                        .then_some((front.arrival_step, c))
+                })
+                .min();
+            if let Some((_, c)) = aged {
+                return Some(c);
+            }
+        }
+        // 3. class order
+        (0..3).find(|&c| !self.queues[c].is_empty())
+    }
+
+    /// Class of the next admission at `step`, or None if empty.
+    pub fn peek_next(&self, step: u64) -> Option<Priority> {
+        self.next_class(step).map(|c| Priority::ALL[c])
+    }
+
+    /// Pop the next admission at `step` (see [`Batcher::peek_next`]
+    /// for the policy). Returns the request, its enqueue time, and
+    /// its arrival step.
+    pub fn pop_next(&mut self, step: u64) -> Option<(Request, Instant, u64)> {
+        let c = self.next_class(step)?;
+        let q = self.queues[c].pop_front().unwrap();
+        Some((q.req, q.enqueued, q.arrival_step))
+    }
+
+    /// Per-class count of queued requests already at/past their
+    /// admission deadline at `step` — the preemption demand the
+    /// scheduler tries to make room for.
+    pub fn urgent_by_class(&self, step: u64) -> [usize; 3] {
+        let mut out = [0usize; 3];
+        for c in 0..3 {
+            out[c] = self.queues[c]
+                .iter()
+                .filter(|e| {
+                    e.req
+                        .deadline_steps
+                        .is_some_and(|d| step.saturating_sub(e.arrival_step) >= d)
+                })
+                .count();
+        }
+        out
+    }
+
+    /// Whether idle admission is currently held open for late
+    /// arrivals (continuous path; a busy engine never holds — a free
+    /// slot always costs less than an empty row).
+    pub fn holding(&self, idle: bool, now: Instant) -> bool {
+        idle && self.held(now)
     }
 
     /// Admission for the continuous scheduler: move up to `n` requests
-    /// FIFO into `out` (cleared first). While `idle` (no live slots),
-    /// the wave hold policy applies — a queue smaller than the largest
-    /// bucket whose oldest entry is younger than `max_wait` is held, so
-    /// an idle engine can form a fuller first batch. A busy engine
-    /// admits immediately: a free slot always costs less than an empty
-    /// row. Returns the number admitted.
+    /// into `out` (cleared first) in class-then-FIFO order. While
+    /// `idle` (no live slots), the wave hold policy applies. Returns
+    /// the number admitted. The session's step loop uses the finer
+    /// [`Batcher::pop_next`]; this remains the coarse one-call form.
     pub fn admit_into(
         &mut self,
         n: usize,
@@ -91,20 +369,19 @@ impl Batcher {
         out: &mut Vec<(Request, Instant)>,
     ) -> usize {
         out.clear();
-        let q = self.queue.len();
-        if q == 0 || n == 0 {
+        if n == 0 || self.is_empty() {
             return 0;
         }
-        if idle {
-            let max_bucket = *self.cfg.buckets.last().unwrap();
-            let oldest = self.queue.front().unwrap().1;
-            if q < max_bucket && oldest.elapsed() < self.cfg.max_wait {
-                return 0;
+        if self.holding(idle, self.clock.now()) {
+            return 0;
+        }
+        while out.len() < n {
+            match self.pop_next(u64::MAX) {
+                Some((r, t, _)) => out.push((r, t)),
+                None => break,
             }
         }
-        let take = q.min(n);
-        out.extend(self.queue.drain(..take));
-        take
+        out.len()
     }
 
     /// Pop a wave: up to `bucket` requests (bucket chosen by queue
@@ -124,19 +401,21 @@ impl Batcher {
     /// waves without allocating. Returns whether a wave was formed.
     pub fn take_wave_into(&mut self, out: &mut Vec<(Request, Instant)>) -> bool {
         out.clear();
-        let n = self.queue.len();
+        let n = self.len();
         if n == 0 {
             return false;
         }
-        let max_bucket = *self.cfg.buckets.last().unwrap();
-        let oldest = self.queue.front().unwrap().1;
         // hold a partial wave open while fresh and below the max bucket
-        if n < max_bucket && oldest.elapsed() < self.cfg.max_wait {
+        if self.held(self.clock.now()) {
             return false;
         }
-        let bucket = self.bucket_for(n);
-        let take = n.min(bucket);
-        out.extend(self.queue.drain(..take));
+        let take = n.min(self.bucket_for(n));
+        while out.len() < take {
+            match self.pop_next(u64::MAX) {
+                Some((r, t, _)) => out.push((r, t)),
+                None => break,
+            }
+        }
         true
     }
 }
@@ -150,9 +429,13 @@ mod tests {
         Request::new(id, vec![1, 2], GenParams::default())
     }
 
+    fn cfg(buckets: Vec<usize>, max_wait: Duration) -> BatcherConfig {
+        BatcherConfig { buckets, max_wait, ..Default::default() }
+    }
+
     #[test]
     fn bucket_selection() {
-        let b = Batcher::new(BatcherConfig { buckets: vec![1, 8, 32], max_wait: Duration::ZERO });
+        let b = Batcher::new(cfg(vec![1, 8, 32], Duration::ZERO)).unwrap();
         assert_eq!(b.bucket_for(1), 1);
         assert_eq!(b.bucket_for(2), 8);
         assert_eq!(b.bucket_for(8), 8);
@@ -161,9 +444,24 @@ mod tests {
     }
 
     #[test]
+    fn config_errors_are_typed() {
+        assert_eq!(
+            Batcher::new(cfg(vec![], Duration::ZERO)).err(),
+            Some(ConfigError::NoBuckets)
+        );
+        assert_eq!(
+            Batcher::new(cfg(vec![4, 0], Duration::ZERO)).err(),
+            Some(ConfigError::ZeroBucket)
+        );
+        // unsorted + duplicated buckets normalize instead of erroring
+        let b = Batcher::new(cfg(vec![8, 1, 8, 4], Duration::ZERO)).unwrap();
+        assert_eq!(b.bucket_for(2), 4);
+        assert_eq!(b.bucket_for(100), 8);
+    }
+
+    #[test]
     fn wave_never_exceeds_bucket() {
-        let mut b =
-            Batcher::new(BatcherConfig { buckets: vec![1, 4], max_wait: Duration::ZERO });
+        let mut b = Batcher::new(cfg(vec![1, 4], Duration::ZERO)).unwrap();
         for i in 0..10 {
             b.push(req(i));
         }
@@ -177,10 +475,10 @@ mod tests {
 
     #[test]
     fn hold_window_delays_partial_waves() {
-        let mut b = Batcher::new(BatcherConfig {
-            buckets: vec![1, 8],
-            max_wait: Duration::from_secs(60),
-        });
+        let clock = Clock::manual();
+        let mut b =
+            Batcher::with_clock(cfg(vec![1, 8], Duration::from_secs(60)), clock.clone())
+                .unwrap();
         b.push(req(0));
         // fresh single request below max bucket: held
         assert!(b.take_wave().is_none());
@@ -189,12 +487,16 @@ mod tests {
             b.push(req(i));
         }
         assert_eq!(b.take_wave().unwrap().len(), 8);
+        // a partial wave past the window is released too
+        b.push(req(8));
+        assert!(b.take_wave().is_none());
+        clock.advance(Duration::from_secs(61));
+        assert_eq!(b.take_wave().unwrap().len(), 1);
     }
 
     #[test]
     fn take_wave_into_reuses_buffer() {
-        let mut b =
-            Batcher::new(BatcherConfig { buckets: vec![1, 4], max_wait: Duration::ZERO });
+        let mut b = Batcher::new(cfg(vec![1, 4], Duration::ZERO)).unwrap();
         for i in 0..6 {
             b.push(req(i));
         }
@@ -214,10 +516,7 @@ mod tests {
 
     #[test]
     fn admit_into_fifo_and_hold() {
-        let mut b = Batcher::new(BatcherConfig {
-            buckets: vec![1, 4],
-            max_wait: Duration::from_secs(60),
-        });
+        let mut b = Batcher::new(cfg(vec![1, 4], Duration::from_secs(60))).unwrap();
         for i in 0..6 {
             b.push(req(i));
         }
@@ -239,10 +538,92 @@ mod tests {
 
     #[test]
     fn zero_wait_releases_immediately() {
-        let mut b =
-            Batcher::new(BatcherConfig { buckets: vec![1, 8], max_wait: Duration::ZERO });
+        let mut b = Batcher::new(cfg(vec![1, 8], Duration::ZERO)).unwrap();
         b.push(req(0));
         assert_eq!(b.take_wave().unwrap().len(), 1);
         assert!(b.take_wave().is_none());
+    }
+
+    #[test]
+    fn class_order_then_fifo_within_class() {
+        let mut b = Batcher::new(cfg(vec![1, 8], Duration::ZERO)).unwrap();
+        b.push(req(0).with_priority(Priority::Low));
+        b.push(req(1));
+        b.push(req(2).with_priority(Priority::High));
+        b.push(req(3).with_priority(Priority::High));
+        b.push(req(4));
+        let order: Vec<u64> =
+            std::iter::from_fn(|| b.pop_next(0).map(|(r, _, _)| r.id)).collect();
+        assert_eq!(order, vec![2, 3, 1, 4, 0]);
+    }
+
+    #[test]
+    fn aging_promotes_starving_low_class() {
+        let mut c = cfg(vec![1, 8], Duration::ZERO);
+        c.age_promote_steps = 5;
+        let mut b = Batcher::new(c).unwrap();
+        let now = Instant::now();
+        b.push_at(req(0).with_priority(Priority::Low), now, 0);
+        b.push_at(req(1).with_priority(Priority::High), now, 4);
+        // fresh: class order wins
+        assert_eq!(b.peek_next(4), Some(Priority::High));
+        // low request has aged 5 steps: promoted past the high class
+        assert_eq!(b.peek_next(5), Some(Priority::Low));
+        assert_eq!(b.pop_next(5).unwrap().0.id, 0);
+        assert_eq!(b.pop_next(5).unwrap().0.id, 1);
+    }
+
+    #[test]
+    fn deadline_urgency_outranks_class_order() {
+        let mut b = Batcher::new(cfg(vec![1, 8], Duration::ZERO)).unwrap();
+        let now = Instant::now();
+        b.push_at(req(0).with_priority(Priority::Normal).with_deadline_steps(3), now, 0);
+        b.push_at(req(1).with_priority(Priority::High), now, 0);
+        assert_eq!(b.peek_next(2), Some(Priority::High));
+        // at step 3 the normal request is on its last on-time step
+        assert_eq!(b.peek_next(3), Some(Priority::Normal));
+        assert_eq!(b.urgent_by_class(3), [0, 1, 0]);
+        assert_eq!(b.pop_next(3).unwrap().0.id, 0);
+    }
+
+    #[test]
+    fn bounded_queue_degrades_then_sheds() {
+        let mut c = cfg(vec![1, 8], Duration::ZERO);
+        c.queue_cap = Some(2);
+        c.degrade_margin = 1;
+        let mut b = Batcher::new(c).unwrap();
+        assert_eq!(b.push(req(0)), SubmitOutcome::Queued);
+        assert_eq!(b.push(req(1)), SubmitOutcome::Queued);
+        // past the cap: degraded into the margin
+        assert_eq!(b.push(req(2)), SubmitOutcome::QueuedDegraded);
+        // past cap + margin: shed with a typed outcome
+        match b.push(req(3)) {
+            SubmitOutcome::Rejected(s) => {
+                assert_eq!(s.priority, Priority::Normal);
+                assert_eq!(s.queue_len, 3);
+            }
+            other => panic!("expected shed, got {other:?}"),
+        }
+        // other classes have their own bound
+        assert_eq!(b.push(req(4).with_priority(Priority::High)), SubmitOutcome::Queued);
+        assert_eq!(b.class_len(Priority::Normal), 3);
+        assert_eq!(b.class_len(Priority::High), 1);
+        // the degraded entry carries the tier seam
+        let tiers: Vec<EffortTier> =
+            std::iter::from_fn(|| b.pop_next(0).map(|(r, _, _)| r.tier)).collect();
+        assert_eq!(
+            tiers,
+            vec![EffortTier::Full, EffortTier::Full, EffortTier::Full, EffortTier::Degraded]
+        );
+    }
+
+    #[test]
+    fn pop_front_drains_in_arrival_order_across_classes() {
+        let mut b = Batcher::new(cfg(vec![1, 8], Duration::ZERO)).unwrap();
+        b.push(req(0).with_priority(Priority::Low));
+        b.push(req(1).with_priority(Priority::High));
+        b.push(req(2));
+        let order: Vec<u64> = std::iter::from_fn(|| b.pop_front().map(|(r, _)| r.id)).collect();
+        assert_eq!(order, vec![0, 1, 2]);
     }
 }

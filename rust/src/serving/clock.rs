@@ -1,0 +1,106 @@
+//! Injectable time source for the serving stack.
+//!
+//! Queue-wait, hold-window, and latency accounting all need "now".
+//! Production uses the wall clock; tests use a manual clock advanced
+//! explicitly, so hold-window and SLO behavior is deterministic
+//! instead of racing the test host. Deadline and aging logic is
+//! step-denominated (see [`Request::deadline_steps`]) and does not
+//! consult the clock at all.
+//!
+//! [`Request::deadline_steps`]: crate::serving::Request::deadline_steps
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A cloneable time source. Clones of a manual clock share the same
+/// underlying time: advancing one advances all (the scheduler and the
+/// batcher can hold clones of the test's clock).
+#[derive(Clone, Debug)]
+pub struct Clock {
+    inner: ClockInner,
+}
+
+#[derive(Clone, Debug)]
+enum ClockInner {
+    Wall,
+    Manual { epoch: Instant, nanos: Arc<AtomicU64> },
+}
+
+impl Clock {
+    /// The real wall clock (`Instant::now`).
+    pub fn wall() -> Self {
+        Clock { inner: ClockInner::Wall }
+    }
+
+    /// A manual clock starting at an arbitrary epoch. Time only moves
+    /// through [`Clock::advance`].
+    pub fn manual() -> Self {
+        Clock {
+            inner: ClockInner::Manual {
+                epoch: Instant::now(),
+                nanos: Arc::new(AtomicU64::new(0)),
+            },
+        }
+    }
+
+    pub fn is_manual(&self) -> bool {
+        matches!(self.inner, ClockInner::Manual { .. })
+    }
+
+    pub fn now(&self) -> Instant {
+        match &self.inner {
+            ClockInner::Wall => Instant::now(),
+            ClockInner::Manual { epoch, nanos } => {
+                *epoch + Duration::from_nanos(nanos.load(Ordering::SeqCst))
+            }
+        }
+    }
+
+    /// Advance a manual clock by `d`. No-op on a wall clock (there is
+    /// nothing meaningful to do, and panicking would make shared test
+    /// helpers clock-variant).
+    pub fn advance(&self, d: Duration) {
+        if let ClockInner::Manual { nanos, .. } = &self.inner {
+            nanos.fetch_add(d.as_nanos() as u64, Ordering::SeqCst);
+        }
+    }
+}
+
+impl Default for Clock {
+    fn default() -> Self {
+        Clock::wall()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manual_clock_moves_only_on_advance() {
+        let c = Clock::manual();
+        let t0 = c.now();
+        assert_eq!(c.now(), t0);
+        c.advance(Duration::from_millis(5));
+        assert_eq!(c.now() - t0, Duration::from_millis(5));
+    }
+
+    #[test]
+    fn clones_share_time() {
+        let a = Clock::manual();
+        let b = a.clone();
+        b.advance(Duration::from_secs(1));
+        assert_eq!(a.now(), b.now());
+    }
+
+    #[test]
+    fn wall_clock_is_monotone_and_advance_is_noop() {
+        let c = Clock::wall();
+        assert!(!c.is_manual());
+        let t0 = c.now();
+        c.advance(Duration::from_secs(3600));
+        // advancing a wall clock does not jump it into the future
+        assert!(c.now() < t0 + Duration::from_secs(3600));
+    }
+}

@@ -32,7 +32,9 @@
 use crate::model::{LayerFfn, ModelWeights, MoeSpec};
 use crate::moe::{route_from_scores, route_tokens, BalanceConfig, BiasAdapter, GroupedRouting};
 use crate::runtime::{KvSlotPool, ModelBuffers, MoeModelBuffers, XlaRuntime};
-use crate::serving::batcher::{covering_bucket, Batcher, BatcherConfig};
+use crate::runtime::ParkedSlot;
+use crate::serving::batcher::{covering_bucket, Batcher, BatcherConfig, SubmitOutcome};
+use crate::serving::clock::Clock;
 use crate::serving::dispatch::{DispatchArena, ExpertDispatcher, GroupedDispatcher};
 use crate::serving::metrics::{EngineMetrics, PageMetrics, WaveMetrics};
 use crate::serving::prefix_cache::PrefixCache;
@@ -90,6 +92,10 @@ pub struct EngineConfig {
     /// a *memory* dedup: the compiled prefill still runs whole rows,
     /// but matched prefix pages are stored once and mapped per slot.
     pub prefix_cache: bool,
+    /// Time source for the scheduler session (wall clock in
+    /// production; [`Clock::manual`] makes queue-wait/deadline logic
+    /// deterministic in tests).
+    pub clock: Clock,
 }
 
 /// Default KV page length (tokens) for the paged slot pool.
@@ -107,6 +113,7 @@ impl EngineConfig {
             expert_exec: ExpertExec::HostGrouped,
             page_len: DEFAULT_PAGE_LEN,
             prefix_cache: false,
+            clock: Clock::wall(),
         }
     }
 
@@ -121,6 +128,7 @@ impl EngineConfig {
             expert_exec: ExpertExec::HostGrouped,
             page_len: DEFAULT_PAGE_LEN,
             prefix_cache: false,
+            clock: Clock::wall(),
         }
     }
 }
@@ -162,6 +170,9 @@ struct MoeState {
 
 impl Engine {
     pub fn new(rt: Arc<XlaRuntime>, model: ModelWeights, cfg: EngineConfig) -> Result<Engine> {
+        // reject bad bucket lists up front so every later construction
+        // (sessions, wave batchers, the slot pool) can rely on them
+        cfg.batcher.normalized().context("engine batcher config")?;
         let dense_bufs = ModelBuffers::from_model(&rt, &model)?;
         let is_moe = model.layers.iter().any(|l| matches!(l.ffn, LayerFfn::Moe(_)));
         match cfg.mode {
@@ -242,12 +253,27 @@ impl Engine {
     /// KV slots, per-step retirement, minimal covering buckets.
     pub fn run_queue(&self, requests: Vec<Request>) -> Result<Vec<RequestResult>> {
         let mut session = self.continuous_session();
+        let mut shed = Vec::new();
         for r in requests {
-            session.enqueue(r);
+            let id = r.id;
+            if let SubmitOutcome::Rejected(_) = session.enqueue(r) {
+                shed.push(id);
+            }
         }
         let results = session.drain()?;
         self.record_results(&results);
         self.flush_session(&mut session);
+        // a standalone batch expects every request back: surface
+        // shed/failed ids as an error instead of silently returning a
+        // partial set (the ticketed server reports these per request)
+        let failures = session.take_failures();
+        if !shed.is_empty() || !failures.is_empty() {
+            bail!(
+                "run_queue: shed {:?}; failed {:?}",
+                shed,
+                failures.iter().map(|f| (f.id, f.error.as_str())).collect::<Vec<_>>()
+            );
+        }
         Ok(results)
     }
 
@@ -256,7 +282,12 @@ impl Engine {
     /// between steps — that is mid-flight admission; the threaded
     /// server does exactly this.
     pub fn continuous_session(&self) -> ContinuousSession<EngineStepForward<'_>> {
-        ContinuousSession::new(self.cfg.batcher.clone(), EngineStepForward::new(self))
+        ContinuousSession::with_clock(
+            self.cfg.batcher.clone(),
+            EngineStepForward::new(self),
+            self.cfg.clock.clone(),
+        )
+        .expect("batcher config validated by Engine::new")
     }
 
     /// Record per-request latency metrics for finished results.
@@ -291,9 +322,9 @@ impl Engine {
     /// continuous-vs-waves benchmark and as the token-identity oracle
     /// — per-request outputs are identical to [`Engine::run_queue`].
     pub fn run_queue_waves(&self, requests: Vec<Request>) -> Result<Vec<RequestResult>> {
-        let mut batcher = Batcher::new(self.cfg.batcher.clone());
+        let mut batcher = Batcher::new(self.cfg.batcher.clone()).context("wave batcher")?;
         for r in requests {
-            batcher.push(r);
+            let _ = batcher.push(r);
         }
         let mut results = Vec::new();
         let mut wave = Vec::new();
@@ -481,6 +512,7 @@ impl Engine {
                 latency,
                 queued: t_start.duration_since(enqueued),
                 queued_steps: 0,
+                priority: r.priority,
             });
         }
         Ok(results)
@@ -1035,6 +1067,20 @@ impl StepForward for EngineStepForward<'_> {
 
     fn release(&mut self, slot: usize) {
         self.kv.release(slot);
+    }
+
+    fn park(&mut self, slot: usize) -> Option<ParkedSlot> {
+        // the paged pool parks in place (host memory is the "parking
+        // buffer" — KV already lives host-side between steps)
+        Some(self.kv.park(slot))
+    }
+
+    fn unpark(&mut self, slot: usize, parked: ParkedSlot) {
+        self.kv.unpark(slot, parked);
+    }
+
+    fn drop_parked(&mut self, parked: ParkedSlot) {
+        self.kv.drop_parked(parked);
     }
 
     fn kv_capacity(&self) -> usize {

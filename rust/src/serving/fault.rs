@@ -1,0 +1,204 @@
+//! Fault injection for the serving stack: a [`StepForward`] decorator
+//! that fails calls on a seeded schedule, used to prove the engine's
+//! containment contract — any single forward failure degrades **one
+//! request at a time, never the process** (`tests/fault_injection.rs`).
+//!
+//! Faults are injected *before* delegating, so a failed call has no
+//! side effects on the inner backend — the same failure envelope as a
+//! device error surfacing from PJRT before kernel launch. The session
+//! reacts by isolating the batch (retrying each request alone) and
+//! retiring individually-failing requests with a typed
+//! [`crate::serving::RequestFailure`]; everything else keeps its exact
+//! token stream.
+//!
+//! Three knobs:
+//! * **seeded rates** (`p_map`, `p_prefill`, `p_decode`) — each call
+//!   rolls the decorator's own [`Rng`]; deterministic per seed, so a
+//!   failing trace replays exactly;
+//! * **one-shot counters** (`fail_next_prefill`, `fail_next_decode`)
+//!   — deterministic unit tests arm exactly one failure;
+//! * **poison token** — every prefill whose prompt contains the token
+//!   fails, which targets exactly one request end-to-end (its isolated
+//!   retry fails too, so precisely that request retires with an
+//!   error).
+
+use crate::runtime::ParkedSlot;
+use crate::serving::metrics::PageMetrics;
+use crate::serving::scheduler::{PrefillOutcome, StepForward};
+use crate::util::Rng;
+use anyhow::{bail, Result};
+
+/// A [`StepForward`] that injects failures in front of `inner`.
+pub struct FaultInjectingForward<F: StepForward> {
+    inner: F,
+    rng: Rng,
+    /// Probability each `map_prefix` call fails.
+    pub p_map: f32,
+    /// Probability each `prefill` call fails.
+    pub p_prefill: f32,
+    /// Probability each `decode` call fails.
+    pub p_decode: f32,
+    /// Fail prefills whose prompt contains this token (the isolated
+    /// retry included — targets exactly the poisoned request).
+    pub poison_token: Option<usize>,
+    /// Fail the next N prefill calls unconditionally.
+    pub fail_next_prefill: u32,
+    /// Fail the next N decode calls unconditionally.
+    pub fail_next_decode: u32,
+    /// Faults injected so far (tests assert the schedule actually
+    /// fired).
+    pub injected: u64,
+}
+
+impl<F: StepForward> FaultInjectingForward<F> {
+    /// Wrap `inner` with all fault knobs off; arm them via the public
+    /// fields or [`FaultInjectingForward::with_rates`].
+    pub fn new(inner: F, seed: u64) -> Self {
+        FaultInjectingForward {
+            inner,
+            rng: Rng::new(seed),
+            p_map: 0.0,
+            p_prefill: 0.0,
+            p_decode: 0.0,
+            poison_token: None,
+            fail_next_prefill: 0,
+            fail_next_decode: 0,
+            injected: 0,
+        }
+    }
+
+    /// Seeded random failure rates for the three forward entry points.
+    pub fn with_rates(mut self, p_map: f32, p_prefill: f32, p_decode: f32) -> Self {
+        self.p_map = p_map;
+        self.p_prefill = p_prefill;
+        self.p_decode = p_decode;
+        self
+    }
+
+    pub fn inner(&self) -> &F {
+        &self.inner
+    }
+
+    pub fn inner_mut(&mut self) -> &mut F {
+        &mut self.inner
+    }
+
+    fn roll(&mut self, p: f32) -> bool {
+        p > 0.0 && self.rng.f32() < p
+    }
+}
+
+impl<F: StepForward> StepForward for FaultInjectingForward<F> {
+    fn map_prefix(&mut self, slot: usize, prompt: &[usize]) -> Result<Option<usize>> {
+        if self.roll(self.p_map) {
+            self.injected += 1;
+            bail!("injected map_prefix fault (slot {slot})");
+        }
+        self.inner.map_prefix(slot, prompt)
+    }
+
+    fn prefill(
+        &mut self,
+        slots: &[usize],
+        prompts: &[&[usize]],
+        cached: &[usize],
+    ) -> Result<Vec<PrefillOutcome>> {
+        if self.fail_next_prefill > 0 {
+            self.fail_next_prefill -= 1;
+            self.injected += 1;
+            bail!("injected prefill fault ({} slots)", slots.len());
+        }
+        if let Some(tok) = self.poison_token {
+            if prompts.iter().any(|p| p.contains(&tok)) {
+                self.injected += 1;
+                bail!("injected prefill fault: poison token {tok} in prompt");
+            }
+        }
+        if self.roll(self.p_prefill) {
+            self.injected += 1;
+            bail!("injected prefill fault ({} slots)", slots.len());
+        }
+        self.inner.prefill(slots, prompts, cached)
+    }
+
+    fn decode(
+        &mut self,
+        slots: &[usize],
+        tokens: &[i32],
+        pos: &[usize],
+        bucket: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        if self.fail_next_decode > 0 {
+            self.fail_next_decode -= 1;
+            self.injected += 1;
+            bail!("injected decode fault ({} rows)", slots.len());
+        }
+        if self.roll(self.p_decode) {
+            self.injected += 1;
+            bail!("injected decode fault ({} rows)", slots.len());
+        }
+        self.inner.decode(slots, tokens, pos, bucket)
+    }
+
+    fn release(&mut self, slot: usize) {
+        self.inner.release(slot);
+    }
+
+    fn park(&mut self, slot: usize) -> Option<ParkedSlot> {
+        self.inner.park(slot)
+    }
+
+    fn unpark(&mut self, slot: usize, parked: ParkedSlot) {
+        self.inner.unpark(slot, parked);
+    }
+
+    fn drop_parked(&mut self, parked: ParkedSlot) {
+        self.inner.drop_parked(parked);
+    }
+
+    fn kv_capacity(&self) -> usize {
+        self.inner.kv_capacity()
+    }
+
+    fn page_metrics(&self) -> Option<PageMetrics> {
+        self.inner.page_metrics()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::scheduler::StubForward;
+
+    #[test]
+    fn armed_counter_fails_exactly_once_with_no_side_effects() {
+        let mut f = FaultInjectingForward::new(StubForward::new(1, 7, 16), 1);
+        f.fail_next_prefill = 1;
+        assert!(f.prefill(&[0], &[&[1, 2][..]], &[0]).is_err());
+        assert_eq!(f.injected, 1);
+        assert_eq!(f.inner().prefilled_tokens, 0, "fault fired before delegation");
+        // disarmed: the retry succeeds
+        assert!(f.prefill(&[0], &[&[1, 2][..]], &[0]).is_ok());
+        assert_eq!(f.inner().prefilled_tokens, 2);
+    }
+
+    #[test]
+    fn poison_token_targets_matching_prompts_only() {
+        let mut f = FaultInjectingForward::new(StubForward::new(2, 7, 16), 1);
+        f.poison_token = Some(99);
+        assert!(f.prefill(&[0], &[&[1, 99][..]], &[0]).is_err());
+        assert!(f.prefill(&[0], &[&[1, 2][..]], &[0]).is_ok());
+        assert_eq!(f.injected, 1);
+    }
+
+    #[test]
+    fn seeded_rates_replay_identically() {
+        let schedule = |seed: u64| -> Vec<bool> {
+            let mut f = FaultInjectingForward::new(StubForward::new(1, 7, 64), seed)
+                .with_rates(0.0, 0.0, 0.5);
+            (0..32).map(|_| f.decode(&[], &[], &[], 1).is_err()).collect()
+        };
+        assert_eq!(schedule(7), schedule(7));
+        assert_ne!(schedule(7), schedule(8), "different seeds, different schedules");
+    }
+}

@@ -50,6 +50,35 @@ pub struct SchedulerMetrics {
     pub prefill_tokens_saved: u64,
     /// Per-request enqueue→admission wait, milliseconds.
     pub queue_wait_ms: Vec<f32>,
+    /// Live requests preempted to make room for a deadline-urgent
+    /// higher class (park + drop paths combined).
+    pub preemptions: u64,
+    /// Preemptions that parked the victim's KV pages (refcounts held).
+    pub preempt_parked: u64,
+    /// Preemptions that dropped the victim's KV (recomputed on resume).
+    pub preempt_dropped: u64,
+    /// Preempted requests readmitted into a slot.
+    pub resumed: u64,
+    /// Context tokens re-prefilled when resuming dropped victims (the
+    /// recompute cost of `PreemptMode::Drop`; prefix-cache hits during
+    /// resume reduce it).
+    pub preempt_recompute_tokens: u64,
+    /// Requests shed by bounded admission (the backpressure signal —
+    /// nonzero means the queue bound was reached and load was refused
+    /// rather than buffered without bound).
+    pub shed_requests: u64,
+    /// Admissions accepted into the overflow margin at a degraded
+    /// effort tier (the step before shedding).
+    pub degraded_admissions: u64,
+    /// Admissions that happened after the request's step-denominated
+    /// deadline had already lapsed.
+    pub deadline_misses: u64,
+    /// Requests retired with a typed error (fault containment:
+    /// exactly these requests failed; the session kept serving).
+    pub failed: u64,
+    /// Backend/scheduler faults absorbed without losing a request
+    /// (batch isolation, prefix-map fallback, recovered invariants).
+    pub faults_contained: u64,
 }
 
 impl SchedulerMetrics {
@@ -102,6 +131,16 @@ impl SchedulerMetrics {
         self.prefill_tokens += o.prefill_tokens;
         self.prefill_tokens_saved += o.prefill_tokens_saved;
         self.queue_wait_ms.extend_from_slice(&o.queue_wait_ms);
+        self.preemptions += o.preemptions;
+        self.preempt_parked += o.preempt_parked;
+        self.preempt_dropped += o.preempt_dropped;
+        self.resumed += o.resumed;
+        self.preempt_recompute_tokens += o.preempt_recompute_tokens;
+        self.shed_requests += o.shed_requests;
+        self.degraded_admissions += o.degraded_admissions;
+        self.deadline_misses += o.deadline_misses;
+        self.failed += o.failed;
+        self.faults_contained += o.faults_contained;
     }
 }
 
@@ -309,6 +348,24 @@ impl EngineMetrics {
                 self.scheduler.prefill_tokens_saved,
             ));
         }
+        if self.scheduler.preemptions > 0 || self.scheduler.shed_requests > 0 {
+            s.push_str(&format!(
+                ", overload: {} preempted ({} parked/{} dropped, {} resumed), {} shed, {} degraded, {} deadline misses",
+                self.scheduler.preemptions,
+                self.scheduler.preempt_parked,
+                self.scheduler.preempt_dropped,
+                self.scheduler.resumed,
+                self.scheduler.shed_requests,
+                self.scheduler.degraded_admissions,
+                self.scheduler.deadline_misses,
+            ));
+        }
+        if self.scheduler.failed > 0 || self.scheduler.faults_contained > 0 {
+            s.push_str(&format!(
+                ", faults: {} contained, {} requests failed",
+                self.scheduler.faults_contained, self.scheduler.failed,
+            ));
+        }
         if self.pages.high_water_pages > 0 {
             s.push_str(&format!(
                 ", kv pages hw {} (cow {}, cached {}, evicted {})",
@@ -393,6 +450,47 @@ mod tests {
         assert!(!m.summary().contains("sched occupancy"));
         m.scheduler.merge(&s);
         assert!(m.summary().contains("sched occupancy 75%"));
+    }
+
+    #[test]
+    fn overload_gauges_merge_and_summarize() {
+        let s = SchedulerMetrics {
+            decode_steps: 1,
+            preemptions: 3,
+            preempt_parked: 2,
+            preempt_dropped: 1,
+            resumed: 3,
+            preempt_recompute_tokens: 12,
+            shed_requests: 4,
+            degraded_admissions: 2,
+            deadline_misses: 1,
+            failed: 1,
+            faults_contained: 5,
+            ..Default::default()
+        };
+        let mut t = SchedulerMetrics::default();
+        t.merge(&s);
+        t.merge(&s);
+        assert_eq!(t.preemptions, 6);
+        assert_eq!(t.preempt_parked, 4);
+        assert_eq!(t.resumed, 6);
+        assert_eq!(t.preempt_recompute_tokens, 24);
+        assert_eq!(t.shed_requests, 8);
+        assert_eq!(t.degraded_admissions, 4);
+        assert_eq!(t.deadline_misses, 2);
+        assert_eq!(t.failed, 2);
+        assert_eq!(t.faults_contained, 10);
+
+        // summary segments appear only when the machinery fired
+        let quiet = EngineMetrics::default();
+        assert!(!quiet.summary().contains("overload:"));
+        assert!(!quiet.summary().contains("faults:"));
+        let mut m = EngineMetrics::default();
+        m.scheduler.merge(&s);
+        let sum = m.summary();
+        assert!(sum.contains("overload: 3 preempted (2 parked/1 dropped, 3 resumed)"));
+        assert!(sum.contains("4 shed"));
+        assert!(sum.contains("faults: 5 contained, 1 requests failed"));
     }
 
     #[test]

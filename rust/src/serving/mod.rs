@@ -34,21 +34,27 @@
 
 mod request;
 mod batcher;
+mod clock;
 mod engine;
 pub mod dispatch;
+pub mod fault;
 mod metrics;
 pub mod prefix_cache;
 pub mod scheduler;
 mod server;
 
-pub use batcher::{covering_bucket, Batcher, BatcherConfig};
+pub use batcher::{
+    covering_bucket, Batcher, BatcherConfig, ConfigError, PreemptMode, ShedLoad, SubmitOutcome,
+};
+pub use clock::Clock;
 pub use dispatch::{per_token_reference, DispatchArena, ExpertDispatcher, GroupedDispatcher};
 pub use engine::{Engine, EngineConfig, EngineStepForward, ExecMode, ExpertExec, DEFAULT_PAGE_LEN};
+pub use fault::FaultInjectingForward;
 pub use metrics::{DispatchMetrics, EngineMetrics, PageMetrics, SchedulerMetrics, WaveMetrics};
 pub use prefix_cache::PrefixCache;
-pub use request::{GenParams, Request, RequestResult};
+pub use request::{EffortTier, GenParams, Priority, Request, RequestFailure, RequestResult};
 pub use scheduler::{
-    stub_logits, stub_reference, ContinuousSession, PrefillOutcome, Scheduler, SlotState,
-    StepForward, StubForward, STUB_PAGE_LEN,
+    stub_logits, stub_reference, ContinuousSession, PrefillOutcome, SchedError, Scheduler,
+    SlotState, StepForward, StubForward, STUB_PAGE_LEN,
 };
-pub use server::{EngineServer, Ticket};
+pub use server::{EngineServer, ServeError, Ticket};

@@ -19,17 +19,99 @@ impl Default for GenParams {
     }
 }
 
+/// Priority class for SLO-aware admission. Lower index = more
+/// important; admission and preemption compare classes, never raw
+/// deadlines across classes.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// Latency-sensitive (interactive) traffic.
+    High,
+    /// The default class; an all-[`Priority::Normal`] workload behaves
+    /// exactly like the pre-priority FIFO scheduler.
+    #[default]
+    Normal,
+    /// Throughput/batch traffic: first to be preempted, last admitted.
+    Low,
+}
+
+impl Priority {
+    /// Every class, most- to least-important. Queue layouts index by
+    /// [`Priority::index`] in this order.
+    pub const ALL: [Priority; 3] = [Priority::High, Priority::Normal, Priority::Low];
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+            Priority::Low => "low",
+        }
+    }
+}
+
+/// Serving effort tier — the seam for request-level activation-ratio
+/// degradation (ROADMAP item 4: per-request dynamic-k operating
+/// points). The scheduler sets [`EffortTier::Degraded`] on admissions
+/// accepted into a bounded queue's overflow margin; backends that
+/// support multiple activation ratios read it to pick the cheaper
+/// operating point. Backends without tiers ignore it — the tier is
+/// then purely an admission-pressure signal.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum EffortTier {
+    /// Full activation ratio (the converted model's native operating
+    /// point).
+    #[default]
+    Full,
+    /// Reduced activation ratio under overload (graceful degradation
+    /// before shed-load).
+    Degraded,
+}
+
 /// A generation request.
 #[derive(Clone, Debug)]
 pub struct Request {
     pub id: u64,
     pub prompt: Vec<usize>,
     pub params: GenParams,
+    /// Admission/preemption class (default [`Priority::Normal`]).
+    pub priority: Priority,
+    /// Admission deadline in scheduler steps after arrival: the
+    /// request should be holding a KV slot within this many steps or
+    /// it counts as an SLO miss (and, when preemption is enabled, may
+    /// preempt a lower class to make its target). Step-denominated so
+    /// deadline logic is deterministic under a manual [`Clock`].
+    /// `None` = best effort.
+    ///
+    /// [`Clock`]: crate::serving::Clock
+    pub deadline_steps: Option<u64>,
+    /// Effort tier (see [`EffortTier`]); set by bounded admission, not
+    /// by callers.
+    pub tier: EffortTier,
 }
 
 impl Request {
     pub fn new(id: u64, prompt: Vec<usize>, params: GenParams) -> Self {
-        Request { id, prompt, params }
+        Request {
+            id,
+            prompt,
+            params,
+            priority: Priority::Normal,
+            deadline_steps: None,
+            tier: EffortTier::Full,
+        }
+    }
+
+    pub fn with_priority(mut self, priority: Priority) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    pub fn with_deadline_steps(mut self, steps: u64) -> Self {
+        self.deadline_steps = Some(steps);
+        self
     }
 }
 
@@ -50,6 +132,25 @@ pub struct RequestResult {
     /// captured by `queued`). Deterministic, so simulation tests can
     /// assert starvation bounds on it.
     pub queued_steps: u64,
+    /// The request's priority class, echoed back so per-class SLO
+    /// accounting needs no side table.
+    pub priority: Priority,
+}
+
+/// A request retired without completing: the fault-containment
+/// outcome. The session keeps serving everything else; only this id
+/// is affected.
+#[derive(Clone, Debug)]
+pub struct RequestFailure {
+    pub id: u64,
+    /// What failed, with the backend error inline.
+    pub error: String,
+}
+
+impl std::fmt::Display for RequestFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "request {} failed: {}", self.id, self.error)
+    }
 }
 
 #[cfg(test)]
@@ -62,5 +163,26 @@ mod tests {
         assert_eq!(p.temperature, 0.0);
         let r = Request::new(1, vec![1, 2, 3], p);
         assert_eq!(r.prompt.len(), 3);
+        assert_eq!(r.priority, Priority::Normal);
+        assert_eq!(r.deadline_steps, None);
+        assert_eq!(r.tier, EffortTier::Full);
+    }
+
+    #[test]
+    fn priority_order_and_index() {
+        assert!(Priority::High < Priority::Normal);
+        assert!(Priority::Normal < Priority::Low);
+        for (i, p) in Priority::ALL.iter().enumerate() {
+            assert_eq!(p.index(), i);
+        }
+    }
+
+    #[test]
+    fn builders() {
+        let r = Request::new(7, vec![1], GenParams::default())
+            .with_priority(Priority::High)
+            .with_deadline_steps(4);
+        assert_eq!(r.priority, Priority::High);
+        assert_eq!(r.deadline_steps, Some(4));
     }
 }

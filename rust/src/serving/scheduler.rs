@@ -8,12 +8,15 @@
 //! wave boundary. This module inverts that control flow. A
 //! [`Scheduler`] owns `max(buckets)` KV slots; every step it
 //!
-//! 1. **admits** queued requests FIFO into free slots (recycling
-//!    retired slots before touching fresh ones),
-//! 2. **prefills** the admissions and samples their first token,
-//! 3. runs **one decode step** over the live slots at the smallest
+//! 1. **preempts** live low-priority slots when a deadline-urgent
+//!    higher class would otherwise wait ([`crate::serving::PreemptMode`]),
+//! 2. **admits** queued requests by priority class into free slots
+//!    (recycling retired slots before touching fresh ones), resuming
+//!    preempted victims ahead of equal-or-lower-class fresh work,
+//! 3. **prefills** the admissions and samples their first token,
+//! 4. runs **one decode step** over the live slots at the smallest
 //!    compiled batch bucket covering them, and
-//! 4. **retires** every request that hit its stop token,
+//! 5. **retires** every request that hit its stop token,
 //!    `max_new_tokens`, or the KV capacity — freeing the slot for the
 //!    next step's admission.
 //!
@@ -29,34 +32,76 @@
 //!
 //! Invariants (property-tested):
 //! * a slot is never double-assigned; `live + free == pool` always;
-//! * admission order is FIFO in enqueue order;
+//! * admission order is FIFO within a priority class; across classes
+//!   it is deadline urgency, then aging promotion, then class order
+//!   (all-default-priority workloads degenerate to exact global FIFO);
 //! * retired slots are reused before never-used slots;
 //! * the step bucket is the smallest configured bucket ≥ live count;
 //! * per-request output is token-identical to running that request
 //!   alone (batch rows are independent), hence identical to the
-//!   run-to-completion wave engine;
+//!   run-to-completion wave engine — **including across preemption**:
+//!   a victim resumed from parked KV or recomputed from its token
+//!   history emits the same stream as an unpreempted run
+//!   (`tests/preemption.rs`);
 //! * a request waits at most the pool-serialized work of the requests
-//!   ahead of it (no starvation; FIFO admission bounds queue wait);
+//!   ahead of it plus the aging threshold (aging bounds starvation
+//!   under persistent higher-class load);
 //! * prefix sharing is invisible in token space: admission may map a
 //!   prompt's cached prefix pages ([`StepForward::map_prefix`]) so
 //!   prefill only computes the suffix, but per-request output stays
 //!   bit-identical with the cache on or off (`tests/continuous_sim.rs`
 //!   pins it; the saving shows up only in the prefill-token and
 //!   page-occupancy gauges).
+//!
+//! **Fault containment** (`tests/fault_injection.rs`): a failing
+//! forward call never takes down the session. A failed batched prefill
+//! or decode is retried one request at a time from authoritative
+//! host-side token state; requests that fail in isolation are retired
+//! with a typed [`RequestFailure`] (drained via
+//! [`ContinuousSession::take_failures`]) and their slot and KV pages
+//! reclaimed, while every other request keeps its exact token stream.
+//! Scheduler bookkeeping violations surface as [`SchedError`] values,
+//! not panics.
 
-use crate::runtime::KvSlotPool;
-use crate::serving::batcher::{covering_bucket, Batcher, BatcherConfig};
+use crate::runtime::{KvSlotPool, ParkedSlot};
+use crate::serving::batcher::{
+    covering_bucket, Batcher, BatcherConfig, ConfigError, PreemptMode, SubmitOutcome,
+};
+use crate::serving::clock::Clock;
 use crate::serving::metrics::{PageMetrics, SchedulerMetrics, WaveMetrics};
 use crate::serving::prefix_cache::PrefixCache;
-use crate::serving::request::{Request, RequestResult};
+use crate::serving::request::{Priority, Request, RequestFailure, RequestResult};
 use crate::util::Rng;
 use anyhow::Result;
-use std::collections::HashMap;
+use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 // ---------------------------------------------------------------------------
 // Slot pool
 // ---------------------------------------------------------------------------
+
+/// A scheduler bookkeeping violation, surfaced as a recoverable value
+/// instead of a panic so one bad request cannot take down the serving
+/// process (the session retires the request with a typed
+/// [`RequestFailure`] and keeps stepping).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedError {
+    /// No free slot — callers must check [`Scheduler::free_count`].
+    PoolFull,
+    /// The slot holds no request (double retire / stale id).
+    EmptySlot(usize),
+}
+
+impl std::fmt::Display for SchedError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SchedError::PoolFull => write!(f, "scheduler pool has no free slot"),
+            SchedError::EmptySlot(sid) => write!(f, "scheduler slot {sid} is empty"),
+        }
+    }
+}
+
+impl std::error::Error for SchedError {}
 
 /// Per-slot generation state while a request is in flight.
 #[derive(Debug)]
@@ -68,6 +113,10 @@ pub struct SlotState {
     pub admitted_at: Instant,
     /// Scheduler steps spent waiting in the queue before admission.
     pub queued_steps: u64,
+    /// Monotone admission stamp (re-stamped on resume). Preemption
+    /// victimizes the *youngest* admission of the lowest class — the
+    /// request with the least sunk work.
+    pub admit_seq: u64,
     /// Sampling stream (seeded from the request, so the token stream
     /// is independent of batch composition).
     pub rng: Rng,
@@ -94,26 +143,29 @@ pub struct Scheduler {
     free: Vec<usize>,
     /// Slots that have ever held a request (feeds the reuse gauge).
     used: Vec<bool>,
+    /// Next [`SlotState::admit_seq`] stamp.
+    next_admit_seq: u64,
     pub metrics: SchedulerMetrics,
 }
 
 impl Scheduler {
     /// Pool size is the largest bucket: the engine can never run a
-    /// batch bigger than its largest compiled artifact.
-    pub fn new(buckets: &[usize]) -> Scheduler {
-        assert!(!buckets.is_empty(), "need at least one batch bucket");
-        let mut buckets = buckets.to_vec();
-        buckets.sort_unstable();
-        buckets.dedup();
-        assert!(buckets[0] >= 1, "bucket 0 is not a batch");
-        let pool = *buckets.last().unwrap();
-        Scheduler {
+    /// batch bigger than its largest compiled artifact. Bucket lists
+    /// are validated (non-empty, no zero bucket) and normalized
+    /// (sorted, deduplicated) — a bad config is a typed error, not a
+    /// panic.
+    pub fn new(buckets: &[usize]) -> Result<Scheduler, ConfigError> {
+        let buckets =
+            BatcherConfig { buckets: buckets.to_vec(), ..Default::default() }.normalized()?;
+        let pool = *buckets.last().expect("normalized buckets are non-empty");
+        Ok(Scheduler {
             buckets,
             slots: (0..pool).map(|_| None).collect(),
             free: (0..pool).rev().collect(),
             used: vec![false; pool],
+            next_admit_seq: 0,
             metrics: SchedulerMetrics::default(),
-        }
+        })
     }
 
     pub fn pool_size(&self) -> usize {
@@ -143,48 +195,95 @@ impl Scheduler {
         covering_bucket(&self.buckets, n)
     }
 
-    /// Assign a request to a free slot. Panics if the pool is full —
-    /// callers must check [`Scheduler::free_count`] first.
+    /// Remove a slot's state without retiring it (preemption / failure
+    /// paths — no `retired` metric). The slot returns to the free
+    /// stack. `None` if the slot was already empty.
+    pub fn detach(&mut self, sid: usize) -> Option<SlotState> {
+        let st = self.slots[sid].take()?;
+        self.free.push(sid);
+        Some(st)
+    }
+
+    /// Install an in-flight state into a free slot. On a full pool the
+    /// state is handed back untouched (the caller re-queues it).
+    pub fn install(&mut self, st: SlotState) -> Result<usize, SlotState> {
+        let Some(sid) = self.free.pop() else { return Err(st) };
+        debug_assert!(self.slots[sid].is_none(), "scheduler: slot {sid} double-assigned");
+        if self.used[sid] {
+            self.metrics.slot_reuses += 1;
+        }
+        self.used[sid] = true;
+        self.slots[sid] = Some(st);
+        self.metrics.peak_live = self.metrics.peak_live.max(self.live());
+        Ok(sid)
+    }
+
+    /// Assign a request to a free slot. [`SchedError::PoolFull`] when
+    /// there is none — callers check [`Scheduler::free_count`] first;
+    /// the error path exists so a bookkeeping bug degrades one request
+    /// instead of the process.
     pub fn assign(
         &mut self,
         request: Request,
         enqueued: Instant,
         queued_steps: u64,
         now: Instant,
-    ) -> usize {
-        let sid = self.free.pop().expect("scheduler: no free slot");
-        assert!(self.slots[sid].is_none(), "scheduler: slot {sid} double-assigned");
-        if self.used[sid] {
-            self.metrics.slot_reuses += 1;
-        }
-        self.used[sid] = true;
-        self.metrics.admitted += 1;
-        self.metrics
-            .queue_wait_ms
-            .push(now.saturating_duration_since(enqueued).as_secs_f32() * 1e3);
+    ) -> Result<usize, SchedError> {
         let rng = Rng::new(request.params.seed);
-        self.slots[sid] = Some(SlotState {
+        let wait_ms = now.saturating_duration_since(enqueued).as_secs_f32() * 1e3;
+        let st = SlotState {
             request,
             enqueued,
             admitted_at: now,
             queued_steps,
+            admit_seq: self.next_admit_seq,
             rng,
             generated: Vec::new(),
             cur: 0,
             pos: 0,
             ttft: None,
-        });
-        self.metrics.peak_live = self.metrics.peak_live.max(self.live());
-        sid
+        };
+        let sid = self.install(st).map_err(|_| SchedError::PoolFull)?;
+        self.next_admit_seq += 1;
+        self.metrics.admitted += 1;
+        self.metrics.queue_wait_ms.push(wait_ms);
+        Ok(sid)
+    }
+
+    /// Re-install a preempted request's state (token history, RNG
+    /// stream and timing survive preemption verbatim; only the
+    /// admission stamp is renewed). Counts toward `resumed`, not
+    /// `admitted`. On a full pool the state is handed back.
+    pub fn resume(&mut self, mut st: SlotState) -> Result<usize, SlotState> {
+        st.admit_seq = self.next_admit_seq;
+        let sid = self.install(st)?;
+        self.next_admit_seq += 1;
+        self.metrics.resumed += 1;
+        Ok(sid)
     }
 
     /// Retire a slot, returning its state and freeing the slot for the
     /// next admission (ahead of never-used slots).
-    pub fn retire(&mut self, sid: usize) -> SlotState {
-        let st = self.slots[sid].take().expect("scheduler: retiring an empty slot");
-        self.free.push(sid);
+    pub fn retire(&mut self, sid: usize) -> Result<SlotState, SchedError> {
+        let st = self.detach(sid).ok_or(SchedError::EmptySlot(sid))?;
         self.metrics.retired += 1;
-        st
+        Ok(st)
+    }
+
+    /// The slot to preempt so a deadline-urgent request of class
+    /// `above` can run: the live slot of the **largest** class index
+    /// strictly below `above` in priority (Low before Normal), and
+    /// within that class the **youngest** admission (least sunk work —
+    /// the vLLM recompute-the-newcomer discipline). `None` when no
+    /// live slot is strictly lower-class than `above`.
+    pub fn pick_victim(&self, above: Priority) -> Option<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|st| (i, st)))
+            .filter(|(_, st)| st.request.priority.index() > above.index())
+            .max_by_key(|&(_, st)| (st.request.priority.index(), st.admit_seq))
+            .map(|(i, _)| i)
     }
 
     pub fn slot(&self, sid: usize) -> &SlotState {
@@ -234,15 +333,17 @@ pub struct PrefillOutcome {
 pub trait StepForward {
     /// Map the longest cached prefix of `prompt` into `slot`'s KV
     /// ahead of prefill (prefix-cache backends — the session calls
-    /// this at admission). `None` means this backend consulted no
+    /// this at admission). `Ok(None)` means this backend consulted no
     /// cache (the session then skips hit-rate accounting, so a
     /// cache-less run never reports a meaningless 0% hit rate);
-    /// `Some(n)` maps `n` leading prompt tokens, always less than
+    /// `Ok(Some(n))` maps `n` leading prompt tokens, always less than
     /// `prompt.len()`, so prefill still computes the last prompt
-    /// position and produces the first token's logits. The default
-    /// never consults a cache.
-    fn map_prefix(&mut self, _slot: usize, _prompt: &[usize]) -> Option<usize> {
-        None
+    /// position and produces the first token's logits. An `Err` is
+    /// contained: the session releases the slot's (possibly partial)
+    /// mapping and prefills uncached. The default never consults a
+    /// cache.
+    fn map_prefix(&mut self, _slot: usize, _prompt: &[usize]) -> Result<Option<usize>> {
+        Ok(None)
     }
 
     /// Batched prefill of newly admitted requests; `prompts[i]` goes
@@ -251,7 +352,9 @@ pub trait StepForward {
     /// implementations prefill only the suffix `prompts[i][cached[i]..]`.
     /// Returns one outcome per slot, same order. Implementations must
     /// keep each row's result independent of the other rows (the
-    /// token-identity guarantee rests on it).
+    /// token-identity guarantee rests on it). An `Err` fails no one by
+    /// itself: the session releases the batch's slots and retries each
+    /// request in isolation, retiring only individually-failing ones.
     fn prefill(
         &mut self,
         slots: &[usize],
@@ -262,7 +365,9 @@ pub trait StepForward {
     /// One decode step: `slots` are the live rows (ascending),
     /// `tokens[i]`/`pos[i]` their input token and KV position, padded
     /// on device to `bucket` rows. Returns one logits row per live
-    /// slot, same order.
+    /// slot, same order. An `Err` is contained the same way as a
+    /// prefill failure: each row is rebuilt from host-side token state
+    /// and decoded alone.
     fn decode(
         &mut self,
         slots: &[usize],
@@ -273,6 +378,28 @@ pub trait StepForward {
 
     /// The slot retired — its KV may be recycled.
     fn release(&mut self, slot: usize);
+
+    /// Detach the slot's KV intact for a preempted request
+    /// ([`PreemptMode::Park`]): the returned [`ParkedSlot`] keeps its
+    /// page references, so the KV survives any interleaved work and
+    /// [`StepForward::unpark`] restores it bit-identically. `None`
+    /// means this backend cannot park (the session falls back to
+    /// drop + recompute). The default cannot park.
+    fn park(&mut self, _slot: usize) -> Option<ParkedSlot> {
+        None
+    }
+
+    /// Reattach KV parked by [`StepForward::park`] to a (new) slot.
+    /// Only ever called with this backend's own parked state; a
+    /// backend that never returns `Some` from `park` is never asked
+    /// to unpark.
+    fn unpark(&mut self, _slot: usize, _parked: ParkedSlot) {
+        unreachable!("unpark without a matching park — the session only resumes parked KV through the backend that parked it");
+    }
+
+    /// A parked request was aborted before resuming — drop its page
+    /// references. Backends that never park have nothing to do.
+    fn drop_parked(&mut self, _parked: ParkedSlot) {}
 
     /// Per-slot KV capacity; a request whose position reaches this is
     /// force-retired (same truncation rule as the wave engine's
@@ -287,8 +414,16 @@ pub trait StepForward {
 }
 
 // ---------------------------------------------------------------------------
-// The continuous session: admission → prefill → decode → retire
+// The continuous session: preempt → admit → prefill → decode → retire
 // ---------------------------------------------------------------------------
+
+/// A preempted request awaiting resume: its full host-side state plus
+/// (in [`PreemptMode::Park`]) its detached KV pages. In drop mode `kv`
+/// is `None` and resume recomputes the KV from `st`'s token history.
+struct Preempted {
+    st: SlotState,
+    kv: Option<ParkedSlot>,
+}
 
 /// One continuous-batching run: an admission queue ([`Batcher`]), the
 /// slot pool, and a [`StepForward`] backend. [`ContinuousSession::step`]
@@ -300,14 +435,18 @@ pub struct ContinuousSession<F: StepForward> {
     batcher: Batcher,
     sched: Scheduler,
     fwd: F,
+    /// Time source — [`Clock::manual`] in deterministic tests.
+    clock: Clock,
+    /// Copied from the config at construction.
+    preempt_mode: PreemptMode,
     /// Steps executed so far (admission bookkeeping is step-indexed so
     /// queue waits are measurable in deterministic simulation tests).
     step_idx: u64,
-    /// Request id → step index at enqueue.
-    arrivals: HashMap<u64, u64>,
+    /// Preempted requests awaiting a free slot, FIFO per arrival of
+    /// the preemption (resume prefers the front).
+    preempted: VecDeque<Preempted>,
     // reused step buffers — the steady-state scheduling loop performs
     // no per-step allocations outside the forward itself
-    admit_buf: Vec<(Request, Instant)>,
     slot_buf: Vec<usize>,
     cached_buf: Vec<usize>,
     rows_buf: Vec<usize>,
@@ -325,6 +464,10 @@ pub struct ContinuousSession<F: StepForward> {
     /// here — [`ContinuousSession::take_finished`] delivers them so an
     /// engine error never swallows a finished generation.
     finished_buf: Vec<RequestResult>,
+    /// Requests retired *with an error* (fault containment). Drained
+    /// via [`ContinuousSession::take_failures`]; the threaded server
+    /// turns each into a typed per-ticket error.
+    failed_buf: Vec<RequestFailure>,
     // run aggregates, flushed as one WaveMetrics per busy period
     prefill_time: Duration,
     decode_time: Duration,
@@ -334,15 +477,29 @@ pub struct ContinuousSession<F: StepForward> {
 }
 
 impl<F: StepForward> ContinuousSession<F> {
-    pub fn new(cfg: BatcherConfig, fwd: F) -> ContinuousSession<F> {
-        let sched = Scheduler::new(&cfg.buckets);
-        ContinuousSession {
-            batcher: Batcher::new(cfg),
+    pub fn new(cfg: BatcherConfig, fwd: F) -> Result<ContinuousSession<F>, ConfigError> {
+        ContinuousSession::with_clock(cfg, fwd, Clock::wall())
+    }
+
+    /// Session on an explicit time source — [`Clock::manual`] makes
+    /// hold-window, queue-wait and deadline behavior deterministic in
+    /// tests.
+    pub fn with_clock(
+        cfg: BatcherConfig,
+        fwd: F,
+        clock: Clock,
+    ) -> Result<ContinuousSession<F>, ConfigError> {
+        let sched = Scheduler::new(&cfg.buckets)?;
+        let preempt_mode = cfg.preempt;
+        let batcher = Batcher::with_clock(cfg, clock.clone())?;
+        Ok(ContinuousSession {
+            batcher,
             sched,
             fwd,
+            clock,
+            preempt_mode,
             step_idx: 0,
-            arrivals: HashMap::new(),
-            admit_buf: Vec::new(),
+            preempted: VecDeque::new(),
             slot_buf: Vec::new(),
             cached_buf: Vec::new(),
             rows_buf: Vec::new(),
@@ -350,31 +507,47 @@ impl<F: StepForward> ContinuousSession<F> {
             pos_buf: Vec::new(),
             pages_flushed: PageMetrics::default(),
             finished_buf: Vec::new(),
+            failed_buf: Vec::new(),
             prefill_time: Duration::ZERO,
             decode_time: Duration::ZERO,
             run_decode_steps: 0,
             run_prompt_tokens: 0,
             run_generated: 0,
+        })
+    }
+
+    /// Submit a request. Bounded admission: the outcome says whether
+    /// it was queued normally, queued at a degraded effort tier
+    /// (the queue is past `queue_cap` but within `degrade_margin`), or
+    /// shed ([`SubmitOutcome::Rejected`] — the request was **not**
+    /// queued and will produce no result).
+    pub fn enqueue(&mut self, r: Request) -> SubmitOutcome {
+        let out = self.batcher.push_at(r, self.clock.now(), self.step_idx);
+        match &out {
+            SubmitOutcome::Queued => {}
+            SubmitOutcome::QueuedDegraded => self.sched.metrics.degraded_admissions += 1,
+            SubmitOutcome::Rejected(_) => self.sched.metrics.shed_requests += 1,
         }
+        out
     }
 
-    pub fn enqueue(&mut self, r: Request) {
-        self.arrivals.insert(r.id, self.step_idx);
-        self.batcher.push(r);
-    }
-
-    /// Queue depth (not yet admitted).
+    /// Queue depth (not yet admitted), excluding preempted requests.
     pub fn pending(&self) -> usize {
         self.batcher.len()
+    }
+
+    /// Preempted requests awaiting resume.
+    pub fn preempted_pending(&self) -> usize {
+        self.preempted.len()
     }
 
     pub fn live(&self) -> usize {
         self.sched.live()
     }
 
-    /// No queued work and no live slots.
+    /// No queued work, no live slots, no preempted requests.
     pub fn is_idle(&self) -> bool {
-        self.batcher.is_empty() && self.sched.is_idle()
+        self.batcher.is_empty() && self.sched.is_idle() && self.preempted.is_empty()
     }
 
     pub fn step_index(&self) -> u64 {
@@ -447,9 +620,16 @@ impl<F: StepForward> ContinuousSession<F> {
         std::mem::take(&mut self.finished_buf)
     }
 
-    /// Abandon everything in flight and queued (engine error path).
-    /// Returns the affected request ids. Completed-but-undelivered
-    /// results are NOT aborted — drain them first via
+    /// Requests retired with a contained fault since the last call
+    /// (typed per-request errors — the rest of the session kept
+    /// serving). Callers deliver these alongside results.
+    pub fn take_failures(&mut self) -> Vec<RequestFailure> {
+        std::mem::take(&mut self.failed_buf)
+    }
+
+    /// Abandon everything in flight, preempted and queued (engine
+    /// error path). Returns the affected request ids. Completed-but-
+    /// undelivered results are NOT aborted — drain them first via
     /// [`ContinuousSession::take_finished`].
     pub fn abort_all(&mut self) -> Vec<u64> {
         let mut ids = Vec::new();
@@ -457,20 +637,28 @@ impl<F: StepForward> ContinuousSession<F> {
         self.sched.live_rows(&mut self.rows_buf);
         let rows = std::mem::take(&mut self.rows_buf);
         for sid in rows {
-            let st = self.sched.retire(sid);
-            self.fwd.release(sid);
-            ids.push(st.request.id);
+            if let Some(st) = self.sched.detach(sid) {
+                self.fwd.release(sid);
+                ids.push(st.request.id);
+            }
+        }
+        for p in self.preempted.drain(..) {
+            if let Some(kv) = p.kv {
+                self.fwd.drop_parked(kv);
+            }
+            ids.push(p.st.request.id);
         }
         while let Some((r, _)) = self.batcher.pop_front() {
             ids.push(r.id);
         }
-        self.arrivals.clear();
         ids
     }
 
     /// Run until idle (standalone-queue convenience; the threaded
     /// server calls [`ContinuousSession::step`] directly so it can
-    /// ingest arrivals between steps). Results are sorted by id.
+    /// ingest arrivals between steps). Results are sorted by id;
+    /// contained per-request faults stay in
+    /// [`ContinuousSession::take_failures`].
     pub fn drain(&mut self) -> Result<Vec<RequestResult>> {
         let mut out = Vec::new();
         while !self.is_idle() {
@@ -480,86 +668,161 @@ impl<F: StepForward> ContinuousSession<F> {
         Ok(out)
     }
 
-    /// One scheduler step: admit into free slots, prefill admissions
-    /// (their first token samples now — TTFT is enqueue→here), then
-    /// one decode step over all live slots at the minimal covering
-    /// bucket. Returns the requests retired during the step.
+    /// One scheduler step: preempt for deadline-urgent classes, admit
+    /// into free slots (resumes first among equals), prefill
+    /// admissions (their first token samples now — TTFT is
+    /// enqueue→here), then one decode step over all live slots at the
+    /// minimal covering bucket. Returns the requests retired during
+    /// the step; contained faults land in
+    /// [`ContinuousSession::take_failures`].
     pub fn step(&mut self) -> Result<Vec<RequestResult>> {
-        let now = Instant::now();
+        let now = self.clock.now();
         let entry_step = self.step_idx;
         self.step_idx += 1;
         let kv_cap = self.fwd.kv_capacity();
 
-        // --- admission: FIFO into free slots; the batcher's hold
-        // window applies only while the engine is idle (an idle engine
-        // may wait for a fuller first batch; a busy one admits
-        // immediately — free slots are pure upside) ---
-        let free = self.sched.free_count();
-        if free > 0 && !self.batcher.is_empty() {
-            self.batcher.admit_into(free, self.sched.is_idle(), &mut self.admit_buf);
-            if !self.admit_buf.is_empty() {
-                self.slot_buf.clear();
-                for (r, enq) in self.admit_buf.drain(..) {
-                    let arrival = self.arrivals.remove(&r.id).unwrap_or(entry_step);
-                    let waited = entry_step.saturating_sub(arrival);
-                    self.run_prompt_tokens += r.prompt.len();
-                    self.slot_buf.push(self.sched.assign(r, enq, waited, now));
-                }
-                // prefix-cache admission: ask the backend to map each
-                // prompt's longest cached prefix before prefill, and
-                // meter the prefill tokens it saves
-                self.cached_buf.clear();
-                for &sid in &self.slot_buf {
-                    let mapped = {
-                        let prompt = self.sched.slot(sid).request.prompt.as_slice();
-                        self.fwd.map_prefix(sid, prompt)
-                    };
-                    let plen = self.sched.slot(sid).request.prompt.len();
-                    let cached = mapped.unwrap_or(0);
-                    debug_assert!(cached < plen.max(1), "mapped prefix must leave a suffix");
-                    if mapped.is_some() {
-                        self.sched.metrics.prefix_lookups += 1;
-                        if cached > 0 {
-                            self.sched.metrics.prefix_hits += 1;
-                            self.sched.metrics.prefill_tokens_saved += cached as u64;
-                        }
+        // --- preemption: if deadline-urgent queued requests cannot all
+        // be admitted from free slots, evict strictly-lower-class live
+        // slots (youngest first). Each eviction's slot is earmarked for
+        // one urgent request, so the budget stays consumed. ---
+        if self.preempt_mode != PreemptMode::Off && !self.batcher.is_empty() {
+            let urgent = self.batcher.urgent_by_class(entry_step);
+            let mut budget = self.sched.free_count();
+            'classes: for (c, &n) in urgent.iter().enumerate() {
+                for _ in 0..n {
+                    if budget > 0 {
+                        budget -= 1;
+                        continue;
                     }
-                    self.sched.metrics.prefill_tokens += (plen - cached) as u64;
-                    self.cached_buf.push(cached);
-                }
-                let t0 = Instant::now();
-                let prompts: Vec<&[usize]> = self
-                    .slot_buf
-                    .iter()
-                    .map(|&sid| self.sched.slot(sid).request.prompt.as_slice())
-                    .collect();
-                let outcomes = self.fwd.prefill(&self.slot_buf, &prompts, &self.cached_buf)?;
-                drop(prompts);
-                self.prefill_time += t0.elapsed();
-                // stamp after the forward: TTFT includes prefill compute
-                let t_first = Instant::now();
-                assert_eq!(outcomes.len(), self.slot_buf.len(), "prefill outcome count");
-                for (i, out) in outcomes.into_iter().enumerate() {
-                    let sid = self.slot_buf[i];
-                    let done = {
-                        let st = self.sched.slot_mut(sid);
-                        st.pos = out.pos;
-                        let tok =
-                            st.rng.sample_logits(&out.logits, st.request.params.temperature);
-                        st.generated.push(tok);
-                        st.cur = tok as i32;
-                        st.ttft = Some(t_first.saturating_duration_since(st.enqueued));
-                        self.run_generated += 1;
-                        st.request.params.stop_token == Some(tok)
-                            || st.generated.len() >= st.request.params.max_new_tokens
-                            || st.pos >= kv_cap
+                    let Some(victim) = self.sched.pick_victim(Priority::ALL[c]) else {
+                        break 'classes;
                     };
-                    if done {
-                        let st = self.sched.retire(sid);
+                    self.preempt_slot(victim);
+                }
+            }
+        }
+
+        // --- admission: by class into free slots, resumes preferred
+        // among equal classes (they have sunk work). The batcher's hold
+        // window applies only while the engine is fully idle (an idle
+        // engine may wait for a fuller first batch; a busy one admits
+        // immediately — free slots are pure upside). ---
+        let idle = self.sched.is_idle() && self.preempted.is_empty();
+        let holding = self.batcher.holding(idle, now);
+        self.slot_buf.clear();
+        while self.sched.free_count() > 0 {
+            let p_class = self.preempted.front().map(|p| p.st.request.priority);
+            let b_class = if holding { None } else { self.batcher.peek_next(entry_step) };
+            let resume_now = match (p_class, b_class) {
+                (None, None) => break,
+                (Some(p), Some(b)) => p <= b,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+            };
+            if resume_now {
+                if !self.resume_one() {
+                    break;
+                }
+                continue;
+            }
+            let Some((r, enq, arrival)) = self.batcher.pop_next(entry_step) else { break };
+            let waited = entry_step.saturating_sub(arrival);
+            if let Some(d) = r.deadline_steps {
+                if waited > d {
+                    self.sched.metrics.deadline_misses += 1;
+                }
+            }
+            self.run_prompt_tokens += r.prompt.len();
+            let rid = r.id;
+            match self.sched.assign(r, enq, waited, now) {
+                Ok(sid) => self.slot_buf.push(sid),
+                Err(e) => {
+                    self.sched.metrics.failed += 1;
+                    self.failed_buf.push(RequestFailure { id: rid, error: e.to_string() });
+                }
+            }
+        }
+
+        // --- prefill the fresh admissions ---
+        if !self.slot_buf.is_empty() {
+            // prefix-cache admission: ask the backend to map each
+            // prompt's longest cached prefix before prefill, and meter
+            // the prefill tokens it saves
+            self.cached_buf.clear();
+            for i in 0..self.slot_buf.len() {
+                let sid = self.slot_buf[i];
+                let mapped = {
+                    let prompt = self.sched.slot(sid).request.prompt.as_slice();
+                    self.fwd.map_prefix(sid, prompt)
+                };
+                let mapped = match mapped {
+                    Ok(m) => m,
+                    Err(_) => {
+                        // contained: drop the (possibly partial)
+                        // mapping and prefill uncached
                         self.fwd.release(sid);
-                        let r = finish(st, t_first);
-                        self.finished_buf.push(r);
+                        self.sched.metrics.faults_contained += 1;
+                        None
                     }
+                };
+                let plen = self.sched.slot(sid).request.prompt.len();
+                let cached = mapped.unwrap_or(0);
+                debug_assert!(cached < plen.max(1), "mapped prefix must leave a suffix");
+                if mapped.is_some() {
+                    self.sched.metrics.prefix_lookups += 1;
+                    if cached > 0 {
+                        self.sched.metrics.prefix_hits += 1;
+                        self.sched.metrics.prefill_tokens_saved += cached as u64;
+                    }
+                }
+                self.sched.metrics.prefill_tokens += (plen - cached) as u64;
+                self.cached_buf.push(cached);
+            }
+            let t0 = self.clock.now();
+            let prompts: Vec<&[usize]> = self
+                .slot_buf
+                .iter()
+                .map(|&sid| self.sched.slot(sid).request.prompt.as_slice())
+                .collect();
+            let res = self.fwd.prefill(&self.slot_buf, &prompts, &self.cached_buf);
+            drop(prompts);
+            self.prefill_time += self.clock.now().saturating_duration_since(t0);
+            let outcomes: Vec<Option<PrefillOutcome>> = match res {
+                Ok(o) if o.len() == self.slot_buf.len() => o.into_iter().map(Some).collect(),
+                Ok(o) => {
+                    self.sched.metrics.faults_contained += 1;
+                    let msg = format!(
+                        "prefill returned {} outcomes for {} slots",
+                        o.len(),
+                        self.slot_buf.len()
+                    );
+                    self.recover_prefill(&msg)
+                }
+                Err(e) => {
+                    self.sched.metrics.faults_contained += 1;
+                    self.recover_prefill(&format!("{e:#}"))
+                }
+            };
+            // stamp after the forward: TTFT includes prefill compute
+            let t_first = self.clock.now();
+            for (i, out) in outcomes.into_iter().enumerate() {
+                let Some(out) = out else { continue };
+                let sid = self.slot_buf[i];
+                let done = {
+                    let st = self.sched.slot_mut(sid);
+                    st.pos = out.pos;
+                    let tok =
+                        st.rng.sample_logits(&out.logits, st.request.params.temperature);
+                    st.generated.push(tok);
+                    st.cur = tok as i32;
+                    st.ttft = Some(t_first.saturating_duration_since(st.enqueued));
+                    self.run_generated += 1;
+                    st.request.params.stop_token == Some(tok)
+                        || st.generated.len() >= st.request.params.max_new_tokens
+                        || st.pos >= kv_cap
+                };
+                if done {
+                    self.retire_finished(sid, t_first);
                 }
             }
         }
@@ -579,35 +842,260 @@ impl<F: StepForward> ContinuousSession<F> {
             self.toks_buf.push(st.cur);
             self.pos_buf.push(st.pos);
         }
-        let t0 = Instant::now();
-        let logits = self.fwd.decode(&self.rows_buf, &self.toks_buf, &self.pos_buf, bucket)?;
-        self.decode_time += t0.elapsed();
-        self.run_decode_steps += 1;
-        // stamp after the forward: latency includes the final decode
-        let t_done = Instant::now();
-        assert_eq!(logits.len(), live, "decode logits row count");
-        for (i, row) in logits.iter().enumerate() {
-            let sid = self.rows_buf[i];
-            let done = {
-                let st = self.sched.slot_mut(sid);
-                let tok = st.rng.sample_logits(row, st.request.params.temperature);
-                st.generated.push(tok);
-                st.cur = tok as i32;
-                st.pos += 1;
-                self.run_generated += 1;
-                st.request.params.stop_token == Some(tok)
-                    || st.generated.len() >= st.request.params.max_new_tokens
-                    || st.pos >= kv_cap
-            };
-            if done {
-                let st = self.sched.retire(sid);
-                self.fwd.release(sid);
-                let r = finish(st, t_done);
-                self.finished_buf.push(r);
+        let t0 = self.clock.now();
+        let res = self.fwd.decode(&self.rows_buf, &self.toks_buf, &self.pos_buf, bucket);
+        match res {
+            Ok(logits) if logits.len() == live => {
+                self.decode_time += self.clock.now().saturating_duration_since(t0);
+                self.run_decode_steps += 1;
+                // stamp after the forward: latency includes the final decode
+                let t_done = self.clock.now();
+                for (i, row) in logits.iter().enumerate() {
+                    let sid = self.rows_buf[i];
+                    let done = {
+                        let st = self.sched.slot_mut(sid);
+                        let tok = st.rng.sample_logits(row, st.request.params.temperature);
+                        st.generated.push(tok);
+                        st.cur = tok as i32;
+                        st.pos += 1;
+                        self.run_generated += 1;
+                        st.request.params.stop_token == Some(tok)
+                            || st.generated.len() >= st.request.params.max_new_tokens
+                            || st.pos >= kv_cap
+                    };
+                    if done {
+                        self.retire_finished(sid, t_done);
+                    }
+                }
+                self.sched.record_step(bucket, live);
+            }
+            Ok(logits) => {
+                self.sched.metrics.faults_contained += 1;
+                let msg = format!("decode returned {} rows for {live} live", logits.len());
+                self.recover_decode(kv_cap, &msg);
+            }
+            Err(e) => {
+                self.sched.metrics.faults_contained += 1;
+                self.recover_decode(kv_cap, &format!("{e:#}"));
             }
         }
-        self.sched.record_step(bucket, live);
         Ok(std::mem::take(&mut self.finished_buf))
+    }
+
+    /// Retire a done slot into `finished_buf`; a bookkeeping violation
+    /// is contained, not propagated.
+    fn retire_finished(&mut self, sid: usize, now: Instant) {
+        match self.sched.retire(sid) {
+            Ok(st) => {
+                self.fwd.release(sid);
+                self.finished_buf.push(finish(st, now));
+            }
+            Err(_) => self.sched.metrics.faults_contained += 1,
+        }
+    }
+
+    /// Evict a live slot for a deadline-urgent higher class. In park
+    /// mode the KV pages come along detached; otherwise (drop mode, or
+    /// a backend that cannot park) the KV is released and resume will
+    /// recompute it from the token history.
+    fn preempt_slot(&mut self, sid: usize) {
+        let Some(st) = self.sched.detach(sid) else {
+            self.sched.metrics.faults_contained += 1;
+            return;
+        };
+        self.sched.metrics.preemptions += 1;
+        let kv = if self.preempt_mode == PreemptMode::Park { self.fwd.park(sid) } else { None };
+        if kv.is_some() {
+            self.sched.metrics.preempt_parked += 1;
+        } else {
+            self.fwd.release(sid);
+            self.sched.metrics.preempt_dropped += 1;
+        }
+        self.preempted.push_back(Preempted { st, kv });
+    }
+
+    /// Resume the front preempted request into a free slot. `false`
+    /// when there is nothing to resume or no slot (state is pushed
+    /// back untouched). Parked KV reattaches; dropped KV is recomputed
+    /// through the prefix cache from the request's own token history —
+    /// either way the RNG stream and generated tokens continue exactly
+    /// where preemption cut them.
+    fn resume_one(&mut self) -> bool {
+        let Some(Preempted { st, kv }) = self.preempted.pop_front() else { return false };
+        let sid = match self.sched.resume(st) {
+            Ok(sid) => sid,
+            Err(st) => {
+                self.preempted.push_front(Preempted { st, kv });
+                return false;
+            }
+        };
+        match kv {
+            Some(parked) => self.fwd.unpark(sid, parked),
+            None => {
+                // authoritative context: prompt ++ all generated tokens
+                // except the last (which is `cur`, the next decode
+                // input — exactly the KV content at preemption)
+                let ctx = {
+                    let st = self.sched.slot(sid);
+                    let mut ctx = st.request.prompt.clone();
+                    ctx.extend_from_slice(&st.generated[..st.generated.len() - 1]);
+                    debug_assert_eq!(ctx.len(), st.pos, "resume context length");
+                    ctx
+                };
+                let cached = match self.fwd.map_prefix(sid, &ctx) {
+                    Ok(m) => m.unwrap_or(0),
+                    Err(_) => {
+                        self.fwd.release(sid);
+                        self.sched.metrics.faults_contained += 1;
+                        0
+                    }
+                };
+                self.sched.metrics.preempt_recompute_tokens += (ctx.len() - cached) as u64;
+                match self.fwd.prefill(&[sid], &[ctx.as_slice()], &[cached]) {
+                    Ok(o) if o.len() == 1 => {
+                        // logits discarded: this position's token was
+                        // already sampled before preemption
+                        debug_assert_eq!(o[0].pos, ctx.len(), "resume prefill extent");
+                    }
+                    Ok(o) => {
+                        let msg = format!("resume prefill returned {} outcomes", o.len());
+                        self.fail_slot(sid, msg);
+                    }
+                    Err(e) => self.fail_slot(sid, format!("resume prefill: {e:#}")),
+                }
+            }
+        }
+        true
+    }
+
+    /// Retire a live slot with a typed error (fault containment): the
+    /// slot and its KV are reclaimed, the request id and error go to
+    /// [`ContinuousSession::take_failures`], the session keeps
+    /// serving.
+    fn fail_slot(&mut self, sid: usize, error: String) {
+        let Some(st) = self.sched.detach(sid) else {
+            self.sched.metrics.faults_contained += 1;
+            return;
+        };
+        self.fwd.release(sid);
+        self.sched.metrics.failed += 1;
+        self.failed_buf.push(RequestFailure { id: st.request.id, error });
+    }
+
+    /// A batched prefill failed: retry each admission in isolation so
+    /// only individually-failing requests are lost. Slots are released
+    /// first (the batch attempt may have partially written KV) and
+    /// re-mapped through the prefix cache; prefix/hit gauges are not
+    /// re-metered (the admission already counted them).
+    fn recover_prefill(&mut self, batch_err: &str) -> Vec<Option<PrefillOutcome>> {
+        let slots = self.slot_buf.clone();
+        let mut out = Vec::with_capacity(slots.len());
+        for &sid in &slots {
+            self.fwd.release(sid);
+            let prompt = self.sched.slot(sid).request.prompt.clone();
+            let cached = match self.fwd.map_prefix(sid, &prompt) {
+                Ok(m) => m.unwrap_or(0),
+                Err(_) => {
+                    self.fwd.release(sid);
+                    self.sched.metrics.faults_contained += 1;
+                    0
+                }
+            };
+            match self.fwd.prefill(&[sid], &[prompt.as_slice()], &[cached]) {
+                Ok(mut o) if o.len() == 1 => out.push(Some(o.remove(0))),
+                Ok(o) => {
+                    let msg = format!(
+                        "prefill (isolated after batch failure '{batch_err}') returned {} outcomes",
+                        o.len()
+                    );
+                    self.fail_slot(sid, msg);
+                    out.push(None);
+                }
+                Err(e) => {
+                    self.fail_slot(sid, format!("prefill: {e:#} (batch failure: {batch_err})"));
+                    out.push(None);
+                }
+            }
+        }
+        out
+    }
+
+    /// A batched decode failed: rebuild each live row's KV from its
+    /// authoritative host-side token state (release → map_prefix →
+    /// prefill, logits discarded) and decode it alone. Rows that fail
+    /// in isolation retire with a typed error; the rest advance
+    /// exactly one token, same as the batched step would have.
+    fn recover_decode(&mut self, kv_cap: usize, batch_err: &str) {
+        let rows = self.rows_buf.clone();
+        for &sid in &rows {
+            let (ctx, cur, pos) = {
+                let st = self.sched.slot(sid);
+                let mut ctx = st.request.prompt.clone();
+                ctx.extend_from_slice(&st.generated[..st.generated.len() - 1]);
+                debug_assert_eq!(ctx.len(), st.pos, "recover context length");
+                (ctx, st.cur, st.pos)
+            };
+            self.fwd.release(sid);
+            let cached = match self.fwd.map_prefix(sid, &ctx) {
+                Ok(m) => m.unwrap_or(0),
+                Err(_) => {
+                    self.fwd.release(sid);
+                    self.sched.metrics.faults_contained += 1;
+                    0
+                }
+            };
+            match self.fwd.prefill(&[sid], &[ctx.as_slice()], &[cached]) {
+                Ok(o) if o.len() == 1 => {}
+                Ok(o) => {
+                    let msg = format!(
+                        "decode recovery prefill returned {} outcomes (batch failure: {batch_err})",
+                        o.len()
+                    );
+                    self.fail_slot(sid, msg);
+                    continue;
+                }
+                Err(e) => {
+                    self.fail_slot(
+                        sid,
+                        format!("decode recovery prefill: {e:#} (batch failure: {batch_err})"),
+                    );
+                    continue;
+                }
+            }
+            let bucket = self.sched.min_bucket(1);
+            match self.fwd.decode(&[sid], &[cur], &[pos], bucket) {
+                Ok(logits) if logits.len() == 1 => {
+                    self.run_decode_steps += 1;
+                    let t_done = self.clock.now();
+                    let done = {
+                        let st = self.sched.slot_mut(sid);
+                        let tok =
+                            st.rng.sample_logits(&logits[0], st.request.params.temperature);
+                        st.generated.push(tok);
+                        st.cur = tok as i32;
+                        st.pos += 1;
+                        self.run_generated += 1;
+                        st.request.params.stop_token == Some(tok)
+                            || st.generated.len() >= st.request.params.max_new_tokens
+                            || st.pos >= kv_cap
+                    };
+                    self.sched.record_step(bucket, 1);
+                    if done {
+                        self.retire_finished(sid, t_done);
+                    }
+                }
+                Ok(logits) => {
+                    let msg = format!(
+                        "isolated decode returned {} rows (batch failure: {batch_err})",
+                        logits.len()
+                    );
+                    self.fail_slot(sid, msg);
+                }
+                Err(e) => {
+                    self.fail_slot(sid, format!("decode: {e:#} (batch failure: {batch_err})"));
+                }
+            }
+        }
     }
 }
 
@@ -622,6 +1110,7 @@ fn finish(st: SlotState, now: Instant) -> RequestResult {
         latency: now.saturating_duration_since(st.enqueued),
         queued: st.admitted_at.saturating_duration_since(st.enqueued),
         queued_steps: st.queued_steps,
+        priority: st.request.priority,
     }
 }
 
@@ -649,10 +1138,11 @@ pub fn stub_logits(ctx: &[usize], vocab: usize) -> Vec<f32> {
 /// `[k, v]` pair and the k-plane value *is* the token id). Decode
 /// reconstructs the context **from the pages** before computing
 /// logits, so any page-table bug — aliasing, stale data after
-/// recycling, a broken copy-on-write — shows up as token divergence in
-/// the scheduler suites, not just as a bad gauge. Used by the
-/// scheduler/simulation tests and the artifact-free serving benches;
-/// also a template for plugging non-PJRT backends into the session.
+/// recycling, a broken copy-on-write, a parked table resumed onto the
+/// wrong slot — shows up as token divergence in the scheduler suites,
+/// not just as a bad gauge. Used by the scheduler/simulation tests and
+/// the artifact-free serving benches; also a template for plugging
+/// non-PJRT backends into the session.
 ///
 /// With [`StubForward::with_prefix_cache`] the stub additionally runs
 /// a [`PrefixCache`] in front of prefill: admission maps a prompt's
@@ -668,7 +1158,8 @@ pub struct StubForward {
     pub released: u64,
     /// Prompt tokens written by prefill (suffix only under prefix
     /// hits) — the stub's own compute meter, cross-checked against
-    /// `SchedulerMetrics::prefill_tokens`.
+    /// `SchedulerMetrics::prefill_tokens` (+
+    /// `preempt_recompute_tokens` when drop-mode preemption ran).
     pub prefilled_tokens: u64,
 }
 
@@ -733,18 +1224,18 @@ impl StubForward {
 }
 
 impl StepForward for StubForward {
-    fn map_prefix(&mut self, slot: usize, prompt: &[usize]) -> Option<usize> {
-        let cache = self.cache.as_mut()?;
+    fn map_prefix(&mut self, slot: usize, prompt: &[usize]) -> Result<Option<usize>> {
+        let Some(cache) = self.cache.as_mut() else { return Ok(None) };
         let (pages, tokens) = cache.lookup(prompt);
         // the last prompt position must still prefill (its logits seed
         // the first sample), so a fully-covered prompt maps everything
         // but re-runs one token — COW keeps the cached page intact
         let cached = tokens.min(prompt.len().saturating_sub(1));
         if pages.is_empty() || cached == 0 {
-            return Some(0);
+            return Ok(Some(0));
         }
         self.kv.map_shared(slot, &pages, tokens);
-        Some(cached)
+        Ok(Some(cached))
     }
 
     fn prefill(
@@ -802,6 +1293,18 @@ impl StepForward for StubForward {
         self.released += 1;
     }
 
+    fn park(&mut self, slot: usize) -> Option<ParkedSlot> {
+        Some(self.kv.park(slot))
+    }
+
+    fn unpark(&mut self, slot: usize, parked: ParkedSlot) {
+        self.kv.unpark(slot, parked);
+    }
+
+    fn drop_parked(&mut self, parked: ParkedSlot) {
+        self.kv.drop_parked(parked);
+    }
+
     fn kv_capacity(&self) -> usize {
         self.kv_cap
     }
@@ -822,7 +1325,8 @@ impl StepForward for StubForward {
 /// Run-to-completion reference for one request against the stub model:
 /// the same sampling rule as the engines, no scheduler involved. Since
 /// batch rows are independent, this is exactly what any correct
-/// scheduler must emit for the request.
+/// scheduler must emit for the request — batched or not, preempted or
+/// not.
 pub fn stub_reference(r: &Request, vocab: usize, kv_cap: usize) -> Vec<usize> {
     let mut rng = Rng::new(r.params.seed);
     let mut ctx = r.prompt.clone();
@@ -860,9 +1364,13 @@ mod tests {
         )
     }
 
+    fn cfg(buckets: Vec<usize>) -> BatcherConfig {
+        BatcherConfig { buckets, max_wait: Duration::ZERO, ..Default::default() }
+    }
+
     #[test]
     fn pool_and_bucket_shape() {
-        let s = Scheduler::new(&[8, 1, 32, 8]);
+        let s = Scheduler::new(&[8, 1, 32, 8]).unwrap();
         assert_eq!(s.pool_size(), 32);
         assert_eq!(s.buckets(), &[1, 8, 32]);
         assert_eq!(s.min_bucket(1), 1);
@@ -873,15 +1381,23 @@ mod tests {
     }
 
     #[test]
+    fn bad_bucket_configs_are_typed_errors_not_panics() {
+        assert_eq!(Scheduler::new(&[]).err(), Some(ConfigError::NoBuckets));
+        assert_eq!(Scheduler::new(&[4, 0]).err(), Some(ConfigError::ZeroBucket));
+        let sess_err = ContinuousSession::new(cfg(vec![]), StubForward::new(1, 7, 16)).err();
+        assert_eq!(sess_err, Some(ConfigError::NoBuckets));
+    }
+
+    #[test]
     fn retired_slots_recycle_first() {
-        let mut s = Scheduler::new(&[4]);
+        let mut s = Scheduler::new(&[4]).unwrap();
         let now = Instant::now();
-        let a = s.assign(req(0, 4), now, 0, now);
-        let b = s.assign(req(1, 4), now, 0, now);
+        let a = s.assign(req(0, 4), now, 0, now).unwrap();
+        let b = s.assign(req(1, 4), now, 0, now).unwrap();
         assert_eq!((a, b), (0, 1));
-        s.retire(a);
+        s.retire(a).unwrap();
         // the just-retired slot 0 is taken before fresh slot 2
-        let c = s.assign(req(2, 4), now, 0, now);
+        let c = s.assign(req(2, 4), now, 0, now).unwrap();
         assert_eq!(c, 0);
         assert_eq!(s.metrics.slot_reuses, 1);
         assert_eq!(s.live(), 2);
@@ -889,11 +1405,44 @@ mod tests {
     }
 
     #[test]
+    fn pool_full_and_double_retire_are_recoverable_errors() {
+        let mut s = Scheduler::new(&[1]).unwrap();
+        let now = Instant::now();
+        let a = s.assign(req(0, 4), now, 0, now).unwrap();
+        assert_eq!(s.assign(req(1, 4), now, 0, now).err(), Some(SchedError::PoolFull));
+        s.retire(a).unwrap();
+        assert_eq!(s.retire(a).err(), Some(SchedError::EmptySlot(a)));
+        // the pool is still usable after both error paths
+        assert!(s.assign(req(2, 4), now, 0, now).is_ok());
+    }
+
+    #[test]
+    fn victim_is_youngest_of_lowest_class() {
+        let mut s = Scheduler::new(&[4]).unwrap();
+        let now = Instant::now();
+        let high = s.assign(req(0, 4).with_priority(Priority::High), now, 0, now).unwrap();
+        let norm = s.assign(req(1, 4).with_priority(Priority::Normal), now, 0, now).unwrap();
+        let low_old = s.assign(req(2, 4).with_priority(Priority::Low), now, 0, now).unwrap();
+        let low_new = s.assign(req(3, 4).with_priority(Priority::Low), now, 0, now).unwrap();
+        // lowest class first, youngest admission within it
+        assert_eq!(s.pick_victim(Priority::High), Some(low_new));
+        s.retire(low_new).unwrap();
+        assert_eq!(s.pick_victim(Priority::High), Some(low_old));
+        s.retire(low_old).unwrap();
+        assert_eq!(s.pick_victim(Priority::High), Some(norm));
+        // nothing strictly below Low; High cannot victimize High
+        assert_eq!(s.pick_victim(Priority::Low), None);
+        s.retire(norm).unwrap();
+        assert_eq!(s.pick_victim(Priority::High), None);
+        let _ = high;
+    }
+
+    #[test]
     fn session_runs_queue_to_completion() {
-        let cfg = BatcherConfig { buckets: vec![1, 4], max_wait: Duration::ZERO };
-        let mut sess = ContinuousSession::new(cfg, StubForward::new(4, 11, usize::MAX));
+        let mut sess =
+            ContinuousSession::new(cfg(vec![1, 4]), StubForward::new(4, 11, usize::MAX)).unwrap();
         for i in 0..6 {
-            sess.enqueue(req(i, 3 + i as usize % 3));
+            assert!(sess.enqueue(req(i, 3 + i as usize % 3)).is_queued());
         }
         let results = sess.drain().unwrap();
         assert_eq!(results.len(), 6);
@@ -912,9 +1461,8 @@ mod tests {
 
     #[test]
     fn kv_capacity_truncates() {
-        let cfg = BatcherConfig { buckets: vec![1], max_wait: Duration::ZERO };
         // prompt len 3, cap 5 → prefill at pos 3, two decode steps
-        let mut sess = ContinuousSession::new(cfg, StubForward::new(1, 7, 5));
+        let mut sess = ContinuousSession::new(cfg(vec![1]), StubForward::new(1, 7, 5)).unwrap();
         sess.enqueue(req(0, 100));
         let results = sess.drain().unwrap();
         assert_eq!(results[0].tokens.len(), 3, "1 prefill + (cap-prompt) decode tokens");
@@ -923,8 +1471,8 @@ mod tests {
 
     #[test]
     fn abort_clears_everything() {
-        let cfg = BatcherConfig { buckets: vec![2], max_wait: Duration::ZERO };
-        let mut sess = ContinuousSession::new(cfg, StubForward::new(2, 7, usize::MAX));
+        let mut sess =
+            ContinuousSession::new(cfg(vec![2]), StubForward::new(2, 7, usize::MAX)).unwrap();
         for i in 0..5 {
             sess.enqueue(req(i, 50));
         }
@@ -938,13 +1486,112 @@ mod tests {
     }
 
     #[test]
+    fn abort_drops_parked_kv() {
+        let mut c = cfg(vec![2]);
+        c.preempt = PreemptMode::Park;
+        let mut sess = ContinuousSession::new(c, StubForward::new(2, 13, usize::MAX)).unwrap();
+        sess.enqueue(req(0, 40).with_priority(Priority::Low));
+        sess.enqueue(req(1, 40).with_priority(Priority::Low));
+        sess.step().unwrap();
+        sess.enqueue(req(2, 40).with_priority(Priority::High).with_deadline_steps(0));
+        sess.step().unwrap();
+        assert_eq!(sess.preempted_pending(), 1, "High's arrival must park a Low");
+        let mut ids = sess.abort_all();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2]);
+        assert!(sess.is_idle());
+        assert_eq!(sess.forward().live_contexts(), 0);
+        assert_eq!(sess.forward().kv().pages().pages_in_use(), 0, "parked pages reclaimed");
+    }
+
+    #[test]
+    fn park_preemption_is_token_invisible() {
+        let mut c = cfg(vec![2]);
+        c.preempt = PreemptMode::Park;
+        let mut sess = ContinuousSession::new(c, StubForward::new(2, 17, usize::MAX)).unwrap();
+        let low = |id: u64| req(id, 12).with_priority(Priority::Low);
+        let high = req(2, 4).with_priority(Priority::High).with_deadline_steps(0);
+        sess.enqueue(low(0));
+        sess.enqueue(low(1));
+        sess.step().unwrap();
+        sess.step().unwrap(); // both Lows mid-decode
+        sess.enqueue(high.clone());
+        let mut results = sess.step().unwrap(); // urgent High evicts the youngest Low
+        assert_eq!(sess.preempted_pending() + sess.live(), 3 - results.len());
+        results.extend(sess.drain().unwrap());
+        results.sort_by_key(|r| r.id);
+        assert_eq!(results.len(), 3);
+        assert_eq!(results[0].tokens, stub_reference(&low(0), 17, usize::MAX));
+        assert_eq!(results[1].tokens, stub_reference(&low(1), 17, usize::MAX));
+        assert_eq!(results[2].tokens, stub_reference(&high, 17, usize::MAX));
+        assert_eq!(results[2].priority, Priority::High);
+        let m = sess.take_metrics();
+        assert_eq!((m.preemptions, m.preempt_parked, m.preempt_dropped), (1, 1, 0));
+        assert_eq!(m.resumed, 1);
+        assert_eq!((m.failed, m.faults_contained), (0, 0));
+        assert_eq!(m.preempt_recompute_tokens, 0, "parked KV never recomputes");
+        assert_eq!(sess.forward().live_contexts(), 0);
+        assert_eq!(sess.forward().kv().pages().pages_in_use(), 0);
+    }
+
+    #[test]
+    fn drop_preemption_recomputes_and_matches() {
+        let mut c = cfg(vec![2]);
+        c.preempt = PreemptMode::Drop;
+        let mut sess = ContinuousSession::new(c, StubForward::new(2, 17, usize::MAX)).unwrap();
+        let low = |id: u64| req(id, 12).with_priority(Priority::Low);
+        let high = req(2, 4).with_priority(Priority::High).with_deadline_steps(0);
+        sess.enqueue(low(0));
+        sess.enqueue(low(1));
+        sess.step().unwrap();
+        sess.step().unwrap();
+        sess.enqueue(high.clone());
+        let mut results = sess.step().unwrap();
+        results.extend(sess.drain().unwrap());
+        results.sort_by_key(|r| r.id);
+        assert_eq!(results.len(), 3);
+        for r in &results {
+            let want = if r.id == 2 { high.clone() } else { low(r.id) };
+            assert_eq!(r.tokens, stub_reference(&want, 17, usize::MAX), "request {}", r.id);
+        }
+        let m = sess.take_metrics();
+        assert_eq!((m.preemptions, m.preempt_parked, m.preempt_dropped), (1, 0, 1));
+        assert_eq!(m.resumed, 1);
+        assert!(m.preempt_recompute_tokens > 0, "dropped KV must recompute");
+        // the stub's own write meter covers prefill + recompute exactly
+        assert_eq!(
+            sess.forward().prefilled_tokens,
+            m.prefill_tokens + m.preempt_recompute_tokens
+        );
+        assert_eq!(sess.forward().live_contexts(), 0);
+    }
+
+    #[test]
+    fn bounded_queue_degrades_then_sheds_through_the_session() {
+        let mut c = cfg(vec![1]);
+        c.queue_cap = Some(1);
+        c.degrade_margin = 1;
+        let mut sess = ContinuousSession::new(c, StubForward::new(1, 7, usize::MAX)).unwrap();
+        assert_eq!(sess.enqueue(req(0, 2)), SubmitOutcome::Queued);
+        assert_eq!(sess.enqueue(req(1, 2)), SubmitOutcome::QueuedDegraded);
+        let SubmitOutcome::Rejected(shed) = sess.enqueue(req(2, 2)) else {
+            panic!("third push must shed");
+        };
+        assert_eq!(shed.priority, Priority::Normal);
+        let results = sess.drain().unwrap();
+        assert_eq!(results.len(), 2, "the shed request produces no result");
+        let m = sess.take_metrics();
+        assert_eq!((m.degraded_admissions, m.shed_requests), (1, 1));
+    }
+
+    #[test]
     fn page_metric_flushes_are_deltas_not_lifetime_totals() {
         // the threaded server flushes one long-lived session at every
         // idle; event counters must arrive as deltas or the engine
         // gauges double-count
-        let cfg = BatcherConfig { buckets: vec![1, 2], max_wait: Duration::ZERO };
         let mut sess =
-            ContinuousSession::new(cfg, StubForward::with_prefix_cache(2, 11, 64, 4));
+            ContinuousSession::new(cfg(vec![1, 2]), StubForward::with_prefix_cache(2, 11, 64, 4))
+                .unwrap();
         let mk = |id: u64| {
             Request::new(
                 id,

@@ -10,22 +10,37 @@
 //! of waiting for the current batch to finish (the head-of-line
 //! pathology of the old wave loop).
 //!
+//! Overload and faults surface per ticket as typed [`ServeError`]s:
+//! a bounded-queue rejection fails the ticket immediately with
+//! [`ServeError::ShedLoad`] (the queue never grows without bound), a
+//! contained per-request fault fails only that ticket with
+//! [`ServeError::Request`], and only an unrecoverable engine error —
+//! which aborts everything in flight — reports
+//! [`ServeError::Engine`].
+//!
 //! The PJRT wrapper types are `Rc`-based (not `Send`), so the server
 //! thread owns the *entire* runtime: `start` takes the artifact
 //! directory and builds the `XlaRuntime` + `Engine` inside the thread.
 //!
 //! ```no_run
 //! # use cmoe::serving::*;
-//! # let model: cmoe::model::ModelWeights = unimplemented!();
+//! let cfg = cmoe::model::model_config("tiny").unwrap();
+//! let mut rng = cmoe::util::Rng::new(0);
+//! let model = cmoe::model::ModelWeights::random(&cfg, &mut rng);
 //! let server =
-//!     EngineServer::start("artifacts", model, EngineConfig::dense("small", 64)).unwrap();
+//!     EngineServer::start("artifacts", model, EngineConfig::dense("tiny", 64)).unwrap();
 //! let ticket = server.submit(Request::new(0, vec![1, 2, 3], GenParams::default()));
-//! let result = ticket.wait().unwrap();
+//! match ticket.wait_typed() {
+//!     Ok(result) => println!("{} tokens", result.tokens.len()),
+//!     Err(ServeError::ShedLoad(s)) => eprintln!("overloaded, retry later: {s}"),
+//!     Err(e) => eprintln!("request failed: {e}"),
+//! }
 //! server.shutdown();
 //! ```
 
 use crate::model::ModelWeights;
 use crate::runtime::XlaRuntime;
+use crate::serving::batcher::{ShedLoad, SubmitOutcome};
 use crate::serving::engine::{Engine, EngineConfig};
 use crate::serving::request::{Request, RequestResult};
 use anyhow::Result;
@@ -35,29 +50,65 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
+/// Why a submitted request produced no result — typed so callers can
+/// distinguish "back off and retry" from "this request is bad" from
+/// "the engine is down".
+#[derive(Clone, Debug)]
+pub enum ServeError {
+    /// Bounded admission shed the request before queueing it; the
+    /// payload says which class queue was full and how deep it was.
+    /// Retryable after backoff.
+    ShedLoad(ShedLoad),
+    /// This request alone failed (contained fault) — the engine kept
+    /// serving everything else.
+    Request(String),
+    /// The engine failed unrecoverably (or its thread is gone); all
+    /// in-flight requests were aborted.
+    Engine(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::ShedLoad(s) => write!(f, "shed: {s}"),
+            ServeError::Request(e) => write!(f, "request failed: {e}"),
+            ServeError::Engine(e) => write!(f, "engine failed: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
 enum Msg {
-    Submit(Request, Sender<Result<RequestResult, String>>),
+    Submit(Request, Sender<Result<RequestResult, ServeError>>),
     Shutdown,
 }
 
 /// A pending result handle.
 pub struct Ticket {
-    rx: Receiver<Result<RequestResult, String>>,
+    rx: Receiver<Result<RequestResult, ServeError>>,
 }
 
 impl Ticket {
-    /// Block until the request completes.
-    pub fn wait(self) -> Result<RequestResult> {
+    /// Block until the request completes, with the typed outcome.
+    pub fn wait_typed(self) -> Result<RequestResult, ServeError> {
         self.rx
             .recv()
-            .map_err(|_| anyhow::anyhow!("engine thread dropped the request"))?
-            .map_err(anyhow::Error::msg)
+            .unwrap_or_else(|_| {
+                Err(ServeError::Engine("engine thread dropped the request".into()))
+            })
+    }
+
+    /// Block until the request completes (anyhow convenience; the
+    /// typed outcome is [`Ticket::wait_typed`]).
+    pub fn wait(self) -> Result<RequestResult> {
+        self.wait_typed().map_err(anyhow::Error::new)
     }
 
     /// Non-blocking poll.
     pub fn try_wait(&self) -> Option<Result<RequestResult>> {
         match self.rx.try_recv() {
-            Ok(r) => Some(r.map_err(anyhow::Error::msg)),
+            Ok(r) => Some(r.map_err(anyhow::Error::new)),
             Err(_) => None,
         }
     }
@@ -108,7 +159,9 @@ impl EngineServer {
         Ok(EngineServer { tx: std::sync::Mutex::new(tx), handle: Some(handle) })
     }
 
-    /// Enqueue a request; returns a ticket to wait on.
+    /// Enqueue a request; returns a ticket to wait on. Under overload
+    /// the ticket fails fast with [`ServeError::ShedLoad`] instead of
+    /// queueing without bound.
     pub fn submit(&self, r: Request) -> Ticket {
         let (tx, rx) = channel();
         // if the engine is gone the ticket errors on wait()
@@ -136,8 +189,24 @@ impl Drop for EngineServer {
 
 fn serve_loop(engine: Engine, rx: Receiver<Msg>) {
     let mut session = engine.continuous_session();
-    let mut waiters: HashMap<u64, Sender<Result<RequestResult, String>>> = HashMap::new();
+    let mut waiters: HashMap<u64, Sender<Result<RequestResult, ServeError>>> = HashMap::new();
     let mut draining = false;
+    // submit one arrival: shed-load fails the ticket immediately so
+    // the queue stays bounded and the caller can back off
+    let mut admit = |session: &mut crate::serving::scheduler::ContinuousSession<_>,
+                     waiters: &mut HashMap<u64, Sender<Result<RequestResult, ServeError>>>,
+                     r: Request,
+                     tx: Sender<Result<RequestResult, ServeError>>| {
+        let id = r.id;
+        match session.enqueue(r) {
+            SubmitOutcome::Queued | SubmitOutcome::QueuedDegraded => {
+                waiters.insert(id, tx);
+            }
+            SubmitOutcome::Rejected(shed) => {
+                let _ = tx.send(Err(ServeError::ShedLoad(shed)));
+            }
+        }
+    };
     loop {
         // ingest — block briefly when idle, drain eagerly otherwise;
         // everything drained here is admitted at the next step
@@ -145,15 +214,11 @@ fn serve_loop(engine: Engine, rx: Receiver<Msg>) {
             if session.is_idle() && !draining { Duration::from_millis(50) } else { Duration::ZERO };
         match rx.recv_timeout(timeout) {
             Ok(Msg::Submit(r, tx)) => {
-                waiters.insert(r.id, tx);
-                session.enqueue(r);
+                admit(&mut session, &mut waiters, r, tx);
                 // keep ingesting whatever is immediately available
                 while let Ok(msg) = rx.try_recv() {
                     match msg {
-                        Msg::Submit(r, tx) => {
-                            waiters.insert(r.id, tx);
-                            session.enqueue(r);
-                        }
+                        Msg::Submit(r, tx) => admit(&mut session, &mut waiters, r, tx),
                         Msg::Shutdown => draining = true,
                     }
                 }
@@ -174,6 +239,13 @@ fn serve_loop(engine: Engine, rx: Receiver<Msg>) {
                             }
                         }
                     }
+                    // contained faults: fail exactly the affected
+                    // tickets; the session is still serving the rest
+                    for failure in session.take_failures() {
+                        if let Some(tx) = waiters.remove(&failure.id) {
+                            let _ = tx.send(Err(ServeError::Request(failure.error)));
+                        }
+                    }
                 }
                 Err(e) => {
                     // requests that completed earlier in the failed
@@ -188,12 +260,17 @@ fn serve_loop(engine: Engine, rx: Receiver<Msg>) {
                             }
                         }
                     }
-                    // a failed step poisons everything else in flight:
-                    // fail the affected waiters and reset the session
+                    for failure in session.take_failures() {
+                        if let Some(tx) = waiters.remove(&failure.id) {
+                            let _ = tx.send(Err(ServeError::Request(failure.error)));
+                        }
+                    }
+                    // an unrecoverable step poisons everything else in
+                    // flight: fail the affected waiters and reset
                     let msg = format!("{e:#}");
                     for id in session.abort_all() {
                         if let Some(tx) = waiters.remove(&id) {
-                            let _ = tx.send(Err(msg.clone()));
+                            let _ = tx.send(Err(ServeError::Engine(msg.clone())));
                         }
                     }
                 }
@@ -249,5 +326,16 @@ mod tests {
         let (_tx, rx) = channel();
         let t = Ticket { rx };
         assert!(t.try_wait().is_none());
+    }
+
+    #[test]
+    fn serve_error_display_is_typed() {
+        let shed = ServeError::ShedLoad(ShedLoad {
+            priority: crate::serving::Priority::Normal,
+            queue_len: 9,
+        });
+        assert!(shed.to_string().starts_with("shed: "));
+        assert!(ServeError::Request("boom".into()).to_string().contains("boom"));
+        assert!(ServeError::Engine("down".into()).to_string().contains("down"));
     }
 }

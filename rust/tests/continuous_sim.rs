@@ -31,9 +31,10 @@ struct Trace {
 fn run_trace(t: &Trace) -> Vec<RequestResult> {
     let pool = *t.buckets.iter().max().unwrap();
     let mut sess = ContinuousSession::new(
-        BatcherConfig { buckets: t.buckets.clone(), max_wait: Duration::ZERO },
+        BatcherConfig { buckets: t.buckets.clone(), max_wait: Duration::ZERO, ..Default::default() },
         StubForward::new(pool, VOCAB, t.kv_cap),
-    );
+    )
+    .unwrap();
     let mut next = 0;
     let mut out = Vec::new();
     while next < t.arrivals.len() || !sess.is_idle() {
@@ -242,9 +243,10 @@ fn run_shared_prefix(
         StubForward::new(pool, VOCAB, t.kv_cap)
     };
     let mut sess = ContinuousSession::new(
-        BatcherConfig { buckets: t.buckets.clone(), max_wait: Duration::ZERO },
+        BatcherConfig { buckets: t.buckets.clone(), max_wait: Duration::ZERO, ..Default::default() },
         fwd,
-    );
+    )
+    .unwrap();
     let mut next = 0;
     let mut tokens = vec![Vec::new(); t.arrivals.len()];
     while next < t.arrivals.len() || !sess.is_idle() {
@@ -318,9 +320,10 @@ fn queue_wait_metrics_match_trace_shape() {
     let t = mixed_trace();
     let pool = *t.buckets.iter().max().unwrap();
     let mut sess = ContinuousSession::new(
-        BatcherConfig { buckets: t.buckets.clone(), max_wait: Duration::ZERO },
+        BatcherConfig { buckets: t.buckets.clone(), max_wait: Duration::ZERO, ..Default::default() },
         StubForward::new(pool, VOCAB, t.kv_cap),
-    );
+    )
+    .unwrap();
     let mut next = 0;
     let mut results = Vec::new();
     while next < t.arrivals.len() || !sess.is_idle() {

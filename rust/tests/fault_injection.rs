@@ -1,0 +1,239 @@
+//! Fault-containment suite (host-only): drives [`ContinuousSession`]
+//! through a [`FaultInjectingForward`] and pins the ISSUE-6 contract —
+//! **any single injected forward failure degrades one request at a
+//! time, never the process**.
+//!
+//! * A transient batch-level fault (one failed prefill or decode call)
+//!   is invisible: the session isolates the batch, retries each
+//!   request alone, and every token stream still matches the
+//!   unfaulted reference.
+//! * A deterministic per-request fault (poison token) retires exactly
+//!   the poisoned request with a typed [`RequestFailure`]; everyone
+//!   else completes bit-exactly and the session keeps serving.
+//! * Under random seeded fault rates, completed + failed ids always
+//!   partition the submitted ids, completed streams are token-exact,
+//!   and no KV page or slot context outlives the trace.
+
+use cmoe::prop_assert;
+use cmoe::serving::{
+    stub_reference, BatcherConfig, Clock, ContinuousSession, FaultInjectingForward, GenParams,
+    Request, StubForward,
+};
+use cmoe::util::prop;
+use cmoe::util::Rng;
+use std::collections::VecDeque;
+use std::time::Duration;
+
+const VOCAB: usize = 17;
+const KV_CAP: usize = 48;
+
+fn req(id: u64, prompt_len: usize, max_new: usize) -> Request {
+    let prompt = (0..prompt_len.max(1)).map(|j| (id as usize * 31 + j * 7) % VOCAB).collect();
+    Request::new(
+        id,
+        prompt,
+        GenParams { max_new_tokens: max_new, temperature: 0.0, seed: id, stop_token: None },
+    )
+}
+
+fn session(
+    buckets: Vec<usize>,
+    seed: u64,
+) -> ContinuousSession<FaultInjectingForward<StubForward>> {
+    let pool = *buckets.iter().max().unwrap();
+    ContinuousSession::with_clock(
+        BatcherConfig { buckets, max_wait: Duration::ZERO, ..Default::default() },
+        FaultInjectingForward::new(StubForward::new(pool, VOCAB, KV_CAP), seed),
+        Clock::manual(),
+    )
+    .unwrap()
+}
+
+#[test]
+fn single_prefill_fault_is_invisible_after_isolation() {
+    let mut sess = session(vec![4], 1);
+    let reqs: Vec<Request> = (0..4).map(|i| req(i, 4, 5)).collect();
+    for r in &reqs {
+        sess.enqueue(r.clone());
+    }
+    sess.forward_mut().fail_next_prefill = 1; // the whole first batch fails once
+    let results = sess.drain().unwrap();
+    assert!(sess.take_failures().is_empty(), "isolated retries must succeed");
+    assert_eq!(results.len(), 4);
+    for r in &results {
+        let want = stub_reference(&reqs[r.id as usize], VOCAB, KV_CAP);
+        assert_eq!(r.tokens, want, "request {} diverged across fault recovery", r.id);
+    }
+    assert_eq!(sess.forward().injected, 1);
+    assert!(sess.metrics().faults_contained >= 1);
+    assert_eq!(sess.metrics().failed, 0);
+    assert_eq!(sess.forward().inner().live_contexts(), 0);
+}
+
+#[test]
+fn single_decode_fault_is_invisible_after_isolation() {
+    let mut sess = session(vec![4], 1);
+    let reqs: Vec<Request> = (0..4).map(|i| req(i, 3, 6)).collect();
+    for r in &reqs {
+        sess.enqueue(r.clone());
+    }
+    sess.forward_mut().fail_next_decode = 1; // the first batched decode step fails
+    let results = sess.drain().unwrap();
+    assert!(sess.take_failures().is_empty());
+    assert_eq!(results.len(), 4);
+    for r in &results {
+        let want = stub_reference(&reqs[r.id as usize], VOCAB, KV_CAP);
+        assert_eq!(r.tokens, want, "request {} diverged across decode recovery", r.id);
+    }
+    assert!(sess.metrics().faults_contained >= 1);
+    assert_eq!(sess.metrics().failed, 0);
+    assert_eq!(sess.forward().inner().kv().pages().pages_in_use(), 0);
+}
+
+#[test]
+fn poison_token_retires_exactly_one_request_with_typed_error() {
+    const POISON: usize = 999; // outside every generated prompt
+    let mut sess = session(vec![4], 1);
+    let mut reqs: Vec<Request> = (0..4).map(|i| req(i, 4, 5)).collect();
+    reqs[2].prompt[1] = POISON;
+    for r in &reqs {
+        sess.enqueue(r.clone());
+    }
+    sess.forward_mut().poison_token = Some(POISON);
+    let results = sess.drain().unwrap();
+    let failures = sess.take_failures();
+    assert_eq!(
+        failures.iter().map(|f| f.id).collect::<Vec<_>>(),
+        vec![2],
+        "exactly the poisoned request must fail"
+    );
+    assert!(
+        failures[0].error.contains("poison token"),
+        "failure must carry the typed cause, got: {}",
+        failures[0].error
+    );
+    let mut ok_ids: Vec<u64> = results.iter().map(|r| r.id).collect();
+    ok_ids.sort_unstable();
+    assert_eq!(ok_ids, vec![0, 1, 3], "everyone else keeps serving");
+    for r in &results {
+        let want = stub_reference(&reqs[r.id as usize], VOCAB, KV_CAP);
+        assert_eq!(r.tokens, want, "survivor {} diverged", r.id);
+    }
+    assert_eq!(sess.metrics().failed, 1);
+    assert_eq!(sess.forward().inner().live_contexts(), 0, "failed slot leaked its context");
+    assert_eq!(sess.forward().inner().kv().pages().pages_in_use(), 0, "failed slot leaked KV");
+}
+
+#[test]
+fn session_survives_a_fault_mid_stream_and_keeps_admitting() {
+    // fault fires while requests are in flight; later arrivals are
+    // admitted and served normally afterwards
+    let mut sess = session(vec![2], 1);
+    sess.enqueue(req(0, 3, 8));
+    sess.enqueue(req(1, 3, 8));
+    sess.step().unwrap();
+    sess.forward_mut().fail_next_decode = 1;
+    sess.step().unwrap(); // the contained fault
+    sess.enqueue(req(2, 3, 2)); // arrives after the fault
+    let results = sess.drain().unwrap();
+    assert!(sess.take_failures().is_empty());
+    let mut ids: Vec<u64> = results.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, vec![0, 1, 2]);
+    for r in &results {
+        let want = stub_reference(&req(r.id, 3, if r.id == 2 { 2 } else { 8 }), VOCAB, KV_CAP);
+        assert_eq!(r.tokens, want, "request {} diverged", r.id);
+    }
+    assert!(sess.metrics().faults_contained >= 1);
+}
+
+#[test]
+fn prop_random_faults_partition_requests_and_leak_nothing() {
+    let mut total_failed = 0u64;
+    let mut total_completed = 0u64;
+    let mut total_contained = 0u64;
+    prop::check(
+        "random fault schedules degrade per-request, never the process",
+        prop::Config { cases: 60, seed: 0xFA17, max_size: 18 },
+        |rng: &mut Rng, size| {
+            let buckets = vec![1 + rng.below(3)];
+            let n_req = 1 + rng.below(size.max(1));
+            let mut sess = session(buckets, rng.next_u64());
+            {
+                let f = sess.forward_mut();
+                f.p_map = if rng.f32() < 0.5 { 0.1 } else { 0.0 };
+                f.p_prefill = if rng.f32() < 0.5 { 0.15 } else { 0.0 };
+                f.p_decode = if rng.f32() < 0.5 { 0.05 } else { 0.0 };
+            }
+            let reqs: Vec<Request> = (0..n_req)
+                .map(|i| req(i as u64, 1 + rng.below(6), 1 + rng.below(8)))
+                .collect();
+            let mut pending: VecDeque<Request> = reqs.iter().cloned().collect();
+            let mut results = Vec::new();
+            let mut guard = 0;
+            while !(pending.is_empty() && sess.is_idle()) {
+                for _ in 0..rng.below(3) {
+                    if let Some(r) = pending.pop_front() {
+                        sess.enqueue(r);
+                    }
+                }
+                // the containment contract itself: step() never errors,
+                // whatever the injector does
+                results.extend(
+                    sess.step().map_err(|e| format!("fault escaped containment: {e:#}"))?,
+                );
+                guard += 1;
+                prop_assert!(guard < 100_000, "faulted trace failed to converge");
+            }
+            let failures = sess.take_failures();
+            let mut ids: Vec<u64> = results
+                .iter()
+                .map(|r| r.id)
+                .chain(failures.iter().map(|f| f.id))
+                .collect();
+            ids.sort_unstable();
+            let want_ids: Vec<u64> = (0..n_req as u64).collect();
+            prop_assert!(
+                ids == want_ids,
+                "completed+failed must partition submitted ids: {ids:?} != {want_ids:?}"
+            );
+            for r in &results {
+                let want = stub_reference(&reqs[r.id as usize], VOCAB, KV_CAP);
+                prop_assert!(
+                    r.tokens == want,
+                    "completed request {} diverged under faults: {:?} != {want:?}",
+                    r.id,
+                    r.tokens
+                );
+            }
+            for f in &failures {
+                prop_assert!(!f.error.is_empty(), "failure without a typed cause");
+            }
+            prop_assert!(
+                sess.forward().inner().live_contexts() == 0,
+                "leaked {} contexts",
+                sess.forward().inner().live_contexts()
+            );
+            prop_assert!(
+                sess.forward().inner().kv().pages().pages_in_use() == 0,
+                "leaked {} pages",
+                sess.forward().inner().kv().pages().pages_in_use()
+            );
+            let m = sess.metrics();
+            prop_assert!(
+                m.failed == failures.len() as u64,
+                "failed gauge {} != {} typed failures",
+                m.failed,
+                failures.len()
+            );
+            total_failed += m.failed;
+            total_completed += results.len() as u64;
+            total_contained += m.faults_contained;
+            Ok(())
+        },
+    );
+    // the property is only meaningful if all three regimes occurred
+    assert!(total_contained > 0, "no fault was ever injected — property is vacuous");
+    assert!(total_failed > 0, "no request ever failed — per-request path unexercised");
+    assert!(total_completed > 0, "nothing ever completed under faults");
+}

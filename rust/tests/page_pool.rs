@@ -16,10 +16,14 @@
 //!   page changes only the writer's view, every other holder keeps
 //!   the original bytes;
 //! * `gather_full` agrees with per-token reads and zero-fills beyond
-//!   each slot's extent.
+//!   each slot's extent;
+//! * park / unpark / drop (the preemption lifecycle, ISSUE-6): a
+//!   parked table keeps its page references and bytes verbatim,
+//!   unparking into any empty slot restores the identical page table,
+//!   and dropping a parked table releases exactly its references.
 
 use cmoe::prop_assert;
-use cmoe::runtime::KvSlotPool;
+use cmoe::runtime::{KvSlotPool, ParkedSlot};
 use cmoe::util::prop;
 use cmoe::util::Rng;
 use std::collections::{HashMap, HashSet};
@@ -42,6 +46,8 @@ struct Shadow {
     slots: Vec<Option<Vec<Col>>>,
     /// (held page ids, expected columns covering them fully).
     held: Vec<(Vec<usize>, Vec<Col>)>,
+    /// Parked tables: (handle, page-id snapshot, expected columns).
+    parked: Vec<(ParkedSlot, Vec<usize>, Vec<Col>)>,
 }
 
 fn write_shadow(cols: &mut Vec<Col>, pos: usize, col: Col) {
@@ -106,6 +112,23 @@ fn check(kv: &KvSlotPool, sh: &Shadow, hw_seen: &mut usize) -> Result<(), String
             *refs.entry(p).or_insert(0) += 1;
         }
     }
+    for (h, pages, cols) in &sh.parked {
+        prop_assert!(
+            h.page_count() == pages.len(),
+            "parked handle reports {} pages, snapshot has {}",
+            h.page_count(),
+            pages.len()
+        );
+        prop_assert!(
+            h.tokens() == cols.len(),
+            "parked handle reports {} tokens, shadow has {}",
+            h.tokens(),
+            cols.len()
+        );
+        for &p in pages {
+            *refs.entry(p).or_insert(0) += 1;
+        }
+    }
     for (&p, &n) in &refs {
         prop_assert!(
             kv.pages().refcount(p) == n,
@@ -162,7 +185,11 @@ fn prop_page_traces_never_leak_alias_or_stale() {
         prop::Config { cases: 220, seed: 0x9A6E5, max_size: 36 },
         |rng: &mut Rng, size| {
             let mut kv = KvSlotPool::new(POOL, LAYERS, HEADS, KV_LEN, HD, PAGE_LEN, None);
-            let mut sh = Shadow { slots: (0..POOL).map(|_| None).collect(), held: Vec::new() };
+            let mut sh = Shadow {
+                slots: (0..POOL).map(|_| None).collect(),
+                held: Vec::new(),
+                parked: Vec::new(),
+            };
             let mut hw_seen = 0usize;
             let mut stamp = 0f32;
             let fresh_col = |stamp: &mut f32| -> Col {
@@ -170,7 +197,7 @@ fn prop_page_traces_never_leak_alias_or_stale() {
                 [*stamp, -*stamp, *stamp + 1000.0, -*stamp - 1000.0]
             };
             for _ in 0..3 * size {
-                match rng.below(6) {
+                match rng.below(8) {
                     // admit: map an optional held prefix, then write a suffix
                     0 | 1 => {
                         let Some(slot) = (0..POOL).find(|&s| sh.slots[s].is_none()) else {
@@ -247,9 +274,42 @@ fn prop_page_traces_never_leak_alias_or_stale() {
                         }
                         sh.held.push((pages, cols[..k * PAGE_LEN].to_vec()));
                     }
-                    // release a slot or drop a hold
-                    _ => {
-                        if rng.f32() < 0.5 || sh.held.is_empty() {
+                    // park: detach a live slot's table — refcounts and
+                    // bytes must be untouched while it sits parked
+                    5 => {
+                        let live: Vec<usize> =
+                            (0..POOL).filter(|&s| sh.slots[s].is_some()).collect();
+                        if live.is_empty() {
+                            continue;
+                        }
+                        let slot = live[rng.below(live.len())];
+                        let pages = kv.slot_pages(slot).to_vec();
+                        let cols = sh.slots[slot].take().unwrap();
+                        let h = kv.park(slot);
+                        sh.parked.push((h, pages, cols));
+                    }
+                    // unpark into any empty slot: the identical page
+                    // table (and so the identical bytes) must come back
+                    6 => {
+                        if sh.parked.is_empty() {
+                            continue;
+                        }
+                        let Some(slot) = (0..POOL).find(|&s| sh.slots[s].is_none()) else {
+                            continue;
+                        };
+                        let (h, pages, cols) =
+                            sh.parked.swap_remove(rng.below(sh.parked.len()));
+                        kv.unpark(slot, h);
+                        prop_assert!(
+                            kv.slot_pages(slot) == &pages[..],
+                            "unpark changed the page table: {:?} != {pages:?}",
+                            kv.slot_pages(slot)
+                        );
+                        sh.slots[slot] = Some(cols);
+                    }
+                    // release a slot, drop a hold, or drop a parked table
+                    _ => match rng.below(3) {
+                        0 => {
                             let live: Vec<usize> =
                                 (0..POOL).filter(|&s| sh.slots[s].is_some()).collect();
                             if live.is_empty() {
@@ -258,13 +318,20 @@ fn prop_page_traces_never_leak_alias_or_stale() {
                             let slot = live[rng.below(live.len())];
                             kv.release(slot);
                             sh.slots[slot] = None;
-                        } else {
+                        }
+                        1 if !sh.held.is_empty() => {
                             let (pages, _) = sh.held.swap_remove(rng.below(sh.held.len()));
                             for &p in &pages {
                                 kv.pages_mut().release(p);
                             }
                         }
-                    }
+                        2 if !sh.parked.is_empty() => {
+                            let (h, _, _) =
+                                sh.parked.swap_remove(rng.below(sh.parked.len()));
+                            kv.drop_parked(h);
+                        }
+                        _ => continue,
+                    },
                 }
                 check(&kv, &sh, &mut hw_seen)?;
             }
@@ -279,6 +346,9 @@ fn prop_page_traces_never_leak_alias_or_stale() {
                 for p in pages {
                     kv.pages_mut().release(p);
                 }
+            }
+            for (h, _, _) in sh.parked.drain(..) {
+                kv.drop_parked(h);
             }
             prop_assert!(
                 kv.pages().pages_in_use() == 0,

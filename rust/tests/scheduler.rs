@@ -35,9 +35,10 @@ fn req(id: u64, prompt_len: usize, max_new: usize) -> Request {
 fn session(buckets: Vec<usize>, max_wait: Duration) -> ContinuousSession<StubForward> {
     let pool = *buckets.iter().max().unwrap();
     ContinuousSession::new(
-        BatcherConfig { buckets, max_wait },
+        BatcherConfig { buckets, max_wait, ..Default::default() },
         StubForward::new(pool, VOCAB, usize::MAX),
     )
+    .unwrap()
 }
 
 // ---------------------------------------------------------------------------
@@ -46,7 +47,7 @@ fn session(buckets: Vec<usize>, max_wait: Duration) -> ContinuousSession<StubFor
 
 #[test]
 fn bucket_selection_is_minimal_covering() {
-    let s = Scheduler::new(&[1, 8, 32]);
+    let s = Scheduler::new(&[1, 8, 32]).unwrap();
     assert_eq!(s.pool_size(), 32);
     for n in 1..=32 {
         let b = s.min_bucket(n);
@@ -83,11 +84,11 @@ fn admission_is_fifo() {
 
 #[test]
 fn slots_never_double_assigned_and_recycled_first() {
-    let mut s = Scheduler::new(&[1, 4]);
+    let mut s = Scheduler::new(&[1, 4]).unwrap();
     let now = Instant::now();
     let mut live = Vec::new();
     for i in 0..4 {
-        let sid = s.assign(req(i, 2, 4), now, 0, now);
+        let sid = s.assign(req(i, 2, 4), now, 0, now).unwrap();
         assert!(!live.contains(&sid), "slot {sid} double-assigned");
         live.push(sid);
     }
@@ -95,11 +96,11 @@ fn slots_never_double_assigned_and_recycled_first() {
     assert_eq!(s.live(), 4);
     // retire 2 and 1; LIFO reuse gives 1 back first, then 2 — both
     // before any hypothetical fresh slot (there are none left)
-    s.retire(2);
-    s.retire(1);
+    s.retire(2).unwrap();
+    s.retire(1).unwrap();
     assert_eq!(s.live() + s.free_count(), s.pool_size());
-    assert_eq!(s.assign(req(10, 2, 4), now, 0, now), 1);
-    assert_eq!(s.assign(req(11, 2, 4), now, 0, now), 2);
+    assert_eq!(s.assign(req(10, 2, 4), now, 0, now).unwrap(), 1);
+    assert_eq!(s.assign(req(11, 2, 4), now, 0, now).unwrap(), 2);
     assert_eq!(s.metrics.slot_reuses, 2);
 }
 
@@ -173,9 +174,10 @@ fn prop_random_traces_are_token_exact_and_balanced() {
             let n_req = 1 + rng.below(size.max(1));
             let pool = *buckets.iter().max().unwrap();
             let mut sess = ContinuousSession::new(
-                BatcherConfig { buckets: buckets.clone(), max_wait: Duration::ZERO },
+                BatcherConfig { buckets: buckets.clone(), max_wait: Duration::ZERO, ..Default::default() },
                 StubForward::new(pool, VOCAB, kv_cap),
-            );
+            )
+            .unwrap();
             let mut reqs = Vec::new();
             for i in 0..n_req {
                 let r = Request::new(
@@ -245,9 +247,10 @@ fn prop_bucket_is_minimal_every_step() {
         |rng: &mut Rng, size| {
             let buckets = vec![1, 3, 9];
             let mut sess = ContinuousSession::new(
-                BatcherConfig { buckets, max_wait: Duration::ZERO },
+                BatcherConfig { buckets, max_wait: Duration::ZERO, ..Default::default() },
                 StubForward::new(9, VOCAB, usize::MAX),
-            );
+            )
+            .unwrap();
             for i in 0..(1 + rng.below(size.max(1))) {
                 sess.enqueue(req(i as u64, 1 + rng.below(6), 1 + rng.below(9)));
             }

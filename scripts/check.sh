@@ -42,6 +42,13 @@ cargo test -q --release --test scheduler --test continuous_sim
 echo "==> paged KV pool + prefix cache property suites (release)"
 cargo test -q --release --test page_pool --test prefix_cache
 
+# Pin the overload-survival contract: preempt/resume token invisibility
+# (park and drop modes, random mixed-priority traces) and fault
+# containment (any injected forward failure degrades one request, never
+# the process). Host-only, release-pinned like the suites above.
+echo "==> preemption + fault-containment property suites (release)"
+cargo test -q --release --test preemption --test fault_injection
+
 echo "==> cargo doc --no-deps"
 RUSTDOCFLAGS="${RUSTDOCFLAGS:--D warnings}" cargo doc --no-deps
 
