@@ -1,0 +1,209 @@
+//! Dynamic-activation sweep (`cmoe bench --exp dynk`): serve-time
+//! operating points on one synthetic converted layer.
+//!
+//! ROADMAP item 4 makes the expert count per token a runtime quantity
+//! — per-token dynamic-k (router-entropy thresholds) and per-row
+//! effort-tier caps (activation ratios, the paper's 25%/75% points).
+//! This sweep measures what each operating point buys and costs, all
+//! artifact-free so it runs on a fresh clone:
+//!
+//! * **mean k/token** and the implied **activated fraction** of routed
+//!   experts (the FLOP driver — grouped dispatch gathers `Σ_t k_t`
+//!   rows instead of `q · N_k`);
+//! * a **logit-divergence proxy**: relative L2 distance of the dynamic
+//!   forward from the fixed-k forward on the same tokens (the fixed
+//!   row must read exactly 0 — the threshold-0 bit-identity that
+//!   `rust/tests/dynamic_k.rs` pins at the routing level);
+//! * **grouped decode tok/s** through the real [`GroupedDispatcher`]
+//!   hot path at that operating point, and its speedup over fixed-k.
+//!
+//! Exported to the repo-root `BENCH_dynk.json` (also refreshed by
+//! `cmoe bench --exp serving`) so successive PRs can diff the
+//! quality/compute frontier alongside the serving trajectory.
+
+use crate::bench_harness::common::Ctx;
+use crate::converter::{convert_ffn, ConvertOptions};
+use crate::model::{FfnWeights, MoeLayerWeights, MoeSpec};
+use crate::moe::{
+    k_for_ratio, moe_ffn_forward_dynamic, route_tokens_dynamic, DynamicK, GroupedRouting,
+};
+use crate::profiling::ActivationProfile;
+use crate::serving::{DispatchArena, GroupedDispatcher};
+use crate::tensor::{self, Tensor};
+use crate::util::table::{f, speedup, Table};
+use crate::util::timer::measure;
+use crate::util::Rng;
+use anyhow::{Context as _, Result};
+use std::time::Duration;
+
+/// Converted spec for the sweep: N_k = 4 of 8 routed experts, so the
+/// tier ratios 0.75/0.25 land on k = 3 and k = 1 — the paper's two
+/// serving operating points.
+const DYNK_SPEC: &str = "S2A4E8";
+/// Tokens per measured wave.
+const DYNK_BATCH: usize = 64;
+
+/// One serve-time activation operating point.
+struct OpPoint {
+    label: &'static str,
+    dk: DynamicK,
+    /// Uniform per-row k cap (effort tier), `None` = untiered.
+    ratio: Option<f32>,
+}
+
+fn operating_points() -> Vec<OpPoint> {
+    let fixed = DynamicK::fixed();
+    vec![
+        OpPoint { label: "fixed top-k", dk: fixed, ratio: None },
+        OpPoint { label: "dynk h=0.25", dk: DynamicK { threshold: 0.25, k_min: 1 }, ratio: None },
+        OpPoint { label: "dynk h=0.50", dk: DynamicK { threshold: 0.50, k_min: 1 }, ratio: None },
+        OpPoint { label: "dynk h=0.75", dk: DynamicK { threshold: 0.75, k_min: 1 }, ratio: None },
+        OpPoint { label: "tier 75%", dk: fixed, ratio: Some(0.75) },
+        OpPoint { label: "tier 25%", dk: fixed, ratio: Some(0.25) },
+    ]
+}
+
+/// The dynamic-activation sweep as a bench-harness experiment
+/// (`cmoe bench --exp dynk`). Artifact-free; exports the repo-root
+/// `BENCH_dynk.json` for the cross-PR quality/compute trajectory.
+pub fn dynk_sweep(ctx: &mut Ctx) -> Result<Table> {
+    let t = export_dynk_json(ctx)?;
+    ctx.save("dynk", std::slice::from_ref(&t))?;
+    Ok(t)
+}
+
+/// Table + repo-root JSON export, shared with `--exp serving` (which
+/// refreshes every serving-trajectory artifact in one run).
+pub(super) fn export_dynk_json(ctx: &Ctx) -> Result<Table> {
+    let t = dynk_sweep_table(ctx.seed, 3, Duration::from_millis(40))?;
+    let root = crate::util::repo_root().unwrap_or_else(|| ctx.out_dir.clone());
+    let path = root.join("BENCH_dynk.json");
+    std::fs::write(&path, t.to_json().pretty())
+        .with_context(|| format!("write {}", path.display()))?;
+    eprintln!("dynk sweep exported to {}", path.display());
+    Ok(t)
+}
+
+/// Synthetic converted layer for the sweep (same recipe as the
+/// dispatch sweep, smaller so the whole table stays sub-second).
+fn dynk_layer(rng: &mut Rng) -> Result<(MoeLayerWeights, MoeSpec)> {
+    let d = 64usize;
+    let d_ff = 512usize;
+    let ffn = FfnWeights {
+        w_gate: Tensor::randn(rng, &[d, d_ff], 0.4),
+        w_up: Tensor::randn(rng, &[d, d_ff], 0.4),
+        w_down: Tensor::randn(rng, &[d_ff, d], 0.4),
+    };
+    let xc = Tensor::randn(rng, &[256, d], 1.0);
+    let h = tensor::swiglu_hidden(&xc, &ffn.w_gate, &ffn.w_up);
+    let prof = ActivationProfile::from_hidden(&h, 10);
+    let spec: MoeSpec = DYNK_SPEC.parse()?;
+    let mut moe = convert_ffn(&ffn, &prof, &spec, &ConvertOptions::default())?;
+    moe.compensation = None;
+    Ok((moe, spec))
+}
+
+/// Ctx-free sweep core (deterministic routing/divergence columns; the
+/// tok/s columns are wall-time through the grouped dispatcher).
+pub fn dynk_sweep_table(seed: u64, min_iters: usize, min_time: Duration) -> Result<Table> {
+    let mut rng = Rng::new(seed ^ 0xD1CE);
+    let (moe, spec) = dynk_layer(&mut rng)?;
+    let d = 64usize;
+    let n_k = spec.active;
+    let n_r = spec.routed();
+    let xn = Tensor::randn(&mut rng, &[DYNK_BATCH, d], 1.0);
+
+    // fixed-k oracle for the divergence column
+    let (y_fixed, _) = moe_ffn_forward_dynamic(&moe, &xn, DynamicK::fixed(), None);
+    let norm_fixed = y_fixed.norm().max(1e-12);
+
+    let m = moe.experts[0].hidden_dim();
+    let disp = GroupedDispatcher::new(d, m);
+    let mut arena = DispatchArena::new();
+    let mut routing = GroupedRouting::new(n_r);
+
+    let mut t = Table::new(
+        "Dynamic activation sweep — per-token dynamic-k and effort-tier \
+         operating points vs the fixed-k oracle (synthetic S2A4E8 layer)",
+        &[
+            "Point",
+            "mean k/tok",
+            "act frac",
+            "routed rows",
+            "rel L2 vs fixed",
+            "grouped tok/s",
+            "vs fixed",
+        ],
+    );
+
+    let mut fixed_tps = 0.0f64;
+    for p in operating_points() {
+        let caps: Option<Vec<usize>> =
+            p.ratio.map(|r| vec![k_for_ratio(r, n_k); DYNK_BATCH]);
+        let decisions = route_tokens_dynamic(&moe, &xn, p.dk, caps.as_deref());
+        let rows: usize = decisions.iter().map(|dec| dec.experts.len()).sum();
+        let mean_k = rows as f64 / DYNK_BATCH as f64;
+
+        let (y, _) = moe_ffn_forward_dynamic(&moe, &xn, p.dk, caps.as_deref());
+        let mut diff = y_fixed.clone();
+        for (a, b) in diff.data.iter_mut().zip(&y.data) {
+            *a -= b;
+        }
+        let rel = diff.norm() as f64 / norm_fixed as f64;
+        if p.label == "fixed top-k" {
+            anyhow::ensure!(rel == 0.0, "fixed operating point diverged from itself: {rel}");
+        }
+
+        // grouped-dispatch hot path at this operating point: warm the
+        // arena, then measure the steady state (rebuild + forward)
+        let mut out = Tensor::zeros(&[DYNK_BATCH, d]);
+        routing.rebuild(n_r, &decisions);
+        disp.forward(&xn, &routing, &moe.experts, &mut arena, &mut out);
+        let samples = measure(
+            || {
+                routing.rebuild(n_r, &decisions);
+                out.data.fill(0.0);
+                disp.forward(&xn, &routing, &moe.experts, &mut arena, &mut out);
+                std::hint::black_box(&out);
+            },
+            min_iters,
+            min_time,
+        );
+        let ns: Vec<f32> = samples.iter().map(|s| s.as_secs_f32() * 1e9).collect();
+        let mean_ns = crate::util::stats::mean(&ns) as f64;
+        let tps = if mean_ns <= 0.0 { 0.0 } else { DYNK_BATCH as f64 / (mean_ns / 1e9) };
+        if p.label == "fixed top-k" {
+            fixed_tps = tps;
+        }
+
+        t.row(vec![
+            p.label.into(),
+            f(mean_k, 2),
+            format!("{:.0}%", mean_k / n_k as f64 * 100.0),
+            rows.to_string(),
+            f(rel, 4),
+            f(tps, 0),
+            speedup(if fixed_tps <= 0.0 { 1.0 } else { tps / fixed_tps }),
+        ]);
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dynk_table_has_all_operating_points_and_fixed_is_exact() {
+        let t = dynk_sweep_table(0xC0DE, 1, Duration::from_millis(1)).unwrap();
+        let j = t.to_json().pretty();
+        for p in operating_points() {
+            assert!(j.contains(p.label), "missing operating point {}", p.label);
+        }
+        // the fixed row's divergence column is exactly zero and the
+        // tier caps land on the paper's k = 3 / k = 1 points
+        let spec: MoeSpec = DYNK_SPEC.parse().unwrap();
+        assert_eq!(k_for_ratio(0.75, spec.active), 3);
+        assert_eq!(k_for_ratio(0.25, spec.active), 1);
+    }
+}

@@ -374,6 +374,9 @@ pub fn serving_sweep(ctx: &mut Ctx) -> Result<Table> {
         .with_context(|| format!("write {}", path.display()))?;
     eprintln!("serving sweep exported to {}", path.display());
     export_prefix_json(ctx)?;
+    // the dynamic-activation operating points ride along so one
+    // `--exp serving` run refreshes the whole serving trajectory
+    super::exp_dynk::export_dynk_json(ctx)?;
     Ok(t)
 }
 

@@ -55,6 +55,7 @@ fn slo_cfg() -> BatcherConfig {
         degrade_margin: 8,
         age_promote_steps: 48,
         preempt: PreemptMode::Park,
+        ..Default::default()
     }
 }
 

@@ -9,6 +9,7 @@
 //! cmoe serve    --model <cmw> --mode dense|moe|orchestrated [--spec S3A3E8] --requests 32
 //!               [--sched continuous|waves] [--buckets 1,8,32]
 //!               [--page-len 16] [--prefix-cache]
+//!               [--dynamic-k 0.5] [--k-min 1] [--tier-ratios 1.0,0.25]
 //! cmoe bench    --exp table1|fig2|serving|all [--out results/]
 //! cmoe info     # artifact + zoo inventory
 //! ```
@@ -115,6 +116,11 @@ fn cmd_methods(_args: &Args) -> Result<()> {
         registry::CMOE_ROUTER_SUFFIX
     );
     println!("stages resume from --save-stages artifacts: profile.json, partition.json, router.cmw");
+    println!(
+        "serve-time dynamic activation: `cmoe serve --dynamic-k <h>` floats per-token expert \
+         counts on router entropy; `--tier-ratios full,degraded` maps effort tiers to \
+         activation ratios (paper's 25%/75% operating points) applied per slot-row"
+    );
     Ok(())
 }
 
@@ -221,6 +227,31 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // the artifact path — see serving::engine)
     cfg.page_len = args.get_usize("page-len", cmoe::serving::DEFAULT_PAGE_LEN).max(1);
     cfg.prefix_cache = args.has("prefix-cache");
+    // dynamic activation (ROADMAP item 4, orchestrated mode):
+    // --dynamic-k <h> floats per-token expert counts on router entropy
+    // (0 = fixed top-k, the default); --tier-ratios full,degraded sets
+    // the effort-tier activation operating points applied per slot-row
+    let dk_threshold = args.get_f64("dynamic-k", 0.0) as f32;
+    if !(0.0..=1.0).contains(&dk_threshold) {
+        bail!("--dynamic-k must be a normalized-entropy threshold in [0, 1]");
+    }
+    cfg.dynamic_k = cmoe::moe::DynamicK {
+        threshold: dk_threshold,
+        k_min: args.get_usize("k-min", 1).max(1),
+    };
+    if let Some(s) = args.get("tier-ratios") {
+        let parts: Vec<f32> = s
+            .split(',')
+            .map(|r| r.trim().parse::<f32>().context("bad --tier-ratios"))
+            .collect::<Result<Vec<_>>>()?;
+        let [full, degraded] = parts[..] else {
+            bail!("--tier-ratios takes exactly two values: full,degraded (e.g. 1.0,0.25)");
+        };
+        if !(0.0..=1.0).contains(&degraded) || !(0.0..=1.0).contains(&full) {
+            bail!("--tier-ratios values must be activation ratios in [0, 1]");
+        }
+        cfg.batcher.tier_ratios = cmoe::serving::TierRatios { full, degraded };
+    }
     let sched = args.get_or("sched", "continuous").to_string();
     let engine = Engine::new(rt, model, cfg)?;
 

@@ -4,6 +4,15 @@
 //! module is the bit-exact rust-side reference used by evaluation, the
 //! fine-tuner, and tests. Routing logic (scores → bias → top-N_k →
 //! gates) is shared by both paths via [`route_tokens`].
+//!
+//! Since ROADMAP item 4 the expert count per token is a *runtime*
+//! quantity: [`DynamicK`] floats k between `k_min` and the layer's
+//! configured N_k on router entropy (confident tokens route to fewer
+//! experts), and a per-row cap lets effort tiers shrink k_max for
+//! whole requests ([`k_for_ratio`]). The fixed-k path is the
+//! `threshold == 0`, no-cap special case and stays bit-identical by
+//! construction: [`route_from_scores`] delegates to
+//! [`route_from_scores_dynamic`] with [`DynamicK::fixed`].
 
 use crate::model::MoeLayerWeights;
 use crate::tensor::{self, Tensor};
@@ -11,12 +20,106 @@ use crate::tensor::{self, Tensor};
 /// Routing decision for one token.
 #[derive(Clone, Debug)]
 pub struct GateDecision {
-    /// Selected routed-expert ids (len = N_k), unordered.
+    /// Selected routed-expert ids, unordered. Length is N_k on the
+    /// fixed path; under [`DynamicK`] or a per-row tier cap it is the
+    /// token's own k ∈ [k_min, k_max] — consumers must not assume a
+    /// uniform length ([`GroupedRouting::rebuild`] never did).
     pub experts: Vec<usize>,
     /// Gate value per selected expert (`1 + s'_i · u_i`, Eq. 9).
     pub gates: Vec<f32>,
     /// Raw router scores `s` (len = N_r) — kept for fine-tuning.
     pub scores: Vec<f32>,
+}
+
+/// Router-entropy-thresholded dynamic-k policy (ROADMAP item 4; the
+/// dense→dynamic-k line of PAPERS.md, arXiv 2310.04361).
+///
+/// Per token, the softmaxed router distribution's *normalized* entropy
+/// `h ∈ [0, 1]` measures routing uncertainty. A token routes to
+///
+/// ```text
+/// k = k_min + round((k_max - k_min) · min(h / threshold, 1))
+/// ```
+///
+/// so a confident router (h ≪ threshold) spends `k_min` experts and an
+/// uncertain one saturates at `k_max`. `threshold == 0` disables the
+/// policy: every token gets exactly `k_max` (the fixed-k path,
+/// bit-identical to the pre-dynamic router).
+///
+/// Monotonicity (pinned by `rust/tests/dynamic_k.rs`): for a fixed
+/// token, raising `threshold` never raises k — `h / threshold` is
+/// non-increasing in the denominator under IEEE-754 rounding, and
+/// `min`, the affine map, and `round` preserve that — so the total
+/// routed-row count over a batch is non-increasing in the threshold.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DynamicK {
+    /// Normalized-entropy threshold in `[0, 1]`. `0.0` = fixed top-k.
+    pub threshold: f32,
+    /// Floor on per-token expert count (clamped into `[1, k_max]`).
+    pub k_min: usize,
+}
+
+impl Default for DynamicK {
+    fn default() -> DynamicK {
+        DynamicK::fixed()
+    }
+}
+
+impl DynamicK {
+    /// The disabled policy: every token routes to exactly `k_max`.
+    pub fn fixed() -> DynamicK {
+        DynamicK { threshold: 0.0, k_min: 1 }
+    }
+
+    /// Whether the policy can change anything (threshold strictly
+    /// positive — NaN and non-positive thresholds mean "fixed").
+    pub fn is_active(&self) -> bool {
+        self.threshold > 0.0
+    }
+
+    /// Expert count for one token given its softmaxed router
+    /// distribution `sp` and an effective cap `k_max`.
+    pub fn k_for(&self, sp: &[f32], k_max: usize) -> usize {
+        if !self.is_active() || k_max <= 1 {
+            return k_max;
+        }
+        let k_min = self.k_min.clamp(1, k_max);
+        let frac = (normalized_entropy(sp) / self.threshold).min(1.0);
+        let k = k_min + ((k_max - k_min) as f32 * frac).round() as usize;
+        k.clamp(k_min, k_max)
+    }
+}
+
+/// Shannon entropy of `p` normalized by `ln(len)` into `[0, 1]`.
+/// Defined as 0 for degenerate distributions (`len <= 1`), where the
+/// router has no choice to be uncertain about.
+pub fn normalized_entropy(p: &[f32]) -> f32 {
+    let n = p.len();
+    if n <= 1 {
+        return 0.0;
+    }
+    let mut h = 0.0f32;
+    for &x in p {
+        if x > 0.0 {
+            h -= x * x.ln();
+        }
+    }
+    (h / (n as f32).ln()).clamp(0.0, 1.0)
+}
+
+/// Per-row k cap for an activation-ratio operating point (the effort-
+/// tier → compute mapping): a request served at `ratio` of full effort
+/// routes each token to at most `ceil(ratio · k_full)` experts,
+/// clamped into `[1, k_full]`. `ratio >= 1` is exactly the full path.
+pub fn k_for_ratio(ratio: f32, k_full: usize) -> usize {
+    if k_full == 0 {
+        return 0;
+    }
+    let k = (ratio * k_full as f32).ceil();
+    if k.is_nan() {
+        return k_full;
+    }
+    (k as usize).clamp(1, k_full)
 }
 
 /// Compute router scores for a batch of (normed) token vectors
@@ -30,20 +133,57 @@ pub fn route_tokens(moe: &MoeLayerWeights, x: &Tensor) -> Vec<GateDecision> {
     route_from_scores(moe, &scores)
 }
 
+/// [`route_tokens`] generalized to runtime activation: a [`DynamicK`]
+/// policy plus an optional per-row k cap (`row_k_max[t]`, from effort
+/// tiers via [`k_for_ratio`]).
+pub fn route_tokens_dynamic(
+    moe: &MoeLayerWeights,
+    x: &Tensor,
+    dk: DynamicK,
+    row_k_max: Option<&[usize]>,
+) -> Vec<GateDecision> {
+    let scores = moe.router.scores(x);
+    route_from_scores_dynamic(moe, &scores, dk, row_k_max)
+}
+
 /// Gate decisions from precomputed raw router scores `[q, N_r]` (the
 /// fused-artifact path computes scores on device; this finishes the
 /// bias + top-N_k + gate logic on host, where the bias adapts).
 pub fn route_from_scores(moe: &MoeLayerWeights, scores: &Tensor) -> Vec<GateDecision> {
+    route_from_scores_dynamic(moe, scores, DynamicK::fixed(), None)
+}
+
+/// [`route_from_scores`] generalized to runtime activation.
+///
+/// Per token `t` the effective cap is `min(row_k_max[t], N_k)` (or
+/// N_k without caps), then [`DynamicK::k_for`] picks `k` within
+/// `[k_min, cap]` from router entropy. Selection ranks by
+/// `softmax(s) + bias` exactly as the fixed path does; because
+/// [`tensor::top_k_indices`] is prefix-stable (descending, ties by
+/// lower index), the k experts chosen here are always a prefix of the
+/// fixed path's k_max choice — with `threshold == 0` and no caps the
+/// decisions are *bit-identical* to [`route_from_scores`].
+pub fn route_from_scores_dynamic(
+    moe: &MoeLayerWeights,
+    scores: &Tensor,
+    dk: DynamicK,
+    row_k_max: Option<&[usize]>,
+) -> Vec<GateDecision> {
     let q = scores.shape[0];
     let n_r = moe.spec.routed();
     debug_assert_eq!(scores.shape[1], n_r);
     let n_k = moe.spec.active;
+    if let Some(caps) = row_k_max {
+        debug_assert_eq!(caps.len(), q, "row_k_max must have one cap per token");
+    }
     let mut out = Vec::with_capacity(q);
     for t in 0..q {
         let s = scores.row(t);
         let sp = tensor::softmax(s);
+        let cap = row_k_max.map_or(n_k, |caps| caps[t].clamp(1, n_k));
+        let k = dk.k_for(&sp, cap);
         let ranked: Vec<f32> = (0..n_r).map(|i| sp[i] + moe.gate_bias[i]).collect();
-        let selected = tensor::top_k_indices(&ranked, n_k);
+        let selected = tensor::top_k_indices(&ranked, k);
         let gates = selected.iter().map(|&i| 1.0 + sp[i] * moe.gate_scale[i]).collect();
         out.push(GateDecision { experts: selected, gates, scores: s.to_vec() });
     }
@@ -195,9 +335,21 @@ impl MoeForwardStats {
 /// Full MoE FFN forward `F_MoE(x) = E_s(x) + Σ g_i E_i(x)` (Eq. 4) for a
 /// batch `x: [q, d]`. Returns output and routing stats.
 pub fn moe_ffn_forward(moe: &MoeLayerWeights, x: &Tensor) -> (Tensor, MoeForwardStats) {
+    moe_ffn_forward_dynamic(moe, x, DynamicK::fixed(), None)
+}
+
+/// [`moe_ffn_forward`] under runtime activation: dynamic-k and/or
+/// per-row tier caps decide how many experts each token's sum spans.
+/// With [`DynamicK::fixed`] and no caps this *is* the fixed forward.
+pub fn moe_ffn_forward_dynamic(
+    moe: &MoeLayerWeights,
+    x: &Tensor,
+    dk: DynamicK,
+    row_k_max: Option<&[usize]>,
+) -> (Tensor, MoeForwardStats) {
     let q = x.shape[0];
     let d = x.shape[1];
-    let decisions = route_tokens(moe, x);
+    let decisions = route_tokens_dynamic(moe, x, dk, row_k_max);
 
     // shared expert: dense over the whole batch
     let mut out = tensor::swiglu_ffn(x, &moe.shared.w_gate, &moe.shared.w_up, &moe.shared.w_down);
@@ -460,6 +612,67 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn normalized_entropy_edges() {
+        // degenerate distributions carry no uncertainty
+        assert_eq!(normalized_entropy(&[]), 0.0);
+        assert_eq!(normalized_entropy(&[1.0]), 0.0);
+        // a point mass scores 0, uniform scores 1 (up to rounding)
+        assert_eq!(normalized_entropy(&[1.0, 0.0, 0.0, 0.0]), 0.0);
+        let u = normalized_entropy(&[0.25; 4]);
+        assert!((u - 1.0).abs() < 1e-6, "uniform entropy {u}");
+        // skewed lands strictly between
+        let s = normalized_entropy(&[0.7, 0.1, 0.1, 0.1]);
+        assert!(s > 0.0 && s < 1.0, "skewed entropy {s}");
+    }
+
+    #[test]
+    fn k_for_ratio_operating_points() {
+        // the paper's 25% / 75% points over k_full = 4
+        assert_eq!(k_for_ratio(0.25, 4), 1);
+        assert_eq!(k_for_ratio(0.75, 4), 3);
+        // full effort and anything above is exactly k_full
+        assert_eq!(k_for_ratio(1.0, 4), 4);
+        assert_eq!(k_for_ratio(2.0, 4), 4);
+        // never below one expert, never above k_full, NaN = full
+        assert_eq!(k_for_ratio(0.0, 4), 1);
+        assert_eq!(k_for_ratio(-1.0, 4), 1);
+        assert_eq!(k_for_ratio(f32::NAN, 4), 4);
+        assert_eq!(k_for_ratio(0.5, 0), 0);
+    }
+
+    #[test]
+    fn dynamic_k_zero_threshold_is_fixed_path() {
+        let mut rng = Rng::new(15);
+        let (_, moe) = test_moe(&mut rng, "S2A3E8");
+        let x = Tensor::randn(&mut rng, &[24, 16], 1.0);
+        let fixed = route_tokens(&moe, &x);
+        let dynamic = route_tokens_dynamic(&moe, &x, DynamicK::fixed(), None);
+        for (a, b) in fixed.iter().zip(&dynamic) {
+            assert_eq!(a.experts, b.experts);
+            assert_eq!(a.gates, b.gates);
+            assert_eq!(a.scores, b.scores);
+        }
+    }
+
+    #[test]
+    fn dynamic_k_respects_bounds_and_row_caps() {
+        let mut rng = Rng::new(16);
+        let (_, moe) = test_moe(&mut rng, "S2A3E8");
+        let x = Tensor::randn(&mut rng, &[24, 16], 1.0);
+        let dk = DynamicK { threshold: 0.9, k_min: 1 };
+        let dec = route_tokens_dynamic(&moe, &x, dk, None);
+        assert!(dec.iter().all(|d| (1..=3).contains(&d.experts.len())));
+        // a per-row cap of 1 forces exactly one expert everywhere
+        let caps = vec![1usize; 24];
+        let capped = route_tokens_dynamic(&moe, &x, dk, Some(&caps));
+        assert!(capped.iter().all(|d| d.experts.len() == 1));
+        // and the capped choice is a prefix of the uncapped ranking
+        for (a, b) in capped.iter().zip(&dec) {
+            assert_eq!(a.experts[0], b.experts[0]);
+        }
     }
 
     #[test]

@@ -16,6 +16,7 @@ mod finetune;
 pub use balance::{BalanceConfig, BiasAdapter, UtilizationTracker};
 pub use finetune::{finetune_gates, FinetuneConfig, FinetuneReport};
 pub use gating::{
-    moe_ffn_forward, route_from_scores, route_tokens, GateDecision, GroupedRouting,
-    MoeForwardStats,
+    k_for_ratio, moe_ffn_forward, moe_ffn_forward_dynamic, normalized_entropy,
+    route_from_scores, route_from_scores_dynamic, route_tokens, route_tokens_dynamic,
+    DynamicK, GateDecision, GroupedRouting, MoeForwardStats,
 };

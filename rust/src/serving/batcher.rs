@@ -19,8 +19,9 @@
 //!
 //! **Backpressure**: with `queue_cap` set, each class queue is
 //! bounded. Arrivals past the cap are first degraded
-//! ([`EffortTier::Degraded`], the ROADMAP item 4 activation-ratio
-//! seam) into a small overflow margin, then shed with a typed
+//! ([`EffortTier::Degraded`] — served at the reduced activation
+//! ratio in `BatcherConfig::tier_ratios`) into a small overflow
+//! margin, then shed with a typed
 //! [`SubmitOutcome::Rejected`] — queue memory is bounded by
 //! `3 × (queue_cap + degrade_margin)` entries no matter the burst.
 
@@ -86,6 +87,13 @@ pub struct BatcherConfig {
     pub age_promote_steps: u64,
     /// Preemption policy for deadline-urgent higher classes.
     pub preempt: PreemptMode,
+    /// Effort-tier → activation-ratio operating points. The session
+    /// resolves each admitted request's tier through this table and
+    /// pushes the ratio to the backend (`StepForward::set_slot_ratio`),
+    /// so [`EffortTier::Degraded`] rows really run cheaper. Defaults
+    /// (1.0 / 0.25) keep `Full`-tier output bit-identical to the
+    /// untiered scheduler.
+    pub tier_ratios: crate::serving::TierRatios,
 }
 
 impl Default for BatcherConfig {
@@ -97,6 +105,7 @@ impl Default for BatcherConfig {
             degrade_margin: 0,
             age_promote_steps: u64::MAX,
             preempt: PreemptMode::Off,
+            tier_ratios: crate::serving::TierRatios::default(),
         }
     }
 }

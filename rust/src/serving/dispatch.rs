@@ -27,6 +27,14 @@
 //!   [`crate::moe::moe_ffn_forward`] uses, which makes the two paths
 //!   comparable **bit-for-bit** (they also share the serial GEMM kernel
 //!   [`crate::tensor::matmul_rows`]).
+//! * **Ragged decisions.** Nothing here assumes a uniform experts-per-
+//!   token count: the CSR is built from each decision's own
+//!   `experts.len()`, so per-token dynamic-k and per-row tier caps
+//!   (ROADMAP item 4) flow through unchanged — total gathered rows is
+//!   `Σ_t k_t` instead of `q · N_k`, and the arena sizes to that sum
+//!   (a *smaller* footprint than fixed-k, so dynamic-k can never
+//!   trigger late arena growth). `rust/tests/dynamic_k.rs` pins the
+//!   CSR ↔ decision permutation equivalence under ragged loads.
 //! * **Arena lifetime.** One [`DispatchArena`] per engine, owned by the
 //!   engine's MoE state and reused across layers, steps, and waves. It
 //!   only ever grows; after the first wave of the largest compiled

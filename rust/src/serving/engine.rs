@@ -30,7 +30,10 @@
 //! simply uploads the same position for every row.
 
 use crate::model::{LayerFfn, ModelWeights, MoeSpec};
-use crate::moe::{route_from_scores, route_tokens, BalanceConfig, BiasAdapter, GroupedRouting};
+use crate::moe::{
+    k_for_ratio, route_from_scores_dynamic, route_tokens_dynamic, BalanceConfig, BiasAdapter,
+    DynamicK, GroupedRouting,
+};
 use crate::runtime::{KvSlotPool, ModelBuffers, MoeModelBuffers, XlaRuntime};
 use crate::runtime::ParkedSlot;
 use crate::serving::batcher::{covering_bucket, Batcher, BatcherConfig, SubmitOutcome};
@@ -96,6 +99,11 @@ pub struct EngineConfig {
     /// production; [`Clock::manual`] makes queue-wait/deadline logic
     /// deterministic in tests).
     pub clock: Clock,
+    /// Per-token dynamic-k gating (`cmoe serve --dynamic-k`):
+    /// router-entropy-thresholded expert counts in the orchestrated
+    /// mode. [`DynamicK::fixed`] (the default) is bit-identical to the
+    /// fixed top-k path.
+    pub dynamic_k: DynamicK,
 }
 
 /// Default KV page length (tokens) for the paged slot pool.
@@ -114,6 +122,7 @@ impl EngineConfig {
             page_len: DEFAULT_PAGE_LEN,
             prefix_cache: false,
             clock: Clock::wall(),
+            dynamic_k: DynamicK::fixed(),
         }
     }
 
@@ -129,6 +138,7 @@ impl EngineConfig {
             page_len: DEFAULT_PAGE_LEN,
             prefix_cache: false,
             clock: Clock::wall(),
+            dynamic_k: DynamicK::fixed(),
         }
     }
 }
@@ -467,7 +477,8 @@ impl Engine {
                     logits
                 }
                 ExecMode::MoeOrchestrated => {
-                    self.orchestrated_step(bucket, &tok_buf, &pos_buf, &mut kv_layers)?
+                    // wave rows are untiered: full activation ratio
+                    self.orchestrated_step(bucket, &tok_buf, &pos_buf, &mut kv_layers, None)?
                 }
             };
 
@@ -513,6 +524,7 @@ impl Engine {
                 queued: t_start.duration_since(enqueued),
                 queued_steps: 0,
                 priority: r.priority,
+                tier: r.tier,
             });
         }
         Ok(results)
@@ -531,12 +543,20 @@ impl Engine {
     /// One rust-orchestrated MoE decode step: embed → per-layer
     /// [attention artifact → host routing → grouped expert artifact] →
     /// logits artifact. Returns host logits `[bucket, v]`.
+    ///
+    /// `row_ratios` (len = `bucket` when present) carries each row's
+    /// effort-tier activation ratio: row `i` routes each token to at
+    /// most `k_for_ratio(row_ratios[i], N_k)` experts per layer. `None`
+    /// (and any ratio `>= 1`) is the untiered full-k path. Per-token
+    /// dynamic-k ([`EngineConfig::dynamic_k`]) then floats k *below*
+    /// that cap on router entropy.
     fn orchestrated_step(
         &self,
         bucket: usize,
         tok_buf: &xla::PjRtBuffer,
         pos_buf: &xla::PjRtBuffer,
         kv_layers: &mut [xla::PjRtBuffer],
+        row_ratios: Option<&[f32]>,
     ) -> Result<Tensor> {
         let name = &self.cfg.model_name;
         let cfgm = &self.model.config;
@@ -643,10 +663,18 @@ impl Engine {
             };
 
             // host: routing from (device-computed or host-computed)
-            // scores — bias adaptation lives here either way
+            // scores — bias adaptation lives here either way. Tier
+            // caps are resolved per layer because N_k is a layer
+            // property; the ragged decisions flow into the same
+            // grouped dispatch (its CSR never assumed uniform k).
+            let caps: Option<Vec<usize>> = row_ratios.map(|rs| {
+                let n_k = state.layers[l].spec.active;
+                rs.iter().map(|&r| k_for_ratio(r, n_k)).collect()
+            });
+            let dk = self.cfg.dynamic_k;
             let decisions = match scores {
-                Some(s) => route_from_scores(&state.layers[l], &s),
-                None => route_tokens(&state.layers[l], &xn),
+                Some(s) => route_from_scores_dynamic(&state.layers[l], &s, dk, caps.as_deref()),
+                None => route_tokens_dynamic(&state.layers[l], &xn, dk, caps.as_deref()),
             };
 
             // routed experts: grouped host dispatch (default) or the
@@ -807,6 +835,11 @@ pub struct EngineStepForward<'e> {
     kv_layer: Vec<f32>,
     toks_pad: Vec<i32>,
     pos_pad: Vec<i32>,
+    /// Per-slot effort-tier activation ratio, pushed by the session
+    /// via [`StepForward::set_slot_ratio`] at every (re)assignment.
+    /// 1.0 (the initial value) = untiered full-k routing for that row.
+    slot_ratios: Vec<f32>,
+    ratios_pad: Vec<f32>,
 }
 
 impl<'e> EngineStepForward<'e> {
@@ -839,6 +872,8 @@ impl<'e> EngineStepForward<'e> {
             kv_layer: Vec::new(),
             toks_pad: Vec::new(),
             pos_pad: Vec::new(),
+            slot_ratios: vec![1.0; pool],
+            ratios_pad: Vec::new(),
         }
     }
 
@@ -1051,7 +1086,18 @@ impl StepForward for EngineStepForward<'_> {
                     self.kv.gather_layer(l, slots, bucket, &mut self.kv_layer);
                     kv_layers.push(eng.rt.upload_f32(&self.kv_layer, &[2, bucket, h, t, hd])?);
                 }
-                let logits = eng.orchestrated_step(bucket, &tok_buf, &pos_buf, &mut kv_layers)?;
+                // per-row tier ratios for the live rows; padding rows
+                // run at full ratio (their logits are discarded). Skip
+                // the whole cap path when every live row is untiered —
+                // keeps the default configuration on the exact
+                // pre-tiering code path.
+                self.ratios_pad.clear();
+                self.ratios_pad.extend(slots.iter().map(|&s| self.slot_ratios[s]));
+                self.ratios_pad.resize(bucket, 1.0);
+                let tiered = self.ratios_pad.iter().any(|&r| r < 1.0);
+                let row_ratios = tiered.then_some(self.ratios_pad.as_slice());
+                let logits =
+                    eng.orchestrated_step(bucket, &tok_buf, &pos_buf, &mut kv_layers, row_ratios)?;
                 for (l, buf) in kv_layers.iter().enumerate() {
                     let kv_host = eng.rt.download(buf, &[2, bucket, h, t, hd])?;
                     for (i, (&slot, &p)) in slots.iter().zip(pos).enumerate() {
@@ -1085,6 +1131,10 @@ impl StepForward for EngineStepForward<'_> {
 
     fn kv_capacity(&self) -> usize {
         self.eng.cfg.kv_len
+    }
+
+    fn set_slot_ratio(&mut self, slot: usize, ratio: f32) {
+        self.slot_ratios[slot] = ratio;
     }
 
     fn page_metrics(&self) -> Option<PageMetrics> {

@@ -160,6 +160,14 @@ impl<F: StepForward> StepForward for FaultInjectingForward<F> {
         self.inner.kv_capacity()
     }
 
+    fn set_slot_ratio(&mut self, slot: usize, ratio: f32) {
+        // never faulted: the operating point is host bookkeeping, not
+        // a device call — and a lost ratio would silently serve the
+        // wrong tier rather than fail a request, which is outside the
+        // containment contract under test
+        self.inner.set_slot_ratio(slot, ratio);
+    }
+
     fn page_metrics(&self) -> Option<PageMetrics> {
         self.inner.page_metrics()
     }

@@ -79,6 +79,15 @@ pub struct SchedulerMetrics {
     /// Backend/scheduler faults absorbed without losing a request
     /// (batch isolation, prefix-map fallback, recovered invariants).
     pub faults_contained: u64,
+    /// Decoded row-steps per effort tier, indexed by
+    /// `EffortTier::index()` (`[full, degraded]`). One live row that
+    /// decodes one token adds one to its tier's bucket.
+    pub tier_row_steps: [u64; 2],
+    /// Σ activation ratio over those row-steps, same indexing — the
+    /// numerator of [`SchedulerMetrics::activated_fraction`]. The
+    /// ratio recorded is the operating point the backend was told to
+    /// run the row at (`StepForward::set_slot_ratio`), clamped to 1.
+    pub tier_ratio_sum: [f64; 2],
 }
 
 impl SchedulerMetrics {
@@ -116,6 +125,26 @@ impl SchedulerMetrics {
         self.prefix_hits as f64 / self.prefix_lookups as f64
     }
 
+    /// Record one decoded row at effort `tier` running at `ratio` of
+    /// full activation (clamped into `[0, 1]` — ratios above 1 cannot
+    /// activate more than the full expert set).
+    pub fn record_tier_row(&mut self, tier: crate::serving::EffortTier, ratio: f32) {
+        let i = tier.index();
+        self.tier_row_steps[i] += 1;
+        self.tier_ratio_sum[i] += f64::from(ratio.clamp(0.0, 1.0));
+    }
+
+    /// Mean activated-parameter fraction of `tier`'s decoded rows
+    /// (1.0 = native operating point; the paper's 25% point reads
+    /// 0.25 here). 0 when the tier never decoded a row.
+    pub fn activated_fraction(&self, tier: crate::serving::EffortTier) -> f64 {
+        let i = tier.index();
+        if self.tier_row_steps[i] == 0 {
+            return 0.0;
+        }
+        self.tier_ratio_sum[i] / self.tier_row_steps[i] as f64
+    }
+
     /// Fold another snapshot into this one (engine-lifetime totals
     /// absorb per-session scheduler counters).
     pub fn merge(&mut self, o: &SchedulerMetrics) {
@@ -141,6 +170,10 @@ impl SchedulerMetrics {
         self.deadline_misses += o.deadline_misses;
         self.failed += o.failed;
         self.faults_contained += o.faults_contained;
+        for i in 0..self.tier_row_steps.len() {
+            self.tier_row_steps[i] += o.tier_row_steps[i];
+            self.tier_ratio_sum[i] += o.tier_ratio_sum[i];
+        }
     }
 }
 
@@ -360,6 +393,16 @@ impl EngineMetrics {
                 self.scheduler.deadline_misses,
             ));
         }
+        if self.scheduler.tier_row_steps[1] > 0 {
+            use crate::serving::EffortTier;
+            s.push_str(&format!(
+                ", tiers: degraded {} rows @ {:.0}% activation (full {} rows @ {:.0}%)",
+                self.scheduler.tier_row_steps[1],
+                self.scheduler.activated_fraction(EffortTier::Degraded) * 100.0,
+                self.scheduler.tier_row_steps[0],
+                self.scheduler.activated_fraction(EffortTier::Full) * 100.0,
+            ));
+        }
         if self.scheduler.failed > 0 || self.scheduler.faults_contained > 0 {
             s.push_str(&format!(
                 ", faults: {} contained, {} requests failed",
@@ -491,6 +534,38 @@ mod tests {
         assert!(sum.contains("overload: 3 preempted (2 parked/1 dropped, 3 resumed)"));
         assert!(sum.contains("4 shed"));
         assert!(sum.contains("faults: 5 contained, 1 requests failed"));
+    }
+
+    #[test]
+    fn tier_gauges_meter_activated_fraction() {
+        use crate::serving::EffortTier;
+        let mut s = SchedulerMetrics::default();
+        assert_eq!(s.activated_fraction(EffortTier::Full), 0.0);
+        assert_eq!(s.activated_fraction(EffortTier::Degraded), 0.0);
+        for _ in 0..4 {
+            s.record_tier_row(EffortTier::Full, 1.0);
+        }
+        for _ in 0..2 {
+            s.record_tier_row(EffortTier::Degraded, 0.25);
+        }
+        // ratios above 1 clamp: full effort can't exceed the full set
+        s.record_tier_row(EffortTier::Full, 1.5);
+        assert_eq!(s.tier_row_steps, [5, 2]);
+        assert!((s.activated_fraction(EffortTier::Full) - 1.0).abs() < 1e-12);
+        assert!((s.activated_fraction(EffortTier::Degraded) - 0.25).abs() < 1e-12);
+
+        // merge is elementwise; summary segment appears only when a
+        // degraded row actually decoded
+        let mut t = SchedulerMetrics::default();
+        t.merge(&s);
+        t.merge(&s);
+        assert_eq!(t.tier_row_steps, [10, 4]);
+        assert!((t.activated_fraction(EffortTier::Degraded) - 0.25).abs() < 1e-12);
+        let quiet = EngineMetrics::default();
+        assert!(!quiet.summary().contains("tiers:"));
+        let mut m = EngineMetrics::default();
+        m.scheduler.merge(&s);
+        assert!(m.summary().contains("tiers: degraded 2 rows @ 25% activation"));
     }
 
     #[test]

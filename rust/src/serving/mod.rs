@@ -52,9 +52,11 @@ pub use engine::{Engine, EngineConfig, EngineStepForward, ExecMode, ExpertExec, 
 pub use fault::FaultInjectingForward;
 pub use metrics::{DispatchMetrics, EngineMetrics, PageMetrics, SchedulerMetrics, WaveMetrics};
 pub use prefix_cache::PrefixCache;
-pub use request::{EffortTier, GenParams, Priority, Request, RequestFailure, RequestResult};
+pub use request::{
+    EffortTier, GenParams, Priority, Request, RequestFailure, RequestResult, TierRatios,
+};
 pub use scheduler::{
-    stub_logits, stub_reference, ContinuousSession, PrefillOutcome, SchedError, Scheduler,
-    SlotState, StepForward, StubForward, STUB_PAGE_LEN,
+    stub_logits, stub_logits_at, stub_reference, stub_reference_tiered, ContinuousSession,
+    PrefillOutcome, SchedError, Scheduler, SlotState, StepForward, StubForward, STUB_PAGE_LEN,
 };
 pub use server::{EngineServer, ServeError, Ticket};

@@ -52,13 +52,20 @@ impl Priority {
     }
 }
 
-/// Serving effort tier — the seam for request-level activation-ratio
-/// degradation (ROADMAP item 4: per-request dynamic-k operating
-/// points). The scheduler sets [`EffortTier::Degraded`] on admissions
-/// accepted into a bounded queue's overflow margin; backends that
-/// support multiple activation ratios read it to pick the cheaper
-/// operating point. Backends without tiers ignore it — the tier is
-/// then purely an admission-pressure signal.
+/// Serving effort tier — request-level activation-ratio selection.
+///
+/// Each tier maps to a concrete activation-ratio operating point via
+/// [`TierRatios`] (defaults: `Full` = 1.0, `Degraded` = 0.25 — the
+/// CMoE paper's 25% point, §5). The scheduler sets
+/// [`EffortTier::Degraded`] on admissions accepted into a bounded
+/// queue's overflow margin, and callers may set it directly with
+/// [`Request::with_tier`]. The session pushes the resolved ratio to
+/// the backend through `StepForward::set_slot_ratio` at admission and
+/// resume, so degraded rows really run at the reduced expert count
+/// (per-row `k = ceil(ratio · k_full)`), and meters activated
+/// fraction per tier in `SchedulerMetrics`. A backend that ignores
+/// `set_slot_ratio` degrades nothing — the tier is then purely an
+/// admission-pressure signal, as before ROADMAP item 4 landed.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
 pub enum EffortTier {
     /// Full activation ratio (the converted model's native operating
@@ -68,6 +75,53 @@ pub enum EffortTier {
     /// Reduced activation ratio under overload (graceful degradation
     /// before shed-load).
     Degraded,
+}
+
+impl EffortTier {
+    /// Every tier, full- to least-effort. Metrics index by
+    /// [`EffortTier::index`] in this order.
+    pub const ALL: [EffortTier; 2] = [EffortTier::Full, EffortTier::Degraded];
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EffortTier::Full => "full",
+            EffortTier::Degraded => "degraded",
+        }
+    }
+}
+
+/// Tier → activation-ratio operating points. A ratio `r` makes every
+/// row of that tier route each token to at most `ceil(r · k_full)`
+/// experts (`moe::k_for_ratio`); `r >= 1` is exactly the untiered
+/// path, which is what keeps `Full`-tier token streams bit-identical
+/// with tiering on or off.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TierRatios {
+    /// [`EffortTier::Full`] operating point (default 1.0 — lossless).
+    pub full: f32,
+    /// [`EffortTier::Degraded`] operating point (default 0.25 — the
+    /// paper's fast point).
+    pub degraded: f32,
+}
+
+impl Default for TierRatios {
+    fn default() -> Self {
+        TierRatios { full: 1.0, degraded: 0.25 }
+    }
+}
+
+impl TierRatios {
+    /// The operating point for one tier.
+    pub fn ratio(&self, tier: EffortTier) -> f32 {
+        match tier {
+            EffortTier::Full => self.full,
+            EffortTier::Degraded => self.degraded,
+        }
+    }
 }
 
 /// A generation request.
@@ -87,8 +141,9 @@ pub struct Request {
     ///
     /// [`Clock`]: crate::serving::Clock
     pub deadline_steps: Option<u64>,
-    /// Effort tier (see [`EffortTier`]); set by bounded admission, not
-    /// by callers.
+    /// Effort tier (see [`EffortTier`]); set by bounded admission
+    /// under overload, or up front by callers via
+    /// [`Request::with_tier`].
     pub tier: EffortTier,
 }
 
@@ -113,6 +168,15 @@ impl Request {
         self.deadline_steps = Some(steps);
         self
     }
+
+    /// Request a specific effort tier up front (e.g. a batch caller
+    /// opting into [`EffortTier::Degraded`] for cheaper tokens).
+    /// Bounded admission may still degrade a `Full` request under
+    /// overload; it never promotes a `Degraded` one.
+    pub fn with_tier(mut self, tier: EffortTier) -> Self {
+        self.tier = tier;
+        self
+    }
 }
 
 /// Completed generation.
@@ -135,6 +199,10 @@ pub struct RequestResult {
     /// The request's priority class, echoed back so per-class SLO
     /// accounting needs no side table.
     pub priority: Priority,
+    /// The effort tier the request was served at (including a
+    /// degrade applied by bounded admission), echoed back so callers
+    /// can see which results traded quality for latency.
+    pub tier: EffortTier,
 }
 
 /// A request retired without completing: the fault-containment
@@ -181,8 +249,22 @@ mod tests {
     fn builders() {
         let r = Request::new(7, vec![1], GenParams::default())
             .with_priority(Priority::High)
-            .with_deadline_steps(4);
+            .with_deadline_steps(4)
+            .with_tier(EffortTier::Degraded);
         assert_eq!(r.priority, Priority::High);
         assert_eq!(r.deadline_steps, Some(4));
+        assert_eq!(r.tier, EffortTier::Degraded);
+    }
+
+    #[test]
+    fn tier_ratios_defaults_and_lookup() {
+        let tr = TierRatios::default();
+        assert_eq!(tr.ratio(EffortTier::Full), 1.0);
+        assert_eq!(tr.ratio(EffortTier::Degraded), 0.25);
+        for (i, t) in EffortTier::ALL.iter().enumerate() {
+            assert_eq!(t.index(), i);
+        }
+        assert_eq!(EffortTier::Full.name(), "full");
+        assert_eq!(EffortTier::Degraded.name(), "degraded");
     }
 }

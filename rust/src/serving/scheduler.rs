@@ -70,7 +70,9 @@ use crate::serving::batcher::{
 use crate::serving::clock::Clock;
 use crate::serving::metrics::{PageMetrics, SchedulerMetrics, WaveMetrics};
 use crate::serving::prefix_cache::PrefixCache;
-use crate::serving::request::{Priority, Request, RequestFailure, RequestResult};
+use crate::serving::request::{
+    EffortTier, Priority, Request, RequestFailure, RequestResult, TierRatios,
+};
 use crate::util::Rng;
 use anyhow::Result;
 use std::collections::VecDeque;
@@ -406,6 +408,15 @@ pub trait StepForward {
     /// `pos < kv_len` loop bound).
     fn kv_capacity(&self) -> usize;
 
+    /// Set the activation-ratio operating point for `slot`'s rows
+    /// (effort tiers, ROADMAP item 4). The session calls this right
+    /// after a request is assigned or resumed into `slot`, before any
+    /// prefill or decode touches it; `ratio >= 1` means full effort.
+    /// Backends without tiered execution ignore it — the default is a
+    /// no-op, preserving the untiered behavior (the tier then remains
+    /// a metering-only signal).
+    fn set_slot_ratio(&mut self, _slot: usize, _ratio: f32) {}
+
     /// Paged-KV gauges, when this backend owns a page pool. Default:
     /// no pages to report.
     fn page_metrics(&self) -> Option<PageMetrics> {
@@ -439,6 +450,10 @@ pub struct ContinuousSession<F: StepForward> {
     clock: Clock,
     /// Copied from the config at construction.
     preempt_mode: PreemptMode,
+    /// Tier → activation-ratio operating points (copied from the
+    /// config). Pushed to the backend per slot at admission/resume and
+    /// metered per decoded row.
+    tier_ratios: TierRatios,
     /// Steps executed so far (admission bookkeeping is step-indexed so
     /// queue waits are measurable in deterministic simulation tests).
     step_idx: u64,
@@ -491,6 +506,7 @@ impl<F: StepForward> ContinuousSession<F> {
     ) -> Result<ContinuousSession<F>, ConfigError> {
         let sched = Scheduler::new(&cfg.buckets)?;
         let preempt_mode = cfg.preempt;
+        let tier_ratios = cfg.tier_ratios;
         let batcher = Batcher::with_clock(cfg, clock.clone())?;
         Ok(ContinuousSession {
             batcher,
@@ -498,6 +514,7 @@ impl<F: StepForward> ContinuousSession<F> {
             fwd,
             clock,
             preempt_mode,
+            tier_ratios,
             step_idx: 0,
             preempted: VecDeque::new(),
             slot_buf: Vec::new(),
@@ -734,8 +751,14 @@ impl<F: StepForward> ContinuousSession<F> {
             }
             self.run_prompt_tokens += r.prompt.len();
             let rid = r.id;
+            let tier = r.tier;
             match self.sched.assign(r, enq, waited, now) {
-                Ok(sid) => self.slot_buf.push(sid),
+                Ok(sid) => {
+                    // the backend learns the row's operating point
+                    // before any prefill/decode touches the slot
+                    self.fwd.set_slot_ratio(sid, self.tier_ratios.ratio(tier));
+                    self.slot_buf.push(sid);
+                }
                 Err(e) => {
                     self.sched.metrics.failed += 1;
                     self.failed_buf.push(RequestFailure { id: rid, error: e.to_string() });
@@ -852,17 +875,22 @@ impl<F: StepForward> ContinuousSession<F> {
                 let t_done = self.clock.now();
                 for (i, row) in logits.iter().enumerate() {
                     let sid = self.rows_buf[i];
-                    let done = {
+                    let (done, tier) = {
                         let st = self.sched.slot_mut(sid);
                         let tok = st.rng.sample_logits(row, st.request.params.temperature);
                         st.generated.push(tok);
                         st.cur = tok as i32;
                         st.pos += 1;
                         self.run_generated += 1;
-                        st.request.params.stop_token == Some(tok)
+                        let done = st.request.params.stop_token == Some(tok)
                             || st.generated.len() >= st.request.params.max_new_tokens
-                            || st.pos >= kv_cap
+                            || st.pos >= kv_cap;
+                        (done, st.request.tier)
                     };
+                    // per-tier activation metering, decode-row
+                    // denominated (each live row that decoded a token
+                    // counts once at its operating point)
+                    self.sched.metrics.record_tier_row(tier, self.tier_ratios.ratio(tier));
                     if done {
                         self.retire_finished(sid, t_done);
                     }
@@ -922,6 +950,7 @@ impl<F: StepForward> ContinuousSession<F> {
     /// where preemption cut them.
     fn resume_one(&mut self) -> bool {
         let Some(Preempted { st, kv }) = self.preempted.pop_front() else { return false };
+        let tier = st.request.tier;
         let sid = match self.sched.resume(st) {
             Ok(sid) => sid,
             Err(st) => {
@@ -929,6 +958,9 @@ impl<F: StepForward> ContinuousSession<F> {
                 return false;
             }
         };
+        // preemption preserves the tier: the resumed rows keep running
+        // at the same operating point as before eviction
+        self.fwd.set_slot_ratio(sid, self.tier_ratios.ratio(tier));
         match kv {
             Some(parked) => self.fwd.unpark(sid, parked),
             None => {
@@ -992,7 +1024,13 @@ impl<F: StepForward> ContinuousSession<F> {
         let mut out = Vec::with_capacity(slots.len());
         for &sid in &slots {
             self.fwd.release(sid);
-            let prompt = self.sched.slot(sid).request.prompt.clone();
+            let (prompt, tier) = {
+                let st = self.sched.slot(sid);
+                (st.request.prompt.clone(), st.request.tier)
+            };
+            // the release above may have cleared backend slot state;
+            // re-establish the occupant's tier before its prefill
+            self.fwd.set_slot_ratio(sid, self.tier_ratios.ratio(tier));
             let cached = match self.fwd.map_prefix(sid, &prompt) {
                 Ok(m) => m.unwrap_or(0),
                 Err(_) => {
@@ -1028,14 +1066,17 @@ impl<F: StepForward> ContinuousSession<F> {
     fn recover_decode(&mut self, kv_cap: usize, batch_err: &str) {
         let rows = self.rows_buf.clone();
         for &sid in &rows {
-            let (ctx, cur, pos) = {
+            let (ctx, cur, pos, tier) = {
                 let st = self.sched.slot(sid);
                 let mut ctx = st.request.prompt.clone();
                 ctx.extend_from_slice(&st.generated[..st.generated.len() - 1]);
                 debug_assert_eq!(ctx.len(), st.pos, "recover context length");
-                (ctx, st.cur, st.pos)
+                (ctx, st.cur, st.pos, st.request.tier)
             };
             self.fwd.release(sid);
+            // same occupant, rebuilt slot: re-establish its tier so the
+            // isolated replay runs at the ratio the batch step used
+            self.fwd.set_slot_ratio(sid, self.tier_ratios.ratio(tier));
             let cached = match self.fwd.map_prefix(sid, &ctx) {
                 Ok(m) => m.unwrap_or(0),
                 Err(_) => {
@@ -1067,7 +1108,7 @@ impl<F: StepForward> ContinuousSession<F> {
                 Ok(logits) if logits.len() == 1 => {
                     self.run_decode_steps += 1;
                     let t_done = self.clock.now();
-                    let done = {
+                    let (done, tier) = {
                         let st = self.sched.slot_mut(sid);
                         let tok =
                             st.rng.sample_logits(&logits[0], st.request.params.temperature);
@@ -1075,10 +1116,12 @@ impl<F: StepForward> ContinuousSession<F> {
                         st.cur = tok as i32;
                         st.pos += 1;
                         self.run_generated += 1;
-                        st.request.params.stop_token == Some(tok)
+                        let done = st.request.params.stop_token == Some(tok)
                             || st.generated.len() >= st.request.params.max_new_tokens
-                            || st.pos >= kv_cap
+                            || st.pos >= kv_cap;
+                        (done, st.request.tier)
                     };
+                    self.sched.metrics.record_tier_row(tier, self.tier_ratios.ratio(tier));
                     self.sched.record_step(bucket, 1);
                     if done {
                         self.retire_finished(sid, t_done);
@@ -1111,6 +1154,7 @@ fn finish(st: SlotState, now: Instant) -> RequestResult {
         queued: st.admitted_at.saturating_duration_since(st.enqueued),
         queued_steps: st.queued_steps,
         priority: st.request.priority,
+        tier: st.request.tier,
     }
 }
 
@@ -1130,6 +1174,23 @@ pub fn stub_logits(ctx: &[usize], vocab: usize) -> Vec<f32> {
     }
     let mut rng = Rng::new(h ^ vocab as u64);
     (0..vocab).map(|_| rng.f32()).collect()
+}
+
+/// [`stub_logits`] at an activation-ratio operating point. Full effort
+/// (`ratio >= 1`, or anything non-finite) is *exactly* [`stub_logits`];
+/// a reduced ratio computes logits from only the last
+/// `ceil(ratio · len)` context tokens (never fewer than one). This is
+/// the stub's model of a cheaper activation point: still a pure
+/// function of the row's own context — so scheduling, preemption and
+/// drop-mode replay stay token-invisible at any fixed ratio — but with
+/// outputs that genuinely differ from full effort, so the tier tests
+/// can tell the backend really ran the reduced operating point.
+pub fn stub_logits_at(ctx: &[usize], vocab: usize, ratio: f32) -> Vec<f32> {
+    if !(ratio < 1.0) || ctx.is_empty() {
+        return stub_logits(ctx, vocab);
+    }
+    let w = ((ratio * ctx.len() as f32).ceil() as usize).clamp(1, ctx.len());
+    stub_logits(&ctx[ctx.len() - w..], vocab)
 }
 
 /// Host-only [`StepForward`] over a real paged [`KvSlotPool`]: each
@@ -1161,6 +1222,13 @@ pub struct StubForward {
     /// `SchedulerMetrics::prefill_tokens` (+
     /// `preempt_recompute_tokens` when drop-mode preemption ran).
     pub prefilled_tokens: u64,
+    /// Per-slot activation ratio (effort tiers): logits run through
+    /// [`stub_logits_at`] at this operating point. 1.0 (full effort)
+    /// until the session says otherwise via
+    /// [`StepForward::set_slot_ratio`]; a slot's ratio is overwritten
+    /// at every (re)assignment, so stale values never leak across
+    /// occupants.
+    ratios: Vec<f32>,
 }
 
 /// Tokens per page of the stub's KV pool (small, so short test
@@ -1198,7 +1266,13 @@ impl StubForward {
             cache: prefix.then(|| PrefixCache::new(page_len)),
             released: 0,
             prefilled_tokens: 0,
+            ratios: vec![1.0; pool],
         }
+    }
+
+    /// The activation ratio a slot is currently serving at (tests).
+    pub fn slot_ratio(&self, slot: usize) -> f32 {
+        self.ratios[slot]
     }
 
     /// Live contexts currently held (slot hygiene checks).
@@ -1257,7 +1331,8 @@ impl StepForward for StubForward {
             // logits come from the page-reconstructed context: a wrong
             // prefix mapping diverges the token stream right here
             let ctx = self.read_ctx(sid, p.len());
-            out.push(PrefillOutcome { logits: stub_logits(&ctx, self.vocab), pos: p.len() });
+            let logits = stub_logits_at(&ctx, self.vocab, self.ratios[sid]);
+            out.push(PrefillOutcome { logits, pos: p.len() });
             if self.cache.is_some() {
                 let full = p.len() / self.kv.page_len();
                 let pages: Vec<usize> = self.kv.slot_pages(sid)[..full].to_vec();
@@ -1283,7 +1358,7 @@ impl StepForward for StubForward {
             anyhow::ensure!(self.kv.extent(sid) == p, "stub: decode on a stale slot {sid}");
             self.kv.write_token(sid, p, &[tok as f32, 0.0]);
             let ctx = self.read_ctx(sid, p + 1);
-            out.push(stub_logits(&ctx, self.vocab));
+            out.push(stub_logits_at(&ctx, self.vocab, self.ratios[sid]));
         }
         Ok(out)
     }
@@ -1309,6 +1384,10 @@ impl StepForward for StubForward {
         self.kv_cap
     }
 
+    fn set_slot_ratio(&mut self, slot: usize, ratio: f32) {
+        self.ratios[slot] = ratio;
+    }
+
     fn page_metrics(&self) -> Option<PageMetrics> {
         Some(PageMetrics {
             page_len: self.kv.page_len(),
@@ -1328,11 +1407,26 @@ impl StepForward for StubForward {
 /// scheduler must emit for the request — batched or not, preempted or
 /// not.
 pub fn stub_reference(r: &Request, vocab: usize, kv_cap: usize) -> Vec<usize> {
+    stub_reference_tiered(r, vocab, kv_cap, TierRatios { full: 1.0, degraded: 1.0 })
+}
+
+/// [`stub_reference`] with effort tiers applied: the request runs at
+/// `ratios.ratio(r.tier)` throughout ([`stub_logits_at`]), which is
+/// exactly what a correct tier-aware session must emit for it — again
+/// batched or not, preempted or not (the tier survives preemption).
+/// With both ratios at 1 this *is* [`stub_reference`].
+pub fn stub_reference_tiered(
+    r: &Request,
+    vocab: usize,
+    kv_cap: usize,
+    ratios: TierRatios,
+) -> Vec<usize> {
+    let ratio = ratios.ratio(r.tier);
     let mut rng = Rng::new(r.params.seed);
     let mut ctx = r.prompt.clone();
     let mut pos = ctx.len();
     let mut gen = Vec::new();
-    let tok = rng.sample_logits(&stub_logits(&ctx, vocab), r.params.temperature);
+    let tok = rng.sample_logits(&stub_logits_at(&ctx, vocab, ratio), r.params.temperature);
     gen.push(tok);
     let mut cur = tok;
     let mut done = r.params.stop_token == Some(tok)
@@ -1340,7 +1434,7 @@ pub fn stub_reference(r: &Request, vocab: usize, kv_cap: usize) -> Vec<usize> {
         || pos >= kv_cap;
     while !done {
         ctx.push(cur);
-        let tok = rng.sample_logits(&stub_logits(&ctx, vocab), r.params.temperature);
+        let tok = rng.sample_logits(&stub_logits_at(&ctx, vocab, ratio), r.params.temperature);
         gen.push(tok);
         cur = tok;
         pos += 1;

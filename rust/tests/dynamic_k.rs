@@ -1,0 +1,281 @@
+//! Dynamic-k property suite: serve-time per-token expert counts
+//! pinned against the fixed-k oracle (ROADMAP item 4, the test half).
+//!
+//! Three groups of properties over randomized converted layers:
+//!
+//! * **threshold = 0 is the fixed path, bit for bit** — routing
+//!   decisions, the grouped CSR, and the full MoE forward all compare
+//!   exactly (`==` on every f32) against the pre-dynamic entry points
+//!   over ≥ 200 randomized layers/batches;
+//! * **any threshold is well-formed** — every token's k lands in
+//!   `[k_min, k_max]` (k_max shrunk by per-row tier caps when
+//!   present), selected experts are a prefix of the fixed ranking,
+//!   gates recompute from the emitted scores, and the CSR is an exact
+//!   permutation of the decision list's (token, expert, gate) triples
+//!   — including empty-expert and all-tokens-on-one-expert edges;
+//! * **monotonicity** — raising the entropy threshold never increases
+//!   the total routed rows of a batch.
+
+use cmoe::converter::{convert_ffn, ConvertOptions};
+use cmoe::model::{FfnWeights, MoeLayerWeights, MoeSpec};
+use cmoe::moe::{
+    k_for_ratio, moe_ffn_forward, moe_ffn_forward_dynamic, normalized_entropy, route_tokens,
+    route_tokens_dynamic, DynamicK, GroupedRouting,
+};
+use cmoe::profiling::ActivationProfile;
+use cmoe::prop_assert;
+use cmoe::tensor::{self, Tensor};
+use cmoe::util::{prop, Rng};
+
+const D: usize = 16;
+const D_H: usize = 64;
+const SPECS: &[&str] = &["S1A2E4", "S2A2E4", "S1A3E8", "S2A3E8", "S3A3E8", "S1A4E8"];
+
+/// Random converted layer: the same dense→MoE recipe the unit tests
+/// use, plus randomized gate bias/scale so ranking and gating are both
+/// exercised away from their converter defaults.
+fn random_layer(rng: &mut Rng) -> (MoeLayerWeights, MoeSpec) {
+    let ffn = FfnWeights {
+        w_gate: Tensor::randn(rng, &[D, D_H], 0.4),
+        w_up: Tensor::randn(rng, &[D, D_H], 0.4),
+        w_down: Tensor::randn(rng, &[D_H, D], 0.4),
+    };
+    let x = Tensor::randn(rng, &[64, D], 1.0);
+    let h = tensor::swiglu_hidden(&x, &ffn.w_gate, &ffn.w_up);
+    let prof = ActivationProfile::from_hidden(&h, 8);
+    let spec: MoeSpec = SPECS[rng.below(SPECS.len())].parse().unwrap();
+    let mut moe = convert_ffn(&ffn, &prof, &spec, &ConvertOptions::default()).unwrap();
+    if rng.f32() < 0.5 {
+        for b in moe.gate_bias.iter_mut() {
+            *b = rng.normal() * 0.1;
+        }
+    }
+    if rng.f32() < 0.5 {
+        for u in moe.gate_scale.iter_mut() {
+            *u = rng.normal().abs();
+        }
+    }
+    (moe, spec)
+}
+
+/// The (token, expert, gate) triples of a decision list, sorted — the
+/// canonical multiset both layouts must agree on.
+fn triples(dec: &[cmoe::moe::GateDecision]) -> Vec<(usize, usize, u32)> {
+    let mut out: Vec<(usize, usize, u32)> = dec
+        .iter()
+        .enumerate()
+        .flat_map(|(t, d)| {
+            d.experts.iter().zip(&d.gates).map(move |(&e, &g)| (t, e, g.to_bits()))
+        })
+        .collect();
+    out.sort_unstable();
+    out
+}
+
+/// The CSR's (token, expert, gate) triples, sorted.
+fn csr_triples(r: &GroupedRouting) -> Vec<(usize, usize, u32)> {
+    let mut out = Vec::with_capacity(r.total_rows());
+    for e in 0..r.n_experts() {
+        for row in r.expert_rows(e) {
+            out.push((r.token_idx()[row], e, r.gates()[row].to_bits()));
+        }
+    }
+    out.sort_unstable();
+    out
+}
+
+#[test]
+fn prop_threshold_zero_is_bit_identical_to_fixed() {
+    prop::check(
+        "threshold 0: routing, CSR and forward equal the fixed-k path bit for bit",
+        prop::Config { cases: 200, max_size: 12, seed: 0xD1A0 },
+        |rng, size| {
+            let (moe, spec) = random_layer(rng);
+            let q = 1 + rng.below(size.max(1));
+            let x = Tensor::randn(rng, &[q, D], 1.0);
+            // any non-positive threshold and any k_min mean "fixed"
+            let dk = DynamicK { threshold: 0.0, k_min: 1 + rng.below(spec.active + 2) };
+            prop_assert!(!dk.is_active(), "threshold 0 must be inactive");
+
+            // routing: exact equality, field by field
+            let fixed = route_tokens(&moe, &x);
+            let dynamic = route_tokens_dynamic(&moe, &x, dk, None);
+            prop_assert!(fixed.len() == dynamic.len(), "decision count diverged");
+            for (t, (a, b)) in fixed.iter().zip(&dynamic).enumerate() {
+                prop_assert!(a.experts == b.experts, "experts diverged at token {t}");
+                prop_assert!(
+                    a.gates.iter().map(|g| g.to_bits()).eq(b.gates.iter().map(|g| g.to_bits())),
+                    "gates diverged at token {t}"
+                );
+                prop_assert!(
+                    a.scores.iter().map(|s| s.to_bits()).eq(b.scores.iter().map(|s| s.to_bits())),
+                    "scores diverged at token {t}"
+                );
+            }
+
+            // CSR: identical layout, not just identical multiset
+            let n_r = spec.routed();
+            let mut ra = GroupedRouting::new(n_r);
+            let mut rb = GroupedRouting::new(n_r);
+            ra.rebuild(n_r, &fixed);
+            rb.rebuild(n_r, &dynamic);
+            prop_assert!(ra.total_rows() == rb.total_rows(), "CSR row totals diverged");
+            prop_assert!(ra.token_idx() == rb.token_idx(), "CSR token order diverged");
+            prop_assert!(
+                ra.gates().iter().map(|g| g.to_bits()).eq(rb.gates().iter().map(|g| g.to_bits())),
+                "CSR gates diverged"
+            );
+            for e in 0..n_r {
+                prop_assert!(ra.expert_rows(e) == rb.expert_rows(e), "CSR offsets diverged at {e}");
+            }
+
+            // forward: bitwise-equal outputs and identical stats
+            let (ya, sa) = moe_ffn_forward(&moe, &x);
+            let (yb, sb) = moe_ffn_forward_dynamic(&moe, &x, dk, None);
+            prop_assert!(
+                ya.data.iter().map(|v| v.to_bits()).eq(yb.data.iter().map(|v| v.to_bits())),
+                "forward outputs diverged"
+            );
+            prop_assert!(sa.expert_tokens == sb.expert_tokens, "forward stats diverged");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_any_threshold_bounds_prefix_gates_and_csr_permutation() {
+    prop::check(
+        "dynamic-k decisions are bounded, prefix-stable, gate-aligned, CSR-permutable",
+        prop::Config { cases: 160, max_size: 12, seed: 0xD1A1 },
+        |rng, size| {
+            let (moe, spec) = random_layer(rng);
+            let n_k = spec.active;
+            let n_r = spec.routed();
+            let q = 1 + rng.below(size.max(1));
+            let x = Tensor::randn(rng, &[q, D], 1.0);
+            let dk = DynamicK {
+                threshold: rng.f32().max(f32::MIN_POSITIVE),
+                k_min: 1 + rng.below(n_k),
+            };
+            let caps: Option<Vec<usize>> = (rng.f32() < 0.5)
+                .then(|| (0..q).map(|_| 1 + rng.below(n_k + 2)).collect());
+
+            let fixed = route_tokens(&moe, &x);
+            let dynamic = route_tokens_dynamic(&moe, &x, dk, caps.as_deref());
+            for (t, d) in dynamic.iter().enumerate() {
+                let cap = caps.as_ref().map_or(n_k, |c| c[t].clamp(1, n_k));
+                let k_min = dk.k_min.clamp(1, cap);
+                let k = d.experts.len();
+                prop_assert!(
+                    (k_min..=cap).contains(&k),
+                    "token {t}: k = {k} outside [{k_min}, {cap}]"
+                );
+                // prefix stability: the k selected experts are exactly
+                // the first k of the fixed-k ranking
+                prop_assert!(
+                    d.experts == fixed[t].experts[..k.min(fixed[t].experts.len())],
+                    "token {t}: selection is not a prefix of the fixed ranking"
+                );
+                // gates recompute from the emitted scores
+                let sp = tensor::softmax(&d.scores);
+                for (i, (&e, &g)) in d.experts.iter().zip(&d.gates).enumerate() {
+                    let want = 1.0 + sp[e] * moe.gate_scale[e];
+                    prop_assert!(
+                        g.to_bits() == want.to_bits(),
+                        "token {t} slot {i}: gate {g} != recomputed {want}"
+                    );
+                }
+            }
+
+            // CSR ↔ decisions: exact (token, expert, gate) permutation,
+            // ragged loads included
+            let mut r = GroupedRouting::new(n_r);
+            r.rebuild(n_r, &dynamic);
+            let total: usize = dynamic.iter().map(|d| d.experts.len()).sum();
+            prop_assert!(r.total_rows() == total, "CSR rows != Σ k_t");
+            prop_assert!(triples(&dynamic) == csr_triples(&r), "CSR is not a permutation");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_raising_threshold_never_increases_routed_rows() {
+    prop::check(
+        "total routed rows are non-increasing in the entropy threshold",
+        prop::Config { cases: 120, max_size: 10, seed: 0xD1A2 },
+        |rng, size| {
+            let (moe, _) = random_layer(rng);
+            let q = 1 + rng.below(size.max(1));
+            let x = Tensor::randn(rng, &[q, D], 1.0);
+            let mut thresholds: Vec<f32> =
+                (0..5).map(|_| rng.f32()).chain([0.0, 1.0]).collect();
+            thresholds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let mut prev_rows = usize::MAX;
+            for &h in thresholds.iter() {
+                let dec =
+                    route_tokens_dynamic(&moe, &x, DynamicK { threshold: h, k_min: 1 }, None);
+                let rows: usize = dec.iter().map(|d| d.experts.len()).sum();
+                prop_assert!(
+                    rows <= prev_rows,
+                    "threshold {h} routed {rows} rows, more than a lower threshold's {prev_rows}"
+                );
+                prev_rows = rows;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn empty_batch_and_degenerate_edges() {
+    let mut rng = Rng::new(0xD1A3);
+    let (moe, spec) = random_layer(&mut rng);
+
+    // q = 0: every entry point returns empty without panicking
+    let x0 = Tensor::zeros(&[0, D]);
+    assert!(route_tokens_dynamic(&moe, &x0, DynamicK::fixed(), Some(&[])).is_empty());
+    let (y0, s0) = moe_ffn_forward_dynamic(
+        &moe,
+        &x0,
+        DynamicK { threshold: 0.5, k_min: 1 },
+        None,
+    );
+    assert_eq!(y0.shape, vec![0, D]);
+    assert_eq!(s0.tokens, 0);
+
+    // all tokens forced onto one expert (ragged CSR's empty-expert and
+    // hot-expert edges at once): a huge ranking bias pins expert 0
+    let mut pinned = moe.clone();
+    pinned.gate_bias.iter_mut().for_each(|b| *b = 0.0);
+    pinned.gate_bias[0] = 1e6;
+    let x = Tensor::randn(&mut rng, &[9, D], 1.0);
+    // k_min = 1 with an extreme threshold drives confident tokens to 1
+    let dec = route_tokens_dynamic(
+        &pinned,
+        &x,
+        DynamicK { threshold: 1.0, k_min: 1 },
+        Some(&vec![1; 9]),
+    );
+    assert!(dec.iter().all(|d| d.experts == [0]), "cap 1 + bias must pin expert 0");
+    let n_r = spec.routed();
+    let mut r = GroupedRouting::new(n_r);
+    r.rebuild(n_r, &dec);
+    assert_eq!(r.count(0), 9);
+    for e in 1..n_r {
+        assert_eq!(r.count(e), 0, "expert {e} should be empty");
+    }
+
+    // tier-cap algebra: the paper's operating points and edge inputs
+    assert_eq!(k_for_ratio(1.0, 4), 4);
+    assert_eq!(k_for_ratio(0.75, 4), 3);
+    assert_eq!(k_for_ratio(0.25, 4), 1);
+    assert_eq!(k_for_ratio(0.0, 4), 1);
+    assert_eq!(k_for_ratio(f32::NAN, 4), 4);
+    assert_eq!(k_for_ratio(2.0, 4), 4);
+    assert_eq!(k_for_ratio(0.5, 0), 0);
+
+    // entropy sanity at the policy's decision points
+    assert_eq!(normalized_entropy(&[1.0]), 0.0);
+    assert!((normalized_entropy(&[0.5, 0.5]) - 1.0).abs() < 1e-6);
+}

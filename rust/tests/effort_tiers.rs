@@ -1,0 +1,320 @@
+//! Effort-tier e2e suite over the host stub backend (ROADMAP item 4):
+//! per-request activation-ratio operating points must actually change
+//! what the backend computes for degraded rows — and change *nothing*
+//! for full-effort rows.
+//!
+//! * **Degraded rows run cheaper, meterably**: a mixed-tier trace
+//!   leaves `SchedulerMetrics::activated_fraction(Degraded)` at the
+//!   configured ratio (and `Full` at 1.0), with every decoded row
+//!   attributed to its tier;
+//! * **Full-tier streams are bit-identical with tiering on or off**:
+//!   the untiered `stub_reference` stays the oracle for `Full`
+//!   requests no matter what ratio degraded neighbors run at;
+//! * **tiers survive preemption** (Park AND Drop): preempted degraded
+//!   requests resume at their ratio and reproduce the run-to-
+//!   completion `stub_reference_tiered` stream exactly;
+//! * **bounded admission degrades end to end**: a request degraded by
+//!   the overflow margin is served at the degraded ratio and echoes
+//!   `tier: Degraded` in its result.
+
+use cmoe::prop_assert;
+use cmoe::serving::{
+    stub_reference, stub_reference_tiered, BatcherConfig, Clock, ContinuousSession, EffortTier,
+    GenParams, PreemptMode, Priority, Request, StubForward, SubmitOutcome, TierRatios,
+};
+use cmoe::util::{prop, Rng};
+use std::collections::VecDeque;
+use std::time::Duration;
+
+const VOCAB: usize = 19;
+const KV_CAP: usize = 64;
+
+fn tiered_cfg(buckets: Vec<usize>, ratios: TierRatios) -> BatcherConfig {
+    BatcherConfig {
+        buckets,
+        max_wait: Duration::ZERO,
+        tier_ratios: ratios,
+        ..Default::default()
+    }
+}
+
+fn session(
+    buckets: Vec<usize>,
+    ratios: TierRatios,
+    preempt: PreemptMode,
+) -> ContinuousSession<StubForward> {
+    let pool = *buckets.iter().max().unwrap();
+    let mut cfg = tiered_cfg(buckets, ratios);
+    cfg.preempt = preempt;
+    ContinuousSession::with_clock(cfg, StubForward::new(pool, VOCAB, KV_CAP), Clock::manual())
+        .unwrap()
+}
+
+fn random_request(id: u64, rng: &mut Rng) -> Request {
+    let prompt: Vec<usize> = (0..1 + rng.below(8)).map(|_| rng.below(VOCAB)).collect();
+    let params = GenParams {
+        max_new_tokens: 1 + rng.below(12),
+        temperature: if rng.f32() < 0.5 { 0.0 } else { 0.8 },
+        seed: rng.next_u64(),
+        stop_token: if rng.f32() < 0.2 { Some(rng.below(VOCAB)) } else { None },
+    };
+    let tier = if rng.f32() < 0.5 { EffortTier::Degraded } else { EffortTier::Full };
+    Request::new(id, prompt, params).with_tier(tier)
+}
+
+/// Drive a session to completion over a shuffled-arrival trace.
+fn run_trace(
+    sess: &mut ContinuousSession<StubForward>,
+    reqs: &[Request],
+    rng: &mut Rng,
+) -> Result<Vec<cmoe::serving::RequestResult>, String> {
+    let mut pending: VecDeque<Request> = reqs.iter().cloned().collect();
+    let mut results = Vec::new();
+    let mut guard = 0;
+    while !(pending.is_empty() && sess.is_idle()) {
+        for _ in 0..rng.below(3) {
+            if let Some(r) = pending.pop_front() {
+                sess.enqueue(r);
+            }
+        }
+        results.extend(sess.step().map_err(|e| e.to_string())?);
+        guard += 1;
+        if guard >= 100_000 {
+            return Err("trace failed to converge".into());
+        }
+    }
+    Ok(results)
+}
+
+#[test]
+fn prop_tiered_streams_match_reference_and_meter_activation() {
+    let ratios = TierRatios { full: 1.0, degraded: 0.25 };
+    prop::check(
+        "mixed-tier traces: per-tier token identity + activated-fraction metering",
+        prop::Config { cases: 60, max_size: 20, seed: 0x71E2 },
+        |rng, size| {
+            let buckets = vec![1 + rng.below(4)];
+            let n_req = 1 + rng.below(size.max(1));
+            let mut sess = session(buckets, ratios, PreemptMode::Off);
+            let reqs: Vec<Request> = (0..n_req).map(|i| random_request(i as u64, rng)).collect();
+            let results = run_trace(&mut sess, &reqs, rng)?;
+            prop_assert!(results.len() == n_req, "lost requests");
+
+            let mut saw_degraded = false;
+            for r in &results {
+                let req = &reqs[r.id as usize];
+                prop_assert!(r.tier == req.tier, "request {} tier not echoed", r.id);
+                // the tier-aware run-to-completion oracle
+                let want = stub_reference_tiered(req, VOCAB, KV_CAP, ratios);
+                prop_assert!(
+                    r.tokens == want,
+                    "request {} ({:?}) diverged from tiered reference",
+                    r.id,
+                    req.tier
+                );
+                // Full-tier rows must be untouched by tiering: the
+                // untiered oracle agrees exactly
+                if req.tier == EffortTier::Full {
+                    prop_assert!(
+                        r.tokens == stub_reference(req, VOCAB, KV_CAP),
+                        "full-tier request {} changed under tiering",
+                        r.id
+                    );
+                } else {
+                    saw_degraded = true;
+                }
+            }
+
+            // metering: every decoded row lands in its tier's gauge at
+            // the configured ratio. The first token of each request
+            // comes from the prefill outcome, not a decode row, so the
+            // gauge counts tokens-after-the-first.
+            let m = sess.metrics();
+            let rows: u64 = results.iter().map(|r| r.tokens.len() as u64 - 1).sum();
+            prop_assert!(
+                m.tier_row_steps.iter().sum::<u64>() == rows,
+                "tier row-steps {} != decoded rows {rows}",
+                m.tier_row_steps.iter().sum::<u64>()
+            );
+            if m.tier_row_steps[EffortTier::Degraded.index()] > 0 {
+                let af = m.activated_fraction(EffortTier::Degraded);
+                prop_assert!((af - 0.25).abs() < 1e-9, "degraded activation {af} != 0.25");
+            }
+            if m.tier_row_steps[EffortTier::Full.index()] > 0 {
+                let af = m.activated_fraction(EffortTier::Full);
+                prop_assert!((af - 1.0).abs() < 1e-9, "full activation {af} != 1.0");
+            }
+            prop_assert!(saw_degraded || n_req < 4, "large trace never degraded — vacuous");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn full_tier_streams_identical_with_tiering_on_and_off() {
+    // same trace, three sessions: tiering off (all ratios 1), tiering
+    // on, and tiering on with degraded neighbors — the Full requests'
+    // streams must be bitwise identical across all three
+    let mut rng = Rng::new(0x71E3);
+    let full_reqs: Vec<Request> =
+        (0..8).map(|i| random_request(i, &mut rng).with_tier(EffortTier::Full)).collect();
+    let degraded: Vec<Request> = (8..12)
+        .map(|i| random_request(i, &mut rng).with_tier(EffortTier::Degraded))
+        .collect();
+
+    let run = |reqs: &[Request], ratios: TierRatios| -> Vec<(u64, Vec<usize>)> {
+        let mut sess = session(vec![4], ratios, PreemptMode::Off);
+        let mut drive_rng = Rng::new(0xD21E);
+        let mut out: Vec<(u64, Vec<usize>)> = run_trace(&mut sess, reqs, &mut drive_rng)
+            .unwrap()
+            .into_iter()
+            .map(|r| (r.id, r.tokens))
+            .collect();
+        out.sort();
+        out
+    };
+
+    let off = run(&full_reqs, TierRatios { full: 1.0, degraded: 1.0 });
+    let on = run(&full_reqs, TierRatios { full: 1.0, degraded: 0.25 });
+    assert_eq!(off, on, "tiering on/off changed full-tier streams");
+
+    // same full requests with degraded traffic interleaved: per-row
+    // tiering means neighbors cannot perturb a Full row
+    let mut mixed: Vec<Request> = full_reqs.clone();
+    mixed.extend(degraded.clone());
+    let mixed_out = run(&mixed, TierRatios { full: 1.0, degraded: 0.25 });
+    for (id, toks) in &off {
+        let got = &mixed_out.iter().find(|(i, _)| i == id).unwrap().1;
+        assert_eq!(got, toks, "request {id} perturbed by degraded neighbors");
+    }
+    // and the degraded neighbors really are degraded
+    for r in &degraded {
+        let got = &mixed_out.iter().find(|(i, _)| *i == r.id).unwrap().1;
+        let want = stub_reference_tiered(r, VOCAB, KV_CAP, TierRatios { full: 1.0, degraded: 0.25 });
+        assert_eq!(got, &want, "degraded request {} off its tiered reference", r.id);
+    }
+}
+
+#[test]
+fn prop_tiers_survive_preemption_in_both_modes() {
+    let ratios = TierRatios { full: 1.0, degraded: 0.25 };
+    // prop::check takes Fn, so the cross-case counter lives in a Cell
+    let total_preemptions = std::cell::Cell::new(0u64);
+    prop::check(
+        "preempt/resume (park and drop) preserves tier and token stream",
+        prop::Config { cases: 60, max_size: 20, seed: 0x71E4 },
+        |rng, size| {
+            for &mode in &[PreemptMode::Park, PreemptMode::Drop] {
+                let buckets = vec![1 + rng.below(3)];
+                let n_req = 1 + rng.below(size.max(1));
+                let mut sess = session(buckets, ratios, mode);
+                let reqs: Vec<Request> = (0..n_req)
+                    .map(|i| {
+                        let mut r = random_request(i as u64, rng);
+                        // tight High deadlines force preemption; keep
+                        // tiers on victims and aggressors alike
+                        if rng.f32() < 0.4 {
+                            r = r.with_priority(Priority::High);
+                            r = r.with_deadline_steps(rng.below(3) as u64);
+                        } else if rng.f32() < 0.3 {
+                            r = r.with_priority(Priority::Low);
+                        }
+                        r
+                    })
+                    .collect();
+                let results = run_trace(&mut sess, &reqs, rng)?;
+                let failures = sess.take_failures();
+                prop_assert!(failures.is_empty(), "unexpected failures: {failures:?}");
+                prop_assert!(results.len() == n_req, "lost requests under {mode:?}");
+                for r in &results {
+                    let req = &reqs[r.id as usize];
+                    prop_assert!(
+                        r.tier == req.tier,
+                        "[{mode:?}] request {} lost its tier across preemption",
+                        r.id
+                    );
+                    let want = stub_reference_tiered(req, VOCAB, KV_CAP, ratios);
+                    prop_assert!(
+                        r.tokens == want,
+                        "[{mode:?}] request {} ({:?}) diverged after preemption",
+                        r.id,
+                        req.tier
+                    );
+                }
+                total_preemptions.set(total_preemptions.get() + sess.metrics().preemptions);
+            }
+            Ok(())
+        },
+    );
+    assert!(total_preemptions.get() > 0, "no trace ever preempted — property is vacuous");
+}
+
+#[test]
+fn bounded_admission_degrades_and_serves_at_reduced_ratio() {
+    // queue_cap 1 + margin 2 before any scheduler step: the first
+    // arrival queues Full, the next two degrade into the overflow
+    // margin, the fourth sheds
+    let ratios = TierRatios { full: 1.0, degraded: 0.25 };
+    let mut cfg = tiered_cfg(vec![1], ratios);
+    cfg.queue_cap = Some(1);
+    cfg.degrade_margin = 2;
+    let mut sess =
+        ContinuousSession::with_clock(cfg, StubForward::new(1, VOCAB, KV_CAP), Clock::manual())
+            .unwrap();
+    let mk = |id: u64| {
+        Request::new(
+            id,
+            vec![1, 2, 3],
+            GenParams { max_new_tokens: 6, temperature: 0.0, seed: id, stop_token: None },
+        )
+    };
+    assert_eq!(sess.enqueue(mk(0)), SubmitOutcome::Queued);
+    assert_eq!(sess.enqueue(mk(1)), SubmitOutcome::QueuedDegraded);
+    assert_eq!(sess.enqueue(mk(2)), SubmitOutcome::QueuedDegraded);
+    assert!(matches!(sess.enqueue(mk(3)), SubmitOutcome::Rejected(_)));
+
+    let results = sess.drain().unwrap();
+    assert_eq!(results.len(), 3);
+    for r in &results {
+        let want_tier = if r.id >= 1 { EffortTier::Degraded } else { EffortTier::Full };
+        assert_eq!(r.tier, want_tier, "request {} tier", r.id);
+        // the degrade applied by admission, not just the caller, maps
+        // to the reduced operating point end to end
+        let mut req = mk(r.id);
+        req.tier = want_tier;
+        assert_eq!(
+            r.tokens,
+            stub_reference_tiered(&req, VOCAB, KV_CAP, ratios),
+            "request {} not served at its admitted tier",
+            r.id
+        );
+    }
+    let m = sess.metrics();
+    assert!(m.tier_row_steps[EffortTier::Degraded.index()] > 0, "no degraded rows metered");
+    assert!((m.activated_fraction(EffortTier::Degraded) - 0.25).abs() < 1e-9);
+    assert!((m.activated_fraction(EffortTier::Full) - 1.0).abs() < 1e-9);
+    // the engine-level summary surfaces the tier gauges
+    let mut em = cmoe::serving::EngineMetrics::default();
+    em.scheduler = m.clone();
+    assert!(em.summary().contains("tiers:"), "summary missing tier segment: {}", em.summary());
+}
+
+#[test]
+fn degraded_ratio_actually_changes_logits_not_just_metering() {
+    // guard against a vacuous stub: at least some degraded requests
+    // must produce different tokens than their full-effort run would
+    let ratios = TierRatios { full: 1.0, degraded: 0.25 };
+    let mut rng = Rng::new(0x71E5);
+    let mut diverged = 0usize;
+    for i in 0..40u64 {
+        let mut r = random_request(i, &mut rng).with_tier(EffortTier::Degraded);
+        // long prompts make the truncated-context window observable
+        r.prompt = (0..10 + rng.below(10)).map(|_| rng.below(VOCAB)).collect();
+        let full = stub_reference(&r, VOCAB, KV_CAP);
+        let degraded = stub_reference_tiered(&r, VOCAB, KV_CAP, ratios);
+        if full != degraded {
+            diverged += 1;
+        }
+    }
+    assert!(diverged > 0, "degraded ratio never changed a token stream — stub is vacuous");
+}

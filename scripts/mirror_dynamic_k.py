@@ -1,0 +1,292 @@
+#!/usr/bin/env python3
+"""Line-faithful python mirror of the serve-time dynamic-activation math.
+
+`scripts/check.sh` runs this as the fallback gate when no rust
+toolchain is on PATH (the repo's historical situation — see the
+ROADMAP's standing caveat). Every function here transcribes its rust
+counterpart statement by statement in float32 semantics (numpy), so a
+behavioral disagreement is a bug in one of the two, not a modeling
+artifact:
+
+  normalized_entropy     <- rust/src/moe/gating.rs  normalized_entropy
+  DynamicK.k_for         <- rust/src/moe/gating.rs  DynamicK::k_for
+  k_for_ratio            <- rust/src/moe/gating.rs  k_for_ratio
+  softmax / top_k        <- rust/src/tensor/ops.rs  softmax, top_k_indices
+  select_experts         <- rust/src/moe/gating.rs  route_from_scores_dynamic
+                            (ranking + selection per token; no weights)
+  Rng / stub_logits[_at] <- rust/src/util/rng.rs (PCG32) and
+                            rust/src/serving/scheduler.rs
+
+The checks mirror what `rust/tests/dynamic_k.rs` and
+`rust/tests/effort_tiers.rs` pin natively:
+
+  1. threshold == 0 is exactly the fixed top-k path (identical
+     selection and k on randomized score rows);
+  2. k stays inside [k_min, cap] and the dynamic selection is a
+     *prefix* of the fixed ranking (prefix-stable top-k);
+  3. per-token k — hence total routed rows — is non-increasing as the
+     entropy threshold rises;
+  4. k_for_ratio algebra: the paper's 75%/25% points on N_k = 4 land
+     on k = 3 / k = 1, NaN and >= 1 ratios are the full path, the
+     result clamps into [1, k_full];
+  5. stub_logits_at: ratio >= 1 (and NaN) is bit-exactly stub_logits,
+     reduced ratios hash only the last ceil(ratio*len) tokens (never
+     fewer than one), stay a pure function of (ctx, ratio), and
+     actually diverge from full effort on long contexts.
+
+Exits 0 and prints a one-line summary per check on success; raises on
+the first violation.
+"""
+
+import math
+import random
+import struct
+
+import numpy as np
+
+F32 = np.float32
+
+# ---------------------------------------------------------------------------
+# rust/src/util/rng.rs — PCG32 (state/inc u64, 32-bit output)
+# ---------------------------------------------------------------------------
+
+MASK64 = (1 << 64) - 1
+PCG_MULT = 6364136223846793005
+
+
+def _splitmix64(x):
+    x = (x + 0x9E3779B97F4A7C15) & MASK64
+    z = x
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+    return x, z ^ (z >> 31)
+
+
+class Rng:
+    def __init__(self, seed):
+        s = seed & MASK64
+        s, init_state = _splitmix64(s)
+        s, inc = _splitmix64(s)
+        self.inc = inc | 1
+        self.state = (init_state + self.inc) & MASK64
+        self.next_u32()
+
+    def next_u32(self):
+        old = self.state
+        self.state = (old * PCG_MULT + self.inc) & MASK64
+        xorshifted = (((old >> 18) ^ old) >> 27) & 0xFFFFFFFF
+        rot = old >> 59
+        return ((xorshifted >> rot) | (xorshifted << ((32 - rot) & 31))) & 0xFFFFFFFF
+
+    def f32(self):
+        return F32(self.next_u32() >> 8) * F32(1.0 / (1 << 24))
+
+
+# ---------------------------------------------------------------------------
+# rust/src/moe/gating.rs — entropy, DynamicK, k_for_ratio
+# ---------------------------------------------------------------------------
+
+
+def normalized_entropy(p):
+    n = len(p)
+    if n <= 1:
+        return F32(0.0)
+    h = F32(0.0)
+    for x in p:
+        if x > 0.0:
+            h = F32(h - F32(x * F32(np.log(x))))
+    return F32(np.clip(F32(h / F32(np.log(F32(n)))), 0.0, 1.0))
+
+
+class DynamicK:
+    def __init__(self, threshold, k_min):
+        self.threshold = F32(threshold)
+        self.k_min = k_min
+
+    def is_active(self):
+        return self.threshold > 0.0  # NaN and <= 0 both read as fixed
+
+    def k_for(self, sp, k_max):
+        if not self.is_active() or k_max <= 1:
+            return k_max
+        k_min = max(1, min(self.k_min, k_max))
+        frac = F32(min(F32(normalized_entropy(sp) / self.threshold), F32(1.0)))
+        # rust `f32 as usize` truncates; .round() is round-half-away
+        k = k_min + int(float(np.round(F32(F32(k_max - k_min) * frac))))
+        return max(k_min, min(k, k_max))
+
+
+def k_for_ratio(ratio, k_full):
+    if k_full == 0:
+        return 0
+    k = float(np.ceil(F32(F32(ratio) * F32(k_full))))
+    if math.isnan(k):
+        return k_full
+    # rust `f32 as usize` saturates at 0 for negatives
+    return max(1, min(int(max(k, 0.0)), k_full))
+
+
+# ---------------------------------------------------------------------------
+# rust/src/tensor/ops.rs — softmax, top_k_indices (prefix-stable)
+# ---------------------------------------------------------------------------
+
+
+def softmax(xs):
+    xs = np.asarray(xs, dtype=F32)
+    m = F32(np.max(xs)) if xs.size else F32(-np.inf)
+    exps = np.exp(xs - m, dtype=F32)
+    s = F32(np.sum(exps, dtype=F32))
+    return (exps / s).astype(F32)
+
+
+def top_k_indices(xs, k):
+    k = min(k, len(xs))
+    best = []
+    for i, v in enumerate(xs):
+        pos = next(
+            (j for j, b in enumerate(best) if v > xs[b] or (v == xs[b] and i < b)),
+            len(best),
+        )
+        if pos < k:
+            best.insert(pos, i)
+            if len(best) > k:
+                best.pop()
+    return best
+
+
+def select_experts(scores_row, gate_bias, dk, n_k, cap=None):
+    """Ranking + selection of route_from_scores_dynamic for one token."""
+    sp = softmax(scores_row)
+    eff_cap = n_k if cap is None else max(1, min(cap, n_k))
+    k = dk.k_for(sp, eff_cap)
+    ranked = (sp + np.asarray(gate_bias, dtype=F32)).astype(F32)
+    return top_k_indices(list(ranked), k), k
+
+
+# ---------------------------------------------------------------------------
+# rust/src/serving/scheduler.rs — stub_logits, stub_logits_at
+# ---------------------------------------------------------------------------
+
+
+def stub_logits(ctx, vocab):
+    h = 0xCBF29CE484222325
+    for t in ctx:
+        h ^= t & MASK64
+        h = (h * 0x100000001B3) & MASK64
+    rng = Rng(h ^ vocab)
+    return [rng.f32() for _ in range(vocab)]
+
+
+def stub_logits_at(ctx, vocab, ratio):
+    if not (F32(ratio) < 1.0) or not ctx:  # NaN falls through to full
+        return stub_logits(ctx, vocab)
+    w = int(float(np.ceil(F32(F32(ratio) * F32(len(ctx))))))
+    w = max(1, min(w, len(ctx)))
+    return stub_logits(ctx[len(ctx) - w:], vocab)
+
+
+# ---------------------------------------------------------------------------
+# checks
+# ---------------------------------------------------------------------------
+
+
+def random_scores(rand, n):
+    return np.asarray([rand.gauss(0.0, 1.5) for _ in range(n)], dtype=F32)
+
+
+def check_threshold_zero_fixed(rand, cases=400):
+    for _ in range(cases):
+        n_r = rand.randint(2, 12)
+        n_k = rand.randint(1, n_r)
+        s = random_scores(rand, n_r)
+        bias = random_scores(rand, n_r) * F32(0.1)
+        fixed, kf = select_experts(s, bias, DynamicK(0.0, rand.randint(1, 4)), n_k)
+        assert kf == n_k, f"threshold=0 must spend exactly N_k, got {kf} != {n_k}"
+        ref = top_k_indices(list(softmax(s) + bias), n_k)
+        assert fixed == ref, f"threshold=0 selection diverged: {fixed} vs {ref}"
+    print(f"ok: threshold=0 is the fixed top-k path ({cases} rows)")
+
+
+def check_bounds_and_prefix(rand, cases=400):
+    for _ in range(cases):
+        n_r = rand.randint(2, 12)
+        n_k = rand.randint(1, n_r)
+        k_min = rand.randint(1, 4)
+        thr = rand.uniform(1e-3, 1.0)
+        cap = rand.randint(1, n_r) if rand.random() < 0.5 else None
+        s = random_scores(rand, n_r)
+        bias = random_scores(rand, n_r) * F32(0.1)
+        dyn, k = select_experts(s, bias, DynamicK(thr, k_min), n_k, cap)
+        eff_cap = n_k if cap is None else max(1, min(cap, n_k))
+        lo = max(1, min(k_min, eff_cap)) if eff_cap > 1 else eff_cap
+        assert lo <= k <= eff_cap, f"k={k} outside [{lo}, {eff_cap}]"
+        fixed, _ = select_experts(s, bias, DynamicK(0.0, 1), n_k)
+        assert dyn == fixed[:k], f"dynamic selection not a prefix: {dyn} vs {fixed}"
+    print(f"ok: k in [k_min, cap] and selection is a prefix of fixed ({cases} rows)")
+
+
+def check_threshold_monotone(rand, cases=200):
+    for _ in range(cases):
+        n_r = rand.randint(2, 12)
+        n_k = rand.randint(2, n_r) if n_r >= 2 else 1
+        k_min = rand.randint(1, 3)
+        sp = softmax(random_scores(rand, n_r))
+        thresholds = sorted([0.0, 1.0] + [rand.uniform(0.0, 1.0) for _ in range(4)])
+        ks = [DynamicK(t, k_min).k_for(sp, n_k) for t in thresholds]
+        for a, b in zip(ks, ks[1:]):
+            assert a >= b, f"k rose with threshold: {ks} at {thresholds}"
+    print(f"ok: per-token k non-increasing in threshold ({cases} rows)")
+
+
+def check_k_for_ratio():
+    assert k_for_ratio(0.75, 4) == 3 and k_for_ratio(0.25, 4) == 1
+    assert k_for_ratio(1.0, 4) == 4 and k_for_ratio(2.0, 4) == 4
+    assert k_for_ratio(float("nan"), 4) == 4
+    assert k_for_ratio(0.0, 4) == 1 and k_for_ratio(-1.0, 4) == 1
+    assert k_for_ratio(0.5, 0) == 0
+    for k_full in range(1, 9):
+        last = None
+        for i in range(0, 101):
+            k = k_for_ratio(i / 100.0, k_full)
+            assert 1 <= k <= k_full
+            assert last is None or k >= last, "k_for_ratio not monotone in ratio"
+            last = k
+    print("ok: k_for_ratio algebra (paper points 0.75->3, 0.25->1 on N_k=4)")
+
+
+def check_stub_tiers(rand, cases=300):
+    diverged = 0
+    for _ in range(cases):
+        n = rand.randint(1, 40)
+        ctx = [rand.randint(0, 99) for _ in range(n)]
+        vocab = rand.randint(2, 31)
+        full = stub_logits(ctx, vocab)
+        for r in (1.0, 1.5, float("nan")):
+            assert stub_logits_at(ctx, vocab, r) == full, "full effort not exact"
+        ratio = rand.choice([0.25, 0.5, 0.75])
+        a = stub_logits_at(ctx, vocab, ratio)
+        assert a == stub_logits_at(ctx, vocab, ratio), "not pure in (ctx, ratio)"
+        w = max(1, min(int(math.ceil(ratio * n)), n))
+        assert a == stub_logits(ctx[n - w:], vocab), "window math diverged"
+        if a != full:
+            diverged += 1
+    assert diverged > 0, "reduced ratios never changed any logits"
+    # bit-level spot check of the PCG32 mirror: f32 values are exactly
+    # representable, so exact equality across runs is meaningful
+    v = stub_logits([1, 2, 3], 7)
+    assert all(0.0 <= x < 1.0 for x in v) and len(set(struct.pack("f", x) for x in v)) > 1
+    print(f"ok: stub tier windowing ({cases} ctxs, {diverged} diverged from full)")
+
+
+def main():
+    rand = random.Random(0xD1A7)
+    check_threshold_zero_fixed(rand)
+    check_bounds_and_prefix(rand)
+    check_threshold_monotone(rand)
+    check_k_for_ratio()
+    check_stub_tiers(rand)
+    print("mirror_dynamic_k: all checks passed")
+
+
+if __name__ == "__main__":
+    main()
