@@ -58,6 +58,7 @@ pub mod pipeline;
 pub mod moe;
 pub mod runtime;
 pub mod serving;
+pub mod lint;
 pub mod eval;
 pub mod quant;
 pub mod data;

@@ -1,0 +1,212 @@
+//! mirror-drift: the cross-validation story as a checked property.
+//!
+//! Every algorithm in this repo that matters is validated twice — once
+//! natively, once by a line-faithful python mirror under `scripts/`.
+//! That only means something while the numeric constants both sides
+//! share (PCG32/FNV hashing, tier-ratio defaults, the k_for_ratio
+//! operating points) actually agree. This rule extracts each registered
+//! constant from its Rust definition and its python mirror and fails
+//! when they diverge, or when either side stops defining it.
+//!
+//! Registered constants must be single, suffix-free numeric literals:
+//! `pub const NAME: T = <literal>;` on the Rust side and a module-level
+//! `NAME = <literal>` assignment on the python side.
+
+use std::path::Path;
+
+use super::lexer::{self, Tok, Token};
+use super::Finding;
+
+/// One shared constant: its name and the two files that must agree.
+pub struct Entry {
+    pub name: &'static str,
+    pub rust: &'static str,
+    pub py: &'static str,
+}
+
+const MIRROR_DYNK: &str = "scripts/mirror_dynamic_k.py";
+
+/// The seeded registry (ISSUE 8): PCG32/splitmix seeding, the FNV
+/// stub-logits hash, default TierRatios, and the paper's k_for_ratio
+/// operating points (75%/25% on N_k = 4 → k = 3/1).
+pub const REGISTRY: &[Entry] = &[
+    Entry { name: "PCG_MULT", rust: "rust/src/util/rng.rs", py: MIRROR_DYNK },
+    Entry { name: "SPLITMIX_GAMMA", rust: "rust/src/util/rng.rs", py: MIRROR_DYNK },
+    Entry { name: "SPLITMIX_MIX1", rust: "rust/src/util/rng.rs", py: MIRROR_DYNK },
+    Entry { name: "SPLITMIX_MIX2", rust: "rust/src/util/rng.rs", py: MIRROR_DYNK },
+    Entry { name: "FNV_OFFSET_BASIS", rust: "rust/src/serving/scheduler.rs", py: MIRROR_DYNK },
+    Entry { name: "FNV_PRIME", rust: "rust/src/serving/scheduler.rs", py: MIRROR_DYNK },
+    Entry { name: "DEFAULT_TIER_FULL", rust: "rust/src/serving/request.rs", py: MIRROR_DYNK },
+    Entry { name: "DEFAULT_TIER_DEGRADED", rust: "rust/src/serving/request.rs", py: MIRROR_DYNK },
+    Entry { name: "PAPER_RATIO_HIGH", rust: "rust/src/moe/gating.rs", py: MIRROR_DYNK },
+    Entry { name: "PAPER_RATIO_LOW", rust: "rust/src/moe/gating.rs", py: MIRROR_DYNK },
+    Entry { name: "PAPER_N_K", rust: "rust/src/moe/gating.rs", py: MIRROR_DYNK },
+    Entry { name: "PAPER_K_HIGH", rust: "rust/src/moe/gating.rs", py: MIRROR_DYNK },
+    Entry { name: "PAPER_K_LOW", rust: "rust/src/moe/gating.rs", py: MIRROR_DYNK },
+];
+
+/// Extracted constant value. Int vs Float is part of the contract:
+/// `1` on one side and `1.0` on the other is drift, not agreement.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Val {
+    Int(i128),
+    Float(f64),
+}
+
+impl std::fmt::Display for Val {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Val::Int(v) => write!(f, "{v}"),
+            Val::Float(v) => write!(f, "{v}"),
+        }
+    }
+}
+
+/// Parse a numeric literal token (underscores stripped; hex or decimal
+/// int, else float). Returns None for suffixed or malformed literals —
+/// registered constants are written suffix-free by contract.
+pub fn parse_num(s: &str) -> Option<Val> {
+    let s = s.replace('_', "");
+    if let Some(hex) = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        return i128::from_str_radix(hex, 16).ok().map(Val::Int);
+    }
+    if s.contains('.') || s.contains('e') || s.contains('E') {
+        return s.parse::<f64>().ok().map(Val::Float);
+    }
+    s.parse::<i128>().ok().map(Val::Int)
+}
+
+/// A numeric literal with optional leading `-` at token index `i`.
+fn num_at(t: &[Token], i: usize) -> Option<Val> {
+    let (neg, j) = if i < t.len() && t[i].is_sym('-') { (true, i + 1) } else { (false, i) };
+    let Tok::Num(s) = &t.get(j)?.tok else { return None };
+    let v = parse_num(s)?;
+    Some(if neg {
+        match v {
+            Val::Int(x) => Val::Int(-x),
+            Val::Float(x) => Val::Float(-x),
+        }
+    } else {
+        v
+    })
+}
+
+/// Find `const NAME … = <literal>` in a Rust token stream.
+pub fn extract_rust(tokens: &[Token], name: &str) -> Option<(usize, Option<Val>)> {
+    for i in 0..tokens.len().saturating_sub(1) {
+        if tokens[i].is_ident("const") && tokens[i + 1].is_ident(name) {
+            let line = tokens[i + 1].line;
+            let mut j = i + 2;
+            while j < tokens.len() && !tokens[j].is_sym('=') && !tokens[j].is_sym(';') {
+                j += 1;
+            }
+            if j < tokens.len() && tokens[j].is_sym('=') {
+                return Some((line, num_at(tokens, j + 1)));
+            }
+            return Some((line, None));
+        }
+    }
+    None
+}
+
+/// Find the module-level `NAME = <literal>` assignment in a python
+/// token stream (`==` comparisons and attribute accesses don't match).
+pub fn extract_py(tokens: &[Token], name: &str) -> Option<(usize, Option<Val>)> {
+    for i in 0..tokens.len().saturating_sub(1) {
+        let assigns = tokens[i].is_ident(name)
+            && tokens[i + 1].is_sym('=')
+            && !matches!(tokens.get(i + 2), Some(t) if t.is_sym('='))
+            && (i == 0 || !tokens[i - 1].is_sym('.'));
+        if assigns {
+            return Some((tokens[i].line, num_at(tokens, i + 2)));
+        }
+    }
+    None
+}
+
+/// Run the drift check over the whole registry. Unreadable files and
+/// missing/unparseable constants are findings, not errors — the gate
+/// must fail loudly, not crash.
+pub fn check(root: &Path) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for e in REGISTRY {
+        let rust_side = match std::fs::read_to_string(root.join(e.rust)) {
+            Ok(src) => extract_rust(&lexer::scan(&src).tokens, e.name),
+            Err(err) => {
+                out.push(Finding::new(
+                    "mirror-drift",
+                    e.rust,
+                    1,
+                    format!("cannot read registered file: {err}"),
+                ));
+                continue;
+            }
+        };
+        let py_side = match std::fs::read_to_string(root.join(e.py)) {
+            Ok(src) => extract_py(&lexer::scan_py(&src).tokens, e.name),
+            Err(err) => {
+                out.push(Finding::new(
+                    "mirror-drift",
+                    e.py,
+                    1,
+                    format!("cannot read registered mirror: {err}"),
+                ));
+                continue;
+            }
+        };
+        let (rl, rv) = match rust_side {
+            Some((line, Some(v))) => (line, v),
+            Some((line, None)) => {
+                out.push(Finding::new(
+                    "mirror-drift",
+                    e.rust,
+                    line,
+                    format!("registered constant {} is not a single numeric literal", e.name),
+                ));
+                continue;
+            }
+            None => {
+                out.push(Finding::new(
+                    "mirror-drift",
+                    e.rust,
+                    1,
+                    format!("registered constant {} not defined here", e.name),
+                ));
+                continue;
+            }
+        };
+        let pv = match py_side {
+            Some((_, Some(v))) => v,
+            Some((line, None)) => {
+                out.push(Finding::new(
+                    "mirror-drift",
+                    e.py,
+                    line,
+                    format!("registered constant {} is not a single numeric literal", e.name),
+                ));
+                continue;
+            }
+            None => {
+                out.push(Finding::new(
+                    "mirror-drift",
+                    e.py,
+                    1,
+                    format!("registered constant {} not defined in the mirror", e.name),
+                ));
+                continue;
+            }
+        };
+        if rv != pv {
+            out.push(Finding::new(
+                "mirror-drift",
+                e.rust,
+                rl,
+                format!(
+                    "{} = {} here but {} in {} — the mirror cross-validation is void",
+                    e.name, rv, pv, e.py
+                ),
+            ));
+        }
+    }
+    out
+}

@@ -1,0 +1,400 @@
+//! Hand-rolled lexers for the lint subsystem (no `syn` — the workspace
+//! vendors its dependencies offline, so the linter must be free-standing).
+//!
+//! [`scan`] tokenizes Rust source into identifiers, numeric literals and
+//! single-character symbols, with every comment and string/char literal
+//! stripped so rules can never fire on prose or fixture text embedded in
+//! string literals. Line-comment text is captured separately (that is
+//! where `lint:` directives live). [`scan_py`] is a python-lite variant
+//! used only by the mirror-drift rule to read `scripts/mirror_*.py`.
+//!
+//! Both are transcribed statement by statement in `scripts/mirror_lint.py`
+//! so the gate runs identically on rustc-less images.
+
+/// One lexical token. Symbols are single characters; multi-character
+/// operators (`::`, `->`) appear as consecutive `Sym` tokens, which is
+/// all the pattern matchers need.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    Ident(String),
+    Num(String),
+    Sym(char),
+}
+
+/// A token tagged with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub line: usize,
+    pub tok: Tok,
+}
+
+impl Token {
+    pub fn is_sym(&self, c: char) -> bool {
+        matches!(self.tok, Tok::Sym(s) if s == c)
+    }
+
+    pub fn is_ident(&self, name: &str) -> bool {
+        matches!(&self.tok, Tok::Ident(s) if s == name)
+    }
+
+    pub fn ident(&self) -> Option<&str> {
+        match &self.tok {
+            Tok::Ident(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+}
+
+/// Lexed file: the code token stream plus the text of every `//` line
+/// comment (doc comments included), in file order.
+pub struct Scan {
+    pub tokens: Vec<Token>,
+    pub comments: Vec<(usize, String)>,
+}
+
+/// Tokenize Rust source. Comments and string/char literal *contents*
+/// never reach the token stream; raw strings (`r#"…"#`), byte strings
+/// and lifetimes are handled so an embedded quote cannot desynchronize
+/// the scan and hide later findings.
+pub fn scan(src: &str) -> Scan {
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let mut tokens: Vec<Token> = Vec::new();
+    let mut comments: Vec<(usize, String)> = Vec::new();
+
+    while i < n {
+        let c = cs[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // `//` line comment (also `///` and `//!` doc comments).
+        if c == '/' && i + 1 < n && cs[i + 1] == '/' {
+            let start = i + 2;
+            let mut j = start;
+            while j < n && cs[j] != '\n' {
+                j += 1;
+            }
+            comments.push((line, cs[start..j].iter().collect()));
+            i = j;
+            continue;
+        }
+        // `/* … */` block comment, nestable per the Rust grammar.
+        if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if cs[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if cs[i] == '/' && i + 1 < n && cs[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if cs[i] == '*' && i + 1 < n && cs[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw / byte string prefixes: r"…", r#"…"#, b"…", br#"…"#, b'…'.
+        if c == 'r' || c == 'b' {
+            let (raw_candidate, mut j) = if c == 'r' {
+                (true, i + 1)
+            } else if i + 1 < n && cs[i + 1] == 'r' {
+                (true, i + 2)
+            } else {
+                (false, i + 1)
+            };
+            if raw_candidate {
+                let mut hashes = 0usize;
+                while j < n && cs[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && cs[j] == '"' {
+                    i = j + 1;
+                    while i < n {
+                        if cs[i] == '\n' {
+                            line += 1;
+                            i += 1;
+                            continue;
+                        }
+                        if cs[i] == '"' {
+                            let mut k = 0usize;
+                            while k < hashes && i + 1 + k < n && cs[i + 1 + k] == '#' {
+                                k += 1;
+                            }
+                            if k == hashes {
+                                i += 1 + hashes;
+                                break;
+                            }
+                        }
+                        i += 1;
+                    }
+                    continue;
+                }
+                // Not a raw string (e.g. an identifier starting with `r`,
+                // or a raw identifier `r#kw`): fall through to ident.
+            } else if j < n && (cs[j] == '"' || cs[j] == '\'') {
+                // Byte string / byte char: normal escape rules.
+                let quote = cs[j];
+                i = j + 1;
+                while i < n {
+                    if cs[i] == '\\' {
+                        if i + 1 < n && cs[i + 1] == '\n' {
+                            line += 1;
+                        }
+                        i += 2;
+                        continue;
+                    }
+                    if cs[i] == '\n' {
+                        line += 1;
+                        i += 1;
+                        continue;
+                    }
+                    if cs[i] == quote {
+                        i += 1;
+                        break;
+                    }
+                    i += 1;
+                }
+                continue;
+            }
+        }
+        // String literal.
+        if c == '"' {
+            i += 1;
+            while i < n {
+                if cs[i] == '\\' {
+                    if i + 1 < n && cs[i + 1] == '\n' {
+                        line += 1;
+                    }
+                    i += 2;
+                    continue;
+                }
+                if cs[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                    continue;
+                }
+                if cs[i] == '"' {
+                    i += 1;
+                    break;
+                }
+                i += 1;
+            }
+            continue;
+        }
+        // Char literal vs lifetime. `'\n'` / `'\''` are escaped chars;
+        // `'a'` is a char iff the character after next is a quote;
+        // otherwise (`'a`, `'static`) it is a lifetime and only the
+        // quote is consumed (the name lexes as a harmless identifier).
+        if c == '\'' {
+            if i + 1 < n && cs[i + 1] == '\\' {
+                i += 3;
+                while i < n && cs[i] != '\'' {
+                    if cs[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+                i += 1;
+                continue;
+            }
+            if i + 2 < n && cs[i + 2] == '\'' && cs[i + 1] != '\'' {
+                i += 3;
+                continue;
+            }
+            i += 1;
+            continue;
+        }
+        // Identifier.
+        if c.is_alphabetic() || c == '_' {
+            let s = i;
+            i += 1;
+            while i < n && (cs[i].is_alphanumeric() || cs[i] == '_') {
+                i += 1;
+            }
+            tokens.push(Token { line, tok: Tok::Ident(cs[s..i].iter().collect()) });
+            continue;
+        }
+        // Numeric literal (tolerant: hex, underscores, float, exponent,
+        // type suffix — drift parsing re-validates the exact shape).
+        if c.is_ascii_digit() {
+            let s = i;
+            let hex = c == '0' && i + 1 < n && (cs[i + 1] == 'x' || cs[i + 1] == 'X');
+            i += 1;
+            while i < n {
+                let d = cs[i];
+                if d.is_alphanumeric() || d == '_' {
+                    i += 1;
+                    if !hex && (d == 'e' || d == 'E') && i < n && (cs[i] == '+' || cs[i] == '-') {
+                        i += 1;
+                    }
+                    continue;
+                }
+                if d == '.' && i + 1 < n && cs[i + 1].is_ascii_digit() {
+                    i += 1;
+                    continue;
+                }
+                break;
+            }
+            tokens.push(Token { line, tok: Tok::Num(cs[s..i].iter().collect()) });
+            continue;
+        }
+        // Anything else is a single-character symbol.
+        tokens.push(Token { line, tok: Tok::Sym(c) });
+        i += 1;
+    }
+
+    Scan { tokens, comments }
+}
+
+/// Tokenize Python source (mirror files only). Handles `#` comments,
+/// single/triple-quoted strings with optional prefix letters (`r`, `f`,
+/// `b`, …); everything else follows the Rust lexer's token model.
+pub fn scan_py(src: &str) -> Scan {
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let mut tokens: Vec<Token> = Vec::new();
+    let mut comments: Vec<(usize, String)> = Vec::new();
+
+    while i < n {
+        let c = cs[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        if c == '#' {
+            let start = i + 1;
+            let mut j = start;
+            while j < n && cs[j] != '\n' {
+                j += 1;
+            }
+            comments.push((line, cs[start..j].iter().collect()));
+            i = j;
+            continue;
+        }
+        if c == '"' || c == '\'' {
+            i = skip_py_string(&cs, i, &mut line);
+            continue;
+        }
+        if c.is_alphabetic() || c == '_' {
+            let s = i;
+            i += 1;
+            while i < n && (cs[i].is_alphanumeric() || cs[i] == '_') {
+                i += 1;
+            }
+            // String prefix (r"…", f'…', rb"…", …): consume the literal.
+            let word: String = cs[s..i].iter().collect();
+            let is_prefix = word.len() <= 2
+                && word.chars().all(|ch| "rRbBuUfF".contains(ch))
+                && i < n
+                && (cs[i] == '"' || cs[i] == '\'');
+            if is_prefix {
+                i = skip_py_string(&cs, i, &mut line);
+                continue;
+            }
+            tokens.push(Token { line, tok: Tok::Ident(word) });
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let s = i;
+            let hex = c == '0' && i + 1 < n && (cs[i + 1] == 'x' || cs[i + 1] == 'X');
+            i += 1;
+            while i < n {
+                let d = cs[i];
+                if d.is_alphanumeric() || d == '_' {
+                    i += 1;
+                    if !hex && (d == 'e' || d == 'E') && i < n && (cs[i] == '+' || cs[i] == '-') {
+                        i += 1;
+                    }
+                    continue;
+                }
+                if d == '.' && i + 1 < n && cs[i + 1].is_ascii_digit() {
+                    i += 1;
+                    continue;
+                }
+                break;
+            }
+            tokens.push(Token { line, tok: Tok::Num(cs[s..i].iter().collect()) });
+            continue;
+        }
+        tokens.push(Token { line, tok: Tok::Sym(c) });
+        i += 1;
+    }
+
+    Scan { tokens, comments }
+}
+
+/// Skip a python string starting at the opening quote `cs[i]`;
+/// returns the index just past the closing quote. Triple quotes span
+/// lines; single quotes terminate at an (unescaped) newline like CPython.
+fn skip_py_string(cs: &[char], mut i: usize, line: &mut usize) -> usize {
+    let n = cs.len();
+    let q = cs[i];
+    let triple = i + 2 < n && cs[i + 1] == q && cs[i + 2] == q;
+    if triple {
+        i += 3;
+        while i < n {
+            if cs[i] == '\n' {
+                *line += 1;
+                i += 1;
+                continue;
+            }
+            if cs[i] == '\\' {
+                if i + 1 < n && cs[i + 1] == '\n' {
+                    *line += 1;
+                }
+                i += 2;
+                continue;
+            }
+            if cs[i] == q && i + 2 < n && cs[i + 1] == q && cs[i + 2] == q {
+                return i + 3;
+            }
+            if cs[i] == q && i + 2 >= n {
+                // Closing triple at EOF without room for the lookahead.
+                return n;
+            }
+            i += 1;
+        }
+        return n;
+    }
+    i += 1;
+    while i < n {
+        if cs[i] == '\\' {
+            if i + 1 < n && cs[i + 1] == '\n' {
+                *line += 1;
+            }
+            i += 2;
+            continue;
+        }
+        if cs[i] == '\n' {
+            // Unterminated single-quoted string: stop at the newline.
+            *line += 1;
+            return i + 1;
+        }
+        if cs[i] == q {
+            return i + 1;
+        }
+        i += 1;
+    }
+    n
+}

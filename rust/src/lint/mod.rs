@@ -1,0 +1,159 @@
+//! `cmoe lint` — the in-repo static-analysis gate.
+//!
+//! PRs 2–7 accumulated written invariants that only runtime property
+//! tests enforced: the injectable Clock seam (PR 6), typed per-request
+//! fault containment (PR 6), the DispatchArena's amortized
+//! zero-allocation claim (PR 2), BTreeMap replay determinism (PR 5),
+//! and the line-faithful python mirrors' bit-exactness story (every
+//! PR). This module turns each into a *static* check over a hand-rolled
+//! token scan ([`lexer`]) — dependency-free because the workspace
+//! vendors its deps offline and `syn` is not among them.
+//!
+//! Rules ([`rules`], [`drift`]):
+//!
+//! * `clock-discipline` — no `Instant::now`/`SystemTime::now` outside
+//!   `serving/clock.rs`; wall-clock reads must route through the seam.
+//! * `panic-discipline` — no `unwrap`/`expect`/`panic!`/`unreachable!`/
+//!   `todo!`/`unimplemented!` in `serving/` and `runtime/`.
+//! * `hot-path-alloc` — no allocating constructs inside fns annotated
+//!   `lint: hot-path` (arena-reuse calls like `push`/`resize` stay
+//!   legal: the contract is amortized zero-allocation).
+//! * `determinism` — no `HashMap`/`HashSet` in `serving/`, `moe/`,
+//!   `pipeline/`; replay determinism requires ordered maps.
+//! * `mirror-drift` — registered numeric constants must agree between
+//!   `rust/src` and the `scripts/mirror_*.py` mirrors.
+//!
+//! Suppression is per-site and must carry prose: an inline comment of
+//! the form `lint: allow(<rule>) — <reason>` on the offending line or
+//! the line above. A missing reason or unknown rule name is itself a
+//! finding (`allow-syntax`), and allow-syntax findings cannot be
+//! allowlisted.
+//!
+//! `scripts/check.sh` runs this as a gate via `cmoe lint`; on
+//! rustc-less images the line-faithful `scripts/mirror_lint.py` runs
+//! the same rules (same lexer, same scopes, same registry) so the gate
+//! executes everywhere.
+
+pub mod drift;
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// One rule violation at a source location.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Finding {
+    pub rule: String,
+    pub path: String,
+    pub line: usize,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn new(rule: &str, path: &str, line: usize, message: String) -> Finding {
+        Finding { rule: rule.to_string(), path: path.to_string(), line, message }
+    }
+}
+
+/// Lint one file's source text under its repo-relative path (forward
+/// slashes). This is the whole per-file pipeline: lex → directives →
+/// rules → allowlist filter. Used directly by the fixture tests.
+pub fn lint_source(path: &str, src: &str) -> Vec<Finding> {
+    let sc = lexer::scan(src);
+    let directives = rules::parse_directives(&sc.comments);
+    let allowed = rules::allowed_lines(&directives);
+    let mut findings = rules::scan_rules(path, &sc, &directives);
+    findings.retain(|f| {
+        f.rule == rules::RULE_ALLOW_SYNTAX
+            || !allowed.get(&f.line).is_some_and(|s| s.contains(&f.rule))
+    });
+    findings
+}
+
+/// Every Rust file the tree-wide lint covers: `rust/src`, `rust/tests`,
+/// `rust/benches` (vendored deps are out of scope — not our code).
+pub fn rust_files(root: &Path) -> Vec<PathBuf> {
+    let mut out = Vec::new();
+    for sub in ["rust/src", "rust/tests", "rust/benches"] {
+        collect_rs(&root.join(sub), &mut out);
+    }
+    out.sort();
+    out
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let p = entry.path();
+        if p.is_dir() {
+            collect_rs(&p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+fn rel_path(root: &Path, file: &Path) -> String {
+    file.strip_prefix(root)
+        .unwrap_or(file)
+        .to_string_lossy()
+        .replace('\\', "/")
+}
+
+/// Lint the whole tree rooted at the repo checkout: every in-scope
+/// Rust file plus the mirror-drift registry. Findings sort by
+/// (path, line, rule) so output is deterministic.
+pub fn lint_tree(root: &Path) -> Result<Vec<Finding>> {
+    let mut out = Vec::new();
+    for file in rust_files(root) {
+        let src = std::fs::read_to_string(&file)
+            .with_context(|| format!("read {}", file.display()))?;
+        out.extend(lint_source(&rel_path(root, &file), &src));
+    }
+    out.extend(drift::check(root));
+    sort_findings(&mut out);
+    Ok(out)
+}
+
+/// Lint an explicit set of files (the `cmoe lint [paths…]` form).
+/// The mirror-drift registry only runs in whole-tree mode — a partial
+/// file list can't answer whether both sides agree.
+pub fn lint_paths(root: &Path, paths: &[String]) -> Result<Vec<Finding>> {
+    let mut out = Vec::new();
+    for p in paths {
+        let file = if Path::new(p).is_absolute() { PathBuf::from(p) } else { root.join(p) };
+        let src = std::fs::read_to_string(&file)
+            .with_context(|| format!("read {}", file.display()))?;
+        out.extend(lint_source(&rel_path(root, &file), &src));
+    }
+    sort_findings(&mut out);
+    Ok(out)
+}
+
+fn sort_findings(out: &mut [Finding]) {
+    out.sort_by(|a, b| {
+        (a.path.as_str(), a.line, a.rule.as_str()).cmp(&(b.path.as_str(), b.line, b.rule.as_str()))
+    });
+}
+
+/// Locate the repo root from the working directory: either the repo
+/// checkout itself or the `rust/` crate dir (where `cargo run` lands).
+pub fn find_root() -> Result<PathBuf> {
+    let cwd = std::env::current_dir().context("current_dir")?;
+    if cwd.join("rust/src").is_dir() {
+        return Ok(cwd);
+    }
+    if let Some(parent) = cwd.parent() {
+        if parent.join("rust/src").is_dir() {
+            return Ok(parent.to_path_buf());
+        }
+    }
+    anyhow::bail!(
+        "cannot locate the repo root (no rust/src under {} or its parent); \
+         run from the checkout or pass --root",
+        cwd.display()
+    )
+}

@@ -1,0 +1,362 @@
+//! The lint rules and the inline-allowlist machinery.
+//!
+//! Every rule is a token-pattern scan over [`lexer::Scan`] output, so
+//! string literals, comments and doc prose can never trigger a finding.
+//! Rules skip `#[cfg(test)]` regions — the panic/clock discipline is a
+//! *serving-path* contract, and tests legitimately unwrap and take wall
+//! time. The hot-path-alloc rule is opt-in per function via a
+//! `lint: hot-path` directive and therefore applies wherever annotated.
+//!
+//! Mirrored statement by statement in `scripts/mirror_lint.py`.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lexer::{Scan, Token};
+use super::Finding;
+
+/// Rule identifiers accepted by `allow(...)` directives.
+pub const KNOWN_RULES: &[&str] = &[
+    "clock-discipline",
+    "panic-discipline",
+    "hot-path-alloc",
+    "determinism",
+    "mirror-drift",
+];
+
+/// Meta-rule for malformed `lint:` directives; not itself allowlistable.
+pub const RULE_ALLOW_SYNTAX: &str = "allow-syntax";
+
+/// A parsed `lint:` directive from a `//` comment.
+#[derive(Debug, Clone)]
+pub enum Directive {
+    /// `allow(<rule>) — <reason>`: suppress `rule` on this line
+    /// and the next.
+    Allow { line: usize, rule: String },
+    /// `hot-path`: the next `fn` body is an allocation-free hot path.
+    HotPath { line: usize },
+    /// Anything else under `lint:` — reported as an allow-syntax finding.
+    Malformed { line: usize, message: String },
+}
+
+/// Parse every `lint:` directive out of the file's line comments.
+/// The directive grammar is deliberately rigid: an unknown rule name or
+/// a missing reason is a malformed directive, not a silent no-op.
+pub fn parse_directives(comments: &[(usize, String)]) -> Vec<Directive> {
+    let mut out = Vec::new();
+    for (line, raw) in comments {
+        // Doc comments capture as `/ …` or `! …`; strip the markers.
+        let t = raw.trim_start_matches(['/', '!']).trim();
+        let Some(body) = t.strip_prefix("lint:") else { continue };
+        let body = body.trim();
+        if body == "hot-path" {
+            out.push(Directive::HotPath { line: *line });
+            continue;
+        }
+        if let Some(rest) = body.strip_prefix("allow(") {
+            let Some(p) = rest.find(')') else {
+                out.push(Directive::Malformed {
+                    line: *line,
+                    message: "unclosed `allow(` directive".to_string(),
+                });
+                continue;
+            };
+            let rule = rest[..p].trim().to_string();
+            let mut reason = rest[p + 1..].trim();
+            // Accept `— reason`, `- reason`, `: reason`; the separator
+            // is cosmetic, the reason is not.
+            while let Some(r) = reason.strip_prefix(['\u{2014}', '\u{2013}', '-', ':', ',']) {
+                reason = r.trim();
+            }
+            if !KNOWN_RULES.contains(&rule.as_str()) {
+                out.push(Directive::Malformed {
+                    line: *line,
+                    message: format!("allow() names unknown rule `{rule}`"),
+                });
+            } else if reason.is_empty() {
+                out.push(Directive::Malformed {
+                    line: *line,
+                    message: format!("allow({rule}) requires a written reason"),
+                });
+            } else {
+                out.push(Directive::Allow { line: *line, rule });
+            }
+            continue;
+        }
+        out.push(Directive::Malformed {
+            line: *line,
+            message: format!("unrecognized lint directive `{body}`"),
+        });
+    }
+    out
+}
+
+/// Lines suppressed per rule: an allow on line L covers findings on
+/// L (trailing comment) and L+1 (comment on its own line above).
+pub fn allowed_lines(directives: &[Directive]) -> BTreeMap<usize, BTreeSet<String>> {
+    let mut map: BTreeMap<usize, BTreeSet<String>> = BTreeMap::new();
+    for d in directives {
+        if let Directive::Allow { line, rule } = d {
+            map.entry(*line).or_default().insert(rule.clone());
+            map.entry(*line + 1).or_default().insert(rule.clone());
+        }
+    }
+    map
+}
+
+/// Token-index ranges covered by `#[cfg(test)] … { … }` items.
+pub fn test_regions(tokens: &[Token]) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 6 < tokens.len() {
+        let is_cfg_test = tokens[i].is_sym('#')
+            && tokens[i + 1].is_sym('[')
+            && tokens[i + 2].is_ident("cfg")
+            && tokens[i + 3].is_sym('(')
+            && tokens[i + 4].is_ident("test")
+            && tokens[i + 5].is_sym(')')
+            && tokens[i + 6].is_sym(']');
+        if is_cfg_test {
+            // The attribute must gate a braced item (`mod tests { … }`);
+            // a `;` before the `{` means it gated a bare item instead.
+            let mut j = i + 7;
+            while j < tokens.len() && !tokens[j].is_sym('{') && !tokens[j].is_sym(';') {
+                j += 1;
+            }
+            if j < tokens.len() && tokens[j].is_sym('{') {
+                let end = match_brace(tokens, j);
+                out.push((j, end));
+                i = end + 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Index of the `}` matching the `{` at `open` (or the last token if
+/// the file is truncated — strings are stripped, so braces balance in
+/// any parseable file).
+fn match_brace(tokens: &[Token], open: usize) -> usize {
+    let mut depth = 0usize;
+    let mut i = open;
+    while i < tokens.len() {
+        if tokens[i].is_sym('{') {
+            depth += 1;
+        } else if tokens[i].is_sym('}') {
+            depth -= 1;
+            if depth == 0 {
+                return i;
+            }
+        }
+        i += 1;
+    }
+    tokens.len().saturating_sub(1)
+}
+
+fn in_regions(regions: &[(usize, usize)], idx: usize) -> bool {
+    regions.iter().any(|&(a, b)| a <= idx && idx <= b)
+}
+
+/// `Ident(a) :: Ident(b)` at token index `i`.
+fn is_path2(t: &[Token], i: usize, a: &str, b: &str) -> bool {
+    i + 3 < t.len()
+        && t[i].is_ident(a)
+        && t[i + 1].is_sym(':')
+        && t[i + 2].is_sym(':')
+        && t[i + 3].is_ident(b)
+}
+
+/// Per-rule file scopes, on repo-relative forward-slash paths.
+pub fn clock_scope(path: &str) -> bool {
+    path.starts_with("rust/src/") && path != "rust/src/serving/clock.rs"
+}
+
+pub fn panic_scope(path: &str) -> bool {
+    path.starts_with("rust/src/serving/") || path.starts_with("rust/src/runtime/")
+}
+
+pub fn determinism_scope(path: &str) -> bool {
+    path.starts_with("rust/src/serving/")
+        || path.starts_with("rust/src/moe/")
+        || path.starts_with("rust/src/pipeline/")
+}
+
+const PANIC_METHODS: &[&str] = &["unwrap", "expect"];
+const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+const ALLOC_METHODS: &[&str] = &["to_vec", "to_owned", "clone", "collect"];
+const ALLOC_PATHS: &[(&str, &str)] = &[
+    ("Vec", "new"),
+    ("Vec", "with_capacity"),
+    ("Box", "new"),
+    ("String", "new"),
+    ("String", "from"),
+    ("String", "with_capacity"),
+];
+const ALLOC_MACROS: &[&str] = &["vec", "format"];
+
+/// Run every token rule on one lexed file; returns raw findings
+/// (allowlist filtering happens in the caller so allow-syntax findings
+/// cannot be suppressed by the very mechanism they police).
+pub fn scan_rules(path: &str, scan: &Scan, directives: &[Directive]) -> Vec<Finding> {
+    let t = &scan.tokens;
+    let tests = test_regions(t);
+    let mut out = Vec::new();
+
+    for d in directives {
+        if let Directive::Malformed { line, message } = d {
+            out.push(Finding::new(RULE_ALLOW_SYNTAX, path, *line, message.clone()));
+        }
+    }
+
+    if clock_scope(path) {
+        for i in 0..t.len() {
+            if in_regions(&tests, i) {
+                continue;
+            }
+            for src in ["Instant", "SystemTime"] {
+                if is_path2(t, i, src, "now") {
+                    out.push(Finding::new(
+                        "clock-discipline",
+                        path,
+                        t[i].line,
+                        format!(
+                            "{src}::now() bypasses the injectable Clock seam \
+                             (route through serving::clock::Clock)"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+
+    if panic_scope(path) {
+        for i in 0..t.len() {
+            if in_regions(&tests, i) {
+                continue;
+            }
+            if i + 2 < t.len() && t[i].is_sym('.') && t[i + 2].is_sym('(') {
+                if let Some(m) = t[i + 1].ident() {
+                    if PANIC_METHODS.contains(&m) {
+                        out.push(Finding::new(
+                            "panic-discipline",
+                            path,
+                            t[i + 1].line,
+                            format!(
+                                ".{m}() can panic the serving process; return a typed \
+                                 error (fault containment promises per-request failures)"
+                            ),
+                        ));
+                    }
+                }
+            }
+            if i + 1 < t.len() && t[i + 1].is_sym('!') {
+                if let Some(m) = t[i].ident() {
+                    if PANIC_MACROS.contains(&m)
+                        && (i == 0 || !t[i - 1].is_sym('.') && !t[i - 1].is_sym('#'))
+                    {
+                        out.push(Finding::new(
+                            "panic-discipline",
+                            path,
+                            t[i].line,
+                            format!(
+                                "{m}! can panic the serving process; return a typed \
+                                 error or allowlist with the unreachability invariant"
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+
+    if determinism_scope(path) {
+        for (i, tok) in t.iter().enumerate() {
+            if in_regions(&tests, i) {
+                continue;
+            }
+            for ty in ["HashMap", "HashSet"] {
+                if tok.is_ident(ty) {
+                    out.push(Finding::new(
+                        "determinism",
+                        path,
+                        tok.line,
+                        format!(
+                            "{ty} iteration order is nondeterministic; replay \
+                             determinism requires BTreeMap/BTreeSet here"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+
+    // hot-path-alloc: only inside bodies annotated `lint: hot-path`.
+    for d in directives {
+        let Directive::HotPath { line } = d else { continue };
+        let Some(fn_idx) = t
+            .iter()
+            .position(|tok| tok.line >= *line && tok.is_ident("fn"))
+        else {
+            out.push(Finding::new(
+                RULE_ALLOW_SYNTAX,
+                path,
+                *line,
+                "hot-path directive does not precede a fn".to_string(),
+            ));
+            continue;
+        };
+        let Some(open) = (fn_idx..t.len()).find(|&j| t[j].is_sym('{')) else {
+            out.push(Finding::new(
+                RULE_ALLOW_SYNTAX,
+                path,
+                *line,
+                "hot-path fn has no body".to_string(),
+            ));
+            continue;
+        };
+        let close = match_brace(t, open);
+        scan_hot_path(path, t, open, close, &mut out);
+    }
+
+    out
+}
+
+/// Scan one annotated fn body for allocating constructs. Deliberately
+/// NOT banned: `push`/`resize`/`clear` — the DispatchArena warm-up
+/// contract is "amortized zero-allocation", and those are exactly the
+/// capacity-reusing calls the arena is built from.
+fn scan_hot_path(path: &str, t: &[Token], open: usize, close: usize, out: &mut Vec<Finding>) {
+    let mut i = open;
+    while i <= close && i < t.len() {
+        for &(a, b) in ALLOC_PATHS {
+            if is_path2(t, i, a, b) {
+                out.push(alloc_finding(path, t[i].line, &format!("{a}::{b}")));
+            }
+        }
+        if i + 1 < t.len() && t[i + 1].is_sym('!') {
+            if let Some(m) = t[i].ident() {
+                if ALLOC_MACROS.contains(&m) && (i == 0 || !t[i - 1].is_sym('#')) {
+                    out.push(alloc_finding(path, t[i].line, &format!("{m}!")));
+                }
+            }
+        }
+        if i + 2 < t.len() && t[i].is_sym('.') && (t[i + 2].is_sym('(') || t[i + 2].is_sym(':')) {
+            if let Some(m) = t[i + 1].ident() {
+                if ALLOC_METHODS.contains(&m) {
+                    out.push(alloc_finding(path, t[i + 1].line, &format!(".{m}()")));
+                }
+            }
+        }
+        i += 1;
+    }
+}
+
+fn alloc_finding(path: &str, line: usize, what: &str) -> Finding {
+    Finding::new(
+        "hot-path-alloc",
+        path,
+        line,
+        format!("{what} allocates inside a `lint: hot-path` fn (arena reuse only)"),
+    )
+}

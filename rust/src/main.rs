@@ -23,7 +23,7 @@ use cmoe::pipeline::{registry, Pipeline};
 use cmoe::util::argparse::Args;
 
 fn main() {
-    let args = Args::from_env(&["verbose", "no-finetune", "prefix-cache"]);
+    let args = Args::from_env(&["verbose", "no-finetune", "prefix-cache", "json"]);
     let code = match run(&args) {
         Ok(()) => 0,
         Err(e) => {
@@ -47,12 +47,13 @@ fn run(args: &Args) -> Result<()> {
         Some("serve") => cmd_serve(args),
         Some("bench") => cmd_bench(args),
         Some("info") => cmd_info(args),
+        Some("lint") => cmd_lint(args),
         Some(other) => {
-            bail!("unknown subcommand '{other}' (try: convert methods profile eval serve bench info)")
+            bail!("unknown subcommand '{other}' (try: convert methods profile eval serve bench info lint)")
         }
         None => {
             println!("cmoe {} — analytical FFN-to-MoE restructuring", cmoe::VERSION);
-            println!("subcommands: convert methods profile eval serve bench info");
+            println!("subcommands: convert methods profile eval serve bench info lint");
             Ok(())
         }
     }
@@ -276,6 +277,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             )
         })
         .collect();
+    // lint: allow(clock-discipline) — CLI-facing wall-clock elapsed report, not serving logic
     let t0 = std::time::Instant::now();
     let results = match sched.as_str() {
         "continuous" => engine.run_queue(reqs)?,
@@ -328,4 +330,33 @@ fn cmd_info(args: &Args) -> Result<()> {
         Err(_) => println!("no artifacts in {dir} (run `make artifacts`)"),
     }
     Ok(())
+}
+
+/// `cmoe lint [--json] [--root DIR] [paths…]` — the static-analysis
+/// gate over the serving stack's written invariants (see `cmoe::lint`).
+/// Exit code 1 when any finding survives the inline allowlist, so
+/// `scripts/check.sh` can use it directly as a gate.
+fn cmd_lint(args: &Args) -> Result<()> {
+    let root = match args.get("root") {
+        Some(dir) => std::path::PathBuf::from(dir),
+        None => cmoe::lint::find_root()?,
+    };
+    let findings = if args.positional.is_empty() {
+        cmoe::lint::lint_tree(&root)?
+    } else {
+        cmoe::lint::lint_paths(&root, &args.positional)?
+    };
+    if args.has("json") {
+        print!("{}", cmoe::lint::report::render_json(&findings));
+    } else {
+        print!("{}", cmoe::lint::report::render_text(&findings));
+    }
+    if findings.is_empty() {
+        if !args.has("json") {
+            println!("cmoe lint: clean");
+        }
+        Ok(())
+    } else {
+        bail!("cmoe lint: {} finding(s)", findings.len())
+    }
 }

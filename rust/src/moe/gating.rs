@@ -107,6 +107,22 @@ pub fn normalized_entropy(p: &[f32]) -> f32 {
     (h / (n as f32).ln()).clamp(0.0, 1.0)
 }
 
+/// The paper's high activation-ratio operating point (75% — lossless
+/// in the paper's Table 1). Mirror-drift registered: `cmoe lint` fails
+/// if `scripts/mirror_dynamic_k.py` disagrees (`lint::drift::REGISTRY`).
+pub const PAPER_RATIO_HIGH: f32 = 0.75;
+/// The paper's low (fast) activation-ratio operating point (25%,
+/// mirror-drift registered).
+pub const PAPER_RATIO_LOW: f32 = 0.25;
+/// The routed-expert count the paper's operating points are quoted on
+/// (mirror-drift registered).
+pub const PAPER_N_K: usize = 4;
+/// `k_for_ratio(PAPER_RATIO_HIGH, PAPER_N_K)` — pinned so the algebra's
+/// operating points can't drift silently (mirror-drift registered).
+pub const PAPER_K_HIGH: usize = 3;
+/// `k_for_ratio(PAPER_RATIO_LOW, PAPER_N_K)` (mirror-drift registered).
+pub const PAPER_K_LOW: usize = 1;
+
 /// Per-row k cap for an activation-ratio operating point (the effort-
 /// tier → compute mapping): a request served at `ratio` of full effort
 /// routes each token to at most `ceil(ratio · k_full)` experts,
@@ -237,6 +253,7 @@ impl GroupedRouting {
     /// Two passes (count, then fill) — no sorting, `O(assignments)`.
     /// Reuses all internal buffers; only grows them when a wave is
     /// larger than anything seen before.
+    // lint: hot-path
     pub fn rebuild(&mut self, n_experts: usize, decisions: &[GateDecision]) {
         self.n_experts = n_experts;
         self.offsets.clear();
@@ -631,8 +648,8 @@ mod tests {
     #[test]
     fn k_for_ratio_operating_points() {
         // the paper's 25% / 75% points over k_full = 4
-        assert_eq!(k_for_ratio(0.25, 4), 1);
-        assert_eq!(k_for_ratio(0.75, 4), 3);
+        assert_eq!(k_for_ratio(PAPER_RATIO_LOW, PAPER_N_K), PAPER_K_LOW);
+        assert_eq!(k_for_ratio(PAPER_RATIO_HIGH, PAPER_N_K), PAPER_K_HIGH);
         // full effort and anything above is exactly k_full
         assert_eq!(k_for_ratio(1.0, 4), 4);
         assert_eq!(k_for_ratio(2.0, 4), 4);

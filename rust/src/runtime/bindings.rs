@@ -56,6 +56,12 @@ impl ModelBuffers {
     pub fn get(&self, name: &str) -> Option<&xla::PjRtBuffer> {
         self.named.get(name)
     }
+
+    /// Required lookup: a missing parameter buffer is a model/artifact
+    /// mismatch, reported as an error instead of a process panic.
+    pub fn req(&self, name: &str) -> Result<&xla::PjRtBuffer> {
+        self.named.get(name).ok_or_else(|| anyhow::anyhow!("missing dense parameter buffer: {name}"))
+    }
 }
 
 fn vec1(v: &[f32]) -> Tensor {
@@ -114,6 +120,12 @@ impl MoeModelBuffers {
 
     pub fn get(&self, name: &str) -> Option<&xla::PjRtBuffer> {
         self.named.get(name)
+    }
+
+    /// Required lookup: a missing parameter buffer is a model/artifact
+    /// mismatch, reported as an error instead of a process panic.
+    pub fn req(&self, name: &str) -> Result<&xla::PjRtBuffer> {
+        self.named.get(name).ok_or_else(|| anyhow::anyhow!("missing MoE parameter buffer: {name}"))
     }
 }
 

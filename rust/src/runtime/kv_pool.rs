@@ -218,6 +218,7 @@ impl KvSlotPool {
             let p = self
                 .pages
                 .try_alloc()
+                // lint: allow(panic-discipline) — documented reserve-first contract: callers check/evict headroom before writing, and worst-case page demand is sized at admission, so exhaustion here is a scheduler accounting bug
                 .expect("kv page pool exhausted — reserve/evict before writing");
             self.slots[slot].table.push(p);
         }
@@ -228,6 +229,7 @@ impl KvSlotPool {
     /// needed.
     pub fn write_token(&mut self, slot: usize, pos: usize, col: &[f32]) {
         self.try_write_token(slot, pos, col)
+            // lint: allow(panic-discipline) — documented reserve-first contract: the fallible try_write_token is the serving-path API; this infallible wrapper is for callers that sized the pool at admission
             .expect("kv page pool exhausted — reserve/evict before writing");
     }
 
@@ -302,6 +304,7 @@ impl KvSlotPool {
             let page = self
                 .pages
                 .try_page_mut(&mut st.table[pi])
+                // lint: allow(panic-discipline) — COW headroom is part of the admission-time reservation (one page per shared page worst case); exhaustion here means the reservation math broke, not a request fault
                 .expect("kv page pool exhausted during COW");
             for lc in 0..self.layers * 2 {
                 for h in 0..heads {
@@ -341,6 +344,7 @@ impl KvSlotPool {
             let page = self
                 .pages
                 .try_page_mut(&mut st.table[pi])
+                // lint: allow(panic-discipline) — COW headroom is part of the admission-time reservation (one page per shared page worst case); exhaustion here means the reservation math broke, not a request fault
                 .expect("kv page pool exhausted during COW");
             for c in 0..2 {
                 for h in 0..heads {

@@ -56,7 +56,7 @@ impl XlaRuntime {
 
     /// Compile (or fetch the cached) executable for an artifact.
     pub fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+        if let Some(exe) = crate::util::lock_unpoisoned(&self.cache).get(name) {
             return Ok(exe.clone());
         }
         let info = self
@@ -72,7 +72,7 @@ impl XlaRuntime {
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile {name}: {e:?}"))?;
         let exe = Arc::new(exe);
-        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        crate::util::lock_unpoisoned(&self.cache).insert(name.to_string(), exe.clone());
         Ok(exe)
     }
 

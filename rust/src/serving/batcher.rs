@@ -175,7 +175,11 @@ impl SubmitOutcome {
 /// non-empty.
 pub fn covering_bucket(buckets: &[usize], n: usize) -> usize {
     debug_assert!(buckets.windows(2).all(|w| w[0] <= w[1]), "buckets must be ascending");
-    *buckets.iter().find(|&&b| n <= b).unwrap_or_else(|| buckets.last().unwrap())
+    match buckets.iter().find(|&&b| n <= b) {
+        Some(&b) => b,
+        // lint: allow(panic-discipline) — documented precondition: `buckets` is non-empty (every caller holds a BatcherConfig::normalized() list, which rejects empty); the panic is the precondition's debug surface, not a request-path failure
+        None => *buckets.last().expect("covering_bucket: empty bucket list"),
+    }
 }
 
 struct Queued {
@@ -268,9 +272,10 @@ impl Batcher {
     /// (error-drain path — exact arrival order).
     pub fn pop_front(&mut self) -> Option<(Request, Instant)> {
         let c = (0..3)
-            .filter(|&c| !self.queues[c].is_empty())
-            .min_by_key(|&c| self.queues[c].front().unwrap().seq)?;
-        let q = self.queues[c].pop_front().unwrap();
+            .filter_map(|c| self.queues[c].front().map(|q| (q.seq, c)))
+            .min()
+            .map(|(_, c)| c)?;
+        let q = self.queues[c].pop_front()?;
         Some((q.req, q.enqueued))
     }
 
@@ -285,12 +290,13 @@ impl Batcher {
     /// fuller first batch.
     fn held(&self, now: Instant) -> bool {
         let n = self.len();
-        if n == 0 {
-            return true;
-        }
-        let max_bucket = *self.cfg.buckets.last().unwrap();
-        n < max_bucket
-            && now.saturating_duration_since(self.oldest().unwrap()) < self.cfg.max_wait
+        let Some(oldest) = self.oldest() else {
+            return true; // empty queue: nothing to release
+        };
+        // normalized() guarantees a non-empty bucket list; usize::MAX
+        // keeps the hold semantics harmless if that ever changes.
+        let max_bucket = self.cfg.buckets.last().copied().unwrap_or(usize::MAX);
+        n < max_bucket && now.saturating_duration_since(oldest) < self.cfg.max_wait
     }
 
     /// Which class queue the next admission comes from at `step`
@@ -337,7 +343,7 @@ impl Batcher {
     /// its arrival step.
     pub fn pop_next(&mut self, step: u64) -> Option<(Request, Instant, u64)> {
         let c = self.next_class(step)?;
-        let q = self.queues[c].pop_front().unwrap();
+        let q = self.queues[c].pop_front()?;
         Some((q.req, q.enqueued, q.arrival_step))
     }
 

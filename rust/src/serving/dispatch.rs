@@ -143,6 +143,7 @@ impl GroupedDispatcher {
     /// outputs into `out` (`out += Σ_e g · E_e(xn)`, Eq. 4's routed
     /// term). `xn: [B, d]` are the normed token states, `routing` the
     /// expert-major assignment lists, `experts` the per-expert weights.
+    // lint: hot-path
     pub fn forward(
         &self,
         xn: &Tensor,
@@ -222,6 +223,7 @@ impl GroupedDispatcher {
 /// expert segments that overlap the band. Each segment is one
 /// [`tensor::swiglu_rows_into`] call on that expert's weights.
 #[allow(clippy::too_many_arguments)]
+// lint: hot-path
 fn run_band(
     xs: &[f32],
     r0: usize,

@@ -227,7 +227,7 @@ impl Engine {
 
     /// Current per-layer load-balance biases (orchestrated mode).
     pub fn current_biases(&self) -> Vec<Vec<f32>> {
-        self.moe_state.lock().unwrap().layers.iter().map(|m| m.gate_bias.clone()).collect()
+        crate::util::lock_unpoisoned(&self.moe_state).layers.iter().map(|m| m.gate_bias.clone()).collect()
     }
 
     pub fn model(&self) -> &ModelWeights {
@@ -297,12 +297,13 @@ impl Engine {
             EngineStepForward::new(self),
             self.cfg.clock.clone(),
         )
+        // lint: allow(panic-discipline) — BatcherConfig::normalized() is re-validated by Engine::new; an invalid config cannot reach here
         .expect("batcher config validated by Engine::new")
     }
 
     /// Record per-request latency metrics for finished results.
     pub(crate) fn record_results(&self, results: &[RequestResult]) {
-        let mut m = self.metrics.lock().unwrap();
+        let mut m = crate::util::lock_unpoisoned(&self.metrics);
         for r in results {
             m.record_request(r.ttft, r.latency);
         }
@@ -316,7 +317,7 @@ impl Engine {
         // delta snapshot: a long-lived server session flushes at every
         // idle, and lifetime counters must not be re-added each time
         let pm = session.take_page_metrics();
-        let mut m = self.metrics.lock().unwrap();
+        let mut m = crate::util::lock_unpoisoned(&self.metrics);
         m.scheduler.merge(&sm);
         if let Some(p) = pm {
             m.pages.merge(&p);
@@ -332,7 +333,8 @@ impl Engine {
     /// continuous-vs-waves benchmark and as the token-identity oracle
     /// — per-request outputs are identical to [`Engine::run_queue`].
     pub fn run_queue_waves(&self, requests: Vec<Request>) -> Result<Vec<RequestResult>> {
-        let mut batcher = Batcher::new(self.cfg.batcher.clone()).context("wave batcher")?;
+        let mut batcher = Batcher::with_clock(self.cfg.batcher.clone(), self.cfg.clock.clone())
+            .context("wave batcher")?;
         for r in requests {
             let _ = batcher.push(r);
         }
@@ -351,7 +353,8 @@ impl Engine {
     /// callers can reuse its allocation for the next wave); on error it
     /// is left intact.
     pub fn generate_wave(&self, wave: &mut Vec<(Request, Instant)>) -> Result<Vec<RequestResult>> {
-        let t_start = Instant::now();
+        let clock = &self.cfg.clock;
+        let t_start = clock.now();
         let n_real = wave.len();
         assert!(n_real > 0);
         let bucket = {
@@ -378,8 +381,13 @@ impl Engine {
                 self.cfg.kv_len
             );
         }
-        let max_prompt = wave.iter().map(|(r, _)| r.prompt.len()).max().unwrap();
-        let s = *lens.iter().find(|&&l| l >= max_prompt).unwrap_or(lens.last().unwrap());
+        let max_prompt = wave.iter().map(|(r, _)| r.prompt.len()).max().unwrap_or(0);
+        let s = lens
+            .iter()
+            .copied()
+            .find(|&l| l >= max_prompt)
+            .or_else(|| lens.last().copied())
+            .ok_or_else(|| anyhow!("no prefill length available"))?;
 
         // tokens [bucket, s]: right-align prompts (pad front with 0 —
         // prefix padding perturbs only the padded positions' logits,
@@ -394,7 +402,7 @@ impl Engine {
         }
 
         // --- prefill ---
-        let t_prefill = Instant::now();
+        let t_prefill = clock.now();
         let cfgm = &self.model.config;
         let v = cfgm.vocab;
         let prefill_name = match self.cfg.mode {
@@ -414,7 +422,7 @@ impl Engine {
         let out = self.rt.execute(&prefill_name, &args).context("prefill")?;
         let logits = self.rt.download(&out[0], &[bucket, s, v])?;
         let mut kv_buf = out.into_iter().nth(1).ok_or_else(|| anyhow!("prefill: no kv"))?;
-        let prefill_time = t_prefill.elapsed();
+        let prefill_time = clock.now().saturating_duration_since(t_prefill);
 
         // --- sample first tokens ---
         let mut rngs: Vec<crate::util::Rng> =
@@ -432,10 +440,10 @@ impl Engine {
                 active[i] = false;
             }
         }
-        let ttft = t_start.elapsed();
+        let ttft = clock.now().saturating_duration_since(t_start);
 
         // --- decode loop ---
-        let t_decode = Instant::now();
+        let t_decode = clock.now();
         let mut pos = s;
         let mut steps = 0usize;
         // orchestrated mode splits kv into per-layer buffers once
@@ -500,10 +508,10 @@ impl Engine {
             pos += 1;
             steps += 1;
         }
-        let decode_time = t_decode.elapsed();
+        let decode_time = clock.now().saturating_duration_since(t_decode);
 
         // --- metrics + results ---
-        let mut m = self.metrics.lock().unwrap();
+        let mut m = crate::util::lock_unpoisoned(&self.metrics);
         m.record_wave(WaveMetrics {
             batch: bucket,
             prompt_tokens: n_real * s,
@@ -513,8 +521,9 @@ impl Engine {
             decode_steps: steps,
         });
         let mut results = Vec::new();
+        let t_end = clock.now();
         for (i, (r, enqueued)) in wave.drain(..).enumerate() {
-            let latency = enqueued.elapsed();
+            let latency = t_end.saturating_duration_since(enqueued);
             m.record_request(ttft, latency);
             results.push(RequestResult {
                 id: r.id,
@@ -568,22 +577,25 @@ impl Engine {
         let out = self.rt.execute(
             &format!("embed_{name}_b{bucket}"),
             &[
-                self.dense_bufs.get("embed").unwrap(),
-                self.dense_bufs.get("pos").unwrap(),
+                self.dense_bufs.req("embed")?,
+                self.dense_bufs.req("pos")?,
                 tok_buf,
                 pos_buf,
             ],
         )?;
         let mut x = self.rt.download(&out[0], &[bucket, d])?;
 
-        let mut state = self.moe_state.lock().unwrap();
+        let mut state = crate::util::lock_unpoisoned(&self.moe_state);
         state.step_tokens.iter_mut().for_each(|v| *v = 0);
         let mut layer_dispatches = 0u64;
         let n_layers = state.layers.len();
         for l in 0..n_layers {
             let p = format!("layers.{l}");
             let mp = format!("moe.{l}");
-            let mb = self.moe_bufs.as_ref().unwrap();
+            let mb = self
+                .moe_bufs
+                .as_ref()
+                .ok_or_else(|| anyhow!("orchestrated mode requires uploaded MoE buffers"))?;
             let n_r0 = state.layers[l].spec.routed();
             let sh = state.layers[l].shared.hidden_dim();
 
@@ -598,17 +610,17 @@ impl Engine {
                     &[
                         &x_buf,
                         &kv_layers[l],
-                        self.dense_bufs.get(&format!("{p}.attn.wq")).unwrap(),
-                        self.dense_bufs.get(&format!("{p}.attn.wk")).unwrap(),
-                        self.dense_bufs.get(&format!("{p}.attn.wv")).unwrap(),
-                        self.dense_bufs.get(&format!("{p}.attn.wo")).unwrap(),
-                        self.dense_bufs.get(&format!("{p}.attn_norm")).unwrap(),
-                        self.dense_bufs.get(&format!("{p}.ffn_norm")).unwrap(),
-                        mb.get(&format!("{mp}.router.w_gate_r")).unwrap(),
-                        mb.get(&format!("{mp}.router.w_up_r")).unwrap(),
-                        mb.get(&format!("{mp}.shared.w_gate")).unwrap(),
-                        mb.get(&format!("{mp}.shared.w_up")).unwrap(),
-                        mb.get(&format!("{mp}.shared.w_down")).unwrap(),
+                        self.dense_bufs.req(&format!("{p}.attn.wq"))?,
+                        self.dense_bufs.req(&format!("{p}.attn.wk"))?,
+                        self.dense_bufs.req(&format!("{p}.attn.wv"))?,
+                        self.dense_bufs.req(&format!("{p}.attn.wo"))?,
+                        self.dense_bufs.req(&format!("{p}.attn_norm"))?,
+                        self.dense_bufs.req(&format!("{p}.ffn_norm"))?,
+                        mb.req(&format!("{mp}.router.w_gate_r"))?,
+                        mb.req(&format!("{mp}.router.w_up_r"))?,
+                        mb.req(&format!("{mp}.shared.w_gate"))?,
+                        mb.req(&format!("{mp}.shared.w_up"))?,
+                        mb.req(&format!("{mp}.shared.w_down"))?,
                         pos_buf,
                     ],
                 )?;
@@ -633,11 +645,11 @@ impl Engine {
                     &[
                         &x_buf,
                         &kv_layers[l],
-                        self.dense_bufs.get(&format!("{p}.attn.wq")).unwrap(),
-                        self.dense_bufs.get(&format!("{p}.attn.wk")).unwrap(),
-                        self.dense_bufs.get(&format!("{p}.attn.wv")).unwrap(),
-                        self.dense_bufs.get(&format!("{p}.attn.wo")).unwrap(),
-                        self.dense_bufs.get(&format!("{p}.attn_norm")).unwrap(),
+                        self.dense_bufs.req(&format!("{p}.attn.wq"))?,
+                        self.dense_bufs.req(&format!("{p}.attn.wk"))?,
+                        self.dense_bufs.req(&format!("{p}.attn.wv"))?,
+                        self.dense_bufs.req(&format!("{p}.attn.wo"))?,
+                        self.dense_bufs.req(&format!("{p}.attn_norm"))?,
                         pos_buf,
                     ],
                 )?;
@@ -650,9 +662,9 @@ impl Engine {
                         &format!("ffn_{name}_h{sh}_b{bucket}"),
                         &[
                             &xn_buf,
-                            mb.get(&format!("{mp}.shared.w_gate")).unwrap(),
-                            mb.get(&format!("{mp}.shared.w_up")).unwrap(),
-                            mb.get(&format!("{mp}.shared.w_down")).unwrap(),
+                            mb.req(&format!("{mp}.shared.w_gate"))?,
+                            mb.req(&format!("{mp}.shared.w_up"))?,
+                            mb.req(&format!("{mp}.shared.w_down"))?,
                         ],
                     )?;
                     self.rt.download(&out[0], &[bucket, d])?
@@ -721,9 +733,9 @@ impl Engine {
                             &format!("experts_{name}_e{n_r}_mm{m}_c{cap}_b{bucket}"),
                             &[
                                 &xs_buf,
-                                mb.get(&format!("{mp}.experts.w_gate")).unwrap(),
-                                mb.get(&format!("{mp}.experts.w_up")).unwrap(),
-                                mb.get(&format!("{mp}.experts.w_down")).unwrap(),
+                                mb.req(&format!("{mp}.experts.w_gate"))?,
+                                mb.req(&format!("{mp}.experts.w_up"))?,
+                                mb.req(&format!("{mp}.experts.w_down"))?,
                             ],
                         )?;
                         let ys = self.rt.download(&out[0], &[n_r, cap, d])?;
@@ -755,7 +767,7 @@ impl Engine {
         // stability is the zero-allocation signal the bench asserts on
         {
             let st = &*state;
-            let mut mtr = self.metrics.lock().unwrap();
+            let mut mtr = crate::util::lock_unpoisoned(&self.metrics);
             mtr.dispatch.record_step(&st.step_tokens, layer_dispatches);
             mtr.dispatch.record_arena(st.arena.high_water_bytes(), st.arena.grow_events());
         }
@@ -767,8 +779,8 @@ impl Engine {
             &format!("logits_{name}_b{bucket}"),
             &[
                 &x_buf,
-                self.dense_bufs.get("final_norm").unwrap(),
-                self.dense_bufs.get("unembed").unwrap(),
+                self.dense_bufs.req("final_norm")?,
+                self.dense_bufs.req("unembed")?,
             ],
         )?;
         self.rt.download(&out[0], &[bucket, v])
@@ -847,6 +859,7 @@ impl<'e> EngineStepForward<'e> {
         let mut buckets = eng.cfg.batcher.buckets.clone();
         buckets.sort_unstable();
         buckets.dedup();
+        // lint: allow(panic-discipline) — BatcherConfig::normalized() rejects empty bucket lists before an Engine exists
         let pool = *buckets.last().expect("engine needs at least one batch bucket");
         let c = &eng.model.config;
         let t = eng.cfg.kv_len;
@@ -1015,14 +1028,21 @@ impl StepForward for EngineStepForward<'_> {
         let mut groups: std::collections::BTreeMap<usize, Vec<(usize, usize)>> =
             std::collections::BTreeMap::new();
         for (idx, (&slot, &p)) in slots.iter().zip(prompts).enumerate() {
-            let s = *lens.iter().find(|&&l| l >= p.len()).unwrap_or(lens.last().unwrap());
+            let s = lens
+                .iter()
+                .copied()
+                .find(|&l| l >= p.len())
+                .or_else(|| lens.last().copied())
+                .ok_or_else(|| anyhow!("no prefill length available"))?;
             groups.entry(s).or_default().push((idx, slot));
         }
         let mut out: Vec<Option<PrefillOutcome>> = (0..slots.len()).map(|_| None).collect();
         for (s, members) in &groups {
             self.prefill_group(*s, members, prompts, &mut out)?;
         }
-        Ok(out.into_iter().map(|o| o.expect("prefill group missed a member")).collect())
+        out.into_iter()
+            .map(|o| o.ok_or_else(|| anyhow!("prefill group missed a member")))
+            .collect()
     }
 
     fn decode(

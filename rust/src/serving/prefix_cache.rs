@@ -191,9 +191,11 @@ fn collect_evictable(
 /// Remove and return the node at `path` (must exist and be a leaf).
 fn remove_path(map: &mut BTreeMap<Vec<usize>, Node>, path: &[Vec<usize>]) -> Node {
     if path.len() == 1 {
+        // lint: allow(panic-discipline) — the path was just collected from a live traversal of this trie under the same &mut borrow, so every segment still exists; vanishing means the trie mutated mid-eviction, which the exclusive borrow rules out
         return map.remove(&path[0]).expect("prefix cache: eviction path vanished");
     }
     remove_path(
+        // lint: allow(panic-discipline) — same invariant as above: path segments come from a live traversal under this exclusive borrow
         &mut map.get_mut(&path[0]).expect("prefix cache: eviction path vanished").children,
         &path[1..],
     )

@@ -108,9 +108,17 @@ pub struct TierRatios {
     pub degraded: f32,
 }
 
+/// Default [`EffortTier::Full`] operating point (mirror-drift
+/// registered: `scripts/mirror_dynamic_k.py` must agree, checked by
+/// `cmoe lint` — see `lint::drift::REGISTRY`).
+pub const DEFAULT_TIER_FULL: f32 = 1.0;
+/// Default [`EffortTier::Degraded`] operating point — the paper's fast
+/// point (mirror-drift registered).
+pub const DEFAULT_TIER_DEGRADED: f32 = 0.25;
+
 impl Default for TierRatios {
     fn default() -> Self {
-        TierRatios { full: 1.0, degraded: 0.25 }
+        TierRatios { full: DEFAULT_TIER_FULL, degraded: DEFAULT_TIER_DEGRADED }
     }
 }
 

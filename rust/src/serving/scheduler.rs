@@ -159,7 +159,11 @@ impl Scheduler {
     pub fn new(buckets: &[usize]) -> Result<Scheduler, ConfigError> {
         let buckets =
             BatcherConfig { buckets: buckets.to_vec(), ..Default::default() }.normalized()?;
-        let pool = *buckets.last().expect("normalized buckets are non-empty");
+        let Some(&pool) = buckets.last() else {
+            // normalized() already rejects empty bucket lists; keep the
+            // typed error rather than a panic if that ever changes.
+            return Err(ConfigError::NoBuckets);
+        };
         Ok(Scheduler {
             buckets,
             slots: (0..pool).map(|_| None).collect(),
@@ -289,10 +293,12 @@ impl Scheduler {
     }
 
     pub fn slot(&self, sid: usize) -> &SlotState {
+        // lint: allow(panic-discipline) — accessor contract: callers pass sids from live_slots()/admit(), which only yield occupied slots; an empty slot here is scheduler-internal corruption, not a request fault
         self.slots[sid].as_ref().expect("scheduler: empty slot")
     }
 
     pub fn slot_mut(&mut self, sid: usize) -> &mut SlotState {
+        // lint: allow(panic-discipline) — accessor contract: callers pass sids from live_slots()/admit(), which only yield occupied slots; an empty slot here is scheduler-internal corruption, not a request fault
         self.slots[sid].as_mut().expect("scheduler: empty slot")
     }
 
@@ -396,6 +402,7 @@ pub trait StepForward {
     /// backend that never returns `Some` from `park` is never asked
     /// to unpark.
     fn unpark(&mut self, _slot: usize, _parked: ParkedSlot) {
+        // lint: allow(panic-discipline) — default-impl invariant: a ParkedSlot only exists if this backend's park() returned Some, and this default park() always returns None, so no ParkedSlot can reach it
         unreachable!("unpark without a matching park — the session only resumes parked KV through the backend that parked it");
     }
 
@@ -1162,15 +1169,22 @@ fn finish(st: SlotState, now: Instant) -> RequestResult {
 // Deterministic stub model (tests, simulations, benches)
 // ---------------------------------------------------------------------------
 
+/// FNV-1a offset basis for the stub-model context hash. Mirror-drift
+/// registered: `scripts/mirror_dynamic_k.py` must agree or `cmoe lint`
+/// fails (see `lint::drift::REGISTRY`).
+pub const FNV_OFFSET_BASIS: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a prime (mirror-drift registered).
+pub const FNV_PRIME: u64 = 0x100_0000_01b3;
+
 /// Deterministic logits for a context: hash the tokens, expand through
 /// the repo Rng. A row depends only on its own context, never on batch
 /// composition — the property that makes scheduler-order bugs visible
 /// as token divergence.
 pub fn stub_logits(ctx: &[usize], vocab: usize) -> Vec<f32> {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325; // FNV-1a offset basis
+    let mut h: u64 = FNV_OFFSET_BASIS;
     for &t in ctx {
         h ^= t as u64;
-        h = h.wrapping_mul(0x100_0000_01b3); // FNV-1a prime
+        h = h.wrapping_mul(FNV_PRIME);
     }
     let mut rng = Rng::new(h ^ vocab as u64);
     (0..vocab).map(|_| rng.f32()).collect()

@@ -44,7 +44,7 @@ use crate::serving::batcher::{ShedLoad, SubmitOutcome};
 use crate::serving::engine::{Engine, EngineConfig};
 use crate::serving::request::{Request, RequestResult};
 use anyhow::Result;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -151,7 +151,7 @@ impl EngineServer {
                 };
                 serve_loop(engine, rx)
             })
-            .expect("spawn engine thread");
+            .map_err(|e| anyhow::anyhow!("spawn engine thread: {e}"))?;
         ready_rx
             .recv()
             .map_err(|_| anyhow::anyhow!("engine thread died during startup"))?
@@ -165,13 +165,13 @@ impl EngineServer {
     pub fn submit(&self, r: Request) -> Ticket {
         let (tx, rx) = channel();
         // if the engine is gone the ticket errors on wait()
-        let _ = self.tx.lock().unwrap().send(Msg::Submit(r, tx));
+        let _ = crate::util::lock_unpoisoned(&self.tx).send(Msg::Submit(r, tx));
         Ticket { rx }
     }
 
     /// Stop the engine after draining queued requests.
     pub fn shutdown(mut self) {
-        let _ = self.tx.lock().unwrap().send(Msg::Shutdown);
+        let _ = crate::util::lock_unpoisoned(&self.tx).send(Msg::Shutdown);
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
@@ -180,7 +180,7 @@ impl EngineServer {
 
 impl Drop for EngineServer {
     fn drop(&mut self) {
-        let _ = self.tx.lock().unwrap().send(Msg::Shutdown);
+        let _ = crate::util::lock_unpoisoned(&self.tx).send(Msg::Shutdown);
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
@@ -189,12 +189,12 @@ impl Drop for EngineServer {
 
 fn serve_loop(engine: Engine, rx: Receiver<Msg>) {
     let mut session = engine.continuous_session();
-    let mut waiters: HashMap<u64, Sender<Result<RequestResult, ServeError>>> = HashMap::new();
+    let mut waiters: BTreeMap<u64, Sender<Result<RequestResult, ServeError>>> = BTreeMap::new();
     let mut draining = false;
     // submit one arrival: shed-load fails the ticket immediately so
     // the queue stays bounded and the caller can back off
     let mut admit = |session: &mut crate::serving::scheduler::ContinuousSession<_>,
-                     waiters: &mut HashMap<u64, Sender<Result<RequestResult, ServeError>>>,
+                     waiters: &mut BTreeMap<u64, Sender<Result<RequestResult, ServeError>>>,
                      r: Request,
                      tx: Sender<Result<RequestResult, ServeError>>| {
         let id = r.id;

@@ -56,6 +56,7 @@ pub fn matmul_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
 /// flat row-major. This is the kernel `matmul_into` runs per thread
 /// band, exposed so the grouped expert dispatcher can drive its own
 /// banding (by tokens-per-expert) while producing bit-identical rows.
+// lint: hot-path
 pub fn matmul_rows(a_rows: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize) {
     assert!(k > 0 && n > 0, "matmul_rows: degenerate dims k={k} n={n}");
     debug_assert_eq!(a_rows.len() % k, 0);
@@ -179,6 +180,7 @@ pub fn swiglu_ffn(x: &Tensor, w_gate: &Tensor, w_up: &Tensor, w_down: &Tensor) -
 /// bit-identical to `swiglu_ffn` on the same row — the property the
 /// grouped expert dispatcher's parity tests rely on. Serial by design:
 /// the caller (dispatcher or pool) owns the parallelism.
+// lint: hot-path
 pub fn swiglu_rows_into(
     x_rows: &[f32],
     w_gate: &Tensor,
@@ -190,8 +192,8 @@ pub fn swiglu_rows_into(
 ) {
     let d = w_gate.shape[0];
     let m = w_gate.shape[1];
-    debug_assert_eq!(w_up.shape, vec![d, m]);
-    debug_assert_eq!(w_down.shape, vec![m, d]);
+    debug_assert_eq!(w_up.shape, [d, m]);
+    debug_assert_eq!(w_down.shape, [m, d]);
     debug_assert_eq!(x_rows.len() % d, 0);
     let rows = x_rows.len() / d;
     let (hidden, up) = (&mut hidden[..rows * m], &mut up[..rows * m]);
@@ -208,6 +210,7 @@ pub fn swiglu_rows_into(
 /// `dst[i,:] = src[idx[i],:]`. `dst` must hold `idx.len() * d` floats.
 /// This is the dispatch-side gather that builds contiguous per-expert
 /// activation blocks out of a wave's token states.
+// lint: hot-path
 pub fn gather_rows(src: &Tensor, idx: &[usize], dst: &mut [f32]) {
     assert_eq!(src.rank(), 2);
     let d = src.shape[1];
@@ -224,6 +227,7 @@ pub fn gather_rows(src: &Tensor, idx: &[usize], dst: &mut [f32]) {
 /// so a token's expert contributions accumulate in ascending-expert
 /// order — the same order `moe_ffn_forward` uses, keeping the two paths
 /// bit-identical.
+// lint: hot-path
 pub fn scatter_add_scaled(src: &[f32], d: usize, idx: &[usize], scale: &[f32], out: &mut Tensor) {
     assert_eq!(out.rank(), 2);
     assert_eq!(out.shape[1], d);

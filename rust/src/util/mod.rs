@@ -18,6 +18,19 @@ pub mod table;
 pub use rng::Rng;
 pub use timer::Timer;
 
+/// Lock a mutex, recovering from poisoning instead of panicking.
+///
+/// The serving stack's fault-containment contract (PR 6) promises that
+/// one failing request never takes down the process. A poisoned mutex
+/// means some thread panicked mid-update; for the state guarded this
+/// way in this crate (metrics counters, gating bias adapters, compiled-
+/// executable caches, channel senders) the data is still structurally
+/// valid and availability beats purity — so we take the guard and keep
+/// serving. Anything needing transactional integrity must not use this.
+pub fn lock_unpoisoned<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 /// Walk up from the current directory to the root of *this* repository
 /// — the first ancestor carrying the CMoE checkout signature
 /// (`ROADMAP.md` next to `rust/Cargo.toml`), so the bench harness can

@@ -30,7 +30,7 @@ where
 {
     for case in 0..cfg.cases {
         let size = 1 + (case * cfg.max_size) / cfg.cases.max(1);
-        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(super::rng::SPLITMIX_GAMMA);
         let mut rng = Rng::new(case_seed);
         if let Err(reason) = prop(&mut rng, size) {
             // try to find a smaller failure by shrinking size

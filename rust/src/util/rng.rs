@@ -12,15 +12,26 @@ pub struct Rng {
     inc: u64,
 }
 
-const PCG_MULT: u64 = 6364136223846793005;
+/// PCG32 LCG multiplier. Registered with the mirror-drift lint rule:
+/// `scripts/mirror_dynamic_k.py` must define the same value, or
+/// `cmoe lint` fails — the python mirrors' bit-exactness claim depends
+/// on these constants agreeing (see `lint::drift::REGISTRY`).
+pub const PCG_MULT: u64 = 6364136223846793005;
+
+/// SplitMix64 golden-gamma increment (mirror-drift registered).
+pub const SPLITMIX_GAMMA: u64 = 0x9E3779B97F4A7C15;
+/// SplitMix64 first mixing multiplier (mirror-drift registered).
+pub const SPLITMIX_MIX1: u64 = 0xBF58476D1CE4E5B9;
+/// SplitMix64 second mixing multiplier (mirror-drift registered).
+pub const SPLITMIX_MIX2: u64 = 0x94D049BB133111EB;
 
 /// SplitMix64 step — used to spread user seeds over the whole state space.
 #[inline]
 pub fn splitmix64(x: &mut u64) -> u64 {
-    *x = x.wrapping_add(0x9E3779B97F4A7C15);
+    *x = x.wrapping_add(SPLITMIX_GAMMA);
     let mut z = *x;
-    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
-    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z = (z ^ (z >> 30)).wrapping_mul(SPLITMIX_MIX1);
+    z = (z ^ (z >> 27)).wrapping_mul(SPLITMIX_MIX2);
     z ^ (z >> 31)
 }
 
@@ -39,7 +50,7 @@ impl Rng {
 
     /// Derive a child generator (for per-thread / per-layer streams).
     pub fn fork(&mut self, tag: u64) -> Rng {
-        let a = self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15);
+        let a = self.next_u64() ^ tag.wrapping_mul(SPLITMIX_GAMMA);
         Rng::new(a)
     }
 

@@ -1,5 +1,11 @@
 //! Wall-clock timing helpers used by the conversion report, metrics and
 //! the bench harness.
+//!
+//! This module is the measurement core of the in-repo criterion
+//! replacement: wall time IS the quantity under study, so its
+//! `Instant::now` calls carry clock-discipline allows instead of going
+//! through the serving `Clock` seam (which exists to make *serving*
+//! latency logic testable, not to virtualize benchmarks).
 
 use std::time::{Duration, Instant};
 
@@ -12,6 +18,7 @@ pub struct Timer {
 
 impl Timer {
     pub fn start() -> Self {
+        // lint: allow(clock-discipline) — bench/report timer: wall time is the measurand
         let now = Instant::now();
         Timer { start: now, last: now }
     }
@@ -23,6 +30,7 @@ impl Timer {
 
     /// Time since the previous `lap()` (or construction).
     pub fn lap(&mut self) -> Duration {
+        // lint: allow(clock-discipline) — bench/report timer: wall time is the measurand
         let now = Instant::now();
         let d = now - self.last;
         self.last = now;
@@ -35,8 +43,10 @@ impl Timer {
 /// in-repo criterion replacement (see `bench_harness::runner`).
 pub fn measure<F: FnMut()>(mut f: F, min_iters: usize, min_time: Duration) -> Vec<Duration> {
     let mut samples = Vec::new();
+    // lint: allow(clock-discipline) — bench measurement loop: wall time is the measurand
     let t0 = Instant::now();
     loop {
+        // lint: allow(clock-discipline) — bench measurement loop: wall time is the measurand
         let s = Instant::now();
         f();
         samples.push(s.elapsed());

@@ -1,0 +1,165 @@
+//! `cmoe lint` rule fixtures: every rule fires on a seeded violation,
+//! the inline allowlist suppresses with a written reason (and only
+//! with one), the JSON report round-trips through `util::json`, and —
+//! the gate itself — the real tree lints clean.
+//!
+//! The fixtures live in string literals, which the lint lexer strips
+//! before any rule runs, so this file cannot pollute the tree-wide
+//! self-check it performs. `scripts/mirror_lint.py::self_test` carries
+//! the same fixtures for rustc-less images; keep the two in step.
+
+use cmoe::lint::{lint_source, report, rules, Finding};
+use cmoe::util::json::Json;
+use std::path::Path;
+
+const SERVING: &str = "rust/src/serving/fixture.rs";
+
+fn rules_of(findings: &[Finding]) -> Vec<&str> {
+    let mut r: Vec<&str> = findings.iter().map(|f| f.rule.as_str()).collect();
+    r.sort_unstable();
+    r.dedup();
+    r
+}
+
+// ---------------------------------------------------------------- clock
+
+#[test]
+fn clock_discipline_fires_on_instant_now() {
+    let fix = "fn f() { let t = std::time::Instant::now(); }\n";
+    let got = lint_source(SERVING, fix);
+    assert_eq!(rules_of(&got), ["clock-discipline"], "{got:?}");
+    assert_eq!(got[0].line, 1);
+}
+
+#[test]
+fn clock_discipline_fires_on_system_time() {
+    let got = lint_source(SERVING, "fn f() { let t = SystemTime::now(); }\n");
+    assert_eq!(rules_of(&got), ["clock-discipline"], "{got:?}");
+}
+
+#[test]
+fn clock_discipline_silent_in_clock_rs_and_tests() {
+    let fix = "fn f() { let t = std::time::Instant::now(); }\n";
+    assert!(lint_source("rust/src/serving/clock.rs", fix).is_empty());
+    assert!(lint_source("rust/tests/fixture.rs", fix).is_empty());
+}
+
+// ---------------------------------------------------------------- panic
+
+#[test]
+fn panic_discipline_fires_in_serving_and_runtime() {
+    let fix = "fn f(x: Option<u8>) -> u8 { x.unwrap() }\n";
+    let got = lint_source(SERVING, fix);
+    assert_eq!(rules_of(&got), ["panic-discipline"], "{got:?}");
+    let got = lint_source("rust/src/runtime/fixture.rs", "fn f() { unreachable!(\"no\") }\n");
+    assert_eq!(rules_of(&got), ["panic-discipline"], "{got:?}");
+}
+
+#[test]
+fn panic_discipline_out_of_scope_and_cfg_test() {
+    let fix = "fn f(x: Option<u8>) -> u8 { x.unwrap() }\n";
+    assert!(lint_source("rust/src/moe/fixture.rs", fix).is_empty());
+    let in_tests =
+        "#[cfg(test)]\nmod tests {\n    fn f(x: Option<u8>) -> u8 { x.unwrap() }\n}\n";
+    assert!(lint_source(SERVING, in_tests).is_empty());
+}
+
+// ---------------------------------------------------------- determinism
+
+#[test]
+fn determinism_fires_on_hashmap_in_scope_only() {
+    let fix = "use std::collections::HashMap;\n";
+    let got = lint_source(SERVING, fix);
+    assert_eq!(rules_of(&got), ["determinism"], "{got:?}");
+    assert!(lint_source("rust/src/util/fixture.rs", fix).is_empty());
+}
+
+// ------------------------------------------------------------- hot path
+
+#[test]
+fn hot_path_alloc_fires_inside_annotated_fn() {
+    let fix = "// lint: hot-path\nfn f() -> Vec<u8> { vec![0u8].to_vec() }\n";
+    let got = lint_source("rust/src/moe/fixture.rs", fix);
+    assert_eq!(rules_of(&got), ["hot-path-alloc"], "{got:?}");
+    assert_eq!(got.len(), 2, "vec![…] and .to_vec(): {got:?}");
+}
+
+#[test]
+fn hot_path_alloc_silent_without_annotation() {
+    let fix = "fn f() -> Vec<u8> { vec![0u8].to_vec() }\n";
+    assert!(lint_source("rust/src/moe/fixture.rs", fix).is_empty());
+}
+
+// ------------------------------------------------------------ allowlist
+
+#[test]
+fn allow_with_reason_suppresses() {
+    let fix = "// lint: allow(clock-discipline) — fixture: wall-clock is the point here\n\
+               fn f() { let t = std::time::Instant::now(); }\n";
+    assert!(lint_source(SERVING, fix).is_empty());
+}
+
+#[test]
+fn allow_without_reason_is_rejected() {
+    let fix = "// lint: allow(clock-discipline)\n\
+               fn f() { let t = std::time::Instant::now(); }\n";
+    let got = lint_source(SERVING, fix);
+    // the violation stays AND the bad directive is its own finding
+    assert_eq!(rules_of(&got), [rules::RULE_ALLOW_SYNTAX, "clock-discipline"], "{got:?}");
+}
+
+#[test]
+fn allow_of_unknown_rule_is_rejected() {
+    let got = lint_source(SERVING, "// lint: allow(no-such-rule) — whatever\nfn f() {}\n");
+    assert_eq!(rules_of(&got), [rules::RULE_ALLOW_SYNTAX], "{got:?}");
+}
+
+// -------------------------------------------------------------- lexing
+
+#[test]
+fn string_literals_are_invisible() {
+    let fix = "fn f() -> &'static str { \"Instant::now() .unwrap()\" }\n";
+    assert!(lint_source(SERVING, fix).is_empty());
+}
+
+// ------------------------------------------------------- json reporting
+
+#[test]
+fn json_report_round_trips() {
+    let fix = "fn f() { let t = std::time::Instant::now(); }\n";
+    let findings = lint_source(SERVING, fix);
+    assert_eq!(findings.len(), 1);
+    let txt = report::render_json(&findings);
+    let j = Json::parse(&txt).expect("render_json must emit valid json");
+    assert_eq!(j.get("count").as_usize(), Some(1));
+    let arr = j.get("findings").as_arr().expect("findings array");
+    assert_eq!(arr.len(), 1);
+    assert_eq!(arr[0].get("rule").as_str(), Some("clock-discipline"));
+    assert_eq!(arr[0].get("path").as_str(), Some(SERVING));
+    assert_eq!(arr[0].get("line").as_usize(), Some(1));
+    assert_eq!(arr[0].get("message").as_str(), Some(findings[0].message.as_str()));
+}
+
+#[test]
+fn json_report_escapes_quotes() {
+    let f = Finding::new("determinism", "a/b.rs", 3, "bad \"quote\"\n".to_string());
+    let j = Json::parse(&report::render_json(&[f])).expect("valid json");
+    assert_eq!(j.get("findings").as_arr().unwrap()[0].get("message").as_str(),
+        Some("bad \"quote\"\n"));
+}
+
+// ------------------------------------------------------ the gate itself
+
+/// The real tree must lint clean — this is the same check
+/// `scripts/check.sh` runs via `cmoe lint`, pinned here so a plain
+/// `cargo test` catches a violation even when check.sh isn't run.
+#[test]
+fn real_tree_lints_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).parent().expect("repo root").to_path_buf();
+    let findings = cmoe::lint::lint_tree(&root).expect("lint_tree");
+    assert!(
+        findings.is_empty(),
+        "tree has lint findings:\n{}",
+        report::render_text(&findings)
+    );
+}

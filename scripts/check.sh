@@ -43,6 +43,13 @@ cd "$repo/rust"
 echo "==> cargo build --release"
 cargo build --release
 
+# Static invariant gate first — it is the cheapest check and its
+# failures (stray Instant::now, unwrap in serving/, mirror drift) are
+# the ones most likely to slip through a green test run. The python
+# twin of this step is scripts/mirror_lint.py (same rules, same lexer).
+echo "==> cmoe lint (static invariant gate)"
+cargo run --release --quiet -- lint
+
 echo "==> cargo test -q"
 cargo test -q
 

@@ -51,14 +51,32 @@ F32 = np.float32
 # ---------------------------------------------------------------------------
 
 MASK64 = (1 << 64) - 1
-PCG_MULT = 6364136223846793005
+
+# Shared numeric constants, registered with the mirror-drift rule of
+# `cmoe lint` / scripts/mirror_lint.py: each NAME below must define the
+# same value as its rust counterpart (lint/drift.rs REGISTRY names the
+# file pairs), or the lint gate fails. That turns this mirror's
+# bit-exactness story from convention into a checked property.
+PCG_MULT = 6364136223846793005  # rust/src/util/rng.rs
+SPLITMIX_GAMMA = 0x9E3779B97F4A7C15  # rust/src/util/rng.rs
+SPLITMIX_MIX1 = 0xBF58476D1CE4E5B9  # rust/src/util/rng.rs
+SPLITMIX_MIX2 = 0x94D049BB133111EB  # rust/src/util/rng.rs
+FNV_OFFSET_BASIS = 0xCBF29CE484222325  # rust/src/serving/scheduler.rs
+FNV_PRIME = 0x100000001B3  # rust/src/serving/scheduler.rs
+DEFAULT_TIER_FULL = 1.0  # rust/src/serving/request.rs
+DEFAULT_TIER_DEGRADED = 0.25  # rust/src/serving/request.rs
+PAPER_RATIO_HIGH = 0.75  # rust/src/moe/gating.rs
+PAPER_RATIO_LOW = 0.25  # rust/src/moe/gating.rs
+PAPER_N_K = 4  # rust/src/moe/gating.rs
+PAPER_K_HIGH = 3  # rust/src/moe/gating.rs
+PAPER_K_LOW = 1  # rust/src/moe/gating.rs
 
 
 def _splitmix64(x):
-    x = (x + 0x9E3779B97F4A7C15) & MASK64
+    x = (x + SPLITMIX_GAMMA) & MASK64
     z = x
-    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
-    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+    z = ((z ^ (z >> 30)) * SPLITMIX_MIX1) & MASK64
+    z = ((z ^ (z >> 27)) * SPLITMIX_MIX2) & MASK64
     return x, z ^ (z >> 31)
 
 
@@ -169,10 +187,10 @@ def select_experts(scores_row, gate_bias, dk, n_k, cap=None):
 
 
 def stub_logits(ctx, vocab):
-    h = 0xCBF29CE484222325
+    h = FNV_OFFSET_BASIS
     for t in ctx:
         h ^= t & MASK64
-        h = (h * 0x100000001B3) & MASK64
+        h = (h * FNV_PRIME) & MASK64
     rng = Rng(h ^ vocab)
     return [rng.f32() for _ in range(vocab)]
 
@@ -239,7 +257,8 @@ def check_threshold_monotone(rand, cases=200):
 
 
 def check_k_for_ratio():
-    assert k_for_ratio(0.75, 4) == 3 and k_for_ratio(0.25, 4) == 1
+    assert k_for_ratio(PAPER_RATIO_HIGH, PAPER_N_K) == PAPER_K_HIGH
+    assert k_for_ratio(PAPER_RATIO_LOW, PAPER_N_K) == PAPER_K_LOW
     assert k_for_ratio(1.0, 4) == 4 and k_for_ratio(2.0, 4) == 4
     assert k_for_ratio(float("nan"), 4) == 4
     assert k_for_ratio(0.0, 4) == 1 and k_for_ratio(-1.0, 4) == 1
@@ -261,9 +280,9 @@ def check_stub_tiers(rand, cases=300):
         ctx = [rand.randint(0, 99) for _ in range(n)]
         vocab = rand.randint(2, 31)
         full = stub_logits(ctx, vocab)
-        for r in (1.0, 1.5, float("nan")):
+        for r in (DEFAULT_TIER_FULL, 1.5, float("nan")):
             assert stub_logits_at(ctx, vocab, r) == full, "full effort not exact"
-        ratio = rand.choice([0.25, 0.5, 0.75])
+        ratio = rand.choice([DEFAULT_TIER_DEGRADED, 0.5, PAPER_RATIO_HIGH])
         a = stub_logits_at(ctx, vocab, ratio)
         assert a == stub_logits_at(ctx, vocab, ratio), "not pure in (ctx, ratio)"
         w = max(1, min(int(math.ceil(ratio * n)), n))

@@ -1,0 +1,906 @@
+#!/usr/bin/env python3
+"""Line-faithful python mirror of the `cmoe lint` static-analysis gate.
+
+`scripts/check.sh` runs this as the fallback gate when no rust
+toolchain is on PATH (the repo's historical situation — see the
+ROADMAP's standing caveat). Every function transcribes its rust
+counterpart statement by statement, so a behavioral disagreement is a
+bug in one of the two, not a modeling artifact:
+
+  scan / scan_py        <- rust/src/lint/lexer.rs   scan, scan_py
+  parse_directives      <- rust/src/lint/rules.rs   parse_directives
+  allowed_lines         <- rust/src/lint/rules.rs   allowed_lines
+  test_regions          <- rust/src/lint/rules.rs   test_regions
+  scan_rules            <- rust/src/lint/rules.rs   scan_rules
+  REGISTRY / check_drift<- rust/src/lint/drift.rs   REGISTRY, check
+  lint_source/lint_tree <- rust/src/lint/mod.rs     lint_source, lint_tree
+
+Run modes:
+
+  1. with no arguments: fixture self-tests (each rule fires on a
+     known-bad snippet, the allowlist suppresses with a reason and
+     rejects without one), then the full-tree lint. Exits nonzero and
+     prints findings if the tree is not clean — this IS the gate on
+     rustc-less images.
+  2. `--self-test-only`: just the fixtures (used by debugging).
+
+The five rules and their scopes are documented in
+docs/ARCHITECTURE.md ("Static invariants") and rust/src/lint/mod.rs.
+"""
+
+import os
+import sys
+
+# ---------------------------------------------------------------------------
+# rust/src/lint/lexer.rs — token model: (line, kind, value)
+#   kind "ident"/"num": value is the text; kind "sym": value is one char
+# ---------------------------------------------------------------------------
+
+
+def _is_ident_start(c):
+    return c.isalpha() or c == "_"
+
+
+def _is_ident_cont(c):
+    return c.isalnum() or c == "_"
+
+
+def scan(src):
+    """Tokenize rust source; returns (tokens, comments).
+
+    tokens: list of (line, kind, value) with comments and string/char
+    literal contents stripped. comments: list of (line, text) for every
+    `//` line comment.
+    """
+    cs = src
+    n = len(cs)
+    i = 0
+    line = 1
+    tokens = []
+    comments = []
+    while i < n:
+        c = cs[i]
+        if c == "\n":
+            line += 1
+            i += 1
+            continue
+        if c.isspace():
+            i += 1
+            continue
+        if c == "/" and i + 1 < n and cs[i + 1] == "/":
+            start = i + 2
+            j = start
+            while j < n and cs[j] != "\n":
+                j += 1
+            comments.append((line, cs[start:j]))
+            i = j
+            continue
+        if c == "/" and i + 1 < n and cs[i + 1] == "*":
+            depth = 1
+            i += 2
+            while i < n and depth > 0:
+                if cs[i] == "\n":
+                    line += 1
+                    i += 1
+                elif cs[i] == "/" and i + 1 < n and cs[i + 1] == "*":
+                    depth += 1
+                    i += 2
+                elif cs[i] == "*" and i + 1 < n and cs[i + 1] == "/":
+                    depth -= 1
+                    i += 2
+                else:
+                    i += 1
+            continue
+        if c in ("r", "b"):
+            if c == "r":
+                raw_candidate, j = True, i + 1
+            elif i + 1 < n and cs[i + 1] == "r":
+                raw_candidate, j = True, i + 2
+            else:
+                raw_candidate, j = False, i + 1
+            if raw_candidate:
+                hashes = 0
+                while j < n and cs[j] == "#":
+                    hashes += 1
+                    j += 1
+                if j < n and cs[j] == '"':
+                    i = j + 1
+                    while i < n:
+                        if cs[i] == "\n":
+                            line += 1
+                            i += 1
+                            continue
+                        if cs[i] == '"':
+                            k = 0
+                            while k < hashes and i + 1 + k < n and cs[i + 1 + k] == "#":
+                                k += 1
+                            if k == hashes:
+                                i += 1 + hashes
+                                break
+                        i += 1
+                    continue
+                # not a raw string — fall through to identifier
+            elif j < n and (cs[j] == '"' or cs[j] == "'"):
+                quote = cs[j]
+                i = j + 1
+                while i < n:
+                    if cs[i] == "\\":
+                        if i + 1 < n and cs[i + 1] == "\n":
+                            line += 1
+                        i += 2
+                        continue
+                    if cs[i] == "\n":
+                        line += 1
+                        i += 1
+                        continue
+                    if cs[i] == quote:
+                        i += 1
+                        break
+                    i += 1
+                continue
+        if c == '"':
+            i += 1
+            while i < n:
+                if cs[i] == "\\":
+                    if i + 1 < n and cs[i + 1] == "\n":
+                        line += 1
+                    i += 2
+                    continue
+                if cs[i] == "\n":
+                    line += 1
+                    i += 1
+                    continue
+                if cs[i] == '"':
+                    i += 1
+                    break
+                i += 1
+            continue
+        if c == "'":
+            if i + 1 < n and cs[i + 1] == "\\":
+                i += 3
+                while i < n and cs[i] != "'":
+                    if cs[i] == "\n":
+                        line += 1
+                    i += 1
+                i += 1
+                continue
+            if i + 2 < n and cs[i + 2] == "'" and cs[i + 1] != "'":
+                i += 3
+                continue
+            i += 1
+            continue
+        if _is_ident_start(c):
+            s = i
+            i += 1
+            while i < n and _is_ident_cont(cs[i]):
+                i += 1
+            tokens.append((line, "ident", cs[s:i]))
+            continue
+        if c.isdigit():
+            s = i
+            hexlit = c == "0" and i + 1 < n and cs[i + 1] in ("x", "X")
+            i += 1
+            while i < n:
+                d = cs[i]
+                if d.isalnum() or d == "_":
+                    i += 1
+                    if (
+                        not hexlit
+                        and d in ("e", "E")
+                        and i < n
+                        and cs[i] in ("+", "-")
+                    ):
+                        i += 1
+                    continue
+                if d == "." and i + 1 < n and cs[i + 1].isdigit():
+                    i += 1
+                    continue
+                break
+            tokens.append((line, "num", cs[s:i]))
+            continue
+        tokens.append((line, "sym", c))
+        i += 1
+    return tokens, comments
+
+
+def _skip_py_string(cs, i, line):
+    """Mirror of lexer.rs skip_py_string; returns (next_index, line)."""
+    n = len(cs)
+    q = cs[i]
+    triple = i + 2 < n and cs[i + 1] == q and cs[i + 2] == q
+    if triple:
+        i += 3
+        while i < n:
+            if cs[i] == "\n":
+                line += 1
+                i += 1
+                continue
+            if cs[i] == "\\":
+                if i + 1 < n and cs[i + 1] == "\n":
+                    line += 1
+                i += 2
+                continue
+            if cs[i] == q and i + 2 < n and cs[i + 1] == q and cs[i + 2] == q:
+                return i + 3, line
+            if cs[i] == q and i + 2 >= n:
+                return n, line
+            i += 1
+        return n, line
+    i += 1
+    while i < n:
+        if cs[i] == "\\":
+            if i + 1 < n and cs[i + 1] == "\n":
+                line += 1
+            i += 2
+            continue
+        if cs[i] == "\n":
+            line += 1
+            return i + 1, line
+        if cs[i] == q:
+            return i + 1, line
+        i += 1
+    return n, line
+
+
+def scan_py(src):
+    """Python-lite tokenizer (mirror-drift only); mirrors lexer.rs scan_py."""
+    cs = src
+    n = len(cs)
+    i = 0
+    line = 1
+    tokens = []
+    comments = []
+    while i < n:
+        c = cs[i]
+        if c == "\n":
+            line += 1
+            i += 1
+            continue
+        if c.isspace():
+            i += 1
+            continue
+        if c == "#":
+            start = i + 1
+            j = start
+            while j < n and cs[j] != "\n":
+                j += 1
+            comments.append((line, cs[start:j]))
+            i = j
+            continue
+        if c == '"' or c == "'":
+            i, line = _skip_py_string(cs, i, line)
+            continue
+        if _is_ident_start(c):
+            s = i
+            i += 1
+            while i < n and _is_ident_cont(cs[i]):
+                i += 1
+            word = cs[s:i]
+            is_prefix = (
+                len(word) <= 2
+                and all(ch in "rRbBuUfF" for ch in word)
+                and i < n
+                and (cs[i] == '"' or cs[i] == "'")
+            )
+            if is_prefix:
+                i, line = _skip_py_string(cs, i, line)
+                continue
+            tokens.append((line, "ident", word))
+            continue
+        if c.isdigit():
+            s = i
+            hexlit = c == "0" and i + 1 < n and cs[i + 1] in ("x", "X")
+            i += 1
+            while i < n:
+                d = cs[i]
+                if d.isalnum() or d == "_":
+                    i += 1
+                    if (
+                        not hexlit
+                        and d in ("e", "E")
+                        and i < n
+                        and cs[i] in ("+", "-")
+                    ):
+                        i += 1
+                    continue
+                if d == "." and i + 1 < n and cs[i + 1].isdigit():
+                    i += 1
+                    continue
+                break
+            tokens.append((line, "num", cs[s:i]))
+            continue
+        tokens.append((line, "sym", c))
+        i += 1
+    return tokens, comments
+
+
+# ---------------------------------------------------------------------------
+# rust/src/lint/rules.rs — directives, scopes, token rules
+# ---------------------------------------------------------------------------
+
+KNOWN_RULES = [
+    "clock-discipline",
+    "panic-discipline",
+    "hot-path-alloc",
+    "determinism",
+    "mirror-drift",
+]
+RULE_ALLOW_SYNTAX = "allow-syntax"
+
+LINT_PREFIX = "lint:"  # kept out of comment position so self-lint stays clean
+ALLOW_OPEN = "allow("
+
+
+def _is_sym(t, c):
+    return t[1] == "sym" and t[2] == c
+
+
+def _is_ident(t, name):
+    return t[1] == "ident" and t[2] == name
+
+
+def _ident(t):
+    return t[2] if t[1] == "ident" else None
+
+
+def parse_directives(comments):
+    """Each directive: ("allow", line, rule) | ("hot-path", line)
+    | ("malformed", line, message)."""
+    out = []
+    for line, raw in comments:
+        t = raw.lstrip("/!").strip()
+        if not t.startswith(LINT_PREFIX):
+            continue
+        body = t[len(LINT_PREFIX):].strip()
+        if body == "hot-path":
+            out.append(("hot-path", line))
+            continue
+        if body.startswith(ALLOW_OPEN):
+            rest = body[len(ALLOW_OPEN):]
+            p = rest.find(")")
+            if p < 0:
+                out.append(("malformed", line, "unclosed `allow(` directive"))
+                continue
+            rule = rest[:p].strip()
+            reason = rest[p + 1:].strip()
+            while reason[:1] in ("—", "–", "-", ":", ","):
+                reason = reason[1:].strip()
+            if rule not in KNOWN_RULES:
+                out.append(("malformed", line, "allow() names unknown rule `%s`" % rule))
+            elif not reason:
+                out.append(
+                    ("malformed", line, "allow(%s) requires a written reason" % rule)
+                )
+            else:
+                out.append(("allow", line, rule))
+            continue
+        out.append(("malformed", line, "unrecognized lint directive `%s`" % body))
+    return out
+
+
+def allowed_lines(directives):
+    out = {}
+    for d in directives:
+        if d[0] == "allow":
+            _, line, rule = d
+            out.setdefault(line, set()).add(rule)
+            out.setdefault(line + 1, set()).add(rule)
+    return out
+
+
+def match_brace(tokens, opening):
+    depth = 0
+    i = opening
+    while i < len(tokens):
+        if _is_sym(tokens[i], "{"):
+            depth += 1
+        elif _is_sym(tokens[i], "}"):
+            depth -= 1
+            if depth == 0:
+                return i
+        i += 1
+    return max(len(tokens) - 1, 0)
+
+
+def test_regions(tokens):
+    out = []
+    i = 0
+    while i + 6 < len(tokens):
+        is_cfg_test = (
+            _is_sym(tokens[i], "#")
+            and _is_sym(tokens[i + 1], "[")
+            and _is_ident(tokens[i + 2], "cfg")
+            and _is_sym(tokens[i + 3], "(")
+            and _is_ident(tokens[i + 4], "test")
+            and _is_sym(tokens[i + 5], ")")
+            and _is_sym(tokens[i + 6], "]")
+        )
+        if is_cfg_test:
+            j = i + 7
+            while (
+                j < len(tokens)
+                and not _is_sym(tokens[j], "{")
+                and not _is_sym(tokens[j], ";")
+            ):
+                j += 1
+            if j < len(tokens) and _is_sym(tokens[j], "{"):
+                end = match_brace(tokens, j)
+                out.append((j, end))
+                i = end + 1
+                continue
+        i += 1
+    return out
+
+
+def _in_regions(regions, idx):
+    return any(a <= idx <= b for a, b in regions)
+
+
+def _is_path2(t, i, a, b):
+    return (
+        i + 3 < len(t)
+        and _is_ident(t[i], a)
+        and _is_sym(t[i + 1], ":")
+        and _is_sym(t[i + 2], ":")
+        and _is_ident(t[i + 3], b)
+    )
+
+
+def clock_scope(path):
+    return path.startswith("rust/src/") and path != "rust/src/serving/clock.rs"
+
+
+def panic_scope(path):
+    return path.startswith("rust/src/serving/") or path.startswith("rust/src/runtime/")
+
+
+def determinism_scope(path):
+    return (
+        path.startswith("rust/src/serving/")
+        or path.startswith("rust/src/moe/")
+        or path.startswith("rust/src/pipeline/")
+    )
+
+
+PANIC_METHODS = ["unwrap", "expect"]
+PANIC_MACROS = ["panic", "unreachable", "todo", "unimplemented"]
+ALLOC_METHODS = ["to_vec", "to_owned", "clone", "collect"]
+ALLOC_PATHS = [
+    ("Vec", "new"),
+    ("Vec", "with_capacity"),
+    ("Box", "new"),
+    ("String", "new"),
+    ("String", "from"),
+    ("String", "with_capacity"),
+]
+ALLOC_MACROS = ["vec", "format"]
+
+
+def _finding(rule, path, line, message):
+    return {"rule": rule, "path": path, "line": line, "message": message}
+
+
+def _alloc_finding(path, line, what):
+    return _finding(
+        "hot-path-alloc",
+        path,
+        line,
+        "%s allocates inside a `lint: hot-path` fn (arena reuse only)" % what,
+    )
+
+
+def _scan_hot_path(path, t, opening, close, out):
+    i = opening
+    while i <= close and i < len(t):
+        for a, b in ALLOC_PATHS:
+            if _is_path2(t, i, a, b):
+                out.append(_alloc_finding(path, t[i][0], "%s::%s" % (a, b)))
+        if i + 1 < len(t) and _is_sym(t[i + 1], "!"):
+            m = _ident(t[i])
+            if m in ALLOC_MACROS and (i == 0 or not _is_sym(t[i - 1], "#")):
+                out.append(_alloc_finding(path, t[i][0], m + "!"))
+        if i + 2 < len(t) and _is_sym(t[i], ".") and (
+            _is_sym(t[i + 2], "(") or _is_sym(t[i + 2], ":")
+        ):
+            m = _ident(t[i + 1])
+            if m in ALLOC_METHODS:
+                out.append(_alloc_finding(path, t[i + 1][0], ".%s()" % m))
+        i += 1
+
+
+def scan_rules(path, tokens, directives):
+    t = tokens
+    tests = test_regions(t)
+    out = []
+
+    for d in directives:
+        if d[0] == "malformed":
+            out.append(_finding(RULE_ALLOW_SYNTAX, path, d[1], d[2]))
+
+    if clock_scope(path):
+        for i in range(len(t)):
+            if _in_regions(tests, i):
+                continue
+            for src in ("Instant", "SystemTime"):
+                if _is_path2(t, i, src, "now"):
+                    out.append(
+                        _finding(
+                            "clock-discipline",
+                            path,
+                            t[i][0],
+                            "%s::now() bypasses the injectable Clock seam "
+                            "(route through serving::clock::Clock)" % src,
+                        )
+                    )
+
+    if panic_scope(path):
+        for i in range(len(t)):
+            if _in_regions(tests, i):
+                continue
+            if i + 2 < len(t) and _is_sym(t[i], ".") and _is_sym(t[i + 2], "("):
+                m = _ident(t[i + 1])
+                if m in PANIC_METHODS:
+                    out.append(
+                        _finding(
+                            "panic-discipline",
+                            path,
+                            t[i + 1][0],
+                            ".%s() can panic the serving process; return a typed "
+                            "error (fault containment promises per-request failures)"
+                            % m,
+                        )
+                    )
+            if i + 1 < len(t) and _is_sym(t[i + 1], "!"):
+                m = _ident(t[i])
+                if m in PANIC_MACROS and (
+                    i == 0
+                    or (not _is_sym(t[i - 1], ".") and not _is_sym(t[i - 1], "#"))
+                ):
+                    out.append(
+                        _finding(
+                            "panic-discipline",
+                            path,
+                            t[i][0],
+                            "%s! can panic the serving process; return a typed "
+                            "error or allowlist with the unreachability invariant"
+                            % m,
+                        )
+                    )
+
+    if determinism_scope(path):
+        for i, tok in enumerate(t):
+            if _in_regions(tests, i):
+                continue
+            for ty in ("HashMap", "HashSet"):
+                if _is_ident(tok, ty):
+                    out.append(
+                        _finding(
+                            "determinism",
+                            path,
+                            tok[0],
+                            "%s iteration order is nondeterministic; replay "
+                            "determinism requires BTreeMap/BTreeSet here" % ty,
+                        )
+                    )
+
+    for d in directives:
+        if d[0] != "hot-path":
+            continue
+        line = d[1]
+        fn_idx = next(
+            (k for k, tok in enumerate(t) if tok[0] >= line and _is_ident(tok, "fn")),
+            None,
+        )
+        if fn_idx is None:
+            out.append(
+                _finding(
+                    RULE_ALLOW_SYNTAX, path, line, "hot-path directive does not precede a fn"
+                )
+            )
+            continue
+        opening = next(
+            (j for j in range(fn_idx, len(t)) if _is_sym(t[j], "{")), None
+        )
+        if opening is None:
+            out.append(
+                _finding(RULE_ALLOW_SYNTAX, path, line, "hot-path fn has no body")
+            )
+            continue
+        close = match_brace(t, opening)
+        _scan_hot_path(path, t, opening, close, out)
+
+    return out
+
+
+# ---------------------------------------------------------------------------
+# rust/src/lint/drift.rs — shared-constant registry
+# ---------------------------------------------------------------------------
+
+MIRROR_DYNK = "scripts/mirror_dynamic_k.py"
+
+REGISTRY = [
+    ("PCG_MULT", "rust/src/util/rng.rs", MIRROR_DYNK),
+    ("SPLITMIX_GAMMA", "rust/src/util/rng.rs", MIRROR_DYNK),
+    ("SPLITMIX_MIX1", "rust/src/util/rng.rs", MIRROR_DYNK),
+    ("SPLITMIX_MIX2", "rust/src/util/rng.rs", MIRROR_DYNK),
+    ("FNV_OFFSET_BASIS", "rust/src/serving/scheduler.rs", MIRROR_DYNK),
+    ("FNV_PRIME", "rust/src/serving/scheduler.rs", MIRROR_DYNK),
+    ("DEFAULT_TIER_FULL", "rust/src/serving/request.rs", MIRROR_DYNK),
+    ("DEFAULT_TIER_DEGRADED", "rust/src/serving/request.rs", MIRROR_DYNK),
+    ("PAPER_RATIO_HIGH", "rust/src/moe/gating.rs", MIRROR_DYNK),
+    ("PAPER_RATIO_LOW", "rust/src/moe/gating.rs", MIRROR_DYNK),
+    ("PAPER_N_K", "rust/src/moe/gating.rs", MIRROR_DYNK),
+    ("PAPER_K_HIGH", "rust/src/moe/gating.rs", MIRROR_DYNK),
+    ("PAPER_K_LOW", "rust/src/moe/gating.rs", MIRROR_DYNK),
+]
+
+
+def parse_num_lit(s):
+    """-> ("int", v) | ("float", v) | None; int/float kinds never agree."""
+    s = s.replace("_", "")
+    if s.startswith("0x") or s.startswith("0X"):
+        try:
+            return ("int", int(s[2:], 16))
+        except ValueError:
+            return None
+    if "." in s or "e" in s or "E" in s:
+        try:
+            return ("float", float(s))
+        except ValueError:
+            return None
+    try:
+        return ("int", int(s))
+    except ValueError:
+        return None
+
+
+def _num_at(t, i):
+    neg, j = (True, i + 1) if i < len(t) and _is_sym(t[i], "-") else (False, i)
+    if j >= len(t) or t[j][1] != "num":
+        return None
+    v = parse_num_lit(t[j][2])
+    if v is None:
+        return None
+    if neg:
+        return (v[0], -v[1])
+    return v
+
+
+def extract_rust(tokens, name):
+    for i in range(max(len(tokens) - 1, 0)):
+        if _is_ident(tokens[i], "const") and _is_ident(tokens[i + 1], name):
+            line = tokens[i + 1][0]
+            j = i + 2
+            while (
+                j < len(tokens)
+                and not _is_sym(tokens[j], "=")
+                and not _is_sym(tokens[j], ";")
+            ):
+                j += 1
+            if j < len(tokens) and _is_sym(tokens[j], "="):
+                return (line, _num_at(tokens, j + 1))
+            return (line, None)
+    return None
+
+
+def extract_py(tokens, name):
+    for i in range(max(len(tokens) - 1, 0)):
+        assigns = (
+            _is_ident(tokens[i], name)
+            and _is_sym(tokens[i + 1], "=")
+            and not (i + 2 < len(tokens) and _is_sym(tokens[i + 2], "="))
+            and (i == 0 or not _is_sym(tokens[i - 1], "."))
+        )
+        if assigns:
+            return (tokens[i][0], _num_at(tokens, i + 2))
+    return None
+
+
+def check_drift(root):
+    out = []
+    for name, rust_rel, py_rel in REGISTRY:
+        try:
+            with open(os.path.join(root, rust_rel), encoding="utf-8") as f:
+                rust_side = extract_rust(scan(f.read())[0], name)
+        except OSError as err:
+            out.append(
+                _finding("mirror-drift", rust_rel, 1, "cannot read registered file: %s" % err)
+            )
+            continue
+        try:
+            with open(os.path.join(root, py_rel), encoding="utf-8") as f:
+                py_side = extract_py(scan_py(f.read())[0], name)
+        except OSError as err:
+            out.append(
+                _finding("mirror-drift", py_rel, 1, "cannot read registered mirror: %s" % err)
+            )
+            continue
+        if rust_side is None:
+            out.append(
+                _finding("mirror-drift", rust_rel, 1, "registered constant %s not defined here" % name)
+            )
+            continue
+        rl, rv = rust_side
+        if rv is None:
+            out.append(
+                _finding(
+                    "mirror-drift",
+                    rust_rel,
+                    rl,
+                    "registered constant %s is not a single numeric literal" % name,
+                )
+            )
+            continue
+        if py_side is None:
+            out.append(
+                _finding(
+                    "mirror-drift", py_rel, 1, "registered constant %s not defined in the mirror" % name
+                )
+            )
+            continue
+        pl, pv = py_side
+        if pv is None:
+            out.append(
+                _finding(
+                    "mirror-drift",
+                    py_rel,
+                    pl,
+                    "registered constant %s is not a single numeric literal" % name,
+                )
+            )
+            continue
+        if rv != pv:
+            out.append(
+                _finding(
+                    "mirror-drift",
+                    rust_rel,
+                    rl,
+                    "%s = %s here but %s in %s — the mirror cross-validation is void"
+                    % (name, _fmt_val(rv), _fmt_val(pv), py_rel),
+                )
+            )
+    return out
+
+
+def _fmt_val(v):
+    kind, x = v
+    if kind == "float" and x == int(x):
+        # match rust's {} float formatting (1 -> "1", 0.25 -> "0.25")
+        return str(int(x))
+    return str(x)
+
+
+# ---------------------------------------------------------------------------
+# rust/src/lint/mod.rs — per-file pipeline + tree walk
+# ---------------------------------------------------------------------------
+
+
+def lint_source(path, src):
+    tokens, comments = scan(src)
+    directives = parse_directives(comments)
+    allowed = allowed_lines(directives)
+    findings = scan_rules(path, tokens, directives)
+    return [
+        f
+        for f in findings
+        if f["rule"] == RULE_ALLOW_SYNTAX
+        or f["rule"] not in allowed.get(f["line"], set())
+    ]
+
+
+def rust_files(root):
+    out = []
+    for sub in ("rust/src", "rust/tests", "rust/benches"):
+        base = os.path.join(root, sub)
+        for dirpath, _dirnames, filenames in os.walk(base):
+            for fn in filenames:
+                if fn.endswith(".rs"):
+                    out.append(os.path.join(dirpath, fn))
+    out.sort()
+    return out
+
+
+def lint_tree(root):
+    out = []
+    for path in rust_files(root):
+        rel = os.path.relpath(path, root).replace(os.sep, "/")
+        with open(path, encoding="utf-8") as f:
+            out.extend(lint_source(rel, f.read()))
+    out.extend(check_drift(root))
+    out.sort(key=lambda f: (f["path"], f["line"], f["rule"]))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# fixture self-tests: each rule must fire on a known-bad snippet and the
+# allowlist must suppress (with a reason) / reject (without). These are
+# the same fixtures rust/tests/lint_rules.rs embeds.
+# ---------------------------------------------------------------------------
+
+# Assembled from parts so this file's own comment scan (if ever pointed
+# at it) and plain greps don't confuse fixture text with directives.
+ALLOW = "// " + LINT_PREFIX + " allow"
+HOTPATH = "// " + LINT_PREFIX + " hot-path"
+
+FIX_CLOCK = "fn f() { let t = std::time::Instant::now(); }\n"
+FIX_CLOCK_SYS = "fn f() { let t = SystemTime::now(); }\n"
+FIX_PANIC = "fn f(x: Option<u8>) -> u8 { x.unwrap() }\n"
+FIX_PANIC_MACRO = "fn f() { unreachable!(\"no\") }\n"
+FIX_DETERMINISM = "use std::collections::HashMap;\n"
+FIX_HOTPATH = HOTPATH + "\nfn f() -> Vec<u8> { vec![0u8].to_vec() }\n"
+FIX_ALLOWED = (
+    ALLOW + "(clock-discipline) — fixture: wall-clock is the point here\n"
+    "fn f() { let t = std::time::Instant::now(); }\n"
+)
+FIX_ALLOW_NO_REASON = (
+    ALLOW + "(clock-discipline)\n" "fn f() { let t = std::time::Instant::now(); }\n"
+)
+FIX_ALLOW_UNKNOWN = ALLOW + "(no-such-rule) — whatever\nfn f() {}\n"
+FIX_STRING_IMMUNE = 'fn f() -> &\'static str { "Instant::now() .unwrap()" }\n'
+FIX_TEST_REGION = (
+    "#[cfg(test)]\nmod tests {\n    fn f(x: Option<u8>) -> u8 { x.unwrap() }\n}\n"
+)
+
+
+def _rules_of(findings):
+    return sorted(set(f["rule"] for f in findings))
+
+
+def self_test():
+    serving = "rust/src/serving/fixture.rs"
+
+    got = lint_source(serving, FIX_CLOCK)
+    assert _rules_of(got) == ["clock-discipline"], got
+    assert got[0]["line"] == 1, got
+    got = lint_source(serving, FIX_CLOCK_SYS)
+    assert _rules_of(got) == ["clock-discipline"], got
+    assert not lint_source("rust/src/serving/clock.rs", FIX_CLOCK)
+    assert not lint_source("rust/tests/fixture.rs", FIX_CLOCK)
+    print("ok: clock-discipline fires in scope, silent in clock.rs and tests/")
+
+    got = lint_source(serving, FIX_PANIC)
+    assert _rules_of(got) == ["panic-discipline"], got
+    got = lint_source("rust/src/runtime/fixture.rs", FIX_PANIC_MACRO)
+    assert _rules_of(got) == ["panic-discipline"], got
+    assert not lint_source("rust/src/moe/fixture.rs", FIX_PANIC)
+    assert not lint_source(serving, FIX_TEST_REGION)
+    print("ok: panic-discipline fires in serving/ + runtime/, skips cfg(test)")
+
+    got = lint_source(serving, FIX_DETERMINISM)
+    assert _rules_of(got) == ["determinism"], got
+    assert not lint_source("rust/src/util/fixture.rs", FIX_DETERMINISM)
+    print("ok: determinism fires on HashMap in scope only")
+
+    got = lint_source("rust/src/moe/fixture.rs", FIX_HOTPATH)
+    assert _rules_of(got) == ["hot-path-alloc"], got
+    assert len(got) == 2, got  # vec![…] and .to_vec()
+    print("ok: hot-path-alloc fires inside annotated fn (%d sites)" % len(got))
+
+    assert not lint_source(serving, FIX_ALLOWED)
+    got = lint_source(serving, FIX_ALLOW_NO_REASON)
+    assert _rules_of(got) == [RULE_ALLOW_SYNTAX, "clock-discipline"], got
+    got = lint_source(serving, FIX_ALLOW_UNKNOWN)
+    assert _rules_of(got) == [RULE_ALLOW_SYNTAX], got
+    print("ok: allowlist suppresses with reason, rejects without / unknown rule")
+
+    assert not lint_source(serving, FIX_STRING_IMMUNE)
+    print("ok: string literals are invisible to every rule")
+
+
+def main():
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    self_test()
+    if "--self-test-only" in sys.argv[1:]:
+        print("mirror_lint: self-tests passed")
+        return
+    findings = lint_tree(root)
+    for f in findings:
+        print("%s:%d: [%s] %s" % (f["path"], f["line"], f["rule"], f["message"]))
+    if findings:
+        print("mirror_lint: %d finding(s)" % len(findings))
+        sys.exit(1)
+    print("mirror_lint: tree is clean (%d rust files scanned)" % len(rust_files(root)))
+
+
+if __name__ == "__main__":
+    main()
