@@ -14,6 +14,14 @@ The wave path passes the same position for every row.
 
 Artifact families (per model config):
   prefill_dense_{m}_b{B}_s{S}_t{T}   tokens → logits + KV cache
+  prefill_cont_dense_{m}_b{B}_s{S}_t{T}
+                                     suffix-continuation prefill: S
+                                     tokens per row at per-row global
+                                     positions `start: i32[B]` against
+                                     an existing KV cache (prefix-cache
+                                     hits and chunked prefill; MoE
+                                     variant prefill_cont_moe_*); S runs
+                                     over multiples of CONT_GRID_STEP
   decode_dense_{m}_b{B}_t{T}         one dense decode step
   decode_moe_{m}_{spec}_b{B}_t{T}    monolithic masked-MoE decode step
   embed_{m}_b{B}                     token+position embedding
@@ -43,6 +51,14 @@ from .kernels import atopk_mask, routed_experts, swiglu_ffn, swiglu_hidden
 
 F32 = jnp.float32
 I32 = jnp.int32
+
+# Suffix-continuation prefill grid pitch: prefill_cont_* artifacts are
+# emitted at suffix lengths S = CONT_GRID_STEP, 2*CONT_GRID_STEP, ...
+# up to the largest monolithic prefill length. Must agree with
+# `CONT_GRID_STEP` in rust/src/serving/engine.rs — the registered copy
+# the mirror-drift lint checks lives in
+# scripts/mirror_chunked_prefill.py (see lint/drift.rs REGISTRY).
+CONT_GRID_STEP = 16
 
 
 def to_hlo_text(lowered):
@@ -223,6 +239,37 @@ def emit_model_artifacts(em, name, batches, specs_moe, kv_lens, prefill_lens):
                     {"model": name, "batch": b, "seq": s, "kv_len": t},
                 )
 
+            # ---- suffix-continuation prefill grid ----
+            # one entry per CONT_GRID_STEP multiple up to the largest
+            # monolithic prefill length: the engine picks the smallest
+            # entry covering a row's uncached suffix (prefix-cache
+            # hits) or the largest fitting the chunk budget (chunked
+            # prefill); tokens land at per-row positions start..start+s
+            cont_lens = [
+                c
+                for c in range(CONT_GRID_STEP, max(prefill_lens) + 1, CONT_GRID_STEP)
+                if c <= t
+            ]
+            for s in cont_lens:
+
+                def prefill_cont_fn(*flat, _cfg=cfg, _n=len(pnames)):
+                    params = rebuild_params(pnames, flat[:_n])
+                    tokens, kv, start = flat[_n], flat[_n + 1], flat[_n + 2]
+                    return model.prefill_cont(params, tokens, kv, start, _cfg)
+
+                em.emit(
+                    f"prefill_cont_dense_{name}_b{b}_s{s}_t{t}",
+                    prefill_cont_fn,
+                    pspecs
+                    + [
+                        ("tokens", spec((b, s), I32)),
+                        ("kv", spec((nl, 2, b, h, t, hd))),
+                        ("start", spec((b,), I32)),
+                    ],
+                    ["logits[b,s,v]", "kv"],
+                    {"model": name, "batch": b, "seq": s, "kv_len": t},
+                )
+
             # ---- monolithic MoE decode/prefill per spec ----
             # converted models have no dense FFN weights, so MoE
             # artifacts take the FFN-less dense param set
@@ -313,6 +360,44 @@ def emit_model_artifacts(em, name, batches, specs_moe, kv_lens, prefill_lens):
                         f"prefill_moe_{name}_{spec_str}_b{b}_s{s}_t{t}",
                         moe_prefill_fn,
                         pspecs_nf + mspecs + [("tokens", spec((b, s), I32))],
+                        ["logits[b,s,v]", "kv"],
+                        {"model": name, "spec": spec_str, "batch": b, "seq": s, "kv_len": t},
+                    )
+
+                for s in [
+                    c
+                    for c in range(CONT_GRID_STEP, max(prefill_lens) + 1, CONT_GRID_STEP)
+                    if c <= t
+                ]:
+
+                    def moe_prefill_cont_fn(
+                        *flat,
+                        _cfg=cfg,
+                        _np=len(pnames_nf),
+                        _nm=len(mnames),
+                        _nk=n_k,
+                        _up=unpack_moe,
+                    ):
+                        params = rebuild_params(pnames_nf, flat[:_np])
+                        mflat = rebuild_params(mnames, flat[_np : _np + _nm])
+                        moe_params = _up(mflat)
+                        tokens = flat[_np + _nm]
+                        kv = flat[_np + _nm + 1]
+                        start = flat[_np + _nm + 2]
+                        return model.moe_prefill_cont(
+                            params, moe_params, tokens, kv, start, _cfg, _nk
+                        )
+
+                    em.emit(
+                        f"prefill_cont_moe_{name}_{spec_str}_b{b}_s{s}_t{t}",
+                        moe_prefill_cont_fn,
+                        pspecs_nf
+                        + mspecs
+                        + [
+                            ("tokens", spec((b, s), I32)),
+                            ("kv", spec((nl, 2, b, h, t, hd))),
+                            ("start", spec((b,), I32)),
+                        ],
                         ["logits[b,s,v]", "kv"],
                         {"model": name, "spec": spec_str, "batch": b, "seq": s, "kv_len": t},
                     )

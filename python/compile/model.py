@@ -182,6 +182,77 @@ def prefill(params, tokens, cfg, kv_len):
     return logits, jnp.stack(kv_layers)
 
 
+def _prefill_cont_body(params, tokens, kv, start, cfg, layer_ffn):
+    """Shared body of the suffix-continuation prefill artifacts.
+
+    tokens: [B, S] — row i holds prompt positions start[i]..start[i]+S
+    kv:     [L, 2, B, H, T, hd] — existing cache; positions < start[i]
+            must hold the prefix's K/V (mapped from the prefix cache or
+            written by earlier chunks)
+    start:  i32 [B] per-row global position of the row's first token
+
+    Each row computes exactly its S tokens at their true positions:
+    embeddings index `pos` at start+j, new K/V scatter into the cache
+    at start+j (the per-row scatter idiom of `_attention_kv`), and
+    attention sees the merged cache under the causal rule "key position
+    p visible to query j iff p <= start+j" — so cached prefix K/V and
+    same-call earlier tokens are both attended, identically to a
+    monolithic prefill of the whole prompt. Masked positions underflow
+    to exactly 0 after softmax, so the extra (invisible) cache columns
+    cannot perturb the logits: chunked output is bit-identical to
+    monolithic.
+
+    `layer_ffn(l, x2d)` supplies the FFN (dense or masked-MoE).
+    Returns (logits [B, S, V], new kv).
+    """
+    b, s = tokens.shape
+    d = cfg["d_model"]
+    n_heads = cfg["n_heads"]
+    hd = d // n_heads
+    t = kv.shape[4]
+    start = jnp.asarray(start)
+    pos = start[:, None] + jnp.arange(s)[None, :]  # [B, S] global positions
+    x = params["embed"][tokens] + params["pos"][pos]
+    rows = jnp.arange(b)[:, None, None]
+    heads = jnp.arange(n_heads)[None, :, None]
+    pcols = pos[:, None, :]
+    valid = jnp.arange(t)[None, None, None, :] <= pos[:, None, :, None]  # [B,1,S,T]
+    new_kv = []  # PERF L2-1: stack once (see decode_step)
+    for l in range(cfg["n_layers"]):
+        pre = f"layers.{l}"
+        xn = rmsnorm(x, params[f"{pre}.attn_norm"])
+        q = (xn @ params[f"{pre}.attn.wq"]).reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+        k = (xn @ params[f"{pre}.attn.wk"]).reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+        v = (xn @ params[f"{pre}.attn.wv"]).reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+        kv_k = kv[l, 0].at[rows, heads, pcols, :].set(k)
+        kv_v = kv[l, 1].at[rows, heads, pcols, :].set(v)
+        scores = jnp.einsum("bhqd,bhtd->bhqt", q, kv_k) / (hd**0.5)
+        scores = jnp.where(valid, scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhqt,bhtd->bhqd", probs, kv_v)
+        x = x + ctx.transpose(0, 2, 1, 3).reshape(b, s, d) @ params[f"{pre}.attn.wo"]
+        xn = rmsnorm(x, params[f"{pre}.ffn_norm"])
+        x = x + layer_ffn(l, xn.reshape(b * s, d)).reshape(b, s, d)
+        new_kv.append(jnp.stack([kv_k, kv_v]))
+    logits = rmsnorm(x, params["final_norm"]) @ params["unembed"]
+    return logits, jnp.stack(new_kv)
+
+
+def prefill_cont(params, tokens, kv, start, cfg):
+    """Dense suffix-continuation prefill (see `_prefill_cont_body`)."""
+
+    def layer_ffn(l, x2d):
+        pre = f"layers.{l}"
+        return _ffn(
+            x2d,
+            params[f"{pre}.ffn.w_gate"],
+            params[f"{pre}.ffn.w_up"],
+            params[f"{pre}.ffn.w_down"],
+        )
+
+    return _prefill_cont_body(params, tokens, kv, start, cfg, layer_ffn)
+
+
 def decode_step(params, token, kv, pos, cfg):
     """One decode step.
 
@@ -309,6 +380,18 @@ def moe_prefill(params, moe_params, tokens, cfg, kv_len, n_k):
         x = x + y
     logits = rmsnorm(x, params["final_norm"]) @ params["unembed"]
     return logits, jnp.stack(kv_layers)
+
+
+def moe_prefill_cont(params, moe_params, tokens, kv, start, cfg, n_k):
+    """Masked-MoE suffix-continuation prefill (see `_prefill_cont_body`)."""
+
+    def layer_ffn(l, x2d):
+        mp = moe_params[l]
+        return moe_ffn_masked(
+            x2d, mp["shared"], mp["experts"], mp["router"], mp["scale"], mp["bias"], n_k
+        )
+
+    return _prefill_cont_body(params, tokens, kv, start, cfg, layer_ffn)
 
 
 def moe_decode_step(params, moe_params, token, kv, pos, cfg, n_k):

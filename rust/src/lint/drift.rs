@@ -25,10 +25,12 @@ pub struct Entry {
 }
 
 const MIRROR_DYNK: &str = "scripts/mirror_dynamic_k.py";
+const MIRROR_CHUNK: &str = "scripts/mirror_chunked_prefill.py";
 
 /// The seeded registry (ISSUE 8): PCG32/splitmix seeding, the FNV
 /// stub-logits hash, default TierRatios, and the paper's k_for_ratio
-/// operating points (75%/25% on N_k = 4 → k = 3/1).
+/// operating points (75%/25% on N_k = 4 → k = 3/1). Extended (ISSUE 9)
+/// with the chunked-prefill/suffix-continuation constants.
 pub const REGISTRY: &[Entry] = &[
     Entry { name: "PCG_MULT", rust: "rust/src/util/rng.rs", py: MIRROR_DYNK },
     Entry { name: "SPLITMIX_GAMMA", rust: "rust/src/util/rng.rs", py: MIRROR_DYNK },
@@ -43,6 +45,12 @@ pub const REGISTRY: &[Entry] = &[
     Entry { name: "PAPER_N_K", rust: "rust/src/moe/gating.rs", py: MIRROR_DYNK },
     Entry { name: "PAPER_K_HIGH", rust: "rust/src/moe/gating.rs", py: MIRROR_DYNK },
     Entry { name: "PAPER_K_LOW", rust: "rust/src/moe/gating.rs", py: MIRROR_DYNK },
+    Entry {
+        name: "DEFAULT_PREFILL_CHUNK_TOKENS",
+        rust: "rust/src/serving/batcher.rs",
+        py: MIRROR_CHUNK,
+    },
+    Entry { name: "CONT_GRID_STEP", rust: "rust/src/serving/engine.rs", py: MIRROR_CHUNK },
 ];
 
 /// Extracted constant value. Int vs Float is part of the contract:

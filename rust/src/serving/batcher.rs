@@ -94,7 +94,25 @@ pub struct BatcherConfig {
     /// (1.0 / 0.25) keep `Full`-tier output bit-identical to the
     /// untiered scheduler.
     pub tier_ratios: crate::serving::TierRatios,
+    /// Per-step prefill token budget (chunked prefill). Each scheduler
+    /// step spends at most this many prompt tokens on prefill work, in
+    /// admission order, before running the decode batch — so one long
+    /// prompt is spread over several steps instead of freezing every
+    /// live decode behind a monolithic prefill. `0` disables chunking
+    /// (each admission prefills its whole prompt in its admission
+    /// step). Chunking is token-invisible: output streams are
+    /// bit-identical at any budget.
+    pub prefill_chunk_tokens: usize,
 }
+
+/// Default per-step prefill chunk budget in prompt tokens
+/// ([`BatcherConfig::prefill_chunk_tokens`]). Sized so typical chat
+/// prompts still prefill in one step while a multi-thousand-token
+/// prompt is spread over several, bounding the decode stall any single
+/// step can suffer. Mirror-drift registered:
+/// `scripts/mirror_chunked_prefill.py` must agree, checked by
+/// `cmoe lint` (see `lint::drift::REGISTRY`).
+pub const DEFAULT_PREFILL_CHUNK_TOKENS: usize = 256;
 
 impl Default for BatcherConfig {
     fn default() -> Self {
@@ -106,6 +124,7 @@ impl Default for BatcherConfig {
             age_promote_steps: u64::MAX,
             preempt: PreemptMode::Off,
             tier_ratios: crate::serving::TierRatios::default(),
+            prefill_chunk_tokens: DEFAULT_PREFILL_CHUNK_TOKENS,
         }
     }
 }

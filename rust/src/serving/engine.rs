@@ -90,10 +90,13 @@ pub struct EngineConfig {
     /// Tokens per KV page of the continuous scheduler's paged slot
     /// pool (`cmoe serve --page-len`). Clamped to `kv_len`.
     pub page_len: usize,
-    /// Share KV pages across requests whose prefill rows share a
-    /// prefix (`cmoe serve --prefix-cache`). Artifact-path sharing is
-    /// a *memory* dedup: the compiled prefill still runs whole rows,
-    /// but matched prefix pages are stored once and mapped per slot.
+    /// Share KV pages across requests whose prompts share a prefix
+    /// (`cmoe serve --prefix-cache`). Two effects: matched prefix
+    /// pages are stored once and mapped per slot (memory dedup, any
+    /// artifact set), and when suffix-continuation artifacts
+    /// (`prefill_cont_*`) are compiled, a cross-step hit also **skips
+    /// the prefix's prefill compute** — the engine prefills only the
+    /// uncached suffix (see [`EngineStepForward`]).
     pub prefix_cache: bool,
     /// Time source for the scheduler session (wall clock in
     /// production; [`Clock::manual`] makes queue-wait/deadline logic
@@ -108,6 +111,15 @@ pub struct EngineConfig {
 
 /// Default KV page length (tokens) for the paged slot pool.
 pub const DEFAULT_PAGE_LEN: usize = 16;
+
+/// Suffix-continuation prefill grid pitch: `python/compile/aot.py`
+/// emits `prefill_cont_*` artifacts at suffix lengths that are
+/// multiples of this step, so any cached-prefix/suffix split the
+/// scheduler produces is coverable with at most `CONT_GRID_STEP - 1`
+/// recomputed overlap tokens. Mirror-drift registered:
+/// `scripts/mirror_chunked_prefill.py` must agree, checked by
+/// `cmoe lint` (see `lint::drift::REGISTRY`).
+pub const CONT_GRID_STEP: usize = 16;
 
 impl EngineConfig {
     pub fn dense(model_name: &str, kv_len: usize) -> Self {
@@ -258,6 +270,31 @@ impl Engine {
         lens
     }
 
+    /// Compiled suffix-continuation prefill lengths for this
+    /// model/batch, ascending. Empty when the artifact set predates
+    /// `prefill_cont_*` — the engine then recomputes continuations
+    /// through the monolithic prefill (correct, no compute skip).
+    fn prefill_cont_lens(&self, b: usize) -> Vec<usize> {
+        let prefix = match self.cfg.mode {
+            ExecMode::Dense => format!("prefill_cont_dense_{}_b{b}_s", self.cfg.model_name),
+            _ => {
+                format!("prefill_cont_moe_{}_{}_b{b}_s", self.cfg.model_name, self.spec_str())
+            }
+        };
+        let suffix = format!("_t{}", self.cfg.kv_len);
+        let mut lens: Vec<usize> = self
+            .rt
+            .manifest
+            .artifacts
+            .keys()
+            .filter_map(|k| {
+                k.strip_prefix(&prefix)?.strip_suffix(&suffix)?.parse().ok()
+            })
+            .collect();
+        lens.sort_unstable();
+        lens
+    }
+
     /// Run a standalone batch of requests through the **continuous
     /// scheduler** (the default serving path): per-step admission into
     /// KV slots, per-step retirement, minimal covering buckets.
@@ -389,15 +426,17 @@ impl Engine {
             .or_else(|| lens.last().copied())
             .ok_or_else(|| anyhow!("no prefill length available"))?;
 
-        // tokens [bucket, s]: right-align prompts (pad front with 0 —
-        // prefix padding perturbs only the padded positions' logits,
-        // which are never read)
+        // tokens [bucket, s]: left-align prompts (trailing padding is
+        // causally invisible to the real tokens, so a row's logits and
+        // KV do not depend on the compiled s — the same alignment the
+        // continuous path uses, keeping the two paths token-identical)
         let mut tokens = vec![0i32; bucket * s];
+        let mut ns = vec![0usize; n_real];
         for (i, (r, _)) in wave.iter().enumerate() {
             let p = if r.prompt.len() > s { &r.prompt[r.prompt.len() - s..] } else { &r.prompt };
-            let off = i * s + (s - p.len());
+            ns[i] = p.len();
             for (j, &tok) in p.iter().enumerate() {
-                tokens[off + j] = tok as i32;
+                tokens[i * s + j] = tok as i32;
             }
         }
 
@@ -431,12 +470,16 @@ impl Engine {
         let mut active: Vec<bool> = vec![true; n_real];
         let mut cur = vec![0i32; bucket];
         for i in 0..n_real {
-            let row_start = (i * s + (s - 1)) * v;
+            // left-aligned rows: the last real prompt position
+            let row_start = (i * s + (ns[i] - 1)) * v;
             let row = &logits.data[row_start..row_start + v];
             let tok = rngs[i].sample_logits(row, wave[i].0.params.temperature);
             generated[i].push(tok);
             cur[i] = tok as i32;
-            if wave[i].0.params.stop_token == Some(tok) || wave[i].0.params.max_new_tokens <= 1 {
+            if wave[i].0.params.stop_token == Some(tok)
+                || wave[i].0.params.max_new_tokens <= 1
+                || ns[i] >= self.cfg.kv_len
+            {
                 active[i] = false;
             }
         }
@@ -444,7 +487,6 @@ impl Engine {
 
         // --- decode loop ---
         let t_decode = clock.now();
-        let mut pos = s;
         let mut steps = 0usize;
         // orchestrated mode splits kv into per-layer buffers once
         let mut kv_layers: Vec<xla::PjRtBuffer> = Vec::new();
@@ -457,11 +499,14 @@ impl Engine {
         }
 
         let mut pos_rows = vec![0i32; bucket];
-        while active.iter().any(|&a| a) && pos < self.cfg.kv_len {
+        while active.iter().any(|&a| a) {
             let tok_buf = self.rt.upload_i32(&cur, &[bucket])?;
             // decode artifacts take per-row positions (continuous
-            // batching ABI); a wave's rows all sit at the same depth
-            pos_rows.fill(pos as i32);
+            // batching ABI); left-aligned rows sit at their own prompt
+            // depth, so each advances from its true length
+            for i in 0..n_real {
+                pos_rows[i] = (ns[i] + steps) as i32;
+            }
             let pos_buf = self.rt.upload_i32(&pos_rows, &[bucket])?;
             let logits = match self.cfg.mode {
                 ExecMode::Dense | ExecMode::MoeMonolithic => {
@@ -501,11 +546,11 @@ impl Engine {
                 cur[i] = tok as i32;
                 if wave[i].0.params.stop_token == Some(tok)
                     || generated[i].len() >= wave[i].0.params.max_new_tokens
+                    || ns[i] + steps + 1 >= self.cfg.kv_len
                 {
                     active[i] = false;
                 }
             }
-            pos += 1;
             steps += 1;
         }
         let decode_time = clock.now().saturating_duration_since(t_decode);
@@ -524,11 +569,17 @@ impl Engine {
         let t_end = clock.now();
         for (i, (r, enqueued)) in wave.drain(..).enumerate() {
             let latency = t_end.saturating_duration_since(enqueued);
-            m.record_request(ttft, latency);
+            m.record_request(Some(ttft), latency);
+            let tokens = std::mem::take(&mut generated[i]);
+            // wave path: one prefill step samples every first token,
+            // and an uninterrupted decode spans tokens-1 steps
+            let decode_span_steps = tokens.len().saturating_sub(1) as u64;
             results.push(RequestResult {
                 id: r.id,
-                tokens: std::mem::take(&mut generated[i]),
-                ttft,
+                tokens,
+                ttft: Some(ttft),
+                ttft_steps: Some(1),
+                decode_span_steps,
                 latency,
                 queued: t_start.duration_since(enqueued),
                 queued_steps: 0,
@@ -819,23 +870,43 @@ impl Engine {
 /// must be compiled — the scheduler switches buckets as occupancy
 /// changes.
 ///
-/// Prefill groups admissions by their compiled prefill length (the
-/// smallest `s` covering each prompt) so a request's prefill padding —
-/// and therefore its token stream — does not depend on which other
-/// requests happened to be admitted alongside it.
+/// Prefill rows are **left-aligned**: prompt token `j` sits at KV
+/// position `j`, trailing padding is causally invisible to the real
+/// tokens, and decode continues at the true prompt length. A row's KV
+/// bytes therefore do not depend on which compiled `s` carried it —
+/// the invariance everything below rests on. Admissions are grouped by
+/// their own covering prefill length so a request's execution never
+/// depends on its admission cohort (the token-identity guarantee).
 ///
-/// With `EngineConfig::prefix_cache` on, prefill rows are additionally
-/// deduplicated through a [`PrefixCache`] keyed on the **padded row**
-/// (front padding + right-aligned prompt — the exact token sequence
-/// the artifact consumes, which fully determines the row's KV: KV at
-/// position `p` is a causal function of row tokens `[0, p]`). Matched
-/// prefix pages are mapped instead of stored, so identical
-/// system-prompt rows keep one physical copy; the compiled prefill
-/// still computes whole rows, so this is a memory dedup, not a compute
-/// skip — [`StepForward::map_prefix`] keeps its no-op default and the
-/// prefill-token meters stay honest. (A compute skip needs a
-/// suffix-continuation prefill artifact and left-aligned rows; the
-/// host-side [`crate::serving::StubForward`] demonstrates that path.)
+/// Two prefill families compose over that invariance:
+///
+/// * **Monolithic** (`prefill_*_b{b}_s{s}_t{t}`): computes a row from
+///   position 0. Used for fresh rows, and as the recompute fallback
+///   for continuations when no suitable cont artifact is compiled
+///   (recomputed KV is bit-identical; only `[cached, end)` is stored).
+/// * **Suffix continuation** (`prefill_cont_*_b{b}_s{s}_t{t}`): takes
+///   the row's resident KV prefix plus per-row start offsets and
+///   computes exactly `s` tokens at their true positions — a cached or
+///   previously-chunked prefix **skips compute**, not just storage.
+///   Suffixes shorter than the compiled `s` back-extend into cached
+///   tokens (identical recompute, overlap not re-stored); the grid is
+///   emitted at [`CONT_GRID_STEP`] pitch so the overlap is bounded.
+///
+/// A prefill call may also stop short of its requested end when the
+/// artifact grid caps the chunk ([`PrefillOutcome::pos`] reports real
+/// coverage) — the scheduler re-plans the remainder next step, which
+/// is how prompts longer than the largest compiled `s` now prefill
+/// completely instead of being truncated.
+///
+/// With `EngineConfig::prefix_cache` on, a [`PrefixCache`] keyed on
+/// **raw prompt tokens** (valid precisely because of left alignment)
+/// backs two layers of sharing: [`StepForward::map_prefix`] maps a
+/// cached prefix at admission and the continuation path skips its
+/// compute (cross-step); and inside a prefill batch, rows re-consult
+/// the cache before storing so identical system-prompt rows keep one
+/// physical copy (intra-step memory dedup, any artifact set). KV at
+/// position `p` is a causal function of tokens `[0, p]`, so a
+/// full-page token match implies identical bytes.
 pub struct EngineStepForward<'e> {
     eng: &'e Engine,
     kv: KvSlotPool,
@@ -935,28 +1006,100 @@ impl<'e> EngineStepForward<'e> {
         }
     }
 
-    /// Batched prefill of one same-`s` group, writing each member's KV
-    /// row into its slot.
-    fn prefill_group(
+    fn prefill_cont_name(&self, bucket: usize, s: usize) -> String {
+        let eng = self.eng;
+        match eng.cfg.mode {
+            ExecMode::Dense => format!(
+                "prefill_cont_dense_{}_b{bucket}_s{s}_t{}",
+                eng.cfg.model_name, eng.cfg.kv_len
+            ),
+            _ => format!(
+                "prefill_cont_moe_{}_{}_b{bucket}_s{s}_t{}",
+                eng.cfg.model_name,
+                eng.spec_str(),
+                eng.cfg.kv_len
+            ),
+        }
+    }
+
+    /// Choose the artifact that carries one row's prefill `[cached, n)`
+    /// furthest: `(is_cont, s, start, end)`. `end < n` is a legal
+    /// partial step (the scheduler re-plans the remainder); `end` is
+    /// always `> cached` or this errors.
+    fn plan_row(
+        &self,
+        cached: usize,
+        n: usize,
+        mono_lens: &[usize],
+        cont_lens: &[usize],
+    ) -> Result<(bool, usize, usize, usize)> {
+        let max_mono = *mono_lens.last().ok_or_else(|| anyhow!("no prefill length available"))?;
+        if cached == 0 {
+            // fresh row: smallest covering monolithic length, capped at
+            // the largest compiled one (the remainder continues later)
+            let end = n.min(max_mono);
+            let s = mono_lens.iter().copied().find(|&l| l >= end).unwrap_or(max_mono);
+            return Ok((false, s, 0, end));
+        }
+        let l = n - cached;
+        // full coverage: smallest cont s with l <= s <= n — the row
+        // back-extends into cached tokens; the overlap is recomputed
+        // bit-identically and not re-stored
+        if let Some(s) = cont_lens.iter().copied().find(|&s| s >= l && s <= n) {
+            return Ok((true, s, n - s, n));
+        }
+        // partial coverage: the largest cont s that fits entirely in
+        // fresh tokens
+        if let Some(s) = cont_lens.iter().rev().copied().find(|&s| s <= l) {
+            return Ok((true, s, cached, cached + s));
+        }
+        // no usable continuation artifact: recompute [0, end) through
+        // the monolithic prefill and store only [cached, end) — left
+        // alignment makes the recomputed prefix bit-identical, so
+        // correctness never depends on the cont grid
+        let end = n.min(max_mono);
+        if end <= cached {
+            bail!(
+                "prefill continuation impossible: {cached} tokens cached, largest monolithic \
+                 prefill s={max_mono}, no cont artifact covers the suffix"
+            );
+        }
+        let s = mono_lens.iter().copied().find(|&l2| l2 >= end).unwrap_or(max_mono);
+        Ok((false, s, 0, end))
+    }
+
+    /// Record a slot's full-page prompt prefix in the prefix cache.
+    fn insert_prefix(&mut self, slot: usize, covered: &[usize]) {
+        let Some(cache) = &mut self.cache else { return };
+        let page = self.kv.page_len();
+        let full = covered.len() / page;
+        if full == 0 {
+            return;
+        }
+        let pages: Vec<usize> = self.kv.slot_pages(slot)[..full].to_vec();
+        cache.insert(&covered[..full * page], &pages, self.kv.pages_mut());
+    }
+
+    /// Batched monolithic prefill of one same-`s` group. Rows are
+    /// left-aligned, so row `r` computes `prompts[r][..end]` from
+    /// position 0 and stores KV `[cached, end)` into its slot.
+    fn prefill_mono_group(
         &mut self,
         s: usize,
-        members: &[(usize, usize)], // (input index, slot id)
+        rows: &[RowPlan],
         prompts: &[&[usize]],
         out: &mut [Option<PrefillOutcome>],
     ) -> Result<()> {
         let eng = self.eng;
         let c = &eng.model.config;
         let (v, t) = (c.vocab, eng.cfg.kv_len);
-        let bucket = self.min_bucket(members.len());
+        let bucket = self.min_bucket(rows.len());
         let name = self.prefill_name(bucket, s);
 
         let mut tokens = vec![0i32; bucket * s];
-        for (row, &(idx, _)) in members.iter().enumerate() {
-            let p = prompts[idx];
-            let p = if p.len() > s { &p[p.len() - s..] } else { p };
-            let off = row * s + (s - p.len());
-            for (j, &tok) in p.iter().enumerate() {
-                tokens[off + j] = tok as i32;
+        for (row, r) in rows.iter().enumerate() {
+            for (j, &tok) in prompts[r.idx][..r.end].iter().enumerate() {
+                tokens[row * s + j] = tok as i32;
             }
         }
         let tok_buf = eng.rt.upload_i32(&tokens, &[bucket, s])?;
@@ -967,54 +1110,134 @@ impl<'e> EngineStepForward<'e> {
             &outb[1],
             &[c.n_layers, 2, bucket, c.n_heads, t, c.head_dim()],
         )?;
-        for (row, &(idx, slot)) in members.iter().enumerate() {
-            // prefix dedup: the padded row is the exact semantic key of
-            // its KV, so a cached match maps those pages and only the
-            // remainder of the row is stored (identical bytes — KV at
-            // p is a causal function of row tokens [0, p])
-            let (mapped, key) = if let Some(cache) = &mut self.cache {
-                let key: Vec<usize> =
-                    tokens[row * s..(row + 1) * s].iter().map(|&x| x as usize).collect();
-                let (pages, cached) = cache.lookup(&key);
-                if !pages.is_empty() {
-                    self.kv.map_shared(slot, &pages, cached);
-                }
-                (cached, Some(key))
-            } else {
-                (0, None)
-            };
-            self.reserve(slot, s);
-            self.kv.store_from_batch(slot, &kv.data, bucket, row, mapped, s);
-            if let Some(mut key) = key {
-                let full = s / self.kv.page_len();
-                let pages: Vec<usize> = self.kv.slot_pages(slot)[..full].to_vec();
-                key.truncate(full * self.kv.page_len());
+        for (row, r) in rows.iter().enumerate() {
+            // intra-batch memory dedup: a fresh row whose raw-token
+            // prefix is already cached maps those pages and stores only
+            // the remainder (the compute already ran — the compute skip
+            // lives in map_prefix, across steps)
+            let mut have = r.cached;
+            if r.cached == 0 {
                 if let Some(cache) = &mut self.cache {
-                    cache.insert(&key, &pages, self.kv.pages_mut());
+                    let (pages, hit) = cache.lookup(&prompts[r.idx][..r.end]);
+                    if !pages.is_empty() {
+                        self.kv.map_shared(r.slot, &pages, hit);
+                        have = hit;
+                    }
                 }
             }
+            self.reserve(r.slot, r.end);
+            if r.end > have {
+                self.kv.store_from_batch(r.slot, &kv.data, bucket, row, have, r.end);
+            }
+            self.insert_prefix(r.slot, &prompts[r.idx][..r.end]);
+            let o = (row * s + (r.end - 1)) * v;
+            out[r.idx] =
+                Some(PrefillOutcome { logits: logits.data[o..o + v].to_vec(), pos: r.end });
+        }
+        Ok(())
+    }
+
+    /// Batched suffix-continuation prefill of one same-`s` group: each
+    /// row brings `cached` resident KV tokens and computes
+    /// `prompts[r][start..end]` (exactly `s` tokens, `start <= cached`)
+    /// at their true positions; only `[cached, end)` is stored back, so
+    /// the cached prefix — possibly shared pages — is never rewritten.
+    fn prefill_cont_group(
+        &mut self,
+        s: usize,
+        rows: &[RowPlan],
+        prompts: &[&[usize]],
+        out: &mut [Option<PrefillOutcome>],
+    ) -> Result<()> {
+        let eng = self.eng;
+        let c = &eng.model.config;
+        let (v, t) = (c.vocab, eng.cfg.kv_len);
+        let bucket = self.min_bucket(rows.len());
+        let name = self.prefill_cont_name(bucket, s);
+
+        let mut tokens = vec![0i32; bucket * s];
+        let mut starts = vec![0i32; bucket];
+        let slots: Vec<usize> = rows.iter().map(|r| r.slot).collect();
+        for (row, r) in rows.iter().enumerate() {
+            debug_assert!(r.start <= r.cached && r.end - r.start == s, "cont row geometry");
+            for (j, &tok) in prompts[r.idx][r.start..r.end].iter().enumerate() {
+                tokens[row * s + j] = tok as i32;
+            }
+            starts[row] = r.start as i32;
+        }
+        // the resident prefixes ride in as the KV input; new positions
+        // are scattered in-graph at start..start+s per row
+        self.kv.gather_full(&slots, bucket, &mut self.kv_batch);
+        let tok_buf = eng.rt.upload_i32(&tokens, &[bucket, s])?;
+        let kv_buf = eng
+            .rt
+            .upload_f32(&self.kv_batch, &[c.n_layers, 2, bucket, c.n_heads, t, c.head_dim()])?;
+        let start_buf = eng.rt.upload_i32(&starts, &[bucket])?;
+        let args = eng.param_args(&[&tok_buf, &kv_buf, &start_buf]);
+        let outb = eng.rt.execute(&name, &args).context("continuation prefill")?;
+        let logits = eng.rt.download(&outb[0], &[bucket, s, v])?;
+        let kv = eng.rt.download(
+            &outb[1],
+            &[c.n_layers, 2, bucket, c.n_heads, t, c.head_dim()],
+        )?;
+        for (row, r) in rows.iter().enumerate() {
+            self.reserve(r.slot, r.end);
+            self.kv.store_from_batch(r.slot, &kv.data, bucket, row, r.cached, r.end);
+            self.insert_prefix(r.slot, &prompts[r.idx][..r.end]);
             let o = (row * s + (s - 1)) * v;
-            out[idx] = Some(PrefillOutcome { logits: logits.data[o..o + v].to_vec(), pos: s });
+            out[r.idx] =
+                Some(PrefillOutcome { logits: logits.data[o..o + v].to_vec(), pos: r.end });
         }
         Ok(())
     }
 }
 
+/// One row of a prefill call, planned onto a concrete artifact.
+struct RowPlan {
+    /// Index into the call's `slots`/`prompts`.
+    idx: usize,
+    slot: usize,
+    /// Tokens already resident in the slot (mapped or prior chunks).
+    cached: usize,
+    /// First computed token position (continuation rows may sit below
+    /// `cached` — bounded back-extension onto the compiled grid).
+    start: usize,
+    /// Tokens covered after this call ([`PrefillOutcome::pos`]).
+    end: usize,
+}
+
 impl StepForward for EngineStepForward<'_> {
+    fn map_prefix(&mut self, slot: usize, prompt: &[usize]) -> Result<Option<usize>> {
+        // a mapped prefix only skips compute through a continuation
+        // artifact; without one the prefix would be recomputed anyway
+        // (monolithic fallback), so report "no cache consulted" and
+        // leave the sharing to the intra-batch dedup inside prefill
+        let has_cont = !self.eng.prefill_cont_lens(self.buckets[0]).is_empty();
+        let Some(cache) = &mut self.cache else { return Ok(None) };
+        if !has_cont {
+            return Ok(None);
+        }
+        // cap the key below the full prompt: prefill must still compute
+        // the last position to produce the first token's logits
+        let key_len = prompt.len().saturating_sub(1);
+        let (pages, hit) = cache.lookup(&prompt[..key_len]);
+        if pages.is_empty() {
+            return Ok(Some(0));
+        }
+        self.kv.map_shared(slot, &pages, hit);
+        Ok(Some(hit))
+    }
+
     fn prefill(
         &mut self,
         slots: &[usize],
         prompts: &[&[usize]],
         cached: &[usize],
     ) -> Result<Vec<PrefillOutcome>> {
-        // the compiled prefill computes whole rows, so the session maps
-        // no prefix for this backend (map_prefix default); page-level
-        // dedup happens inside prefill_group instead
-        debug_assert!(cached.iter().all(|&c| c == 0), "artifact prefill takes whole prompts");
         // compiled prefill lengths; the (bucket × s) artifact grid is
         // uniform, so any configured bucket enumerates the same lengths
-        let lens = self.eng.prefill_lens(self.buckets[0]);
-        if lens.is_empty() {
+        let mono_lens = self.eng.prefill_lens(self.buckets[0]);
+        if mono_lens.is_empty() {
             bail!(
                 "no prefill artifact for model={} mode={:?} b={} t={}",
                 self.eng.cfg.model_name,
@@ -1023,22 +1246,26 @@ impl StepForward for EngineStepForward<'_> {
                 self.eng.cfg.kv_len
             );
         }
-        // group members by their own covering prefill length — a
-        // request's padding must not depend on its admission cohort
-        let mut groups: std::collections::BTreeMap<usize, Vec<(usize, usize)>> =
+        let cont_lens = self.eng.prefill_cont_lens(self.buckets[0]);
+        // plan each row onto its own artifact, then group by it — a
+        // request's execution must not depend on its admission cohort
+        let mut groups: std::collections::BTreeMap<(bool, usize), Vec<RowPlan>> =
             std::collections::BTreeMap::new();
-        for (idx, (&slot, &p)) in slots.iter().zip(prompts).enumerate() {
-            let s = lens
-                .iter()
-                .copied()
-                .find(|&l| l >= p.len())
-                .or_else(|| lens.last().copied())
-                .ok_or_else(|| anyhow!("no prefill length available"))?;
-            groups.entry(s).or_default().push((idx, slot));
+        for (idx, (&slot, p)) in slots.iter().zip(prompts).enumerate() {
+            let (is_cont, s, start, end) =
+                self.plan_row(cached[idx], p.len(), &mono_lens, &cont_lens)?;
+            groups
+                .entry((is_cont, s))
+                .or_default()
+                .push(RowPlan { idx, slot, cached: cached[idx], start, end });
         }
         let mut out: Vec<Option<PrefillOutcome>> = (0..slots.len()).map(|_| None).collect();
-        for (s, members) in &groups {
-            self.prefill_group(*s, members, prompts, &mut out)?;
+        for ((is_cont, s), rows) in &groups {
+            if *is_cont {
+                self.prefill_cont_group(*s, rows, prompts, &mut out)?;
+            } else {
+                self.prefill_mono_group(*s, rows, prompts, &mut out)?;
+            }
         }
         out.into_iter()
             .map(|o| o.ok_or_else(|| anyhow!("prefill group missed a member")))

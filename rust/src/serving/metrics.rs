@@ -76,6 +76,12 @@ pub struct SchedulerMetrics {
     /// Requests retired with a typed error (fault containment:
     /// exactly these requests failed; the session kept serving).
     pub failed: u64,
+    /// Requests that left the session without ever emitting a first
+    /// token (failed mid-prefill, aborted, drained before sampling).
+    /// These carry `ttft: None` and are **excluded** from the TTFT
+    /// percentiles — counting them as 0ms samples dragged p50/p99 down
+    /// dishonestly (the bug this counter replaced).
+    pub no_first_token: u64,
     /// Backend/scheduler faults absorbed without losing a request
     /// (batch isolation, prefix-map fallback, recovered invariants).
     pub faults_contained: u64,
@@ -169,6 +175,7 @@ impl SchedulerMetrics {
         self.degraded_admissions += o.degraded_admissions;
         self.deadline_misses += o.deadline_misses;
         self.failed += o.failed;
+        self.no_first_token += o.no_first_token;
         self.faults_contained += o.faults_contained;
         for i in 0..self.tier_row_steps.len() {
             self.tier_row_steps[i] += o.tier_row_steps[i];
@@ -316,8 +323,15 @@ impl EngineMetrics {
         self.waves.push(w);
     }
 
-    pub fn record_request(&mut self, ttft: Duration, latency: Duration) {
-        self.ttfts_ms.push(ttft.as_secs_f32() * 1e3);
+    /// Record one completed request. `ttft: None` means the request
+    /// never emitted a first token — it contributes a latency sample
+    /// but **no** TTFT sample (a 0ms default here skewed the TTFT
+    /// percentiles down; such requests are counted in
+    /// [`SchedulerMetrics::no_first_token`] instead).
+    pub fn record_request(&mut self, ttft: Option<Duration>, latency: Duration) {
+        if let Some(t) = ttft {
+            self.ttfts_ms.push(t.as_secs_f32() * 1e3);
+        }
         self.latencies_ms.push(latency.as_secs_f32() * 1e3);
     }
 
@@ -409,6 +423,12 @@ impl EngineMetrics {
                 self.scheduler.faults_contained, self.scheduler.failed,
             ));
         }
+        if self.scheduler.no_first_token > 0 {
+            s.push_str(&format!(
+                ", {} requests never reached a first token (excluded from TTFT)",
+                self.scheduler.no_first_token,
+            ));
+        }
         if self.pages.high_water_pages > 0 {
             s.push_str(&format!(
                 ", kv pages hw {} (cow {}, cached {}, evicted {})",
@@ -452,11 +472,26 @@ mod tests {
                 decode: Duration::from_millis(100),
                 decode_steps: 10,
             });
-            m.record_request(Duration::from_millis(5), Duration::from_millis(105));
+            m.record_request(Some(Duration::from_millis(5)), Duration::from_millis(105));
         }
         assert_eq!(m.total_generated(), 30);
         assert!((m.decode_tps() - 100.0).abs() < 1.0);
         assert!(m.summary().contains("3 waves"));
+    }
+
+    #[test]
+    fn no_first_token_requests_do_not_skew_ttft_percentiles() {
+        let mut m = EngineMetrics::default();
+        m.record_request(Some(Duration::from_millis(10)), Duration::from_millis(50));
+        m.record_request(Some(Duration::from_millis(20)), Duration::from_millis(60));
+        // a request that died before its first token: latency sample
+        // only — no 0ms TTFT dragging the percentiles down
+        m.record_request(None, Duration::from_millis(5));
+        m.scheduler.no_first_token += 1;
+        assert_eq!(m.ttfts_ms.len(), 2);
+        assert_eq!(m.latencies_ms.len(), 3);
+        assert!(m.ttft_p50_ms() >= 10.0, "p50 = {}", m.ttft_p50_ms());
+        assert!(m.summary().contains("1 requests never reached a first token"));
     }
 
     #[test]

@@ -45,10 +45,13 @@ mod server;
 
 pub use batcher::{
     covering_bucket, Batcher, BatcherConfig, ConfigError, PreemptMode, ShedLoad, SubmitOutcome,
+    DEFAULT_PREFILL_CHUNK_TOKENS,
 };
 pub use clock::Clock;
 pub use dispatch::{per_token_reference, DispatchArena, ExpertDispatcher, GroupedDispatcher};
-pub use engine::{Engine, EngineConfig, EngineStepForward, ExecMode, ExpertExec, DEFAULT_PAGE_LEN};
+pub use engine::{
+    Engine, EngineConfig, EngineStepForward, ExecMode, ExpertExec, CONT_GRID_STEP, DEFAULT_PAGE_LEN,
+};
 pub use fault::FaultInjectingForward;
 pub use metrics::{DispatchMetrics, EngineMetrics, PageMetrics, SchedulerMetrics, WaveMetrics};
 pub use prefix_cache::PrefixCache;

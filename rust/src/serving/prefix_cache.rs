@@ -21,10 +21,14 @@
 //!   ([`PagePool::try_page_mut`]) copies a shared page before any
 //!   divergent write, so a mapper can never corrupt the cached bytes.
 //!
-//! The artifact engine keys on the *padded prefill row* (front padding
-//! + prompt — see `serving::engine`), which bakes the alignment into
-//! the key; the host stub keys on the prompt itself. Either way the
-//! key is the exact semantic determinant of the cached bytes.
+//! Both backends key on the **raw prompt tokens**. The artifact engine
+//! prefills left-aligned rows (prompt token `j` at KV position `j`,
+//! trailing padding causally invisible — see `serving::engine`), so a
+//! position's KV bytes depend only on the token prefix, never on the
+//! compiled row length; the host stub stores one token per KV column.
+//! Either way the key is the exact semantic determinant of the cached
+//! bytes, and a prefix cached by any artifact size (or any chunk
+//! schedule) is valid for every other.
 //!
 //! Eviction is LRU over **leaf** nodes whose page has no mapper other
 //! than the cache itself (refcount 1): a prefix currently mapped by a

@@ -194,7 +194,24 @@ pub struct RequestResult {
     pub tokens: Vec<usize>,
     /// Time to first token. Wave path: from wave start. Continuous
     /// path: from enqueue (user-perceived, queue wait included).
-    pub ttft: Duration,
+    /// `None` when the request retired without ever emitting a first
+    /// token (drained mid-prefill, aborted, failed before sampling) —
+    /// such requests are excluded from TTFT percentiles and counted in
+    /// `SchedulerMetrics::no_first_token` instead of being recorded as
+    /// a dishonest 0ms sample.
+    pub ttft: Option<Duration>,
+    /// Enqueue→first-token in scheduler steps, inclusive of the step
+    /// that sampled the token (continuous path; deterministic under a
+    /// manual clock, and ≥ 1 + `queued_steps` once chunked prefill
+    /// spreads a long prompt over several steps). Wave path: `Some(1)`
+    /// — one prefill call. `None` iff [`RequestResult::ttft`] is.
+    pub ttft_steps: Option<u64>,
+    /// Scheduler steps spanned from the first sampled token to the
+    /// last (0 when ≤ 1 token). Equals `tokens.len() - 1` for an
+    /// uninterrupted decode; preemption stretches it, which is exactly
+    /// what makes per-request TPOT (`decode_span_steps / (tokens - 1)`)
+    /// honest about interference.
+    pub decode_span_steps: u64,
     /// Total latency including queueing.
     pub latency: Duration,
     /// Enqueue→(wave start | slot admission) wait.

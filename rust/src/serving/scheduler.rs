@@ -13,7 +13,11 @@
 //! 2. **admits** queued requests by priority class into free slots
 //!    (recycling retired slots before touching fresh ones), resuming
 //!    preempted victims ahead of equal-or-lower-class fresh work,
-//! 3. **prefills** the admissions and samples their first token,
+//! 3. **prefills** the admissions — monolithically, or in fixed
+//!    token-budget chunks ([`BatcherConfig::prefill_chunk_tokens`])
+//!    interleaved with decode steps so one long prompt cannot freeze
+//!    the live decodes; a request samples its first token only when
+//!    its final chunk runs,
 //! 4. runs **one decode step** over the live slots at the smallest
 //!    compiled batch bucket covering them, and
 //! 5. **retires** every request that hit its stop token,
@@ -130,6 +134,20 @@ pub struct SlotState {
     pub pos: usize,
     /// Enqueue→first-token time, set when prefill samples.
     pub ttft: Option<Duration>,
+    /// Prompt tokens already resident in the slot's KV: the mapped
+    /// prefix plus every completed prefill chunk. Equal to the prompt
+    /// length once prefill finishes; strictly less while the request
+    /// is mid-prefill under a chunk budget
+    /// (`BatcherConfig::prefill_chunk_tokens`).
+    pub prefilled: usize,
+    /// Step index at which the request entered the admission queue
+    /// (the batcher's arrival stamp — survives preemption, so the
+    /// step-denominated TTFT covers preempted waits too).
+    pub enqueue_step: u64,
+    /// Step index that sampled the first token (`None` until then).
+    pub first_token_step: Option<u64>,
+    /// Step index that sampled the most recent token.
+    pub last_token_step: u64,
 }
 
 /// The KV-slot pool + bucket policy. Owns which request occupies which
@@ -234,6 +252,7 @@ impl Scheduler {
         enqueued: Instant,
         queued_steps: u64,
         now: Instant,
+        enqueue_step: u64,
     ) -> Result<usize, SchedError> {
         let rng = Rng::new(request.params.seed);
         let wait_ms = now.saturating_duration_since(enqueued).as_secs_f32() * 1e3;
@@ -248,6 +267,10 @@ impl Scheduler {
             cur: 0,
             pos: 0,
             ttft: None,
+            prefilled: 0,
+            enqueue_step,
+            first_token_step: None,
+            last_token_step: 0,
         };
         let sid = self.install(st).map_err(|_| SchedError::PoolFull)?;
         self.next_admit_seq += 1;
@@ -290,6 +313,13 @@ impl Scheduler {
             .filter(|(_, st)| st.request.priority.index() > above.index())
             .max_by_key(|&(_, st)| (st.request.priority.index(), st.admit_seq))
             .map(|(i, _)| i)
+    }
+
+    /// Whether `sid` currently holds a request (chunked-prefill
+    /// bookkeeping checks this before touching a slot that may have
+    /// been detached mid-step by a contained fault).
+    pub fn occupied(&self, sid: usize) -> bool {
+        self.slots[sid].is_some()
     }
 
     pub fn slot(&self, sid: usize) -> &SlotState {
@@ -467,10 +497,23 @@ pub struct ContinuousSession<F: StepForward> {
     /// Preempted requests awaiting a free slot, FIFO per arrival of
     /// the preemption (resume prefers the front).
     preempted: VecDeque<Preempted>,
+    /// Per-step prefill token budget copied from the config
+    /// (`BatcherConfig::prefill_chunk_tokens`; 0 = unbounded, i.e.
+    /// monolithic prefill).
+    chunk_tokens: usize,
+    /// Slots holding admitted-but-not-fully-prefilled requests, in
+    /// admission order (resumed mid-prefill victims re-enter at the
+    /// front — they carry sunk work). Each step spends the chunk
+    /// budget down this list; a slot leaves it when its final chunk
+    /// samples the first token, or when it is preempted, failed or
+    /// aborted.
+    prefilling: Vec<usize>,
     // reused step buffers — the steady-state scheduling loop performs
     // no per-step allocations outside the forward itself
     slot_buf: Vec<usize>,
     cached_buf: Vec<usize>,
+    /// Per-chunk prefill end positions, aligned with `slot_buf`.
+    ends_buf: Vec<usize>,
     rows_buf: Vec<usize>,
     toks_buf: Vec<i32>,
     pos_buf: Vec<usize>,
@@ -514,6 +557,7 @@ impl<F: StepForward> ContinuousSession<F> {
         let sched = Scheduler::new(&cfg.buckets)?;
         let preempt_mode = cfg.preempt;
         let tier_ratios = cfg.tier_ratios;
+        let chunk_tokens = cfg.prefill_chunk_tokens;
         let batcher = Batcher::with_clock(cfg, clock.clone())?;
         Ok(ContinuousSession {
             batcher,
@@ -524,8 +568,11 @@ impl<F: StepForward> ContinuousSession<F> {
             tier_ratios,
             step_idx: 0,
             preempted: VecDeque::new(),
+            chunk_tokens,
+            prefilling: Vec::new(),
             slot_buf: Vec::new(),
             cached_buf: Vec::new(),
+            ends_buf: Vec::new(),
             rows_buf: Vec::new(),
             toks_buf: Vec::new(),
             pos_buf: Vec::new(),
@@ -657,18 +704,25 @@ impl<F: StepForward> ContinuousSession<F> {
     /// [`ContinuousSession::take_finished`].
     pub fn abort_all(&mut self) -> Vec<u64> {
         let mut ids = Vec::new();
+        self.prefilling.clear();
         self.rows_buf.clear();
         self.sched.live_rows(&mut self.rows_buf);
         let rows = std::mem::take(&mut self.rows_buf);
         for sid in rows {
             if let Some(st) = self.sched.detach(sid) {
                 self.fwd.release(sid);
+                if st.generated.is_empty() {
+                    self.sched.metrics.no_first_token += 1;
+                }
                 ids.push(st.request.id);
             }
         }
         for p in self.preempted.drain(..) {
             if let Some(kv) = p.kv {
                 self.fwd.drop_parked(kv);
+            }
+            if p.st.generated.is_empty() {
+                self.sched.metrics.no_first_token += 1;
             }
             ids.push(p.st.request.id);
         }
@@ -759,7 +813,7 @@ impl<F: StepForward> ContinuousSession<F> {
             self.run_prompt_tokens += r.prompt.len();
             let rid = r.id;
             let tier = r.tier;
-            match self.sched.assign(r, enq, waited, now) {
+            match self.sched.assign(r, enq, waited, now, arrival) {
                 Ok(sid) => {
                     // the backend learns the row's operating point
                     // before any prefill/decode touches the slot
@@ -773,92 +827,148 @@ impl<F: StepForward> ContinuousSession<F> {
             }
         }
 
-        // --- prefill the fresh admissions ---
-        if !self.slot_buf.is_empty() {
-            // prefix-cache admission: ask the backend to map each
-            // prompt's longest cached prefix before prefill, and meter
-            // the prefill tokens it saves
-            self.cached_buf.clear();
-            for i in 0..self.slot_buf.len() {
-                let sid = self.slot_buf[i];
-                let mapped = {
-                    let prompt = self.sched.slot(sid).request.prompt.as_slice();
-                    self.fwd.map_prefix(sid, prompt)
-                };
-                let mapped = match mapped {
-                    Ok(m) => m,
-                    Err(_) => {
-                        // contained: drop the (possibly partial)
-                        // mapping and prefill uncached
-                        self.fwd.release(sid);
-                        self.sched.metrics.faults_contained += 1;
-                        None
-                    }
-                };
-                let plen = self.sched.slot(sid).request.prompt.len();
-                let cached = mapped.unwrap_or(0);
-                debug_assert!(cached < plen.max(1), "mapped prefix must leave a suffix");
-                if mapped.is_some() {
-                    self.sched.metrics.prefix_lookups += 1;
-                    if cached > 0 {
-                        self.sched.metrics.prefix_hits += 1;
-                        self.sched.metrics.prefill_tokens_saved += cached as u64;
-                    }
-                }
-                self.sched.metrics.prefill_tokens += (plen - cached) as u64;
-                self.cached_buf.push(cached);
-            }
-            let t0 = self.clock.now();
-            let prompts: Vec<&[usize]> = self
-                .slot_buf
-                .iter()
-                .map(|&sid| self.sched.slot(sid).request.prompt.as_slice())
-                .collect();
-            let res = self.fwd.prefill(&self.slot_buf, &prompts, &self.cached_buf);
-            drop(prompts);
-            self.prefill_time += self.clock.now().saturating_duration_since(t0);
-            let outcomes: Vec<Option<PrefillOutcome>> = match res {
-                Ok(o) if o.len() == self.slot_buf.len() => o.into_iter().map(Some).collect(),
-                Ok(o) => {
+        // --- prefix-map the fresh admissions. The prefill-work gauges
+        // meter here, once per request, regardless of how many chunks
+        // later carry the work out. ---
+        for i in 0..self.slot_buf.len() {
+            let sid = self.slot_buf[i];
+            let mapped = {
+                let prompt = self.sched.slot(sid).request.prompt.as_slice();
+                self.fwd.map_prefix(sid, prompt)
+            };
+            let mapped = match mapped {
+                Ok(m) => m,
+                Err(_) => {
+                    // contained: drop the (possibly partial)
+                    // mapping and prefill uncached
+                    self.fwd.release(sid);
                     self.sched.metrics.faults_contained += 1;
-                    let msg = format!(
-                        "prefill returned {} outcomes for {} slots",
-                        o.len(),
-                        self.slot_buf.len()
-                    );
-                    self.recover_prefill(&msg)
-                }
-                Err(e) => {
-                    self.sched.metrics.faults_contained += 1;
-                    self.recover_prefill(&format!("{e:#}"))
+                    None
                 }
             };
-            // stamp after the forward: TTFT includes prefill compute
-            let t_first = self.clock.now();
-            for (i, out) in outcomes.into_iter().enumerate() {
-                let Some(out) = out else { continue };
-                let sid = self.slot_buf[i];
-                let done = {
-                    let st = self.sched.slot_mut(sid);
-                    st.pos = out.pos;
-                    let tok =
-                        st.rng.sample_logits(&out.logits, st.request.params.temperature);
-                    st.generated.push(tok);
-                    st.cur = tok as i32;
-                    st.ttft = Some(t_first.saturating_duration_since(st.enqueued));
-                    self.run_generated += 1;
-                    st.request.params.stop_token == Some(tok)
-                        || st.generated.len() >= st.request.params.max_new_tokens
-                        || st.pos >= kv_cap
-                };
-                if done {
-                    self.retire_finished(sid, t_first);
+            let plen = self.sched.slot(sid).request.prompt.len();
+            let cached = mapped.unwrap_or(0);
+            debug_assert!(cached < plen.max(1), "mapped prefix must leave a suffix");
+            if mapped.is_some() {
+                self.sched.metrics.prefix_lookups += 1;
+                if cached > 0 {
+                    self.sched.metrics.prefix_hits += 1;
+                    self.sched.metrics.prefill_tokens_saved += cached as u64;
                 }
+            }
+            self.sched.metrics.prefill_tokens += (plen - cached) as u64;
+            self.sched.slot_mut(sid).prefilled = cached;
+            self.prefilling.push(sid);
+        }
+
+        // --- prefill: spend this step's chunk budget down the
+        // mid-prefill list (admission order; resumed victims sit at
+        // the front). With no budget (`prefill_chunk_tokens == 0`)
+        // every pending prefill completes this step — the monolithic
+        // path. A request's first token samples only when its *final*
+        // chunk runs; earlier chunks advance KV and discard logits, so
+        // TTFT stamps at the real first token, never at chunk
+        // completion. ---
+        if !self.prefilling.is_empty() {
+            let mut remaining =
+                if self.chunk_tokens == 0 { usize::MAX } else { self.chunk_tokens };
+            self.slot_buf.clear();
+            self.cached_buf.clear();
+            self.ends_buf.clear();
+            for i in 0..self.prefilling.len() {
+                let sid = self.prefilling[i];
+                let st = self.sched.slot(sid);
+                let need = st.request.prompt.len() - st.prefilled;
+                if remaining == 0 && need > 0 {
+                    break;
+                }
+                let take = need.min(remaining);
+                remaining -= take;
+                self.slot_buf.push(sid);
+                self.cached_buf.push(st.prefilled);
+                self.ends_buf.push(st.prefilled + take);
+            }
+            if !self.slot_buf.is_empty() {
+                let t0 = self.clock.now();
+                let prompts: Vec<&[usize]> = self
+                    .slot_buf
+                    .iter()
+                    .zip(&self.ends_buf)
+                    .map(|(&sid, &end)| &self.sched.slot(sid).request.prompt[..end])
+                    .collect();
+                let res = self.fwd.prefill(&self.slot_buf, &prompts, &self.cached_buf);
+                drop(prompts);
+                self.prefill_time += self.clock.now().saturating_duration_since(t0);
+                let outcomes: Vec<Option<PrefillOutcome>> = match res {
+                    Ok(o) if o.len() == self.slot_buf.len() => {
+                        o.into_iter().map(Some).collect()
+                    }
+                    Ok(o) => {
+                        self.sched.metrics.faults_contained += 1;
+                        let msg = format!(
+                            "prefill returned {} outcomes for {} slots",
+                            o.len(),
+                            self.slot_buf.len()
+                        );
+                        self.recover_prefill(&msg)
+                    }
+                    Err(e) => {
+                        self.sched.metrics.faults_contained += 1;
+                        self.recover_prefill(&format!("{e:#}"))
+                    }
+                };
+                // stamp after the forward: TTFT includes prefill compute
+                let t_first = self.clock.now();
+                for (i, out) in outcomes.into_iter().enumerate() {
+                    let Some(out) = out else { continue };
+                    let sid = self.slot_buf[i];
+                    let plen = self.sched.slot(sid).request.prompt.len();
+                    if out.pos < plen {
+                        // non-final chunk: KV advanced, logits discarded.
+                        // A backend may stop short of the planned end
+                        // (the artifact engine caps a chunk at its
+                        // largest compiled length) — any forward
+                        // progress is legal, zero progress is not (it
+                        // would loop forever).
+                        debug_assert!(out.pos > self.cached_buf[i], "prefill chunk made no progress");
+                        self.sched.slot_mut(sid).prefilled = out.pos;
+                        continue;
+                    }
+                    let done = {
+                        let st = self.sched.slot_mut(sid);
+                        st.prefilled = plen;
+                        st.pos = out.pos;
+                        let tok =
+                            st.rng.sample_logits(&out.logits, st.request.params.temperature);
+                        st.generated.push(tok);
+                        st.cur = tok as i32;
+                        st.ttft = Some(t_first.saturating_duration_since(st.enqueued));
+                        st.first_token_step = Some(entry_step);
+                        st.last_token_step = entry_step;
+                        self.run_generated += 1;
+                        st.request.params.stop_token == Some(tok)
+                            || st.generated.len() >= st.request.params.max_new_tokens
+                            || st.pos >= kv_cap
+                    };
+                    if done {
+                        self.retire_finished(sid, t_first);
+                    }
+                }
+                // completed slots now hold a first token; failed ones
+                // were detached by fail_slot — both leave the list
+                let sched = &self.sched;
+                self.prefilling
+                    .retain(|&sid| sched.occupied(sid) && sched.slot(sid).generated.is_empty());
             }
         }
 
-        // --- one decode step over the live slots ---
+        // --- one decode step over the live slots that have a first
+        // token (mid-prefill slots hold KV but nothing to decode) ---
         self.sched.live_rows(&mut self.rows_buf);
+        {
+            let sched = &self.sched;
+            self.rows_buf.retain(|&sid| !sched.slot(sid).generated.is_empty());
+        }
         if self.rows_buf.is_empty() {
             return Ok(std::mem::take(&mut self.finished_buf));
         }
@@ -888,6 +998,7 @@ impl<F: StepForward> ContinuousSession<F> {
                         st.generated.push(tok);
                         st.cur = tok as i32;
                         st.pos += 1;
+                        st.last_token_step = entry_step;
                         self.run_generated += 1;
                         let done = st.request.params.stop_token == Some(tok)
                             || st.generated.len() >= st.request.params.max_new_tokens
@@ -938,6 +1049,10 @@ impl<F: StepForward> ContinuousSession<F> {
             self.sched.metrics.faults_contained += 1;
             return;
         };
+        // a mid-prefill victim leaves the chunk list with its state;
+        // resume re-enters it at the front (its slot id may be reused
+        // by a fresh admission before then)
+        self.prefilling.retain(|&s| s != sid);
         self.sched.metrics.preemptions += 1;
         let kv = if self.preempt_mode == PreemptMode::Park { self.fwd.park(sid) } else { None };
         if kv.is_some() {
@@ -968,6 +1083,24 @@ impl<F: StepForward> ContinuousSession<F> {
         // preemption preserves the tier: the resumed rows keep running
         // at the same operating point as before eviction
         self.fwd.set_slot_ratio(sid, self.tier_ratios.ratio(tier));
+        // a victim evicted mid-prefill (no first token yet) re-enters
+        // the chunk list at the front — it carries sunk work. Parked KV
+        // keeps its partial extent and chunking continues at
+        // `prefilled`; dropped KV restarts the prompt from zero, with
+        // the lost progress metered as recompute.
+        if self.sched.slot(sid).generated.is_empty() {
+            match kv {
+                Some(parked) => self.fwd.unpark(sid, parked),
+                None => {
+                    let st = self.sched.slot_mut(sid);
+                    let lost = st.prefilled as u64;
+                    st.prefilled = 0;
+                    self.sched.metrics.preempt_recompute_tokens += lost;
+                }
+            }
+            self.prefilling.insert(0, sid);
+            return true;
+        }
         match kv {
             Some(parked) => self.fwd.unpark(sid, parked),
             None => {
@@ -1016,8 +1149,14 @@ impl<F: StepForward> ContinuousSession<F> {
             self.sched.metrics.faults_contained += 1;
             return;
         };
+        self.prefilling.retain(|&s| s != sid);
         self.fwd.release(sid);
         self.sched.metrics.failed += 1;
+        if st.generated.is_empty() {
+            // failed before its first token: no TTFT sample exists —
+            // count it instead of letting a 0ms default skew the tail
+            self.sched.metrics.no_first_token += 1;
+        }
         self.failed_buf.push(RequestFailure { id: st.request.id, error });
     }
 
@@ -1071,6 +1210,9 @@ impl<F: StepForward> ContinuousSession<F> {
     /// in isolation retire with a typed error; the rest advance
     /// exactly one token, same as the batched step would have.
     fn recover_decode(&mut self, kv_cap: usize, batch_err: &str) {
+        // step() bumped the counter on entry; the isolated replays
+        // still belong to the step being recovered
+        let cur_step = self.step_idx.saturating_sub(1);
         let rows = self.rows_buf.clone();
         for &sid in &rows {
             let (ctx, cur, pos, tier) = {
@@ -1084,7 +1226,7 @@ impl<F: StepForward> ContinuousSession<F> {
             // same occupant, rebuilt slot: re-establish its tier so the
             // isolated replay runs at the ratio the batch step used
             self.fwd.set_slot_ratio(sid, self.tier_ratios.ratio(tier));
-            let cached = match self.fwd.map_prefix(sid, &ctx) {
+            let mut cached = match self.fwd.map_prefix(sid, &ctx) {
                 Ok(m) => m.unwrap_or(0),
                 Err(_) => {
                     self.fwd.release(sid);
@@ -1092,23 +1234,36 @@ impl<F: StepForward> ContinuousSession<F> {
                     0
                 }
             };
-            match self.fwd.prefill(&[sid], &[ctx.as_slice()], &[cached]) {
-                Ok(o) if o.len() == 1 => {}
-                Ok(o) => {
-                    let msg = format!(
-                        "decode recovery prefill returned {} outcomes (batch failure: {batch_err})",
-                        o.len()
-                    );
-                    self.fail_slot(sid, msg);
-                    continue;
+            // a backend may rebuild the KV in several partial prefills
+            // (the artifact engine caps one call at its largest
+            // compiled length); loop until the context is covered, and
+            // treat zero progress as the row's failure
+            let mut rebuilt = true;
+            while cached < ctx.len() {
+                match self.fwd.prefill(&[sid], &[ctx.as_slice()], &[cached]) {
+                    Ok(o) if o.len() == 1 && o[0].pos > cached => cached = o[0].pos,
+                    Ok(o) => {
+                        let msg = format!(
+                            "decode recovery prefill returned {} outcomes at pos {:?} (batch failure: {batch_err})",
+                            o.len(),
+                            o.first().map(|x| x.pos)
+                        );
+                        self.fail_slot(sid, msg);
+                        rebuilt = false;
+                        break;
+                    }
+                    Err(e) => {
+                        self.fail_slot(
+                            sid,
+                            format!("decode recovery prefill: {e:#} (batch failure: {batch_err})"),
+                        );
+                        rebuilt = false;
+                        break;
+                    }
                 }
-                Err(e) => {
-                    self.fail_slot(
-                        sid,
-                        format!("decode recovery prefill: {e:#} (batch failure: {batch_err})"),
-                    );
-                    continue;
-                }
+            }
+            if !rebuilt {
+                continue;
             }
             let bucket = self.sched.min_bucket(1);
             match self.fwd.decode(&[sid], &[cur], &[pos], bucket) {
@@ -1122,6 +1277,7 @@ impl<F: StepForward> ContinuousSession<F> {
                         st.generated.push(tok);
                         st.cur = tok as i32;
                         st.pos += 1;
+                        st.last_token_step = cur_step;
                         self.run_generated += 1;
                         let done = st.request.params.stop_token == Some(tok)
                             || st.generated.len() >= st.request.params.max_new_tokens
@@ -1151,12 +1307,21 @@ impl<F: StepForward> ContinuousSession<F> {
 
 /// Package a retired slot as a request result. Continuous-batching
 /// TTFT is user-perceived (enqueue→first token); `queued` is the
-/// enqueue→admission wait the scheduler controlled.
+/// enqueue→admission wait the scheduler controlled. A slot retired
+/// before sampling anything keeps `ttft: None` — the old
+/// `unwrap_or_default()` here recorded a dishonest 0ms sample for
+/// exactly those requests and dragged the percentiles down.
 fn finish(st: SlotState, now: Instant) -> RequestResult {
     RequestResult {
         id: st.request.id,
         tokens: st.generated,
-        ttft: st.ttft.unwrap_or_default(),
+        ttft: st.ttft,
+        ttft_steps: st
+            .first_token_step
+            .map(|s| s.saturating_sub(st.enqueue_step) + 1),
+        decode_span_steps: st
+            .first_token_step
+            .map_or(0, |f| st.last_token_step.saturating_sub(f)),
         latency: now.saturating_duration_since(st.enqueued),
         queued: st.admitted_at.saturating_duration_since(st.enqueued),
         queued_steps: st.queued_steps,
@@ -1500,12 +1665,12 @@ mod tests {
     fn retired_slots_recycle_first() {
         let mut s = Scheduler::new(&[4]).unwrap();
         let now = Instant::now();
-        let a = s.assign(req(0, 4), now, 0, now).unwrap();
-        let b = s.assign(req(1, 4), now, 0, now).unwrap();
+        let a = s.assign(req(0, 4), now, 0, now, 0).unwrap();
+        let b = s.assign(req(1, 4), now, 0, now, 0).unwrap();
         assert_eq!((a, b), (0, 1));
         s.retire(a).unwrap();
         // the just-retired slot 0 is taken before fresh slot 2
-        let c = s.assign(req(2, 4), now, 0, now).unwrap();
+        let c = s.assign(req(2, 4), now, 0, now, 0).unwrap();
         assert_eq!(c, 0);
         assert_eq!(s.metrics.slot_reuses, 1);
         assert_eq!(s.live(), 2);
@@ -1516,22 +1681,22 @@ mod tests {
     fn pool_full_and_double_retire_are_recoverable_errors() {
         let mut s = Scheduler::new(&[1]).unwrap();
         let now = Instant::now();
-        let a = s.assign(req(0, 4), now, 0, now).unwrap();
-        assert_eq!(s.assign(req(1, 4), now, 0, now).err(), Some(SchedError::PoolFull));
+        let a = s.assign(req(0, 4), now, 0, now, 0).unwrap();
+        assert_eq!(s.assign(req(1, 4), now, 0, now, 0).err(), Some(SchedError::PoolFull));
         s.retire(a).unwrap();
         assert_eq!(s.retire(a).err(), Some(SchedError::EmptySlot(a)));
         // the pool is still usable after both error paths
-        assert!(s.assign(req(2, 4), now, 0, now).is_ok());
+        assert!(s.assign(req(2, 4), now, 0, now, 0).is_ok());
     }
 
     #[test]
     fn victim_is_youngest_of_lowest_class() {
         let mut s = Scheduler::new(&[4]).unwrap();
         let now = Instant::now();
-        let high = s.assign(req(0, 4).with_priority(Priority::High), now, 0, now).unwrap();
-        let norm = s.assign(req(1, 4).with_priority(Priority::Normal), now, 0, now).unwrap();
-        let low_old = s.assign(req(2, 4).with_priority(Priority::Low), now, 0, now).unwrap();
-        let low_new = s.assign(req(3, 4).with_priority(Priority::Low), now, 0, now).unwrap();
+        let high = s.assign(req(0, 4).with_priority(Priority::High), now, 0, now, 0).unwrap();
+        let norm = s.assign(req(1, 4).with_priority(Priority::Normal), now, 0, now, 0).unwrap();
+        let low_old = s.assign(req(2, 4).with_priority(Priority::Low), now, 0, now, 0).unwrap();
+        let low_new = s.assign(req(3, 4).with_priority(Priority::Low), now, 0, now, 0).unwrap();
         // lowest class first, youngest admission within it
         assert_eq!(s.pick_victim(Priority::High), Some(low_new));
         s.retire(low_new).unwrap();
@@ -1726,6 +1891,151 @@ mod tests {
             (0, 0, 0),
             "an idle re-flush reports no new events"
         );
+    }
+
+    #[test]
+    fn chunked_prefill_interleaves_decodes_and_keeps_tokens_identical() {
+        let long = Request::new(
+            1,
+            (1..=24).map(|t| t % 7).collect(),
+            GenParams { max_new_tokens: 4, temperature: 0.0, seed: 9, stop_token: None },
+        );
+        let short = req(0, 6);
+        let run = |chunk: usize| {
+            let mut c = cfg(vec![1, 2]);
+            c.prefill_chunk_tokens = chunk;
+            let mut sess =
+                ContinuousSession::new(c, StubForward::new(2, 17, usize::MAX)).unwrap();
+            sess.enqueue(short.clone());
+            sess.enqueue(long.clone());
+            let mut out = sess.drain().unwrap();
+            out.sort_by_key(|r| r.id);
+            let m = sess.take_metrics();
+            assert_eq!(sess.forward().live_contexts(), 0);
+            (out, m)
+        };
+        let (chunked, m) = run(8);
+        let (mono, m_mono) = run(0);
+        for (a, b) in chunked.iter().zip(&mono) {
+            assert_eq!(a.tokens, b.tokens, "chunking must be token-invisible");
+        }
+        assert_eq!(chunked[0].tokens, stub_reference(&short, 17, usize::MAX));
+        assert_eq!(chunked[1].tokens, stub_reference(&long, 17, usize::MAX));
+        // total prefill work is the same; only its step placement moved
+        assert_eq!(m.prefill_tokens, m_mono.prefill_tokens);
+        // short admits at step 0 and first-tokens immediately; the
+        // 24-token prompt spends 8 tokens/step: 5 at step 0 (short's 3
+        // took budget), 8+8 at steps 1-2, final 3 at step 3
+        assert_eq!(chunked[0].ttft_steps, Some(1));
+        assert_eq!(chunked[1].ttft_steps, Some(4));
+        assert_eq!(mono[1].ttft_steps, Some(1), "monolithic prefill finishes in one step");
+        // the short request decoded while the long prompt was still
+        // prefilling: its 6 tokens span steps 0..4 untouched
+        assert_eq!(chunked[0].decode_span_steps, 4);
+        assert_eq!(m.no_first_token, 0);
+    }
+
+    #[test]
+    fn chunked_prefill_ttft_stamps_at_first_token_not_chunk_completion() {
+        let r = Request::new(
+            0,
+            (0..10).collect(),
+            GenParams { max_new_tokens: 3, temperature: 0.0, seed: 5, stop_token: None },
+        );
+        let mut c = cfg(vec![1]);
+        c.prefill_chunk_tokens = 4;
+        let mut sess = ContinuousSession::new(c, StubForward::new(1, 11, usize::MAX)).unwrap();
+        sess.enqueue(r.clone());
+        // chunks [0,4) and [4,8) complete without sampling anything
+        assert!(sess.step().unwrap().is_empty());
+        assert!(sess.step().unwrap().is_empty());
+        assert_eq!(sess.live(), 1);
+        assert_eq!(sess.metrics().decode_steps, 0, "nothing decodable during chunking");
+        let out = sess.drain().unwrap();
+        assert_eq!(out[0].tokens, stub_reference(&r, 11, usize::MAX));
+        // first token sampled at step 2 (the final [8,10) chunk), not
+        // at either earlier chunk completion
+        assert_eq!(out[0].ttft_steps, Some(3));
+    }
+
+    #[test]
+    fn mid_prefill_preemption_resumes_without_leaks_in_both_modes() {
+        for mode in [PreemptMode::Park, PreemptMode::Drop] {
+            let short_low = Request::new(
+                0,
+                vec![1, 2, 3],
+                GenParams { max_new_tokens: 8, temperature: 0.0, seed: 0, stop_token: None },
+            )
+            .with_priority(Priority::Low);
+            let long_low = Request::new(
+                1,
+                (1..=16).map(|t| t % 5).collect(),
+                GenParams { max_new_tokens: 3, temperature: 0.0, seed: 1, stop_token: None },
+            )
+            .with_priority(Priority::Low);
+            let high = req(2, 2).with_priority(Priority::High).with_deadline_steps(0);
+            let mut c = cfg(vec![1, 2]);
+            c.preempt = mode;
+            c.prefill_chunk_tokens = 4;
+            let mut sess =
+                ContinuousSession::new(c, StubForward::new(2, 17, usize::MAX)).unwrap();
+            sess.enqueue(short_low.clone());
+            sess.enqueue(long_low.clone());
+            sess.step().unwrap(); // long is mid-prefill (short took 3 of the 4-token budget)
+            sess.enqueue(high.clone());
+            let mut results = sess.step().unwrap(); // urgent High evicts mid-prefill long
+            results.extend(sess.drain().unwrap());
+            results.sort_by_key(|r| r.id);
+            assert_eq!(results.len(), 3, "{mode:?}");
+            assert_eq!(results[0].tokens, stub_reference(&short_low, 17, usize::MAX));
+            assert_eq!(results[1].tokens, stub_reference(&long_low, 17, usize::MAX));
+            assert_eq!(results[2].tokens, stub_reference(&high, 17, usize::MAX));
+            let m = sess.take_metrics();
+            assert_eq!(m.preemptions, 1, "{mode:?}");
+            assert_eq!(m.resumed, 1, "{mode:?}");
+            assert_eq!(m.no_first_token, 0, "{mode:?}");
+            match mode {
+                PreemptMode::Park => {
+                    assert_eq!(m.preempt_recompute_tokens, 0, "parked chunks never recompute")
+                }
+                _ => {
+                    assert!(m.preempt_recompute_tokens > 0, "dropped chunks must recompute");
+                    assert_eq!(
+                        sess.forward().prefilled_tokens,
+                        m.prefill_tokens + m.preempt_recompute_tokens,
+                        "write meter covers prefill + mid-prefill recompute exactly"
+                    );
+                }
+            }
+            assert_eq!(sess.forward().live_contexts(), 0, "{mode:?}");
+            assert_eq!(sess.forward().kv().pages().pages_in_use(), 0, "no leaked pages");
+        }
+    }
+
+    #[test]
+    fn finish_without_first_token_reports_none_not_zero() {
+        let now = Instant::now();
+        let st = SlotState {
+            request: req(7, 4),
+            enqueued: now,
+            admitted_at: now,
+            queued_steps: 2,
+            admit_seq: 0,
+            rng: Rng::new(0),
+            generated: Vec::new(),
+            cur: 0,
+            pos: 0,
+            ttft: None,
+            prefilled: 3,
+            enqueue_step: 0,
+            first_token_step: None,
+            last_token_step: 0,
+        };
+        let r = finish(st, now);
+        assert_eq!(r.ttft, None, "no first token → no TTFT sample, not 0ms");
+        assert_eq!(r.ttft_steps, None);
+        assert_eq!(r.decode_span_steps, 0);
+        assert!(r.tokens.is_empty());
     }
 
     #[test]

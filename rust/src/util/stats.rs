@@ -19,12 +19,18 @@ pub fn std_dev(xs: &[f32]) -> f32 {
 }
 
 /// Percentile by linear interpolation on sorted copy; `p` in [0, 100].
+///
+/// Sorts with [`f32::total_cmp`] so a stray NaN sample (e.g. from a
+/// zero-duration rate division upstream) orders deterministically
+/// after every finite value instead of panicking the summary; a NaN
+/// can then only surface in the extreme top percentiles it actually
+/// occupies.
 pub fn percentile(xs: &[f32], p: f64) -> f32 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v: Vec<f32> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f32::total_cmp);
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -141,6 +147,19 @@ mod tests {
         assert!((percentile(&xs, 50.0) - 50.0).abs() < 1e-6);
         assert!((percentile(&xs, 99.0) - 99.0).abs() < 1e-6);
         assert!((percentile(&xs, 0.0) - 0.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentile_survives_nan_samples() {
+        // regression: partial_cmp(..).unwrap() panicked on the first
+        // NaN; total_cmp orders NaN after +inf, so low/mid percentiles
+        // stay finite and only the top of the distribution sees it.
+        let xs = [3.0f32, f32::NAN, 1.0, 2.0];
+        let p50 = percentile(&xs, 50.0);
+        assert!((p50 - 2.0).abs() < 1e-6, "p50 = {p50}");
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-6);
+        assert!(percentile(&xs, 100.0).is_nan());
+        assert!(percentile(&[f32::NAN], 50.0).is_nan());
     }
 
     #[test]

@@ -1,0 +1,327 @@
+//! Chunked-prefill property suite (host-only, stub forward): the
+//! ISSUE-9 acceptance properties.
+//!
+//! Chunked prefill splits a long prompt's prefill across scheduler
+//! steps under a per-step token budget so one long prompt cannot
+//! freeze live decodes. The suite pins what chunking is — a pure
+//! rescheduling of the same compute:
+//!
+//! * **token-invisible**: for every chunk budget (including 1), with
+//!   the prompt-prefix cache on or off, every request emits exactly
+//!   the run-to-completion reference stream (`stub_reference`);
+//! * **budget-respecting**: no scheduler step prefills more prompt
+//!   tokens than the configured budget;
+//! * **honest TTFT**: `ttft_steps` stamps at the step the first token
+//!   actually samples — the *final* chunk — so an uncontended request
+//!   reports exactly `ceil(prompt / budget)` steps; requests aborted
+//!   mid-prefill never report a TTFT at all (they land in
+//!   `SchedulerMetrics::no_first_token`, keeping percentiles clean);
+//! * **leak-free under preemption**: mid-prefill preemption (park and
+//!   drop) resumes to the identical stream and reclaims every KV page
+//!   and slot context at drain.
+
+use cmoe::prop_assert;
+use cmoe::serving::{
+    stub_reference, BatcherConfig, Clock, ContinuousSession, GenParams, PreemptMode, Priority,
+    Request, StepForward, StubForward,
+};
+use cmoe::util::prop;
+use cmoe::util::Rng;
+use std::collections::VecDeque;
+use std::time::Duration;
+
+const VOCAB: usize = 21;
+const KV_CAP: usize = 96;
+
+/// Mixed workload: mostly short interactive prompts plus a long-prompt
+/// minority — the shape chunking exists for. Prompt + generation stay
+/// below `KV_CAP` so capacity retirement never masks a divergence.
+fn random_request(id: u64, rng: &mut Rng) -> Request {
+    let long = rng.f32() < 0.35;
+    let plen = if long { 24 + rng.below(33) } else { 1 + rng.below(8) };
+    let prompt: Vec<usize> = (0..plen).map(|_| rng.below(VOCAB)).collect();
+    let params = GenParams {
+        max_new_tokens: 1 + rng.below(10),
+        temperature: if rng.f32() < 0.5 { 0.0 } else { 0.8 },
+        seed: rng.next_u64(),
+        stop_token: if rng.f32() < 0.2 { Some(rng.below(VOCAB)) } else { None },
+    };
+    Request::new(id, prompt, params)
+}
+
+fn session(
+    buckets: Vec<usize>,
+    chunk: usize,
+    prefix_cache: bool,
+    preempt: PreemptMode,
+) -> ContinuousSession<StubForward> {
+    let pool = *buckets.iter().max().unwrap();
+    let fwd = if prefix_cache {
+        StubForward::with_prefix_cache(pool, VOCAB, KV_CAP, 4)
+    } else {
+        StubForward::new(pool, VOCAB, KV_CAP)
+    };
+    ContinuousSession::with_clock(
+        BatcherConfig {
+            buckets,
+            max_wait: Duration::ZERO,
+            prefill_chunk_tokens: chunk,
+            preempt,
+            ..Default::default()
+        },
+        fwd,
+        Clock::manual(),
+    )
+    .unwrap()
+}
+
+/// Enqueue in random dribbles, step to drain, return results.
+fn run(
+    sess: &mut ContinuousSession<StubForward>,
+    reqs: &[Request],
+    rng: &mut Rng,
+) -> Result<Vec<cmoe::serving::RequestResult>, String> {
+    let mut pending: VecDeque<Request> = reqs.iter().cloned().collect();
+    let mut out = Vec::new();
+    let mut guard = 0;
+    while !(pending.is_empty() && sess.is_idle()) {
+        for _ in 0..rng.below(3) {
+            if let Some(r) = pending.pop_front() {
+                sess.enqueue(r);
+            }
+        }
+        out.extend(sess.step().map_err(|e| e.to_string())?);
+        guard += 1;
+        if guard >= 100_000 {
+            return Err("chunked trace failed to converge".into());
+        }
+    }
+    Ok(out)
+}
+
+#[test]
+fn prop_chunked_prefill_is_token_invisible_with_and_without_prefix_cache() {
+    prop::check(
+        "any chunk budget × prefix cache on/off preserves per-request token streams",
+        prop::Config { cases: 60, seed: 0xC4E9, max_size: 20 },
+        |rng: &mut Rng, size| {
+            // budget 0 = monolithic; 1 is the adversarial minimum
+            let chunk = *[0usize, 1, 2, 5, 8, 32].get(rng.below(6)).unwrap();
+            for &cache in &[false, true] {
+                let buckets = vec![1 + rng.below(4)];
+                let n_req = 1 + rng.below(size.max(1));
+                let reqs: Vec<Request> =
+                    (0..n_req).map(|i| random_request(i as u64, rng)).collect();
+                let mut sess = session(buckets, chunk, cache, PreemptMode::Off);
+                let results = run(&mut sess, &reqs, rng)?;
+                prop_assert!(
+                    results.len() == n_req && sess.take_failures().is_empty(),
+                    "lost requests: {} of {n_req} (chunk {chunk}, cache {cache})",
+                    results.len()
+                );
+                for r in &results {
+                    let want = stub_reference(&reqs[r.id as usize], VOCAB, KV_CAP);
+                    prop_assert!(
+                        r.tokens == want,
+                        "request {} diverged at chunk budget {chunk}, cache {cache}: \
+                         {:?} != {:?}",
+                        r.id,
+                        r.tokens,
+                        want
+                    );
+                    prop_assert!(
+                        r.ttft.is_some() && r.ttft_steps.is_some(),
+                        "served request {} reported no TTFT",
+                        r.id
+                    );
+                }
+                let m = sess.metrics();
+                prop_assert!(
+                    m.retired == n_req as u64 && m.no_first_token == 0,
+                    "retired {} / no_first_token {} over {n_req} served",
+                    m.retired,
+                    m.no_first_token
+                );
+                // slot hygiene: the only pages still held belong to the
+                // prefix cache (none at all when it is off)
+                let pages = sess.forward().kv().pages().pages_in_use();
+                let cached =
+                    sess.forward().page_metrics().map_or(0, |p| p.cached_pages);
+                prop_assert!(
+                    sess.forward().live_contexts() == 0 && pages == cached,
+                    "leaked KV: {pages} pages in use, {cached} cache-held"
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_no_step_prefills_past_the_chunk_budget() {
+    prop::check(
+        "per-step prefilled prompt tokens never exceed the budget",
+        prop::Config { cases: 40, seed: 0xB4D6, max_size: 16 },
+        |rng: &mut Rng, size| {
+            let chunk = 1 + rng.below(24);
+            let n_req = 1 + rng.below(size.max(1));
+            let reqs: Vec<Request> = (0..n_req).map(|i| random_request(i as u64, rng)).collect();
+            let mut sess = session(vec![1 + rng.below(4)], chunk, false, PreemptMode::Off);
+            let mut pending: VecDeque<Request> = reqs.iter().cloned().collect();
+            let mut prev = 0u64;
+            let mut guard = 0;
+            while !(pending.is_empty() && sess.is_idle()) {
+                for _ in 0..rng.below(3) {
+                    if let Some(r) = pending.pop_front() {
+                        sess.enqueue(r);
+                    }
+                }
+                sess.step().map_err(|e| e.to_string())?;
+                let now = sess.forward().prefilled_tokens;
+                prop_assert!(
+                    now - prev <= chunk as u64,
+                    "step prefilled {} tokens past budget {chunk}",
+                    now - prev
+                );
+                prev = now;
+                guard += 1;
+                prop_assert!(guard < 100_000, "budget trace failed to converge");
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn ttft_steps_counts_to_the_final_chunk_not_the_first() {
+    // uncontended long prompt: the first token samples when the LAST
+    // chunk lands, so ttft_steps is exactly ceil(plen / budget) —
+    // monolithic (budget 0) stays 1
+    for (plen, chunk, want) in
+        [(40usize, 0usize, 1u64), (40, 40, 1), (40, 16, 3), (40, 1, 40), (7, 3, 3), (1, 1, 1)]
+    {
+        let mut sess = session(vec![1], chunk, false, PreemptMode::Off);
+        let prompt: Vec<usize> = (0..plen).map(|j| j % VOCAB).collect();
+        sess.enqueue(Request::new(
+            0,
+            prompt,
+            GenParams { max_new_tokens: 3, temperature: 0.0, seed: 7, stop_token: None },
+        ));
+        let results = sess.drain().unwrap();
+        assert_eq!(
+            results[0].ttft_steps,
+            Some(want),
+            "plen {plen} at budget {chunk} must stamp TTFT at the final chunk"
+        );
+    }
+}
+
+#[test]
+fn aborted_mid_prefill_requests_report_no_ttft_and_count_separately() {
+    // budget 1 over a 24-token prompt: after 3 steps the request is
+    // mid-prefill with no first token; aborting it must increment
+    // no_first_token (so TTFT percentiles exclude it) and free its KV
+    let mut sess = session(vec![2], 1, false, PreemptMode::Off);
+    let long: Vec<usize> = (0..24).map(|j| j % VOCAB).collect();
+    sess.enqueue(Request::new(
+        0,
+        long,
+        GenParams { max_new_tokens: 4, temperature: 0.0, seed: 1, stop_token: None },
+    ));
+    for _ in 0..3 {
+        let done = sess.step().unwrap();
+        assert!(done.is_empty(), "24-token prompt finished within 3 one-token chunks");
+    }
+    let ids = sess.abort_all();
+    assert_eq!(ids, vec![0]);
+    assert_eq!(sess.metrics().no_first_token, 1, "mid-prefill abort must be counted");
+    assert_eq!(sess.forward().live_contexts(), 0, "aborted slot context leaked");
+    assert_eq!(sess.forward().kv().pages().pages_in_use(), 0, "aborted KV pages leaked");
+}
+
+#[test]
+fn shed_requests_produce_no_result_and_no_ttft_sample() {
+    // bounded admission with no degrade margin: overflow is shed at
+    // enqueue and must never surface as a (zero-TTFT) result
+    let pool = 1;
+    let mut sess = ContinuousSession::with_clock(
+        BatcherConfig {
+            buckets: vec![pool],
+            max_wait: Duration::ZERO,
+            prefill_chunk_tokens: 2,
+            queue_cap: Some(2),
+            degrade_margin: 0,
+            ..Default::default()
+        },
+        StubForward::new(pool, VOCAB, KV_CAP),
+        Clock::manual(),
+    )
+    .unwrap();
+    for i in 0..6u64 {
+        sess.enqueue(Request::new(
+            i,
+            vec![1, 2, 3, 4, 5],
+            GenParams { max_new_tokens: 2, temperature: 0.0, seed: i, stop_token: None },
+        ));
+    }
+    let shed = sess.metrics().shed_requests;
+    assert!(shed > 0, "queue cap 2 never shed out of 6 arrivals");
+    let results = sess.drain().unwrap();
+    assert_eq!(results.len(), 6 - shed as usize);
+    assert!(results.iter().all(|r| r.ttft.is_some() && r.ttft_steps.is_some()));
+}
+
+#[test]
+fn prop_mid_prefill_preemption_leaks_nothing_and_stays_token_identical() {
+    let mut total_preemptions = 0u64;
+    prop::check(
+        "preempting chunked prefills (park and drop) is token-invisible and leak-free",
+        prop::Config { cases: 50, seed: 0x9C47, max_size: 16 },
+        |rng: &mut Rng, size| {
+            for &mode in &[PreemptMode::Park, PreemptMode::Drop] {
+                // tiny pool + tiny budget: long prompts spend many
+                // steps mid-prefill, where urgent Highs land on them
+                let chunk = 1 + rng.below(4);
+                let n_req = 1 + rng.below(size.max(1));
+                let mut sess = session(vec![1 + rng.below(2)], chunk, false, mode);
+                let reqs: Vec<Request> = (0..n_req)
+                    .map(|i| {
+                        let mut r = random_request(i as u64, rng);
+                        if rng.f32() < 0.3 {
+                            r = r.with_priority(Priority::High).with_deadline_steps(
+                                rng.below(3) as u64,
+                            );
+                        } else if rng.f32() < 0.3 {
+                            r = r.with_priority(Priority::Low);
+                        }
+                        r
+                    })
+                    .collect();
+                let results = run(&mut sess, &reqs, rng)?;
+                prop_assert!(
+                    results.len() == n_req && sess.take_failures().is_empty(),
+                    "[{mode:?}] lost requests: {} of {n_req}",
+                    results.len()
+                );
+                for r in &results {
+                    let want = stub_reference(&reqs[r.id as usize], VOCAB, KV_CAP);
+                    prop_assert!(
+                        r.tokens == want,
+                        "[{mode:?}] request {} diverged after mid-prefill preemption",
+                        r.id
+                    );
+                }
+                let m = sess.metrics();
+                prop_assert!(m.resumed == m.preemptions, "a preempted request was stranded");
+                total_preemptions += m.preemptions;
+                prop_assert!(
+                    sess.forward().live_contexts() == 0
+                        && sess.forward().kv().pages().pages_in_use() == 0,
+                    "[{mode:?}] leaked KV after preempted chunked prefills"
+                );
+            }
+            Ok(())
+        },
+    );
+    assert!(total_preemptions > 0, "no trace ever preempted — property is vacuous");
+}

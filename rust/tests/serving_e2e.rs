@@ -63,7 +63,9 @@ fn dense_engine_generates() {
     for r in &results {
         assert_eq!(r.tokens.len(), 8);
         assert!(r.tokens.iter().all(|&t| t < 256));
-        assert!(r.ttft.as_nanos() > 0);
+        let ttft = r.ttft.expect("served request must have a first token");
+        assert!(ttft.as_nanos() > 0);
+        assert_eq!(r.ttft_steps, Some(1), "short prompts prefill in one chunk");
     }
     let m = engine.metrics.lock().unwrap();
     // continuous scheduling: one run summary, per-step accounting in

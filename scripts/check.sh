@@ -94,6 +94,13 @@ cargo test -q --release --test preemption --test fault_injection
 echo "==> dynamic-k + effort-tier property suites (release)"
 cargo test -q --release --test dynamic_k --test effort_tiers
 
+# Pin the chunked-prefill contract: any per-step prefill token budget
+# (prefix cache on or off, preemption mid-prefill included) must be
+# token-invisible and leak-free, with TTFT stamped at the final chunk
+# and never fabricated for requests that die before a first token.
+echo "==> chunked-prefill property suite (release)"
+cargo test -q --release --test chunked_prefill
+
 echo "==> cargo doc --no-deps"
 RUSTDOCFLAGS="${RUSTDOCFLAGS:--D warnings}" cargo doc --no-deps
 

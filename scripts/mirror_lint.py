@@ -617,6 +617,7 @@ def scan_rules(path, tokens, directives):
 # ---------------------------------------------------------------------------
 
 MIRROR_DYNK = "scripts/mirror_dynamic_k.py"
+MIRROR_CHUNK = "scripts/mirror_chunked_prefill.py"
 
 REGISTRY = [
     ("PCG_MULT", "rust/src/util/rng.rs", MIRROR_DYNK),
@@ -632,6 +633,8 @@ REGISTRY = [
     ("PAPER_N_K", "rust/src/moe/gating.rs", MIRROR_DYNK),
     ("PAPER_K_HIGH", "rust/src/moe/gating.rs", MIRROR_DYNK),
     ("PAPER_K_LOW", "rust/src/moe/gating.rs", MIRROR_DYNK),
+    ("DEFAULT_PREFILL_CHUNK_TOKENS", "rust/src/serving/batcher.rs", MIRROR_CHUNK),
+    ("CONT_GRID_STEP", "rust/src/serving/engine.rs", MIRROR_CHUNK),
 ]
 
 
