@@ -1,0 +1,329 @@
+//! Quantized expert-storage sweep (`cmoe bench --exp quant`): fp32 vs
+//! int8 vs tiered expert serving on one synthetic converted layer.
+//!
+//! The expert-storage trait (`moe::ExpertStore`) makes precision and
+//! placement a policy choice behind the grouped dispatcher. This sweep
+//! measures what each storage policy buys and costs, artifact-free so
+//! it runs on a fresh clone:
+//!
+//! * **bit-identity**: the quant-off [`TieredStore`] must produce
+//!   f32-bit-identical routed output to the plain fp32 slice path
+//!   (asserted, not just reported);
+//! * **divergence**: relative L2 and worst per-element |Δ| of the int8
+//!   band path vs fp32, checked against the analytic
+//!   [`QuantizedFfn::divergence_bound`] composition per token at three
+//!   input scales;
+//! * **residency**: hit rate and prefetch/demotion churn of the
+//!   cold-expert tier under synthetic routing drift;
+//! * **grouped decode tok/s** through the real [`GroupedDispatcher`]
+//!   hot path per storage policy, and the int8 speedup over fp32.
+//!
+//! Exported to the repo-root `BENCH_quant.json` so successive PRs can
+//! diff the precision/placement frontier.
+
+use crate::bench_harness::common::Ctx;
+use crate::converter::{convert_ffn, ConvertOptions};
+use crate::model::{model_config, FfnWeights, ModelWeights, MoeLayerWeights, MoeSpec};
+use crate::moe::{route_tokens_dynamic, DynamicK, ExpertStore, GroupedRouting, TieredStore};
+use crate::profiling::ActivationProfile;
+use crate::quant::{compression_ratio, QuantizedFfn};
+use crate::serving::{DispatchArena, GroupedDispatcher};
+use crate::tensor::{self, Tensor};
+use crate::util::table::{f, speedup, Table};
+use crate::util::timer::measure;
+use crate::util::Rng;
+use anyhow::{ensure, Context as _, Result};
+use std::time::Duration;
+
+/// Converted spec for the sweep (same operating point as the dynk
+/// sweep so the two trajectories are comparable).
+const QUANT_SPEC: &str = "S2A4E8";
+/// Tokens per measured wave.
+const QUANT_BATCH: usize = 64;
+/// Warm-set budget for the tiered row (of the spec's 8 routed experts).
+const TIER_CAP: usize = 2;
+
+/// The quantized-storage sweep as a bench-harness experiment
+/// (`cmoe bench --exp quant`). Artifact-free; exports the repo-root
+/// `BENCH_quant.json`.
+pub fn quant_sweep(ctx: &mut Ctx) -> Result<Table> {
+    let t = export_quant_json(ctx)?;
+    ctx.save("quant", std::slice::from_ref(&t))?;
+    Ok(t)
+}
+
+/// Table + repo-root JSON export.
+pub(super) fn export_quant_json(ctx: &Ctx) -> Result<Table> {
+    let t = quant_sweep_table(ctx.seed, 3, Duration::from_millis(40))?;
+    let root = crate::util::repo_root().unwrap_or_else(|| ctx.out_dir.clone());
+    let path = root.join("BENCH_quant.json");
+    std::fs::write(&path, t.to_json().pretty())
+        .with_context(|| format!("write {}", path.display()))?;
+    eprintln!("quant sweep exported to {}", path.display());
+    Ok(t)
+}
+
+/// Synthetic converted layer (the dynk sweep's recipe).
+fn quant_layer(rng: &mut Rng) -> Result<(MoeLayerWeights, MoeSpec)> {
+    let d = 64usize;
+    let d_ff = 512usize;
+    let ffn = FfnWeights {
+        w_gate: Tensor::randn(rng, &[d, d_ff], 0.4),
+        w_up: Tensor::randn(rng, &[d, d_ff], 0.4),
+        w_down: Tensor::randn(rng, &[d_ff, d], 0.4),
+    };
+    let xc = Tensor::randn(rng, &[256, d], 1.0);
+    let h = tensor::swiglu_hidden(&xc, &ffn.w_gate, &ffn.w_up);
+    let prof = ActivationProfile::from_hidden(&h, 10);
+    let spec: MoeSpec = QUANT_SPEC.parse()?;
+    let mut moe = convert_ffn(&ffn, &prof, &spec, &ConvertOptions::default())?;
+    moe.compensation = None;
+    Ok((moe, spec))
+}
+
+/// Steady-state grouped tok/s through `store` (arena pre-warmed; the
+/// output scratch is call-local — allocation sits outside the timed
+/// closure).
+fn measure_tps<S: ExpertStore + ?Sized>(
+    disp: &GroupedDispatcher,
+    xn: &Tensor,
+    routing: &GroupedRouting,
+    store: &S,
+    arena: &mut DispatchArena,
+    min_iters: usize,
+    min_time: Duration,
+) -> f64 {
+    let mut out = Tensor::zeros(&[xn.shape[0], xn.shape[1]]);
+    let out = &mut out;
+    out.data.fill(0.0);
+    disp.forward(xn, routing, store, arena, out);
+    let samples = measure(
+        || {
+            out.data.fill(0.0);
+            disp.forward(xn, routing, store, arena, out);
+            std::hint::black_box(&out);
+        },
+        min_iters,
+        min_time,
+    );
+    let ns: Vec<f32> = samples.iter().map(|s| s.as_secs_f32() * 1e9).collect();
+    let mean_ns = crate::util::stats::mean(&ns) as f64;
+    if mean_ns <= 0.0 {
+        0.0
+    } else {
+        QUANT_BATCH as f64 / (mean_ns / 1e9)
+    }
+}
+
+/// Relative L2 distance of `y` from the fp32 oracle.
+fn rel_l2(y: &Tensor, y_fp: &Tensor) -> f64 {
+    let mut diff = y_fp.clone();
+    for (a, b) in diff.data.iter_mut().zip(&y.data) {
+        *a -= b;
+    }
+    diff.norm() as f64 / (y_fp.norm().max(1e-12) as f64)
+}
+
+/// Ctx-free sweep core.
+pub fn quant_sweep_table(seed: u64, min_iters: usize, min_time: Duration) -> Result<Table> {
+    let mut rng = Rng::new(seed ^ 0x0118);
+    let (moe, spec) = quant_layer(&mut rng)?;
+    let d = 64usize;
+    let n_r = spec.routed();
+    let m = moe.experts[0].hidden_dim();
+    let xn = Tensor::randn(&mut rng, &[QUANT_BATCH, d], 1.0);
+
+    let decisions = route_tokens_dynamic(&moe, &xn, DynamicK::fixed(), None);
+    let mut routing = GroupedRouting::new(n_r);
+    routing.rebuild(n_r, &decisions);
+    let disp = GroupedDispatcher::new(d, m);
+    let mut arena = DispatchArena::new();
+    let mut out = Tensor::zeros(&[QUANT_BATCH, d]);
+
+    // fp32 oracle through the plain slice path
+    let mut y_fp = Tensor::zeros(&[QUANT_BATCH, d]);
+    disp.forward(&xn, &routing, moe.experts.as_slice(), &mut arena, &mut y_fp);
+
+    // compression ratio of the model at hand (actual quantized bytes,
+    // scale overhead included): the synthetic layer's expert bands and
+    // the tiny zoo model end-to-end
+    let expert_q: Vec<QuantizedFfn> = moe.experts.iter().map(QuantizedFfn::quantize).collect();
+    let band_fp32: usize = moe
+        .experts
+        .iter()
+        .map(|e| (e.w_gate.numel() + e.w_up.numel() + e.w_down.numel()) * 4)
+        .sum();
+    let band_q: usize = expert_q.iter().map(|q| q.quantized_bytes()).sum();
+    let band_ratio = band_fp32 as f64 / band_q as f64;
+    let tiny = ModelWeights::random(&model_config("tiny")?, &mut rng);
+    let model_ratio = compression_ratio(&tiny);
+
+    let mut t = Table::new(
+        &format!(
+            "Quantized expert storage — fp32 vs int8 vs tiered through the grouped \
+             dispatcher (synthetic {QUANT_SPEC} layer; int8 compression: expert bands \
+             {band_ratio:.2}x, tiny zoo model {model_ratio:.2}x)"
+        ),
+        &["Config", "rel L2 vs fp32", "worst |d|", "bound", "residency", "tok/s", "vs fp32"],
+    );
+
+    // --- fp32 slice baseline ---
+    let fp_tps =
+        measure_tps(&disp, &xn, &routing, moe.experts.as_slice(), &mut arena, min_iters, min_time);
+    t.row(vec![
+        "fp32 slice".into(),
+        f(0.0, 4),
+        f(0.0, 5),
+        "-".into(),
+        "-".into(),
+        f(fp_tps, 0),
+        speedup(1.0),
+    ]);
+
+    // --- quant-off store: must be f32-bit-identical to the slice path ---
+    let store_off = TieredStore::new(&moe.experts, false, TIER_CAP);
+    out.data.fill(0.0);
+    disp.forward(&xn, &routing, &store_off, &mut arena, &mut out);
+    ensure!(
+        out.data.iter().zip(&y_fp.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "quant-off TieredStore diverged from the fp32 slice path (must be bit-identical)"
+    );
+    let off_tps =
+        measure_tps(&disp, &xn, &routing, &store_off, &mut arena, min_iters, min_time);
+    t.row(vec![
+        "fp32 store (quant off)".into(),
+        f(0.0, 4),
+        "bit-identical".into(),
+        "-".into(),
+        "-".into(),
+        f(off_tps, 0),
+        speedup(if fp_tps <= 0.0 { 1.0 } else { off_tps / fp_tps }),
+    ]);
+
+    // --- int8, everything resident ---
+    let store_q = TieredStore::new(&moe.experts, true, n_r);
+    out.data.fill(0.0);
+    disp.forward(&xn, &routing, &store_q, &mut arena, &mut out);
+    let (worst, bound) = divergence_vs_bound(&out, &y_fp, &xn, &decisions, &expert_q)?;
+    let q_rel = rel_l2(&out, &y_fp);
+    let q_tps = measure_tps(&disp, &xn, &routing, &store_q, &mut arena, min_iters, min_time);
+    t.row(vec![
+        format!("int8 resident (cap={n_r})"),
+        f(q_rel, 4),
+        f(worst as f64, 5),
+        f(bound as f64, 5),
+        "all warm".into(),
+        f(q_tps, 0),
+        speedup(if fp_tps <= 0.0 { 1.0 } else { q_tps / fp_tps }),
+    ]);
+
+    // --- int8 cold-expert tier under synthetic routing drift ---
+    let mut store_t = TieredStore::new(&moe.experts, true, TIER_CAP);
+    let mut hits = 0u64;
+    let mut misses = 0u64;
+    let mut prefetches = 0u64;
+    let mut demotions = 0u64;
+    let phase_a: Vec<usize> = (0..n_r).map(|e| if e < n_r / 2 { 8 } else { 0 }).collect();
+    let phase_b: Vec<usize> = (0..n_r).map(|e| if e < n_r / 2 { 0 } else { 8 }).collect();
+    for step in 0..24 {
+        let counts = if step < 8 { &phase_a } else { &phase_b };
+        let delta = store_t.note_step(counts);
+        hits += delta.hits;
+        misses += delta.misses;
+        prefetches += delta.prefetches;
+        demotions += delta.demotions;
+    }
+    let hit_rate = hits as f64 / (hits + misses).max(1) as f64;
+    out.data.fill(0.0);
+    disp.forward(&xn, &routing, &store_t, &mut arena, &mut out);
+    let t_rel = rel_l2(&out, &y_fp);
+    let t_tps = measure_tps(&disp, &xn, &routing, &store_t, &mut arena, min_iters, min_time);
+    t.row(vec![
+        format!("int8 tiered (cap={TIER_CAP})"),
+        f(t_rel, 4),
+        "-".into(),
+        "-".into(),
+        format!("hit {:.0}% {prefetches}pf/{demotions}dm", hit_rate * 100.0),
+        f(t_tps, 0),
+        speedup(if fp_tps <= 0.0 { 1.0 } else { t_tps / fp_tps }),
+    ]);
+
+    // --- divergence sweep: the analytic bound must hold at every
+    // input scale, not just the calibration-like one ---
+    for scale in [0.5f32, 1.0, 2.0] {
+        let mut xs = xn.clone();
+        for v in xs.data.iter_mut() {
+            *v *= scale;
+        }
+        let ds = route_tokens_dynamic(&moe, &xs, DynamicK::fixed(), None);
+        routing.rebuild(n_r, &ds);
+        let mut ys_fp = Tensor::zeros(&[QUANT_BATCH, d]);
+        disp.forward(&xs, &routing, moe.experts.as_slice(), &mut arena, &mut ys_fp);
+        out.data.fill(0.0);
+        disp.forward(&xs, &routing, &store_q, &mut arena, &mut out);
+        let (worst, bound) = divergence_vs_bound(&out, &ys_fp, &xs, &ds, &expert_q)?;
+        t.row(vec![
+            format!("int8 divergence @x{scale}"),
+            f(rel_l2(&out, &ys_fp), 4),
+            f(worst as f64, 5),
+            f(bound as f64, 5),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Worst per-element |Δ| of the routed output vs fp32, checked per
+/// token against the gate-weighted composition of each routed expert's
+/// [`QuantizedFfn::divergence_bound`]. Returns `(worst, max bound)`.
+fn divergence_vs_bound(
+    y_q: &Tensor,
+    y_fp: &Tensor,
+    xn: &Tensor,
+    decisions: &[crate::moe::GateDecision],
+    experts_q: &[QuantizedFfn],
+) -> Result<(f32, f32)> {
+    let d = xn.shape[1];
+    let mut worst = 0.0f32;
+    let mut max_bound = 0.0f32;
+    for (tk, dec) in decisions.iter().enumerate() {
+        let row = &xn.data[tk * d..(tk + 1) * d];
+        let bound_t: f32 = dec
+            .experts
+            .iter()
+            .zip(&dec.gates)
+            .map(|(&e, &g)| g.abs() * experts_q[e].divergence_bound(row))
+            .sum();
+        let worst_t = y_q.data[tk * d..(tk + 1) * d]
+            .iter()
+            .zip(&y_fp.data[tk * d..(tk + 1) * d])
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        ensure!(
+            worst_t <= bound_t * 1.01 + 1e-4,
+            "token {tk}: int8 divergence {worst_t} exceeds analytic bound {bound_t}"
+        );
+        worst = worst.max(worst_t);
+        max_bound = max_bound.max(bound_t);
+    }
+    Ok((worst, max_bound))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quant_table_covers_every_storage_policy_and_bounds_hold() {
+        let t = quant_sweep_table(0xBEEF, 1, Duration::from_millis(1)).unwrap();
+        let j = t.to_json().pretty();
+        for label in ["fp32 slice", "quant off", "int8 resident", "int8 tiered", "divergence @x2"] {
+            assert!(j.contains(label), "missing sweep row {label}");
+        }
+        // bit-identity and the per-token bound checks are enforced
+        // inside the sweep itself — reaching here means they held
+        assert!(j.contains("bit-identical"));
+    }
+}

@@ -14,6 +14,7 @@ mod exp_figs;
 mod exp_quality;
 mod exp_efficiency;
 pub mod exp_dynk;
+pub mod exp_quant;
 pub mod exp_serving;
 pub mod exp_slo;
 
@@ -24,13 +25,13 @@ use common::Ctx;
 /// Every experiment id, in paper order; `dispatch` (the grouped expert
 /// dispatch sweep), `serving` (continuous-vs-waves scheduling sweep),
 /// `prefix` (shared-system-prompt KV page sharing sweep), `slo`
-/// (priority/preemption/shed-load burst sweep) and `dynk` (dynamic-k /
-/// effort-tier activation operating points), all artifact-free, ride
-/// at the end.
+/// (priority/preemption/shed-load burst sweep), `dynk` (dynamic-k /
+/// effort-tier activation operating points) and `quant` (fp32 vs int8
+/// vs tiered expert storage), all artifact-free, ride at the end.
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "fig1", "fig2", "table1", "table2", "table3", "table4", "table5", "table6", "table7",
     "table8", "table9", "table10", "table11", "fig4", "fig5", "fig6", "dispatch", "serving",
-    "prefix", "slo", "dynk",
+    "prefix", "slo", "dynk", "quant",
 ];
 
 /// Run one experiment by id.
@@ -55,6 +56,7 @@ pub fn run(exp: &str, ctx: &mut Ctx) -> Result<Vec<Table>> {
         "prefix" => vec![exp_serving::prefix_sweep(ctx)?],
         "slo" => vec![exp_slo::slo_sweep(ctx)?],
         "dynk" => vec![exp_dynk::dynk_sweep(ctx)?],
+        "quant" => vec![exp_quant::quant_sweep(ctx)?],
         "table10" => vec![exp_quality::table10(ctx)?],
         "table11" => vec![exp_quality::table11(ctx)?],
         "ablate" => vec![

@@ -26,11 +26,13 @@ pub struct Entry {
 
 const MIRROR_DYNK: &str = "scripts/mirror_dynamic_k.py";
 const MIRROR_CHUNK: &str = "scripts/mirror_chunked_prefill.py";
+const MIRROR_QUANT: &str = "scripts/mirror_quant.py";
 
 /// The seeded registry (ISSUE 8): PCG32/splitmix seeding, the FNV
 /// stub-logits hash, default TierRatios, and the paper's k_for_ratio
 /// operating points (75%/25% on N_k = 4 → k = 3/1). Extended (ISSUE 9)
-/// with the chunked-prefill/suffix-continuation constants.
+/// with the chunked-prefill/suffix-continuation constants, and (ISSUE
+/// 10) with the int8 quantization / expert-residency constants.
 pub const REGISTRY: &[Entry] = &[
     Entry { name: "PCG_MULT", rust: "rust/src/util/rng.rs", py: MIRROR_DYNK },
     Entry { name: "SPLITMIX_GAMMA", rust: "rust/src/util/rng.rs", py: MIRROR_DYNK },
@@ -51,6 +53,10 @@ pub const REGISTRY: &[Entry] = &[
         py: MIRROR_CHUNK,
     },
     Entry { name: "CONT_GRID_STEP", rust: "rust/src/serving/engine.rs", py: MIRROR_CHUNK },
+    Entry { name: "INT8_CLAMP", rust: "rust/src/quant/mod.rs", py: MIRROR_QUANT },
+    Entry { name: "SCALE_EPS", rust: "rust/src/quant/mod.rs", py: MIRROR_QUANT },
+    Entry { name: "RESIDENCY_EMA_DECAY", rust: "rust/src/moe/store.rs", py: MIRROR_QUANT },
+    Entry { name: "DEFAULT_RESIDENT_CAP", rust: "rust/src/moe/store.rs", py: MIRROR_QUANT },
 ];
 
 /// Extracted constant value. Int vs Float is part of the contract:

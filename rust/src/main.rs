@@ -10,6 +10,7 @@
 //!               [--sched continuous|waves] [--buckets 1,8,32]
 //!               [--page-len 16] [--prefix-cache]
 //!               [--dynamic-k 0.5] [--k-min 1] [--tier-ratios 1.0,0.25]
+//!               [--quant-experts] [--resident-cap 6]
 //! cmoe bench    --exp table1|fig2|serving|all [--out results/]
 //! cmoe info     # artifact + zoo inventory
 //! ```
@@ -23,7 +24,7 @@ use cmoe::pipeline::{registry, Pipeline};
 use cmoe::util::argparse::Args;
 
 fn main() {
-    let args = Args::from_env(&["verbose", "no-finetune", "prefix-cache", "json"]);
+    let args = Args::from_env(&["verbose", "no-finetune", "prefix-cache", "json", "quant-experts"]);
     let code = match run(&args) {
         Ok(()) => 0,
         Err(e) => {
@@ -252,6 +253,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
             bail!("--tier-ratios values must be activation ratios in [0, 1]");
         }
         cfg.batcher.tier_ratios = cmoe::serving::TierRatios { full, degraded };
+    }
+    // quantized expert storage (orchestrated mode): --quant-experts
+    // serves routed experts as int8 row bands behind the residency
+    // tier; --resident-cap bounds the warm set per MoE layer
+    cfg.quant_experts = args.has("quant-experts");
+    cfg.resident_cap = args.get_usize("resident-cap", cmoe::moe::DEFAULT_RESIDENT_CAP);
+    if cfg.quant_experts && mode != ExecMode::MoeOrchestrated {
+        bail!("--quant-experts requires --mode orchestrated (expert weights are in-graph elsewhere)");
+    }
+    if cfg.resident_cap == 0 {
+        bail!("--resident-cap must be >= 1");
     }
     let sched = args.get_or("sched", "continuous").to_string();
     let engine = Engine::new(rt, model, cfg)?;

@@ -7,14 +7,21 @@
 //! the expert-major [`GroupedRouting`] index lists (what the serving
 //! engine's grouped dispatcher consumes — see
 //! `serving::dispatch::GroupedDispatcher` for the execution side and
-//! the layout invariants).
+//! the layout invariants). Expert *weights* sit behind the
+//! [`ExpertStore`] storage-policy trait (`store`): fp32 slices, or the
+//! quantized [`TieredStore`] with its cold-expert residency tier.
 
 mod gating;
 mod balance;
 mod finetune;
+mod store;
 
 pub use balance::{BalanceConfig, BiasAdapter, UtilizationTracker};
 pub use finetune::{finetune_gates, FinetuneConfig, FinetuneReport};
+pub use store::{
+    ExpertResidency, ExpertStore, ExpertView, ResidencyDelta, TieredStore,
+    DEFAULT_RESIDENT_CAP, RESIDENCY_EMA_DECAY,
+};
 pub use gating::{
     k_for_ratio, moe_ffn_forward, moe_ffn_forward_dynamic, normalized_entropy,
     route_from_scores, route_from_scores_dynamic, route_tokens, route_tokens_dynamic,

@@ -1,0 +1,367 @@
+//! Expert weight storage behind a trait: placement and precision are
+//! **policy**, not plumbing (ROADMAP item 5; the same seam item 1's
+//! multi-device placement needs).
+//!
+//! The grouped dispatcher used to take `&[FfnWeights]` — an implicit
+//! "every expert is fp32 and resident" assumption baked into the call
+//! signature. [`ExpertStore`] replaces that: the dispatcher asks the
+//! store for a per-expert [`ExpertView`] and runs whichever band kernel
+//! the view selects (fp32 `swiglu_rows_into` or the fused-dequant int8
+//! twin). Plain slices implement the trait with every expert
+//! [`ExpertResidency::Fp32Resident`], so all pre-existing call sites
+//! are the exact old code path — bit-identical by construction.
+//!
+//! On top of the trait, [`TieredStore`] adds the cold-expert residency
+//! tier: per-expert routing occupancy is tracked as an EMA over steps
+//! ([`RESIDENCY_EMA_DECAY`]), the top [`TieredStore::resident_cap`]
+//! experts by EMA stay `Int8Resident`, and the rest demote to
+//! `Int8Host`. A cold expert that the routing trend warms back up is
+//! *prefetched* (promoted before its next dispatch would miss). Today
+//! every tier lives in host memory — residency is a policy and
+//! metering layer whose hit/miss/prefetch/demotion counters are real,
+//! while the actual device placement lands with ROADMAP item 1; the
+//! shadow-model tests in `rust/tests/quant_store.rs` pin the policy's
+//! bookkeeping exactly.
+//!
+//! Invariants:
+//! * The **shared expert is never stored here** — it stays fp32 in the
+//!   layer weights (the precision asymmetry of PAPERS.md 2505.03531).
+//! * `quant = false` ⇒ every expert reports `Fp32Resident` and views
+//!   resolve to the original fp32 weights: serving output is
+//!   bit-identical to pre-trait code.
+//! * No expert is ever lost: every routed expert always has a view;
+//!   demotion changes *where the bytes notionally live*, not whether
+//!   the dispatch can run.
+//! * No `HashMap`/`HashSet` (the serving determinism lint applies to
+//!   callers; this module keeps the same discipline with dense Vecs).
+
+use crate::model::FfnWeights;
+use crate::quant::QuantizedFfn;
+
+/// Per-step EMA decay for expert routing occupancy:
+/// `ema = RESIDENCY_EMA_DECAY · ema + (1 − decay) · fraction`.
+/// Drift-registered against `scripts/mirror_quant.py`.
+pub const RESIDENCY_EMA_DECAY: f32 = 0.875;
+
+/// Default number of routed experts kept resident by a [`TieredStore`]
+/// (CLI `--resident-cap`). Drift-registered like the decay.
+pub const DEFAULT_RESIDENT_CAP: usize = 6;
+
+/// Where (and in what precision) one expert's weights live.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExpertResidency {
+    /// Full-precision, dispatch-ready. The only state plain fp32
+    /// stores ever report.
+    Fp32Resident,
+    /// Int8, dispatch-ready (the warm quantized tier).
+    Int8Resident,
+    /// Int8, demoted to host residence (the cold tier). Still
+    /// executable — a dispatch against it is a *miss* that the
+    /// promotion policy should have prevented.
+    Int8Host,
+}
+
+/// A borrowed, dispatch-ready view of one expert's weights. The band
+/// kernel is selected by the variant.
+#[derive(Clone, Copy, Debug)]
+pub enum ExpertView<'a> {
+    Fp32(&'a FfnWeights),
+    Int8(&'a QuantizedFfn),
+}
+
+/// Storage policy seam for routed experts. `Sync` because the grouped
+/// dispatcher hands `&dyn`/generic stores to scoped band threads.
+pub trait ExpertStore: Sync {
+    fn n_experts(&self) -> usize;
+    /// Current storage state of expert `e`.
+    fn residency(&self, e: usize) -> ExpertResidency;
+    /// Dispatch-ready weights for expert `e`. Must succeed for every
+    /// `e < n_experts()` regardless of residency (the no-lost-experts
+    /// invariant).
+    fn view(&self, e: usize) -> ExpertView<'_>;
+}
+
+impl ExpertStore for [FfnWeights] {
+    fn n_experts(&self) -> usize {
+        self.len()
+    }
+    fn residency(&self, _e: usize) -> ExpertResidency {
+        ExpertResidency::Fp32Resident
+    }
+    fn view(&self, e: usize) -> ExpertView<'_> {
+        ExpertView::Fp32(&self[e])
+    }
+}
+
+impl ExpertStore for Vec<FfnWeights> {
+    fn n_experts(&self) -> usize {
+        self.len()
+    }
+    fn residency(&self, _e: usize) -> ExpertResidency {
+        ExpertResidency::Fp32Resident
+    }
+    fn view(&self, e: usize) -> ExpertView<'_> {
+        ExpertView::Fp32(&self[e])
+    }
+}
+
+/// Step-delta residency counters returned by [`TieredStore::note_step`]
+/// (the engine accumulates them into `EngineMetrics::residency`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ResidencyDelta {
+    /// Routed experts that were dispatch-warm (`Fp32Resident` or
+    /// `Int8Resident`) when the step routed to them.
+    pub hits: u64,
+    /// Routed experts that were `Int8Host` when the step routed to
+    /// them — dispatches the promotion policy failed to prefetch.
+    pub misses: u64,
+    /// Promotions `Int8Host → Int8Resident` performed after this step
+    /// (the routing trend warmed the expert back up).
+    pub prefetches: u64,
+    /// Demotions `Int8Resident → Int8Host` performed after this step.
+    pub demotions: u64,
+}
+
+/// Quantized expert storage with a cold-expert residency tier.
+///
+/// `quant = false` is the identity policy: fp32 views, everything
+/// `Fp32Resident`, `note_step` only counts hits. `quant = true` serves
+/// int8 views for every expert and runs the EMA promotion policy over
+/// `resident_cap`.
+#[derive(Clone, Debug)]
+pub struct TieredStore {
+    fp32: Vec<FfnWeights>,
+    int8: Vec<QuantizedFfn>,
+    residency: Vec<ExpertResidency>,
+    /// EMA of each expert's share of routed rows, updated per step.
+    ema: Vec<f32>,
+    resident_cap: usize,
+    quant: bool,
+}
+
+impl TieredStore {
+    /// Build from the layer's routed experts. With `quant = false` the
+    /// int8 copies are still built (they are small) but never served;
+    /// residency stays all-`Fp32Resident` forever.
+    pub fn new(experts: &[FfnWeights], quant: bool, resident_cap: usize) -> TieredStore {
+        let n = experts.len();
+        let cap = resident_cap.max(1).min(n.max(1));
+        let int8 = experts.iter().map(QuantizedFfn::quantize).collect();
+        let residency = if quant {
+            // cold-start: the first `cap` experts are warm, the rest
+            // cold — the EMA takes over from the first routed step
+            (0..n)
+                .map(|e| {
+                    if e < cap {
+                        ExpertResidency::Int8Resident
+                    } else {
+                        ExpertResidency::Int8Host
+                    }
+                })
+                .collect()
+        } else {
+            vec![ExpertResidency::Fp32Resident; n]
+        };
+        TieredStore {
+            fp32: experts.to_vec(),
+            int8,
+            residency,
+            ema: vec![0.0; n],
+            resident_cap: cap,
+            quant,
+        }
+    }
+
+    pub fn resident_cap(&self) -> usize {
+        self.resident_cap
+    }
+
+    /// Observe one step's per-expert routed-row counts: count
+    /// hits/misses against the residency the step actually dispatched
+    /// under, then update the EMA and reshuffle the warm set (top
+    /// `resident_cap` by EMA). Promotions out of `Int8Host` are
+    /// prefetches; evictions out of `Int8Resident` are demotions.
+    pub fn note_step(&mut self, counts: &[usize]) -> ResidencyDelta {
+        let n = self.fp32.len();
+        assert_eq!(counts.len(), n, "per-expert counts must cover every expert");
+        let mut delta = ResidencyDelta::default();
+        for (e, &c) in counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            match self.residency[e] {
+                ExpertResidency::Int8Host => delta.misses += 1,
+                _ => delta.hits += 1,
+            }
+        }
+        if !self.quant {
+            return delta;
+        }
+        let total: usize = counts.iter().sum();
+        for (e, &c) in counts.iter().enumerate() {
+            let frac = if total == 0 { 0.0 } else { c as f32 / total as f32 };
+            self.ema[e] = RESIDENCY_EMA_DECAY * self.ema[e] + (1.0 - RESIDENCY_EMA_DECAY) * frac;
+        }
+        // warm set = top resident_cap by EMA; ties break on expert
+        // index (deterministic — no hasher anywhere near this)
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| {
+            self.ema[b].partial_cmp(&self.ema[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+        });
+        for (rank, &e) in order.iter().enumerate() {
+            let want = if rank < self.resident_cap {
+                ExpertResidency::Int8Resident
+            } else {
+                ExpertResidency::Int8Host
+            };
+            match (self.residency[e], want) {
+                (ExpertResidency::Int8Host, ExpertResidency::Int8Resident) => {
+                    delta.prefetches += 1;
+                }
+                (ExpertResidency::Int8Resident, ExpertResidency::Int8Host) => {
+                    delta.demotions += 1;
+                }
+                _ => {}
+            }
+            self.residency[e] = want;
+        }
+        delta
+    }
+
+    /// Bytes the warm tier holds (int8 residents; fp32 when quant is
+    /// off) — the capacity the resident cap actually bounds.
+    pub fn resident_bytes(&self) -> usize {
+        self.residency
+            .iter()
+            .enumerate()
+            .map(|(e, r)| match r {
+                ExpertResidency::Fp32Resident => {
+                    (self.fp32[e].w_gate.numel()
+                        + self.fp32[e].w_up.numel()
+                        + self.fp32[e].w_down.numel())
+                        * 4
+                }
+                ExpertResidency::Int8Resident => self.int8[e].quantized_bytes(),
+                ExpertResidency::Int8Host => 0,
+            })
+            .sum()
+    }
+}
+
+impl ExpertStore for TieredStore {
+    fn n_experts(&self) -> usize {
+        self.fp32.len()
+    }
+    fn residency(&self, e: usize) -> ExpertResidency {
+        self.residency[e]
+    }
+    fn view(&self, e: usize) -> ExpertView<'_> {
+        if self.quant {
+            // both int8 states are executable (host memory today);
+            // Int8Host dispatches are metered as misses by note_step
+            ExpertView::Int8(&self.int8[e])
+        } else {
+            ExpertView::Fp32(&self.fp32[e])
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::util::Rng;
+
+    fn experts(rng: &mut Rng, n: usize, d: usize, m: usize) -> Vec<FfnWeights> {
+        (0..n)
+            .map(|_| FfnWeights {
+                w_gate: Tensor::randn(rng, &[d, m], 0.5),
+                w_up: Tensor::randn(rng, &[d, m], 0.5),
+                w_down: Tensor::randn(rng, &[m, d], 0.5),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn plain_slices_are_all_fp32_resident() {
+        let mut rng = Rng::new(601);
+        let es = experts(&mut rng, 3, 4, 8);
+        let store: &[FfnWeights] = &es;
+        assert_eq!(store.n_experts(), 3);
+        for e in 0..3 {
+            assert_eq!(store.residency(e), ExpertResidency::Fp32Resident);
+            assert!(matches!(store.view(e), ExpertView::Fp32(_)));
+        }
+    }
+
+    #[test]
+    fn quant_off_is_identity_policy() {
+        let mut rng = Rng::new(602);
+        let es = experts(&mut rng, 4, 4, 8);
+        let mut store = TieredStore::new(&es, false, 2);
+        for _ in 0..10 {
+            let d = store.note_step(&[5, 0, 1, 0]);
+            assert_eq!(d.misses, 0);
+            assert_eq!(d.prefetches + d.demotions, 0);
+        }
+        for e in 0..4 {
+            assert_eq!(store.residency(e), ExpertResidency::Fp32Resident);
+            // fp32 views must be the original weights, not a round trip
+            let ExpertView::Fp32(w) = store.view(e) else {
+                panic!("quant=false served a non-fp32 view")
+            };
+            assert_eq!(w.w_gate.data, es[e].w_gate.data);
+        }
+    }
+
+    #[test]
+    fn routing_drift_demotes_and_prefetches() {
+        let mut rng = Rng::new(603);
+        let es = experts(&mut rng, 4, 4, 8);
+        let mut store = TieredStore::new(&es, true, 2);
+        // phase 1: all traffic on experts 0/1 — they stay warm
+        let mut d = ResidencyDelta::default();
+        for _ in 0..8 {
+            let s = store.note_step(&[8, 8, 0, 0]);
+            d.misses += s.misses;
+        }
+        assert_eq!(d.misses, 0, "warm experts missed");
+        assert_eq!(store.residency(2), ExpertResidency::Int8Host);
+        // phase 2: traffic drifts to experts 2/3 — first touches miss,
+        // then the EMA promotes them (prefetch) and demotes 0/1
+        let mut prefetches = 0;
+        let mut demotions = 0;
+        let mut misses = 0;
+        for _ in 0..20 {
+            let s = store.note_step(&[0, 0, 8, 8]);
+            prefetches += s.prefetches;
+            demotions += s.demotions;
+            misses += s.misses;
+        }
+        assert!(misses > 0, "cold experts never missed before promotion");
+        assert_eq!(prefetches, 2, "drifted-to experts not prefetched exactly once each");
+        assert_eq!(demotions, 2, "drifted-from experts not demoted exactly once each");
+        assert_eq!(store.residency(2), ExpertResidency::Int8Resident);
+        assert_eq!(store.residency(3), ExpertResidency::Int8Resident);
+        assert_eq!(store.residency(0), ExpertResidency::Int8Host);
+        // steady state: no more transitions, no more misses
+        let s = store.note_step(&[0, 0, 8, 8]);
+        assert_eq!(s, ResidencyDelta { hits: 2, ..Default::default() });
+    }
+
+    #[test]
+    fn every_expert_always_has_a_view() {
+        let mut rng = Rng::new(604);
+        let es = experts(&mut rng, 5, 4, 8);
+        let store = TieredStore::new(&es, true, 1);
+        for e in 0..5 {
+            // cold or warm, the view exists and has the right shape
+            let ExpertView::Int8(q) = store.view(e) else {
+                panic!("quant=true served a non-int8 view")
+            };
+            assert_eq!(q.hidden_dim(), 8);
+        }
+        assert!(store.resident_bytes() > 0);
+        assert_eq!(store.resident_cap(), 1);
+    }
+}

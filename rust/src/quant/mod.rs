@@ -9,7 +9,18 @@
 //! executable.
 
 use crate::model::{FfnWeights, LayerFfn, ModelWeights};
-use crate::tensor::Tensor;
+use crate::tensor::{self, Tensor};
+
+/// Symmetric int8 code range: values quantize to `[-127, 127]` (the
+/// symmetric subset of i8 — `-128` is never produced, so negation is
+/// always exact). Registered with the `cmoe lint` mirror-drift rule
+/// against `scripts/mirror_quant.py`.
+pub const INT8_CLAMP: f32 = 127.0;
+
+/// Columns whose max |w| is at or below this epsilon are treated as
+/// all-zero and get scale 1.0 (a zero column would otherwise divide by
+/// zero). Drift-registered like [`INT8_CLAMP`].
+pub const SCALE_EPS: f32 = 0.00000001;
 
 /// A symmetric int8 per-column quantized matrix.
 #[derive(Clone, Debug)]
@@ -33,13 +44,13 @@ impl QuantizedTensor {
             }
         }
         for s in scales.iter_mut() {
-            *s = if *s > 0.0 { *s / 127.0 } else { 1.0 };
+            *s = if *s > SCALE_EPS { *s / INT8_CLAMP } else { 1.0 };
         }
         let mut data = vec![0i8; r * c];
         for i in 0..r {
             for j in 0..c {
                 let q = (w.at2(i, j) / scales[j]).round();
-                data[i * c + j] = q.clamp(-127.0, 127.0) as i8;
+                data[i * c + j] = q.clamp(-INT8_CLAMP, INT8_CLAMP) as i8;
             }
         }
         QuantizedTensor { shape: w.shape.clone(), scales, data }
@@ -65,6 +76,139 @@ impl QuantizedTensor {
     /// Bytes of the quantized representation (int8 + f32 scales).
     pub fn quantized_bytes(&self) -> usize {
         self.data.len() + self.scales.len() * 4
+    }
+}
+
+/// An expert FFN held in int8: the three projections of a SwiGLU FFN
+/// quantized per output column, executable directly via the fused
+/// dequant kernel [`tensor::matmul_rows_q8`] — no f32 copy of the
+/// weights ever materializes on the forward path. This is the storage
+/// form behind `Int8Resident` / `Int8Host` in [`crate::moe::ExpertStore`].
+#[derive(Clone, Debug)]
+pub struct QuantizedFfn {
+    pub w_gate: QuantizedTensor,
+    pub w_up: QuantizedTensor,
+    pub w_down: QuantizedTensor,
+}
+
+/// Upper bound on |silu(a) − silu(b)| / |a − b|: silu's derivative
+/// peaks at ≈ 1.0998, so 1.1 is a safe Lipschitz constant for the
+/// divergence-bound interval propagation below.
+const SILU_LIP: f32 = 1.1;
+
+impl QuantizedFfn {
+    pub fn quantize(ffn: &FfnWeights) -> QuantizedFfn {
+        QuantizedFfn {
+            w_gate: QuantizedTensor::quantize(&ffn.w_gate),
+            w_up: QuantizedTensor::quantize(&ffn.w_up),
+            w_down: QuantizedTensor::quantize(&ffn.w_down),
+        }
+    }
+
+    /// Simulated-dequantization round trip (testing / fallback).
+    pub fn dequantize(&self) -> FfnWeights {
+        FfnWeights {
+            w_gate: self.w_gate.dequantize(),
+            w_up: self.w_up.dequantize(),
+            w_down: self.w_down.dequantize(),
+        }
+    }
+
+    /// Hidden (neuron) dimension, mirroring [`FfnWeights::hidden_dim`].
+    pub fn hidden_dim(&self) -> usize {
+        self.w_gate.shape[1]
+    }
+
+    /// Model width `d` (input dim of the gate projection).
+    pub fn model_dim(&self) -> usize {
+        self.w_gate.shape[0]
+    }
+
+    /// Bytes of the int8 representation, scales included.
+    pub fn quantized_bytes(&self) -> usize {
+        self.w_gate.quantized_bytes()
+            + self.w_up.quantized_bytes()
+            + self.w_down.quantized_bytes()
+    }
+
+    /// Quantized grouped SwiGLU over a flat block of rows — the int8
+    /// twin of [`tensor::swiglu_rows_into`], same scratch contract,
+    /// all three GEMMs through [`tensor::matmul_rows_q8`] so the
+    /// k-accumulation order matches the fp32 band kernel.
+    // lint: hot-path
+    pub fn swiglu_rows_into(
+        &self,
+        x_rows: &[f32],
+        hidden: &mut [f32],
+        up: &mut [f32],
+        out: &mut [f32],
+    ) {
+        let d = self.model_dim();
+        let m = self.hidden_dim();
+        debug_assert_eq!(self.w_up.shape, [d, m]);
+        debug_assert_eq!(self.w_down.shape, [m, d]);
+        debug_assert_eq!(x_rows.len() % d, 0);
+        let rows = x_rows.len() / d;
+        let (hidden, up) = (&mut hidden[..rows * m], &mut up[..rows * m]);
+        let out = &mut out[..rows * d];
+        tensor::matmul_rows_q8(x_rows, &self.w_gate.data, &self.w_gate.scales, hidden, d, m);
+        tensor::matmul_rows_q8(x_rows, &self.w_up.data, &self.w_up.scales, up, d, m);
+        for (h, u) in hidden.iter_mut().zip(up.iter()) {
+            *h = tensor::silu(*h) * *u;
+        }
+        tensor::matmul_rows_q8(hidden, &self.w_down.data, &self.w_down.scales, out, m, d);
+    }
+
+    /// Analytic per-call bound on the max-abs divergence between this
+    /// quantized FFN's output and the fp32 original's, over the given
+    /// input rows — the `max_error_bound` composition the property
+    /// suite checks the real divergence against. Interval propagation:
+    /// each projection's elementwise weight error is at most its
+    /// [`QuantizedTensor::max_error_bound`], an input row contributes
+    /// `Σ|x|` of it per output element, the SwiGLU gate is
+    /// [`SILU_LIP`]-Lipschitz, and the down projection sees both the
+    /// hidden error and its own weight error. Not tight — it is a
+    /// soundness bound, not an estimate.
+    pub fn divergence_bound(&self, x_rows: &[f32]) -> f32 {
+        let d = self.model_dim();
+        let m = self.hidden_dim();
+        assert_eq!(x_rows.len() % d, 0);
+        let rows = x_rows.len() / d;
+        if rows == 0 {
+            return 0.0;
+        }
+        let bg = self.w_gate.max_error_bound();
+        let bu = self.w_up.max_error_bound();
+        let bd = self.w_down.max_error_bound();
+        // max |dequantized w_down| — |w_down_fp| ≤ this + bd elementwise
+        let wd_max = self
+            .w_down
+            .data
+            .iter()
+            .enumerate()
+            .map(|(k, &q)| (q as f32 * self.w_down.scales[k % d]).abs())
+            .fold(0.0f32, f32::max);
+        let mut hidden = vec![0.0f32; rows * m];
+        let mut up = vec![0.0f32; rows * m];
+        tensor::matmul_rows_q8(x_rows, &self.w_gate.data, &self.w_gate.scales, &mut hidden, d, m);
+        tensor::matmul_rows_q8(x_rows, &self.w_up.data, &self.w_up.scales, &mut up, d, m);
+        let mut worst = 0.0f32;
+        for r in 0..rows {
+            let x_abs: f32 = x_rows[r * d..(r + 1) * d].iter().map(|v| v.abs()).sum();
+            let dg = x_abs * bg; // |g_q − g_fp| per hidden element
+            let du = x_abs * bu; // |u_q − u_fp| per hidden element
+            let mut sum_h = 0.0f32; // Σ |h_q|
+            let mut sum_dh = 0.0f32; // Σ per-element hidden error bound
+            for i in 0..m {
+                let g = hidden[r * m + i];
+                let u = up[r * m + i];
+                let sg = tensor::silu(g).abs();
+                sum_h += sg * u.abs();
+                sum_dh += sg * du + (u.abs() + du) * SILU_LIP * dg;
+            }
+            worst = worst.max(sum_h * bd + sum_dh * (wd_max + bd));
+        }
+        worst
     }
 }
 
@@ -107,10 +251,45 @@ pub fn quantize_model(model: &ModelWeights) -> ModelWeights {
     out
 }
 
-/// Compression ratio of int8 weights vs f32 for a model's projections.
-pub fn compression_ratio() -> f64 {
-    // int8 + per-column scale amortized over rows ⇒ ≈ 4×
-    4.0
+/// The projection matrices [`quantize_model`] quantizes, in the same
+/// order — the single source of truth for byte accounting.
+fn quantized_projections(model: &ModelWeights) -> Vec<&Tensor> {
+    let mut ts = vec![&model.embed, &model.unembed];
+    for layer in &model.layers {
+        ts.extend([&layer.attn.wq, &layer.attn.wk, &layer.attn.wv, &layer.attn.wo]);
+        match &layer.ffn {
+            LayerFfn::Dense(f) => ts.extend([&f.w_gate, &f.w_up, &f.w_down]),
+            LayerFfn::Moe(moe) => {
+                ts.extend([&moe.shared.w_gate, &moe.shared.w_up, &moe.shared.w_down]);
+                for e in &moe.experts {
+                    ts.extend([&e.w_gate, &e.w_up, &e.w_down]);
+                }
+                if let crate::model::Router::Analytical(rw) = &moe.router {
+                    ts.extend([&rw.w_gate_r, &rw.w_up_r]);
+                }
+            }
+        }
+    }
+    ts
+}
+
+/// Compression ratio of int8 weights vs f32 for the model at hand:
+/// fp32 bytes over actual [`QuantizedTensor::quantized_bytes`] across
+/// every projection [`quantize_model`] touches. Strictly below 4× —
+/// the per-column f32 scales are not free, and at small row counts
+/// (expert slices are `[d, m]` with small `m`) they cost a visible
+/// fraction of the int8 payload.
+pub fn compression_ratio(model: &ModelWeights) -> f64 {
+    let mut q_bytes = 0usize;
+    let mut f_bytes = 0usize;
+    for t in quantized_projections(model) {
+        q_bytes += t.numel() + t.shape[1] * 4;
+        f_bytes += t.numel() * 4;
+    }
+    if q_bytes == 0 {
+        return 1.0;
+    }
+    f_bytes as f64 / q_bytes as f64
 }
 
 #[cfg(test)]
@@ -140,6 +319,71 @@ mod tests {
         let back = q.dequantize();
         assert!(w.max_abs_diff(&back) < 1e-2);
         assert!(back.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn quantized_ffn_matches_simulated_dequant_and_bounds_divergence() {
+        let mut rng = Rng::new(505);
+        let (d, m, rows) = (12, 24, 7);
+        let ffn = FfnWeights {
+            w_gate: Tensor::randn(&mut rng, &[d, m], 0.5),
+            w_up: Tensor::randn(&mut rng, &[d, m], 0.5),
+            w_down: Tensor::randn(&mut rng, &[m, d], 0.5),
+        };
+        let q = QuantizedFfn::quantize(&ffn);
+        let x = Tensor::randn(&mut rng, &[rows, d], 1.0);
+        let mut hidden = vec![0.0f32; rows * m];
+        let mut up = vec![0.0f32; rows * m];
+        let mut out_q = vec![0.0f32; rows * d];
+        q.swiglu_rows_into(&x.data, &mut hidden, &mut up, &mut out_q);
+        // fused-dequant path == simulated dequant through the fp32 kernel
+        let deq = q.dequantize();
+        let mut out_sim = vec![0.0f32; rows * d];
+        crate::tensor::swiglu_rows_into(
+            &x.data,
+            &deq.w_gate,
+            &deq.w_up,
+            &deq.w_down,
+            &mut hidden,
+            &mut up,
+            &mut out_sim,
+        );
+        for (a, b) in out_q.iter().zip(&out_sim) {
+            assert!((a - b).abs() < 1e-3, "fused dequant diverged: {a} vs {b}");
+        }
+        // and the fp32 original stays inside the analytic bound
+        let mut out_fp = vec![0.0f32; rows * d];
+        crate::tensor::swiglu_rows_into(
+            &x.data,
+            &ffn.w_gate,
+            &ffn.w_up,
+            &ffn.w_down,
+            &mut hidden,
+            &mut up,
+            &mut out_fp,
+        );
+        let bound = q.divergence_bound(&x.data);
+        let worst = out_q
+            .iter()
+            .zip(&out_fp)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(worst > 0.0, "int8 suspiciously exact");
+        assert!(worst <= bound * 1.01 + 1e-4, "divergence {worst} > bound {bound}");
+    }
+
+    #[test]
+    fn compression_ratio_reflects_scale_overhead() {
+        let cfg = model_config("tiny").unwrap();
+        let mut rng = Rng::new(506);
+        let model = ModelWeights::random(&cfg, &mut rng);
+        let r = compression_ratio(&model);
+        // int8 payload alone is 4x; per-column f32 scales pull it below
+        assert!(r > 3.0 && r < 4.0, "ratio {r} outside (3, 4)");
+        // exact accounting on one known tensor: [64, 32] fp32 vs int8+scales
+        let w = Tensor::randn(&mut rng, &[64, 32], 0.5);
+        let q = QuantizedTensor::quantize(&w);
+        assert_eq!(q.quantized_bytes(), 64 * 32 + 32 * 4);
     }
 
     #[test]

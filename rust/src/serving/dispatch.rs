@@ -35,6 +35,13 @@
 //!   (a *smaller* footprint than fixed-k, so dynamic-k can never
 //!   trigger late arena growth). `rust/tests/dynamic_k.rs` pins the
 //!   CSR ↔ decision permutation equivalence under ragged loads.
+//! * **Storage-agnostic bands.** Expert weights arrive through
+//!   [`crate::moe::ExpertStore`] views, so precision and placement are
+//!   the store's policy: a fp32 view runs [`tensor::swiglu_rows_into`]
+//!   (the exact pre-trait path — plain `&[FfnWeights]` stores keep the
+//!   bit-identity guarantee), an int8 view runs the fused-dequant twin
+//!   with per-column scales applied in the GEMM epilogue. The shared
+//!   expert never flows through here and stays fp32.
 //! * **Arena lifetime.** One [`DispatchArena`] per engine, owned by the
 //!   engine's MoE state and reused across layers, steps, and waves. It
 //!   only ever grows; after the first wave of the largest compiled
@@ -52,7 +59,7 @@
 //!   serial and spawns nothing.
 
 use crate::model::FfnWeights;
-use crate::moe::{GateDecision, GroupedRouting};
+use crate::moe::{ExpertStore, ExpertView, GateDecision, GroupedRouting};
 use crate::tensor::{self, Tensor};
 use crate::util::pool;
 
@@ -142,23 +149,27 @@ impl GroupedDispatcher {
     /// Execute all routed experts for one wave and accumulate the gated
     /// outputs into `out` (`out += Σ_e g · E_e(xn)`, Eq. 4's routed
     /// term). `xn: [B, d]` are the normed token states, `routing` the
-    /// expert-major assignment lists, `experts` the per-expert weights.
+    /// expert-major assignment lists, `experts` any [`ExpertStore`] —
+    /// a plain fp32 slice runs the exact pre-trait band kernel
+    /// (bit-identity preserved); a quantized store's int8 views run
+    /// the fused-dequant twin with the same per-band layout.
     // lint: hot-path
-    pub fn forward(
+    pub fn forward<S: ExpertStore + ?Sized>(
         &self,
         xn: &Tensor,
         routing: &GroupedRouting,
-        experts: &[FfnWeights],
+        experts: &S,
         arena: &mut DispatchArena,
         out: &mut Tensor,
     ) {
         let (d, m) = (self.d, self.m);
         assert_eq!(xn.shape[1], d);
         assert_eq!(out.shape, xn.shape);
-        assert_eq!(experts.len(), routing.n_experts());
-        debug_assert!(experts
-            .iter()
-            .all(|e| e.hidden_dim() == m && e.w_gate.shape[0] == d));
+        assert_eq!(experts.n_experts(), routing.n_experts());
+        debug_assert!((0..experts.n_experts()).all(|e| match experts.view(e) {
+            ExpertView::Fp32(w) => w.hidden_dim() == m && w.w_gate.shape[0] == d,
+            ExpertView::Int8(q) => q.hidden_dim() == m && q.model_dim() == d,
+        }));
         let a = routing.total_rows();
         if a == 0 {
             return;
@@ -220,16 +231,20 @@ impl GroupedDispatcher {
 }
 
 /// Grouped SwiGLU for gathered rows `[r0, r0 + rows)`, walking the
-/// expert segments that overlap the band. Each segment is one
-/// [`tensor::swiglu_rows_into`] call on that expert's weights.
+/// expert segments that overlap the band. Each segment is one call on
+/// that expert's weights through whichever kernel its store view
+/// selects: fp32 [`tensor::swiglu_rows_into`], or the fused-dequant
+/// int8 twin [`crate::quant::QuantizedFfn::swiglu_rows_into`] — both
+/// share the band's scratch slices and k-accumulation order, so the
+/// token-weighted banding stays precision-agnostic.
 #[allow(clippy::too_many_arguments)]
 // lint: hot-path
-fn run_band(
+fn run_band<S: ExpertStore + ?Sized>(
     xs: &[f32],
     r0: usize,
     rows: usize,
     routing: &GroupedRouting,
-    experts: &[FfnWeights],
+    experts: &S,
     d: usize,
     m: usize,
     hidden: &mut [f32],
@@ -247,15 +262,16 @@ fn run_band(
         }
         let seg = e_end.min(end) - r;
         let lo = r - r0;
-        tensor::swiglu_rows_into(
-            &xs[r * d..(r + seg) * d],
-            &experts[e].w_gate,
-            &experts[e].w_up,
-            &experts[e].w_down,
-            &mut hidden[lo * m..(lo + seg) * m],
-            &mut up[lo * m..(lo + seg) * m],
-            &mut ys[lo * d..(lo + seg) * d],
-        );
+        let x_seg = &xs[r * d..(r + seg) * d];
+        let h_seg = &mut hidden[lo * m..(lo + seg) * m];
+        let u_seg = &mut up[lo * m..(lo + seg) * m];
+        let y_seg = &mut ys[lo * d..(lo + seg) * d];
+        match experts.view(e) {
+            ExpertView::Fp32(w) => tensor::swiglu_rows_into(
+                x_seg, &w.w_gate, &w.w_up, &w.w_down, h_seg, u_seg, y_seg,
+            ),
+            ExpertView::Int8(q) => q.swiglu_rows_into(x_seg, h_seg, u_seg, y_seg),
+        }
         r += seg;
     }
 }

@@ -32,7 +32,7 @@
 use crate::model::{LayerFfn, ModelWeights, MoeSpec};
 use crate::moe::{
     k_for_ratio, route_from_scores_dynamic, route_tokens_dynamic, BalanceConfig, BiasAdapter,
-    DynamicK, GroupedRouting,
+    DynamicK, GroupedRouting, ResidencyDelta, TieredStore,
 };
 use crate::runtime::{KvSlotPool, ModelBuffers, MoeModelBuffers, XlaRuntime};
 use crate::runtime::ParkedSlot;
@@ -107,6 +107,16 @@ pub struct EngineConfig {
     /// mode. [`DynamicK::fixed`] (the default) is bit-identical to the
     /// fixed top-k path.
     pub dynamic_k: DynamicK,
+    /// Quantize routed experts to int8 behind the [`TieredStore`]
+    /// residency tier (`cmoe serve --quant-experts`). `false` (the
+    /// default) keeps every expert `Fp32Resident` and the serving path
+    /// bit-identical to the plain fp32 dispatch. The shared expert is
+    /// always fp32 regardless.
+    pub quant_experts: bool,
+    /// Int8-resident expert budget per MoE layer when `quant_experts`
+    /// is set (`cmoe serve --resident-cap`); experts beyond the cap
+    /// demote to `Int8Host` by routing-occupancy EMA.
+    pub resident_cap: usize,
 }
 
 /// Default KV page length (tokens) for the paged slot pool.
@@ -135,6 +145,8 @@ impl EngineConfig {
             prefix_cache: false,
             clock: Clock::wall(),
             dynamic_k: DynamicK::fixed(),
+            quant_experts: false,
+            resident_cap: crate::moe::DEFAULT_RESIDENT_CAP,
         }
     }
 
@@ -151,6 +163,8 @@ impl EngineConfig {
             prefix_cache: false,
             clock: Clock::wall(),
             dynamic_k: DynamicK::fixed(),
+            quant_experts: false,
+            resident_cap: crate::moe::DEFAULT_RESIDENT_CAP,
         }
     }
 }
@@ -188,6 +202,15 @@ struct MoeState {
     /// layers; flushed to `EngineMetrics::dispatch` once per step so
     /// the metrics mutex stays off the per-layer hot path.
     step_tokens: Vec<u64>,
+    /// Per-MoE-layer expert storage tiers (`EngineConfig::quant_experts`);
+    /// empty when quantized storage is off — the dispatcher then runs
+    /// over the plain fp32 `layers[l].experts` slices, bit-identical to
+    /// the pre-storage-trait path.
+    stores: Vec<TieredStore>,
+    /// Residency transitions accumulated over the current decode step's
+    /// layers; flushed to `EngineMetrics::residency` once per step,
+    /// alongside `step_tokens`.
+    step_residency: ResidencyDelta,
 }
 
 impl Engine {
@@ -219,6 +242,17 @@ impl Engine {
             .map(|m| BiasAdapter::new(m.spec.routed(), cfg.balance.unwrap_or_default()))
             .collect();
         let max_routed = moe_layers.iter().map(|m| m.spec.routed()).max().unwrap_or(0);
+        // quantized expert storage: one residency tier per MoE layer;
+        // the fp32 originals stay in `layers` for the bias adapter and
+        // the (always-fp32) monolithic/device paths
+        let stores = if cfg.quant_experts {
+            moe_layers
+                .iter()
+                .map(|m| TieredStore::new(&m.experts, true, cfg.resident_cap))
+                .collect()
+        } else {
+            Vec::new()
+        };
         Ok(Engine {
             rt,
             cfg,
@@ -232,6 +266,8 @@ impl Engine {
                 arena: DispatchArena::new(),
                 counts: vec![0; max_routed],
                 step_tokens: vec![0; max_routed],
+                stores,
+                step_residency: ResidencyDelta::default(),
             }),
             metrics: std::sync::Mutex::new(EngineMetrics::default()),
         })
@@ -372,8 +408,36 @@ impl Engine {
     pub fn run_queue_waves(&self, requests: Vec<Request>) -> Result<Vec<RequestResult>> {
         let mut batcher = Batcher::with_clock(self.cfg.batcher.clone(), self.cfg.clock.clone())
             .context("wave batcher")?;
+        // the wave path has no chunked prefill: a prompt longer than
+        // the largest compiled prefill length cannot run at all, so
+        // retire it as a typed per-request failure up front instead of
+        // silently serving its suffix (the artifact grid is uniform
+        // across buckets, so any configured bucket enumerates the
+        // same lengths)
+        let max_s = self
+            .cfg
+            .batcher
+            .buckets
+            .first()
+            .map(|&b| self.prefill_lens(b))
+            .and_then(|lens| lens.last().copied());
+        let mut failures: Vec<crate::serving::RequestFailure> = Vec::new();
         for r in requests {
-            let _ = batcher.push(r);
+            match max_s {
+                Some(max_s) if r.prompt.len() > max_s => {
+                    failures.push(crate::serving::RequestFailure {
+                        id: r.id,
+                        error: format!(
+                            "prompt len {} exceeds largest compiled prefill s={max_s} \
+                             (wave path has no chunked prefill)",
+                            r.prompt.len()
+                        ),
+                    });
+                }
+                _ => {
+                    let _ = batcher.push(r);
+                }
+            }
         }
         let mut results = Vec::new();
         let mut wave = Vec::new();
@@ -383,6 +447,14 @@ impl Engine {
             }
         }
         results.sort_by_key(|r| r.id);
+        // same surfacing contract as run_queue: a standalone batch
+        // expects every request back, so failed ids become an error
+        if !failures.is_empty() {
+            bail!(
+                "run_queue_waves: failed {:?}",
+                failures.iter().map(|f| (f.id, f.error.as_str())).collect::<Vec<_>>()
+            );
+        }
         Ok(results)
     }
 
@@ -406,9 +478,10 @@ impl Engine {
             b
         };
 
-        // --- pick a prefill length: smallest compiled s >= max prompt; if
-        // prompts exceed the largest s, keep their suffix (documented
-        // engine limit; benches compile matching lengths) ---
+        // --- pick a prefill length: smallest compiled s >= max prompt.
+        // A prompt longer than the largest compiled s is an error, not
+        // a silent suffix-truncation — run_queue_waves retires such
+        // requests as typed failures before they reach a wave ---
         let lens = self.prefill_lens(bucket);
         if lens.is_empty() {
             bail!(
@@ -419,12 +492,14 @@ impl Engine {
             );
         }
         let max_prompt = wave.iter().map(|(r, _)| r.prompt.len()).max().unwrap_or(0);
-        let s = lens
-            .iter()
-            .copied()
-            .find(|&l| l >= max_prompt)
-            .or_else(|| lens.last().copied())
-            .ok_or_else(|| anyhow!("no prefill length available"))?;
+        let s = lens.iter().copied().find(|&l| l >= max_prompt).ok_or_else(|| {
+            anyhow!(
+                "wave prompt len {max_prompt} exceeds largest compiled prefill s={} — the \
+                 wave path has no chunked prefill; use the continuous path or compile a \
+                 longer artifact",
+                lens.last().copied().unwrap_or(0)
+            )
+        })?;
 
         // tokens [bucket, s]: left-align prompts (trailing padding is
         // causally invisible to the real tokens, so a row's logits and
@@ -433,9 +508,9 @@ impl Engine {
         let mut tokens = vec![0i32; bucket * s];
         let mut ns = vec![0usize; n_real];
         for (i, (r, _)) in wave.iter().enumerate() {
-            let p = if r.prompt.len() > s { &r.prompt[r.prompt.len() - s..] } else { &r.prompt };
-            ns[i] = p.len();
-            for (j, &tok) in p.iter().enumerate() {
+            debug_assert!(r.prompt.len() <= s, "prefill s selection covers the longest prompt");
+            ns[i] = r.prompt.len();
+            for (j, &tok) in r.prompt.iter().enumerate() {
                 tokens[i * s + j] = tok as i32;
             }
         }
@@ -638,6 +713,7 @@ impl Engine {
 
         let mut state = crate::util::lock_unpoisoned(&self.moe_state);
         state.step_tokens.iter_mut().for_each(|v| *v = 0);
+        state.step_residency = ResidencyDelta::default();
         let mut layer_dispatches = 0u64;
         let n_layers = state.layers.len();
         for l in 0..n_layers {
@@ -755,16 +831,29 @@ impl Engine {
                     // one GEMM per expert per layer over arena-backed
                     // expert blocks; no padding, no overflow rounds
                     st.routing.rebuild(n_r, &decisions);
-                    let disp = GroupedDispatcher::new(d, m);
-                    disp.forward(
-                        &xn,
-                        &st.routing,
-                        &st.layers[l].experts,
-                        &mut st.arena,
-                        &mut ffn_out,
-                    );
                     for (e, c) in st.counts[..n_r].iter_mut().enumerate() {
                         *c = st.routing.count(e);
+                    }
+                    let disp = GroupedDispatcher::new(d, m);
+                    if let Some(store) = st.stores.get_mut(l) {
+                        // quantized storage: meter hits/misses against
+                        // the residency this step dispatches under,
+                        // let the tier reshuffle on the routing trend,
+                        // then dispatch through the store's views
+                        let delta = store.note_step(&st.counts[..n_r]);
+                        st.step_residency.hits += delta.hits;
+                        st.step_residency.misses += delta.misses;
+                        st.step_residency.prefetches += delta.prefetches;
+                        st.step_residency.demotions += delta.demotions;
+                        disp.forward(&xn, &st.routing, &*store, &mut st.arena, &mut ffn_out);
+                    } else {
+                        disp.forward(
+                            &xn,
+                            &st.routing,
+                            &st.layers[l].experts,
+                            &mut st.arena,
+                            &mut ffn_out,
+                        );
                     }
                 }
                 ExpertExec::DeviceCapacity => {
@@ -821,6 +910,7 @@ impl Engine {
             let mut mtr = crate::util::lock_unpoisoned(&self.metrics);
             mtr.dispatch.record_step(&st.step_tokens, layer_dispatches);
             mtr.dispatch.record_arena(st.arena.high_water_bytes(), st.arena.grow_events());
+            mtr.residency.observe(&st.step_residency);
         }
         drop(state);
 
@@ -1131,8 +1221,15 @@ impl<'e> EngineStepForward<'e> {
             }
             self.insert_prefix(r.slot, &prompts[r.idx][..r.end]);
             let o = (row * s + (r.end - 1)) * v;
-            out[r.idx] =
-                Some(PrefillOutcome { logits: logits.data[o..o + v].to_vec(), pos: r.end });
+            // monolithic rows always compute from position 0 — even
+            // when a prefix was cached (the fallback recomputes the
+            // overlap), which is what the scheduler's savings meter
+            // reconciles against
+            out[r.idx] = Some(PrefillOutcome {
+                logits: logits.data[o..o + v].to_vec(),
+                pos: r.end,
+                start: 0,
+            });
         }
         Ok(())
     }
@@ -1185,8 +1282,14 @@ impl<'e> EngineStepForward<'e> {
             self.kv.store_from_batch(r.slot, &kv.data, bucket, row, r.cached, r.end);
             self.insert_prefix(r.slot, &prompts[r.idx][..r.end]);
             let o = (row * s + (s - 1)) * v;
-            out[r.idx] =
-                Some(PrefillOutcome { logits: logits.data[o..o + v].to_vec(), pos: r.end });
+            // r.start < cached means bounded back-extension onto the
+            // cont grid recomputed part of the cached prefix — the
+            // scheduler reclaims that overlap from the savings meter
+            out[r.idx] = Some(PrefillOutcome {
+                logits: logits.data[o..o + v].to_vec(),
+                pos: r.end,
+                start: r.start,
+            });
         }
         Ok(())
     }

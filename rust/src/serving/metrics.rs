@@ -272,6 +272,53 @@ impl DispatchMetrics {
     }
 }
 
+/// Gauges for the quantized expert-storage residency tier
+/// (`moe::TieredStore` behind `EngineConfig::quant_experts`). All
+/// counters are expert-step events summed over layers: one layer-step
+/// that routes tokens to a warm expert is one hit regardless of how
+/// many tokens rode the band.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ResidencyMetrics {
+    /// Routed-to experts that were dispatch-warm (`Fp32Resident` /
+    /// `Int8Resident`) at their layer-step.
+    pub hits: u64,
+    /// Routed-to experts that were `Int8Host` — dispatches the
+    /// promotion policy failed to prefetch ahead of.
+    pub misses: u64,
+    /// Promotions `Int8Host → Int8Resident` (the routing trend warmed
+    /// an expert back up).
+    pub prefetches: u64,
+    /// Evictions `Int8Resident → Int8Host` under the resident cap.
+    pub demotions: u64,
+}
+
+impl ResidencyMetrics {
+    /// Fold one decode step's accumulated residency transitions in
+    /// (the engine flushes once per step, not per layer).
+    pub fn observe(&mut self, d: &crate::moe::ResidencyDelta) {
+        self.hits += d.hits;
+        self.misses += d.misses;
+        self.prefetches += d.prefetches;
+        self.demotions += d.demotions;
+    }
+
+    /// Share of routed-expert dispatches that found the expert warm.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / total as f64
+    }
+
+    pub fn merge(&mut self, o: &ResidencyMetrics) {
+        self.hits += o.hits;
+        self.misses += o.misses;
+        self.prefetches += o.prefetches;
+        self.demotions += o.demotions;
+    }
+}
+
 /// Metrics for one wave.
 #[derive(Clone, Debug, Default)]
 pub struct WaveMetrics {
@@ -316,6 +363,9 @@ pub struct EngineMetrics {
     /// Paged-KV gauges (stays at its default until a paged backend
     /// session flushes).
     pub pages: PageMetrics,
+    /// Expert-storage residency gauges (stays at its default unless
+    /// the engine runs with `quant_experts`).
+    pub residency: ResidencyMetrics,
 }
 
 impl EngineMetrics {
@@ -436,6 +486,14 @@ impl EngineMetrics {
                 self.pages.cow_copies,
                 self.pages.cached_pages,
                 self.pages.evicted_pages,
+            ));
+        }
+        if self.residency.hits + self.residency.misses > 0 {
+            s.push_str(&format!(
+                ", expert residency hit {:.0}% ({} prefetches, {} demotions)",
+                self.residency.hit_rate() * 100.0,
+                self.residency.prefetches,
+                self.residency.demotions,
             ));
         }
         s
@@ -639,6 +697,33 @@ mod tests {
         assert_eq!(m.pages.high_water_pages, 9);
         assert_eq!(m.pages.cow_copies, 3);
         assert_eq!(m.pages.page_len, 4, "point gauges survive empty snapshots");
+    }
+
+    #[test]
+    fn residency_gauges_observe_merge_and_summarize() {
+        let mut r = ResidencyMetrics::default();
+        assert_eq!(r.hit_rate(), 0.0, "no dispatches → 0, not NaN");
+        r.observe(&crate::moe::ResidencyDelta {
+            hits: 3,
+            misses: 1,
+            prefetches: 1,
+            demotions: 1,
+        });
+        assert!((r.hit_rate() - 0.75).abs() < 1e-12);
+        let mut t = ResidencyMetrics::default();
+        t.merge(&r);
+        t.merge(&r);
+        assert_eq!(t.hits, 6);
+        assert_eq!(t.misses, 2);
+        assert_eq!(t.prefetches, 2);
+        assert_eq!(t.demotions, 2);
+
+        // summary segment appears only when quantized storage dispatched
+        let quiet = EngineMetrics::default();
+        assert!(!quiet.summary().contains("expert residency"));
+        let mut m = EngineMetrics::default();
+        m.residency.merge(&r);
+        assert!(m.summary().contains("expert residency hit 75% (1 prefetches, 1 demotions)"));
     }
 
     #[test]

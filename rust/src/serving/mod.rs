@@ -53,7 +53,9 @@ pub use engine::{
     Engine, EngineConfig, EngineStepForward, ExecMode, ExpertExec, CONT_GRID_STEP, DEFAULT_PAGE_LEN,
 };
 pub use fault::FaultInjectingForward;
-pub use metrics::{DispatchMetrics, EngineMetrics, PageMetrics, SchedulerMetrics, WaveMetrics};
+pub use metrics::{
+    DispatchMetrics, EngineMetrics, PageMetrics, ResidencyMetrics, SchedulerMetrics, WaveMetrics,
+};
 pub use prefix_cache::PrefixCache;
 pub use request::{
     EffortTier, GenParams, Priority, Request, RequestFailure, RequestResult, TierRatios,

@@ -140,6 +140,13 @@ pub struct SlotState {
     /// is mid-prefill under a chunk budget
     /// (`BatcherConfig::prefill_chunk_tokens`).
     pub prefilled: usize,
+    /// Prompt tokens currently credited to `prefill_tokens_saved` for
+    /// this slot (the mapped-prefix length at admission). A prefill
+    /// outcome whose computed range starts below this (back-extension
+    /// overlap, or the monolithic fallback recomputing from 0) pays
+    /// the difference back — the savings meter only keeps compute that
+    /// was actually skipped.
+    pub saved_credit: usize,
     /// Step index at which the request entered the admission queue
     /// (the batcher's arrival stamp — survives preemption, so the
     /// step-denominated TTFT covers preempted waits too).
@@ -268,6 +275,7 @@ impl Scheduler {
             pos: 0,
             ttft: None,
             prefilled: 0,
+            saved_credit: 0,
             enqueue_step,
             first_token_step: None,
             last_token_step: 0,
@@ -361,6 +369,14 @@ pub struct PrefillOutcome {
     pub logits: Vec<f32>,
     /// KV length after prefill — the first decode step's position.
     pub pos: usize,
+    /// First prompt position this call actually *computed*. Equal to
+    /// the cached-prefix length when a continuation artifact covered
+    /// the suffix exactly; lower when the plan back-extended onto the
+    /// compiled grid or fell back to a monolithic prefill (which
+    /// recomputes from 0 even over cached tokens). The session uses
+    /// this to reconcile `prefill_tokens_saved` with the compute that
+    /// was genuinely skipped.
+    pub start: usize,
 }
 
 /// What the scheduler needs from a model: prefill into a slot, one
@@ -857,7 +873,12 @@ impl<F: StepForward> ContinuousSession<F> {
                 }
             }
             self.sched.metrics.prefill_tokens += (plen - cached) as u64;
-            self.sched.slot_mut(sid).prefilled = cached;
+            let st = self.sched.slot_mut(sid);
+            st.prefilled = cached;
+            // provisional credit: a later prefill outcome that computes
+            // below `cached` (no covering continuation artifact) pays
+            // the recomputed overlap back out of the saved gauge
+            st.saved_credit = cached;
             self.prefilling.push(sid);
         }
 
@@ -923,6 +944,22 @@ impl<F: StepForward> ContinuousSession<F> {
                     let Some(out) = out else { continue };
                     let sid = self.slot_buf[i];
                     let plen = self.sched.slot(sid).request.prompt.len();
+                    // reconcile the savings meter with what this call
+                    // actually computed: a start below the credited
+                    // prefix means the overlap was recomputed (grid
+                    // back-extension or monolithic fallback), so move
+                    // that many tokens from "saved" back to "computed".
+                    // Invariant on every path, asserted by the chunked
+                    // prefill suite:
+                    //   prefill_tokens + prefill_tokens_saved == Σ plen
+                    let credit = self.sched.slot(sid).saved_credit;
+                    if out.start < credit {
+                        let reclaim = (credit - out.start) as u64;
+                        self.sched.metrics.prefill_tokens += reclaim;
+                        self.sched.metrics.prefill_tokens_saved =
+                            self.sched.metrics.prefill_tokens_saved.saturating_sub(reclaim);
+                        self.sched.slot_mut(sid).saved_credit = out.start;
+                    }
                     if out.pos < plen {
                         // non-final chunk: KV advanced, logits discarded.
                         // A backend may stop short of the planned end
@@ -1095,6 +1132,11 @@ impl<F: StepForward> ContinuousSession<F> {
                     let st = self.sched.slot_mut(sid);
                     let lost = st.prefilled as u64;
                     st.prefilled = 0;
+                    // the lost extent (mapped prefix included) is
+                    // metered as preemption recompute here, so the
+                    // savings meter must not also pay it back when the
+                    // restarted prefill reports start = 0
+                    st.saved_credit = 0;
                     self.sched.metrics.preempt_recompute_tokens += lost;
                 }
             }
@@ -1511,7 +1553,9 @@ impl StepForward for StubForward {
             // prefix mapping diverges the token stream right here
             let ctx = self.read_ctx(sid, p.len());
             let logits = stub_logits_at(&ctx, self.vocab, self.ratios[sid]);
-            out.push(PrefillOutcome { logits, pos: p.len() });
+            // the stub computes exactly the uncached suffix, so its
+            // start equals the cached length — never a reclaim
+            out.push(PrefillOutcome { logits, pos: p.len(), start: c });
             if self.cache.is_some() {
                 let full = p.len() / self.kv.page_len();
                 let pages: Vec<usize> = self.kv.slot_pages(sid)[..full].to_vec();
@@ -2027,6 +2071,7 @@ mod tests {
             pos: 0,
             ttft: None,
             prefilled: 3,
+            saved_credit: 0,
             enqueue_step: 0,
             first_token_step: None,
             last_token_step: 0,

@@ -99,6 +99,68 @@ pub fn matmul_rows(a_rows: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usiz
     }
 }
 
+/// Serial cache-blocked matmul over a band of rows against a symmetric
+/// per-output-column **int8** weight matrix, with the dequantization
+/// fused into the accumulation epilogue:
+/// `out[r,j] = (Σ_k a_rows[r,k] · q[k,j]) · scales[j]`.
+///
+/// `q: [k, n]` flat row-major int8, `scales: [n]` per-column. The loop
+/// structure (k-blocked, k-ascending, 8-wide unroll over j) matches
+/// [`matmul_rows`] exactly, so per-row accumulation order is fixed the
+/// same way — quantized expert bands inherit the determinism invariant.
+/// The raw `Σ x·q` accumulates in f32 and one scale multiply per output
+/// element lands at the end, instead of dequantizing `q` into a scratch
+/// matrix first: no f32 copy of the weights ever materializes.
+// lint: hot-path
+pub fn matmul_rows_q8(a_rows: &[f32], q: &[i8], scales: &[f32], out: &mut [f32], k: usize, n: usize) {
+    assert!(k > 0 && n > 0, "matmul_rows_q8: degenerate dims k={k} n={n}");
+    debug_assert_eq!(a_rows.len() % k, 0);
+    debug_assert_eq!(out.len() % n, 0);
+    let rows = a_rows.len() / k;
+    debug_assert_eq!(out.len() / n, rows, "matmul_rows_q8: rows mismatch");
+    debug_assert_eq!(q.len(), k * n);
+    debug_assert_eq!(scales.len(), n);
+    out.fill(0.0);
+    const KB: usize = 64;
+    for kb in (0..k).step_by(KB) {
+        let k_end = (kb + KB).min(k);
+        for r in 0..rows {
+            let a_row = &a_rows[r * k..(r + 1) * k];
+            let o_row = &mut out[r * n..(r + 1) * n];
+            for kk in kb..k_end {
+                let av = a_row[kk];
+                if av == 0.0 {
+                    continue; // sparse activations: skip zero rows cheaply
+                }
+                let q_row = &q[kk * n..(kk + 1) * n];
+                // 8-wide unroll
+                let chunks = n / 8;
+                for c in 0..chunks {
+                    let j = c * 8;
+                    o_row[j] += av * q_row[j] as f32;
+                    o_row[j + 1] += av * q_row[j + 1] as f32;
+                    o_row[j + 2] += av * q_row[j + 2] as f32;
+                    o_row[j + 3] += av * q_row[j + 3] as f32;
+                    o_row[j + 4] += av * q_row[j + 4] as f32;
+                    o_row[j + 5] += av * q_row[j + 5] as f32;
+                    o_row[j + 6] += av * q_row[j + 6] as f32;
+                    o_row[j + 7] += av * q_row[j + 7] as f32;
+                }
+                for j in chunks * 8..n {
+                    o_row[j] += av * q_row[j] as f32;
+                }
+            }
+        }
+    }
+    // fused dequant epilogue: one per-column scale pass
+    for r in 0..rows {
+        let o_row = &mut out[r * n..(r + 1) * n];
+        for (o, &s) in o_row.iter_mut().zip(scales.iter()) {
+            *o *= s;
+        }
+    }
+}
+
 /// Naive reference matmul for testing the blocked one.
 pub fn matmul_naive(a: &Tensor, b: &Tensor) -> Tensor {
     let (m, k) = (a.shape[0], a.shape[1]);

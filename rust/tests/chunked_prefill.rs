@@ -20,10 +20,11 @@
 //!   drop) resumes to the identical stream and reclaims every KV page
 //!   and slot context at drain.
 
+use anyhow::Result;
 use cmoe::prop_assert;
 use cmoe::serving::{
-    stub_reference, BatcherConfig, Clock, ContinuousSession, GenParams, PreemptMode, Priority,
-    Request, StepForward, StubForward,
+    stub_reference, BatcherConfig, Clock, ContinuousSession, GenParams, PreemptMode,
+    PrefillOutcome, Priority, Request, StepForward, StubForward,
 };
 use cmoe::util::prop;
 use cmoe::util::Rng;
@@ -269,6 +270,167 @@ fn shed_requests_produce_no_result_and_no_ttft_sample() {
     let results = sess.drain().unwrap();
     assert_eq!(results.len(), 6 - shed as usize);
     assert!(results.iter().all(|r| r.ttft.is_some() && r.ttft_steps.is_some()));
+}
+
+#[test]
+fn prop_savings_meter_reconciles_to_total_prompt_tokens() {
+    // ISSUE-10 metering invariant: every admitted-and-served prompt
+    // token is metered exactly once, as either computed
+    // (`prefill_tokens`) or genuinely skipped (`prefill_tokens_saved`)
+    // — across chunk budgets, prefix cache on/off, and preemption
+    // modes (drop-preempt recompute is metered separately and must not
+    // disturb the sum)
+    prop::check(
+        "prefill_tokens + prefill_tokens_saved == total served prompt tokens",
+        prop::Config { cases: 40, seed: 0x5A7E, max_size: 14 },
+        |rng: &mut Rng, size| {
+            for &mode in &[PreemptMode::Off, PreemptMode::Park, PreemptMode::Drop] {
+                for &cache in &[false, true] {
+                    let chunk = *[0usize, 1, 4, 16].get(rng.below(4)).unwrap();
+                    let n_req = 1 + rng.below(size.max(1));
+                    let reqs: Vec<Request> = (0..n_req)
+                        .map(|i| {
+                            let mut r = random_request(i as u64, rng);
+                            if mode != PreemptMode::Off && rng.f32() < 0.3 {
+                                r = r
+                                    .with_priority(Priority::High)
+                                    .with_deadline_steps(rng.below(3) as u64);
+                            }
+                            // duplicate prompts: give the prefix cache
+                            // real overlap to claim savings on
+                            if i > 0 && rng.f32() < 0.4 {
+                                r.prompt = shared_prefix_prompt(i, rng);
+                            }
+                            r
+                        })
+                        .collect();
+                    let mut sess = session(vec![1 + rng.below(3)], chunk, cache, mode);
+                    let results = run(&mut sess, &reqs, rng)?;
+                    prop_assert!(results.len() == n_req, "lost requests");
+                    let total: u64 = reqs.iter().map(|r| r.prompt.len() as u64).sum();
+                    let m = sess.metrics();
+                    prop_assert!(
+                        m.prefill_tokens + m.prefill_tokens_saved == total,
+                        "[{mode:?} cache={cache} chunk={chunk}] metered {} computed + {} \
+                         saved != {total} prompt tokens",
+                        m.prefill_tokens,
+                        m.prefill_tokens_saved
+                    );
+                    prop_assert!(
+                        cache || m.prefill_tokens_saved == 0,
+                        "cache-less run claimed {} saved tokens",
+                        m.prefill_tokens_saved
+                    );
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A prompt overlapping earlier traffic: repeat a shared page-aligned
+/// prefix so the prefix cache has something to map.
+fn shared_prefix_prompt(i: usize, rng: &mut Rng) -> Vec<usize> {
+    let mut p: Vec<usize> = (0..12).map(|j| (j * 5 + 3) % VOCAB).collect();
+    p.extend((0..1 + rng.below(6)).map(|_| (i + rng.below(VOCAB)) % VOCAB));
+    p
+}
+
+/// A [`StubForward`] wrapper that simulates the engine's monolithic
+/// prefill fallback: the prefix cache maps a prefix (and the session
+/// provisionally credits it to `prefill_tokens_saved`), but the
+/// compute plan starts from position 0 anyway — reported honestly via
+/// `PrefillOutcome::start = 0`. The scheduler must reclaim the
+/// provisional credit, or the savings meter over-claims (the ISSUE-10
+/// bug).
+struct MonoFallback(StubForward);
+
+impl StepForward for MonoFallback {
+    fn map_prefix(&mut self, slot: usize, prompt: &[usize]) -> Result<Option<usize>> {
+        self.0.map_prefix(slot, prompt)
+    }
+
+    fn prefill(
+        &mut self,
+        slots: &[usize],
+        prompts: &[&[usize]],
+        cached: &[usize],
+    ) -> Result<Vec<PrefillOutcome>> {
+        let mut out = self.0.prefill(slots, prompts, cached)?;
+        for o in out.iter_mut() {
+            o.start = 0; // recomputed the overlap: no tokens were skipped
+        }
+        Ok(out)
+    }
+
+    fn decode(
+        &mut self,
+        slots: &[usize],
+        tokens: &[i32],
+        pos: &[usize],
+        bucket: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        self.0.decode(slots, tokens, pos, bucket)
+    }
+
+    fn release(&mut self, slot: usize) {
+        self.0.release(slot)
+    }
+
+    fn kv_capacity(&self) -> usize {
+        self.0.kv_capacity()
+    }
+}
+
+#[test]
+fn monolithic_fallback_recompute_reclaims_the_savings_credit() {
+    let prompt: Vec<usize> = (0..16).map(|j| j % VOCAB).collect();
+    let params = GenParams { max_new_tokens: 3, temperature: 0.0, seed: 9, stop_token: None };
+    let cfg = || BatcherConfig {
+        buckets: vec![1],
+        max_wait: Duration::ZERO,
+        prefill_chunk_tokens: 0, // monolithic prefill
+        ..Default::default()
+    };
+
+    // honest backend: the second identical prompt maps its prefix and
+    // the savings meter keeps the claim (outcome.start == cached)
+    let mut honest = ContinuousSession::with_clock(
+        cfg(),
+        StubForward::with_prefix_cache(1, VOCAB, KV_CAP, 4),
+        Clock::manual(),
+    )
+    .unwrap();
+    for id in 0..2u64 {
+        honest.enqueue(Request::new(id, prompt.clone(), params));
+        honest.drain().unwrap();
+    }
+    let hm = honest.metrics();
+    assert!(hm.prefill_tokens_saved > 0, "prefix cache never claimed a saving");
+    assert_eq!(hm.prefill_tokens + hm.prefill_tokens_saved, 2 * prompt.len() as u64);
+
+    // monolithic-fallback backend: same traffic, but the plan
+    // recomputes from 0 — every provisional saving must be paid back
+    let mut mono = ContinuousSession::with_clock(
+        cfg(),
+        MonoFallback(StubForward::with_prefix_cache(1, VOCAB, KV_CAP, 4)),
+        Clock::manual(),
+    )
+    .unwrap();
+    let mut tokens = Vec::new();
+    for id in 0..2u64 {
+        mono.enqueue(Request::new(id, prompt.clone(), params));
+        tokens.extend(mono.drain().unwrap());
+    }
+    let mm = mono.metrics();
+    assert_eq!(
+        mm.prefill_tokens_saved, 0,
+        "recomputed overlap still claimed as saved — the over-claiming bug is back"
+    );
+    assert_eq!(mm.prefill_tokens, 2 * prompt.len() as u64);
+    // the reclaim is metering-only: token streams are untouched
+    let want = stub_reference(&Request::new(0, prompt.clone(), params), VOCAB, KV_CAP);
+    assert!(tokens.iter().all(|r| r.tokens == want), "reclaim changed decode output");
 }
 
 #[test]

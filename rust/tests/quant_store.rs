@@ -1,0 +1,330 @@
+//! Expert-storage suite (ISSUE 10): the [`ExpertStore`] contract the
+//! grouped dispatcher now runs on, host-only and artifact-free.
+//!
+//! Three properties pin the tentpole:
+//!
+//! * **bit-identity**: with every expert `Fp32Resident` (plain slices
+//!   or a quant-off [`TieredStore`]), routed output through the
+//!   trait-generic dispatcher is f32-bit-identical to the fp32 path —
+//!   the trait refactor is invisible until a policy opts in;
+//! * **bounded divergence**: the int8 band path's per-token divergence
+//!   from fp32 stays inside the gate-weighted composition of each
+//!   routed expert's analytic [`QuantizedFfn::divergence_bound`], on
+//!   randomized experts, routings, and input scales;
+//! * **residency bookkeeping**: [`TieredStore::note_step`] agrees with
+//!   an independent shadow model (recomputed EMA + top-cap re-sort) on
+//!   every hit/miss/prefetch/demotion count over long drifting traces,
+//!   never loses an expert, and keeps exactly `resident_cap` experts
+//!   warm.
+
+use cmoe::model::FfnWeights;
+use cmoe::moe::{
+    ExpertResidency, ExpertStore, ExpertView, GateDecision, GroupedRouting, TieredStore,
+    RESIDENCY_EMA_DECAY,
+};
+use cmoe::prop_assert;
+use cmoe::quant::QuantizedFfn;
+use cmoe::serving::{DispatchArena, GroupedDispatcher};
+use cmoe::tensor::Tensor;
+use cmoe::util::{prop, Rng};
+
+fn experts(rng: &mut Rng, n: usize, d: usize, m: usize) -> Vec<FfnWeights> {
+    (0..n)
+        .map(|_| FfnWeights {
+            w_gate: Tensor::randn(rng, &[d, m], 0.5),
+            w_up: Tensor::randn(rng, &[d, m], 0.5),
+            w_down: Tensor::randn(rng, &[m, d], 0.5),
+        })
+        .collect()
+}
+
+/// Synthetic routing: every token picks 1–2 distinct experts with
+/// positive gates (the dispatcher applies the gates; the divergence
+/// bound composes over them).
+fn random_decisions(rng: &mut Rng, tokens: usize, n_r: usize) -> Vec<GateDecision> {
+    (0..tokens)
+        .map(|_| {
+            let k = 1 + rng.below(2.min(n_r));
+            let mut es = Vec::new();
+            while es.len() < k {
+                let e = rng.below(n_r);
+                if !es.contains(&e) {
+                    es.push(e);
+                }
+            }
+            let gates = es.iter().map(|_| 0.5 + rng.f32()).collect();
+            GateDecision { experts: es, gates, scores: vec![0.0; n_r] }
+        })
+        .collect()
+}
+
+/// Grouped dispatch of `xn` through `store` under `decisions`.
+fn dispatch<S: ExpertStore + ?Sized>(
+    xn: &Tensor,
+    decisions: &[GateDecision],
+    store: &S,
+    n_r: usize,
+    m: usize,
+) -> Tensor {
+    let d = xn.shape[1];
+    let mut routing = GroupedRouting::new(n_r);
+    routing.rebuild(n_r, decisions);
+    let disp = GroupedDispatcher::new(d, m);
+    let mut arena = DispatchArena::new();
+    let mut out = Tensor::zeros(&[xn.shape[0], d]);
+    disp.forward(xn, &routing, store, &mut arena, &mut out);
+    out
+}
+
+#[test]
+fn prop_all_fp32_resident_paths_are_bit_identical() {
+    prop::check(
+        "slice, Vec, and quant-off TieredStore dispatch to identical bits",
+        prop::Config { cases: 30, seed: 0x51C8, max_size: 12 },
+        |rng: &mut Rng, size| {
+            let d = 4 + rng.below(12);
+            let m = 4 + rng.below(20);
+            let n_r = 2 + rng.below(5);
+            let tokens = 1 + rng.below(size.max(1) * 2);
+            let es = experts(rng, n_r, d, m);
+            let decisions = random_decisions(rng, tokens, n_r);
+            let xn = Tensor::randn(rng, &[tokens, d], 1.0);
+
+            let y_slice = dispatch(&xn, &decisions, es.as_slice(), n_r, m);
+            let y_vec = dispatch(&xn, &decisions, &es, n_r, m);
+            let store = TieredStore::new(&es, false, 1 + rng.below(n_r));
+            let y_store = dispatch(&xn, &decisions, &store, n_r, m);
+            for e in 0..n_r {
+                prop_assert!(
+                    store.residency(e) == ExpertResidency::Fp32Resident
+                        && matches!(store.view(e), ExpertView::Fp32(_)),
+                    "quant-off store must be all-Fp32Resident"
+                );
+            }
+            for (a, b) in y_slice.data.iter().zip(&y_vec.data) {
+                prop_assert!(a.to_bits() == b.to_bits(), "Vec impl diverged from slice");
+            }
+            for (a, b) in y_slice.data.iter().zip(&y_store.data) {
+                prop_assert!(
+                    a.to_bits() == b.to_bits(),
+                    "quant-off TieredStore diverged from the fp32 slice path"
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_int8_dispatch_divergence_within_gate_weighted_bound() {
+    let mut diverged = 0u64;
+    prop::check(
+        "per-token |int8 - fp32| <= sum_k |gate_k| * bound_k(x)",
+        prop::Config { cases: 30, seed: 0x1A2B, max_size: 10 },
+        |rng: &mut Rng, size| {
+            let d = 4 + rng.below(12);
+            let m = 4 + rng.below(24);
+            let n_r = 2 + rng.below(5);
+            let tokens = 1 + rng.below(size.max(1) * 2);
+            let es = experts(rng, n_r, d, m);
+            let es_q: Vec<QuantizedFfn> = es.iter().map(QuantizedFfn::quantize).collect();
+            let decisions = random_decisions(rng, tokens, n_r);
+            // three input scales: the bound must hold away from the
+            // unit-variance regime too
+            let scale = [0.5f32, 1.0, 2.0][rng.below(3)];
+            let xn = Tensor::randn(rng, &[tokens, d], scale);
+
+            let y_fp = dispatch(&xn, &decisions, es.as_slice(), n_r, m);
+            let store = TieredStore::new(&es, true, n_r);
+            let y_q = dispatch(&xn, &decisions, &store, n_r, m);
+
+            for (tk, dec) in decisions.iter().enumerate() {
+                let row = &xn.data[tk * d..(tk + 1) * d];
+                let bound_t: f32 = dec
+                    .experts
+                    .iter()
+                    .zip(&dec.gates)
+                    .map(|(&e, &g)| g.abs() * es_q[e].divergence_bound(row))
+                    .sum();
+                let worst_t = y_q.data[tk * d..(tk + 1) * d]
+                    .iter()
+                    .zip(&y_fp.data[tk * d..(tk + 1) * d])
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f32, f32::max);
+                prop_assert!(
+                    worst_t <= bound_t * 1.01 + 1e-4,
+                    "token {tk}: divergence {worst_t} exceeds bound {bound_t} (d={d} m={m})"
+                );
+                if worst_t > 0.0 {
+                    diverged += 1;
+                }
+            }
+            Ok(())
+        },
+    );
+    assert!(diverged > 0, "int8 never diverged from fp32 — the property is vacuous");
+}
+
+/// Independent shadow of the residency policy: f32 EMA recomputed from
+/// scratch, warm set = top-cap by (EMA desc, index asc), transitions
+/// counted against the pre-update residency.
+struct Shadow {
+    ema: Vec<f32>,
+    warm: Vec<bool>,
+    cap: usize,
+}
+
+impl Shadow {
+    fn new(n: usize, cap: usize) -> Shadow {
+        Shadow { ema: vec![0.0; n], warm: (0..n).map(|e| e < cap).collect(), cap }
+    }
+
+    fn step(&mut self, counts: &[usize]) -> (u64, u64, u64, u64) {
+        let (mut hits, mut misses, mut pf, mut dm) = (0, 0, 0, 0);
+        for (e, &c) in counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if self.warm[e] {
+                hits += 1;
+            } else {
+                misses += 1;
+            }
+        }
+        let total: usize = counts.iter().sum();
+        for (e, &c) in counts.iter().enumerate() {
+            let frac = if total == 0 { 0.0 } else { c as f32 / total as f32 };
+            self.ema[e] = RESIDENCY_EMA_DECAY * self.ema[e] + (1.0 - RESIDENCY_EMA_DECAY) * frac;
+        }
+        let mut order: Vec<usize> = (0..counts.len()).collect();
+        order.sort_by(|&a, &b| {
+            self.ema[b]
+                .partial_cmp(&self.ema[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        for (rank, &e) in order.iter().enumerate() {
+            let want = rank < self.cap;
+            match (self.warm[e], want) {
+                (false, true) => pf += 1,
+                (true, false) => dm += 1,
+                _ => {}
+            }
+            self.warm[e] = want;
+        }
+        (hits, misses, pf, dm)
+    }
+}
+
+#[test]
+fn prop_residency_trace_matches_shadow_model_exactly() {
+    prop::check(
+        "note_step == independent shadow on drifting traces, no lost experts",
+        prop::Config { cases: 25, seed: 0x7E5D, max_size: 8 },
+        |rng: &mut Rng, size| {
+            let n_r = 3 + rng.below(size.max(1) + 2);
+            let cap = 1 + rng.below(n_r);
+            let d = 4;
+            let m = 8;
+            let es = experts(rng, n_r, d, m);
+            let mut store = TieredStore::new(&es, true, cap);
+            let mut shadow = Shadow::new(n_r, store.resident_cap());
+            prop_assert!(store.resident_cap() == cap, "cap {cap} clamped unexpectedly");
+
+            // drifting hotspot: the preferred expert subset rotates
+            let mut hot: Vec<usize> = (0..n_r).collect();
+            for step in 0..160 {
+                if step % 30 == 0 {
+                    // deterministic rotation + occasional shuffle
+                    hot.rotate_left(1 + rng.below(n_r.max(2) - 1));
+                }
+                let mut counts = vec![0usize; n_r];
+                for _ in 0..12 {
+                    let e = if rng.f32() < 0.8 { hot[rng.below(2.min(n_r))] } else { rng.below(n_r) };
+                    counts[e] += 1;
+                }
+                let got = store.note_step(&counts);
+                let (hits, misses, pf, dm) = shadow.step(&counts);
+                prop_assert!(
+                    (got.hits, got.misses, got.prefetches, got.demotions)
+                        == (hits, misses, pf, dm),
+                    "step {step}: note_step {got:?} != shadow ({hits},{misses},{pf},{dm})"
+                );
+                // hit/miss conservation: every routed expert is one or
+                // the other, never both, never neither
+                let routed = counts.iter().filter(|&&c| c > 0).count() as u64;
+                prop_assert!(got.hits + got.misses == routed, "hit/miss leak at step {step}");
+                // exactly cap experts warm; every expert still viewable
+                let warm = (0..n_r)
+                    .filter(|&e| store.residency(e) == ExpertResidency::Int8Resident)
+                    .count();
+                prop_assert!(warm == store.resident_cap(), "warm set {warm} != cap");
+                for e in 0..n_r {
+                    prop_assert!(
+                        matches!(store.view(e), ExpertView::Int8(_)),
+                        "expert {e} lost its view"
+                    );
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn routing_counts_drive_the_tier_like_the_engine_does() {
+    // the engine feeds note_step from GroupedRouting::count — wire the
+    // same path here and pin the drift story end to end: cold experts
+    // miss, then prefetch exactly once each while the drifted-from
+    // experts demote exactly once each
+    let mut rng = Rng::new(0xD15C);
+    let (d, m, n_r, cap) = (8, 16, 4, 2);
+    let es = experts(&mut rng, n_r, d, m);
+    let mut store = TieredStore::new(&es, true, cap);
+    let xn = Tensor::randn(&mut rng, &[16, d], 1.0);
+    let mut routing = GroupedRouting::new(n_r);
+    let disp = GroupedDispatcher::new(d, m);
+    let mut arena = DispatchArena::new();
+    let mut out = Tensor::zeros(&[16, d]);
+
+    let route_to = |rng: &mut Rng, pair: [usize; 2]| -> Vec<GateDecision> {
+        (0..16)
+            .map(|_| GateDecision {
+                experts: vec![pair[rng.below(2)]],
+                gates: vec![1.0],
+                scores: vec![0.0; n_r],
+            })
+            .collect()
+    };
+
+    let mut run_phase = |store: &mut TieredStore, rng: &mut Rng, pair, steps| {
+        let mut agg = (0u64, 0u64, 0u64, 0u64);
+        for _ in 0..steps {
+            let decisions = route_to(rng, pair);
+            routing.rebuild(n_r, &decisions);
+            let counts: Vec<usize> = (0..n_r).map(|e| routing.count(e)).collect();
+            let delta = store.note_step(&counts);
+            agg.0 += delta.hits;
+            agg.1 += delta.misses;
+            agg.2 += delta.prefetches;
+            agg.3 += delta.demotions;
+            // the dispatch itself must run regardless of residency
+            out.data.fill(0.0);
+            disp.forward(&xn, &routing, &*store, &mut arena, &mut out);
+            assert!(out.data.iter().all(|v| v.is_finite()));
+        }
+        agg
+    };
+
+    let (_, misses_a, pf_a, dm_a) = run_phase(&mut store, &mut rng, [0, 1], 8);
+    assert_eq!((misses_a, pf_a, dm_a), (0, 0, 0), "warm phase was not clean");
+    let (_, misses_b, pf_b, dm_b) = run_phase(&mut store, &mut rng, [2, 3], 20);
+    assert!(misses_b > 0, "cold experts never missed before promotion");
+    assert_eq!((pf_b, dm_b), (2, 2), "drift must promote and demote exactly once each");
+    assert_eq!(store.residency(2), ExpertResidency::Int8Resident);
+    assert_eq!(store.residency(0), ExpertResidency::Int8Host);
+    // resident_bytes tracks the warm set only
+    let warm_bytes = store.resident_bytes();
+    let all_warm = TieredStore::new(&es, true, n_r).resident_bytes();
+    assert!(warm_bytes < all_warm, "cold experts still counted as resident bytes");
+}

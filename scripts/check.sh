@@ -101,6 +101,16 @@ cargo test -q --release --test dynamic_k --test effort_tiers
 echo "==> chunked-prefill property suite (release)"
 cargo test -q --release --test chunked_prefill
 
+# Pin the expert-storage contract: all-Fp32Resident paths (slices and
+# quant-off TieredStore) bit-identical through the trait-generic
+# dispatcher, int8 band divergence inside the per-token gate-weighted
+# analytic bound, and residency bookkeeping exactly matching an
+# independent shadow model under routing drift. Float compares under
+# --release are exactly the optimization-drift candidates this pin is
+# for; the python twin is scripts/mirror_quant.py.
+echo "==> expert-storage + residency-tier property suite (release)"
+cargo test -q --release --test quant_store
+
 echo "==> cargo doc --no-deps"
 RUSTDOCFLAGS="${RUSTDOCFLAGS:--D warnings}" cargo doc --no-deps
 
@@ -108,12 +118,13 @@ echo "==> cargo clippy --all-targets -- -D warnings"
 cargo clippy --all-targets -- -D warnings
 
 # Regenerate the artifact-free bench exports (repo-root BENCH_*.json):
-# dispatch + slo each export their own file; serving refreshes
+# dispatch + slo + quant each export their own file; serving refreshes
 # BENCH_serving, BENCH_prefix and BENCH_dynk in one run. These are the
 # cross-PR trajectory artifacts the ROADMAP tracks.
-echo "==> bench exports (BENCH_dispatch/serving/prefix/slo/dynk.json)"
+echo "==> bench exports (BENCH_dispatch/serving/prefix/slo/dynk/quant.json)"
 cargo run --release --quiet -- bench --exp dispatch --out results
 cargo run --release --quiet -- bench --exp slo --out results
 cargo run --release --quiet -- bench --exp serving --out results
+cargo run --release --quiet -- bench --exp quant --out results
 
 echo "check.sh: all gates passed"

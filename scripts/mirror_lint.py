@@ -618,6 +618,7 @@ def scan_rules(path, tokens, directives):
 
 MIRROR_DYNK = "scripts/mirror_dynamic_k.py"
 MIRROR_CHUNK = "scripts/mirror_chunked_prefill.py"
+MIRROR_QUANT = "scripts/mirror_quant.py"
 
 REGISTRY = [
     ("PCG_MULT", "rust/src/util/rng.rs", MIRROR_DYNK),
@@ -635,6 +636,10 @@ REGISTRY = [
     ("PAPER_K_LOW", "rust/src/moe/gating.rs", MIRROR_DYNK),
     ("DEFAULT_PREFILL_CHUNK_TOKENS", "rust/src/serving/batcher.rs", MIRROR_CHUNK),
     ("CONT_GRID_STEP", "rust/src/serving/engine.rs", MIRROR_CHUNK),
+    ("INT8_CLAMP", "rust/src/quant/mod.rs", MIRROR_QUANT),
+    ("SCALE_EPS", "rust/src/quant/mod.rs", MIRROR_QUANT),
+    ("RESIDENCY_EMA_DECAY", "rust/src/moe/store.rs", MIRROR_QUANT),
+    ("DEFAULT_RESIDENT_CAP", "rust/src/moe/store.rs", MIRROR_QUANT),
 ]
 
 

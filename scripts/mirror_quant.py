@@ -1,0 +1,421 @@
+#!/usr/bin/env python3
+"""Line-faithful python mirror of the int8 expert-storage math.
+
+`scripts/check.sh` runs this as the fallback gate when no rust
+toolchain is on PATH (the repo's historical situation — see the
+ROADMAP's standing caveat). Every function here transcribes its rust
+counterpart statement by statement in float32 semantics (numpy), so a
+behavioral disagreement is a bug in one of the two, not a modeling
+artifact:
+
+  quantize / dequantize  <- rust/src/quant/mod.rs  QuantizedTensor
+  matmul_rows_q8         <- rust/src/tensor/ops.rs matmul_rows_q8
+                            (fused dequant epilogue; f32 accumulation
+                            in the same kk-ascending order)
+  swiglu_rows_q8         <- rust/src/quant/mod.rs  QuantizedFfn::
+                            swiglu_rows_into (silu from tensor/ops.rs)
+  divergence_bound       <- rust/src/quant/mod.rs  QuantizedFfn::
+                            divergence_bound (interval propagation)
+  TieredStore.note_step  <- rust/src/moe/store.rs  TieredStore
+                            (EMA residency policy, exact transitions)
+
+The checks mirror what `rust/src/quant/mod.rs`'s unit tests and
+`rust/tests/quant_store.rs` pin natively:
+
+  1. per-column symmetric quantization round-trips within
+     max_error_bound (= max scale / 2), zero columns get scale 1.0 and
+     stay finite, and quantized_bytes accounting gives exactly the
+     4r/(r+4) compression algebra — strictly below 4x;
+  2. the fused-dequant kernel (raw sum x*q, scale epilogue) agrees with
+     dequantize-then-fp32-matmul to f32 tolerance on random bands;
+  3. the int8 SwiGLU's true divergence from the fp32 original stays
+     inside the analytic divergence_bound on randomized FFNs and
+     input scales (the soundness property the rust suite asserts);
+  4. TieredStore policy replay: cold-start warm set is the first `cap`
+     experts, hits/misses meter against the residency the step
+     dispatched under, drifted traffic misses then prefetches exactly
+     once per drifted-to expert and demotes exactly once per
+     drifted-from expert, quant=False is the identity policy, and no
+     expert is ever without a view;
+  5. note_step against an independent shadow model (recomputed EMA +
+     top-cap sort per step) agrees on every hit/miss/prefetch/demotion
+     count over long random traces.
+
+Exits 0 and prints a one-line summary per check on success; raises on
+the first violation.
+"""
+
+import math
+import random
+
+import numpy as np
+
+F32 = np.float32
+
+# Shared numeric constants, registered with the mirror-drift rule of
+# `cmoe lint`: each NAME below must define the same value as its rust
+# counterpart (lint/drift.rs REGISTRY names the file pairs), or the
+# lint gate fails.
+INT8_CLAMP = 127.0  # rust/src/quant/mod.rs
+SCALE_EPS = 0.00000001  # rust/src/quant/mod.rs
+RESIDENCY_EMA_DECAY = 0.875  # rust/src/moe/store.rs
+DEFAULT_RESIDENT_CAP = 6  # rust/src/moe/store.rs
+
+SILU_LIP = 1.1  # rust/src/quant/mod.rs (private const)
+
+FP32_RESIDENT = "Fp32Resident"
+INT8_RESIDENT = "Int8Resident"
+INT8_HOST = "Int8Host"
+
+
+def silu(x):
+    # rust/src/tensor/ops.rs silu: x / (1 + exp(-x)), f32 end to end
+    x = np.asarray(x, dtype=F32)
+    return (x / (F32(1.0) + np.exp(-x, dtype=F32))).astype(F32)
+
+
+# ---------------------------------------------------------------------------
+# rust/src/quant/mod.rs — QuantizedTensor
+# ---------------------------------------------------------------------------
+
+
+def quantize(w):
+    """Column-wise symmetric int8: q = round(w / s), s = max|w_col|/127."""
+    w = np.asarray(w, dtype=F32)
+    assert w.ndim == 2
+    col_max = np.max(np.abs(w), axis=0).astype(F32)
+    scales = np.where(col_max > F32(SCALE_EPS), col_max / F32(INT8_CLAMP), F32(1.0)).astype(F32)
+    q = np.clip(np.round(w / scales), -INT8_CLAMP, INT8_CLAMP).astype(np.int8)
+    return q, scales
+
+
+def dequantize(q, scales):
+    return (q.astype(F32) * scales.astype(F32)).astype(F32)
+
+
+def max_error_bound(scales):
+    return F32(np.max(scales) * F32(0.5)) if scales.size else F32(0.0)
+
+
+def quantized_bytes(q, scales):
+    # int8 payload + one f32 scale per output column
+    return q.size + scales.size * 4
+
+
+# ---------------------------------------------------------------------------
+# rust/src/tensor/ops.rs — matmul_rows_q8 (fused dequant epilogue)
+# ---------------------------------------------------------------------------
+
+KB = 64  # k-block, matching the fp32 band kernel
+
+
+def matmul_rows_q8(a_rows, q, scales, k, n):
+    """Raw sum(x*q) accumulated in f32, kk-ascending inside KB blocks,
+    then one per-column scale multiply — same accumulation order as the
+    rust kernel, so the two agree bit-for-bit per output element."""
+    a_rows = np.asarray(a_rows, dtype=F32).reshape(-1, k)
+    rows = a_rows.shape[0]
+    qf = q.astype(F32).reshape(k, n)
+    out = np.zeros((rows, n), dtype=F32)
+    for kb in range(0, k, KB):
+        k_end = min(kb + KB, k)
+        for r in range(rows):
+            for kk in range(kb, k_end):
+                av = a_rows[r, kk]
+                if av == F32(0.0):
+                    continue  # zero-skip, same as the rust kernel
+                out[r] += (av * qf[kk]).astype(F32)
+    return (out * scales.astype(F32)).astype(F32)
+
+
+# ---------------------------------------------------------------------------
+# rust/src/quant/mod.rs — QuantizedFfn forward + divergence bound
+# ---------------------------------------------------------------------------
+
+
+def swiglu_rows(x_rows, w_gate, w_up, w_down):
+    """fp32 reference band: silu(x@Wg) * (x@Wu) @ Wd in f32."""
+    x = np.asarray(x_rows, dtype=F32)
+    g = (x @ np.asarray(w_gate, dtype=F32)).astype(F32)
+    u = (x @ np.asarray(w_up, dtype=F32)).astype(F32)
+    h = (silu(g) * u).astype(F32)
+    return (h @ np.asarray(w_down, dtype=F32)).astype(F32)
+
+
+class QuantFfn:
+    def __init__(self, w_gate, w_up, w_down):
+        self.d = np.asarray(w_gate).shape[0]
+        self.m = np.asarray(w_gate).shape[1]
+        self.g_q, self.g_s = quantize(w_gate)
+        self.u_q, self.u_s = quantize(w_up)
+        self.d_q, self.d_s = quantize(w_down)
+
+    def quantized_bytes(self):
+        return (
+            quantized_bytes(self.g_q, self.g_s)
+            + quantized_bytes(self.u_q, self.u_s)
+            + quantized_bytes(self.d_q, self.d_s)
+        )
+
+    def swiglu_rows_q8(self, x_rows):
+        d, m = self.d, self.m
+        hidden = matmul_rows_q8(x_rows, self.g_q, self.g_s, d, m)
+        up = matmul_rows_q8(x_rows, self.u_q, self.u_s, d, m)
+        h = (silu(hidden) * up).astype(F32)
+        return matmul_rows_q8(h, self.d_q, self.d_s, m, d)
+
+    def divergence_bound(self, x_rows):
+        d, m = self.d, self.m
+        x = np.asarray(x_rows, dtype=F32).reshape(-1, d)
+        if x.shape[0] == 0:
+            return 0.0
+        bg = float(max_error_bound(self.g_s))
+        bu = float(max_error_bound(self.u_s))
+        bd = float(max_error_bound(self.d_s))
+        wd_max = float(np.max(np.abs(dequantize(self.d_q, self.d_s))))
+        hidden = matmul_rows_q8(x, self.g_q, self.g_s, d, m)
+        up = matmul_rows_q8(x, self.u_q, self.u_s, d, m)
+        worst = 0.0
+        for r in range(x.shape[0]):
+            x_abs = float(np.sum(np.abs(x[r])))
+            dg = x_abs * bg
+            du = x_abs * bu
+            sg = np.abs(silu(hidden[r]))
+            ua = np.abs(up[r])
+            sum_h = float(np.sum(sg * ua))
+            sum_dh = float(np.sum(sg * du + (ua + du) * SILU_LIP * dg))
+            worst = max(worst, sum_h * bd + sum_dh * (wd_max + bd))
+        return worst
+
+
+# ---------------------------------------------------------------------------
+# rust/src/moe/store.rs — TieredStore residency policy
+# ---------------------------------------------------------------------------
+
+
+class TieredStore:
+    def __init__(self, n, quant, resident_cap):
+        cap = max(resident_cap, 1)
+        cap = min(cap, max(n, 1))
+        if quant:
+            # cold-start: first cap experts warm, rest cold
+            self.residency = [INT8_RESIDENT if e < cap else INT8_HOST for e in range(n)]
+        else:
+            self.residency = [FP32_RESIDENT] * n
+        self.ema = [0.0] * n
+        self.resident_cap = cap
+        self.quant = quant
+        self.n = n
+
+    def view(self, e):
+        # no-lost-experts: every index always resolves to a tier
+        assert 0 <= e < self.n
+        return "int8" if self.quant else "fp32"
+
+    def note_step(self, counts):
+        assert len(counts) == self.n
+        delta = {"hits": 0, "misses": 0, "prefetches": 0, "demotions": 0}
+        for e, c in enumerate(counts):
+            if c == 0:
+                continue
+            if self.residency[e] == INT8_HOST:
+                delta["misses"] += 1
+            else:
+                delta["hits"] += 1
+        if not self.quant:
+            return delta
+        total = sum(counts)
+        for e, c in enumerate(counts):
+            frac = 0.0 if total == 0 else F32(F32(c) / F32(total))
+            self.ema[e] = float(
+                F32(F32(RESIDENCY_EMA_DECAY) * F32(self.ema[e]))
+                + F32(F32(1.0 - RESIDENCY_EMA_DECAY) * F32(frac))
+            )
+        # warm set = top resident_cap by EMA, ties break on index
+        order = sorted(range(self.n), key=lambda e: (-self.ema[e], e))
+        for rank, e in enumerate(order):
+            want = INT8_RESIDENT if rank < self.resident_cap else INT8_HOST
+            if self.residency[e] == INT8_HOST and want == INT8_RESIDENT:
+                delta["prefetches"] += 1
+            elif self.residency[e] == INT8_RESIDENT and want == INT8_HOST:
+                delta["demotions"] += 1
+            self.residency[e] = want
+        return delta
+
+
+# ---------------------------------------------------------------------------
+# checks
+# ---------------------------------------------------------------------------
+
+
+def rand_mat(rand, r, c, std=0.5):
+    return np.asarray(
+        [[rand.gauss(0.0, std) for _ in range(c)] for _ in range(r)], dtype=F32
+    )
+
+
+def check_quantize_roundtrip(rand, cases=60):
+    for _ in range(cases):
+        r, c = rand.randint(2, 48), rand.randint(2, 40)
+        w = rand_mat(rand, r, c)
+        if rand.random() < 0.3:
+            w[:, rand.randrange(c)] = 0.0  # plant an all-zero column
+        q, s = quantize(w)
+        back = dequantize(q, s)
+        assert np.all(np.isfinite(back)), "dequantize produced non-finite values"
+        err = float(np.max(np.abs(w - back)))
+        bound = float(max_error_bound(s)) + 1e-6
+        assert err <= bound, f"roundtrip err {err} > bound {bound}"
+        assert np.all(np.abs(q.astype(np.int32)) <= int(INT8_CLAMP)), "-128 leaked"
+        assert quantized_bytes(q, s) == r * c + c * 4, "byte accounting drifted"
+        # ratio = 4rc / (rc + 4c) = 4r / (r + 4): strictly below 4x,
+        # approaching it as rows grow — scales are not free
+        ratio = (r * c * 4) / quantized_bytes(q, s)
+        assert abs(ratio - 4 * r / (r + 4)) < 1e-9 and ratio < 4.0, f"ratio {ratio}"
+    print(f"ok: symmetric per-column int8 roundtrip + byte accounting ({cases} mats)")
+
+
+def check_fused_kernel(rand, cases=40):
+    for _ in range(cases):
+        k, n = rand.randint(2, 96), rand.randint(2, 24)
+        rows = rand.randint(1, 6)
+        w = rand_mat(rand, k, n)
+        x = rand_mat(rand, rows, k, std=1.0)
+        if rand.random() < 0.5:
+            x[x < 0.4] = 0.0  # exercise the zero-skip path
+        q, s = quantize(w)
+        fused = matmul_rows_q8(x, q, s, k, n)
+        sim = (x @ dequantize(q, s)).astype(F32)
+        tol = 1e-3 * max(1.0, float(np.max(np.abs(sim))))
+        worst = float(np.max(np.abs(fused - sim)))
+        assert worst <= tol, f"fused dequant diverged from simulated: {worst} > {tol}"
+    print(f"ok: fused-dequant kernel matches dequantize-then-matmul ({cases} bands)")
+
+
+def check_divergence_bound(rand, cases=25):
+    nonzero = 0
+    for _ in range(cases):
+        d, m = rand.randint(4, 16), rand.randint(4, 32)
+        rows = rand.randint(1, 8)
+        wg, wu = rand_mat(rand, d, m), rand_mat(rand, d, m)
+        wd = rand_mat(rand, m, d)
+        qf = QuantFfn(wg, wu, wd)
+        for scale in (0.5, 1.0, 2.0):
+            x = rand_mat(rand, rows, d, std=scale)
+            y_q = qf.swiglu_rows_q8(x)
+            y_fp = swiglu_rows(x, wg, wu, wd)
+            worst = float(np.max(np.abs(y_q - y_fp)))
+            bound = qf.divergence_bound(x)
+            assert worst <= bound * 1.01 + 1e-4, f"divergence {worst} > bound {bound}"
+            if worst > 0.0:
+                nonzero += 1
+    assert nonzero > 0, "int8 never diverged from fp32 — quantization is a no-op?"
+    print(f"ok: int8 SwiGLU divergence inside analytic bound ({cases} ffns x 3 scales)")
+
+
+def check_residency_policy():
+    # quant=False: identity policy, hits only, no transitions ever
+    off = TieredStore(4, False, 2)
+    for _ in range(10):
+        d = off.note_step([5, 0, 1, 0])
+        assert d == {"hits": 2, "misses": 0, "prefetches": 0, "demotions": 0}
+    assert off.residency == [FP32_RESIDENT] * 4 and off.view(3) == "fp32"
+
+    # quant=True: cold start warms the first cap experts
+    st = TieredStore(4, True, 2)
+    assert st.residency == [INT8_RESIDENT, INT8_RESIDENT, INT8_HOST, INT8_HOST]
+    misses = 0
+    for _ in range(8):
+        misses += st.note_step([8, 8, 0, 0])["misses"]
+    assert misses == 0, "warm experts missed"
+    # drift: traffic moves to experts 2/3 — miss first, then exactly one
+    # prefetch each and exactly one demotion each for 0/1
+    pf = dm = ms = 0
+    for _ in range(20):
+        s = st.note_step([0, 0, 8, 8])
+        pf += s["prefetches"]
+        dm += s["demotions"]
+        ms += s["misses"]
+    assert ms > 0, "cold experts never missed before promotion"
+    assert pf == 2 and dm == 2, f"drift transitions pf={pf} dm={dm}, want 2/2"
+    assert st.residency == [INT8_HOST, INT8_HOST, INT8_RESIDENT, INT8_RESIDENT]
+    s = st.note_step([0, 0, 8, 8])
+    assert s == {"hits": 2, "misses": 0, "prefetches": 0, "demotions": 0}
+    # cap clamps into [1, n] and every expert always has a view
+    tiny = TieredStore(3, True, 99)
+    assert tiny.resident_cap == 3
+    assert all(tiny.view(e) == "int8" for e in range(3))
+    assert TieredStore(5, True, 0).resident_cap == 1
+    print("ok: residency policy (cold start, drift prefetch/demote, identity off)")
+
+
+def check_residency_shadow(rand, steps=300, n=9):
+    """Replay a random trace through note_step and an independent shadow
+    model; every counter must agree exactly at every step."""
+    cap = 3
+    st = TieredStore(n, True, cap)
+    ema = [0.0] * n
+    res = [INT8_RESIDENT if e < cap else INT8_HOST for e in range(n)]
+    hot = list(range(n))  # drifting preference order
+    for step in range(steps):
+        if step % 40 == 0:
+            rand.shuffle(hot)
+        counts = [0] * n
+        for _ in range(16):
+            e = hot[min(rand.randrange(1, 4), rand.randrange(1, 4)) - 1]
+            if rand.random() < 0.15:
+                e = rand.randrange(n)
+            counts[e] += 1
+        got = st.note_step(counts)
+        # shadow: recompute hits/misses against pre-update residency,
+        # then EMA + full re-sort, counting transitions
+        want = {"hits": 0, "misses": 0, "prefetches": 0, "demotions": 0}
+        for e, c in enumerate(counts):
+            if c == 0:
+                continue
+            want["misses" if res[e] == INT8_HOST else "hits"] += 1
+        total = sum(counts)
+        for e in range(n):
+            frac = 0.0 if total == 0 else counts[e] / total
+            ema[e] = RESIDENCY_EMA_DECAY * ema[e] + (1.0 - RESIDENCY_EMA_DECAY) * frac
+        order = sorted(range(n), key=lambda e: (-ema[e], e))
+        warm = set(order[:cap])
+        for e in range(n):
+            w = INT8_RESIDENT if e in warm else INT8_HOST
+            if res[e] == INT8_HOST and w == INT8_RESIDENT:
+                want["prefetches"] += 1
+            elif res[e] == INT8_RESIDENT and w == INT8_HOST:
+                want["demotions"] += 1
+            res[e] = w
+        # f32 vs f64 EMA can disagree only at exact ties, which the
+        # index tie-break resolves identically; counters must match
+        assert got == want, f"step {step}: note_step {got} != shadow {want}"
+        assert res == st.residency, f"step {step}: residency diverged"
+        assert sum(1 for r in st.residency if r == INT8_RESIDENT) == cap
+    print(f"ok: note_step equals independent shadow model over {steps} steps")
+
+
+def check_paper_defaults():
+    # spot-check registered values against their definitions
+    assert INT8_CLAMP == 127.0 and SCALE_EPS == 1e-8
+    assert RESIDENCY_EMA_DECAY == 0.875 and DEFAULT_RESIDENT_CAP == 6
+    # half-life of the EMA at decay 0.875 is ~5.2 steps — a cap-6 warm
+    # set re-converges within a few steps of a routing shift
+    half_life = math.log(0.5) / math.log(RESIDENCY_EMA_DECAY)
+    assert 4.0 < half_life < 6.0
+    print("ok: registered constants and EMA half-life sanity")
+
+
+def main():
+    rand = random.Random(0x0E8)
+    check_quantize_roundtrip(rand)
+    check_fused_kernel(rand)
+    check_divergence_bound(rand)
+    check_residency_policy()
+    check_residency_shadow(rand)
+    check_paper_defaults()
+    print("mirror_quant: all checks passed")
+
+
+if __name__ == "__main__":
+    main()
